@@ -1,0 +1,120 @@
+//! Device + chip characterization (paper Fig. 2): regenerates every
+//! panel's data from the stochastic device model and prints it as
+//! terminal figures.
+//!
+//!   cargo run --release --example chip_characterization [--seed N]
+
+use rram_cim::bench::{print_series, print_table};
+use rram_cim::device::{characterize, DeviceConfig};
+use rram_cim::util::args::Args;
+use rram_cim::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    rram_cim::util::logging::init();
+    let args = Args::from_env(1).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.parse_or("seed", 1).map_err(anyhow::Error::msg)?;
+    let cfg = DeviceConfig::default();
+
+    // Fig. 2e: I-V hysteresis
+    let iv = characterize::iv_sweep(&cfg, seed, 60);
+    let current: Vec<f64> = iv.iter().map(|&(_, i)| i).collect();
+    print_series("Fig. 2e  I-V sweep (current, 4 legs)", &current);
+
+    // Fig. 2f: 128 multi-level states
+    let levels = characterize::multilevel_states(&cfg, seed, 128);
+    print_series("Fig. 2f  128 programmed states (kOhm)", &levels);
+    println!(
+        "         span {:.1} -> {:.1} kOhm, {} monotone violations",
+        levels[0],
+        levels[127],
+        levels.windows(2).filter(|w| w[1] <= w[0]).count()
+    );
+
+    // Fig. 2g: retention
+    let (times, traces) = characterize::retention_traces(&cfg, seed, 4, 16);
+    for (i, tr) in traces.iter().enumerate() {
+        print_series(&format!("Fig. 2g  retention state {i} (to 4e6 s)"), tr);
+    }
+    println!("         time span: {:.0} .. {:.1e} s", times[0], times[times.len() - 1]);
+
+    // Fig. 2h: endurance
+    let endurance = characterize::endurance_trace(&cfg, seed, 1_000_000);
+    let rows: Vec<Vec<String>> = endurance
+        .iter()
+        .step_by(3)
+        .map(|&(c, lrs, hrs)| {
+            vec![format!("{c}"), format!("{lrs:.1}"), format!("{hrs:.1}"), format!("{:.1}", hrs / lrs)]
+        })
+        .collect();
+    print_table(
+        "Fig. 2h: endurance to 1e6 cycles",
+        &["cycles", "LRS (kOhm)", "HRS (kOhm)", "window"],
+        &rows,
+    );
+
+    // Fig. 2i: forming distribution
+    let (summary, yield_frac) = characterize::forming_distribution(&cfg, seed);
+    println!(
+        "\nFig. 2i  V_form: mean {:.3} V, std {:.3} V, yield {:.2}% over {} cells",
+        summary.mean,
+        summary.std,
+        100.0 * yield_frac,
+        summary.n
+    );
+    // histogram as the paper plots it
+    let all: Vec<f64> = {
+        // regenerate the same distribution for the histogram
+        let mut rng = rram_cim::util::rng::Rng::new(seed);
+        (0..summary.n).map(|_| rng.normal_ms(1.89, 0.18)).collect()
+    };
+    let hist = stats::histogram(&all, 1.3, 2.5, 24);
+    print_series(
+        "         histogram (1.3 .. 2.5 V)",
+        &hist.iter().map(|&c| c as f64).collect::<Vec<_>>(),
+    );
+
+    // Fig. 2j/k/l: programming accuracy
+    let reps = characterize::programming_accuracy(&cfg, seed, &[2, 4, 8, 16]);
+    let rows: Vec<Vec<String>> = reps
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.levels),
+                format!("{:.2}%", 100.0 * r.success_frac),
+                format!("{:.4}", r.sigma_kohm),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig. 2j/l: write-verify accuracy (paper: 99.8% in +-2 kOhm, sigma 0.8793)",
+        &["levels", "within window", "sigma (kOhm)"],
+        &rows,
+    );
+
+    // Fig. 2k: 16-state distribution summary
+    let rep16 = &reps[3];
+    let mut per_level: Vec<Vec<f64>> = vec![Vec::new(); 16];
+    for (r, &lvl) in rep16.actual.iter().zip(&rep16.assigned) {
+        per_level[lvl].push(*r);
+    }
+    let rows: Vec<Vec<String>> = per_level
+        .iter()
+        .enumerate()
+        .map(|(i, rs)| {
+            let s = stats::summarize(rs);
+            vec![
+                format!("{i}"),
+                format!("{:.2}", rep16.targets[i]),
+                format!("{:.2}", s.mean),
+                format!("{:.3}", s.std),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig. 2k: 16-state distributions",
+        &["level", "target (kOhm)", "mean", "std"],
+        &rows,
+    );
+    println!("\ncharacterization OK");
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! End-to-end driver (paper Fig. 4): train the binarized CNN on the
+//! synthetic-MNIST dataset through the full three-layer stack —
+//! Rust coordinator -> AOT JAX train-step artifacts (with the Pallas
+//! sign-matmul inside) -> chip simulator for search-in-memory pruning —
+//! and print the loss curve, accuracy, pruning trajectory, t-SNE
+//! separability, and the energy comparison rows.
+//!
+//! Default run (SUN + SPN + HPN comparison, Fig. 4k):
+//!   cargo run --release --example mnist_pruning
+//! Flags:
+//!   --mode spn|sun|hpn    run a single mode instead of all three
+//!   --epochs N            (default 10)
+//!   --pallas              use the Pallas-kernel artifact on the train path
+//!   --pallas-steps N      additionally run N steps through the Pallas
+//!                         artifact and check parity vs the fast artifact
+//!   --tsne                compute before/after t-SNE separation scores
+
+use rram_cim::bench::{print_series, print_table};
+use rram_cim::metrics::energy_comparison;
+use rram_cim::nn::tsne::{separation_score, tsne, TsneConfig};
+use rram_cim::prelude::*;
+use rram_cim::util::args::Args;
+
+fn run_mode(
+    mode: TrainMode,
+    epochs: usize,
+    use_pallas: bool,
+    tsne_check: bool,
+) -> anyhow::Result<rram_cim::coordinator::TrainingReport> {
+    let engine = Engine::open_default()?;
+    let cfg = MnistConfig { epochs, mode, use_pallas, ..MnistConfig::default() };
+    let mut trainer = MnistTrainer::new(cfg, engine);
+
+    let before = if tsne_check { Some(trainer.features()?) } else { None };
+    let report = trainer.train()?;
+
+    println!("\n--- {} ---", mode.name());
+    print_series("loss", &report.epochs.iter().map(|e| e.loss).collect::<Vec<_>>());
+    print_series(
+        "test accuracy",
+        &report.epochs.iter().map(|e| e.test_acc).collect::<Vec<_>>(),
+    );
+    print_series(
+        "live kernels (Fig. 4i)",
+        &report.epochs.iter().map(|e| e.live_kernels as f64).collect::<Vec<_>>(),
+    );
+    if mode == TrainMode::Hpn {
+        if let Some(last) = report.epochs.last() {
+            println!("MAC precision per conv layer (Fig. 4l): {:?}", last.mac_precision);
+        }
+    }
+    println!(
+        "final acc {:.2}%  prune rate {:.2}%  train-op reduction {:.2}%",
+        100.0 * report.final_test_acc(),
+        100.0 * report.final_prune_rate,
+        100.0 * report.train_ops_reduction()
+    );
+
+    if let Some((feats_b, labels)) = before {
+        let (feats_a, _) = trainer.features()?;
+        let n = labels.len();
+        let d = feats_b.len() / n;
+        let cfg = TsneConfig { iters: 400, ..TsneConfig::default() };
+        let yb = tsne(&feats_b, n, d, &cfg);
+        let ya = tsne(&feats_a, n, d, &cfg);
+        let sb = separation_score(&yb, &labels, 10);
+        let sa = separation_score(&ya, &labels, 10);
+        println!("t-SNE separation (Fig. 4f/g): before {sb:.2} -> after {sa:.2}");
+    }
+    Ok(report)
+}
+
+fn main() -> anyhow::Result<()> {
+    rram_cim::util::logging::init();
+    let args = Args::from_env(1).map_err(anyhow::Error::msg)?;
+    let epochs: usize = args.parse_or("epochs", 10).map_err(anyhow::Error::msg)?;
+    let use_pallas = args.flag("pallas");
+    let tsne_check = args.flag("tsne");
+
+    // Optional Pallas-parity pass: prove the Pallas train artifact (the
+    // paper's Layer-1 kernel inside the fwd+bwd graph) composes with the
+    // coordinator by training a few steps on it.
+    let pallas_steps: usize = args.parse_or("pallas-steps", 0).map_err(anyhow::Error::msg)?;
+    if pallas_steps > 0 {
+        println!("=== Pallas-artifact parity check ({pallas_steps} steps) ===");
+        let engine = Engine::open_default()?;
+        let cfg = MnistConfig {
+            epochs: 1,
+            train_samples: pallas_steps * 64,
+            test_samples: 256,
+            use_pallas: true,
+            mode: TrainMode::Sun,
+            ..MnistConfig::default()
+        };
+        let mut tr = MnistTrainer::new(cfg, engine);
+        let rep = tr.train()?;
+        println!(
+            "pallas path: loss {:.4}, test acc {:.2}% — artifact executes end-to-end",
+            rep.epochs[0].loss,
+            100.0 * rep.epochs[0].test_acc
+        );
+    }
+
+    let modes: Vec<TrainMode> = match args.get("mode") {
+        Some("sun") => vec![TrainMode::Sun],
+        Some("spn") => vec![TrainMode::Spn],
+        Some("hpn") => vec![TrainMode::Hpn],
+        _ => vec![TrainMode::Sun, TrainMode::Spn, TrainMode::Hpn],
+    };
+
+    let mut rows = Vec::new();
+    let mut spn_report = None;
+    for &mode in &modes {
+        let rep = run_mode(mode, epochs, use_pallas, tsne_check)?;
+        rows.push(vec![
+            mode.name().to_string(),
+            format!("{:.2}%", 100.0 * rep.final_test_acc()),
+            format!("{:.2}%", 100.0 * rep.final_prune_rate),
+            format!("{:.2}%", 100.0 * rep.train_ops_reduction()),
+        ]);
+        if mode == TrainMode::Spn || (modes.len() == 1) {
+            spn_report = Some(rep);
+        }
+    }
+    print_table(
+        "Fig. 4k: accuracy by training mode",
+        &["mode", "test acc", "prune rate", "train-op reduction"],
+        &rows,
+    );
+
+    // Fig. 4m right: inference energy comparison
+    if let Some(rep) = spn_report {
+        let rows: Vec<Vec<String>> = energy_comparison(
+            rep.macs_unpruned,
+            rep.macs_pruned,
+            true,
+            rram_cim::baselines::gpu::GpuWorkloadClass::SmallCnn,
+            32,
+        )
+        .iter()
+        .map(|r| vec![r.platform.clone(), format!("{:.3}", r.energy_uj)])
+        .collect();
+        print_table("Fig. 4m: per-image conv inference energy", &["platform", "energy (uJ)"], &rows);
+    }
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! End-to-end driver (paper Fig. 5): PointNet on synthetic ModelNet10
+//! with dynamic 1x1-conv filter pruning and the INT8 four-cell chip
+//! mapping. Prints the SUN/SPN/HPN comparison (Fig. 5g), MAC precision
+//! (Fig. 5h), op reduction and energy rows (Fig. 5i).
+//!
+//!   cargo run --release --example pointnet_pruning [--mode spn] [--epochs N] [--tsne]
+
+use rram_cim::bench::{print_series, print_table};
+use rram_cim::metrics::energy_comparison;
+use rram_cim::nn::tsne::{separation_score, tsne, TsneConfig};
+use rram_cim::prelude::*;
+use rram_cim::util::args::Args;
+
+fn run_mode(
+    mode: TrainMode,
+    epochs: usize,
+    tsne_check: bool,
+) -> anyhow::Result<rram_cim::coordinator::TrainingReport> {
+    let engine = Engine::open_default()?;
+    let cfg = PointNetConfig { epochs, mode, ..PointNetConfig::default() };
+    let mut trainer = PointNetTrainer::new(cfg, engine);
+    let before = if tsne_check { Some(trainer.features()?) } else { None };
+    let report = trainer.train()?;
+
+    println!("\n--- {} ---", mode.name());
+    print_series("loss", &report.epochs.iter().map(|e| e.loss).collect::<Vec<_>>());
+    print_series(
+        "test accuracy",
+        &report.epochs.iter().map(|e| e.test_acc).collect::<Vec<_>>(),
+    );
+    print_series(
+        "live filters",
+        &report.epochs.iter().map(|e| e.live_kernels as f64).collect::<Vec<_>>(),
+    );
+    if mode == TrainMode::Hpn {
+        if let Some(last) = report.epochs.last() {
+            println!("INT8 MAC precision per on-chip layer (Fig. 5h): {:?}", last.mac_precision);
+        }
+    }
+    println!(
+        "final acc {:.2}%  prune rate {:.2}%  train-op reduction {:.2}%",
+        100.0 * report.final_test_acc(),
+        100.0 * report.final_prune_rate,
+        100.0 * report.train_ops_reduction()
+    );
+
+    if let Some((feats_b, labels)) = before {
+        let (feats_a, _) = trainer.features()?;
+        let n = labels.len();
+        let d = feats_b.len() / n;
+        let cfg = TsneConfig { iters: 400, ..TsneConfig::default() };
+        let sb = separation_score(&tsne(&feats_b, n, d, &cfg), &labels, 10);
+        let sa = separation_score(&tsne(&feats_a, n, d, &cfg), &labels, 10);
+        println!("t-SNE separation (Fig. 5d/e): before {sb:.2} -> after {sa:.2}");
+    }
+    Ok(report)
+}
+
+fn main() -> anyhow::Result<()> {
+    rram_cim::util::logging::init();
+    let args = Args::from_env(1).map_err(anyhow::Error::msg)?;
+    let epochs: usize = args.parse_or("epochs", 12).map_err(anyhow::Error::msg)?;
+    let tsne_check = args.flag("tsne");
+
+    let modes: Vec<TrainMode> = match args.get("mode") {
+        Some("sun") => vec![TrainMode::Sun],
+        Some("spn") => vec![TrainMode::Spn],
+        Some("hpn") => vec![TrainMode::Hpn],
+        _ => vec![TrainMode::Sun, TrainMode::Spn, TrainMode::Hpn],
+    };
+
+    let mut rows = Vec::new();
+    let mut pruned_report = None;
+    for &mode in &modes {
+        let rep = run_mode(mode, epochs, tsne_check)?;
+        rows.push(vec![
+            mode.name().to_string(),
+            format!("{:.2}%", 100.0 * rep.final_test_acc()),
+            format!("{:.2}%", 100.0 * rep.final_prune_rate),
+            format!("{:.2}%", 100.0 * rep.train_ops_reduction()),
+        ]);
+        if mode.prunes() {
+            pruned_report = Some(rep);
+        }
+    }
+    print_table(
+        "Fig. 5g: accuracy by training mode (paper: SUN 79.85 / SPN 82.16 / HPN 77.75 @ 57.13%)",
+        &["mode", "test acc", "prune rate", "train-op reduction"],
+        &rows,
+    );
+
+    if let Some(rep) = pruned_report {
+        let rows: Vec<Vec<String>> = energy_comparison(
+            rep.macs_unpruned,
+            rep.macs_pruned,
+            false, // INT8 mapping
+            rram_cim::baselines::gpu::GpuWorkloadClass::PointCloud,
+            32,
+        )
+        .iter()
+        .map(|r| vec![r.platform.clone(), format!("{:.3}", r.energy_uj)])
+        .collect();
+        print_table(
+            "Fig. 5i: per-cloud conv inference energy",
+            &["platform", "energy (uJ)"],
+            &rows,
+        );
+    }
+    Ok(())
+}

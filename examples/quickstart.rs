@@ -1,0 +1,112 @@
+//! Quickstart: the whole stack in one file.
+//!
+//! 1. fabricate + form the digital RRAM chip,
+//! 2. run reconfigurable logic (Fig. 3c) in-memory,
+//! 3. compute a kernel-similarity matrix three ways — chip
+//!    search-in-memory, bit-packed software, and the AOT Pallas
+//!    `similarity` artifact — and check they agree bit-for-bit,
+//! 4. run a binary-weight dot product on the chip and against the
+//!    integer reference.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use rram_cim::cim::mapping::RowAllocator;
+use rram_cim::cim::{similarity as chip_sim, vmm};
+use rram_cim::nn::quant;
+use rram_cim::prelude::*;
+use rram_cim::pruning::similarity::PackedKernels;
+
+fn main() -> anyhow::Result<()> {
+    rram_cim::util::logging::init();
+    let mut rng = Rng::new(42);
+
+    // --- 1. the chip ---
+    let mut chip = Chip::new(ChipConfig::default(), &mut rng);
+    let yields = chip.form();
+    println!("chip formed: 2x 512x32 1T1R blocks, yields {yields:?}");
+
+    // --- 2. reconfigurable logic ---
+    let n = 8;
+    for col in 0..n {
+        chip.program_bit(0, 0, col, col % 2 == 0);
+    }
+    let x = vec![true; n];
+    let k: Vec<bool> = (0..n).map(|c| c < 4).collect();
+    for op in LogicOp::ALL {
+        let out = chip.logic_pass(0, 0, op, &x, &k, false);
+        println!(
+            "{:<5} W=10101010 K=11110000 -> {:?}",
+            op.name(),
+            out[..n].iter().map(|&b| b as u8).collect::<Vec<_>>()
+        );
+    }
+
+    // --- 3. similarity three ways ---
+    let kernels: Vec<Vec<f32>> = (0..8)
+        .map(|i| (0..64).map(|j| ((i * j + i) % 5) as f32 - 2.0).collect())
+        .collect();
+    let live = vec![true; 8];
+
+    // (a) chip search-in-memory
+    let mut alloc = RowAllocator::for_chip(&chip);
+    let stored = chip_sim::store_kernels(&mut chip, &mut alloc, &kernels);
+    let m_chip = chip_sim::similarity_matrix(&mut chip, &stored, &live);
+
+    // (b) bit-packed software
+    let m_sw = PackedKernels::from_kernels(&kernels).similarity_matrix(&live);
+
+    // (c) the AOT Pallas artifact (XOR Hamming kernel lowered from
+    //     python/compile/kernels/hamming.py)
+    let mut engine = Engine::open_default()?;
+    let spec = engine.manifest().get("similarity").unwrap().clone();
+    let (kmax, nbits) = (spec.inputs[0].dims[0], spec.inputs[0].dims[1]);
+    let mut bits = vec![0i8; kmax * nbits];
+    for (i, kr) in kernels.iter().enumerate() {
+        for (j, &w) in kr.iter().enumerate() {
+            bits[i * nbits + j] = (w >= 0.0) as i8;
+        }
+    }
+    let outs = engine.run("similarity", &[HostTensor::I8(bits, vec![kmax, nbits])])?;
+    let d_pallas = outs[0].expect_i32("similarity");
+
+    let mut all_equal = true;
+    for i in 0..8 {
+        for j in 0..8 {
+            let d = m_chip.distance(i, j);
+            all_equal &= d == m_sw.distance(i, j);
+            all_equal &= d == d_pallas[i * kmax + j] as u32;
+        }
+    }
+    println!(
+        "\nsimilarity agreement (chip == software == Pallas artifact): {}",
+        if all_equal { "EXACT" } else { "MISMATCH!" }
+    );
+    assert!(all_equal);
+
+    // --- 4. binary dot product on-chip ---
+    let kernel: Vec<f32> = (0..32).map(|i| if i % 3 == 0 { 0.8 } else { -0.6 }).collect();
+    let (bitsv, alpha) = quant::binarize_kernel(&kernel);
+    let xs: Vec<u8> = (0..32).map(|i| (i * 7 % 256) as u8).collect();
+    let span = alloc.alloc(bitsv.len()).unwrap();
+    rram_cim::cim::mapping::store_bits(&mut chip, &span, &bitsv);
+    let got = vmm::binary_dot_u8(&mut chip, &span, &xs);
+    let want = rram_cim::nn::layers::binary_mac_ref(&bitsv, &xs);
+    println!(
+        "binary dot on chip: {got} (reference {want}, alpha {alpha:.3}) — {}",
+        if got == want { "EXACT" } else { "MISMATCH" }
+    );
+    assert_eq!(got, want);
+
+    let b = chip.energy_breakdown();
+    let shares = b.shares();
+    println!(
+        "\nchip energy: {:.2} uJ total; top consumers: {} {:.1}%, {} {:.1}%",
+        b.total_pj() * 1e-6,
+        shares[0].0,
+        100.0 * shares[0].1,
+        shares[1].0,
+        100.0 * shares[1].1
+    );
+    println!("quickstart OK");
+    Ok(())
+}

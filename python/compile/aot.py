@@ -1,0 +1,213 @@
+"""AOT compile path: lower the L2 train/eval steps + L1 kernels to HLO text.
+
+Run once via `make artifacts` (python -m compile.aot --out-dir ../artifacts).
+Emits one .hlo.txt per artifact plus manifest.txt describing the flattened
+input/output signatures the Rust runtime validates against.
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import hamming
+
+# ---------------------------------------------------------------------------
+# Static shapes baked into the artifacts (Rust mirrors these in
+# rust/src/runtime/artifacts.rs — keep in sync).
+# ---------------------------------------------------------------------------
+MNIST_TRAIN_B = 64
+MNIST_EVAL_B = 256
+PN_TRAIN_B = 8
+PN_EVAL_B = 32
+PN_S1, PN_K1 = 64, 16
+PN_S2, PN_K2 = 16, 8
+SIM_K = 64  # max kernels compared per similarity call
+SIM_BITS = 576  # max bit-width (conv3: 64ch * 3*3 = 576); pad with zeros
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def mnist_param_specs():
+    c1, c2, c3 = model.MNIST_CHANNELS
+    return (
+        spec((c1, 1, 3, 3)),
+        spec((c1,)),
+        spec((c2, c1, 3, 3)),
+        spec((c2,)),
+        spec((c3, c2, 3, 3)),
+        spec((c3,)),
+        spec((model.MNIST_FC_IN, model.MNIST_CLASSES)),
+        spec((model.MNIST_CLASSES,)),
+    )
+
+
+def mnist_mask_specs():
+    c1, c2, c3 = model.MNIST_CHANNELS
+    return (spec((c1,)), spec((c2,)), spec((c3,)))
+
+
+def pn_param_specs():
+    out = []
+    for fi, fo in model.PN_LAYER_DIMS:
+        out.append(spec((fi, fo)))
+        out.append(spec((fo,)))
+    return tuple(out)
+
+
+def pn_mask_specs():
+    return tuple(
+        spec((model.PN_LAYER_DIMS[i][1],)) for i in range(model.PN_MASKED_LAYERS)
+    )
+
+
+def pn_group_specs(b):
+    return (
+        spec((b, PN_S1, PN_K1, 3)),  # g1_xyz
+        spec((b, PN_S2, PN_K2), I32),  # g2_idx
+        spec((b, PN_S2, PN_K2, 3)),  # g2_xyz
+        spec((b, PN_S2, 3)),  # c2_xyz
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_table():
+    """name -> (fn, arg_specs). All fns take/return flat pytrees whose
+    flattened order is documented in model.py."""
+
+    table = {}
+
+    def add(name, fn, specs):
+        table[name] = (fn, specs)
+
+    for suffix, use_pallas in (("", True), ("_fast", False)):
+        add(
+            f"mnist_train{suffix}",
+            functools.partial(model.mnist_train_step, use_pallas=use_pallas),
+            (
+                mnist_param_specs(),
+                mnist_mask_specs(),
+                spec((MNIST_TRAIN_B, 1, 28, 28)),
+                spec((MNIST_TRAIN_B,), I32),
+                spec(()),
+            ),
+        )
+        add(
+            f"mnist_eval{suffix}",
+            functools.partial(model.mnist_eval_logits, use_pallas=use_pallas),
+            (
+                mnist_param_specs(),
+                mnist_mask_specs(),
+                spec((MNIST_EVAL_B, 1, 28, 28)),
+            ),
+        )
+        add(
+            f"pointnet_train{suffix}",
+            functools.partial(model.pointnet_train_step, use_pallas=use_pallas),
+            (
+                pn_param_specs(),
+                pn_mask_specs(),
+                *pn_group_specs(PN_TRAIN_B),
+                spec((PN_TRAIN_B,), I32),
+                spec(()),
+            ),
+        )
+        add(
+            f"pointnet_eval{suffix}",
+            functools.partial(model.pointnet_eval_logits, use_pallas=use_pallas),
+            (
+                pn_param_specs(),
+                pn_mask_specs(),
+                *pn_group_specs(PN_EVAL_B),
+            ),
+        )
+
+    add(
+        "mnist_features",
+        functools.partial(model.mnist_features, use_pallas=False),
+        (
+            mnist_param_specs(),
+            mnist_mask_specs(),
+            spec((MNIST_EVAL_B, 1, 28, 28)),
+        ),
+    )
+    add(
+        "pointnet_features",
+        model.pointnet_features,
+        (pn_param_specs(), pn_mask_specs(), *pn_group_specs(PN_EVAL_B)),
+    )
+    # Search-in-memory: pairwise Hamming distance over bit-encoded kernels.
+    add(
+        "similarity",
+        lambda bits: hamming.hamming_matrix(bits, bits),
+        (spec((SIM_K, SIM_BITS), jnp.int8),),
+    )
+    return table
+
+
+def _manifest_lines(name, specs, out_specs):
+    flat_in, _ = jax.tree_util.tree_flatten(specs)
+    flat_out, _ = jax.tree_util.tree_flatten(out_specs)
+
+    def fmt(i, s):
+        dims = ",".join(str(d) for d in s.shape) if s.shape else "scalar"
+        return f"{i} {jnp.dtype(s.dtype).name} {dims}"
+
+    lines = [f"artifact {name} file={name}.hlo.txt inputs={len(flat_in)} outputs={len(flat_out)}"]
+    lines += [f"  in {fmt(i, s)}" for i, s in enumerate(flat_in)]
+    lines += [f"  out {fmt(i, s)}" for i, s in enumerate(flat_out)]
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    table = artifact_table()
+    names = args.only.split(",") if args.only else list(table)
+    manifest = []
+    for name in names:
+        fn, specs = table[name]
+        print(f"[aot] lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        out_specs = jax.eval_shape(fn, *specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest += _manifest_lines(name, specs, out_specs)
+        print(f"[aot]   wrote {path} ({len(text)} chars)", flush=True)
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] manifest: {len(names)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

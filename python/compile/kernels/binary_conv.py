@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernels: tiled matmul for binarized convolution.
+
+The paper's chip computes binary convolution as in-array AND/XNOR logic
+plus shift-and-add popcount (OUT = X AND (W (.) K), Fig. 3c). On a
+TPU-shaped target the same insight — replace multiply with bit logic and
+feed a wide reduction — maps onto the MXU as a sign-matmul over +-1
+operands (dot(x,w) = 2*popcnt(XNOR) - n). The kernel below is the tiled
+matmul that both the MNIST binary conv (via im2col) and the PointNet 1x1
+conv lower onto.
+
+BlockSpec schedule: grid (M/bm, N/bn, K/bk); the (bm,bk)x(bk,bn) tiles are
+double-buffered HBM->VMEM by Pallas' pipeline; the f32 accumulator tile
+lives in VMEM across the K-steps (revisiting semantics on the last grid
+axis). Everything is lowered with interpret=True — the CPU PJRT client
+cannot execute Mosaic custom-calls — so this code path is validated for
+*numerics* on CPU and its TPU efficiency is estimated analytically in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM-friendly default tiles: 128x128 output tile + two 128x128 operand
+# tiles = 3 * 64 KiB f32 << 16 MiB VMEM, and 128 matches the MXU lane width.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Tiled Pallas matmul (f32): a (M,K) @ b (K,N) -> (M,N).
+
+    Pads every dimension up to its tile multiple, then slices the result
+    back down; zero-padding is exact for matmul.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}"
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    bk = min(bk, max(8, k))
+    ap = _pad_to(_pad_to(a.astype(jnp.float32), bm, 0), bk, 1)
+    bp = _pad_to(_pad_to(b.astype(jnp.float32), bk, 0), bn, 1)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def binary_matmul(a_pm, b_pm, **tiles):
+    """Sign-domain matmul: operands are +-1 (already binarized).
+
+    Equivalent to the chip's XNOR+popcount pipeline; see module docstring.
+    """
+    return matmul(a_pm.astype(jnp.float32), b_pm.astype(jnp.float32), **tiles)
+
+
+def im2col(x, kh, kw, stride=1, pad=1):
+    """im2col for NCHW input -> (N, OH*OW, C*KH*KW); mirrors ref.im2col_ref
+    but uses dynamic slicing jit-friendly enough for the AOT path."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = xp[
+                :, :, i : i + stride * oh : stride, j : j + stride * ow : stride
+            ]
+            cols.append(patch.reshape(n, c, oh * ow))
+    stacked = jnp.stack(cols, axis=0).transpose(1, 3, 2, 0)
+    return stacked.reshape(n, oh * ow, c * kh * kw), oh, ow
+
+
+def conv2d(x, w, stride=1, pad=1, use_pallas=True):
+    """Convolution (NCHW x OIHW) via im2col + the Pallas tiled matmul.
+
+    With binarized `w` this is the software twin of the chip's CIM mode:
+    one output tile per (image-patch block, kernel block) pair.
+    """
+    oc, ic, kh, kw = w.shape
+    n = x.shape[0]
+    cols, oh, ow = im2col(x, kh, kw, stride, pad)  # (N, P, CK)
+    wmat = w.reshape(oc, ic * kh * kw).T  # (CK, OC)
+    flat = cols.reshape(n * oh * ow, ic * kh * kw)
+    if use_pallas:
+        out = matmul(flat, wmat)
+    else:
+        out = flat @ wmat
+    return out.reshape(n, oh * ow, oc).transpose(0, 2, 1).reshape(n, oc, oh, ow)

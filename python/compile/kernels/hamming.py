@@ -1,0 +1,77 @@
+"""Layer-1 Pallas kernel: pairwise XOR Hamming-distance (search-in-memory).
+
+The chip's search-in-memory mode reads two weight rows through the
+reconfigurable unit configured as XOR and popcounts the result with the
+shift-and-add group — one kernel-pair distance per array pass. Here the
+same computation is tiled for a vector unit: bit matrices A (Ka, n) and
+B (Kb, n) in {0,1} produce D[i,j] = sum_k A[i,k] XOR B[j,k].
+
+Tiling: grid over (Ka/bi, Kb/bj); each program holds an (bi, n) and a
+(bj, n) slab in VMEM and materializes the (bi, bj, n) XOR cube only
+per-tile, so VMEM stays bounded at bi*bj*n bytes (int8) regardless of the
+number of kernels being compared.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BI = 32
+DEFAULT_BJ = 32
+
+
+def _hamming_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...].astype(jnp.int32)  # (bi, n)
+    b = b_ref[...].astype(jnp.int32)  # (bj, n)
+    # XOR over {0,1} == inequality; reduce the bit axis.
+    diff = jnp.not_equal(a[:, None, :], b[None, :, :]).astype(jnp.int32)
+    o_ref[...] = jnp.sum(diff, axis=2)
+
+
+def _pad_rows(x, multiple):
+    rem = (-x.shape[0]) % multiple
+    if rem == 0:
+        return x
+    return jnp.pad(x, ((0, rem), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj"))
+def hamming_matrix(a_bits, b_bits, bi=DEFAULT_BI, bj=DEFAULT_BJ):
+    """Pairwise Hamming distances between rows of two {0,1} bit matrices.
+
+    a_bits: (Ka, n) int8/int32 in {0,1};  b_bits: (Kb, n).
+    Returns (Ka, Kb) int32. Row-padding with zeros is sliced back off —
+    padded rows only ever produce distances that are discarded.
+    """
+    ka, n = a_bits.shape
+    kb, n2 = b_bits.shape
+    assert n == n2, f"bit-width mismatch: {a_bits.shape} vs {b_bits.shape}"
+    bi = min(bi, max(1, ka))
+    bj = min(bj, max(1, kb))
+    ap = _pad_rows(a_bits.astype(jnp.int8), bi)
+    bp = _pad_rows(b_bits.astype(jnp.int8), bj)
+    grid = (ap.shape[0] // bi, bp.shape[0] // bj)
+    out = pl.pallas_call(
+        _hamming_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bj, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[0]), jnp.int32),
+        interpret=True,
+    )(ap, bp)
+    return out[:ka, :kb]
+
+
+def similarity_matrix(bits, bi=DEFAULT_BI, bj=DEFAULT_BJ):
+    """Self-similarity s = 1 - d/n over a set of bit-encoded kernels.
+
+    This is exactly what the pruning scheduler consumes: Fig. 4b/4d.
+    """
+    n = bits.shape[-1]
+    d = hamming_matrix(bits, bits, bi=bi, bj=bj)
+    return 1.0 - d.astype(jnp.float32) / n

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: every Pallas kernel in
+this package must match its `*_ref` twin bit-for-bit (integer ops) or to
+float tolerance (matmul) across the pytest sweeps in python/tests/.
+"""
+
+import jax.numpy as jnp
+
+
+def binarize_ref(w):
+    """Deterministic sign binarization with sign(0) = +1 (paper's binary nets)."""
+    return jnp.where(w >= 0, 1.0, -1.0).astype(w.dtype)
+
+
+def matmul_ref(a, b):
+    """Plain f32 matmul oracle for the tiled Pallas matmul."""
+    return jnp.matmul(a, b)
+
+
+def binary_matmul_ref(a_pm, b_pm):
+    """Matmul over +-1 operands — what the digital CIM array computes via
+    XNOR + popcount: dot(x, w) = 2 * popcnt(XNOR(x_bits, w_bits)) - n."""
+    return jnp.matmul(a_pm.astype(jnp.float32), b_pm.astype(jnp.float32))
+
+
+def xnor_popcount_ref(a_bits, b_bits):
+    """Bit-domain formulation of binary_matmul: operands in {0,1}.
+    Returns integer match counts; 2*matches - n equals the +-1 dot product."""
+    a = a_bits.astype(jnp.int32)
+    b = b_bits.astype(jnp.int32)
+    # XNOR(a,b) = 1 - (a ^ b) = a*b + (1-a)*(1-b)
+    matches = jnp.einsum("ik,jk->ij", a, b) + jnp.einsum(
+        "ik,jk->ij", 1 - a, 1 - b
+    )
+    return matches
+
+
+def hamming_ref(a_bits, b_bits):
+    """Pairwise Hamming distance matrix D[i,j] = sum_k a[i,k] != b[j,k].
+
+    This is the paper's search-in-memory primitive: the chip's XOR mode
+    followed by the shift-and-add popcount.
+    """
+    n = a_bits.shape[-1]
+    return n - xnor_popcount_ref(a_bits, b_bits)
+
+
+def similarity_ref(a_bits, b_bits):
+    """Normalized similarity s = 1 - d/n used by the pruning candidate list."""
+    n = a_bits.shape[-1]
+    return 1.0 - hamming_ref(a_bits, b_bits).astype(jnp.float32) / n
+
+
+def im2col_ref(x, kh, kw, stride=1, pad=1):
+    """im2col for NCHW input -> (N, OH*OW, C*KH*KW), C-major then (i,j)."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = xp[
+                :, :, i : i + stride * oh : stride, j : j + stride * ow : stride
+            ]
+            cols.append(patch.reshape(n, c, oh * ow))
+    stacked = jnp.stack(cols, axis=0)  # (KH*KW, N, C, P)
+    stacked = stacked.transpose(1, 3, 2, 0)  # (N, P, C, KH*KW)
+    return stacked.reshape(n, oh * ow, c * kh * kw), oh, ow
+
+
+def conv2d_ref(x, w, stride=1, pad=1):
+    """Reference conv (NCHW, OIHW) built on im2col + matmul."""
+    oc, ic, kh, kw = w.shape
+    cols, oh, ow = im2col_ref(x, kh, kw, stride, pad)
+    wmat = w.reshape(oc, ic * kh * kw)
+    out = jnp.einsum("npk,ok->nop", cols, wmat)
+    return out.reshape(x.shape[0], oc, oh, ow)

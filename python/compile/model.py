@@ -1,0 +1,374 @@
+"""Layer-2 JAX models: the paper's two experimental networks.
+
+  * MNIST CNN (Fig. 4): three binarized 3x3 conv layers + one FC layer,
+    trained with straight-through-estimator (STE) sign binarization.
+    Kernel-level pruning masks are *runtime inputs*, so the Rust
+    coordinator can prune between steps without recompiling the artifact.
+  * PointNet (Fig. 5): hierarchical 1x1-conv (pointwise MLP) set-
+    abstraction network for point-cloud classification. Grouping (FPS +
+    ball query) is coordinate-only, so the Rust substrate precomputes the
+    grouped tensors / gather indices and the JAX graph stays static.
+
+Both forward passes route every matmul through the Layer-1 Pallas kernel
+(`kernels.binary_conv.matmul`), wrapped in a custom VJP whose backward is
+also Pallas matmuls — so the AOT artifact's fwd AND bwd hot paths are the
+paper's kernel.
+
+Everything here is build-time only: `aot.py` lowers the jitted train/eval
+steps to HLO text once; Python never runs on the Rust request path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import binary_conv as bc
+
+# ---------------------------------------------------------------------------
+# Differentiable Pallas matmul (custom VJP: grads are Pallas matmuls too).
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def pmatmul(a, b):
+    return bc.matmul(a, b)
+
+
+def _pmatmul_fwd(a, b):
+    return bc.matmul(a, b), (a, b)
+
+
+def _pmatmul_bwd(res, g):
+    a, b = res
+    da = bc.matmul(g, b.T)
+    db = bc.matmul(a.T, g)
+    return da, db
+
+
+pmatmul.defvjp(_pmatmul_fwd, _pmatmul_bwd)
+
+
+def binarize_ste(w):
+    """Scaled sign binarization with straight-through gradient.
+
+    Kernel bits are sign(w) in {-1,+1} — exactly what the RRAM cells store
+    and the XNOR/popcount array computes. The per-kernel scale
+    alpha = mean(|w|) (XNOR-Net) is a digital multiplier folded into the
+    chip's shift-and-add stage; without it the binary activations blow up
+    (fan-in 288-576) and training diverges.
+    """
+    axes = tuple(range(1, w.ndim))
+    alpha = jnp.mean(jnp.abs(w), axis=axes, keepdims=True)
+    wb = jnp.where(w >= 0, 1.0, -1.0).astype(w.dtype) * alpha
+    return w + jax.lax.stop_gradient(wb - w)
+
+
+def fake_quant_int8_ste(w):
+    """Symmetric per-output-channel INT8 fake-quant with STE.
+
+    Paper's PointNet path: INT8 weights on four 2-bit RRAM cells. The scale
+    is per filter (output channel = last axis of the (in,out) matrix), just
+    as each filter occupies its own RRAM rows with its own digital scale in
+    the S&A stage — so pruning one filter cannot perturb another's
+    quantization grid.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=0, keepdims=True), 1e-8) / 127.0
+    wq = jnp.clip(jnp.round(w / scale), -128, 127) * scale
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def conv2d_pallas(x, w, stride=1, pad=1):
+    """Conv (NCHW x OIHW) = im2col + differentiable Pallas matmul."""
+    oc, ic, kh, kw = w.shape
+    n = x.shape[0]
+    cols, oh, ow = bc.im2col(x, kh, kw, stride, pad)  # (N, P, CK)
+    flat = cols.reshape(n * oh * ow, ic * kh * kw)
+    out = pmatmul(flat, w.reshape(oc, ic * kh * kw).T)
+    return out.reshape(n, oh * ow, oc).transpose(0, 2, 1).reshape(n, oc, oh, ow)
+
+
+def maxpool2(x):
+    n, c, h, w = x.shape
+    return x.reshape(n, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def cross_entropy(logits, y, n_classes):
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+    return loss, correct
+
+
+# ---------------------------------------------------------------------------
+# MNIST CNN (paper Fig. 4 / Methods): 32-64-32 binary 3x3 kernels + FC(1568,10)
+# ---------------------------------------------------------------------------
+
+MNIST_CHANNELS = (32, 64, 32)
+MNIST_FC_IN = 32 * 7 * 7  # 28 ->pool-> 14 ->pool-> 7
+MNIST_CLASSES = 10
+
+# Flat parameter order — the Rust runtime packs Literals in exactly this
+# order (see rust/src/runtime/artifacts.rs):
+#   w1 (32,1,3,3)  b1 (32,)
+#   w2 (64,32,3,3) b2 (64,)
+#   w3 (32,64,3,3) b3 (32,)
+#   wf (1568,10)   bf (10,)
+# Mask order: m1 (32,), m2 (64,), m3 (32,)
+
+
+def mnist_init(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    c1, c2, c3 = MNIST_CHANNELS
+
+    def he(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+    return (
+        he(k1, (c1, 1, 3, 3), 9),
+        jnp.zeros((c1,), jnp.float32),
+        he(k2, (c2, c1, 3, 3), c1 * 9),
+        jnp.zeros((c2,), jnp.float32),
+        he(k3, (c3, c2, 3, 3), c2 * 9),
+        jnp.zeros((c3,), jnp.float32),
+        he(k4, (MNIST_FC_IN, MNIST_CLASSES), MNIST_FC_IN),
+        jnp.zeros((MNIST_CLASSES,), jnp.float32),
+    )
+
+
+def mnist_forward(params, masks, x, use_pallas=True):
+    """Forward pass. x: (B,1,28,28) f32 in [0,1]; returns logits (B,10).
+
+    Conv weights are sign-binarized (STE) then masked per output kernel —
+    a pruned kernel contributes exactly zero, mirroring a deactivated RRAM
+    row block.
+    """
+    w1, b1, w2, b2, w3, b3, wf, bf = params
+    m1, m2, m3 = masks
+    conv = conv2d_pallas if use_pallas else (lambda x, w: bc.conv2d(x, w, use_pallas=False))
+
+    def block(x, w, b, m, pool):
+        wb = binarize_ste(w) * m[:, None, None, None]
+        h = conv(x, wb) + b[None, :, None, None]
+        h = jax.nn.relu(h) * m[None, :, None, None]
+        return maxpool2(h) if pool else h
+
+    h = block(x, w1, b1, m1, pool=True)  # (B,32,14,14)
+    h = block(h, w2, b2, m2, pool=True)  # (B,64,7,7)
+    h = block(h, w3, b3, m3, pool=False)  # (B,32,7,7)
+    flat = h.reshape(x.shape[0], MNIST_FC_IN)
+    if use_pallas:
+        return pmatmul(flat, wf) + bf[None, :]
+    return flat @ wf + bf[None, :]
+
+
+def mnist_loss(params, masks, x, y, use_pallas=True):
+    logits = mnist_forward(params, masks, x, use_pallas)
+    loss, correct = cross_entropy(logits, y, MNIST_CLASSES)
+    return loss, correct
+
+
+def mnist_train_step(params, masks, x, y, lr, use_pallas=True):
+    """One fused SGD step. Returns (new_params, loss, n_correct).
+
+    Gradients of masked (pruned) kernels are themselves masked so pruned
+    kernels stay frozen at their pruned state — the paper's chip simply
+    stops addressing those rows.
+    """
+    (loss, correct), grads = jax.value_and_grad(mnist_loss, has_aux=True)(
+        params, masks, x, y, use_pallas
+    )
+    m1, m2, m3 = masks
+    gmask = (
+        m1[:, None, None, None],
+        m1,
+        m2[:, None, None, None],
+        m2,
+        m3[:, None, None, None],
+        m3,
+        jnp.ones_like(params[6]),
+        jnp.ones_like(params[7]),
+    )
+    new_params = tuple(
+        p - lr * g * gm for p, g, gm in zip(params, grads, gmask)
+    )
+    return new_params, loss, correct
+
+
+def mnist_eval_logits(params, masks, x, use_pallas=True):
+    return mnist_forward(params, masks, x, use_pallas)
+
+
+def mnist_features(params, masks, x, use_pallas=False):
+    """Penultimate (flattened conv3) features for t-SNE (Fig. 4f,g)."""
+    w1, b1, w2, b2, w3, b3, _, _ = params
+    m1, m2, m3 = masks
+    conv = conv2d_pallas if use_pallas else (lambda x, w: bc.conv2d(x, w, use_pallas=False))
+
+    def block(x, w, b, m, pool):
+        wb = binarize_ste(w) * m[:, None, None, None]
+        h = conv(x, wb) + b[None, :, None, None]
+        h = jax.nn.relu(h) * m[None, :, None, None]
+        return maxpool2(h) if pool else h
+
+    h = block(x, w1, b1, m1, True)
+    h = block(h, w2, b2, m2, True)
+    h = block(h, w3, b3, m3, False)
+    return h.reshape(x.shape[0], MNIST_FC_IN)
+
+
+# ---------------------------------------------------------------------------
+# PointNet (paper Fig. 5): 2-level set abstraction + global pooling + head.
+# Grouping tensors are produced by the Rust substrate (FPS + ball query are
+# coordinate-only); layer widths are a scaled-down PointNet++ SSG.
+# ---------------------------------------------------------------------------
+
+PN_SA1 = (32, 32, 64)  # MLP over relative xyz (3 -> ...)
+PN_SA2 = (64, 64, 128)  # MLP over [grouped f1 ; rel xyz] (64+3 -> ...)
+PN_GLOBAL = (128, 256)  # MLP over [f2 ; center2 xyz] (128+3 -> ...)
+PN_HEAD = (128,)  # FC head hidden
+PN_CLASSES = 10
+
+# Flat parameter order (w, b per layer):
+#   sa1: (3,32) (32,) (32,32) (32,) (32,64) (64,)
+#   sa2: (67,64) (64,) (64,64) (64,) (64,128) (128,)
+#   glb: (131,128) (128,) (128,256) (256,)
+#   head: (256,128) (128,) (128,10) (10,)
+# Mask order (one per conv/MLP layer, over output channels):
+#   m0 (32,) m1 (32,) m2 (64,) m3 (64,) m4 (64,) m5 (128,) m6 (128,) m7 (256,)
+
+PN_LAYER_DIMS = [
+    (3, 32),
+    (32, 32),
+    (32, 64),
+    (64 + 3, 64),
+    (64, 64),
+    (64, 128),
+    (128 + 3, 128),
+    (128, 256),
+    (256, 128),
+    (128, PN_CLASSES),
+]
+PN_MASKED_LAYERS = 8  # all conv (pointwise MLP) layers; head FCs unmasked
+
+
+def pointnet_init(key):
+    keys = jax.random.split(key, len(PN_LAYER_DIMS))
+    params = []
+    for k, (fi, fo) in zip(keys, PN_LAYER_DIMS):
+        params.append(
+            jax.random.normal(k, (fi, fo), jnp.float32) * jnp.sqrt(2.0 / fi)
+        )
+        params.append(jnp.zeros((fo,), jnp.float32))
+    return tuple(params)
+
+
+def _dense(x, w, b, m=None, use_pallas=True, quant=True):
+    """Pointwise (1x1-conv) dense layer over the last axis, channel-masked."""
+    if quant:
+        w = fake_quant_int8_ste(w)
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    out = pmatmul(flat, w) if use_pallas else flat @ w
+    out = out + b[None, :]
+    out = jax.nn.relu(out)
+    if m is not None:
+        out = out * m[None, :]
+    return out.reshape(*shape[:-1], w.shape[1])
+
+
+def pointnet_forward(params, masks, g1_xyz, g2_idx, g2_xyz, c2_xyz, use_pallas=True):
+    """Forward pass.
+
+    g1_xyz: (B,S1,K1,3) relative neighbor coords of SA1 groups
+    g2_idx: (B,S2,K2) int32 indices into SA1 centers
+    g2_xyz: (B,S2,K2,3) relative coords of grouped SA1 centers
+    c2_xyz: (B,S2,3) absolute SA2 center coords
+    Returns logits (B,10).
+    """
+    p = list(params)
+    m = list(masks)
+    b = g1_xyz.shape[0]
+
+    # --- SA1: MLP over local geometry, max over neighbors ---
+    h = g1_xyz
+    h = _dense(h, p[0], p[1], m[0], use_pallas)
+    h = _dense(h, p[2], p[3], m[1], use_pallas)
+    h = _dense(h, p[4], p[5], m[2], use_pallas)
+    f1 = h.max(axis=2)  # (B,S1,64)
+
+    # --- SA2: gather SA1 features into groups, concat relative xyz ---
+    s2, k2 = g2_idx.shape[1], g2_idx.shape[2]
+    idx = g2_idx.reshape(b, s2 * k2)
+    gathered = jnp.take_along_axis(f1, idx[:, :, None], axis=1)
+    gathered = gathered.reshape(b, s2, k2, f1.shape[-1])
+    h = jnp.concatenate([gathered, g2_xyz], axis=-1)  # (B,S2,K2,67)
+    h = _dense(h, p[6], p[7], m[3], use_pallas)
+    h = _dense(h, p[8], p[9], m[4], use_pallas)
+    h = _dense(h, p[10], p[11], m[5], use_pallas)
+    f2 = h.max(axis=2)  # (B,S2,128)
+
+    # --- Global: concat center coords, MLP, max over centers ---
+    h = jnp.concatenate([f2, c2_xyz], axis=-1)  # (B,S2,131)
+    h = _dense(h, p[12], p[13], m[6], use_pallas)
+    h = _dense(h, p[14], p[15], m[7], use_pallas)
+    g = h.max(axis=1)  # (B,256)
+
+    # --- Head ---
+    h = _dense(g, p[16], p[17], None, use_pallas, quant=False)
+    flat = h.reshape(-1, h.shape[-1])
+    logits = (pmatmul(flat, p[18]) if use_pallas else flat @ p[18]) + p[19][None, :]
+    return logits
+
+
+def pointnet_loss(params, masks, g1, g2i, g2x, c2, y, use_pallas=True):
+    logits = pointnet_forward(params, masks, g1, g2i, g2x, c2, use_pallas)
+    loss, correct = cross_entropy(logits, y, PN_CLASSES)
+    return loss, correct
+
+
+def pointnet_train_step(params, masks, g1, g2i, g2x, c2, y, lr, use_pallas=True):
+    (loss, correct), grads = jax.value_and_grad(pointnet_loss, has_aux=True)(
+        params, masks, g1, g2i, g2x, c2, y, use_pallas
+    )
+    # Mask gradients of pruned output channels (w columns + bias entries).
+    gm = []
+    for li in range(len(PN_LAYER_DIMS)):
+        if li < PN_MASKED_LAYERS:
+            gm.append(masks[li][None, :])
+            gm.append(masks[li])
+        else:
+            gm.append(jnp.ones((1, PN_LAYER_DIMS[li][1]), jnp.float32))
+            gm.append(jnp.ones((PN_LAYER_DIMS[li][1],), jnp.float32))
+    new_params = tuple(p - lr * g * m for p, g, m in zip(params, grads, gm))
+    return new_params, loss, correct
+
+
+def pointnet_eval_logits(params, masks, g1, g2i, g2x, c2, use_pallas=True):
+    return pointnet_forward(params, masks, g1, g2i, g2x, c2, use_pallas)
+
+
+def pointnet_features(params, masks, g1, g2i, g2x, c2):
+    """Global 256-d feature (pre-head) for t-SNE (Fig. 5d,e)."""
+    p = list(params)
+    m = list(masks)
+    b = g1.shape[0]
+    h = g1
+    h = _dense(h, p[0], p[1], m[0], False)
+    h = _dense(h, p[2], p[3], m[1], False)
+    h = _dense(h, p[4], p[5], m[2], False)
+    f1 = h.max(axis=2)
+    s2, k2 = g2i.shape[1], g2i.shape[2]
+    idx = g2i.reshape(b, s2 * k2)
+    gathered = jnp.take_along_axis(f1, idx[:, :, None], axis=1)
+    gathered = gathered.reshape(b, s2, k2, f1.shape[-1])
+    h = jnp.concatenate([gathered, g2x], axis=-1)
+    h = _dense(h, p[6], p[7], m[3], False)
+    h = _dense(h, p[8], p[9], m[4], False)
+    h = _dense(h, p[10], p[11], m[5], False)
+    f2 = h.max(axis=2)
+    h = jnp.concatenate([f2, c2], axis=-1)
+    h = _dense(h, p[12], p[13], m[6], False)
+    h = _dense(h, p[14], p[15], m[7], False)
+    return h.max(axis=1)

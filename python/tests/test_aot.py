@@ -1,0 +1,74 @@
+"""AOT pipeline sanity: artifact table lowers, manifest matches eval_shape."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_artifact_table_complete():
+    table = aot.artifact_table()
+    expected = {
+        "mnist_train", "mnist_eval", "mnist_train_fast", "mnist_eval_fast",
+        "pointnet_train", "pointnet_eval", "pointnet_train_fast",
+        "pointnet_eval_fast", "mnist_features", "pointnet_features",
+        "similarity",
+    }
+    assert expected <= set(table)
+
+
+def test_mnist_train_signature():
+    fn, specs = aot.artifact_table()["mnist_train"]
+    flat, _ = jax.tree_util.tree_flatten(specs)
+    # 8 params + 3 masks + x + y + lr
+    assert len(flat) == 14
+    out = jax.eval_shape(fn, *specs)
+    flat_out, _ = jax.tree_util.tree_flatten(out)
+    assert len(flat_out) == 10  # 8 new params + loss + correct
+
+
+def test_pointnet_train_signature():
+    fn, specs = aot.artifact_table()["pointnet_train"]
+    flat, _ = jax.tree_util.tree_flatten(specs)
+    # 20 params + 8 masks + 4 group tensors + y + lr
+    assert len(flat) == 34
+    out = jax.eval_shape(fn, *specs)
+    flat_out, _ = jax.tree_util.tree_flatten(out)
+    assert len(flat_out) == 22  # 20 params + loss + correct
+
+
+def test_similarity_lowering_roundtrip():
+    fn, specs = aot.artifact_table()["similarity"]
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_manifest_lines_format():
+    fn, specs = aot.artifact_table()["similarity"]
+    out = jax.eval_shape(fn, *specs)
+    lines = aot._manifest_lines("similarity", specs, out)
+    assert lines[0].startswith("artifact similarity file=similarity.hlo.txt")
+    assert "inputs=1" in lines[0] and "outputs=1" in lines[0]
+    assert lines[1].strip() == f"in 0 int8 {aot.SIM_K},{aot.SIM_BITS}"
+    assert lines[2].strip() == f"out 0 int32 {aot.SIM_K},{aot.SIM_K}"
+
+
+def test_sim_bits_covers_all_mnist_layers():
+    """SIM_BITS must be >= the largest binarized-kernel bit width."""
+    c1, c2, c3 = model.MNIST_CHANNELS
+    widths = [1 * 9, c1 * 9, c2 * 9]
+    assert max(widths) <= aot.SIM_BITS
+    assert max(model.MNIST_CHANNELS) <= aot.SIM_K
+
+
+def test_eval_batch_shapes():
+    fn, specs = aot.artifact_table()["mnist_eval"]
+    flat, _ = jax.tree_util.tree_flatten(specs)
+    assert flat[-1].shape == (aot.MNIST_EVAL_B, 1, 28, 28)
+    out = jax.eval_shape(fn, *specs)
+    flat_out, _ = jax.tree_util.tree_flatten(out)
+    assert flat_out[0].shape == (aot.MNIST_EVAL_B, 10)

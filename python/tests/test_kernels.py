@@ -1,0 +1,151 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose (float) or exact equality
+(integer bit ops) against ref.py. This is the core correctness signal for
+the kernels that end up inside every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binary_conv as bc
+from compile.kernels import hamming, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng_array(seed, shape, dtype=np.float32, bits=False):
+    r = np.random.default_rng(seed)
+    if bits:
+        return r.integers(0, 2, size=shape).astype(np.int8)
+    return r.standard_normal(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tiled Pallas matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 97),
+    k=st.integers(1, 70),
+    n=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rng_array(seed, (m, k))
+    b = rng_array(seed + 1, (k, n))
+    out = bc.matmul(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(out, a @ b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (128, 128, 128)])
+def test_matmul_tile_invariance(bm, bn, bk):
+    """Result must not depend on the BlockSpec tiling choice."""
+    a = rng_array(7, (33, 29))
+    b = rng_array(8, (29, 41))
+    out = bc.matmul(jnp.asarray(a), jnp.asarray(b), bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(out, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_binary_matmul_equals_xnor_popcount_identity():
+    """dot(x, w) over +-1 == 2*matches - n: the chip's XNOR+popcount rule."""
+    r = np.random.default_rng(3)
+    a_bits = r.integers(0, 2, size=(13, 57)).astype(np.int8)
+    b_bits = r.integers(0, 2, size=(9, 57)).astype(np.int8)
+    a_pm = (2 * a_bits - 1).astype(np.float32)
+    b_pm = (2 * b_bits - 1).astype(np.float32)
+    dot = bc.binary_matmul(jnp.asarray(a_pm), jnp.asarray(b_pm).T)
+    matches = np.asarray(ref.xnor_popcount_ref(jnp.asarray(a_bits), jnp.asarray(b_bits)))
+    np.testing.assert_allclose(dot, 2 * matches - 57, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Hamming / similarity (search-in-memory)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ka=st.integers(1, 70),
+    kb=st.integers(1, 70),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hamming_matches_ref(ka, kb, n, seed):
+    a = rng_array(seed, (ka, n), bits=True)
+    b = rng_array(seed + 1, (kb, n), bits=True)
+    d = hamming.hamming_matrix(jnp.asarray(a), jnp.asarray(b))
+    expected = np.asarray(ref.hamming_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(np.asarray(d), expected)
+
+
+def test_hamming_properties():
+    a = rng_array(11, (20, 64), bits=True)
+    d = np.asarray(hamming.hamming_matrix(jnp.asarray(a), jnp.asarray(a)))
+    # identity: d(i,i) = 0
+    assert (np.diag(d) == 0).all()
+    # symmetry
+    np.testing.assert_array_equal(d, d.T)
+    # bounds
+    assert d.min() >= 0 and d.max() <= 64
+
+
+def test_hamming_zero_padding_invariance():
+    """Padding both operands with zero bits must not change distances —
+    this is what lets one fixed-shape artifact serve all layers."""
+    a = rng_array(5, (10, 30), bits=True)
+    b = rng_array(6, (8, 30), bits=True)
+    d1 = np.asarray(hamming.hamming_matrix(jnp.asarray(a), jnp.asarray(b)))
+    ap = np.pad(a, ((0, 0), (0, 34)))
+    bp = np.pad(b, ((0, 0), (0, 34)))
+    d2 = np.asarray(hamming.hamming_matrix(jnp.asarray(ap), jnp.asarray(bp)))
+    np.testing.assert_array_equal(d1, d2)
+
+
+def test_similarity_range_and_self():
+    a = rng_array(12, (16, 90), bits=True)
+    s = np.asarray(hamming.similarity_matrix(jnp.asarray(a)))
+    assert np.allclose(np.diag(s), 1.0)
+    assert (s >= 0.0).all() and (s <= 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# Convolution path
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 4),
+    hw=st.sampled_from([6, 8, 12]),
+    oc=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(n, c, hw, oc, seed):
+    x = rng_array(seed, (n, c, hw, hw))
+    w = rng_array(seed + 1, (oc, c, 3, 3))
+    out = bc.conv2d(jnp.asarray(x), jnp.asarray(w))
+    expected = np.asarray(ref.conv2d_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_allclose(out, expected, rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_matches_ref():
+    x = rng_array(2, (2, 3, 8, 8))
+    got, oh, ow = bc.im2col(jnp.asarray(x), 3, 3)
+    want, oh2, ow2 = ref.im2col_ref(jnp.asarray(x), 3, 3)
+    assert (oh, ow) == (oh2, ow2) == (8, 8)
+    np.testing.assert_allclose(got, want)
+
+
+def test_conv2d_pallas_vs_plain():
+    x = rng_array(9, (2, 4, 10, 10))
+    w = rng_array(10, (6, 4, 3, 3))
+    a = bc.conv2d(jnp.asarray(x), jnp.asarray(w), use_pallas=True)
+    b = bc.conv2d(jnp.asarray(x), jnp.asarray(w), use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,170 @@
+"""L2 correctness: model shapes, mask semantics, training behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+
+
+def mnist_setup(batch=8):
+    params = model.mnist_init(KEY)
+    masks = (jnp.ones(32), jnp.ones(64), jnp.ones(32))
+    x = jax.random.uniform(KEY, (batch, 1, 28, 28))
+    y = jax.random.randint(KEY, (batch,), 0, 10)
+    return params, masks, x, y
+
+
+def pn_setup(batch=4):
+    params = model.pointnet_init(KEY)
+    masks = tuple(
+        jnp.ones((model.PN_LAYER_DIMS[i][1],)) for i in range(model.PN_MASKED_LAYERS)
+    )
+    s1, k1, s2, k2 = 16, 8, 8, 4
+    g1 = jax.random.normal(KEY, (batch, s1, k1, 3))
+    g2i = jax.random.randint(KEY, (batch, s2, k2), 0, s1)
+    g2x = jax.random.normal(KEY, (batch, s2, k2, 3))
+    c2 = jax.random.normal(KEY, (batch, s2, 3))
+    y = jax.random.randint(KEY, (batch,), 0, 10)
+    return params, masks, g1, g2i, g2x, c2, y
+
+
+# ---------------------------------------------------------------------------
+# MNIST
+# ---------------------------------------------------------------------------
+
+
+def test_mnist_forward_shape():
+    params, masks, x, _ = mnist_setup()
+    logits = model.mnist_forward(params, masks, x, use_pallas=False)
+    assert logits.shape == (8, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_mnist_initial_loss_near_chance():
+    params, masks, x, y = mnist_setup(32)
+    loss, _ = model.mnist_loss(params, masks, x, y, use_pallas=False)
+    assert 1.0 < float(loss) < 6.0  # ~ln(10)=2.3 plus binarization noise
+
+
+def test_mnist_pruned_kernel_is_inert():
+    """Zeroing mask channel c must make the output invariant to w[c] —
+    the RRAM rows of a pruned kernel are never addressed."""
+    params, masks, x, _ = mnist_setup()
+    m1 = masks[0].at[3].set(0.0)
+    masks2 = (m1, masks[1], masks[2])
+    out1 = model.mnist_forward(params, masks2, x, use_pallas=False)
+    p2 = list(params)
+    p2[0] = params[0].at[3].set(jax.random.normal(KEY, (1, 3, 3)) * 100.0)
+    out2 = model.mnist_forward(tuple(p2), masks2, x, use_pallas=False)
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+def test_mnist_train_step_freezes_pruned_kernels():
+    params, masks, x, y = mnist_setup()
+    m1 = masks[0].at[5].set(0.0)
+    masks2 = (m1, masks[1], masks[2])
+    new_params, loss, _ = model.mnist_train_step(
+        params, masks2, x, y, jnp.float32(0.1), use_pallas=False
+    )
+    # pruned kernel 5 untouched; a live kernel must have moved
+    np.testing.assert_array_equal(np.asarray(new_params[0][5]), np.asarray(params[0][5]))
+    assert not np.allclose(np.asarray(new_params[0][0]), np.asarray(params[0][0]))
+    assert np.isfinite(float(loss))
+
+
+def test_mnist_training_reduces_loss():
+    params, masks, x, y = mnist_setup(32)
+    step = jax.jit(
+        lambda p, m, x, y, lr: model.mnist_train_step(p, m, x, y, lr, use_pallas=False)
+    )
+    loss0 = None
+    p = params
+    for i in range(25):
+        p, loss, _ = step(p, masks, x, y, jnp.float32(0.05))
+        if loss0 is None:
+            loss0 = float(loss)
+    assert float(loss) < loss0 * 0.7, (loss0, float(loss))
+
+
+def test_mnist_pallas_and_plain_forward_agree():
+    params, masks, x, _ = mnist_setup(2)
+    a = model.mnist_forward(params, masks, x, use_pallas=True)
+    b = model.mnist_forward(params, masks, x, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+def test_mnist_features_shape():
+    params, masks, x, _ = mnist_setup()
+    f = model.mnist_features(params, masks, x)
+    assert f.shape == (8, model.MNIST_FC_IN)
+
+
+# ---------------------------------------------------------------------------
+# PointNet
+# ---------------------------------------------------------------------------
+
+
+def test_pointnet_forward_shape():
+    params, masks, g1, g2i, g2x, c2, _ = pn_setup()
+    logits = model.pointnet_forward(params, masks, g1, g2i, g2x, c2, use_pallas=False)
+    assert logits.shape == (4, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_pointnet_pruned_filter_is_inert():
+    params, masks, g1, g2i, g2x, c2, _ = pn_setup()
+    m = list(masks)
+    m[2] = m[2].at[7].set(0.0)  # prune SA1 layer-3 output channel 7
+    out1 = model.pointnet_forward(params, tuple(m), g1, g2i, g2x, c2, use_pallas=False)
+    p2 = list(params)
+    p2[4] = params[4].at[:, 7].set(99.0)  # column 7 of (32,64) weight
+    p2[5] = params[5].at[7].set(-42.0)
+    out2 = model.pointnet_forward(tuple(p2), tuple(m), g1, g2i, g2x, c2, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5, atol=1e-5)
+
+
+def test_pointnet_train_step_freezes_pruned_filters():
+    params, masks, g1, g2i, g2x, c2, y = pn_setup()
+    m = list(masks)
+    m[0] = m[0].at[1].set(0.0)
+    new_params, loss, _ = model.pointnet_train_step(
+        params, tuple(m), g1, g2i, g2x, c2, y, jnp.float32(0.05), use_pallas=False
+    )
+    np.testing.assert_array_equal(
+        np.asarray(new_params[0][:, 1]), np.asarray(params[0][:, 1])
+    )
+    assert np.isfinite(float(loss))
+
+
+def test_pointnet_training_reduces_loss():
+    params, masks, g1, g2i, g2x, c2, y = pn_setup(8)
+    step = jax.jit(
+        lambda p, m, *a: model.pointnet_train_step(p, m, *a, use_pallas=False)
+    )
+    p = params
+    loss0 = None
+    for i in range(25):
+        p, loss, _ = step(p, masks, g1, g2i, g2x, c2, y, jnp.float32(0.05))
+        if loss0 is None:
+            loss0 = float(loss)
+    assert float(loss) < loss0 * 0.7
+
+
+def test_pointnet_features_shape():
+    params, masks, g1, g2i, g2x, c2, _ = pn_setup()
+    f = model.pointnet_features(params, masks, g1, g2i, g2x, c2)
+    assert f.shape == (4, 256)
+
+
+def test_fake_quant_int8_levels():
+    w = jax.random.normal(KEY, (64, 64))
+    wq = model.fake_quant_int8_ste(w)
+    scale = float(jnp.max(jnp.abs(w))) / 127.0
+    levels = np.unique(np.round(np.asarray(wq) / scale))
+    assert len(levels) <= 256
+    np.testing.assert_allclose(levels, np.round(levels), atol=1e-4)

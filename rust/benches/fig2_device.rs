@@ -1,0 +1,74 @@
+//! Regenerates paper Fig. 2 (device characterization) and times the
+//! underlying device-model routines. Run: cargo bench --bench fig2_device
+
+use rram_cim::bench::{print_series, print_table, Bencher};
+use rram_cim::device::{characterize, DeviceConfig};
+use rram_cim::util::stats;
+
+fn main() {
+    let cfg = DeviceConfig::default();
+    let seed = 1;
+    let mut b = Bencher::new(1, 5);
+
+    println!("== Fig. 2e: quasi-static I-V (bipolar switching) ==");
+    let iv = characterize::iv_sweep(&cfg, seed, 60);
+    print_series("I (mA) over sweep", &iv.iter().map(|p| p.1).collect::<Vec<_>>());
+    let up = iv[13].1.abs();
+    let down = iv[86].1.abs();
+    println!("hysteresis at 0.3 V: HRS {:.4} mA vs LRS {:.4} mA ({:.1}x window)", up, down, down / up);
+    b.bench("iv_sweep(240 pts)", || characterize::iv_sweep(&cfg, seed, 60));
+
+    println!("\n== Fig. 2f: 128 multi-level states ==");
+    let states = characterize::multilevel_states(&cfg, seed, 128);
+    print_series("programmed R (kOhm)", &states);
+    b.bench("multilevel_states(128)", || characterize::multilevel_states(&cfg, seed, 128));
+
+    println!("\n== Fig. 2g: retention to 4e6 s ==");
+    let (_, traces) = characterize::retention_traces(&cfg, seed, 4, 16);
+    for (i, t) in traces.iter().enumerate() {
+        let drift = 100.0 * (t.last().unwrap() - t[0]).abs() / t[0];
+        println!("state {i}: start {:.1} kOhm, drift {:.2}% (paper: no drift)", t[0], drift);
+    }
+
+    println!("\n== Fig. 2h: endurance to 1e6 cycles ==");
+    let tr = characterize::endurance_trace(&cfg, seed, 1_000_000);
+    let rows: Vec<Vec<String>> = tr
+        .iter()
+        .map(|&(c, l, h)| vec![format!("{c}"), format!("{l:.1}"), format!("{h:.1}"), format!("{:.1}x", h / l)])
+        .collect();
+    print_table("endurance checkpoints", &["cycle", "LRS", "HRS", "window"], &rows);
+    let (_, l, h) = tr[tr.len() - 1];
+    assert!(h / l > 3.0, "window must survive 1e6 cycles");
+
+    println!("\n== Fig. 2i: forming voltage distribution (2x512x32) ==");
+    let (s, y) = characterize::forming_distribution(&cfg, seed);
+    println!(
+        "mean {:.3} V (paper 1.89), std {:.3} V (paper 0.18), yield {:.1}% (paper 100%)",
+        s.mean, s.std, 100.0 * y
+    );
+    b.bench("forming_distribution(32k cells)", || characterize::forming_distribution(&cfg, seed));
+
+    println!("\n== Fig. 2j/k/l: programming accuracy ==");
+    let reps = characterize::programming_accuracy(&cfg, seed, &[2, 4, 8, 16]);
+    let rows: Vec<Vec<String>> = reps
+        .iter()
+        .map(|r| {
+            vec![format!("{}", r.levels), format!("{:.2}%", 100.0 * r.success_frac), format!("{:.4}", r.sigma_kohm)]
+        })
+        .collect();
+    print_table(
+        "write-verify (paper: 99.8% within +-2 kOhm, sigma 0.8793 kOhm)",
+        &["levels", "in window", "sigma kOhm"],
+        &rows,
+    );
+    let r16 = &reps[3];
+    let resid: Vec<f64> = r16
+        .actual
+        .iter()
+        .zip(&r16.assigned)
+        .map(|(&a, &l)| a - r16.targets[l])
+        .collect();
+    println!("16-level residual p5..p95: {:.2} .. {:.2} kOhm",
+        stats::percentile(&resid, 5.0), stats::percentile(&resid, 95.0));
+    println!("\nfig2_device done");
+}

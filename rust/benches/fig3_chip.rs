@@ -1,0 +1,116 @@
+//! Regenerates paper Fig. 3 (chip architecture + comparison) panels.
+//! Run: cargo bench --bench fig3_chip
+
+use rram_cim::baselines::{self, analog_cim, gpu, sram_cim, Workload};
+use rram_cim::bench::{print_table, Bencher};
+use rram_cim::chip::timing::waveform;
+use rram_cim::chip::{AreaModel, Chip, ChipConfig, LogicOp};
+use rram_cim::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let mut chip = Chip::new(ChipConfig::default(), &mut rng);
+    chip.form();
+
+    // --- Fig. 3c: full ternary truth table, verified on the chip ---
+    let mut rows = Vec::new();
+    for op in LogicOp::ALL {
+        for &w in &[false, true] {
+            chip.program_bit(0, 0, 0, w);
+            for &x in &[false, true] {
+                for &k in &[false, true] {
+                    let out = chip.logic_pass(0, 0, op, &[x], &[k], false)[0];
+                    assert_eq!(out, x && op.apply(w, k), "truth table violation");
+                    if x {
+                        rows.push(vec![
+                            op.name().into(),
+                            format!("{}", w as u8),
+                            format!("{}", k as u8),
+                            format!("{}", out as u8),
+                        ]);
+                    }
+                }
+            }
+        }
+    }
+    print_table("Fig. 3c: OUT = X AND (W (.) K)  [X=1 rows]", &["op", "W", "K", "OUT"], &rows);
+
+    // --- Fig. 3f: pre-charge / compute waveforms ---
+    println!("\n=== Fig. 3f: dynamic-logic phases ===");
+    for op in [LogicOp::Nand, LogicOp::Xor, LogicOp::Or] {
+        let wf = waveform(op, true, true, false);
+        println!(
+            "{:<5} precharge: node={} out={}   compute: node={} out={}",
+            op.name(),
+            wf[0].1 as u8,
+            wf[0].2 as u8,
+            wf[1].1 as u8,
+            wf[1].2 as u8
+        );
+    }
+
+    // --- Fig. 3d/e: area + power breakdown ---
+    let area = AreaModel::default();
+    let rows: Vec<Vec<String>> = area
+        .shares()
+        .iter()
+        .map(|(m, s)| vec![m.to_string(), format!("{:.2}%", 100.0 * s)])
+        .collect();
+    print_table("Fig. 3d: area (paper: RRAM 61.76, ACC 17.91, WRC 12.21)", &["module", "share"], &rows);
+
+    chip.reset_ledgers();
+    let n = chip.cfg().data_cols();
+    for _ in 0..5_000 {
+        chip.logic_pass(0, 1, LogicOp::And, &vec![true; n], &vec![true; n], true);
+    }
+    let rows: Vec<Vec<String>> = chip
+        .energy_breakdown()
+        .shares()
+        .iter()
+        .map(|(m, s)| vec![m.to_string(), format!("{:.2}%", 100.0 * s)])
+        .collect();
+    print_table(
+        "Fig. 3e: power (paper: WRC 67.40, ACC 22.72, S&A 6.74, RRAM 0.01)",
+        &["module", "share"],
+        &rows,
+    );
+
+    // --- Fig. 3g/h/i: architecture comparison ---
+    let w = Workload::from_macs(1_000_000, 32);
+    let ours = baselines::digital_rram_energy_pj(&w);
+    let rows = vec![
+        vec!["digital RRAM (this work)".into(), format!("{:.2}", ours * 1e-6), "1.00x".into(),
+             format!("{:.2}", rram_cim::chip::area::CHIP_AREA_MM2), "0.00%".into()],
+        vec!["analog RRAM CIM".into(), format!("{:.2}", analog_cim::energy_pj(&w) * 1e-6),
+             format!("{:.2}x", analog_cim::energy_pj(&w) / ours),
+             format!("{:.2}", analog_cim::area_mm2()),
+             format!("{:.2}%", 100.0 * analog_cim::average_error_rate(7))],
+        vec!["digital SRAM CIM".into(), format!("{:.2}", sram_cim::energy_pj(&w) * 1e-6),
+             format!("{:.2}x", sram_cim::energy_pj(&w) / ours),
+             format!("{:.2}", sram_cim::area_mm2()), "0.00%".into()],
+        vec!["RTX 4090 (normalized)".into(),
+             format!("{:.2}", gpu::energy_pj(1_000_000, gpu::GpuWorkloadClass::SmallCnn) * 1e-6),
+             format!("{:.2}x", gpu::energy_pj(1_000_000, gpu::GpuWorkloadClass::SmallCnn) / ours),
+             "-".into(), "0.00%".into()],
+    ];
+    print_table(
+        "Fig. 3g/h/i (paper: SRAM 45.09x energy 7.12x area; analog 2.34x / 3.61x / 27.78% err)",
+        &["architecture", "energy uJ/1M MAC", "vs ours", "area mm^2", "bit err"],
+        &rows,
+    );
+
+    // analog error vs parallelism (the Fig. 3i sweep)
+    let rows: Vec<Vec<String>> = [32usize, 64, 128, 256, 512]
+        .iter()
+        .map(|&p| vec![format!("{p}"), format!("{:.2}%", 100.0 * analog_cim::mac_error_rate(p, 800, 11))])
+        .collect();
+    print_table("analog CIM error vs parallelism", &["rows summed", "MAC error"], &rows);
+
+    // --- throughput of the chip hot path ---
+    let mut b = Bencher::new(2, 8);
+    b.bench_throughput("logic_pass (30 cols)", 30, || {
+        chip.logic_pass(0, 1, LogicOp::Xor, &vec![true; n], &vec![false; n], false)
+    });
+    b.bench_throughput("search_pass (30 bits)", 30, || chip.search_pass(0, 1, 0, 2, 30));
+    println!("\nfig3_chip done");
+}

@@ -1,0 +1,89 @@
+//! Regenerates paper Fig. 5 (PointNet filter pruning) panels:
+//! 5g SUN/SPN/HPN accuracy, 5h INT8 MAC precision, 5i op/energy cuts.
+//! Run: cargo bench --bench fig5_pointnet
+
+use rram_cim::bench::{print_series, print_table};
+use rram_cim::coordinator::pointnet::{PointNetConfig, PointNetTrainer};
+use rram_cim::coordinator::TrainMode;
+use rram_cim::metrics::energy_comparison;
+use rram_cim::runtime::Engine;
+
+fn train(mode: TrainMode, epochs: usize) -> rram_cim::coordinator::TrainingReport {
+    let engine = Engine::open_default().expect("run `make artifacts` first");
+    let cfg = PointNetConfig { epochs, mode, ..PointNetConfig::default() };
+    PointNetTrainer::new(cfg, engine).train().expect("training failed")
+}
+
+fn main() {
+    rram_cim::util::logging::init();
+    let epochs = 10;
+
+    let mut rows = Vec::new();
+    let mut pruned = None;
+    let mut hpn = None;
+    for mode in [TrainMode::Sun, TrainMode::Spn, TrainMode::Hpn] {
+        let rep = train(mode, epochs);
+        rows.push(vec![
+            mode.name().into(),
+            format!("{:.2}%", 100.0 * rep.final_test_acc()),
+            format!("{:.2}%", 100.0 * rep.final_prune_rate),
+            format!("{:.2}%", 100.0 * rep.train_ops_reduction()),
+        ]);
+        match mode {
+            TrainMode::Spn => pruned = Some(rep),
+            TrainMode::Hpn => hpn = Some(rep),
+            _ => {}
+        }
+    }
+    print_table(
+        "Fig. 5g (paper: SUN 79.85 / SPN 82.16 / HPN 77.75 @ 57.13% pruning)",
+        &["mode", "test acc", "prune rate", "train-op cut"],
+        &rows,
+    );
+
+    let spn = pruned.unwrap();
+    print_series(
+        "live filters over epochs",
+        &spn.epochs.iter().map(|e| e.live_kernels as f64).collect::<Vec<_>>(),
+    );
+
+    // --- Fig. 5h: INT8 MAC precision ---
+    let hpn = hpn.unwrap();
+    let rows: Vec<Vec<String>> = hpn
+        .epochs
+        .iter()
+        .filter(|e| !e.mac_precision.is_empty())
+        .map(|e| {
+            let mut r = vec![format!("{}", e.epoch)];
+            r.extend(e.mac_precision.iter().map(|p| format!("{:.2}%", 100.0 * p)));
+            r
+        })
+        .collect();
+    print_table(
+        "Fig. 5h: INT8 MAC precision on-chip (paper: BER -> 0 with ECC)",
+        &["epoch", "conv1", "conv2", "conv3"],
+        &rows,
+    );
+
+    // --- Fig. 5i ---
+    println!(
+        "\nFig. 5i left: training conv-op reduction {:.2}% (paper: 59.94%)",
+        100.0 * spn.train_ops_reduction()
+    );
+    let rows: Vec<Vec<String>> = energy_comparison(
+        spn.macs_unpruned,
+        spn.macs_pruned,
+        false,
+        rram_cim::baselines::gpu::GpuWorkloadClass::PointCloud,
+        32,
+    )
+    .iter()
+    .map(|r| vec![r.platform.clone(), format!("{:.3}", r.energy_uj)])
+    .collect();
+    print_table(
+        "Fig. 5i right: per-cloud conv energy (paper: -59.94% vs unpruned, -86.53% vs 4090)",
+        &["platform", "uJ/cloud"],
+        &rows,
+    );
+    println!("fig5_pointnet done");
+}

@@ -1,0 +1,100 @@
+//! Hot-path micro-benchmarks (§Perf): the operations that dominate the
+//! end-to-end wall-clock, each with throughput numbers.
+//! Run: cargo bench --bench hotpath
+
+use rram_cim::bench::Bencher;
+use rram_cim::chip::{Chip, ChipConfig, LogicOp, ReadPath};
+use rram_cim::cim::mapping::{store_bits, RowAllocator};
+use rram_cim::cim::vmm;
+use rram_cim::coordinator::mnist::{MnistConfig, MnistTrainer};
+use rram_cim::coordinator::TrainMode;
+use rram_cim::nn::data::{mnist, modelnet};
+use rram_cim::nn::pointnet::{group_cloud, GroupingConfig};
+use rram_cim::pruning::similarity::PackedKernels;
+use rram_cim::runtime::{Engine, HostTensor};
+use rram_cim::util::rng::Rng;
+
+fn main() {
+    rram_cim::util::logging::init();
+    let mut b = Bencher::new(2, 10);
+    let mut rng = Rng::new(1);
+
+    // --- bit-packed similarity (the SPN hot path) ---
+    let kernels: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..576).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let live = vec![true; 64];
+    let packed = PackedKernels::from_kernels(&kernels);
+    b.bench_throughput("packed similarity 64x64 kernels (576b)", 64 * 64, || {
+        packed.similarity_matrix(&live)
+    });
+
+    // --- chip logic pass: digital vs electrical read path ---
+    for (label, path) in [("digital", ReadPath::Digital), ("electrical", ReadPath::Electrical)] {
+        let mut chip = Chip::new(ChipConfig { read_path: path, ..ChipConfig::default() }, &mut rng);
+        chip.form();
+        let n = chip.cfg().data_cols();
+        for col in 0..n {
+            chip.program_bit(0, 0, col, col % 2 == 0);
+        }
+        b.bench_throughput(&format!("logic_pass x100 ({label} read)"), 100 * n as u64, || {
+            for _ in 0..100 {
+                chip.logic_pass(0, 0, LogicOp::Xor, &vec![true; n], &vec![false; n], false);
+            }
+        });
+    }
+
+    // --- on-chip binary dot (conv inner loop of the HPN check) ---
+    let mut chip = Chip::new(ChipConfig::default(), &mut rng);
+    chip.form();
+    let mut alloc = RowAllocator::for_chip(&chip);
+    let bits: Vec<bool> = (0..288).map(|i| i % 2 == 0).collect();
+    let xs: Vec<u8> = (0..288).map(|i| (i % 251) as u8).collect();
+    let span = alloc.alloc(288).unwrap();
+    store_bits(&mut chip, &span, &bits);
+    b.bench_throughput("binary_dot_u8 (288 weights)", 288, || {
+        vmm::binary_dot_u8(&mut chip, &span, &xs)
+    });
+
+    // --- artifact execution latency ---
+    let mut engine = Engine::open_default().expect("run `make artifacts` first");
+    let spec = engine.manifest().get("similarity").unwrap().clone();
+    let (k, n) = (spec.inputs[0].dims[0], spec.inputs[0].dims[1]);
+    let in_bits: Vec<i8> = (0..k * n).map(|i| (i % 2) as i8).collect();
+    engine.load("similarity").unwrap();
+    b.bench("similarity artifact (64x576 pallas XOR)", || {
+        engine
+            .run("similarity", &[HostTensor::I8(in_bits.clone(), vec![k, n])])
+            .unwrap()
+    });
+
+    // --- one full train step through PJRT (fast + pallas artifacts) ---
+    for (label, pallas, steps) in [("fast", false, 4usize), ("pallas", true, 1)] {
+        let engine = Engine::open_default().unwrap();
+        let cfg = MnistConfig {
+            epochs: 1,
+            train_samples: 64 * steps,
+            test_samples: 64,
+            mode: TrainMode::Sun,
+            use_pallas: pallas,
+            ..MnistConfig::default()
+        };
+        let mut tr = MnistTrainer::new(cfg, engine);
+        let mut bench = Bencher::new(0, 1);
+        bench.bench(&format!("mnist epoch ({steps} steps, {label} artifact)"), || {
+            tr.train().unwrap()
+        });
+    }
+
+    // --- dataset synthesis + grouping ---
+    b.bench_throughput("synthetic MNIST (100 imgs)", 100, || mnist::generate(100, 7));
+    b.bench_throughput("synthetic ModelNet (20 clouds)", 20, || modelnet::generate(20, 7));
+    let cloud = {
+        let mut r = Rng::new(2);
+        modelnet::sample_cloud(3, &mut r)
+    };
+    let gcfg = GroupingConfig::default();
+    b.bench("FPS + ball-query grouping (256 pts)", || group_cloud(&cloud, &gcfg));
+
+    println!("\nhotpath done");
+}

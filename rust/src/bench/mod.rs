@@ -1,0 +1,182 @@
+//! Criterion-style benchmark harness (criterion is not in the offline
+//! vendored crate set). Provides warmup + timed iterations with
+//! mean/std/min reporting, and table/series printers the fig* bench
+//! targets use to render the paper's panels as text.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    /// optional throughput denominator (elements per iteration)
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let fmt = |ns: f64| {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} us", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        };
+        let mut s = format!(
+            "{:<44} {:>12} ± {:>10}  (min {:>10}, n={})",
+            self.name,
+            fmt(self.mean_ns),
+            fmt(self.std_ns),
+            fmt(self.min_ns),
+            self.iters
+        );
+        if let Some(e) = self.elements {
+            let per_sec = e as f64 / (self.mean_ns * 1e-9);
+            s.push_str(&format!("  [{:.2e} elem/s]", per_sec));
+        }
+        s
+    }
+}
+
+/// Benchmark runner with a global time budget per benchmark.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, measure_iters: 10, results: Vec::new() }
+    }
+}
+
+/// Opaque value sink (prevents the optimizer from deleting benched work).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher { warmup_iters: warmup, measure_iters: iters, results: Vec::new() }
+    }
+
+    /// Time `f`, printing and recording the result.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_elements(name, None, &mut f)
+    }
+
+    /// Time `f` with a throughput denominator.
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        elements: u64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_elements(name, Some(elements), &mut f)
+    }
+
+    fn bench_elements<T>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let s = stats::summarize(&samples);
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: self.measure_iters,
+            mean_ns: s.mean,
+            std_ns: s.std,
+            min_ns: s.min,
+            elements,
+        };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Print a figure-style table: header + aligned rows.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Print a labelled series with a sparkline (figure curves in terminals).
+pub fn print_series(label: &str, xs: &[f64]) {
+    let spark = stats::sparkline(xs);
+    let first = xs.first().copied().unwrap_or(0.0);
+    let last = xs.last().copied().unwrap_or(0.0);
+    println!("{label:<40} {spark}  [{first:.4} -> {last:.4}]");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new(1, 5);
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.iters, 5);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_reports_elements() {
+        let mut b = Bencher::new(0, 3);
+        let r = b.bench_throughput("noop", 1000, || 1 + 1);
+        assert_eq!(r.elements, Some(1000));
+        assert!(r.report().contains("elem/s"));
+    }
+}

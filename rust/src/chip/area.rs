@@ -1,0 +1,90 @@
+//! Chip floorplan / area model (Fig. 3d). The fabricated chip measures
+//! 5.016 mm^2 in 180 nm; the per-module split below reproduces the
+//! paper's breakdown. Baseline architectures reuse these numbers at
+//! iso-node, iso-capacity (see [`crate::baselines`]).
+
+/// Area of one module in mm^2 at 180 nm.
+#[derive(Clone, Debug)]
+pub struct AreaModel {
+    pub rram_mm2: f64,
+    pub acc_mm2: f64,
+    pub wrc_mm2: f64,
+    pub bsic_mm2: f64,
+    pub rr_mm2: f64,
+    pub ru_mm2: f64,
+    pub sa_mm2: f64,
+}
+
+/// Total die area of the fabricated chip (mm^2).
+pub const CHIP_AREA_MM2: f64 = 5.016;
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        // Fig. 3d: RRAM 61.76 %, ACC 17.91 %, WRC 12.21 %; remainder split
+        // across BSIC / RR / RU / S&A.
+        AreaModel {
+            rram_mm2: CHIP_AREA_MM2 * 0.6176,
+            acc_mm2: CHIP_AREA_MM2 * 0.1791,
+            wrc_mm2: CHIP_AREA_MM2 * 0.1221,
+            bsic_mm2: CHIP_AREA_MM2 * 0.0400,
+            rr_mm2: CHIP_AREA_MM2 * 0.0212,
+            ru_mm2: CHIP_AREA_MM2 * 0.0120,
+            sa_mm2: CHIP_AREA_MM2 * 0.0080,
+        }
+    }
+}
+
+impl AreaModel {
+    pub fn total_mm2(&self) -> f64 {
+        self.rram_mm2 + self.acc_mm2 + self.wrc_mm2 + self.bsic_mm2 + self.rr_mm2
+            + self.ru_mm2 + self.sa_mm2
+    }
+
+    /// (module, share) rows sorted descending — the Fig. 3d pie.
+    pub fn shares(&self) -> Vec<(&'static str, f64)> {
+        let t = self.total_mm2();
+        let mut rows = vec![
+            ("RRAM", self.rram_mm2 / t),
+            ("ACC", self.acc_mm2 / t),
+            ("WRC", self.wrc_mm2 / t),
+            ("BSIC", self.bsic_mm2 / t),
+            ("RR", self.rr_mm2 / t),
+            ("RU", self.ru_mm2 / t),
+            ("S&A", self.sa_mm2 / t),
+        ];
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+
+    /// Storage density in bits/mm^2 for the 2x 512x32 INT2 arrays.
+    pub fn density_bits_per_mm2(&self) -> f64 {
+        let bits = 2.0 * 512.0 * 32.0 * 2.0; // two blocks, 2 bits/cell
+        bits / self.total_mm2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_matches_fabricated_die() {
+        let a = AreaModel::default();
+        assert!((a.total_mm2() - CHIP_AREA_MM2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shares_match_fig3d() {
+        let a = AreaModel::default();
+        let shares = a.shares();
+        assert_eq!(shares[0], ("RRAM", a.rram_mm2 / a.total_mm2()));
+        assert!((shares[0].1 - 0.6176).abs() < 1e-6);
+        assert!((shares[1].1 - 0.1791).abs() < 1e-6);
+        assert!((shares[2].1 - 0.1221).abs() < 1e-6);
+    }
+
+    #[test]
+    fn density_positive() {
+        assert!(AreaModel::default().density_bits_per_mm2() > 1e4);
+    }
+}

@@ -1,0 +1,132 @@
+//! Digital reduction datapath behind the RU outputs: the Shift-and-Add
+//! (S&A) groups and the Accumulator (ACC) of Fig. 3a.
+//!
+//! * For element-wise (Hadamard) results only the S&A group runs: it
+//!   popcounts / weights the RU output bits of one word-line pass.
+//! * For vector-matrix multiplication the ACC additionally integrates
+//!   partial products across input bit-planes and weight bit-slices with
+//!   the appropriate power-of-two shifts (bit-serial digital CIM).
+
+/// Shift-and-add group over one array pass (32 RU outputs).
+#[derive(Clone, Debug, Default)]
+pub struct ShiftAdder {
+    ops: u64,
+}
+
+impl ShiftAdder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Popcount the RU output bits (weight 1 per bit).
+    pub fn popcount(&mut self, bits: &[bool]) -> u32 {
+        self.ops += bits.len() as u64;
+        bits.iter().map(|&b| b as u32).sum()
+    }
+
+    /// Weighted sum with a shift per bit *slice*: sum(bit_i) << shift.
+    pub fn shifted_popcount(&mut self, bits: &[bool], shift: u32) -> i64 {
+        (self.popcount(bits) as i64) << shift
+    }
+
+    /// Per-lane partial product: each RU output bit contributes its
+    /// lane's 2-bit cell value << shift (used by the INT8 path where a
+    /// lane carries a decoded 2-bit slice rather than a single bit).
+    pub fn lane_partials(&mut self, values: &[u8], shift: u32) -> Vec<i64> {
+        self.ops += values.len() as u64;
+        values.iter().map(|&v| (v as i64) << shift).collect()
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    /// Account ops whose popcount was folded into the caller's loop
+    /// (hot path — §Perf).
+    #[inline]
+    pub fn note_ops(&mut self, n: u64) {
+        self.ops += n;
+    }
+}
+
+/// Accumulator bank: one signed running sum per output lane.
+#[derive(Clone, Debug)]
+pub struct Accumulator {
+    lanes: Vec<i64>,
+    ops: u64,
+}
+
+impl Accumulator {
+    pub fn new(n_lanes: usize) -> Self {
+        Accumulator { lanes: vec![0; n_lanes], ops: 0 }
+    }
+
+    pub fn clear(&mut self) {
+        self.lanes.iter_mut().for_each(|l| *l = 0);
+    }
+
+    /// Add a scalar partial into one lane.
+    pub fn add(&mut self, lane: usize, value: i64) {
+        self.lanes[lane] += value;
+        self.ops += 1;
+    }
+
+    /// Add a vector of partials lane-wise.
+    pub fn add_all(&mut self, values: &[i64]) {
+        assert_eq!(values.len(), self.lanes.len(), "lane mismatch");
+        for (l, v) in self.lanes.iter_mut().zip(values) {
+            *l += v;
+        }
+        self.ops += values.len() as u64;
+    }
+
+    pub fn lanes(&self) -> &[i64] {
+        &self.lanes
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn popcount_counts() {
+        let mut sa = ShiftAdder::new();
+        assert_eq!(sa.popcount(&[true, false, true, true]), 3);
+        assert_eq!(sa.ops(), 4);
+    }
+
+    #[test]
+    fn shifted_popcount_shifts() {
+        let mut sa = ShiftAdder::new();
+        assert_eq!(sa.shifted_popcount(&[true, true, true], 4), 3 << 4);
+    }
+
+    #[test]
+    fn lane_partials_shift_each_value() {
+        let mut sa = ShiftAdder::new();
+        assert_eq!(sa.lane_partials(&[0, 1, 2, 3], 2), vec![0, 4, 8, 12]);
+    }
+
+    #[test]
+    fn accumulator_integrates_lanewise() {
+        let mut acc = Accumulator::new(3);
+        acc.add_all(&[1, 2, 3]);
+        acc.add_all(&[10, 20, 30]);
+        acc.add(2, 100);
+        assert_eq!(acc.lanes(), &[11, 22, 133]);
+        assert_eq!(acc.ops(), 7);
+        acc.clear();
+        assert_eq!(acc.lanes(), &[0, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "lane mismatch")]
+    fn accumulator_lane_mismatch_panics() {
+        Accumulator::new(2).add_all(&[1, 2, 3]);
+    }
+}

@@ -1,0 +1,198 @@
+//! Redundancy-aware error correction (paper Fig. 4l): two mechanisms that
+//! together drive the post-correction BER to zero.
+//!
+//! 1. **Spare columns** — two of every 32 1T1R cells in a row are reserved
+//!    as spares; a stuck data cell is remapped to a spare at map time.
+//! 2. **Backup region** — rows whose stuck-cell count exceeds the spare
+//!    budget are relocated wholesale to a reserved backup region at the
+//!    top of the array.
+
+/// Column remap plan for one logical row.
+#[derive(Clone, Debug, Default)]
+pub struct RowPlan {
+    /// logical data column -> physical column (identity unless remapped).
+    pub col_map: Vec<usize>,
+    /// physical row actually hosting the data (backup rows differ).
+    pub phys_row: usize,
+    /// true if the row had to be relocated to backup.
+    pub relocated: bool,
+}
+
+/// ECC configuration and allocator state.
+#[derive(Clone, Debug)]
+pub struct Ecc {
+    pub cols: usize,
+    pub spares_per_row: usize,
+    /// rows reserved at the top of the array as the backup region
+    pub backup_rows: usize,
+    total_rows: usize,
+    next_backup: usize,
+    /// dense plan cache, indexed by logical row (hot path: no hashing,
+    /// no cloning — see `plan_row_ref`).
+    plans: Vec<Option<RowPlan>>,
+}
+
+/// Number of *data* columns available per physical row.
+pub fn data_cols(cols: usize, spares: usize) -> usize {
+    cols - spares
+}
+
+impl Ecc {
+    /// `total_rows` includes the backup region; the usable logical rows
+    /// are `total_rows - backup_rows`.
+    pub fn new(total_rows: usize, cols: usize, spares_per_row: usize, backup_rows: usize) -> Self {
+        assert!(spares_per_row < cols);
+        assert!(backup_rows < total_rows);
+        Ecc {
+            cols,
+            spares_per_row,
+            backup_rows,
+            total_rows,
+            next_backup: total_rows - backup_rows,
+            plans: vec![None; total_rows - backup_rows],
+        }
+    }
+
+    pub fn logical_rows(&self) -> usize {
+        self.total_rows - self.backup_rows
+    }
+
+    pub fn data_cols(&self) -> usize {
+        data_cols(self.cols, self.spares_per_row)
+    }
+
+    /// Build (and cache) the remap plan for a logical row given the
+    /// stuck-cell map of the physical array. Returns None only if the
+    /// row is unusable AND the backup region is exhausted.
+    pub fn plan_row(&mut self, row: usize, stuck_map: &[Vec<usize>]) -> Option<RowPlan> {
+        self.plan_row_ref(row, stuck_map).cloned()
+    }
+
+    /// Reference-returning variant of [`Ecc::plan_row`] — the compute hot
+    /// path uses this to avoid cloning the col_map on every word-line
+    /// pass (§Perf: ~1.5x on `logic_pass`).
+    pub fn plan_row_ref(&mut self, row: usize, stuck_map: &[Vec<usize>]) -> Option<&RowPlan> {
+        assert!(row < self.logical_rows(), "row {row} beyond logical rows");
+        if self.plans[row].is_none() {
+            let plan = self.build_plan(row, stuck_map).or_else(|| {
+                // relocate to the next backup row that CAN host the data
+                while self.next_backup < self.total_rows {
+                    let candidate = self.next_backup;
+                    self.next_backup += 1;
+                    if let Some(mut p) = self.build_plan(candidate, stuck_map) {
+                        p.relocated = true;
+                        return Some(p);
+                    }
+                }
+                None
+            })?;
+            self.plans[row] = Some(plan);
+        }
+        self.plans[row].as_ref()
+    }
+
+    /// Try to place `data_cols` data bits into physical row `phys`,
+    /// steering around its stuck cells using the spare budget.
+    fn build_plan(&self, phys: usize, stuck_map: &[Vec<usize>]) -> Option<RowPlan> {
+        let stuck = &stuck_map[phys];
+        if stuck.len() > self.spares_per_row {
+            return None; // more faults than spares: row unusable
+        }
+        let is_stuck = |c: usize| stuck.contains(&c);
+        let n_data = self.data_cols();
+        let mut col_map = Vec::with_capacity(n_data);
+        let mut phys_col = 0usize;
+        for _ in 0..n_data {
+            while phys_col < self.cols && is_stuck(phys_col) {
+                phys_col += 1;
+            }
+            if phys_col >= self.cols {
+                return None;
+            }
+            col_map.push(phys_col);
+            phys_col += 1;
+        }
+        Some(RowPlan { col_map, phys_row: phys, relocated: false })
+    }
+
+    /// Fraction of backup capacity consumed so far.
+    pub fn backup_utilization(&self) -> f64 {
+        let used = self.next_backup - (self.total_rows - self.backup_rows);
+        used as f64 / self.backup_rows.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_faults(rows: usize) -> Vec<Vec<usize>> {
+        vec![Vec::new(); rows]
+    }
+
+    #[test]
+    fn identity_plan_without_faults() {
+        let mut ecc = Ecc::new(16, 32, 2, 2);
+        let plan = ecc.plan_row(3, &no_faults(16)).unwrap();
+        assert_eq!(plan.phys_row, 3);
+        assert!(!plan.relocated);
+        assert_eq!(plan.col_map, (0..30).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spare_remap_skips_stuck_columns() {
+        let mut ecc = Ecc::new(16, 32, 2, 2);
+        let mut stuck = no_faults(16);
+        stuck[5] = vec![0, 17];
+        let plan = ecc.plan_row(5, &stuck).unwrap();
+        assert!(!plan.relocated);
+        assert_eq!(plan.col_map.len(), 30);
+        assert!(!plan.col_map.contains(&0));
+        assert!(!plan.col_map.contains(&17));
+        // still strictly increasing physical columns
+        assert!(plan.col_map.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn over_budget_row_relocates_to_backup() {
+        let mut ecc = Ecc::new(16, 32, 2, 2);
+        let mut stuck = no_faults(16);
+        stuck[7] = vec![1, 2, 3]; // 3 faults > 2 spares
+        let plan = ecc.plan_row(7, &stuck).unwrap();
+        assert!(plan.relocated);
+        assert_eq!(plan.phys_row, 14); // first backup row
+        assert!(ecc.backup_utilization() > 0.0);
+    }
+
+    #[test]
+    fn backup_exhaustion_returns_none() {
+        let mut ecc = Ecc::new(16, 32, 0, 2);
+        let mut stuck = no_faults(16);
+        // three bad logical rows but only two backup rows
+        stuck[1] = vec![4];
+        stuck[2] = vec![9];
+        stuck[3] = vec![11];
+        assert!(ecc.plan_row(1, &stuck).is_some());
+        assert!(ecc.plan_row(2, &stuck).is_some());
+        assert!(ecc.plan_row(3, &stuck).is_none());
+    }
+
+    #[test]
+    fn faulty_backup_rows_are_skipped() {
+        let mut ecc = Ecc::new(16, 32, 1, 3);
+        let mut stuck = no_faults(16);
+        stuck[0] = vec![1, 2]; // needs relocation
+        stuck[13] = vec![3, 4]; // first backup row is itself bad
+        let plan = ecc.plan_row(0, &stuck).unwrap();
+        assert!(plan.relocated);
+        assert_eq!(plan.phys_row, 14);
+    }
+
+    #[test]
+    fn plans_are_cached() {
+        let mut ecc = Ecc::new(16, 32, 2, 2);
+        let p1 = ecc.plan_row(0, &no_faults(16)).unwrap();
+        let p2 = ecc.plan_row(0, &no_faults(16)).unwrap();
+        assert_eq!(p1.col_map, p2.col_map);
+    }
+}

@@ -1,0 +1,128 @@
+//! Reconfigurable ternary logic of the paper's Fig. 3c:
+//!
+//! ```text
+//!     OUT = X AND (W (.) K)        (.) in {NAND, AND, XOR, OR}
+//! ```
+//!
+//! where `X` is the bit-line input, `W` the bit read from the RRAM cell,
+//! and `K` the secondary input processed by the Input Logic module into
+//! the (INL, INR) control pair that configures the Reconfigurable Unit.
+//!
+//! Our RU realization (see [`crate::chip::ru`]) is a W-controlled
+//! selector: `node = W ? INL : INR`. The encodings below make that
+//! selector compute each of the four ops — this is the repo's concrete
+//! rendering of the paper's lower truth table in Fig. 3c.
+
+/// The four reconfigurable array operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LogicOp {
+    Nand,
+    And,
+    Xor,
+    Or,
+}
+
+impl LogicOp {
+    pub const ALL: [LogicOp; 4] = [LogicOp::Nand, LogicOp::And, LogicOp::Xor, LogicOp::Or];
+
+    /// Ground-truth boolean semantics of `W (.) K`.
+    #[inline]
+    pub fn apply(self, w: bool, k: bool) -> bool {
+        match self {
+            LogicOp::Nand => !(w && k),
+            LogicOp::And => w && k,
+            LogicOp::Xor => w ^ k,
+            LogicOp::Or => w || k,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LogicOp::Nand => "NAND",
+            LogicOp::And => "AND",
+            LogicOp::Xor => "XOR",
+            LogicOp::Or => "OR",
+        }
+    }
+}
+
+/// Control line value fed to the RU: constant 0/1, K, or its complement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CtrlLine {
+    Zero,
+    One,
+    K,
+    NotK,
+}
+
+impl CtrlLine {
+    #[inline]
+    pub fn eval(self, k: bool) -> bool {
+        match self {
+            CtrlLine::Zero => false,
+            CtrlLine::One => true,
+            CtrlLine::K => k,
+            CtrlLine::NotK => !k,
+        }
+    }
+}
+
+/// The Input Logic module: maps the selected op to the (INL, INR)
+/// configuration (Fig. 3c lower table, our encoding).
+#[inline]
+pub fn input_logic(op: LogicOp) -> (CtrlLine, CtrlLine) {
+    match op {
+        // node = W ? INL : INR
+        LogicOp::And => (CtrlLine::K, CtrlLine::Zero), // W?K:0  = W AND K
+        LogicOp::Or => (CtrlLine::One, CtrlLine::K),   // W?1:K  = W OR K
+        LogicOp::Xor => (CtrlLine::NotK, CtrlLine::K), // W?!K:K = W XOR K
+        LogicOp::Nand => (CtrlLine::NotK, CtrlLine::One), // W?!K:1 = !(W AND K)
+    }
+}
+
+/// Full ternary gate including the bit-line operand X (Fig. 3c upper
+/// table): `OUT = X AND (W (.) K)`.
+#[inline]
+pub fn ternary_out(op: LogicOp, x: bool, w: bool, k: bool) -> bool {
+    x && op.apply(w, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_semantics_exhaustive() {
+        for &(w, k) in &[(false, false), (false, true), (true, false), (true, true)] {
+            assert_eq!(LogicOp::And.apply(w, k), w & k);
+            assert_eq!(LogicOp::Or.apply(w, k), w | k);
+            assert_eq!(LogicOp::Xor.apply(w, k), w ^ k);
+            assert_eq!(LogicOp::Nand.apply(w, k), !(w & k));
+        }
+    }
+
+    #[test]
+    fn input_logic_encoding_realizes_every_op() {
+        for op in LogicOp::ALL {
+            let (inl, inr) = input_logic(op);
+            for &w in &[false, true] {
+                for &k in &[false, true] {
+                    let node = if w { inl.eval(k) } else { inr.eval(k) };
+                    assert_eq!(node, op.apply(w, k), "{op:?} w={w} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_out_gates_on_x() {
+        for op in LogicOp::ALL {
+            for &w in &[false, true] {
+                for &k in &[false, true] {
+                    assert!(!ternary_out(op, false, w, k), "X=0 must force OUT=0");
+                    assert_eq!(ternary_out(op, true, w, k), op.apply(w, k));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,568 @@
+//! The fully digital reconfigurable RRAM CIM chip (Fig. 3a): two 512x32
+//! 1T1R blocks plus WRC/BSIC drivers, Rref readout, reconfigurable units,
+//! shift-and-add groups, an accumulator bank, ECC, and energy/area/timing
+//! ledgers. [`Chip`] exposes the three operating modes of the paper —
+//! forming, programming, computation — and the per-row logic pass that
+//! [`crate::cim`] builds convolution and similarity search on.
+
+pub mod area;
+pub mod datapath;
+pub mod ecc;
+pub mod energy;
+pub mod logic;
+pub mod periphery;
+pub mod rr;
+pub mod ru;
+pub mod timing;
+
+pub use area::AreaModel;
+pub use energy::{EnergyBreakdown, EnergyLedger, EnergyModel};
+pub use logic::LogicOp;
+pub use timing::{TimingLedger, TimingModel};
+
+use crate::device::{Array1T1R, DeviceConfig};
+use crate::util::rng::Rng;
+
+use datapath::{Accumulator, ShiftAdder};
+
+/// Upper bound on physical columns, sized for stack buffers on the
+/// compute hot path (the fabricated chip has 32).
+pub const MAX_COLS: usize = 64;
+use ecc::Ecc;
+use periphery::{BlDriver, WlDriver};
+use ru::ReconfigurableUnit;
+
+/// How the compute path senses stored bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadPath {
+    /// Full electrical simulation: every read goes through the device
+    /// model (resistance + noise + divider). Used for characterization
+    /// and BER studies.
+    Electrical,
+    /// Digital shadow state captured at program time. Behaviourally
+    /// identical for the zero-BER digital design (margins >> noise) and
+    /// ~40x faster; stuck-at faults still flow through ECC. This is the
+    /// §Perf hot-path option used during training loops.
+    Digital,
+}
+
+/// Chip-level configuration.
+#[derive(Clone, Debug)]
+pub struct ChipConfig {
+    pub rows: usize,
+    pub cols: usize,
+    pub blocks: usize,
+    pub spares_per_row: usize,
+    pub backup_rows: usize,
+    pub device: DeviceConfig,
+    pub read_path: ReadPath,
+    pub energy: EnergyModel,
+    pub timing: TimingModel,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        ChipConfig {
+            rows: 512,
+            cols: 32,
+            blocks: 2,
+            spares_per_row: 2,
+            backup_rows: 16,
+            device: DeviceConfig::default(),
+            read_path: ReadPath::Digital,
+            energy: EnergyModel::default(),
+            timing: TimingModel::default(),
+        }
+    }
+}
+
+impl ChipConfig {
+    /// Small chip for unit tests.
+    pub fn small_test() -> Self {
+        ChipConfig {
+            rows: 64,
+            cols: 32,
+            blocks: 1,
+            backup_rows: 4,
+            device: DeviceConfig::ideal(),
+            ..ChipConfig::default()
+        }
+    }
+
+    /// Usable data columns per row after the ECC spare reservation.
+    pub fn data_cols(&self) -> usize {
+        self.cols - self.spares_per_row
+    }
+
+    /// Usable logical rows per block after the backup region reservation.
+    pub fn logical_rows(&self) -> usize {
+        self.rows - self.backup_rows
+    }
+}
+
+/// One RRAM block with its periphery state.
+struct Block {
+    array: Array1T1R,
+    ecc: Ecc,
+    wl: WlDriver,
+    bl: BlDriver,
+    stuck_map: Vec<Vec<usize>>,
+    /// Digital shadow of programmed 2-bit values (data written through
+    /// the ECC plan, indexed by PHYSICAL row/col).
+    shadow: Vec<u8>,
+}
+
+/// The chip: blocks + shared compute datapath + ledgers.
+pub struct Chip {
+    cfg: ChipConfig,
+    blocks: Vec<Block>,
+    ru: ReconfigurableUnit,
+    sa: ShiftAdder,
+    acc: Accumulator,
+    pub energy: EnergyLedger,
+    pub timing: TimingLedger,
+    area: AreaModel,
+    formed: bool,
+}
+
+impl Chip {
+    pub fn new(cfg: ChipConfig, rng: &mut Rng) -> Self {
+        let blocks = (0..cfg.blocks)
+            .map(|b| {
+                let array = Array1T1R::fabricate(
+                    cfg.rows,
+                    cfg.cols,
+                    cfg.device.clone(),
+                    &mut rng.fork(0xb10c + b as u64),
+                );
+                Block {
+                    stuck_map: array.stuck_map(),
+                    ecc: Ecc::new(cfg.rows, cfg.cols, cfg.spares_per_row, cfg.backup_rows),
+                    wl: WlDriver::new(cfg.rows),
+                    bl: BlDriver::new(cfg.cols),
+                    shadow: vec![0u8; cfg.rows * cfg.cols],
+                    array,
+                }
+            })
+            .collect();
+        let cols = cfg.cols;
+        Chip {
+            ru: ReconfigurableUnit::new(LogicOp::And),
+            sa: ShiftAdder::new(),
+            acc: Accumulator::new(cols),
+            energy: EnergyLedger::default(),
+            timing: TimingLedger::default(),
+            area: AreaModel::default(),
+            formed: false,
+            blocks,
+            cfg,
+        }
+    }
+
+    pub fn cfg(&self) -> &ChipConfig {
+        &self.cfg
+    }
+
+    pub fn area(&self) -> &AreaModel {
+        &self.area
+    }
+
+    pub fn is_formed(&self) -> bool {
+        self.formed
+    }
+
+    /// Forming mode: electroform all blocks; returns per-block yield.
+    pub fn form(&mut self) -> Vec<f64> {
+        let mut yields = Vec::new();
+        for b in &mut self.blocks {
+            let rep = b.array.form_all();
+            // forming pulses: one write-class pulse per cell
+            self.energy.rram_write_pulses += (self.cfg.rows * self.cfg.cols) as u64;
+            self.timing.program_cycles +=
+                (self.cfg.rows * self.cfg.cols) as u64 * self.cfg.timing.write_pulse_cycles;
+            yields.push(rep.yield_frac);
+        }
+        self.formed = true;
+        yields
+    }
+
+    /// Program one logical cell of a block to a 2-bit value through the
+    /// ECC plan. Returns false if the cell could not be placed.
+    pub fn program_2bit(&mut self, block: usize, row: usize, col: usize, value: u8) -> bool {
+        assert!(self.formed, "program before forming");
+        assert!(col < self.cfg.data_cols(), "col {col} beyond data columns");
+        let b = &mut self.blocks[block];
+        let Some(plan) = b.ecc.plan_row(row, &b.stuck_map) else {
+            return false;
+        };
+        let (pr, pc) = (plan.phys_row, plan.col_map[col]);
+        let target = rr::target_for_2bit(value, b.array.cfg());
+        // WRC walks to the row serially; BSIC decodes the column.
+        self.energy.wrc_shifts += pr as u64 / 8; // shift-register stride of 8 in program mode
+        self.energy.wrc_activations += 1;
+        b.bl.select(pc);
+        self.energy.bsic_drives += 1;
+        let pulses = b.array.program_cell(pr, pc, target);
+        let used = pulses.unwrap_or(b.array.cfg().prog_max_iters) as u64;
+        self.energy.rram_write_pulses += used;
+        self.timing.program_cycles += used * self.cfg.timing.write_pulse_cycles;
+        if pulses.is_some() {
+            b.shadow[pr * self.cfg.cols + pc] = value;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Program a binary bit (1 = LRS). Uses the 2-bit extremes for margin.
+    pub fn program_bit(&mut self, block: usize, row: usize, col: usize, bit: bool) -> bool {
+        self.program_2bit(block, row, col, if bit { 3 } else { 0 })
+    }
+
+    /// Read back one logical 2-bit value through ECC + the configured
+    /// read path.
+    pub fn read_2bit(&mut self, block: usize, row: usize, col: usize) -> u8 {
+        let read_path = self.cfg.read_path;
+        let cols = self.cfg.cols;
+        let b = &mut self.blocks[block];
+        let plan = b
+            .ecc
+            .plan_row(row, &b.stuck_map)
+            .expect("read of unmapped row");
+        let (pr, pc) = (plan.phys_row, plan.col_map[col]);
+        self.energy.rram_reads += 1;
+        self.energy.rr_senses += 2; // successive approximation: 2 compares
+        match read_path {
+            ReadPath::Digital => b.shadow[pr * cols + pc],
+            ReadPath::Electrical => rr::read_2bit(&mut b.array, pr, pc, &self.cfg.device).value,
+        }
+    }
+
+    pub fn read_bit(&mut self, block: usize, row: usize, col: usize) -> bool {
+        self.read_2bit(block, row, col) >= 2
+    }
+
+    /// One word-line logic pass (the chip's fundamental compute step):
+    /// activate logical row `row`, broadcast X on the bit lines, feed K
+    /// into the input logic, and return OUT[col] = X[col] AND (W[col] (.) K[col])
+    /// for all data columns. W[col] is the *binary* stored bit.
+    ///
+    /// `with_acc` engages the accumulator (VMM mode) vs. S&A-only
+    /// (Hadamard mode) — mirroring Fig. 3a's description.
+    pub fn logic_pass(
+        &mut self,
+        block: usize,
+        row: usize,
+        op: LogicOp,
+        x: &[bool],
+        k: &[bool],
+        with_acc: bool,
+    ) -> Vec<bool> {
+        assert!(self.formed, "compute before forming");
+        let n = self.cfg.data_cols();
+        debug_assert!(n <= MAX_COLS, "data columns exceed stack buffers");
+        let read_path = self.cfg.read_path;
+        let cols = self.cfg.cols;
+        let rref = self.cfg.device.rref_1bit();
+        self.ru.configure(op);
+
+        // sense all data columns in one WL activation (stack buffer, no
+        // per-pass heap traffic — §Perf)
+        let mut w_bits = [false; MAX_COLS];
+        {
+            let b = &mut self.blocks[block];
+            let plan = b.ecc.plan_row_ref(row, &b.stuck_map).expect("unmapped row");
+            b.wl.select(plan.phys_row);
+            b.bl.note_broadcast();
+            match read_path {
+                ReadPath::Digital => {
+                    let base = plan.phys_row * cols;
+                    for (i, &pc) in plan.col_map.iter().enumerate() {
+                        w_bits[i] = b.shadow[base + pc] >= 2;
+                    }
+                }
+                ReadPath::Electrical => {
+                    let phys_row = plan.phys_row;
+                    // split the borrow: copy the col_map head we need
+                    let mut map = [0usize; MAX_COLS];
+                    map[..plan.col_map.len()].copy_from_slice(&plan.col_map);
+                    let n_map = plan.col_map.len();
+                    let all = b.array.read_row_bits(phys_row, rref);
+                    for (i, &pc) in map[..n_map].iter().enumerate() {
+                        w_bits[i] = all[pc];
+                    }
+                }
+            }
+        }
+
+        let mut out = Vec::with_capacity(n);
+        let mut pop: i64 = 0;
+        for col in 0..n {
+            let xx = x.get(col).copied().unwrap_or(false);
+            let kk = k.get(col).copied().unwrap_or(false);
+            let o = self.ru.cycle(xx, w_bits[col], kk);
+            pop += o as i64; // S&A popcount folded into the pass
+            out.push(o);
+        }
+        self.sa.note_ops(n as u64);
+        if with_acc {
+            for (lane, &o) in out.iter().enumerate() {
+                self.acc.add(lane, o as i64);
+            }
+        }
+        self.energy.compute_cycle(n as u64, with_acc);
+        self.timing.compute_cycles += 1;
+        let _ = pop;
+        out
+    }
+
+    /// Search-in-memory pass: XOR a stored row against another stored row
+    /// and return the Hamming distance over the first `width` data
+    /// columns. Row B's bits are read out and fed back through the Input
+    /// Logic as K (they may live in the other block), so one pass costs a
+    /// read cycle plus a compute cycle — exactly the paper's
+    /// search-in-memory flow. This is the primitive the pruning
+    /// similarity matrix is built from.
+    pub fn search_pass(
+        &mut self,
+        block_a: usize,
+        row_a: usize,
+        block_b: usize,
+        row_b: usize,
+        width: usize,
+    ) -> u32 {
+        assert!(self.formed, "search before forming");
+        let n = width.min(self.cfg.data_cols());
+        // read row_b's bits in ONE word-line activation to feed as K
+        let mut k_bits = [false; MAX_COLS];
+        {
+            let read_path = self.cfg.read_path;
+            let cols = self.cfg.cols;
+            let rref = self.cfg.device.rref_1bit();
+            let b = &mut self.blocks[block_b];
+            let plan = b.ecc.plan_row_ref(row_b, &b.stuck_map).expect("unmapped row");
+            b.wl.select(plan.phys_row);
+            match read_path {
+                ReadPath::Digital => {
+                    let base = plan.phys_row * cols;
+                    for (i, &pc) in plan.col_map.iter().take(n).enumerate() {
+                        k_bits[i] = b.shadow[base + pc] >= 2;
+                    }
+                }
+                ReadPath::Electrical => {
+                    let phys_row = plan.phys_row;
+                    let mut map = [0usize; MAX_COLS];
+                    map[..plan.col_map.len()].copy_from_slice(&plan.col_map);
+                    let n_map = plan.col_map.len().min(n);
+                    let all = b.array.read_row_bits(phys_row, rref);
+                    for (i, &pc) in map[..n_map].iter().enumerate() {
+                        k_bits[i] = all[pc];
+                    }
+                }
+            }
+            self.energy.rram_reads += n as u64;
+            self.energy.rr_senses += n as u64;
+        }
+        let x = [true; MAX_COLS]; // X=1 exposes W xor K directly
+        let out = self.logic_pass(block_a, row_a, LogicOp::Xor, &x[..n], &k_bits[..n], false);
+        self.timing.search_cycles += 1;
+        out.iter().take(n).map(|&b| b as u32).sum()
+    }
+
+    /// VMM pass for 2-bit cells (INT8 path): activate logical row `row`,
+    /// broadcast the X bit-plane, and return each data column's stored
+    /// 2-bit value gated by X (0 where X=0). The RR performs the 2-bit
+    /// successive-approximation sense; the S&A group applies the slice
+    /// shift downstream (see [`crate::cim::vmm::int8_dot`]).
+    pub fn vmm_pass_2bit(&mut self, block: usize, row: usize, x: &[bool]) -> Vec<u8> {
+        assert!(self.formed, "compute before forming");
+        let n = self.cfg.data_cols();
+        let read_path = self.cfg.read_path;
+        let cols = self.cfg.cols;
+        let dev = self.cfg.device.clone();
+        let b = &mut self.blocks[block];
+        let mut out = Vec::with_capacity(n);
+        {
+            let plan = b.ecc.plan_row_ref(row, &b.stuck_map).expect("unmapped row");
+            b.wl.select(plan.phys_row);
+            b.bl.note_broadcast();
+            match read_path {
+                ReadPath::Digital => {
+                    let base = plan.phys_row * cols;
+                    for (col, &pc) in plan.col_map.iter().enumerate() {
+                        let v = b.shadow[base + pc];
+                        out.push(if x.get(col).copied().unwrap_or(false) { v } else { 0 });
+                    }
+                }
+                ReadPath::Electrical => {
+                    let phys_row = plan.phys_row;
+                    let mut map = [0usize; MAX_COLS];
+                    map[..plan.col_map.len()].copy_from_slice(&plan.col_map);
+                    let n_map = plan.col_map.len();
+                    for (col, &pc) in map[..n_map].iter().enumerate() {
+                        let v = rr::read_2bit(&mut b.array, phys_row, pc, &dev).value;
+                        out.push(if x.get(col).copied().unwrap_or(false) { v } else { 0 });
+                    }
+                }
+            }
+        }
+        self.energy.compute_cycle(n as u64, true);
+        self.energy.rr_senses += n as u64; // 2-bit sense = 2 comparisons
+        self.timing.compute_cycles += 1;
+        out
+    }
+
+    /// Zero all energy/timing counters (e.g. after forming/programming,
+    /// so a measurement window covers only the compute phase).
+    pub fn reset_ledgers(&mut self) {
+        self.energy = EnergyLedger::default();
+        self.timing = TimingLedger::default();
+    }
+
+    /// Reset accumulator lanes (between VMM output tiles).
+    pub fn acc_clear(&mut self) {
+        self.acc.clear();
+    }
+
+    pub fn acc_lanes(&self) -> &[i64] {
+        self.acc.lanes()
+    }
+
+    /// Energy breakdown snapshot (Fig. 3e).
+    pub fn energy_breakdown(&self) -> EnergyBreakdown {
+        self.energy.breakdown(&self.cfg.energy)
+    }
+
+    /// Total stuck cells across blocks (pre-ECC fault pressure).
+    pub fn stuck_cells(&self) -> usize {
+        self.blocks.iter().map(|b| b.array.stuck_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_chip(seed: u64) -> Chip {
+        let mut rng = Rng::new(seed);
+        let mut chip = Chip::new(ChipConfig::small_test(), &mut rng);
+        chip.form();
+        chip
+    }
+
+    #[test]
+    fn program_and_read_roundtrip_2bit() {
+        let mut chip = test_chip(1);
+        for v in 0u8..4 {
+            assert!(chip.program_2bit(0, 0, v as usize, v));
+            assert_eq!(chip.read_2bit(0, 0, v as usize), v);
+        }
+    }
+
+    #[test]
+    fn electrical_and_digital_paths_agree_when_ideal() {
+        let mut rng = Rng::new(2);
+        let mut cfg = ChipConfig::small_test();
+        cfg.read_path = ReadPath::Electrical;
+        let mut chip_e = Chip::new(cfg.clone(), &mut rng.fork(1));
+        cfg.read_path = ReadPath::Digital;
+        let mut chip_d = Chip::new(cfg, &mut rng.fork(1));
+        chip_e.form();
+        chip_d.form();
+        for col in 0..16 {
+            let v = (col % 4) as u8;
+            chip_e.program_2bit(0, 5, col, v);
+            chip_d.program_2bit(0, 5, col, v);
+        }
+        for col in 0..16 {
+            assert_eq!(chip_e.read_2bit(0, 5, col), chip_d.read_2bit(0, 5, col));
+        }
+    }
+
+    #[test]
+    fn logic_pass_matches_truth_table() {
+        let mut chip = test_chip(3);
+        let n = chip.cfg().data_cols();
+        // store alternating bits in row 7
+        for col in 0..n {
+            assert!(chip.program_bit(0, 7, col, col % 2 == 0));
+        }
+        let x = vec![true; n];
+        let k: Vec<bool> = (0..n).map(|c| c % 3 == 0).collect();
+        for op in LogicOp::ALL {
+            let out = chip.logic_pass(0, 7, op, &x, &k, false);
+            for col in 0..n {
+                let w = col % 2 == 0;
+                assert_eq!(out[col], op.apply(w, k[col]), "{op:?} col {col}");
+            }
+        }
+    }
+
+    #[test]
+    fn x_zero_masks_everything() {
+        let mut chip = test_chip(4);
+        let n = chip.cfg().data_cols();
+        for col in 0..n {
+            chip.program_bit(0, 1, col, true);
+        }
+        let out = chip.logic_pass(0, 1, LogicOp::Or, &vec![false; n], &vec![true; n], false);
+        assert!(out.iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn search_pass_computes_hamming_distance() {
+        let mut chip = test_chip(5);
+        let n = 16;
+        // row 2: 1111_0000..., row 3: 1010_1010...
+        for col in 0..n {
+            chip.program_bit(0, 2, col, col < 8);
+            chip.program_bit(0, 3, col, col % 2 == 0);
+        }
+        let d = chip.search_pass(0, 2, 0, 3, n);
+        // expected: popcount((col<8) ^ (col%2==0)) over 16 cols
+        let expected: u32 = (0..n).map(|c| ((c < 8) ^ (c % 2 == 0)) as u32).sum();
+        assert_eq!(d, expected);
+    }
+
+    #[test]
+    fn energy_accrues_with_compute() {
+        let mut chip = test_chip(6);
+        let n = chip.cfg().data_cols();
+        for col in 0..n {
+            chip.program_bit(0, 0, col, true);
+        }
+        chip.reset_ledgers(); // measure the compute window only (Fig. 3e)
+        let before = chip.energy_breakdown().total_pj();
+        for _ in 0..100 {
+            chip.logic_pass(0, 0, LogicOp::And, &vec![true; n], &vec![true; n], true);
+        }
+        let after = chip.energy_breakdown().total_pj();
+        assert!(after > before);
+        // WRC must dominate (Fig. 3e)
+        let shares = chip.energy_breakdown().shares();
+        assert_eq!(shares[0].0, "WRC");
+    }
+
+    #[test]
+    fn faulty_cells_are_healed_by_ecc() {
+        let mut rng = Rng::new(7);
+        let mut cfg = ChipConfig::small_test();
+        cfg.device.stuck_fault_prob = 0.01;
+        let mut chip = Chip::new(cfg, &mut rng);
+        chip.form();
+        assert!(chip.stuck_cells() > 0, "want faults for this test");
+        let n = chip.cfg().data_cols();
+        let mut failures = 0;
+        for row in 0..chip.cfg().logical_rows() {
+            for col in 0..n {
+                let bit = (row + col) % 2 == 0;
+                if !chip.program_bit(0, row, col, bit) {
+                    failures += 1;
+                } else if chip.read_bit(0, row, col) != bit {
+                    failures += 1;
+                }
+            }
+        }
+        assert_eq!(failures, 0, "ECC must absorb all stuck-at faults");
+    }
+}

@@ -1,0 +1,155 @@
+//! Driver periphery: the WL Driver & RU Controller (WRC) and the BL/SL
+//! Driver Circuits & Input Controller (BSIC) of Fig. 3a.
+//!
+//! * WRC — a shift-register chain selects word lines for programming and
+//!   walks them sequentially during compute. It is the chip's dominant
+//!   power consumer (67.40 %, Fig. 3e) because every cycle toggles the
+//!   512-stage register and drives a long poly word line.
+//! * BSIC — decodes a single BL during programming, or broadcasts the
+//!   input vector X to all bit lines during compute.
+
+/// Shift-register word-line selector.
+#[derive(Clone, Debug)]
+pub struct WlDriver {
+    rows: usize,
+    /// Current one-hot position (None = chain cleared).
+    position: Option<usize>,
+    shifts: u64,
+    activations: u64,
+}
+
+impl WlDriver {
+    pub fn new(rows: usize) -> Self {
+        WlDriver { rows, position: None, shifts: 0, activations: 0 }
+    }
+
+    /// Load the token at row 0 (start of a pass).
+    pub fn reset(&mut self) {
+        self.position = Some(0);
+        self.shifts += 1;
+    }
+
+    /// Shift the token to the next row; wraps to None at the end.
+    pub fn shift(&mut self) {
+        self.shifts += 1;
+        self.position = match self.position {
+            Some(p) if p + 1 < self.rows => Some(p + 1),
+            _ => None,
+        };
+    }
+
+    /// Drive the currently selected word line; returns the row index.
+    pub fn activate(&mut self) -> Option<usize> {
+        if self.position.is_some() {
+            self.activations += 1;
+        }
+        self.position
+    }
+
+    /// Random-access select (programming mode): serially shifts the token
+    /// to `row`, costing `row+1` shifts — faithful to a shift-register
+    /// WRC, and the reason programming is slower than compute. The shift
+    /// count is accounted arithmetically (no O(row) loop — §Perf).
+    pub fn select(&mut self, row: usize) -> usize {
+        assert!(row < self.rows, "row {row} out of range {}", self.rows);
+        self.shifts += row as u64 + 1; // reset + `row` shifts
+        self.position = Some(row);
+        self.activations += 1;
+        row
+    }
+
+    pub fn shifts(&self) -> u64 {
+        self.shifts
+    }
+
+    pub fn activations(&self) -> u64 {
+        self.activations
+    }
+}
+
+/// BL/SL driver + input controller.
+#[derive(Clone, Debug)]
+pub struct BlDriver {
+    cols: usize,
+    broadcasts: u64,
+    selects: u64,
+}
+
+impl BlDriver {
+    pub fn new(cols: usize) -> Self {
+        BlDriver { cols, broadcasts: 0, selects: 0 }
+    }
+
+    /// Compute mode: broadcast the X input bits onto all bit lines.
+    /// Returns the driven pattern, padded/truncated to the column count.
+    pub fn broadcast<'a>(&mut self, x: &'a [bool]) -> Vec<bool> {
+        self.broadcasts += 1;
+        (0..self.cols).map(|i| x.get(i).copied().unwrap_or(false)).collect()
+    }
+
+    /// Account a broadcast without materializing the driven pattern
+    /// (hot path uses the caller's slice directly — §Perf).
+    #[inline]
+    pub fn note_broadcast(&mut self) {
+        self.broadcasts += 1;
+    }
+
+    /// Programming mode: decode a single column.
+    pub fn select(&mut self, col: usize) -> usize {
+        assert!(col < self.cols, "col {col} out of range {}", self.cols);
+        self.selects += 1;
+        col
+    }
+
+    pub fn broadcasts(&self) -> u64 {
+        self.broadcasts
+    }
+
+    pub fn selects(&self) -> u64 {
+        self.selects
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wl_walks_all_rows_in_order() {
+        let mut wl = WlDriver::new(4);
+        wl.reset();
+        let mut seen = Vec::new();
+        while let Some(r) = wl.activate() {
+            seen.push(r);
+            wl.shift();
+        }
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        assert_eq!(wl.activations(), 4);
+        assert_eq!(wl.shifts(), 5); // reset + 4 shifts (last one exits)
+    }
+
+    #[test]
+    fn wl_random_select_costs_serial_shifts() {
+        let mut wl = WlDriver::new(512);
+        let before = wl.shifts();
+        assert_eq!(wl.select(100), 100);
+        assert_eq!(wl.shifts() - before, 101); // reset + 100 shifts
+    }
+
+    #[test]
+    fn bl_broadcast_pads_and_truncates() {
+        let mut bl = BlDriver::new(4);
+        assert_eq!(bl.broadcast(&[true, false]), vec![true, false, false, false]);
+        assert_eq!(
+            bl.broadcast(&[true; 8]),
+            vec![true, true, true, true]
+        );
+        assert_eq!(bl.broadcasts(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn bl_select_bounds() {
+        BlDriver::new(4).select(4);
+    }
+}

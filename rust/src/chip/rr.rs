@@ -1,0 +1,119 @@
+//! Rref Read (RR) module: the resistive-divider readout of Fig. 3b.
+//!
+//! Each bit line carries a divider formed by the selected 1T1R cell and a
+//! tunable reference resistor (three NMOS legs, Vtran1..3 select which
+//! Rref is active). The divider midpoint runs through three inverters to
+//! restore a clean digital level:  bit = (R_cell < R_ref).
+//!
+//! A 2-bit cell is read by successive approximation over the three
+//! reference levels — this is why the RR block needs exactly three
+//! transistor-selectable references for INT2 storage.
+
+use crate::device::{Array1T1R, DeviceConfig};
+
+/// Readout result of a 2-bit successive-approximation read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Read2Bit {
+    /// Decoded 2-bit value in 0..=3 (3 = lowest resistance / strongest).
+    pub value: u8,
+    /// Number of divider comparisons performed (1 or 2).
+    pub comparisons: u8,
+}
+
+/// Single-reference binary read of one cell on an array.
+/// `true` = logic 1 = low-resistance state.
+pub fn read_bit(array: &mut Array1T1R, row: usize, col: usize, rref_kohm: f64) -> bool {
+    array.read_cell(row, col) < rref_kohm
+}
+
+/// Word-parallel binary read of a whole row (one WL activation).
+pub fn read_row(array: &mut Array1T1R, row: usize, rref_kohm: f64) -> Vec<bool> {
+    array.read_row_bits(row, rref_kohm)
+}
+
+/// Successive-approximation 2-bit read of one cell: first compare against
+/// the middle reference, then against the low/high one. Encoding follows
+/// [`DeviceConfig::levels_2bit`]: ascending resistance = descending value.
+pub fn read_2bit(array: &mut Array1T1R, row: usize, col: usize, cfg: &DeviceConfig) -> Read2Bit {
+    let rrefs = cfg.rrefs_2bit();
+    let r = array.read_cell(row, col);
+    if r < rrefs[1] {
+        // below mid: value 3 (R < rrefs[0]) or 2
+        if r < rrefs[0] {
+            Read2Bit { value: 3, comparisons: 2 }
+        } else {
+            Read2Bit { value: 2, comparisons: 2 }
+        }
+    } else if r < rrefs[2] {
+        Read2Bit { value: 1, comparisons: 2 }
+    } else {
+        Read2Bit { value: 0, comparisons: 2 }
+    }
+}
+
+/// Map a 2-bit value to its programming target resistance.
+pub fn target_for_2bit(value: u8, cfg: &DeviceConfig) -> f64 {
+    let levels = cfg.levels_2bit();
+    levels[3 - value as usize % 4]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn formed_array(seed: u64, cfg: DeviceConfig) -> Array1T1R {
+        let mut rng = Rng::new(seed);
+        let mut a = Array1T1R::fabricate(16, 32, cfg, &mut rng);
+        a.form_all();
+        a
+    }
+
+    #[test]
+    fn two_bit_roundtrip_all_values() {
+        let cfg = DeviceConfig::ideal();
+        let mut a = formed_array(1, cfg.clone());
+        for v in 0u8..4 {
+            let t = target_for_2bit(v, &cfg);
+            assert!(a.program_cell(0, v as usize, t).is_some());
+            let got = read_2bit(&mut a, 0, v as usize, &cfg);
+            assert_eq!(got.value, v, "2-bit roundtrip failed for {v}");
+            assert_eq!(got.comparisons, 2);
+        }
+    }
+
+    #[test]
+    fn two_bit_roundtrip_with_realistic_noise() {
+        // the digital margins must absorb sigma = 0.8793 kOhm completely:
+        // this is the paper's zero-BER claim for INT2 storage.
+        let cfg = DeviceConfig { stuck_fault_prob: 0.0, transient_read_flip_prob: 0.0, ..DeviceConfig::default() };
+        let mut a = formed_array(2, cfg.clone());
+        let mut errors = 0;
+        for trial in 0..400 {
+            let v = (trial % 4) as u8;
+            let (r, c) = (trial / 32 % 16, trial % 32);
+            if a.program_cell(r, c, target_for_2bit(v, &cfg)).is_none() {
+                continue;
+            }
+            if read_2bit(&mut a, r, c, &cfg).value != v {
+                errors += 1;
+            }
+        }
+        assert_eq!(errors, 0, "INT2 storage must be zero-BER");
+    }
+
+    #[test]
+    fn binary_read_row_matches_programmed_pattern() {
+        let cfg = DeviceConfig::ideal();
+        let mut a = formed_array(3, cfg.clone());
+        for col in 0..32 {
+            let bit = (col * 7 % 3) == 0;
+            let t = if bit { 5.0 } else { 120.0 };
+            a.program_cell(2, col, t);
+        }
+        let bits = read_row(&mut a, 2, cfg.rref_1bit());
+        for col in 0..32 {
+            assert_eq!(bits[col], (col * 7 % 3) == 0, "col {col}");
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Reconfigurable Unit (RU): the five-NMOS dynamic-logic cell of Fig. 3b,
+//! modeled at switch level with explicit pre-charge / compute phases
+//! (Fig. 3f). One RU hangs off every bit-line's readout chain.
+//!
+//! Switch-level structure we model:
+//!
+//! ```text
+//!            precharge (phi=PRE)           compute (phi=EVAL)
+//!   node ----o PMOS-ish keeper      node pulled down through the
+//!            |                      W-controlled branch pair:
+//!   W  ---[M1]--- INL path            W=1   -> node := INL
+//!   !W ---[M2]--- INR path            W=0   -> node := INR
+//!   X  ---[M5] output AND gate      OUT = X AND node
+//! ```
+//!
+//! (M3/M4 are the inverter deriving !W from the RR chain.) The behavioral
+//! contract — `OUT = X AND (W (.) K)` for the op-dependent (INL, INR)
+//! encoding — is locked down by exhaustive tests against
+//! [`crate::chip::logic`].
+
+use super::logic::{input_logic, CtrlLine, LogicOp};
+
+/// Evaluation phases of the dynamic RU (Fig. 3f).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Precharge,
+    Compute,
+}
+
+/// One reconfigurable unit instance. Stateless between cycles except for
+/// the dynamic node, which is only valid after a full PRE->EVAL sequence.
+#[derive(Clone, Debug)]
+pub struct ReconfigurableUnit {
+    op: LogicOp,
+    inl: CtrlLine,
+    inr: CtrlLine,
+    node: bool,
+    phase: Phase,
+    evals: u64,
+}
+
+impl ReconfigurableUnit {
+    pub fn new(op: LogicOp) -> Self {
+        let (inl, inr) = input_logic(op);
+        ReconfigurableUnit { op, inl, inr, node: true, phase: Phase::Precharge, evals: 0 }
+    }
+
+    /// Reconfigure to another op (the chip does this between the
+    /// compute-in-memory and search-in-memory passes).
+    pub fn configure(&mut self, op: LogicOp) {
+        self.op = op;
+        let (inl, inr) = input_logic(op);
+        self.inl = inl;
+        self.inr = inr;
+    }
+
+    pub fn op(&self) -> LogicOp {
+        self.op
+    }
+
+    /// Pre-charge phase: dynamic node goes high.
+    pub fn precharge(&mut self) {
+        self.node = true;
+        self.phase = Phase::Precharge;
+    }
+
+    /// Compute phase: the W-selected branch drives the node, then the
+    /// output transistor gates it with X. Panics in debug builds if the
+    /// pre-charge was skipped (a real dynamic cell would produce garbage).
+    pub fn compute(&mut self, x: bool, w: bool, k: bool) -> bool {
+        debug_assert_eq!(self.phase, Phase::Precharge, "RU evaluated without precharge");
+        self.phase = Phase::Compute;
+        self.evals += 1;
+        let branch = if w { self.inl } else { self.inr };
+        self.node = branch.eval(k);
+        x && self.node
+    }
+
+    /// Full cycle helper: precharge then compute.
+    #[inline]
+    pub fn cycle(&mut self, x: bool, w: bool, k: bool) -> bool {
+        self.precharge();
+        self.compute(x, w, k)
+    }
+
+    /// Number of compute evaluations performed (for the energy ledger).
+    pub fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::logic::ternary_out;
+
+    #[test]
+    fn ru_matches_truth_table_for_all_ops() {
+        for op in LogicOp::ALL {
+            let mut ru = ReconfigurableUnit::new(op);
+            for x in [false, true] {
+                for w in [false, true] {
+                    for k in [false, true] {
+                        assert_eq!(
+                            ru.cycle(x, w, k),
+                            ternary_out(op, x, w, k),
+                            "{op:?} x={x} w={w} k={k}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reconfigure_switches_semantics() {
+        let mut ru = ReconfigurableUnit::new(LogicOp::And);
+        assert!(!ru.cycle(true, true, false)); // AND: 1&0 = 0
+        ru.configure(LogicOp::Or);
+        assert!(ru.cycle(true, true, false)); // OR: 1|0 = 1
+        assert_eq!(ru.op(), LogicOp::Or);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "without precharge")]
+    fn double_eval_without_precharge_panics() {
+        let mut ru = ReconfigurableUnit::new(LogicOp::Xor);
+        ru.precharge();
+        ru.compute(true, true, true);
+        ru.compute(true, true, true); // second eval without precharge
+    }
+
+    #[test]
+    fn eval_counter_increments() {
+        let mut ru = ReconfigurableUnit::new(LogicOp::Xor);
+        for _ in 0..5 {
+            ru.cycle(true, false, true);
+        }
+        assert_eq!(ru.evals(), 5);
+    }
+}

@@ -1,0 +1,93 @@
+//! Cycle/phase timing model (Fig. 3f): every array operation is a
+//! pre-charge phase followed by a compute phase. The model tracks cycle
+//! counts per operation class and converts them to wall-clock using the
+//! chip's clock period, enabling latency rows in the benches.
+
+/// Timing constants for the 180 nm chip.
+#[derive(Clone, Debug)]
+pub struct TimingModel {
+    /// Core clock period (ns) — one pre-charge + compute pair per cycle.
+    pub cycle_ns: f64,
+    /// Extra cycles per WL shift during programming-mode row selection.
+    pub shift_cycles: u64,
+    /// Cycles per write-verify pulse (program + settle + verify read).
+    pub write_pulse_cycles: u64,
+}
+
+impl Default for TimingModel {
+    fn default() -> Self {
+        TimingModel { cycle_ns: 10.0, shift_cycles: 1, write_pulse_cycles: 12 }
+    }
+}
+
+/// Cycle counters per operation class.
+#[derive(Clone, Debug, Default)]
+pub struct TimingLedger {
+    pub compute_cycles: u64,
+    pub search_cycles: u64,
+    pub program_cycles: u64,
+}
+
+/// A trace entry for rendering Fig. 3f-style waveforms in the benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseEvent {
+    Precharge,
+    Compute,
+}
+
+impl TimingLedger {
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_cycles + self.search_cycles + self.program_cycles
+    }
+
+    pub fn wallclock_us(&self, m: &TimingModel) -> f64 {
+        self.total_cycles() as f64 * m.cycle_ns * 1e-3
+    }
+
+    pub fn merge(&mut self, other: &TimingLedger) {
+        self.compute_cycles += other.compute_cycles;
+        self.search_cycles += other.search_cycles;
+        self.program_cycles += other.program_cycles;
+    }
+}
+
+/// Generate the waveform of one dynamic-logic op for the Fig. 3f panel:
+/// a (phase, node-level, out-level) sequence for given inputs.
+pub fn waveform(op: crate::chip::LogicOp, x: bool, w: bool, k: bool) -> Vec<(PhaseEvent, bool, bool)> {
+    let mut ru = crate::chip::ru::ReconfigurableUnit::new(op);
+    ru.precharge();
+    let pre = (PhaseEvent::Precharge, true, false); // node high, out not valid yet
+    let out = ru.compute(x, w, k);
+    let post = (PhaseEvent::Compute, op.apply(w, k), out);
+    vec![pre, post]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::LogicOp;
+
+    #[test]
+    fn wallclock_scales_with_cycles() {
+        let m = TimingModel::default();
+        let l = TimingLedger { compute_cycles: 1000, search_cycles: 0, program_cycles: 0 };
+        assert!((l.wallclock_us(&m) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn waveform_has_precharge_then_compute() {
+        let wf = waveform(LogicOp::Xor, true, true, false);
+        assert_eq!(wf.len(), 2);
+        assert_eq!(wf[0].0, PhaseEvent::Precharge);
+        assert!(wf[0].1, "node must be precharged high");
+        assert_eq!(wf[1].0, PhaseEvent::Compute);
+        assert!(wf[1].2, "XOR(1,0) under X=1 must emit 1");
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = TimingLedger { compute_cycles: 1, search_cycles: 2, program_cycles: 3 };
+        a.merge(&TimingLedger { compute_cycles: 10, search_cycles: 20, program_cycles: 30 });
+        assert_eq!(a.total_cycles(), 66);
+    }
+}

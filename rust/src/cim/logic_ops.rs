@@ -1,0 +1,81 @@
+//! Element-wise (Hadamard) logic over stored rows — the "compute" half of
+//! the reconfigurable array when the accumulator is bypassed (Fig. 3a:
+//! "For element-wise Hadamard product operations, only the S&A Group is
+//! activated").
+
+use crate::chip::{Chip, LogicOp};
+
+use super::mapping::RowSpan;
+
+/// Apply `OUT = X AND (W (.) K)` element-wise across a stored span.
+/// `x` and `k` must have the span's length. Returns the full bit vector.
+pub fn hadamard(chip: &mut Chip, span: &RowSpan, op: LogicOp, x: &[bool], k: &[bool]) -> Vec<bool> {
+    assert_eq!(x.len(), span.len);
+    assert_eq!(k.len(), span.len);
+    let per_row = chip.cfg().data_cols();
+    let mut out = Vec::with_capacity(span.len);
+    let n_seg = span.slots.len();
+    for (s, &(block, row)) in span.slots.iter().enumerate() {
+        let start = s * per_row;
+        let width = if s + 1 == n_seg { span.tail_width } else { per_row };
+        let bits = chip.logic_pass(
+            block,
+            row,
+            op,
+            &x[start..start + width],
+            &k[start..start + width],
+            false,
+        );
+        out.extend(bits.into_iter().take(width));
+    }
+    out
+}
+
+/// Convenience: full-width op with X=1 (pure `W (.) K`).
+pub fn elementwise(chip: &mut Chip, span: &RowSpan, op: LogicOp, k: &[bool]) -> Vec<bool> {
+    hadamard(chip, span, op, &vec![true; span.len], k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipConfig;
+    use crate::cim::mapping::{store_bits, RowAllocator};
+    use crate::util::rng::Rng;
+
+    fn chip_with_bits(n: usize, seed: u64) -> (Chip, RowSpan, Vec<bool>) {
+        let mut rng = Rng::new(seed);
+        let mut c = Chip::new(ChipConfig::small_test(), &mut rng);
+        c.form();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let mut r = Rng::new(seed + 1);
+        let bits: Vec<bool> = (0..n).map(|_| r.chance(0.5)).collect();
+        let span = alloc.alloc(n).unwrap();
+        assert_eq!(store_bits(&mut c, &span, &bits), 0);
+        (c, span, bits)
+    }
+
+    #[test]
+    fn elementwise_all_ops_match_semantics() {
+        let (mut c, span, w) = chip_with_bits(71, 1);
+        let mut r = Rng::new(9);
+        let k: Vec<bool> = (0..71).map(|_| r.chance(0.5)).collect();
+        for op in LogicOp::ALL {
+            let out = elementwise(&mut c, &span, op, &k);
+            for i in 0..71 {
+                assert_eq!(out[i], op.apply(w[i], k[i]), "{op:?} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn hadamard_x_gates_lanes() {
+        let (mut c, span, w) = chip_with_bits(40, 2);
+        let x: Vec<bool> = (0..40).map(|i| i % 2 == 0).collect();
+        let k = vec![true; 40];
+        let out = hadamard(&mut c, &span, LogicOp::Or, &x, &k);
+        for i in 0..40 {
+            assert_eq!(out[i], x[i] && (w[i] || true) , "idx {i}");
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Weight encodings and array layout.
+//!
+//! * **Binary kernels** (MNIST path): one RRAM cell per weight, bit =
+//!   sign(w) — LRS encodes +1, HRS encodes -1.
+//! * **INT8 weights** (PointNet path): offset-encoded u8 = w + 128 split
+//!   into four 2-bit slices, one cell each (paper: "each weight is
+//!   encoded using four RRAM cells"). Offset encoding keeps every stored
+//!   slice non-negative; the coordinator subtracts `128 * sum(x)` after
+//!   accumulation to recover the signed dot product.
+//! * **Row layout**: a kernel's cells are packed into consecutive data
+//!   columns, spilling across as many (block, row) slots as needed.
+
+use crate::chip::Chip;
+
+/// Bit/slice codecs between host weights and stored cell values.
+pub struct WeightCodec;
+
+impl WeightCodec {
+    /// Binarize a float weight to its stored bit (sign; ties to +1).
+    #[inline]
+    pub fn binarize(w: f32) -> bool {
+        w >= 0.0
+    }
+
+    /// Bit vector of a float kernel (flattened), for similarity search
+    /// and binary storage.
+    pub fn kernel_bits(kernel: &[f32]) -> Vec<bool> {
+        kernel.iter().map(|&w| Self::binarize(w)).collect()
+    }
+
+    /// Offset-encode an i8 weight into four 2-bit slices, LSB-first.
+    #[inline]
+    pub fn int8_slices(w: i8) -> [u8; 4] {
+        let u = (w as i16 + 128) as u16; // 0..=255
+        [
+            (u & 0b11) as u8,
+            ((u >> 2) & 0b11) as u8,
+            ((u >> 4) & 0b11) as u8,
+            ((u >> 6) & 0b11) as u8,
+        ]
+    }
+
+    /// Reassemble an i8 from its four slices.
+    #[inline]
+    pub fn int8_from_slices(s: [u8; 4]) -> i8 {
+        let u = (s[0] as u16) | ((s[1] as u16) << 2) | ((s[2] as u16) << 4) | ((s[3] as u16) << 6);
+        (u as i16 - 128) as i8
+    }
+
+    /// Symmetric per-tensor quantization of floats to i8 (scale returned).
+    pub fn quantize_int8(xs: &[f32]) -> (Vec<i8>, f32) {
+        let max = xs.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+        let scale = max / 127.0;
+        let q = xs
+            .iter()
+            .map(|&x| (x / scale).round().clamp(-128.0, 127.0) as i8)
+            .collect();
+        (q, scale)
+    }
+
+    /// Quantize activations to u8 (unsigned, post-ReLU) with scale.
+    pub fn quantize_u8(xs: &[f32]) -> (Vec<u8>, f32) {
+        let max = xs.iter().fold(0f32, |m, &x| m.max(x)).max(1e-8);
+        let scale = max / 255.0;
+        let q = xs
+            .iter()
+            .map(|&x| (x / scale).round().clamp(0.0, 255.0) as u8)
+            .collect();
+        (q, scale)
+    }
+}
+
+/// A (block, row) slot sequence holding one stored vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RowSpan {
+    /// (block, row) per segment, each holding up to `seg_width` cells.
+    pub slots: Vec<(usize, usize)>,
+    /// cells used in the final segment (earlier segments are full).
+    pub tail_width: usize,
+    /// total cells stored.
+    pub len: usize,
+}
+
+/// Sequential allocator of array rows across the chip's blocks.
+#[derive(Clone, Debug)]
+pub struct RowAllocator {
+    blocks: usize,
+    logical_rows: usize,
+    next: usize, // linear cursor over block-major rows
+    pub data_cols: usize,
+}
+
+impl RowAllocator {
+    pub fn for_chip(chip: &Chip) -> Self {
+        RowAllocator {
+            blocks: chip.cfg().blocks,
+            logical_rows: chip.cfg().logical_rows(),
+            next: 0,
+            data_cols: chip.cfg().data_cols(),
+        }
+    }
+
+    pub fn capacity_rows(&self) -> usize {
+        self.blocks * self.logical_rows
+    }
+
+    pub fn rows_free(&self) -> usize {
+        self.capacity_rows() - self.next
+    }
+
+    /// Allocate enough rows for `n_cells` cells. Returns None when full.
+    pub fn alloc(&mut self, n_cells: usize) -> Option<RowSpan> {
+        assert!(n_cells > 0);
+        let per_row = self.data_cols;
+        let need = n_cells.div_ceil(per_row);
+        if self.rows_free() < need {
+            return None;
+        }
+        let mut slots = Vec::with_capacity(need);
+        for _ in 0..need {
+            let lin = self.next;
+            self.next += 1;
+            slots.push((lin / self.logical_rows, lin % self.logical_rows));
+        }
+        let tail = n_cells - (need - 1) * per_row;
+        Some(RowSpan { slots, tail_width: tail, len: n_cells })
+    }
+
+    pub fn reset(&mut self) {
+        self.next = 0;
+    }
+}
+
+/// Store a bit vector into an allocated span.
+pub fn store_bits(chip: &mut Chip, span: &RowSpan, bits: &[bool]) -> usize {
+    assert_eq!(bits.len(), span.len, "bit count vs span");
+    let per_row = chip.cfg().data_cols();
+    let mut failures = 0;
+    for (i, &bit) in bits.iter().enumerate() {
+        let (block, row) = span.slots[i / per_row];
+        if !chip.program_bit(block, row, i % per_row, bit) {
+            failures += 1;
+        }
+    }
+    failures
+}
+
+/// Store int8 weights (4 cells each) into an allocated span.
+/// `span.len` must equal `4 * weights.len()`.
+pub fn store_int8(chip: &mut Chip, span: &RowSpan, weights: &[i8]) -> usize {
+    assert_eq!(span.len, 4 * weights.len(), "span must hold 4 cells/weight");
+    let per_row = chip.cfg().data_cols();
+    let mut failures = 0;
+    for (j, &w) in weights.iter().enumerate() {
+        let slices = WeightCodec::int8_slices(w);
+        for (s, &v) in slices.iter().enumerate() {
+            let cell = j * 4 + s;
+            let (block, row) = span.slots[cell / per_row];
+            if !chip.program_2bit(block, row, cell % per_row, v) {
+                failures += 1;
+            }
+        }
+    }
+    failures
+}
+
+/// Read a stored bit vector back (through ECC + read path).
+pub fn load_bits(chip: &mut Chip, span: &RowSpan) -> Vec<bool> {
+    let per_row = chip.cfg().data_cols();
+    (0..span.len)
+        .map(|i| {
+            let (block, row) = span.slots[i / per_row];
+            chip.read_bit(block, row, i % per_row)
+        })
+        .collect()
+}
+
+/// Read stored int8 weights back.
+pub fn load_int8(chip: &mut Chip, span: &RowSpan) -> Vec<i8> {
+    let per_row = chip.cfg().data_cols();
+    let n = span.len / 4;
+    (0..n)
+        .map(|j| {
+            let mut s = [0u8; 4];
+            for (k, slot) in s.iter_mut().enumerate() {
+                let cell = j * 4 + k;
+                let (block, row) = span.slots[cell / per_row];
+                *slot = chip.read_2bit(block, row, cell % per_row);
+            }
+            WeightCodec::int8_from_slices(s)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipConfig;
+    use crate::util::rng::Rng;
+
+    fn chip() -> Chip {
+        let mut rng = Rng::new(42);
+        let mut c = Chip::new(ChipConfig::small_test(), &mut rng);
+        c.form();
+        c
+    }
+
+    #[test]
+    fn int8_slice_roundtrip_exhaustive() {
+        for w in i8::MIN..=i8::MAX {
+            let s = WeightCodec::int8_slices(w);
+            assert!(s.iter().all(|&x| x < 4));
+            assert_eq!(WeightCodec::int8_from_slices(s), w);
+        }
+    }
+
+    #[test]
+    fn quantize_int8_bounds_and_scale() {
+        let xs = vec![-1.0f32, 0.5, 1.0, -0.25];
+        let (q, scale) = WeightCodec::quantize_int8(&xs);
+        assert_eq!(q.len(), 4);
+        assert!((scale - 1.0 / 127.0).abs() < 1e-6);
+        assert_eq!(q[2], 127);
+        assert_eq!(q[0], -127);
+    }
+
+    #[test]
+    fn allocator_spans_blocks() {
+        let c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let cap = alloc.capacity_rows();
+        assert_eq!(cap, c.cfg().logical_rows());
+        let span = alloc.alloc(c.cfg().data_cols() * 3 + 5).unwrap();
+        assert_eq!(span.slots.len(), 4);
+        assert_eq!(span.tail_width, 5);
+        assert_eq!(alloc.rows_free(), cap - 4);
+    }
+
+    #[test]
+    fn allocator_exhaustion_returns_none() {
+        let c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let all = alloc.capacity_rows() * alloc.data_cols;
+        assert!(alloc.alloc(all).is_some());
+        assert!(alloc.alloc(1).is_none());
+    }
+
+    #[test]
+    fn bit_store_load_roundtrip() {
+        let mut c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let bits: Vec<bool> = (0..73).map(|i| i % 3 == 0).collect();
+        let span = alloc.alloc(bits.len()).unwrap();
+        assert_eq!(store_bits(&mut c, &span, &bits), 0);
+        assert_eq!(load_bits(&mut c, &span), bits);
+    }
+
+    #[test]
+    fn int8_store_load_roundtrip() {
+        let mut c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let ws: Vec<i8> = vec![-128, -1, 0, 1, 127, 42, -42, 100];
+        let span = alloc.alloc(4 * ws.len()).unwrap();
+        assert_eq!(store_int8(&mut c, &span, &ws), 0);
+        assert_eq!(load_int8(&mut c, &span), ws);
+    }
+
+    #[test]
+    fn kernel_bits_sign_convention() {
+        let bits = WeightCodec::kernel_bits(&[-0.5, 0.0, 0.5]);
+        assert_eq!(bits, vec![false, true, true]);
+    }
+}

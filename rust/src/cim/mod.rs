@@ -1,0 +1,9 @@
+//! Compute-in-memory operations built on the [`crate::chip`] substrate:
+//! weight encodings and row layout ([`mapping`]), element-wise logic
+//! ([`logic_ops`]), binary and INT8 vector-matrix multiplication
+//! ([`vmm`]), and the search-in-memory similarity matrix ([`similarity`]).
+
+pub mod logic_ops;
+pub mod mapping;
+pub mod similarity;
+pub mod vmm;

@@ -1,0 +1,196 @@
+//! Search-in-memory: the pairwise kernel-similarity matrix computed
+//! on-chip with XOR passes + popcount (paper Figs. 4c/d, 5b/c). The
+//! pruning scheduler consumes [`SimilarityMatrix`] regardless of whether
+//! it came from the chip, the AOT Pallas artifact, or the bit-packed
+//! software path in [`crate::pruning::similarity`] — all three agree
+//! bit-for-bit (cross-checked in tests and the quickstart example).
+
+use crate::chip::Chip;
+
+use super::mapping::{store_bits, RowAllocator, RowSpan, WeightCodec};
+
+/// Dense symmetric similarity matrix over K kernels.
+#[derive(Clone, Debug)]
+pub struct SimilarityMatrix {
+    pub k: usize,
+    pub n_bits: usize,
+    /// Hamming distances, row-major K x K.
+    pub dist: Vec<u32>,
+}
+
+impl SimilarityMatrix {
+    pub fn distance(&self, i: usize, j: usize) -> u32 {
+        self.dist[i * self.k + j]
+    }
+
+    /// Normalized similarity s = 1 - d/n in [0,1].
+    pub fn similarity(&self, i: usize, j: usize) -> f64 {
+        1.0 - self.distance(i, j) as f64 / self.n_bits.max(1) as f64
+    }
+}
+
+/// Kernels stored on-chip for repeated similarity searches.
+pub struct StoredKernels {
+    pub spans: Vec<RowSpan>,
+    pub n_bits: usize,
+}
+
+/// Program a set of equal-length float kernels (binarized) onto the chip.
+/// Returns the stored handle; panics if the chip is out of rows.
+pub fn store_kernels(chip: &mut Chip, alloc: &mut RowAllocator, kernels: &[Vec<f32>]) -> StoredKernels {
+    assert!(!kernels.is_empty());
+    let n_bits = kernels[0].len();
+    let spans = kernels
+        .iter()
+        .map(|kr| {
+            assert_eq!(kr.len(), n_bits, "kernels must share a bit width");
+            let bits = WeightCodec::kernel_bits(kr);
+            let span = alloc.alloc(n_bits).expect("chip out of rows for kernels");
+            let fail = store_bits(chip, &span, &bits);
+            assert_eq!(fail, 0, "unrecoverable cell failures while storing kernel");
+            span
+        })
+        .collect();
+    StoredKernels { spans, n_bits }
+}
+
+/// Hamming distance between two stored kernels via XOR search passes,
+/// one pass per row segment.
+pub fn kernel_distance(chip: &mut Chip, a: &RowSpan, b: &RowSpan) -> u32 {
+    assert_eq!(a.len, b.len, "kernel width mismatch");
+    let per_row = chip.cfg().data_cols();
+    let n_seg = a.slots.len();
+    let mut d = 0u32;
+    for s in 0..n_seg {
+        let width = if s + 1 == n_seg { a.tail_width } else { per_row };
+        let (ba, ra) = a.slots[s];
+        let (bb, rb) = b.slots[s];
+        d += chip.search_pass(ba, ra, bb, rb, width);
+    }
+    d
+}
+
+/// Full pairwise similarity matrix of the stored kernels, restricted to
+/// the `live` subset (pruned kernels are skipped — their rows are no
+/// longer addressed). Distances involving pruned kernels are u32::MAX.
+pub fn similarity_matrix(chip: &mut Chip, stored: &StoredKernels, live: &[bool]) -> SimilarityMatrix {
+    let k = stored.spans.len();
+    assert_eq!(live.len(), k);
+    let mut dist = vec![u32::MAX; k * k];
+    for i in 0..k {
+        if !live[i] {
+            continue;
+        }
+        dist[i * k + i] = 0;
+        for j in (i + 1)..k {
+            if !live[j] {
+                continue;
+            }
+            let d = kernel_distance(chip, &stored.spans[i], &stored.spans[j]);
+            dist[i * k + j] = d;
+            dist[j * k + i] = d;
+        }
+    }
+    SimilarityMatrix { k, n_bits: stored.n_bits, dist }
+}
+
+/// Software oracle (bit-exact) for the on-chip similarity matrix.
+pub fn similarity_matrix_ref(kernels: &[Vec<f32>], live: &[bool]) -> SimilarityMatrix {
+    let k = kernels.len();
+    let n_bits = kernels.first().map(|v| v.len()).unwrap_or(0);
+    let bits: Vec<Vec<bool>> = kernels.iter().map(|kr| WeightCodec::kernel_bits(kr)).collect();
+    let mut dist = vec![u32::MAX; k * k];
+    for i in 0..k {
+        if !live[i] {
+            continue;
+        }
+        dist[i * k + i] = 0;
+        for j in (i + 1)..k {
+            if !live[j] {
+                continue;
+            }
+            let d = bits[i]
+                .iter()
+                .zip(&bits[j])
+                .map(|(&a, &b)| (a != b) as u32)
+                .sum();
+            dist[i * k + j] = d;
+            dist[j * k + i] = d;
+        }
+    }
+    SimilarityMatrix { k, n_bits, dist }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipConfig;
+    use crate::util::rng::Rng;
+
+    fn random_kernels(k: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..k)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn chip_matrix_matches_software_oracle() {
+        let mut rng = Rng::new(11);
+        let mut chip = Chip::new(ChipConfig::small_test(), &mut rng);
+        chip.form();
+        let mut alloc = RowAllocator::for_chip(&chip);
+        let kernels = random_kernels(6, 45, 5); // 45 bits -> 2 rows each
+        let live = vec![true; 6];
+        let stored = store_kernels(&mut chip, &mut alloc, &kernels);
+        let got = similarity_matrix(&mut chip, &stored, &live);
+        let want = similarity_matrix_ref(&kernels, &live);
+        assert_eq!(got.dist, want.dist);
+        assert_eq!(got.n_bits, 45);
+    }
+
+    #[test]
+    fn identical_kernels_have_distance_zero_similarity_one() {
+        let mut rng = Rng::new(12);
+        let mut chip = Chip::new(ChipConfig::small_test(), &mut rng);
+        chip.form();
+        let mut alloc = RowAllocator::for_chip(&chip);
+        let k0: Vec<f32> = (0..20).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let kernels = vec![k0.clone(), k0];
+        let stored = store_kernels(&mut chip, &mut alloc, &kernels);
+        let m = similarity_matrix(&mut chip, &stored, &[true, true]);
+        assert_eq!(m.distance(0, 1), 0);
+        assert!((m.similarity(0, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pruned_kernels_are_skipped() {
+        let mut rng = Rng::new(13);
+        let mut chip = Chip::new(ChipConfig::small_test(), &mut rng);
+        chip.form();
+        let mut alloc = RowAllocator::for_chip(&chip);
+        let kernels = random_kernels(4, 16, 9);
+        let stored = store_kernels(&mut chip, &mut alloc, &kernels);
+        let m = similarity_matrix(&mut chip, &stored, &[true, false, true, true]);
+        assert_eq!(m.distance(0, 1), u32::MAX);
+        assert_eq!(m.distance(1, 2), u32::MAX);
+        assert_ne!(m.distance(0, 2), u32::MAX);
+    }
+
+    #[test]
+    fn matrix_is_symmetric_with_zero_diagonal() {
+        let mut rng = Rng::new(14);
+        let mut chip = Chip::new(ChipConfig::small_test(), &mut rng);
+        chip.form();
+        let mut alloc = RowAllocator::for_chip(&chip);
+        let kernels = random_kernels(5, 30, 3);
+        let stored = store_kernels(&mut chip, &mut alloc, &kernels);
+        let m = similarity_matrix(&mut chip, &stored, &[true; 5]);
+        for i in 0..5 {
+            assert_eq!(m.distance(i, i), 0);
+            for j in 0..5 {
+                assert_eq!(m.distance(i, j), m.distance(j, i));
+            }
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Vector ops on stored weights: the chip's compute-in-memory mode.
+//!
+//! * [`binary_dot_u8`] — MNIST path: binary (+-1) weights x unsigned
+//!   8-bit activations, input bit-serial over 8 planes, AND logic in the
+//!   array, shift-and-add + accumulator reduction:
+//!   `dot = 2 * S - sum(x)` where `S = sum_b 2^b * popcnt(xbit_b AND wbits)`.
+//! * [`int8_dot`] — PointNet path: INT8 x INT8; weights as four 2-bit
+//!   slices, activations offset-encoded u8 bit-serial; the coordinator
+//!   removes both offsets after accumulation.
+
+use crate::chip::{Chip, LogicOp};
+
+use super::mapping::RowSpan;
+
+/// Iterate a span's segments: (block, row, seg_start_cell, seg_width).
+fn segments<'a>(
+    span: &'a RowSpan,
+    per_row: usize,
+) -> impl Iterator<Item = (usize, usize, usize, usize)> + 'a {
+    let n_seg = span.slots.len();
+    span.slots.iter().enumerate().map(move |(s, &(block, row))| {
+        let width = if s + 1 == n_seg { span.tail_width } else { per_row };
+        (block, row, s * per_row, width)
+    })
+}
+
+/// Binary-weight dot product with u8 activations (bit-serial, AND mode).
+///
+/// `span` holds the kernel's sign bits; `x` the activation vector
+/// (same length). Returns the exact signed dot product
+/// `sum_j x_j * (2*w_j - 1)` as i64.
+pub fn binary_dot_u8(chip: &mut Chip, span: &RowSpan, x: &[u8]) -> i64 {
+    assert_eq!(x.len(), span.len, "activation length vs span");
+    let per_row = chip.cfg().data_cols();
+    let mut s: i64 = 0; // sum_j x_j * w_j (w in {0,1})
+    for (block, row, start, width) in segments(span, per_row) {
+        let xs = &x[start..start + width];
+        for bit in 0..8u32 {
+            let x_bits: Vec<bool> = xs.iter().map(|&v| (v >> bit) & 1 == 1).collect();
+            // K=1: W AND K = W, gated by X = input bit plane
+            let out = chip.logic_pass(block, row, LogicOp::And, &x_bits, &vec![true; width], true);
+            let pop: i64 = out.iter().take(width).map(|&b| b as i64).sum();
+            s += pop << bit;
+        }
+    }
+    let sum_x: i64 = x.iter().map(|&v| v as i64).sum();
+    2 * s - sum_x
+}
+
+/// INT8 x INT8 dot product (offset-encoded weights, bit-serial inputs).
+///
+/// `span` holds `n` weights as 4 x 2-bit cells each; `x` has length `n`.
+/// Activations are offset-encoded internally (u = x + 128) and streamed
+/// bit-serially; each pass returns the X-gated 2-bit slice values, which
+/// the S&A group weights by `2^(bit + 2*slice)` before the accumulator
+/// integrates them. Both offsets are removed at the end:
+/// `sum (ux-128)(uw-128) = sum ux*uw - 128*sum(ux) - 128*sum(uw) + n*128^2`.
+pub fn int8_dot(chip: &mut Chip, span: &RowSpan, x: &[i8]) -> i64 {
+    assert_eq!(span.len, 4 * x.len(), "span must hold 4 cells per weight");
+    let per_row = chip.cfg().data_cols();
+    let ux: Vec<u16> = x.iter().map(|&v| (v as i16 + 128) as u16).collect();
+    // accumulate sum_j u_x[j] * u_w[j] where u_w = w + 128 stored as slices
+    let mut s: i64 = 0;
+    // offset sum of stored weights, accumulated from the same sensed data
+    let mut sum_uw: i64 = 0;
+    for (block, row, start, width) in segments(span, per_row) {
+        for bit in 0..8u32 {
+            // X bit for cell c belongs to weight j = c/4
+            let x_bits: Vec<bool> = (start..start + width)
+                .map(|c| (ux[c / 4] >> bit) & 1 == 1)
+                .collect();
+            let vals = chip.vmm_pass_2bit(block, row, &x_bits);
+            for (i, &v) in vals.iter().take(width).enumerate() {
+                let cell = start + i;
+                let shift = 2 * (cell % 4) as u32 + bit;
+                s += (v as i64) << shift;
+            }
+            if bit == 0 {
+                // one all-ones pass worth of data: reconstruct sum(uw)
+                let all = chip.vmm_pass_2bit(block, row, &vec![true; width]);
+                for (i, &v) in all.iter().take(width).enumerate() {
+                    let cell = start + i;
+                    sum_uw += (v as i64) << (2 * (cell % 4) as u32);
+                }
+            }
+        }
+    }
+    let n = x.len() as i64;
+    let sum_ux: i64 = ux.iter().map(|&v| v as i64).sum();
+    s - 128 * sum_ux - 128 * sum_uw + n * 128 * 128
+}
+
+/// Reference software dot for validation: binary weights from bits.
+pub fn binary_dot_ref(bits: &[bool], x: &[u8]) -> i64 {
+    bits.iter()
+        .zip(x)
+        .map(|(&b, &v)| if b { v as i64 } else { -(v as i64) })
+        .sum()
+}
+
+/// Reference software dot for validation: int8 x int8.
+pub fn int8_dot_ref(w: &[i8], x: &[i8]) -> i64 {
+    w.iter().zip(x).map(|(&a, &b)| a as i64 * b as i64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipConfig;
+    use crate::cim::mapping::{store_bits, store_int8, RowAllocator};
+    use crate::util::rng::Rng;
+
+    fn chip() -> Chip {
+        let mut rng = Rng::new(7);
+        let mut c = Chip::new(ChipConfig::small_test(), &mut rng);
+        c.form();
+        c
+    }
+
+    #[test]
+    fn binary_dot_matches_reference_multi_row() {
+        let mut c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let mut rng = Rng::new(1);
+        let n = 77; // spills across 3 rows of 30 data cols
+        let bits: Vec<bool> = (0..n).map(|_| rng.chance(0.5)).collect();
+        let x: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let span = alloc.alloc(n).unwrap();
+        assert_eq!(store_bits(&mut c, &span, &bits), 0);
+        assert_eq!(binary_dot_u8(&mut c, &span, &x), binary_dot_ref(&bits, &x));
+    }
+
+    #[test]
+    fn binary_dot_zero_input_is_zero() {
+        let mut c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let bits = vec![true; 10];
+        let span = alloc.alloc(10).unwrap();
+        store_bits(&mut c, &span, &bits);
+        assert_eq!(binary_dot_u8(&mut c, &span, &[0u8; 10]), 0);
+    }
+
+    #[test]
+    fn int8_dot_matches_reference() {
+        let mut c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let mut rng = Rng::new(2);
+        let n = 13; // 52 cells -> 2 rows
+        let w: Vec<i8> = (0..n).map(|_| (rng.below(256) as i16 - 128) as i8).collect();
+        let x: Vec<i8> = (0..n).map(|_| (rng.below(256) as i16 - 128) as i8).collect();
+        let span = alloc.alloc(4 * n).unwrap();
+        assert_eq!(store_int8(&mut c, &span, &w), 0);
+        assert_eq!(int8_dot(&mut c, &span, &x), int8_dot_ref(&w, &x));
+    }
+
+    #[test]
+    fn int8_dot_extremes() {
+        let mut c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let w: Vec<i8> = vec![-128, 127, -128, 127];
+        let x: Vec<i8> = vec![127, -128, -128, 127];
+        let span = alloc.alloc(16).unwrap();
+        store_int8(&mut c, &span, &w);
+        assert_eq!(int8_dot(&mut c, &span, &x), int8_dot_ref(&w, &x));
+    }
+
+    #[test]
+    fn dots_survive_stuck_faults_via_ecc() {
+        let mut rng = Rng::new(3);
+        let mut cfg = ChipConfig::small_test();
+        cfg.device.stuck_fault_prob = 0.01;
+        let mut c = Chip::new(cfg, &mut rng);
+        c.form();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let mut r = Rng::new(4);
+        let n = 60;
+        let bits: Vec<bool> = (0..n).map(|_| r.chance(0.5)).collect();
+        let x: Vec<u8> = (0..n).map(|_| r.below(200) as u8).collect();
+        let span = alloc.alloc(n).unwrap();
+        assert_eq!(store_bits(&mut c, &span, &bits), 0, "ECC should absorb faults");
+        assert_eq!(binary_dot_u8(&mut c, &span, &x), binary_dot_ref(&bits, &x));
+    }
+}

@@ -1,0 +1,130 @@
+//! Experiment records: everything a bench/example needs to print a
+//! paper panel, plus JSON dumps for EXPERIMENTS.md.
+
+use crate::metrics::ConfusionMatrix;
+use crate::util::json::Json;
+
+/// Per-epoch snapshot.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub loss: f64,
+    pub train_acc: f64,
+    pub test_acc: f64,
+    /// live kernels across prunable layers (Fig. 4i left axis)
+    pub live_kernels: usize,
+    /// live weights across prunable layers (Fig. 4i right axis)
+    pub live_weights: usize,
+    /// training conv MACs spent this epoch (Fig. 4m left)
+    pub train_macs: u64,
+    /// chip-in-the-loop MAC precision per layer (HPN; Fig. 4l / 5h)
+    pub mac_precision: Vec<f64>,
+}
+
+/// Full training run record.
+#[derive(Clone, Debug)]
+pub struct TrainingReport {
+    pub mode: String,
+    pub epochs: Vec<EpochRecord>,
+    pub confusion: ConfusionMatrix,
+    pub final_prune_rate: f64,
+    /// inference conv MACs of the final model vs the unpruned model
+    pub macs_pruned: u64,
+    pub macs_unpruned: u64,
+    /// wall-clock spent in artifact execution vs chip sim (perf split)
+    pub artifact_ms: f64,
+    pub chip_ms: f64,
+}
+
+impl TrainingReport {
+    pub fn final_test_acc(&self) -> f64 {
+        self.epochs.last().map(|e| e.test_acc).unwrap_or(0.0)
+    }
+
+    pub fn total_train_macs(&self) -> u64 {
+        self.epochs.iter().map(|e| e.train_macs).sum()
+    }
+
+    /// Fractional op reduction vs an unpruned run of the same length
+    /// (Fig. 4m left / Fig. 5i left).
+    pub fn train_ops_reduction(&self) -> f64 {
+        let full: u64 = self.epochs.len() as u64 * self.epochs.first().map(|e| e.train_macs).unwrap_or(0);
+        if full == 0 {
+            return 0.0;
+        }
+        1.0 - self.total_train_macs() as f64 / full as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let loss: Vec<f64> = self.epochs.iter().map(|e| e.loss).collect();
+        let test_acc: Vec<f64> = self.epochs.iter().map(|e| e.test_acc).collect();
+        let live: Vec<usize> = self.epochs.iter().map(|e| e.live_kernels).collect();
+        let weights: Vec<usize> = self.epochs.iter().map(|e| e.live_weights).collect();
+        Json::obj()
+            .set("mode", self.mode.as_str())
+            .set("epochs", self.epochs.len())
+            .set("loss", loss)
+            .set("test_acc", test_acc)
+            .set("live_kernels", live)
+            .set("live_weights", weights)
+            .set("final_test_acc", self.final_test_acc())
+            .set("final_prune_rate", self.final_prune_rate)
+            .set("train_ops_reduction", self.train_ops_reduction())
+            .set("macs_pruned", self.macs_pruned)
+            .set("macs_unpruned", self.macs_unpruned)
+            .set("artifact_ms", self.artifact_ms)
+            .set("chip_ms", self.chip_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(epoch: usize, macs: u64) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            loss: 1.0,
+            train_acc: 0.5,
+            test_acc: 0.6,
+            live_kernels: 100,
+            live_weights: 1000,
+            train_macs: macs,
+            mac_precision: vec![],
+        }
+    }
+
+    #[test]
+    fn ops_reduction_computed_vs_first_epoch() {
+        let rep = TrainingReport {
+            mode: "SPN".into(),
+            epochs: vec![record(0, 100), record(1, 80), record(2, 60)],
+            confusion: ConfusionMatrix::new(10),
+            final_prune_rate: 0.4,
+            macs_pruned: 60,
+            macs_unpruned: 100,
+            artifact_ms: 0.0,
+            chip_ms: 0.0,
+        };
+        // full = 3 * 100; spent = 240 -> reduction 0.2
+        assert!((rep.train_ops_reduction() - 0.2).abs() < 1e-12);
+        assert_eq!(rep.total_train_macs(), 240);
+    }
+
+    #[test]
+    fn json_renders() {
+        let rep = TrainingReport {
+            mode: "SUN".into(),
+            epochs: vec![record(0, 10)],
+            confusion: ConfusionMatrix::new(10),
+            final_prune_rate: 0.0,
+            macs_pruned: 10,
+            macs_unpruned: 10,
+            artifact_ms: 1.5,
+            chip_ms: 0.0,
+        };
+        let s = rep.to_json().render();
+        assert!(s.contains("\"mode\":\"SUN\""));
+        assert!(s.contains("\"final_prune_rate\":0"));
+    }
+}

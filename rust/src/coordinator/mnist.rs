@@ -1,0 +1,505 @@
+//! MNIST CNN training coordinator (paper Fig. 4): drives the AOT
+//! `mnist_train` / `mnist_eval` artifacts, the pruning scheduler, and —
+//! in HPN mode — the chip simulator for search-in-memory similarity and
+//! chip-in-the-loop MAC-precision checks.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::chip::{Chip, ChipConfig, ReadPath};
+use crate::cim::mapping::{store_bits, RowAllocator};
+use crate::cim::similarity as chip_sim;
+use crate::cim::vmm;
+use crate::metrics::ConfusionMatrix;
+use crate::nn::data::{mnist, Dataset};
+use crate::nn::layers;
+use crate::nn::quant;
+use crate::nn::tensor::Tensor;
+use crate::pruning::{PruneConfig, PruningScheduler};
+use crate::pruning::similarity::PackedKernels;
+use crate::runtime::{Engine, HostTensor};
+use crate::util::rng::Rng;
+
+use super::experiment::{EpochRecord, TrainingReport};
+use super::params::{Param, ParamSet};
+use super::TrainMode;
+
+pub const TRAIN_BATCH: usize = 64;
+pub const EVAL_BATCH: usize = 256;
+const CHANNELS: [usize; 3] = [32, 64, 32];
+const FC_IN: usize = 32 * 7 * 7;
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct MnistConfig {
+    pub epochs: usize,
+    pub train_samples: usize,
+    pub test_samples: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub mode: TrainMode,
+    pub prune: PruneConfig,
+    /// Use the Pallas-kernel artifact (`mnist_train`) instead of the fast
+    /// jnp one (`mnist_train_fast`). Numerically equivalent; the Pallas
+    /// path is the paper's kernel and ~100x slower under interpret mode.
+    pub use_pallas: bool,
+    /// HPN: MAC positions sampled per layer per epoch for the Fig. 4l
+    /// precision panel (0 disables).
+    pub hpn_check_macs: usize,
+}
+
+impl Default for MnistConfig {
+    fn default() -> Self {
+        MnistConfig {
+            epochs: 10,
+            train_samples: 1920, // 30 steps/epoch at batch 64
+            test_samples: 512,
+            lr: 0.05,
+            seed: 42,
+            mode: TrainMode::Spn,
+            prune: PruneConfig {
+                sim_threshold: 0.70,
+                max_prune_rate: 0.35,
+                min_live_per_layer: 6,
+                ..PruneConfig::default()
+            },
+            use_pallas: false,
+            hpn_check_macs: 64,
+        }
+    }
+}
+
+/// The trainer. Owns datasets, parameters, scheduler, and (HPN) chips.
+pub struct MnistTrainer {
+    cfg: MnistConfig,
+    engine: Engine,
+    params: ParamSet,
+    sched: PruningScheduler,
+    train_set: Dataset,
+    test_set: Dataset,
+    rng: Rng,
+    /// HPN similarity chip (digital read path, fast).
+    sim_chip: Option<Chip>,
+    /// HPN precision chip (electrical read path: real sensing noise).
+    ber_chip: Option<Chip>,
+    artifact_ms: f64,
+    chip_ms: f64,
+}
+
+impl MnistTrainer {
+    pub fn new(cfg: MnistConfig, engine: Engine) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let params = init_params(&mut rng.fork(1));
+        let sched = PruningScheduler::new(
+            cfg.prune.clone(),
+            &[
+                (CHANNELS[0], 9),
+                (CHANNELS[1], CHANNELS[0] * 9),
+                (CHANNELS[2], CHANNELS[1] * 9),
+            ],
+        );
+        let train_set = mnist::generate(cfg.train_samples, cfg.seed ^ 0x7261);
+        let test_set = mnist::generate(cfg.test_samples, cfg.seed ^ 0x7465);
+        let (sim_chip, ber_chip) = if cfg.mode == TrainMode::Hpn {
+            let mut chip_rng = rng.fork(2);
+            let mut sim = Chip::new(ChipConfig::default(), &mut chip_rng);
+            let mut ber = Chip::new(
+                ChipConfig { read_path: ReadPath::Electrical, ..ChipConfig::default() },
+                &mut chip_rng,
+            );
+            sim.form();
+            ber.form();
+            (Some(sim), Some(ber))
+        } else {
+            (None, None)
+        };
+        MnistTrainer {
+            cfg,
+            engine,
+            params,
+            sched,
+            train_set,
+            test_set,
+            rng,
+            sim_chip,
+            ber_chip,
+            artifact_ms: 0.0,
+            chip_ms: 0.0,
+        }
+    }
+
+    pub fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    pub fn scheduler(&self) -> &PruningScheduler {
+        &self.sched
+    }
+
+    fn train_artifact(&self) -> &'static str {
+        if self.cfg.use_pallas { "mnist_train" } else { "mnist_train_fast" }
+    }
+
+    fn eval_artifact(&self) -> &'static str {
+        if self.cfg.use_pallas { "mnist_eval" } else { "mnist_eval_fast" }
+    }
+
+    fn masks(&self) -> Vec<HostTensor> {
+        (0..3)
+            .map(|l| HostTensor::F32(self.sched.mask_f32(l), vec![CHANNELS[l]]))
+            .collect()
+    }
+
+    /// Run one SGD step; returns (loss, n_correct).
+    fn train_step(&mut self, xs: Vec<f32>, ys: Vec<i32>) -> Result<(f64, usize)> {
+        let mut inputs = self.params.to_host();
+        inputs.extend(self.masks());
+        inputs.push(HostTensor::F32(xs, vec![TRAIN_BATCH, 1, 28, 28]));
+        inputs.push(HostTensor::I32(ys, vec![TRAIN_BATCH]));
+        inputs.push(HostTensor::scalar_f32(self.cfg.lr));
+        let t0 = Instant::now();
+        let name = self.train_artifact();
+        let outs = self.engine.run(name, &inputs)?;
+        self.artifact_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.params.update_from(&outs[..8]);
+        let loss = outs[8].expect_f32("loss")[0] as f64;
+        let correct = outs[9].expect_i32("correct")[0] as usize;
+        Ok((loss, correct))
+    }
+
+    /// Evaluate on the test set; returns (accuracy, confusion).
+    pub fn evaluate(&mut self) -> Result<(f64, ConfusionMatrix)> {
+        let mut confusion = ConfusionMatrix::new(10);
+        let n = self.test_set.len();
+        let mut i = 0;
+        while i < n {
+            // batch of EVAL_BATCH, wrapping the tail with zero-padding
+            let mut xs = vec![0.0f32; EVAL_BATCH * 784];
+            let mut count = 0;
+            let mut ys = Vec::with_capacity(EVAL_BATCH);
+            while count < EVAL_BATCH && i + count < n {
+                let idx = i + count;
+                xs[count * 784..(count + 1) * 784].copy_from_slice(self.test_set.sample(idx));
+                ys.push(self.test_set.labels[idx]);
+                count += 1;
+            }
+            let mut inputs = self.params.to_host();
+            inputs.extend(self.masks());
+            inputs.push(HostTensor::F32(xs, vec![EVAL_BATCH, 1, 28, 28]));
+            let t0 = Instant::now();
+            let name = self.eval_artifact();
+            let outs = self.engine.run(name, &inputs)?;
+            self.artifact_ms += t0.elapsed().as_secs_f64() * 1e3;
+            let logits = outs[0].expect_f32("logits");
+            for (b, &y) in ys.iter().enumerate() {
+                let row = &logits[b * 10..(b + 1) * 10];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                confusion.record(y as usize, pred);
+            }
+            i += count;
+        }
+        Ok((confusion.accuracy(), confusion))
+    }
+
+    /// Final-layer features of the first test batch (t-SNE panels).
+    pub fn features(&mut self) -> Result<(Vec<f32>, Vec<i32>)> {
+        let n = EVAL_BATCH.min(self.test_set.len());
+        let mut xs = vec![0.0f32; EVAL_BATCH * 784];
+        for b in 0..n {
+            xs[b * 784..(b + 1) * 784].copy_from_slice(self.test_set.sample(b));
+        }
+        let mut inputs = self.params.to_host();
+        inputs.extend(self.masks());
+        inputs.push(HostTensor::F32(xs, vec![EVAL_BATCH, 1, 28, 28]));
+        let outs = self.engine.run("mnist_features", &inputs)?;
+        let feats = outs[0].expect_f32("features")[..n * FC_IN].to_vec();
+        Ok((feats, self.test_set.labels[..n].to_vec()))
+    }
+
+    /// Per-layer similarity matrices of the current kernels.
+    fn similarity_matrices(&mut self) -> Vec<crate::cim::similarity::SimilarityMatrix> {
+        let names = ["w1", "w2", "w3"];
+        let mut out = Vec::new();
+        for (layer, name) in names.iter().enumerate() {
+            let kernels = self.params.kernels_of(name);
+            let live: Vec<bool> = self.sched.live_mask(layer).to_vec();
+            let t0 = Instant::now();
+            let m = match (&mut self.sim_chip, self.cfg.mode) {
+                (Some(chip), TrainMode::Hpn) => {
+                    // search-in-memory: program kernel bits, XOR passes.
+                    // Layers too large for the two blocks fall back to the
+                    // bit-exact software path (paper: only a subset of
+                    // layers is deployed on-chip).
+                    let mut alloc = RowAllocator::for_chip(chip);
+                    let per_row = alloc.data_cols;
+                    let rows_needed: usize =
+                        kernels.iter().map(|k| k.len().div_ceil(per_row)).sum();
+                    if rows_needed <= alloc.capacity_rows() {
+                        let stored = chip_sim::store_kernels(chip, &mut alloc, &kernels);
+                        chip_sim::similarity_matrix(chip, &stored, &live)
+                    } else {
+                        PackedKernels::from_kernels(&kernels).similarity_matrix(&live)
+                    }
+                }
+                _ => PackedKernels::from_kernels(&kernels).similarity_matrix(&live),
+            };
+            self.chip_ms += t0.elapsed().as_secs_f64() * 1e3;
+            out.push(m);
+        }
+        out
+    }
+
+    /// Chip-in-the-loop MAC precision per conv layer (Fig. 4l): sample
+    /// output positions, run the binary dot on the (noisy, electrical)
+    /// chip, compare with the exact integer reference.
+    fn mac_precision(&mut self) -> Vec<f64> {
+        let Some(chip) = self.ber_chip.as_mut() else {
+            return Vec::new();
+        };
+        let t0 = Instant::now();
+        let samples = self.cfg.hpn_check_macs;
+        let image = Tensor::new(vec![1, 1, 28, 28], self.test_set.sample(0).to_vec());
+        // reference forward pass (binarized+scaled weights) to produce
+        // each layer's input activations
+        let acts = forward_activations(&self.params, &self.sched, &image);
+        let names = ["w1", "w2", "w3"];
+        let mut precisions = Vec::new();
+        let mut rng = self.rng.fork(0xbe5);
+        for (layer, name) in names.iter().enumerate() {
+            let kernels = self.params.kernels_of(name);
+            let input = &acts[layer]; // (1, C, H, W)
+            let (c, h, w) = (input.shape()[1], input.shape()[2], input.shape()[3]);
+            // u8-quantize the whole activation map once (per-layer scale)
+            let (q, _scale) = quant::quantize_activations_u8(input.data());
+            let mut alloc = RowAllocator::for_chip(chip);
+            let mut ok = 0usize;
+            let mut total = 0usize;
+            for _ in 0..samples {
+                let k_idx = rng.below(kernels.len());
+                if !self.sched.live_mask(layer)[k_idx] {
+                    continue;
+                }
+                let (bits, _alpha) = quant::binarize_kernel(&kernels[k_idx]);
+                // random interior output position (stride 1, pad 1)
+                let oy = 1 + rng.below(h.saturating_sub(2).max(1));
+                let ox = 1 + rng.below(w.saturating_sub(2).max(1));
+                // gather the 3x3xC window in kernel order (C-major, ky, kx)
+                let mut window = Vec::with_capacity(c * 9);
+                for cc in 0..c {
+                    for ky in 0..3 {
+                        for kx in 0..3 {
+                            let iy = oy + ky - 1;
+                            let ix = ox + kx - 1;
+                            window.push(q[cc * h * w + iy * w + ix]);
+                        }
+                    }
+                }
+                let Some(span) = alloc.alloc(bits.len()) else {
+                    alloc.reset();
+                    continue;
+                };
+                if store_bits(chip, &span, &bits) > 0 {
+                    continue; // unrecoverable cells: skip sample
+                }
+                let got = vmm::binary_dot_u8(chip, &span, &window);
+                let want = layers::binary_mac_ref(&bits, &window);
+                total += 1;
+                if got == want {
+                    ok += 1;
+                }
+            }
+            precisions.push(if total == 0 { 1.0 } else { ok as f64 / total as f64 });
+        }
+        self.chip_ms += t0.elapsed().as_secs_f64() * 1e3;
+        precisions
+    }
+
+    /// Conv MACs for one epoch of training (fwd + bwd ~ 3x fwd).
+    fn epoch_train_macs(&self) -> u64 {
+        per_image_conv_macs(&live_counts(&self.sched)) * 3 * self.cfg.train_samples as u64
+    }
+
+    /// Run the full training schedule.
+    pub fn train(&mut self) -> Result<TrainingReport> {
+        let steps = self.train_set.len() / TRAIN_BATCH;
+        assert!(steps > 0, "train set smaller than one batch");
+        let mut epochs = Vec::new();
+        let mut confusion = ConfusionMatrix::new(10);
+        for epoch in 0..self.cfg.epochs {
+            let train_macs = self.epoch_train_macs();
+            let mut order: Vec<usize> = (0..self.train_set.len()).collect();
+            self.rng.shuffle(&mut order);
+            let mut loss_sum = 0.0;
+            let mut correct = 0usize;
+            for s in 0..steps {
+                let idx = &order[s * TRAIN_BATCH..(s + 1) * TRAIN_BATCH];
+                let (xs, ys) = self.train_set.gather(idx);
+                let (loss, corr) = self.train_step(xs, ys)?;
+                loss_sum += loss;
+                correct += corr;
+            }
+            // dynamic pruning between weight updates (paper Fig. 1a loop)
+            if self.cfg.mode.prunes() && self.sched.is_prune_epoch(epoch) {
+                let sims = self.similarity_matrices();
+                let ev = self.sched.evaluate(epoch, &sims);
+                if !ev.pruned.is_empty() {
+                    log::info!(
+                        "epoch {epoch}: pruned {} kernels (rate {:.1}%)",
+                        ev.pruned.len(),
+                        100.0 * self.sched.prune_rate()
+                    );
+                }
+            }
+            let (test_acc, conf) = self.evaluate()?;
+            confusion = conf;
+            let mac_precision = if self.cfg.mode == TrainMode::Hpn && self.cfg.hpn_check_macs > 0 {
+                self.mac_precision()
+            } else {
+                Vec::new()
+            };
+            let rec = EpochRecord {
+                epoch,
+                loss: loss_sum / steps as f64,
+                train_acc: correct as f64 / (steps * TRAIN_BATCH) as f64,
+                test_acc,
+                live_kernels: self.sched.total_live(),
+                live_weights: self.sched.total_live_weights(),
+                train_macs,
+                mac_precision,
+            };
+            log::info!(
+                "[{}] epoch {epoch}: loss {:.4} train {:.3} test {:.3} live {}",
+                self.cfg.mode.name(),
+                rec.loss,
+                rec.train_acc,
+                rec.test_acc,
+                rec.live_kernels
+            );
+            epochs.push(rec);
+        }
+        Ok(TrainingReport {
+            mode: self.cfg.mode.name().into(),
+            epochs,
+            confusion,
+            final_prune_rate: self.sched.prune_rate(),
+            macs_pruned: per_image_conv_macs(&live_counts(&self.sched)),
+            macs_unpruned: per_image_conv_macs(&CHANNELS),
+            artifact_ms: self.artifact_ms,
+            chip_ms: self.chip_ms,
+        })
+    }
+}
+
+fn live_counts(sched: &PruningScheduler) -> [usize; 3] {
+    [sched.live_count(0), sched.live_count(1), sched.live_count(2)]
+}
+
+/// Per-image *inference* conv MACs given live kernel counts. Pruned
+/// output channels also shrink the next layer's input channels.
+pub fn per_image_conv_macs(live: &[usize]) -> u64 {
+    let l1 = layers::conv_macs(live[0], 1, 3, 3, 28, 28, 1);
+    let l2 = layers::conv_macs(live[1], live[0], 3, 3, 14, 14, 1);
+    let l3 = layers::conv_macs(live[2], live[1], 3, 3, 7, 7, 1);
+    l1 + l2 + l3
+}
+
+fn init_params(rng: &mut Rng) -> ParamSet {
+    let mut p = ParamSet::default();
+    let (c1, c2, c3) = (CHANNELS[0], CHANNELS[1], CHANNELS[2]);
+    p.push(Param::he("w1", vec![c1, 1, 3, 3], 9, rng));
+    p.push(Param::zeros("b1", vec![c1]));
+    p.push(Param::he("w2", vec![c2, c1, 3, 3], c1 * 9, rng));
+    p.push(Param::zeros("b2", vec![c2]));
+    p.push(Param::he("w3", vec![c3, c2, 3, 3], c2 * 9, rng));
+    p.push(Param::zeros("b3", vec![c3]));
+    p.push(Param::he("wf", vec![FC_IN, 10], FC_IN, rng));
+    p.push(Param::zeros("bf", vec![10]));
+    p
+}
+
+/// Reference forward activations per conv layer input: [input, act1, act2]
+/// using binarized+scaled, masked weights (mirrors model.mnist_forward).
+fn forward_activations(params: &ParamSet, sched: &PruningScheduler, image: &Tensor) -> Vec<Tensor> {
+    let mut acts = vec![image.clone()];
+    let names = ["w1", "w2", "w3"];
+    let biases = ["b1", "b2", "b3"];
+    let mut x = image.clone();
+    for layer in 0..2 {
+        // only the inputs of conv2 and conv3 are needed beyond the image
+        let w = params.get(names[layer]);
+        let b = &params.get(biases[layer]).data;
+        let mask = sched.mask_f32(layer);
+        let wb = binarized_weight(w, &mask);
+        let mut y = layers::conv2d(&x, &wb, Some(&mask), 1);
+        for (i, v) in y.data_mut().iter_mut().enumerate() {
+            let ch = (i / (x.shape()[2] * x.shape()[3])) % wb.shape()[0];
+            *v = (*v + b[ch]).max(0.0);
+        }
+        let pooled = layers::maxpool2(&y);
+        acts.push(pooled.clone());
+        x = pooled;
+    }
+    acts
+}
+
+fn binarized_weight(w: &Param, mask: &[f32]) -> Tensor {
+    let oc = w.dims[0];
+    let per = w.data.len() / oc;
+    let mut out = Vec::with_capacity(w.data.len());
+    for o in 0..oc {
+        let k = &w.data[o * per..(o + 1) * per];
+        let (bits, alpha) = quant::binarize_kernel(k);
+        for &bit in &bits {
+            out.push(if bit { alpha } else { -alpha } * mask[o]);
+        }
+    }
+    Tensor::new(w.dims.clone(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.txt")
+            .exists()
+    }
+
+    #[test]
+    fn per_image_macs_shrink_with_pruning() {
+        let full = per_image_conv_macs(&[32, 64, 32]);
+        let pruned = per_image_conv_macs(&[22, 45, 22]);
+        assert!(pruned < full);
+        assert_eq!(full, 32 * 9 * 784 + 64 * 32 * 9 * 196 + 32 * 64 * 9 * 49);
+    }
+
+    #[test]
+    fn one_epoch_spn_smoke() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = Engine::open_default().unwrap();
+        let cfg = MnistConfig {
+            epochs: 2,
+            train_samples: 128,
+            test_samples: 64,
+            prune: PruneConfig { warmup_epochs: 1, prune_interval: 1, ..PruneConfig::default() },
+            ..MnistConfig::default()
+        };
+        let mut tr = MnistTrainer::new(cfg, engine);
+        let report = tr.train().unwrap();
+        assert_eq!(report.epochs.len(), 2);
+        // loss must be finite and accuracy within [0,1]
+        assert!(report.epochs.iter().all(|e| e.loss.is_finite()));
+        assert!(report.final_test_acc() >= 0.0 && report.final_test_acc() <= 1.0);
+        assert!(report.epochs[1].loss < report.epochs[0].loss * 1.5);
+    }
+}

@@ -1,0 +1,51 @@
+//! Layer-3 coordinator: the training orchestrator that drives the AOT
+//! train/eval artifacts, the chip simulator (similarity search +
+//! chip-in-the-loop convolution checks), and the pruning scheduler —
+//! the role the ZCU102 FPGA + host plays in the paper's system.
+
+pub mod experiment;
+pub mod mnist;
+pub mod params;
+pub mod pointnet;
+
+pub use experiment::TrainingReport;
+
+/// Which of the paper's three training configurations to run (Fig. 4k /
+/// Fig. 5g): software-unpruned, software-pruned, hardware-pruned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainMode {
+    /// SUN: no pruning at all.
+    Sun,
+    /// SPN: dynamic pruning with the bit-packed software similarity.
+    Spn,
+    /// HPN: dynamic pruning with the *chip's* search-in-memory similarity
+    /// plus chip-in-the-loop MAC-precision checks.
+    Hpn,
+}
+
+impl TrainMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            TrainMode::Sun => "SUN",
+            TrainMode::Spn => "SPN",
+            TrainMode::Hpn => "HPN",
+        }
+    }
+
+    pub fn prunes(self) -> bool {
+        !matches!(self, TrainMode::Sun)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_properties() {
+        assert!(!TrainMode::Sun.prunes());
+        assert!(TrainMode::Spn.prunes());
+        assert!(TrainMode::Hpn.prunes());
+        assert_eq!(TrainMode::Hpn.name(), "HPN");
+    }
+}

@@ -1,0 +1,158 @@
+//! Host-side parameter store: the flat tensor lists whose order must
+//! match the AOT artifacts' flattened signatures (documented in
+//! `python/compile/model.py`). Initialization mirrors the Python He-init
+//! so Rust-initialized weights behave like `model.mnist_init` /
+//! `model.pointnet_init`.
+
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+/// A named, shaped f32 parameter.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Param {
+    pub fn he(name: &str, dims: Vec<usize>, fan_in: usize, rng: &mut Rng) -> Self {
+        let n: usize = dims.iter().product();
+        let scale = (2.0 / fan_in as f64).sqrt();
+        let data = (0..n).map(|_| (rng.normal() * scale) as f32).collect();
+        Param { name: name.to_string(), dims, data }
+    }
+
+    pub fn zeros(name: &str, dims: Vec<usize>) -> Self {
+        let n: usize = dims.iter().product();
+        Param { name: name.to_string(), dims, data: vec![0.0; n] }
+    }
+
+    pub fn to_host(&self) -> HostTensor {
+        HostTensor::F32(self.data.clone(), self.dims.clone())
+    }
+}
+
+/// Parameter list with artifact-order packing / unpacking.
+#[derive(Clone, Debug, Default)]
+pub struct ParamSet {
+    pub params: Vec<Param>,
+}
+
+impl ParamSet {
+    pub fn push(&mut self, p: Param) {
+        self.params.push(p);
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> &Param {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .unwrap_or_else(|| panic!("no param {name:?}"))
+    }
+
+    /// Pack all params as HostTensors in declaration order.
+    pub fn to_host(&self) -> Vec<HostTensor> {
+        self.params.iter().map(Param::to_host).collect()
+    }
+
+    /// Overwrite values from artifact outputs (same order, same shapes).
+    pub fn update_from(&mut self, outs: &[HostTensor]) {
+        assert!(outs.len() >= self.params.len(), "not enough outputs");
+        for (p, o) in self.params.iter_mut().zip(outs) {
+            let data = o.expect_f32(&p.name);
+            assert_eq!(o.dims(), p.dims.as_slice(), "{}: shape drift", p.name);
+            p.data.clear();
+            p.data.extend_from_slice(data);
+        }
+    }
+
+    /// Extract the kernels of a conv/linear layer as flat vectors for
+    /// similarity analysis: for a 4-d (O,I,KH,KW) weight each output
+    /// channel is one kernel; for a 2-d (I,O) weight each *column* is one.
+    pub fn kernels_of(&self, name: &str) -> Vec<Vec<f32>> {
+        let p = self.get(name);
+        match p.dims.len() {
+            4 => {
+                let (o, rest) = (p.dims[0], p.dims[1] * p.dims[2] * p.dims[3]);
+                (0..o).map(|i| p.data[i * rest..(i + 1) * rest].to_vec()).collect()
+            }
+            2 => {
+                let (i_dim, o) = (p.dims[0], p.dims[1]);
+                (0..o)
+                    .map(|c| (0..i_dim).map(|r| p.data[r * o + c]).collect())
+                    .collect()
+            }
+            _ => panic!("{name}: unsupported kernel rank {:?}", p.dims),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn he_init_statistics() {
+        let mut rng = Rng::new(1);
+        let p = Param::he("w", vec![64, 64], 64, &mut rng);
+        let mean: f32 = p.data.iter().sum::<f32>() / p.data.len() as f32;
+        let std: f32 = (p.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+            / p.data.len() as f32)
+            .sqrt();
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((std - (2.0f32 / 64.0).sqrt()).abs() < 0.02, "std {std}");
+    }
+
+    #[test]
+    fn update_from_replaces_data() {
+        let mut set = ParamSet::default();
+        set.push(Param::zeros("a", vec![2, 2]));
+        let outs = vec![HostTensor::F32(vec![1., 2., 3., 4.], vec![2, 2])];
+        set.update_from(&outs);
+        assert_eq!(set.get("a").data, vec![1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn kernels_of_conv_layout() {
+        let mut set = ParamSet::default();
+        set.push(Param {
+            name: "w".into(),
+            dims: vec![2, 1, 2, 2],
+            data: (0..8).map(|i| i as f32).collect(),
+        });
+        let ks = set.kernels_of("w");
+        assert_eq!(ks.len(), 2);
+        assert_eq!(ks[0], vec![0., 1., 2., 3.]);
+        assert_eq!(ks[1], vec![4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn kernels_of_linear_columns() {
+        let mut set = ParamSet::default();
+        // (I=3, O=2) row-major: columns are kernels
+        set.push(Param {
+            name: "w".into(),
+            dims: vec![3, 2],
+            data: vec![1., 10., 2., 20., 3., 30.],
+        });
+        let ks = set.kernels_of("w");
+        assert_eq!(ks, vec![vec![1., 2., 3.], vec![10., 20., 30.]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape drift")]
+    fn update_shape_mismatch_panics() {
+        let mut set = ParamSet::default();
+        set.push(Param::zeros("a", vec![2]));
+        set.update_from(&[HostTensor::F32(vec![0.0; 3], vec![3])]);
+    }
+}

@@ -1,0 +1,511 @@
+//! PointNet training coordinator (paper Fig. 5): point-cloud
+//! classification with dynamic 1x1-convolution-filter pruning and the
+//! INT8 / four-2-bit-cell chip mapping.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::chip::{Chip, ChipConfig, ReadPath};
+use crate::cim::mapping::{store_int8, RowAllocator};
+use crate::cim::similarity as chip_sim;
+use crate::cim::vmm;
+use crate::metrics::ConfusionMatrix;
+use crate::nn::data::{modelnet, Dataset};
+use crate::nn::pointnet::{group_cloud, Grouped, GroupingConfig};
+use crate::nn::quant;
+use crate::pruning::similarity::PackedKernels;
+use crate::pruning::{PruneConfig, PruningScheduler};
+use crate::runtime::{Engine, HostTensor};
+use crate::util::rng::Rng;
+
+use super::experiment::{EpochRecord, TrainingReport};
+use super::params::{Param, ParamSet};
+use super::TrainMode;
+
+pub const TRAIN_BATCH: usize = 8;
+pub const EVAL_BATCH: usize = 32;
+
+/// (fan_in, fan_out) per layer — must mirror model.PN_LAYER_DIMS.
+pub const LAYER_DIMS: [(usize, usize); 10] = [
+    (3, 32),
+    (32, 32),
+    (32, 64),
+    (67, 64),
+    (64, 64),
+    (64, 128),
+    (131, 128),
+    (128, 256),
+    (256, 128),
+    (128, 10),
+];
+pub const MASKED_LAYERS: usize = 8;
+
+#[derive(Clone, Debug)]
+pub struct PointNetConfig {
+    pub epochs: usize,
+    pub train_samples: usize,
+    pub test_samples: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub mode: TrainMode,
+    pub prune: PruneConfig,
+    pub use_pallas: bool,
+    pub grouping: GroupingConfig,
+    /// HPN: INT8 dots sampled per layer per epoch (Fig. 5h).
+    pub hpn_check_macs: usize,
+}
+
+impl Default for PointNetConfig {
+    fn default() -> Self {
+        PointNetConfig {
+            epochs: 12,
+            train_samples: 320, // 40 steps/epoch at batch 8
+            test_samples: 96,
+            lr: 0.05,
+            seed: 7,
+            mode: TrainMode::Spn,
+            prune: PruneConfig {
+                sim_threshold: 0.68,
+                max_prune_rate: 0.60,
+                min_live_per_layer: 4,
+                warmup_epochs: 2,
+                prune_interval: 2,
+                ..PruneConfig::default()
+            },
+            use_pallas: false,
+            grouping: GroupingConfig::default(),
+            hpn_check_macs: 32,
+        }
+    }
+}
+
+/// Pre-grouped dataset: clouds + grouping tensors + labels.
+struct GroupedSet {
+    groups: Vec<Grouped>,
+    labels: Vec<i32>,
+}
+
+impl GroupedSet {
+    fn build(ds: &Dataset, g: &GroupingConfig) -> Self {
+        let groups = (0..ds.len()).map(|i| group_cloud(ds.sample(i), g)).collect();
+        GroupedSet { groups, labels: ds.labels.clone() }
+    }
+
+    fn len(&self) -> usize {
+        self.labels.len()
+    }
+}
+
+pub struct PointNetTrainer {
+    cfg: PointNetConfig,
+    engine: Engine,
+    params: ParamSet,
+    sched: PruningScheduler,
+    train_set: GroupedSet,
+    test_set: GroupedSet,
+    rng: Rng,
+    sim_chip: Option<Chip>,
+    ber_chip: Option<Chip>,
+    artifact_ms: f64,
+    chip_ms: f64,
+}
+
+impl PointNetTrainer {
+    pub fn new(cfg: PointNetConfig, engine: Engine) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let params = init_params(&mut rng.fork(1));
+        let sched = PruningScheduler::new(
+            cfg.prune.clone(),
+            &LAYER_DIMS[..MASKED_LAYERS]
+                .iter()
+                .map(|&(fi, fo)| (fo, fi))
+                .collect::<Vec<_>>(),
+        );
+        let train_raw = modelnet::generate(cfg.train_samples, cfg.seed ^ 0x706e);
+        let test_raw = modelnet::generate(cfg.test_samples, cfg.seed ^ 0x7465);
+        let train_set = GroupedSet::build(&train_raw, &cfg.grouping);
+        let test_set = GroupedSet::build(&test_raw, &cfg.grouping);
+        let (sim_chip, ber_chip) = if cfg.mode == TrainMode::Hpn {
+            let mut chip_rng = rng.fork(2);
+            let mut sim = Chip::new(ChipConfig::default(), &mut chip_rng);
+            let mut ber = Chip::new(
+                ChipConfig { read_path: ReadPath::Electrical, ..ChipConfig::default() },
+                &mut chip_rng,
+            );
+            sim.form();
+            ber.form();
+            (Some(sim), Some(ber))
+        } else {
+            (None, None)
+        };
+        PointNetTrainer {
+            cfg,
+            engine,
+            params,
+            sched,
+            train_set,
+            test_set,
+            rng,
+            sim_chip,
+            ber_chip,
+            artifact_ms: 0.0,
+            chip_ms: 0.0,
+        }
+    }
+
+    pub fn scheduler(&self) -> &PruningScheduler {
+        &self.sched
+    }
+
+    fn train_artifact(&self) -> &'static str {
+        if self.cfg.use_pallas { "pointnet_train" } else { "pointnet_train_fast" }
+    }
+
+    fn eval_artifact(&self) -> &'static str {
+        if self.cfg.use_pallas { "pointnet_eval" } else { "pointnet_eval_fast" }
+    }
+
+    fn masks(&self) -> Vec<HostTensor> {
+        (0..MASKED_LAYERS)
+            .map(|l| HostTensor::F32(self.sched.mask_f32(l), vec![LAYER_DIMS[l].1]))
+            .collect()
+    }
+
+    /// Pack a batch of grouped samples into the artifact input tensors.
+    fn batch_tensors(&self, set: &GroupedSet, idx: &[usize], b: usize) -> Vec<HostTensor> {
+        let g = &self.cfg.grouping;
+        let mut g1 = Vec::with_capacity(b * g.s1 * g.k1 * 3);
+        let mut g2i = Vec::with_capacity(b * g.s2 * g.k2);
+        let mut g2x = Vec::with_capacity(b * g.s2 * g.k2 * 3);
+        let mut c2 = Vec::with_capacity(b * g.s2 * 3);
+        for bi in 0..b {
+            // pad short batches by repeating the first sample
+            let gi = &set.groups[*idx.get(bi).unwrap_or(&idx[0])];
+            g1.extend_from_slice(&gi.g1_xyz);
+            g2i.extend_from_slice(&gi.g2_idx);
+            g2x.extend_from_slice(&gi.g2_xyz);
+            c2.extend_from_slice(&gi.c2_xyz);
+        }
+        vec![
+            HostTensor::F32(g1, vec![b, g.s1, g.k1, 3]),
+            HostTensor::I32(g2i, vec![b, g.s2, g.k2]),
+            HostTensor::F32(g2x, vec![b, g.s2, g.k2, 3]),
+            HostTensor::F32(c2, vec![b, g.s2, 3]),
+        ]
+    }
+
+    fn train_step(&mut self, idx: &[usize]) -> Result<(f64, usize)> {
+        let mut inputs = self.params.to_host();
+        inputs.extend(self.masks());
+        inputs.extend(self.batch_tensors(&self.train_set, idx, TRAIN_BATCH));
+        let ys: Vec<i32> = idx.iter().map(|&i| self.train_set.labels[i]).collect();
+        inputs.push(HostTensor::I32(ys, vec![TRAIN_BATCH]));
+        inputs.push(HostTensor::scalar_f32(self.cfg.lr));
+        let t0 = Instant::now();
+        let name = self.train_artifact();
+        let outs = self.engine.run(name, &inputs)?;
+        self.artifact_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.params.update_from(&outs[..20]);
+        let loss = outs[20].expect_f32("loss")[0] as f64;
+        let correct = outs[21].expect_i32("correct")[0] as usize;
+        Ok((loss, correct))
+    }
+
+    pub fn evaluate(&mut self) -> Result<(f64, ConfusionMatrix)> {
+        let mut confusion = ConfusionMatrix::new(10);
+        let n = self.test_set.len();
+        let mut i = 0;
+        while i < n {
+            let count = EVAL_BATCH.min(n - i);
+            let idx: Vec<usize> = (i..i + count).collect();
+            let mut inputs = self.params.to_host();
+            inputs.extend(self.masks());
+            inputs.extend(self.batch_tensors(&self.test_set, &idx, EVAL_BATCH));
+            let t0 = Instant::now();
+            let name = self.eval_artifact();
+            let outs = self.engine.run(name, &inputs)?;
+            self.artifact_ms += t0.elapsed().as_secs_f64() * 1e3;
+            let logits = outs[0].expect_f32("logits");
+            for (b, &gi) in idx.iter().enumerate() {
+                let row = &logits[b * 10..(b + 1) * 10];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                confusion.record(self.test_set.labels[gi] as usize, pred);
+            }
+            i += count;
+        }
+        Ok((confusion.accuracy(), confusion))
+    }
+
+    /// Global 256-d features for the t-SNE panels (Fig. 5d/e).
+    pub fn features(&mut self) -> Result<(Vec<f32>, Vec<i32>)> {
+        let n = EVAL_BATCH.min(self.test_set.len());
+        let idx: Vec<usize> = (0..n).collect();
+        let mut inputs = self.params.to_host();
+        inputs.extend(self.masks());
+        inputs.extend(self.batch_tensors(&self.test_set, &idx, EVAL_BATCH));
+        let outs = self.engine.run("pointnet_features", &inputs)?;
+        let feats = outs[0].expect_f32("features")[..n * 256].to_vec();
+        Ok((feats, self.test_set.labels[..n].to_vec()))
+    }
+
+    fn layer_name(l: usize) -> String {
+        format!("w{l}")
+    }
+
+    fn similarity_matrices(&mut self) -> Vec<crate::cim::similarity::SimilarityMatrix> {
+        let mut out = Vec::new();
+        for layer in 0..MASKED_LAYERS {
+            let kernels = self.params.kernels_of(&Self::layer_name(layer));
+            let live: Vec<bool> = self.sched.live_mask(layer).to_vec();
+            let t0 = Instant::now();
+            let m = match (&mut self.sim_chip, self.cfg.mode) {
+                (Some(chip), TrainMode::Hpn) => {
+                    // Paper: "Due to hardware constraints, only a subset
+                    // of convolutional layers is deployed on-chip." A
+                    // layer whose kernels exceed the two 512x32 blocks is
+                    // evaluated in software (bit-exact with the chip).
+                    let mut alloc = RowAllocator::for_chip(chip);
+                    let per_row = alloc.data_cols;
+                    let rows_needed: usize = kernels
+                        .iter()
+                        .map(|k| k.len().div_ceil(per_row))
+                        .sum();
+                    if rows_needed <= alloc.capacity_rows() {
+                        let stored = chip_sim::store_kernels(chip, &mut alloc, &kernels);
+                        chip_sim::similarity_matrix(chip, &stored, &live)
+                    } else {
+                        log::debug!("layer {layer}: {rows_needed} rows exceed chip; software path");
+                        PackedKernels::from_kernels(&kernels).similarity_matrix(&live)
+                    }
+                }
+                _ => PackedKernels::from_kernels(&kernels).similarity_matrix(&live),
+            };
+            self.chip_ms += t0.elapsed().as_secs_f64() * 1e3;
+            out.push(m);
+        }
+        out
+    }
+
+    /// INT8 chip-in-the-loop precision per layer (Fig. 5h): store the
+    /// quantized filter on the electrical chip (4 cells per weight) and
+    /// compare `int8_dot` against the exact integer reference.
+    fn mac_precision(&mut self) -> Vec<f64> {
+        let Some(chip) = self.ber_chip.as_mut() else {
+            return Vec::new();
+        };
+        let t0 = Instant::now();
+        let mut rng = self.rng.fork(0x1b7);
+        let mut precisions = Vec::new();
+        for layer in 0..3 {
+            // the paper deploys a subset of conv layers on-chip
+            let kernels = self.params.kernels_of(&Self::layer_name(layer));
+            let mut alloc = RowAllocator::for_chip(chip);
+            let mut ok = 0;
+            let mut total = 0;
+            for _ in 0..self.cfg.hpn_check_macs {
+                let k_idx = rng.below(kernels.len());
+                if !self.sched.live_mask(layer)[k_idx] {
+                    continue;
+                }
+                let (wq, _scale) = quant::quantize_channel_int8(&kernels[k_idx]);
+                // input vector: geometry-derived for layer 0, random
+                // activation-like int8 for deeper layers
+                let x: Vec<i8> = if layer == 0 {
+                    let g = &self.train_set.groups[rng.below(self.train_set.len())];
+                    let (q, _) = quant::quantize_activations_i8(&g.g1_xyz[..wq.len().min(g.g1_xyz.len())]);
+                    let mut v = q;
+                    while v.len() < wq.len() {
+                        v.push(0);
+                    }
+                    v
+                } else {
+                    (0..wq.len()).map(|_| (rng.below(200) as i16 - 100) as i8).collect()
+                };
+                let Some(span) = alloc.alloc(4 * wq.len()) else {
+                    alloc.reset();
+                    continue;
+                };
+                if store_int8(chip, &span, &wq) > 0 {
+                    continue;
+                }
+                let got = vmm::int8_dot(chip, &span, &x);
+                let want = vmm::int8_dot_ref(&wq, &x);
+                total += 1;
+                if got == want {
+                    ok += 1;
+                }
+            }
+            precisions.push(if total == 0 { 1.0 } else { ok as f64 / total as f64 });
+        }
+        self.chip_ms += t0.elapsed().as_secs_f64() * 1e3;
+        precisions
+    }
+
+    fn epoch_train_macs(&self) -> u64 {
+        let live: Vec<usize> = (0..MASKED_LAYERS).map(|l| self.sched.live_count(l)).collect();
+        per_cloud_macs(&self.cfg.grouping, &live) * 3 * self.cfg.train_samples as u64
+    }
+
+    pub fn train(&mut self) -> Result<TrainingReport> {
+        let steps = self.train_set.len() / TRAIN_BATCH;
+        assert!(steps > 0, "train set smaller than one batch");
+        let mut epochs = Vec::new();
+        let mut confusion = ConfusionMatrix::new(10);
+        for epoch in 0..self.cfg.epochs {
+            let train_macs = self.epoch_train_macs();
+            let mut order: Vec<usize> = (0..self.train_set.len()).collect();
+            self.rng.shuffle(&mut order);
+            let mut loss_sum = 0.0;
+            let mut correct = 0usize;
+            for s in 0..steps {
+                let idx = &order[s * TRAIN_BATCH..(s + 1) * TRAIN_BATCH];
+                let (loss, corr) = self.train_step(idx)?;
+                loss_sum += loss;
+                correct += corr;
+            }
+            if self.cfg.mode.prunes() && self.sched.is_prune_epoch(epoch) {
+                let sims = self.similarity_matrices();
+                let ev = self.sched.evaluate(epoch, &sims);
+                if !ev.pruned.is_empty() {
+                    log::info!(
+                        "epoch {epoch}: pruned {} filters (rate {:.1}%)",
+                        ev.pruned.len(),
+                        100.0 * self.sched.prune_rate()
+                    );
+                }
+            }
+            let (test_acc, conf) = self.evaluate()?;
+            confusion = conf;
+            let mac_precision = if self.cfg.mode == TrainMode::Hpn && self.cfg.hpn_check_macs > 0 {
+                self.mac_precision()
+            } else {
+                Vec::new()
+            };
+            let rec = EpochRecord {
+                epoch,
+                loss: loss_sum / steps as f64,
+                train_acc: correct as f64 / (steps * TRAIN_BATCH) as f64,
+                test_acc,
+                live_kernels: self.sched.total_live(),
+                live_weights: self.sched.total_live_weights(),
+                train_macs,
+                mac_precision,
+            };
+            log::info!(
+                "[{}] epoch {epoch}: loss {:.4} train {:.3} test {:.3} live {}",
+                self.cfg.mode.name(),
+                rec.loss,
+                rec.train_acc,
+                rec.test_acc,
+                rec.live_kernels
+            );
+            epochs.push(rec);
+        }
+        let live: Vec<usize> = (0..MASKED_LAYERS).map(|l| self.sched.live_count(l)).collect();
+        let full: Vec<usize> = LAYER_DIMS[..MASKED_LAYERS].iter().map(|&(_, fo)| fo).collect();
+        Ok(TrainingReport {
+            mode: self.cfg.mode.name().into(),
+            epochs,
+            confusion,
+            final_prune_rate: self.sched.prune_rate(),
+            macs_pruned: per_cloud_macs(&self.cfg.grouping, &live),
+            macs_unpruned: per_cloud_macs(&self.cfg.grouping, &full),
+            artifact_ms: self.artifact_ms,
+            chip_ms: self.chip_ms,
+        })
+    }
+}
+
+/// Per-cloud inference MACs of the pointwise-conv stack given live filter
+/// counts (the 1x1-conv layers the paper's Fig. 5i meters).
+pub fn per_cloud_macs(g: &GroupingConfig, live: &[usize]) -> u64 {
+    assert_eq!(live.len(), MASKED_LAYERS);
+    // effective input width per layer: geometry dims are never pruned;
+    // feature dims shrink to the previous layer's live count
+    let fi = [
+        3,
+        live[0],
+        live[1],
+        live[2] + 3,
+        live[3],
+        live[4],
+        live[5] + 3,
+        live[6],
+    ];
+    let points = [
+        g.s1 * g.k1,
+        g.s1 * g.k1,
+        g.s1 * g.k1,
+        g.s2 * g.k2,
+        g.s2 * g.k2,
+        g.s2 * g.k2,
+        g.s2,
+        g.s2,
+    ];
+    (0..MASKED_LAYERS)
+        .map(|l| (points[l] * fi[l] * live[l]) as u64)
+        .sum()
+}
+
+fn init_params(rng: &mut Rng) -> ParamSet {
+    let mut p = ParamSet::default();
+    for (l, &(fi, fo)) in LAYER_DIMS.iter().enumerate() {
+        p.push(Param::he(&format!("w{l}"), vec![fi, fo], fi, rng));
+        p.push(Param::zeros(&format!("b{l}"), vec![fo]));
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.txt")
+            .exists()
+    }
+
+    #[test]
+    fn macs_shrink_with_pruning() {
+        let g = GroupingConfig::default();
+        let full: Vec<usize> = LAYER_DIMS[..MASKED_LAYERS].iter().map(|&(_, fo)| fo).collect();
+        let half: Vec<usize> = full.iter().map(|&f| f / 2).collect();
+        assert!(per_cloud_macs(&g, &half) < per_cloud_macs(&g, &full) / 2);
+    }
+
+    #[test]
+    fn param_count_matches_artifact() {
+        let mut rng = Rng::new(1);
+        let p = init_params(&mut rng);
+        assert_eq!(p.len(), 20);
+        assert_eq!(p.get("w3").dims, vec![67, 64]);
+        assert_eq!(p.get("w9").dims, vec![128, 10]);
+    }
+
+    #[test]
+    fn one_epoch_spn_smoke() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = Engine::open_default().unwrap();
+        let cfg = PointNetConfig {
+            epochs: 2,
+            train_samples: 32,
+            test_samples: 32,
+            prune: PruneConfig { warmup_epochs: 1, prune_interval: 1, ..PruneConfig::default() },
+            ..PointNetConfig::default()
+        };
+        let mut tr = PointNetTrainer::new(cfg, engine);
+        let report = tr.train().unwrap();
+        assert_eq!(report.epochs.len(), 2);
+        assert!(report.epochs.iter().all(|e| e.loss.is_finite()));
+    }
+}

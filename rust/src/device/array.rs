@@ -1,0 +1,286 @@
+//! 1T1R crossbar array: a rows x cols grid of [`RramCell`]s with word-line
+//! (row) select and per-column source/bit lines — the paper's 512x32
+//! blocks. The array exposes *electrical* operations (form, program,
+//! read); logic semantics live in [`crate::chip`].
+
+use crate::util::rng::Rng;
+
+use super::cell::RramCell;
+use super::DeviceConfig;
+
+/// A 1T1R crossbar of `rows x cols` cells.
+pub struct Array1T1R {
+    cfg: DeviceConfig,
+    rows: usize,
+    cols: usize,
+    cells: Vec<RramCell>,
+    rng: Rng,
+    formed: bool,
+}
+
+/// Result of forming a whole array (Fig. 2i).
+#[derive(Clone, Debug)]
+pub struct FormingReport {
+    pub vforms: Vec<f64>,
+    pub yield_frac: f64,
+}
+
+/// Result of a multi-level programming campaign (Fig. 2j/k/l).
+#[derive(Clone, Debug)]
+pub struct ProgrammingReport {
+    pub levels: usize,
+    pub targets: Vec<f64>,
+    /// Final read resistance of each programmed cell.
+    pub actual: Vec<f64>,
+    /// Target index each cell was assigned.
+    pub assigned: Vec<usize>,
+    /// Fraction of cells within the +-tolerance window.
+    pub success_frac: f64,
+    /// Std of (actual - target) over successful cells (kOhm).
+    pub sigma_kohm: f64,
+}
+
+impl Array1T1R {
+    /// Fabricate an array with independent per-cell statistics.
+    pub fn fabricate(rows: usize, cols: usize, cfg: DeviceConfig, rng: &mut Rng) -> Self {
+        let mut cell_rng = rng.fork(0x1717);
+        let cells = (0..rows * cols)
+            .map(|_| RramCell::fabricate(&cfg, &mut cell_rng))
+            .collect();
+        Array1T1R { cfg, rows, cols, cells, rng: rng.fork(0x5e5e), formed: false }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn cfg(&self) -> &DeviceConfig {
+        &self.cfg
+    }
+
+    #[inline]
+    fn idx(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.rows && col < self.cols);
+        row * self.cols + col
+    }
+
+    pub fn cell(&self, row: usize, col: usize) -> &RramCell {
+        &self.cells[self.idx(row, col)]
+    }
+
+    pub fn cell_mut(&mut self, row: usize, col: usize) -> &mut RramCell {
+        let i = self.idx(row, col);
+        &mut self.cells[i]
+    }
+
+    /// Electroform every cell with a voltage ramp (Fig. 2i). The ramp
+    /// reaches `cfg.vform_max`, which covers the entire N(1.89, 0.18)
+    /// distribution — hence the paper's 100 % forming yield.
+    pub fn form_all(&mut self) -> FormingReport {
+        let cfg = self.cfg.clone();
+        let mut vforms = Vec::with_capacity(self.cells.len());
+        let mut formed = 0usize;
+        let mut rng = self.rng.fork(1);
+        for cell in &mut self.cells {
+            vforms.push(cell.vform());
+            if cell.form(cfg.vform_max, &cfg, &mut rng) {
+                formed += 1;
+            }
+        }
+        self.formed = true;
+        FormingReport {
+            yield_frac: formed as f64 / (self.cells.len().max(1)) as f64,
+            vforms,
+        }
+    }
+
+    pub fn is_formed(&self) -> bool {
+        self.formed
+    }
+
+    /// Write-verify one cell to a resistance target. Returns pulses used.
+    pub fn program_cell(&mut self, row: usize, col: usize, target_kohm: f64) -> Option<usize> {
+        let cfg = self.cfg.clone();
+        let mut rng = self.rng.fork((row as u64) << 20 | col as u64);
+        let i = self.idx(row, col);
+        self.cells[i].write_verify(target_kohm, &cfg, &mut rng)
+    }
+
+    /// Sensed resistance of one cell (with read noise).
+    pub fn read_cell(&mut self, row: usize, col: usize) -> f64 {
+        let cfg = self.cfg.clone();
+        let i = self.idx(row, col);
+        let r = self.cells[i].read(&cfg, &mut self.rng);
+        r
+    }
+
+    /// Word-parallel read: activate WL `row`, sense all columns against a
+    /// single reference; returns one bit per column (R < Rref -> 1).
+    /// Models the paper's digital CIM read: every column sees its own
+    /// resistive divider + inverter chain.
+    pub fn read_row_bits(&mut self, row: usize, rref_kohm: f64) -> Vec<bool> {
+        let cfg = self.cfg.clone();
+        let mut out = Vec::with_capacity(self.cols);
+        for col in 0..self.cols {
+            let i = self.idx(row, col);
+            let mut r = self.cells[i].read(&cfg, &mut self.rng);
+            if self.rng.chance(cfg.transient_read_flip_prob) {
+                // a marginal sense: push the value across the reference
+                r = if r < rref_kohm { rref_kohm * 1.01 } else { rref_kohm * 0.99 };
+            }
+            out.push(r < rref_kohm);
+        }
+        out
+    }
+
+    /// Run the Fig. 2j/k/l campaign: program a `side x side` subarray
+    /// round-robin across `levels` targets and report statistics.
+    pub fn programming_campaign(&mut self, side: usize, levels: usize) -> ProgrammingReport {
+        assert!(side <= self.rows && side <= self.cols.max(side.min(self.cols)));
+        let targets = self.cfg.level_targets(levels);
+        let mut actual = Vec::new();
+        let mut assigned = Vec::new();
+        let mut ok = 0usize;
+        let mut resid = Vec::new();
+        let cols = self.cols;
+        for r in 0..side {
+            for c in 0..side.min(cols) {
+                let level = (r * side + c) % levels;
+                let t = targets[level];
+                let success = self.program_cell(r, c, t).is_some();
+                let got = self.read_cell(r, c);
+                if success && (got - t).abs() <= self.cfg.prog_tolerance_kohm + 0.5 {
+                    ok += 1;
+                    resid.push(got - t);
+                }
+                actual.push(got);
+                assigned.push(level);
+            }
+        }
+        let n = actual.len().max(1);
+        let sigma = if resid.is_empty() {
+            0.0
+        } else {
+            let m = resid.iter().sum::<f64>() / resid.len() as f64;
+            (resid.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / resid.len() as f64).sqrt()
+        };
+        ProgrammingReport {
+            levels,
+            targets,
+            actual,
+            assigned,
+            success_frac: ok as f64 / n as f64,
+            sigma_kohm: sigma,
+        }
+    }
+
+    /// Count stuck cells (for ECC sizing tests).
+    pub fn stuck_count(&self) -> usize {
+        self.cells.iter().filter(|c| c.is_stuck()).count()
+    }
+
+    /// Indices of stuck cells per row (col list) — consumed by chip ECC.
+    pub fn stuck_map(&self) -> Vec<Vec<usize>> {
+        (0..self.rows)
+            .map(|r| {
+                (0..self.cols)
+                    .filter(|&c| self.cells[r * self.cols + c].is_stuck())
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Advance retention time for the whole array.
+    pub fn retain_all(&mut self, t_seconds: f64) {
+        let cfg = self.cfg.clone();
+        let mut rng = self.rng.fork(0xdead);
+        for cell in &mut self.cells {
+            cell.retain(t_seconds, &cfg, &mut rng);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::summarize;
+
+    fn small_array(seed: u64, cfg: DeviceConfig) -> Array1T1R {
+        let mut rng = Rng::new(seed);
+        let mut a = Array1T1R::fabricate(64, 32, cfg, &mut rng);
+        a.form_all();
+        a
+    }
+
+    #[test]
+    fn forming_yield_is_full_at_max_ramp() {
+        let mut rng = Rng::new(1);
+        let mut a = Array1T1R::fabricate(128, 32, DeviceConfig::ideal(), &mut rng);
+        let rep = a.form_all();
+        assert_eq!(rep.vforms.len(), 128 * 32);
+        assert!((rep.yield_frac - 1.0).abs() < 1e-12);
+        let s = summarize(&rep.vforms);
+        assert!((s.mean - 1.89).abs() < 0.02, "vform mean {}", s.mean);
+        assert!((s.std - 0.18).abs() < 0.03, "vform std {}", s.std);
+    }
+
+    #[test]
+    fn binary_row_readout_is_exact_without_faults() {
+        let mut a = small_array(2, DeviceConfig::ideal());
+        // program row 3: alternating LRS/HRS
+        for col in 0..32 {
+            let target = if col % 2 == 0 { 5.0 } else { 120.0 };
+            assert!(a.program_cell(3, col, target).is_some());
+        }
+        let bits = a.read_row_bits(3, a.cfg().rref_1bit());
+        for (col, b) in bits.iter().enumerate() {
+            assert_eq!(*b, col % 2 == 0, "col {col}");
+        }
+    }
+
+    #[test]
+    fn programming_campaign_matches_paper_stats() {
+        let mut a = small_array(3, DeviceConfig::default());
+        let rep = a.programming_campaign(32, 16);
+        assert_eq!(rep.targets.len(), 16);
+        assert!(
+            rep.success_frac > 0.99,
+            "success {} should be ~99.8 %",
+            rep.success_frac
+        );
+        assert!(
+            rep.sigma_kohm < 1.3,
+            "residual sigma {} should be ~0.88 kOhm",
+            rep.sigma_kohm
+        );
+    }
+
+    #[test]
+    fn stuck_map_shape() {
+        let cfg = DeviceConfig { stuck_fault_prob: 0.05, ..DeviceConfig::default() };
+        let a = small_array(4, cfg);
+        let map = a.stuck_map();
+        assert_eq!(map.len(), 64);
+        let total: usize = map.iter().map(|r| r.len()).sum();
+        assert_eq!(total, a.stuck_count());
+        assert!(total > 0, "with 5 % fault prob some cells must be stuck");
+    }
+
+    #[test]
+    fn retention_preserves_binary_readout() {
+        let mut a = small_array(5, DeviceConfig::default());
+        for col in 0..32 {
+            let target = if col < 16 { 5.0 } else { 120.0 };
+            a.program_cell(0, col, target);
+        }
+        a.retain_all(4.0e6);
+        let bits = a.read_row_bits(0, a.cfg().rref_1bit());
+        for (col, b) in bits.iter().enumerate() {
+            assert_eq!(*b, col < 16, "retention flipped col {col}");
+        }
+    }
+}

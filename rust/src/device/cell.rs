@@ -1,0 +1,317 @@
+//! Single 1T1R cell model: forming, bipolar switching, multi-level
+//! write-verify programming, retention walk, endurance degradation, and
+//! stuck-at faults. The resistive medium is the Ta2O5 filament; the series
+//! NMOS only gates access (we model it as ideal select).
+
+use crate::util::rng::Rng;
+
+use super::DeviceConfig;
+
+/// Discrete life-cycle state of a cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellState {
+    /// As-fabricated: no conductive filament yet; resistance is huge.
+    Pristine,
+    /// Filament formed; cell switches normally.
+    Formed,
+    /// Permanently stuck (fabrication defect or endurance failure).
+    StuckLrs,
+    StuckHrs,
+}
+
+/// One TiN/TaOx/Ta2O5/TiN 1T1R cell.
+#[derive(Clone, Debug)]
+pub struct RramCell {
+    state: CellState,
+    /// Present resistance in kOhm.
+    r_kohm: f64,
+    /// Electroforming voltage of this particular cell (sampled at build).
+    vform: f64,
+    /// SET/RESET thresholds of this cell (sampled within the paper range).
+    vset: f64,
+    vreset: f64,
+    /// Switching cycles experienced (endurance).
+    cycles: u64,
+    /// Endurance degradation factor in [0,1]; 1 = fresh window.
+    window: f64,
+}
+
+/// Pristine-state resistance before forming (GOhm-range, in kOhm units).
+const PRISTINE_KOHM: f64 = 1.0e6;
+
+impl RramCell {
+    /// Fabricate a cell: samples its forming voltage, thresholds, and
+    /// whether it carries a stuck-at fabrication defect.
+    pub fn fabricate(cfg: &DeviceConfig, rng: &mut Rng) -> Self {
+        let vform = rng.normal_ms(cfg.vform_mean, cfg.vform_std).max(0.5);
+        let vset = rng.range(cfg.vset_lo, cfg.vset_hi);
+        let vreset = rng.range(cfg.vreset_lo, cfg.vreset_hi);
+        let state = if rng.chance(cfg.stuck_fault_prob) {
+            if rng.chance(0.5) {
+                CellState::StuckLrs
+            } else {
+                CellState::StuckHrs
+            }
+        } else {
+            CellState::Pristine
+        };
+        let r_kohm = match state {
+            CellState::StuckLrs => cfg.lrs_kohm,
+            CellState::StuckHrs => cfg.hrs_kohm * 2.0,
+            _ => PRISTINE_KOHM,
+        };
+        RramCell { state, r_kohm, vform, vset, vreset, cycles: 0, window: 1.0 }
+    }
+
+    pub fn state(&self) -> CellState {
+        self.state
+    }
+
+    pub fn is_stuck(&self) -> bool {
+        matches!(self.state, CellState::StuckLrs | CellState::StuckHrs)
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    pub fn vform(&self) -> f64 {
+        self.vform
+    }
+
+    /// Apply a forming ramp up to `v_max`. Returns true if the filament
+    /// formed (v_max >= this cell's forming voltage). Stuck cells *do*
+    /// form a filament (they conduct; the defect shows up later as a
+    /// programming failure), which is how the paper reports 100 % forming
+    /// yield on a chip that still needs ECC. After forming, a healthy
+    /// cell lands in a stochastic intermediate state — the paper uses
+    /// exactly this as its random weight initialization ("forming mode
+    /// ... random weights").
+    pub fn form(&mut self, v_max: f64, cfg: &DeviceConfig, rng: &mut Rng) -> bool {
+        match self.state {
+            CellState::Pristine if v_max >= self.vform => {
+                self.state = CellState::Formed;
+                self.r_kohm = rng.range(cfg.lrs_kohm, cfg.hrs_kohm);
+                true
+            }
+            CellState::Formed | CellState::StuckLrs | CellState::StuckHrs => true,
+            _ => false,
+        }
+    }
+
+    /// Full SET pulse: HRS -> LRS (bipolar positive).
+    pub fn set_pulse(&mut self, v: f64, cfg: &DeviceConfig, rng: &mut Rng) {
+        if self.state != CellState::Formed || v < self.vset {
+            return;
+        }
+        self.cycles += 1;
+        self.degrade(cfg, rng);
+        let sigma = cfg.prog_sigma_kohm;
+        self.r_kohm = (cfg.lrs_kohm + rng.normal_ms(0.0, sigma)).max(1.0);
+    }
+
+    /// Full RESET pulse: LRS -> HRS (bipolar negative). The effective HRS
+    /// shrinks as the endurance window degrades.
+    pub fn reset_pulse(&mut self, v: f64, cfg: &DeviceConfig, rng: &mut Rng) {
+        if self.state != CellState::Formed || v > self.vreset {
+            return;
+        }
+        self.cycles += 1;
+        self.degrade(cfg, rng);
+        let hrs_eff = cfg.lrs_kohm + (cfg.hrs_kohm - cfg.lrs_kohm) * self.window;
+        let sigma = cfg.prog_sigma_kohm * 3.0; // HRS is noisier than LRS
+        self.r_kohm = (hrs_eff + rng.normal_ms(0.0, sigma)).max(cfg.lrs_kohm);
+    }
+
+    /// One incremental program pulse toward `target_kohm` (part of a
+    /// write-verify loop): moves a fraction toward target plus noise.
+    pub fn program_pulse(&mut self, target_kohm: f64, cfg: &DeviceConfig, rng: &mut Rng) {
+        if self.state != CellState::Formed {
+            return;
+        }
+        self.cycles += 1;
+        let step = 0.6 * (target_kohm - self.r_kohm);
+        self.r_kohm = (self.r_kohm + step + rng.normal_ms(0.0, cfg.prog_sigma_kohm)).max(1.0);
+    }
+
+    /// Write-verify to a resistance target. Returns the number of pulses
+    /// used, or None if the tolerance window was not reached (stuck or
+    /// out of iterations) — the 0.2 % failures of Fig. 2j.
+    pub fn write_verify(
+        &mut self,
+        target_kohm: f64,
+        cfg: &DeviceConfig,
+        rng: &mut Rng,
+    ) -> Option<usize> {
+        for it in 0..cfg.prog_max_iters {
+            if (self.read(cfg, rng) - target_kohm).abs() <= cfg.prog_tolerance_kohm {
+                return Some(it);
+            }
+            self.program_pulse(target_kohm, cfg, rng);
+        }
+        let ok = (self.read(cfg, rng) - target_kohm).abs() <= cfg.prog_tolerance_kohm;
+        ok.then_some(cfg.prog_max_iters)
+    }
+
+    /// Sensed resistance at the standard 0.3 V read (with read noise).
+    pub fn read(&self, cfg: &DeviceConfig, rng: &mut Rng) -> f64 {
+        let noise = 1.0 + cfg.read_noise_rel * rng.normal();
+        (self.r_kohm * noise).max(0.5)
+    }
+
+    /// Noise-free resistance (for assertions and energy models).
+    pub fn resistance_kohm(&self) -> f64 {
+        self.r_kohm
+    }
+
+    /// Read current (mA) at voltage `v`: I = V/R with the quasi-static
+    /// switching transitions of Fig. 2e applied first.
+    pub fn iv_current(&mut self, v: f64, cfg: &DeviceConfig, rng: &mut Rng) -> f64 {
+        if self.state == CellState::Formed {
+            if v >= self.vset {
+                self.set_pulse(v, cfg, rng);
+            } else if v <= self.vreset {
+                self.reset_pulse(v, cfg, rng);
+            }
+        }
+        v / self.r_kohm
+    }
+
+    /// Advance retention time to `t_seconds` (log-scaled random walk, no
+    /// systematic drift — Fig. 2g shows none at room temperature).
+    pub fn retain(&mut self, t_seconds: f64, cfg: &DeviceConfig, rng: &mut Rng) {
+        if self.state != CellState::Formed || t_seconds <= 1.0 {
+            return;
+        }
+        // amplitude grows with log(t), normalized to the paper's 4e6 s span
+        let scale = (t_seconds.ln() / 4.0e6f64.ln()).clamp(0.0, 1.5);
+        let rel = cfg.retention_rel_4e6s * scale * rng.normal();
+        self.r_kohm = (self.r_kohm * (1.0 + rel)).max(1.0);
+    }
+
+    /// Endurance degradation per switching cycle; may kill the cell.
+    fn degrade(&mut self, cfg: &DeviceConfig, rng: &mut Rng) {
+        // lognormal per-cycle wear, mean cfg.endurance_degrade_rate
+        let wear = cfg.endurance_degrade_rate * rng.lognormal(0.0, 0.5);
+        self.window = (self.window - wear).max(0.0);
+        if self.window < 0.05 {
+            // window collapse: filament can no longer rupture
+            self.state = CellState::StuckLrs;
+            self.r_kohm = cfg.lrs_kohm;
+        }
+    }
+
+    /// Remaining endurance window in [0,1].
+    pub fn window(&self) -> f64 {
+        self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(cfg: &DeviceConfig, seed: u64) -> (RramCell, Rng) {
+        let mut rng = Rng::new(seed);
+        let mut c = RramCell::fabricate(cfg, &mut rng);
+        c.form(cfg.vform_max, cfg, &mut rng);
+        (c, rng)
+    }
+
+    #[test]
+    fn pristine_until_formed() {
+        let cfg = DeviceConfig::ideal();
+        let mut rng = Rng::new(1);
+        let mut c = RramCell::fabricate(&cfg, &mut rng);
+        assert_eq!(c.state(), CellState::Pristine);
+        assert!(c.resistance_kohm() > 1e5);
+        // under-voltage forming fails
+        assert!(!c.form(1.0, &cfg, &mut rng) || c.vform() <= 1.0);
+        assert!(c.form(cfg.vform_max, &cfg, &mut rng));
+        assert_eq!(c.state(), CellState::Formed);
+        assert!(c.resistance_kohm() <= cfg.hrs_kohm);
+    }
+
+    #[test]
+    fn set_reset_switches_states() {
+        let cfg = DeviceConfig::ideal();
+        let (mut c, mut rng) = mk(&cfg, 2);
+        c.set_pulse(1.0, &cfg, &mut rng);
+        assert!((c.resistance_kohm() - cfg.lrs_kohm).abs() < 1.0);
+        c.reset_pulse(-1.2, &cfg, &mut rng);
+        assert!(c.resistance_kohm() > 0.8 * cfg.hrs_kohm);
+        // sub-threshold pulses do nothing
+        let r = c.resistance_kohm();
+        c.set_pulse(0.3, &cfg, &mut rng);
+        assert_eq!(c.resistance_kohm(), r);
+    }
+
+    #[test]
+    fn write_verify_hits_window() {
+        let cfg = DeviceConfig::default();
+        let mut ok = 0;
+        for seed in 0..200 {
+            let (mut c, mut rng) = mk(&cfg, seed);
+            if c.is_stuck() {
+                continue;
+            }
+            if c.write_verify(25.0, &cfg, &mut rng).is_some() {
+                let r = c.resistance_kohm();
+                assert!((r - 25.0).abs() <= cfg.prog_tolerance_kohm + 3.0 * cfg.read_noise_rel * 25.0);
+                ok += 1;
+            }
+        }
+        assert!(ok >= 190, "write-verify success too low: {ok}/200");
+    }
+
+    #[test]
+    fn stuck_cells_do_not_program() {
+        let cfg = DeviceConfig { stuck_fault_prob: 1.0, ..DeviceConfig::default() };
+        let mut rng = Rng::new(3);
+        let mut c = RramCell::fabricate(&cfg, &mut rng);
+        assert!(c.is_stuck());
+        assert!(c.write_verify(25.0, &cfg, &mut rng).is_none());
+    }
+
+    #[test]
+    fn iv_sweep_shows_hysteresis() {
+        let cfg = DeviceConfig::ideal();
+        let (mut c, mut rng) = mk(&cfg, 5);
+        c.reset_pulse(-1.2, &cfg, &mut rng); // start in HRS
+        let i_before = c.iv_current(0.3, &cfg, &mut rng);
+        c.iv_current(1.0, &cfg, &mut rng); // triggers SET
+        let i_after = c.iv_current(0.3, &cfg, &mut rng);
+        assert!(
+            i_after > 5.0 * i_before,
+            "expected LRS current jump: {i_before} -> {i_after}"
+        );
+    }
+
+    #[test]
+    fn endurance_degrades_and_eventually_fails() {
+        let cfg = DeviceConfig {
+            endurance_degrade_rate: 1e-3, // accelerated wear for the test
+            ..DeviceConfig::ideal()
+        };
+        let (mut c, mut rng) = mk(&cfg, 7);
+        let mut cycles = 0u64;
+        while !c.is_stuck() && cycles < 100_000 {
+            c.set_pulse(1.0, &cfg, &mut rng);
+            c.reset_pulse(-1.2, &cfg, &mut rng);
+            cycles += 2;
+        }
+        assert!(c.is_stuck(), "accelerated wear should kill the cell");
+        assert!(cycles > 100, "died unrealistically fast: {cycles}");
+    }
+
+    #[test]
+    fn retention_stays_within_band() {
+        let cfg = DeviceConfig::default();
+        let (mut c, mut rng) = mk(&cfg, 11);
+        c.write_verify(25.0, &cfg, &mut rng).unwrap();
+        let r0 = c.resistance_kohm();
+        c.retain(4.0e6, &cfg, &mut rng);
+        let drift = (c.resistance_kohm() - r0).abs() / r0;
+        assert!(drift < 0.10, "retention drift too large: {drift}");
+    }
+}

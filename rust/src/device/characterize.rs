@@ -1,0 +1,209 @@
+//! Device-characterization routines regenerating every panel of the
+//! paper's Fig. 2. Each function returns plain data series; the
+//! `fig2_device` bench target and the `chip_characterization` example
+//! format them as the paper's panels.
+
+use crate::util::rng::Rng;
+use crate::util::stats::{summarize, Summary};
+
+use super::{Array1T1R, DeviceConfig, RramCell};
+
+/// Fig. 2e: quasi-static I-V sweep. Returns (voltage, current mA) pairs
+/// over a +/- sweep showing bipolar hysteresis.
+pub fn iv_sweep(cfg: &DeviceConfig, seed: u64, points_per_leg: usize) -> Vec<(f64, f64)> {
+    let mut rng = Rng::new(seed);
+    let mut cell = RramCell::fabricate(cfg, &mut rng);
+    cell.form(cfg.vform_max, cfg, &mut rng);
+    cell.reset_pulse(-1.2, cfg, &mut rng); // start from HRS
+    let mut out = Vec::new();
+    let legs: [(f64, f64); 4] = [(0.0, 1.1), (1.1, 0.0), (0.0, -1.2), (-1.2, 0.0)];
+    for (from, to) in legs {
+        for i in 0..points_per_leg {
+            let v = from + (to - from) * i as f64 / (points_per_leg - 1) as f64;
+            out.push((v, cell.iv_current(v, cfg, &mut rng)));
+        }
+    }
+    out
+}
+
+/// Fig. 2f: program a single cell to `n` distinct levels; returns the
+/// read-back resistance per level. With the default config all 128 levels
+/// separate cleanly.
+pub fn multilevel_states(cfg: &DeviceConfig, seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut cell = RramCell::fabricate(cfg, &mut rng);
+    cell.form(cfg.vform_max, cfg, &mut rng);
+    let targets = cfg.level_targets(n);
+    targets
+        .iter()
+        .map(|&t| {
+            cell.write_verify(t, cfg, &mut rng);
+            cell.read(cfg, &mut rng)
+        })
+        .collect()
+}
+
+/// Fig. 2g: retention traces. Programs `n_states` cells across the
+/// resistance range and reads them at log-spaced times up to 4e6 s.
+/// Returns (times, per-state resistance series).
+pub fn retention_traces(
+    cfg: &DeviceConfig,
+    seed: u64,
+    n_states: usize,
+    n_times: usize,
+) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let mut rng = Rng::new(seed);
+    let targets = cfg.level_targets(n_states);
+    let times: Vec<f64> = (0..n_times)
+        .map(|i| 10f64.powf(1.0 + 5.6 * i as f64 / (n_times - 1) as f64))
+        .collect();
+    let mut traces = Vec::new();
+    for &t_kohm in &targets {
+        let mut cell = RramCell::fabricate(cfg, &mut rng);
+        cell.form(cfg.vform_max, cfg, &mut rng);
+        cell.write_verify(t_kohm, cfg, &mut rng);
+        let mut series = Vec::new();
+        let mut prev_t = 1.0;
+        for &t in &times {
+            cell.retain(t - prev_t, cfg, &mut rng);
+            prev_t = t;
+            series.push(cell.read(cfg, &mut rng));
+        }
+        traces.push(series);
+    }
+    (times, traces)
+}
+
+/// Fig. 2h: endurance cycling. Returns (cycle, lrs, hrs) samples taken at
+/// log-spaced checkpoints up to `max_cycles`.
+pub fn endurance_trace(cfg: &DeviceConfig, seed: u64, max_cycles: u64) -> Vec<(u64, f64, f64)> {
+    let mut rng = Rng::new(seed);
+    let mut cell = RramCell::fabricate(cfg, &mut rng);
+    cell.form(cfg.vform_max, cfg, &mut rng);
+    let mut checkpoints: Vec<u64> = (0..=6)
+        .flat_map(|d| [1u64, 2, 5].map(|m| m * 10u64.pow(d)))
+        .filter(|&c| c <= max_cycles)
+        .collect();
+    checkpoints.dedup();
+    let mut out = Vec::new();
+    let mut cycle = 0u64;
+    for &cp in &checkpoints {
+        while cycle < cp && !cell.is_stuck() {
+            cell.set_pulse(1.0, cfg, &mut rng);
+            cell.reset_pulse(-1.2, cfg, &mut rng);
+            cycle += 1;
+        }
+        // sample both states at the checkpoint
+        cell.set_pulse(1.0, cfg, &mut rng);
+        let lrs = cell.read(cfg, &mut rng);
+        cell.reset_pulse(-1.2, cfg, &mut rng);
+        let hrs = cell.read(cfg, &mut rng);
+        out.push((cp, lrs, hrs));
+        if cell.is_stuck() {
+            break;
+        }
+    }
+    out
+}
+
+/// Fig. 2i: forming-voltage distribution over a full 512x32x2 chip.
+pub fn forming_distribution(cfg: &DeviceConfig, seed: u64) -> (Summary, f64) {
+    let mut rng = Rng::new(seed);
+    let mut all = Vec::new();
+    let mut min_yield: f64 = 1.0;
+    for block in 0..2 {
+        let mut arr = Array1T1R::fabricate(512, 32, cfg.clone(), &mut rng.fork(block));
+        let rep = arr.form_all();
+        min_yield = min_yield.min(rep.yield_frac);
+        all.extend(rep.vforms);
+    }
+    (summarize(&all), min_yield)
+}
+
+/// Fig. 2j/k/l: multi-level programming accuracy on a 32x32 subarray.
+pub fn programming_accuracy(
+    cfg: &DeviceConfig,
+    seed: u64,
+    levels: &[usize],
+) -> Vec<super::array::ProgrammingReport> {
+    levels
+        .iter()
+        .map(|&n| {
+            let mut rng = Rng::new(seed ^ (n as u64) << 32);
+            let mut arr = Array1T1R::fabricate(32, 32, cfg.clone(), &mut rng);
+            arr.form_all();
+            arr.programming_campaign(32, n)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iv_sweep_has_hysteresis() {
+        let cfg = DeviceConfig::ideal();
+        let pts = iv_sweep(&cfg, 1, 50);
+        assert_eq!(pts.len(), 200);
+        // current at +0.3 V on the up-leg (HRS) vs down-leg (LRS, post-SET)
+        let up = pts[13].1.abs(); // 0.3 V-ish on first leg
+        let down = pts[86].1.abs(); // ~0.3 V on return leg
+        assert!(down > 3.0 * up, "hysteresis missing: {up} vs {down}");
+    }
+
+    #[test]
+    fn multilevel_128_states_monotone() {
+        let cfg = DeviceConfig::default();
+        let rs = multilevel_states(&cfg, 2, 128);
+        assert_eq!(rs.len(), 128);
+        // read-back tracks targets: increasing, with a small number of
+        // noise-driven inversions tolerated at the high-resistance end
+        // where the relative read noise exceeds the 4 kOhm level pitch.
+        let violations = rs.windows(2).filter(|w| w[1] <= w[0]).count();
+        assert!(violations <= 12, "too many level inversions: {violations}");
+        // and globally monotone: top quartile well above bottom quartile
+        let lo: f64 = rs[..32].iter().sum::<f64>() / 32.0;
+        let hi: f64 = rs[96..].iter().sum::<f64>() / 32.0;
+        assert!(hi > 3.0 * lo, "global separation missing: {lo} vs {hi}");
+    }
+
+    #[test]
+    fn retention_no_systematic_drift() {
+        let cfg = DeviceConfig::default();
+        let (times, traces) = retention_traces(&cfg, 3, 4, 12);
+        assert_eq!(times.len(), 12);
+        for tr in traces {
+            let drift = (tr.last().unwrap() - tr[0]).abs() / tr[0];
+            assert!(drift < 0.08, "drift {drift}");
+        }
+    }
+
+    #[test]
+    fn endurance_window_survives_1e6() {
+        let cfg = DeviceConfig::default();
+        let samples = endurance_trace(&cfg, 4, 1_000_000);
+        let (_, lrs, hrs) = *samples.last().unwrap();
+        assert!(hrs / lrs > 3.0, "window collapsed: {lrs} vs {hrs}");
+    }
+
+    #[test]
+    fn forming_stats_match() {
+        let cfg = DeviceConfig::default();
+        let (s, yield_frac) = forming_distribution(&cfg, 5);
+        assert_eq!(s.n, 512 * 32 * 2);
+        assert!((s.mean - 1.89).abs() < 0.01);
+        assert!((s.std - 0.18).abs() < 0.01);
+        assert!((yield_frac - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn programming_accuracy_levels() {
+        let cfg = DeviceConfig::default();
+        let reps = programming_accuracy(&cfg, 6, &[2, 4, 8, 16]);
+        assert_eq!(reps.len(), 4);
+        for rep in &reps {
+            assert!(rep.success_frac > 0.99, "{} levels: {}", rep.levels, rep.success_frac);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! RRAM device-physics substrate: the TiN/TaOx/Ta2O5/TiN 1T1R cell and the
+//! 512x32 crossbar arrays of the paper's chip, modeled at the level the
+//! paper characterizes them (Fig. 2): forming-voltage statistics,
+//! multi-level write-verify programming, retention, endurance, and
+//! stuck-at faults. All stochastic draws flow from a caller-provided
+//! [`crate::util::rng::Rng`] so array behaviour is reproducible.
+
+pub mod array;
+pub mod cell;
+pub mod characterize;
+
+pub use array::Array1T1R;
+pub use cell::{CellState, RramCell};
+
+/// Physical constants of the device model, defaults calibrated to the
+/// paper's measured distributions (Fig. 2).
+#[derive(Clone, Debug)]
+pub struct DeviceConfig {
+    /// Mean electroforming voltage (V) — Fig. 2i: 1.89 V.
+    pub vform_mean: f64,
+    /// Forming-voltage standard deviation (V) — Fig. 2i: 0.18 V.
+    pub vform_std: f64,
+    /// Maximum forming voltage the driver can apply (V); 100 % yield at 3.3 V.
+    pub vform_max: f64,
+    /// SET threshold voltage range (V) — Fig. 2e: +0.8 .. +0.9.
+    pub vset_lo: f64,
+    pub vset_hi: f64,
+    /// RESET threshold voltage range (V) — Fig. 2e: -0.7 .. -1.0.
+    pub vreset_lo: f64,
+    pub vreset_hi: f64,
+    /// Low-resistive state (kOhm) after a full SET.
+    pub lrs_kohm: f64,
+    /// High-resistive state (kOhm) after a full RESET.
+    pub hrs_kohm: f64,
+    /// Programming noise per verify-loop pulse (kOhm std) — Fig. 2l: 0.8793.
+    pub prog_sigma_kohm: f64,
+    /// Write-verify acceptance window (kOhm) — Fig. 2j: +-2.
+    pub prog_tolerance_kohm: f64,
+    /// Maximum write-verify iterations before declaring the cell failed.
+    pub prog_max_iters: usize,
+    /// Read-voltage (V) used for all characterization — 0.3 V.
+    pub read_v: f64,
+    /// Read-noise on the sensed resistance (relative std, dimensionless).
+    /// Small: the digital read margin is huge, so this only matters for
+    /// the analog baseline.
+    pub read_noise_rel: f64,
+    /// Retention random-walk amplitude (relative std at 4e6 s).
+    pub retention_rel_4e6s: f64,
+    /// Endurance: mean lognormal window-degradation rate per cycle.
+    pub endurance_degrade_rate: f64,
+    /// Probability a fresh cell is stuck (cannot be programmed) — drives
+    /// the 99.8 % programming success of Fig. 2j.
+    pub stuck_fault_prob: f64,
+    /// Probability per read of a transient bit-flip *before* ECC
+    /// (models marginal cells; Fig. 4l shows the resulting MAC BER).
+    pub transient_read_flip_prob: f64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig {
+            vform_mean: 1.89,
+            vform_std: 0.18,
+            vform_max: 3.3,
+            vset_lo: 0.8,
+            vset_hi: 0.9,
+            vreset_lo: -1.0,
+            vreset_hi: -0.7,
+            lrs_kohm: 5.0,
+            hrs_kohm: 120.0,
+            prog_sigma_kohm: 0.8793,
+            prog_tolerance_kohm: 2.0,
+            prog_max_iters: 20,
+            read_v: 0.3,
+            read_noise_rel: 0.004,
+            retention_rel_4e6s: 0.01,
+            endurance_degrade_rate: 2e-7,
+            stuck_fault_prob: 0.002,
+            transient_read_flip_prob: 2e-5,
+        }
+    }
+}
+
+impl DeviceConfig {
+    /// An idealized device (no noise, no faults) — used by tests that
+    /// check pure digital logic behaviour.
+    pub fn ideal() -> Self {
+        DeviceConfig {
+            prog_sigma_kohm: 0.0,
+            read_noise_rel: 0.0,
+            retention_rel_4e6s: 0.0,
+            endurance_degrade_rate: 0.0,
+            stuck_fault_prob: 0.0,
+            transient_read_flip_prob: 0.0,
+            ..DeviceConfig::default()
+        }
+    }
+
+    /// The `n` evenly spaced multi-level resistance targets (kOhm) used
+    /// for Fig. 2j/k: spread across [lrs, lrs + (n-1)*step] with a step
+    /// wide enough for the +-2 kOhm verify window.
+    pub fn level_targets(&self, n: usize) -> Vec<f64> {
+        assert!(n >= 2);
+        let step = (2.0 * self.prog_tolerance_kohm).max(4.0 * self.prog_sigma_kohm);
+        (0..n).map(|i| self.lrs_kohm + i as f64 * step).collect()
+    }
+
+    /// The four 2-bit compute levels (kOhm) with wide digital margins.
+    /// INT8 weights occupy four such cells (Fig. 5 path).
+    pub fn levels_2bit(&self) -> [f64; 4] {
+        [5.0, 15.0, 30.0, 60.0]
+    }
+
+    /// Reference resistances (kOhm) for the successive-approximation
+    /// 2-bit digital read (three Rrefs via Vtran1..3, Fig. 3b).
+    pub fn rrefs_2bit(&self) -> [f64; 3] {
+        [10.0, 22.0, 45.0]
+    }
+
+    /// Binary (1-bit) encoding: LRS = logic 1, HRS = logic 0; single Rref.
+    pub fn rref_1bit(&self) -> f64 {
+        30.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let c = DeviceConfig::default();
+        assert!((c.vform_mean - 1.89).abs() < 1e-12);
+        assert!((c.vform_std - 0.18).abs() < 1e-12);
+        assert!((c.prog_sigma_kohm - 0.8793).abs() < 1e-12);
+        assert!((c.prog_tolerance_kohm - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn level_targets_are_separated() {
+        let c = DeviceConfig::default();
+        for n in [2usize, 4, 8, 16, 128] {
+            let t = c.level_targets(n);
+            assert_eq!(t.len(), n);
+            for w in t.windows(2) {
+                assert!(w[1] - w[0] >= 2.0 * c.prog_tolerance_kohm - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn two_bit_levels_have_margin_vs_rrefs() {
+        let c = DeviceConfig::default();
+        let lv = c.levels_2bit();
+        let rr = c.rrefs_2bit();
+        // each Rref strictly separates adjacent levels
+        for i in 0..3 {
+            assert!(lv[i] < rr[i] && rr[i] < lv[i + 1]);
+            // margin comfortably exceeds programming noise
+            assert!(rr[i] - lv[i] > 4.0 * c.prog_sigma_kohm);
+            assert!(lv[i + 1] - rr[i] > 4.0 * c.prog_sigma_kohm);
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! # rram-cim — Reconfigurable Digital RRAM Logic with In-Situ Pruning
+//!
+//! Production-quality reproduction of *"Reconfigurable Digital RRAM Logic
+//! Enables In-Situ Pruning and Learning for Edge AI"* (2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator and the full hardware
+//!   substrate: a transaction-level simulator of the paper's fully digital
+//!   180 nm 1T1R RRAM compute-in-memory chip ([`device`], [`chip`],
+//!   [`cim`]), the dynamic-pruning algorithm ([`pruning`]), baselines
+//!   ([`baselines`]), and the training orchestrator ([`coordinator`]).
+//! * **Layer 2** — JAX models (`python/compile/model.py`), AOT-lowered to
+//!   HLO text once; executed from Rust via PJRT ([`runtime`]).
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) inside those
+//!   artifacts: tiled sign-matmul (XNOR+popcount convolution) and the XOR
+//!   Hamming-distance similarity kernel.
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the experiment index mapping every figure of the
+//! paper to the modules and bench targets that regenerate it.
+
+pub mod baselines;
+pub mod bench;
+pub mod chip;
+pub mod cim;
+pub mod coordinator;
+pub mod device;
+pub mod metrics;
+pub mod nn;
+pub mod pruning;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+/// Convenience prelude for examples and benches.
+pub mod prelude {
+    pub use crate::chip::{Chip, ChipConfig, LogicOp, ReadPath};
+    pub use crate::cim::mapping::WeightCodec;
+    pub use crate::coordinator::mnist::{MnistConfig, MnistTrainer};
+    pub use crate::coordinator::pointnet::{PointNetConfig, PointNetTrainer};
+    pub use crate::coordinator::TrainMode;
+    pub use crate::device::{Array1T1R, DeviceConfig};
+    pub use crate::pruning::{PruneConfig, PruningScheduler};
+    pub use crate::runtime::{Engine, HostTensor};
+    pub use crate::util::rng::Rng;
+}

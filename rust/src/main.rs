@@ -1,0 +1,324 @@
+//! `rram-cim` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train-mnist     train the binary CNN (Fig. 4) in SUN/SPN/HPN mode
+//!   train-pointnet  train the PointNet (Fig. 5) in SUN/SPN/HPN mode
+//!   characterize    regenerate the device panels of Fig. 2
+//!   chip-demo       exercise the reconfigurable logic + search-in-memory
+//!   energy-report   print the Fig. 3d/e/g/h/i comparison rows
+//!
+//! Run `rram-cim help` for options.
+
+use anyhow::{anyhow, Result};
+
+use rram_cim::baselines::{self, analog_cim, gpu, sram_cim, Workload};
+use rram_cim::bench::print_table;
+use rram_cim::chip::{AreaModel, Chip, ChipConfig, LogicOp};
+use rram_cim::cim::mapping::RowAllocator;
+use rram_cim::cim::similarity as chip_sim;
+use rram_cim::coordinator::mnist::{MnistConfig, MnistTrainer};
+use rram_cim::coordinator::pointnet::{PointNetConfig, PointNetTrainer};
+use rram_cim::coordinator::TrainMode;
+use rram_cim::device::{characterize, DeviceConfig};
+use rram_cim::pruning::PruneConfig;
+use rram_cim::runtime::Engine;
+use rram_cim::util::args::Args;
+use rram_cim::util::logging;
+use rram_cim::util::rng::Rng;
+
+const USAGE: &str = "\
+rram-cim — reconfigurable digital RRAM CIM with in-situ pruning (paper repro)
+
+usage: rram-cim <subcommand> [options]
+
+subcommands:
+  train-mnist      --mode sun|spn|hpn --epochs N --seed S [--pallas]
+                   [--train-samples N] [--test-samples N] [--lr F]
+                   [--sim-threshold F] [--max-prune-rate F] [--json PATH]
+  train-pointnet   same options as train-mnist
+  characterize     --seed S   (regenerates the Fig. 2 device panels)
+  chip-demo        --seed S   (logic truth tables + search-in-memory demo)
+  energy-report    (Fig. 3 architecture comparison rows)
+  run              --config configs/<file>.toml [--json PATH]
+";
+
+fn parse_mode(s: &str) -> Result<TrainMode> {
+    match s.to_ascii_lowercase().as_str() {
+        "sun" => Ok(TrainMode::Sun),
+        "spn" => Ok(TrainMode::Spn),
+        "hpn" => Ok(TrainMode::Hpn),
+        other => Err(anyhow!("unknown mode {other:?} (want sun|spn|hpn)")),
+    }
+}
+
+fn main() -> Result<()> {
+    logging::init();
+    let sub = std::env::args().nth(1).unwrap_or_default();
+    let args = Args::from_env(2).map_err(|e| anyhow!(e))?;
+    match sub.as_str() {
+        "train-mnist" => train_mnist(&args),
+        "train-pointnet" => train_pointnet(&args),
+        "characterize" => characterize_cmd(&args),
+        "chip-demo" => chip_demo(&args),
+        "energy-report" => energy_report(),
+        "run" => run_config(&args),
+        "" | "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("unknown subcommand {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Config-file launcher: sweeps live in checked-in TOML files.
+fn run_config(args: &Args) -> Result<()> {
+    use rram_cim::util::config::Config;
+    let path = args.get("config").ok_or_else(|| anyhow!("--config required"))?;
+    let c = Config::load(path).map_err(|e| anyhow!("{path}: {e}"))?;
+    let mode = parse_mode(&c.str_or("train.mode", "spn"))?;
+    let prune = PruneConfig {
+        sim_threshold: c.float_or("prune.sim_threshold", 0.70),
+        freq_threshold: c.int_or("prune.freq_threshold", 1) as usize,
+        prune_interval: c.int_or("prune.prune_interval", 2) as usize,
+        warmup_epochs: c.int_or("prune.warmup_epochs", 2) as usize,
+        min_live_per_layer: c.int_or("prune.min_live_per_layer", 4) as usize,
+        max_prune_rate: c.float_or("prune.max_prune_rate", 0.6),
+    };
+    let engine = Engine::open_default()?;
+    let report = match c.str_or("task", "mnist").as_str() {
+        "mnist" => {
+            let cfg = MnistConfig {
+                epochs: c.int_or("train.epochs", 10) as usize,
+                train_samples: c.int_or("train.train_samples", 1920) as usize,
+                test_samples: c.int_or("train.test_samples", 512) as usize,
+                lr: c.float_or("train.lr", 0.05) as f32,
+                seed: c.int_or("train.seed", 42) as u64,
+                mode,
+                prune,
+                use_pallas: c.bool_or("train.pallas", false),
+                hpn_check_macs: c.int_or("train.hpn_check_macs", 64) as usize,
+            };
+            MnistTrainer::new(cfg, engine).train()?
+        }
+        "pointnet" => {
+            let base = PointNetConfig::default();
+            let cfg = PointNetConfig {
+                epochs: c.int_or("train.epochs", 12) as usize,
+                train_samples: c.int_or("train.train_samples", 320) as usize,
+                test_samples: c.int_or("train.test_samples", 96) as usize,
+                lr: c.float_or("train.lr", 0.05) as f32,
+                seed: c.int_or("train.seed", 7) as u64,
+                mode,
+                prune,
+                use_pallas: c.bool_or("train.pallas", false),
+                grouping: base.grouping,
+                hpn_check_macs: c.int_or("train.hpn_check_macs", 32) as usize,
+            };
+            PointNetTrainer::new(cfg, engine).train()?
+        }
+        other => return Err(anyhow!("unknown task {other:?}")),
+    };
+    println!("final test accuracy: {:.2}%", 100.0 * report.final_test_acc());
+    println!("prune rate: {:.2}%", 100.0 * report.final_prune_rate);
+    maybe_dump(args, report.to_json())
+}
+
+fn prune_cfg_from(args: &Args, base: PruneConfig) -> Result<PruneConfig> {
+    Ok(PruneConfig {
+        sim_threshold: args.parse_or("sim-threshold", base.sim_threshold).map_err(|e| anyhow!(e))?,
+        freq_threshold: args.parse_or("freq-threshold", base.freq_threshold).map_err(|e| anyhow!(e))?,
+        prune_interval: args.parse_or("prune-interval", base.prune_interval).map_err(|e| anyhow!(e))?,
+        warmup_epochs: args.parse_or("warmup-epochs", base.warmup_epochs).map_err(|e| anyhow!(e))?,
+        min_live_per_layer: args.parse_or("min-live", base.min_live_per_layer).map_err(|e| anyhow!(e))?,
+        max_prune_rate: args.parse_or("max-prune-rate", base.max_prune_rate).map_err(|e| anyhow!(e))?,
+    })
+}
+
+fn maybe_dump(args: &Args, json: rram_cim::util::json::Json) -> Result<()> {
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, json.render())?;
+        log::info!("wrote report to {path}");
+    }
+    Ok(())
+}
+
+fn train_mnist(args: &Args) -> Result<()> {
+    let base = MnistConfig::default();
+    let cfg = MnistConfig {
+        epochs: args.parse_or("epochs", base.epochs).map_err(|e| anyhow!(e))?,
+        train_samples: args.parse_or("train-samples", base.train_samples).map_err(|e| anyhow!(e))?,
+        test_samples: args.parse_or("test-samples", base.test_samples).map_err(|e| anyhow!(e))?,
+        lr: args.parse_or("lr", base.lr).map_err(|e| anyhow!(e))?,
+        seed: args.parse_or("seed", base.seed).map_err(|e| anyhow!(e))?,
+        mode: parse_mode(&args.get_or("mode", "spn"))?,
+        prune: prune_cfg_from(args, base.prune)?,
+        use_pallas: args.flag("pallas"),
+        hpn_check_macs: args.parse_or("hpn-check-macs", base.hpn_check_macs).map_err(|e| anyhow!(e))?,
+    };
+    let engine = Engine::open_default()?;
+    let mut tr = MnistTrainer::new(cfg, engine);
+    let report = tr.train()?;
+    println!("\nfinal test accuracy: {:.2}%", 100.0 * report.final_test_acc());
+    println!("prune rate: {:.2}%", 100.0 * report.final_prune_rate);
+    println!("training conv-op reduction: {:.2}%", 100.0 * report.train_ops_reduction());
+    println!("\nconfusion matrix (rows = truth):\n{}", report.confusion.render());
+    maybe_dump(args, report.to_json())
+}
+
+fn train_pointnet(args: &Args) -> Result<()> {
+    let base = PointNetConfig::default();
+    let cfg = PointNetConfig {
+        epochs: args.parse_or("epochs", base.epochs).map_err(|e| anyhow!(e))?,
+        train_samples: args.parse_or("train-samples", base.train_samples).map_err(|e| anyhow!(e))?,
+        test_samples: args.parse_or("test-samples", base.test_samples).map_err(|e| anyhow!(e))?,
+        lr: args.parse_or("lr", base.lr).map_err(|e| anyhow!(e))?,
+        seed: args.parse_or("seed", base.seed).map_err(|e| anyhow!(e))?,
+        mode: parse_mode(&args.get_or("mode", "spn"))?,
+        prune: prune_cfg_from(args, base.prune)?,
+        use_pallas: args.flag("pallas"),
+        grouping: base.grouping,
+        hpn_check_macs: args.parse_or("hpn-check-macs", base.hpn_check_macs).map_err(|e| anyhow!(e))?,
+    };
+    let engine = Engine::open_default()?;
+    let mut tr = PointNetTrainer::new(cfg, engine);
+    let report = tr.train()?;
+    println!("\nfinal test accuracy: {:.2}%", 100.0 * report.final_test_acc());
+    println!("prune rate: {:.2}%", 100.0 * report.final_prune_rate);
+    println!("training conv-op reduction: {:.2}%", 100.0 * report.train_ops_reduction());
+    println!("\nconfusion matrix (rows = truth):\n{}", report.confusion.render());
+    maybe_dump(args, report.to_json())
+}
+
+fn characterize_cmd(args: &Args) -> Result<()> {
+    let seed: u64 = args.parse_or("seed", 1u64).map_err(|e| anyhow!(e))?;
+    let cfg = DeviceConfig::default();
+    println!("== Fig. 2i: forming distribution over 512x32x2 cells ==");
+    let (summary, yld) = characterize::forming_distribution(&cfg, seed);
+    println!(
+        "V_form mean {:.3} V, std {:.3} V, yield {:.1}%  (paper: 1.89 / 0.18 / 100%)",
+        summary.mean,
+        summary.std,
+        100.0 * yld
+    );
+    println!("\n== Fig. 2j/l: programming accuracy (32x32 subarray) ==");
+    for rep in characterize::programming_accuracy(&cfg, seed, &[2, 4, 8, 16]) {
+        println!(
+            "{:>3} levels: {:.2}% in +-2 kOhm window, sigma {:.4} kOhm",
+            rep.levels,
+            100.0 * rep.success_frac,
+            rep.sigma_kohm
+        );
+    }
+    println!("(paper: 99.8% within window, sigma 0.8793 kOhm)");
+    Ok(())
+}
+
+fn chip_demo(args: &Args) -> Result<()> {
+    let seed: u64 = args.parse_or("seed", 3u64).map_err(|e| anyhow!(e))?;
+    let mut rng = Rng::new(seed);
+    let mut chip = Chip::new(ChipConfig::default(), &mut rng);
+    let yields = chip.form();
+    println!("formed {} blocks, yields: {yields:?}", yields.len());
+    // truth-table demo (Fig. 3c)
+    let n = 4;
+    let w_pattern = [true, false, true, false];
+    for (col, &bit) in w_pattern.iter().enumerate() {
+        chip.program_bit(0, 0, col, bit);
+    }
+    chip.reset_ledgers(); // measure the compute window, not forming
+    let x = vec![true; n];
+    let k = vec![true, true, false, false];
+    let mut rows = Vec::new();
+    for op in LogicOp::ALL {
+        let out = chip.logic_pass(0, 0, op, &x, &k, false);
+        rows.push(vec![
+            op.name().to_string(),
+            format!("{:?}", w_pattern.iter().map(|&b| b as u8).collect::<Vec<_>>()),
+            format!("{:?}", k.iter().map(|&b| b as u8).collect::<Vec<_>>()),
+            format!("{:?}", out[..n].iter().map(|&b| b as u8).collect::<Vec<_>>()),
+        ]);
+    }
+    print_table("Fig. 3c: OUT = X AND (W (.) K), X=1", &["op", "W", "K", "OUT"], &rows);
+    // search-in-memory demo
+    let kernels: Vec<Vec<f32>> = (0..4)
+        .map(|i| (0..16).map(|j| if (i * j) % 3 == 0 { 1.0 } else { -1.0 }).collect())
+        .collect();
+    let mut alloc = RowAllocator::for_chip(&chip);
+    let stored = chip_sim::store_kernels(&mut chip, &mut alloc, &kernels);
+    let m = chip_sim::similarity_matrix(&mut chip, &stored, &[true; 4]);
+    let rows: Vec<Vec<String>> = (0..4)
+        .map(|i| {
+            let mut r = vec![format!("kernel {i}")];
+            r.extend((0..4).map(|j| format!("{:.2}", m.similarity(i, j))));
+            r
+        })
+        .collect();
+    print_table(
+        "search-in-memory similarity (XOR + popcount)",
+        &["", "k0", "k1", "k2", "k3"],
+        &rows,
+    );
+    let b = chip.energy_breakdown();
+    let s = b.shares();
+    println!(
+        "\nenergy so far: {:.1} nJ (top: {} {:.1}%, {} {:.1}%)",
+        b.total_pj() * 1e-3,
+        s[0].0,
+        100.0 * s[0].1,
+        s[1].0,
+        100.0 * s[1].1
+    );
+    Ok(())
+}
+
+fn energy_report() -> Result<()> {
+    let area = AreaModel::default();
+    let rows: Vec<Vec<String>> = area
+        .shares()
+        .iter()
+        .map(|(m, s)| vec![m.to_string(), format!("{:.2}%", 100.0 * s)])
+        .collect();
+    print_table("Fig. 3d: area breakdown (5.016 mm^2)", &["module", "share"], &rows);
+
+    let w = Workload::from_macs(1_000_000, 32);
+    let ours = baselines::digital_rram_energy_pj(&w);
+    let gpu_e = gpu::energy_pj(1_000_000, gpu::GpuWorkloadClass::SmallCnn);
+    let rows = vec![
+        vec!["digital RRAM (this work)".into(), format!("{:.1}", ours * 1e-6), "1.00x".into(), "0%".into()],
+        vec![
+            "analog RRAM CIM".into(),
+            format!("{:.1}", analog_cim::energy_pj(&w) * 1e-6),
+            format!("{:.2}x", analog_cim::energy_pj(&w) / ours),
+            format!("{:.2}%", 100.0 * analog_cim::average_error_rate(7)),
+        ],
+        vec![
+            "digital SRAM CIM".into(),
+            format!("{:.1}", sram_cim::energy_pj(&w) * 1e-6),
+            format!("{:.2}x", sram_cim::energy_pj(&w) / ours),
+            "0%".into(),
+        ],
+        vec![
+            "RTX 4090 (normalized)".into(),
+            format!("{:.1}", gpu_e * 1e-6),
+            format!("{:.2}x", gpu_e / ours),
+            "0%".into(),
+        ],
+    ];
+    print_table(
+        "Fig. 3g/i: energy per 1M INT8 MACs + bit error",
+        &["architecture", "energy (uJ)", "vs ours", "bit error"],
+        &rows,
+    );
+    println!(
+        "\nFig. 3h areas: ours {:.2} mm^2, analog {:.2} mm^2 ({:.2}x), SRAM {:.2} mm^2 ({:.2}x)",
+        rram_cim::chip::area::CHIP_AREA_MM2,
+        analog_cim::area_mm2(),
+        analog_cim::area_mm2() / rram_cim::chip::area::CHIP_AREA_MM2,
+        sram_cim::area_mm2(),
+        sram_cim::area_mm2() / rram_cim::chip::area::CHIP_AREA_MM2,
+    );
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Evaluation metrics: confusion matrices, accuracy, operation counting,
+//! and the cross-architecture energy report rows (Figs. 4h/4m, 5f/5i).
+
+use crate::baselines::{self, gpu, Workload};
+
+/// Normalized confusion matrix over `n` classes.
+#[derive(Clone, Debug)]
+pub struct ConfusionMatrix {
+    pub n: usize,
+    counts: Vec<u64>,
+}
+
+impl ConfusionMatrix {
+    pub fn new(n: usize) -> Self {
+        ConfusionMatrix { n, counts: vec![0; n * n] }
+    }
+
+    pub fn record(&mut self, truth: usize, pred: usize) {
+        self.counts[truth * self.n + pred] += 1;
+    }
+
+    pub fn count(&self, truth: usize, pred: usize) -> u64 {
+        self.counts[truth * self.n + pred]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let correct: u64 = (0..self.n).map(|i| self.count(i, i)).sum();
+        correct as f64 / self.total().max(1) as f64
+    }
+
+    /// Row-normalized matrix (Fig. 4h / 5f rendering).
+    pub fn normalized(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.n * self.n];
+        for t in 0..self.n {
+            let row: u64 = (0..self.n).map(|p| self.count(t, p)).sum();
+            if row > 0 {
+                for p in 0..self.n {
+                    out[t * self.n + p] = self.count(t, p) as f64 / row as f64;
+                }
+            }
+        }
+        out
+    }
+
+    /// Terminal rendering with shaded cells.
+    pub fn render(&self) -> String {
+        let norm = self.normalized();
+        let mut s = String::new();
+        for t in 0..self.n {
+            for p in 0..self.n {
+                let v = norm[t * self.n + p];
+                let ch = match (v * 4.0) as usize {
+                    0 => "  ",
+                    1 => "░░",
+                    2 => "▒▒",
+                    3 => "▓▓",
+                    _ => "██",
+                };
+                s.push_str(ch);
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Per-layer MAC meter for conv stacks under pruning masks.
+#[derive(Clone, Debug, Default)]
+pub struct OpsCounter {
+    /// (layer name, macs) rows
+    pub layers: Vec<(String, u64)>,
+}
+
+impl OpsCounter {
+    pub fn add(&mut self, name: &str, macs: u64) {
+        self.layers.push((name.to_string(), macs));
+    }
+
+    pub fn total(&self) -> u64 {
+        self.layers.iter().map(|&(_, m)| m).sum()
+    }
+}
+
+/// One row of the energy comparison (Fig. 4m right / Fig. 5i right).
+#[derive(Clone, Debug)]
+pub struct EnergyRow {
+    pub platform: String,
+    pub energy_uj: f64,
+}
+
+/// Build the three-platform comparison for a conv workload.
+/// `binary_weights` selects the MNIST (binary) vs PointNet (INT8) cell
+/// mapping; `gpu_class` the 4090 utilization class.
+pub fn energy_comparison(
+    macs_unpruned: u64,
+    macs_pruned: u64,
+    binary_weights: bool,
+    gpu_class: gpu::GpuWorkloadClass,
+    parallelism: usize,
+) -> Vec<EnergyRow> {
+    let wl = |macs| {
+        if binary_weights {
+            Workload::from_binary_macs(macs, parallelism)
+        } else {
+            Workload::from_macs(macs, parallelism)
+        }
+    };
+    vec![
+        EnergyRow {
+            platform: "RTX 4090 (180nm-normalized)".into(),
+            energy_uj: gpu::energy_pj(macs_unpruned, gpu_class) * 1e-6,
+        },
+        EnergyRow {
+            platform: "digital RRAM (unpruned)".into(),
+            energy_uj: baselines::digital_rram_energy_pj(&wl(macs_unpruned)) * 1e-6,
+        },
+        EnergyRow {
+            platform: "digital RRAM (pruned)".into(),
+            energy_uj: baselines::digital_rram_energy_pj(&wl(macs_pruned)) * 1e-6,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confusion_accuracy() {
+        let mut c = ConfusionMatrix::new(3);
+        c.record(0, 0);
+        c.record(1, 1);
+        c.record(2, 0);
+        c.record(2, 2);
+        assert!((c.accuracy() - 0.75).abs() < 1e-12);
+        let norm = c.normalized();
+        assert!((norm[2 * 3] - 0.5).abs() < 1e-12);
+        assert_eq!(c.total(), 4);
+    }
+
+    #[test]
+    fn render_has_rows() {
+        let mut c = ConfusionMatrix::new(2);
+        c.record(0, 0);
+        c.record(1, 1);
+        assert_eq!(c.render().lines().count(), 2);
+    }
+
+    #[test]
+    fn ops_counter_sums() {
+        let mut o = OpsCounter::default();
+        o.add("conv1", 100);
+        o.add("conv2", 200);
+        assert_eq!(o.total(), 300);
+    }
+
+    #[test]
+    fn energy_rows_ordering() {
+        let rows = energy_comparison(1_000_000, 700_000, true, gpu::GpuWorkloadClass::SmallCnn, 32);
+        assert_eq!(rows.len(), 3);
+        // pruned RRAM must be the cheapest; GPU the most expensive
+        assert!(rows[2].energy_uj < rows[1].energy_uj);
+        assert!(rows[1].energy_uj < rows[0].energy_uj);
+        // headline shape: pruned RRAM well below the 4090
+        let reduction = 1.0 - rows[2].energy_uj / rows[0].energy_uj;
+        assert!(reduction > 0.6, "reduction {reduction}");
+    }
+}

@@ -1,0 +1,204 @@
+//! Synthetic MNIST: 28x28 grayscale digits rendered from stroke skeletons
+//! with per-sample affine jitter (rotation, scale, translation, shear),
+//! stroke-thickness variation, and pixel noise. Same format and task
+//! structure as MNIST; used because the image is offline (DESIGN.md
+//! "Substitutions").
+
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+pub const IMG: usize = 28;
+
+/// Stroke skeletons per digit in a 0..1 coordinate box: polylines.
+/// Hand-authored to be visually faithful; curvature comes from densely
+/// sampled arc points.
+fn glyph_strokes(digit: usize) -> Vec<Vec<(f32, f32)>> {
+    // helper: circle arc as polyline
+    fn arc(cx: f32, cy: f32, r: f32, a0: f32, a1: f32, n: usize) -> Vec<(f32, f32)> {
+        (0..=n)
+            .map(|i| {
+                let a = a0 + (a1 - a0) * i as f32 / n as f32;
+                (cx + r * a.cos(), cy + r * a.sin())
+            })
+            .collect()
+    }
+    use std::f32::consts::PI;
+    match digit {
+        0 => vec![arc(0.5, 0.5, 0.32, 0.0, 2.0 * PI, 24)],
+        1 => vec![vec![(0.35, 0.30), (0.52, 0.15)], vec![(0.52, 0.15), (0.52, 0.85)]],
+        2 => vec![
+            arc(0.5, 0.32, 0.22, -PI, 0.2, 12),
+            vec![(0.70, 0.40), (0.28, 0.85)],
+            vec![(0.28, 0.85), (0.75, 0.85)],
+        ],
+        3 => vec![
+            arc(0.48, 0.32, 0.18, -PI * 0.9, PI * 0.5, 12),
+            arc(0.48, 0.67, 0.20, -PI * 0.5, PI * 0.9, 12),
+        ],
+        4 => vec![
+            vec![(0.62, 0.15), (0.25, 0.60)],
+            vec![(0.25, 0.60), (0.78, 0.60)],
+            vec![(0.62, 0.15), (0.62, 0.85)],
+        ],
+        5 => vec![
+            vec![(0.70, 0.15), (0.32, 0.15)],
+            vec![(0.32, 0.15), (0.30, 0.45)],
+            arc(0.48, 0.63, 0.21, -PI * 0.6, PI * 0.75, 14),
+        ],
+        6 => vec![
+            vec![(0.62, 0.12), (0.35, 0.50)],
+            arc(0.48, 0.65, 0.20, 0.0, 2.0 * PI, 20),
+        ],
+        7 => vec![
+            vec![(0.25, 0.15), (0.75, 0.15)],
+            vec![(0.75, 0.15), (0.40, 0.85)],
+        ],
+        8 => vec![
+            arc(0.5, 0.32, 0.17, 0.0, 2.0 * PI, 18),
+            arc(0.5, 0.67, 0.21, 0.0, 2.0 * PI, 18),
+        ],
+        9 => vec![
+            arc(0.52, 0.35, 0.20, 0.0, 2.0 * PI, 20),
+            vec![(0.70, 0.40), (0.55, 0.85)],
+        ],
+        _ => unreachable!("digit out of range"),
+    }
+}
+
+/// Render one digit with random augmentation into a 28x28 [0,1] image.
+pub fn render_digit(digit: usize, rng: &mut Rng) -> Vec<f32> {
+    let strokes = glyph_strokes(digit);
+    // affine jitter
+    let angle = rng.normal_ms(0.0, 0.12) as f32;
+    let scale = 1.0 + rng.normal_ms(0.0, 0.08) as f32;
+    let shear = rng.normal_ms(0.0, 0.08) as f32;
+    let (dx, dy) = (rng.normal_ms(0.0, 0.04) as f32, rng.normal_ms(0.0, 0.04) as f32);
+    let thick = 0.045 + rng.range(0.0, 0.025) as f32;
+    let (sin, cos) = angle.sin_cos();
+    let tf = |(x, y): (f32, f32)| -> (f32, f32) {
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        let (rx, ry) = (cos * cx - sin * cy + shear * cy, sin * cx + cos * cy);
+        (scale * rx + 0.5 + dx, scale * ry + 0.5 + dy)
+    };
+    let mut img = vec![0.0f32; IMG * IMG];
+    // rasterize each stroke segment with a distance field of width `thick`
+    for stroke in &strokes {
+        let pts: Vec<(f32, f32)> = stroke.iter().map(|&p| tf(p)).collect();
+        for seg in pts.windows(2) {
+            let (x0, y0) = seg[0];
+            let (x1, y1) = seg[1];
+            let (lo_x, hi_x) = (x0.min(x1) - thick, x0.max(x1) + thick);
+            let (lo_y, hi_y) = (y0.min(y1) - thick, y0.max(y1) + thick);
+            let px_lo = ((lo_x * IMG as f32) as isize).max(0) as usize;
+            let px_hi = ((hi_x * IMG as f32).ceil() as isize).min(IMG as isize - 1) as usize;
+            let py_lo = ((lo_y * IMG as f32) as isize).max(0) as usize;
+            let py_hi = ((hi_y * IMG as f32).ceil() as isize).min(IMG as isize - 1) as usize;
+            for py in py_lo..=py_hi {
+                for px in px_lo..=px_hi {
+                    let p = ((px as f32 + 0.5) / IMG as f32, (py as f32 + 0.5) / IMG as f32);
+                    let d = dist_point_segment(p, (x0, y0), (x1, y1));
+                    if d < thick {
+                        let v = 1.0 - (d / thick) * 0.6;
+                        let cell = &mut img[py * IMG + px];
+                        *cell = cell.max(v);
+                    }
+                }
+            }
+        }
+    }
+    // pixel noise + clamp
+    for v in img.iter_mut() {
+        *v = (*v + rng.normal_ms(0.0, 0.03) as f32).clamp(0.0, 1.0);
+    }
+    img
+}
+
+fn dist_point_segment(p: (f32, f32), a: (f32, f32), b: (f32, f32)) -> f32 {
+    let (px, py) = p;
+    let (ax, ay) = a;
+    let (bx, by) = b;
+    let (abx, aby) = (bx - ax, by - ay);
+    let len2 = abx * abx + aby * aby;
+    let t = if len2 <= 1e-12 {
+        0.0
+    } else {
+        (((px - ax) * abx + (py - ay) * aby) / len2).clamp(0.0, 1.0)
+    };
+    let (cx, cy) = (ax + t * abx, ay + t * aby);
+    ((px - cx).powi(2) + (py - cy).powi(2)).sqrt()
+}
+
+/// Generate a balanced dataset of `n` samples.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(n * IMG * IMG);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let digit = i % 10;
+        data.extend(render_digit(digit, &mut rng));
+        labels.push(digit as i32);
+    }
+    // shuffle sample order (keeping data/label pairing)
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let ds = Dataset { data, labels, sample_len: IMG * IMG, n_classes: 10 };
+    let (data, labels) = ds.gather(&order);
+    Dataset { data, labels, sample_len: IMG * IMG, n_classes: 10 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_are_normalized_and_nonempty() {
+        let mut rng = Rng::new(1);
+        for d in 0..10 {
+            let img = render_digit(d, &mut rng);
+            assert_eq!(img.len(), 784);
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 10.0, "digit {d} rendered empty (ink {ink})");
+        }
+    }
+
+    #[test]
+    fn dataset_is_balanced_and_shuffled() {
+        let ds = generate(200, 42);
+        assert_eq!(ds.len(), 200);
+        assert_eq!(ds.class_counts(), vec![20; 10]);
+        // shuffled: the first ten labels should not be 0..9 in order
+        let first: Vec<i32> = ds.labels[..10].to_vec();
+        assert_ne!(first, (0..10).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn digits_are_visually_distinct() {
+        // centroid images of different digits must differ substantially
+        let mut rng = Rng::new(7);
+        let mean_img = |d: usize, rng: &mut Rng| -> Vec<f32> {
+            let mut acc = vec![0.0f32; 784];
+            for _ in 0..8 {
+                for (a, v) in acc.iter_mut().zip(render_digit(d, rng)) {
+                    *a += v / 8.0;
+                }
+            }
+            acc
+        };
+        let m1 = mean_img(1, &mut rng);
+        let m0 = mean_img(0, &mut rng);
+        let l2: f32 = m1.iter().zip(&m0).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(l2 > 5.0, "digits 0 and 1 too similar: {l2}");
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(30, 9);
+        let b = generate(30, 9);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.labels, b.labels);
+        let c = generate(30, 10);
+        assert_ne!(a.data, c.data);
+    }
+}

@@ -1,0 +1,71 @@
+//! Synthetic datasets. The evaluation image has no network access, so the
+//! paper's MNIST and ModelNet10 corpora are replaced by procedurally
+//! generated equivalents with the same shapes, class counts, and task
+//! structure (see DESIGN.md "Substitutions"): a stroke-rendered digit set
+//! and ten parametric 3-D shape families.
+
+pub mod mnist;
+pub mod modelnet;
+
+/// A labelled classification dataset of flat f32 samples.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// sample-major data, each sample `sample_len` floats
+    pub data: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub sample_len: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.data[i * self.sample_len..(i + 1) * self.sample_len]
+    }
+
+    /// Copy a batch of samples by index into one contiguous buffer.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(idx.len() * self.sample_len);
+        let mut ys = Vec::with_capacity(idx.len());
+        for &i in idx {
+            xs.extend_from_slice(self.sample(i));
+            ys.push(self.labels[i]);
+        }
+        (xs, ys)
+    }
+
+    /// Class balance check: count per label.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            c[l as usize] += 1;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_batches() {
+        let ds = Dataset {
+            data: (0..12).map(|i| i as f32).collect(),
+            labels: vec![0, 1, 2],
+            sample_len: 4,
+            n_classes: 3,
+        };
+        let (xs, ys) = ds.gather(&[2, 0]);
+        assert_eq!(xs, vec![8., 9., 10., 11., 0., 1., 2., 3.]);
+        assert_eq!(ys, vec![2, 0]);
+        assert_eq!(ds.class_counts(), vec![1, 1, 1]);
+    }
+}

@@ -1,0 +1,216 @@
+//! Synthetic ModelNet10: ten parametric 3-D shape families standing in
+//! for the ModelNet10 categories (bathtub, bed, chair, desk, dresser,
+//! monitor, night stand, sofa, table, toilet). Each sample is N surface
+//! points with random pose, scale, anisotropy, and jitter — the same
+//! (x, y, z) point-cloud format PointNet++ consumes.
+
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+/// Points per cloud (matches the AOT grouping pipeline input).
+pub const POINTS: usize = 256;
+
+pub const CLASS_NAMES: [&str; 10] = [
+    "bathtub", "bed", "chair", "desk", "dresser", "monitor", "night_stand",
+    "sofa", "table", "toilet",
+];
+
+/// Sample one surface point of the class's parametric family.
+fn sample_point(class: usize, rng: &mut Rng) -> [f32; 3] {
+    let u = rng.f32();
+    let v = rng.f32();
+    let w = rng.f32();
+    use std::f32::consts::PI;
+    match class {
+        // bathtub: open half-cylinder shell
+        0 => {
+            let a = PI * u; // half circumference
+            [0.9 * a.cos(), -0.4 + 0.5 * (1.0 - a.sin()), (v - 0.5) * 1.6]
+        }
+        // bed: wide low box (top surface biased)
+        1 => {
+            if w < 0.6 {
+                [(u - 0.5) * 1.6, 0.15, (v - 0.5) * 2.0]
+            } else {
+                box_shell(1.6, 0.3, 2.0, u, v, w, -0.15)
+            }
+        }
+        // chair: seat + back panels
+        2 => {
+            if w < 0.5 {
+                [(u - 0.5) * 0.9, 0.0, (v - 0.5) * 0.9]
+            } else {
+                [(u - 0.5) * 0.9, v * 1.0, -0.45]
+            }
+        }
+        // desk: top slab + two side panels
+        3 => match (w * 3.0) as usize {
+            0 => [(u - 0.5) * 1.6, 0.4, (v - 0.5) * 0.8],
+            1 => [-0.8, (v - 0.5) * 0.8, (u - 0.5) * 0.8],
+            _ => [0.8, (v - 0.5) * 0.8, (u - 0.5) * 0.8],
+        },
+        // dresser: tall box shell
+        4 => box_shell(1.0, 1.2, 0.6, u, v, w, 0.0),
+        // monitor: thin vertical slab on a stalk
+        5 => {
+            if w < 0.75 {
+                [(u - 0.5) * 1.2, 0.2 + v * 0.8, (rng.f32() - 0.5) * 0.08]
+            } else {
+                [0.04 * (u - 0.5), v * 0.25 - 0.1, 0.04 * (rng.f32() - 0.5)]
+            }
+        }
+        // night stand: small cube shell
+        6 => box_shell(0.6, 0.6, 0.6, u, v, w, 0.0),
+        // sofa: seat box + back + armrests
+        7 => match (w * 4.0) as usize {
+            0 => box_shell(1.6, 0.4, 0.8, u, v, w, -0.2),
+            1 => [(u - 0.5) * 1.6, v * 0.7, -0.4],
+            2 => [-0.8, v * 0.5, (u - 0.5) * 0.8],
+            _ => [0.8, v * 0.5, (u - 0.5) * 0.8],
+        },
+        // table: round top + central column
+        8 => {
+            if w < 0.7 {
+                let r = 0.8 * u.sqrt();
+                let a = 2.0 * PI * v;
+                [r * a.cos(), 0.35, r * a.sin()]
+            } else {
+                let a = 2.0 * PI * v;
+                [0.06 * a.cos(), (u - 0.5) * 0.7, 0.06 * a.sin()]
+            }
+        }
+        // toilet: bowl (torus section) + tank slab
+        9 => {
+            if w < 0.65 {
+                let a = 2.0 * PI * u;
+                let b = PI * v;
+                let (cr, r) = (0.35f32, 0.12f32);
+                [
+                    (cr + r * b.cos()) * a.cos(),
+                    0.1 + r * b.sin(),
+                    (cr + r * b.cos()) * a.sin(),
+                ]
+            } else {
+                [(u - 0.5) * 0.5, 0.2 + v * 0.5, -0.42]
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Uniform point on an axis-aligned box shell (sx, sy, sz extents).
+fn box_shell(sx: f32, sy: f32, sz: f32, u: f32, v: f32, w: f32, y_off: f32) -> [f32; 3] {
+    let face = (w * 6.0) as usize % 6;
+    let (a, b) = (u - 0.5, v - 0.5);
+    let p = match face {
+        0 => [a * sx, sy / 2.0, b * sz],
+        1 => [a * sx, -sy / 2.0, b * sz],
+        2 => [sx / 2.0, a * sy, b * sz],
+        3 => [-sx / 2.0, a * sy, b * sz],
+        4 => [a * sx, b * sy, sz / 2.0],
+        _ => [a * sx, b * sy, -sz / 2.0],
+    };
+    [p[0], p[1] + y_off, p[2]]
+}
+
+/// Generate one cloud: sample, pose-jitter, normalize to unit sphere.
+pub fn sample_cloud(class: usize, rng: &mut Rng) -> Vec<f32> {
+    let yaw = rng.range(0.0, std::f64::consts::TAU) as f32;
+    let (sy, cy) = yaw.sin_cos();
+    let scale = 1.0 + rng.normal_ms(0.0, 0.1) as f32;
+    let aniso = [
+        1.0 + rng.normal_ms(0.0, 0.08) as f32,
+        1.0 + rng.normal_ms(0.0, 0.08) as f32,
+        1.0 + rng.normal_ms(0.0, 0.08) as f32,
+    ];
+    let mut pts = Vec::with_capacity(POINTS * 3);
+    for _ in 0..POINTS {
+        let p = sample_point(class, rng);
+        // anisotropic scale, yaw rotation, jitter
+        let (x, y, z) = (p[0] * aniso[0] * scale, p[1] * aniso[1] * scale, p[2] * aniso[2] * scale);
+        let (rx, rz) = (cy * x - sy * z, sy * x + cy * z);
+        pts.push(rx + rng.normal_ms(0.0, 0.01) as f32);
+        pts.push(y + rng.normal_ms(0.0, 0.01) as f32);
+        pts.push(rz + rng.normal_ms(0.0, 0.01) as f32);
+    }
+    // normalize: zero-mean, max-radius 1 (PointNet convention)
+    let n = POINTS as f32;
+    let mut c = [0.0f32; 3];
+    for i in 0..POINTS {
+        for d in 0..3 {
+            c[d] += pts[3 * i + d] / n;
+        }
+    }
+    let mut maxr = 1e-6f32;
+    for i in 0..POINTS {
+        let mut r2 = 0.0;
+        for d in 0..3 {
+            pts[3 * i + d] -= c[d];
+            r2 += pts[3 * i + d] * pts[3 * i + d];
+        }
+        maxr = maxr.max(r2.sqrt());
+    }
+    pts.iter_mut().for_each(|v| *v /= maxr);
+    pts
+}
+
+/// Generate a balanced dataset of `n` clouds.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(n * POINTS * 3);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % 10;
+        data.extend(sample_cloud(class, &mut rng));
+        labels.push(class as i32);
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let ds = Dataset { data, labels, sample_len: POINTS * 3, n_classes: 10 };
+    let (data, labels) = ds.gather(&order);
+    Dataset { data, labels, sample_len: POINTS * 3, n_classes: 10 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clouds_are_normalized() {
+        let mut rng = Rng::new(1);
+        for class in 0..10 {
+            let pts = sample_cloud(class, &mut rng);
+            assert_eq!(pts.len(), POINTS * 3);
+            let max_r = (0..POINTS)
+                .map(|i| {
+                    (pts[3 * i].powi(2) + pts[3 * i + 1].powi(2) + pts[3 * i + 2].powi(2)).sqrt()
+                })
+                .fold(0.0f32, f32::max);
+            assert!((max_r - 1.0).abs() < 1e-3, "class {class} max radius {max_r}");
+        }
+    }
+
+    #[test]
+    fn classes_have_distinct_geometry() {
+        // compare height histograms of monitor (tall thin) vs bed (flat)
+        let mut rng = Rng::new(2);
+        let var_y = |class: usize, rng: &mut Rng| -> f32 {
+            let pts = sample_cloud(class, rng);
+            let ys: Vec<f32> = (0..POINTS).map(|i| pts[3 * i + 1]).collect();
+            let m = ys.iter().sum::<f32>() / ys.len() as f32;
+            ys.iter().map(|y| (y - m) * (y - m)).sum::<f32>() / ys.len() as f32
+        };
+        let monitor: f32 = (0..5).map(|_| var_y(5, &mut rng)).sum::<f32>() / 5.0;
+        let bed: f32 = (0..5).map(|_| var_y(1, &mut rng)).sum::<f32>() / 5.0;
+        assert!(monitor > 1.5 * bed, "monitor {monitor} vs bed {bed}");
+    }
+
+    #[test]
+    fn dataset_balanced_and_deterministic() {
+        let a = generate(50, 3);
+        assert_eq!(a.class_counts(), vec![5; 10]);
+        let b = generate(50, 3);
+        assert_eq!(a.data, b.data);
+    }
+}

@@ -1,0 +1,183 @@
+//! Reference layer implementations (f32 and integer-exact) used to
+//! (a) validate chip outputs for the MAC-precision / BER panels
+//! (Figs. 4l, 5h) and (b) count operations for the OPs / energy rows
+//! (Figs. 4m, 5i). The *trained* forward/backward runs in the AOT
+//! artifacts; these are oracles and meters, not the training path.
+
+use super::tensor::Tensor;
+
+/// Conv2d, NCHW x OIHW, stride 1, padding `pad`. Masked output channels
+/// produce zeros (a pruned kernel's rows are never addressed).
+pub fn conv2d(x: &Tensor, w: &Tensor, mask: Option<&[f32]>, pad: usize) -> Tensor {
+    let (n, c, h, wd) = dims4(x);
+    let (oc, ic, kh, kw) = dims4(w);
+    assert_eq!(c, ic, "channel mismatch");
+    let oh = h + 2 * pad - kh + 1;
+    let ow = wd + 2 * pad - kw + 1;
+    let mut out = Tensor::zeros(vec![n, oc, oh, ow]);
+    for b in 0..n {
+        for o in 0..oc {
+            if let Some(m) = mask {
+                if m[o] == 0.0 {
+                    continue;
+                }
+            }
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let mut acc = 0.0f32;
+                    for cc in 0..c {
+                        for dy in 0..kh {
+                            for dx in 0..kw {
+                                let iy = y + dy;
+                                let ix = xx + dx;
+                                if iy < pad || ix < pad || iy - pad >= h || ix - pad >= wd {
+                                    continue;
+                                }
+                                acc += x.at(&[b, cc, iy - pad, ix - pad])
+                                    * w.at(&[o, cc, dy, dx]);
+                            }
+                        }
+                    }
+                    out.set(&[b, o, y, xx], acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Integer-exact conv over one output location: binary weights x u8
+/// activations — the same arithmetic the chip's binary VMM performs.
+/// Returns the signed integer MAC result.
+pub fn binary_mac_ref(w_bits: &[bool], x_u8: &[u8]) -> i64 {
+    w_bits
+        .iter()
+        .zip(x_u8)
+        .map(|(&b, &v)| if b { v as i64 } else { -(v as i64) })
+        .sum()
+}
+
+/// 2x2 max-pool.
+pub fn maxpool2(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = dims4(x);
+    let mut out = Tensor::zeros(vec![n, c, h / 2, w / 2]);
+    for b in 0..n {
+        for cc in 0..c {
+            for y in 0..h / 2 {
+                for xx in 0..w / 2 {
+                    let m = x
+                        .at(&[b, cc, 2 * y, 2 * xx])
+                        .max(x.at(&[b, cc, 2 * y, 2 * xx + 1]))
+                        .max(x.at(&[b, cc, 2 * y + 1, 2 * xx]))
+                        .max(x.at(&[b, cc, 2 * y + 1, 2 * xx + 1]));
+                    out.set(&[b, cc, y, xx], m);
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn relu(x: Tensor) -> Tensor {
+    x.map(|v| v.max(0.0))
+}
+
+/// Fully connected: (B, I) x (I, O) + bias.
+pub fn fc(x: &Tensor, w: &Tensor, bias: &[f32]) -> Tensor {
+    let (b, i) = dims2(x);
+    let (i2, o) = dims2(w);
+    assert_eq!(i, i2);
+    assert_eq!(bias.len(), o);
+    let mut out = Tensor::zeros(vec![b, o]);
+    for bb in 0..b {
+        for oo in 0..o {
+            let mut acc = bias[oo];
+            for ii in 0..i {
+                acc += x.at(&[bb, ii]) * w.at(&[ii, oo]);
+            }
+            out.set(&[bb, oo], acc);
+        }
+    }
+    out
+}
+
+/// MAC count of a conv layer under a kernel mask (Fig. 4m / 5i op meter).
+pub fn conv_macs(
+    live_out: usize,
+    in_channels: usize,
+    kh: usize,
+    kw: usize,
+    oh: usize,
+    ow: usize,
+    batch: usize,
+) -> u64 {
+    (live_out * in_channels * kh * kw * oh * ow * batch) as u64
+}
+
+fn dims4(t: &Tensor) -> (usize, usize, usize, usize) {
+    let s = t.shape();
+    assert_eq!(s.len(), 4, "want 4-d, got {s:?}");
+    (s[0], s[1], s[2], s[3])
+}
+
+fn dims2(t: &Tensor) -> (usize, usize) {
+    let s = t.shape();
+    assert_eq!(s.len(), 2, "want 2-d, got {s:?}");
+    (s[0], s[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn conv_identity_kernel_with_padding() {
+        // 3x3 kernel with 1 at center and pad 1 == identity
+        let x = Tensor::new(vec![1, 1, 3, 3], (1..=9).map(|i| i as f32).collect());
+        let mut w = Tensor::zeros(vec![1, 1, 3, 3]);
+        w.set(&[0, 0, 1, 1], 1.0);
+        let y = conv2d(&x, &w, None, 1);
+        assert_eq!(y.shape(), &[1, 1, 3, 3]);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn conv_masked_channel_is_zero() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::new(vec![1, 2, 4, 4], rng.normal_vec(32));
+        let w = Tensor::new(vec![3, 2, 3, 3], rng.normal_vec(54));
+        let y = conv2d(&x, &w, Some(&[1.0, 0.0, 1.0]), 1);
+        for i in 0..16 {
+            assert_eq!(y.data()[16 + i], 0.0, "masked channel leaked");
+        }
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1., 5., 3., 2.]);
+        let y = maxpool2(&x);
+        assert_eq!(y.data(), &[5.0]);
+    }
+
+    #[test]
+    fn fc_matches_manual() {
+        let x = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let w = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let y = fc(&x, &w, &[10.0, 20.0]);
+        assert_eq!(y.data(), &[1. + 6. + 10., 2. + 8. + 20.]);
+    }
+
+    #[test]
+    fn binary_mac_sign_convention() {
+        assert_eq!(binary_mac_ref(&[true, false], &[3, 5]), 3 - 5);
+    }
+
+    #[test]
+    fn conv_macs_scale_with_live_kernels() {
+        let full = conv_macs(32, 1, 3, 3, 28, 28, 1);
+        let half = conv_macs(16, 1, 3, 3, 28, 28, 1);
+        assert_eq!(full, 2 * half);
+        assert_eq!(full, 32 * 9 * 784);
+    }
+}

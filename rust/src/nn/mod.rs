@@ -1,0 +1,13 @@
+//! Host-side neural-network substrate: tensors, reference layers (used to
+//! validate chip outputs and count operations), quantization, synthetic
+//! datasets, PointNet sampling/grouping, and a t-SNE implementation for
+//! the feature-space panels (Figs. 4f/g, 5d/e).
+
+pub mod data;
+pub mod layers;
+pub mod pointnet;
+pub mod quant;
+pub mod tensor;
+pub mod tsne;
+
+pub use tensor::Tensor;

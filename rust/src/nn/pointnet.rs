@@ -1,0 +1,194 @@
+//! PointNet++ sampling/grouping substrate (set-abstraction geometry).
+//!
+//! Farthest-point sampling and ball-query grouping depend only on point
+//! *coordinates*, never on learned parameters, so the Rust side computes
+//! them once per sample and the AOT JAX graph stays static (DESIGN.md §2).
+//! Output tensors match `python/compile/aot.py::pn_group_specs`:
+//!
+//! * `g1_xyz  (S1, K1, 3)` — SA1 neighbor coords relative to their center
+//! * `g2_idx  (S2, K2)`    — indices into SA1 centers for SA2 groups
+//! * `g2_xyz  (S2, K2, 3)` — grouped SA1-center coords relative to SA2 center
+//! * `c2_xyz  (S2, 3)`     — absolute SA2 center coords
+
+/// Grouping geometry parameters (must mirror aot.py constants).
+#[derive(Clone, Copy, Debug)]
+pub struct GroupingConfig {
+    pub s1: usize,
+    pub k1: usize,
+    pub r1: f32,
+    pub s2: usize,
+    pub k2: usize,
+    pub r2: f32,
+}
+
+impl Default for GroupingConfig {
+    fn default() -> Self {
+        GroupingConfig { s1: 64, k1: 16, r1: 0.25, s2: 16, k2: 8, r2: 0.5 }
+    }
+}
+
+/// The grouped tensors for one cloud (flattened row-major).
+#[derive(Clone, Debug)]
+pub struct Grouped {
+    pub g1_xyz: Vec<f32>,
+    pub g2_idx: Vec<i32>,
+    pub g2_xyz: Vec<f32>,
+    pub c2_xyz: Vec<f32>,
+}
+
+#[inline]
+fn dist2(points: &[f32], i: usize, j: usize) -> f32 {
+    let (a, b) = (&points[3 * i..3 * i + 3], &points[3 * j..3 * j + 3]);
+    (a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2) + (a[2] - b[2]).powi(2)
+}
+
+/// Farthest-point sampling: `k` indices spreading across the cloud.
+/// Deterministic (starts from point 0), O(n*k).
+pub fn farthest_point_sample(points: &[f32], n: usize, k: usize) -> Vec<usize> {
+    assert!(k <= n && n > 0);
+    let mut chosen = Vec::with_capacity(k);
+    let mut min_d2 = vec![f32::INFINITY; n];
+    let mut cur = 0usize;
+    chosen.push(cur);
+    for _ in 1..k {
+        let mut best = 0usize;
+        let mut best_d = -1.0f32;
+        for i in 0..n {
+            let d = dist2(points, i, cur).min(min_d2[i]);
+            min_d2[i] = d;
+            if d > best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        cur = best;
+        chosen.push(cur);
+    }
+    chosen
+}
+
+/// Ball query: up to `k` neighbor indices of `center` within radius `r`;
+/// pads by repeating the nearest found neighbor (PointNet++ convention).
+pub fn ball_query(points: &[f32], n: usize, center: usize, r: f32, k: usize) -> Vec<usize> {
+    let r2 = r * r;
+    let mut found: Vec<(f32, usize)> = (0..n)
+        .filter_map(|i| {
+            let d = dist2(points, i, center);
+            (d <= r2).then_some((d, i))
+        })
+        .collect();
+    found.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut idx: Vec<usize> = found.iter().take(k).map(|&(_, i)| i).collect();
+    if idx.is_empty() {
+        idx.push(center);
+    }
+    while idx.len() < k {
+        idx.push(idx[0]);
+    }
+    idx
+}
+
+/// Full two-level grouping of one cloud (xyz interleaved, length 3n).
+pub fn group_cloud(points: &[f32], cfg: &GroupingConfig) -> Grouped {
+    let n = points.len() / 3;
+    // --- SA1 ---
+    let c1 = farthest_point_sample(points, n, cfg.s1);
+    let mut g1_xyz = Vec::with_capacity(cfg.s1 * cfg.k1 * 3);
+    let mut c1_xyz = Vec::with_capacity(cfg.s1 * 3);
+    for &ci in &c1 {
+        let center = &points[3 * ci..3 * ci + 3];
+        c1_xyz.extend_from_slice(center);
+        for &ni in &ball_query(points, n, ci, cfg.r1, cfg.k1) {
+            let p = &points[3 * ni..3 * ni + 3];
+            g1_xyz.extend_from_slice(&[p[0] - center[0], p[1] - center[1], p[2] - center[2]]);
+        }
+    }
+    // --- SA2 over the S1 centers ---
+    let c2 = farthest_point_sample(&c1_xyz, cfg.s1, cfg.s2);
+    let mut g2_idx = Vec::with_capacity(cfg.s2 * cfg.k2);
+    let mut g2_xyz = Vec::with_capacity(cfg.s2 * cfg.k2 * 3);
+    let mut c2_xyz = Vec::with_capacity(cfg.s2 * 3);
+    for &ci in &c2 {
+        let center = &c1_xyz[3 * ci..3 * ci + 3];
+        c2_xyz.extend_from_slice(center);
+        for &ni in &ball_query(&c1_xyz, cfg.s1, ci, cfg.r2, cfg.k2) {
+            g2_idx.push(ni as i32);
+            let p = &c1_xyz[3 * ni..3 * ni + 3];
+            g2_xyz.extend_from_slice(&[p[0] - center[0], p[1] - center[1], p[2] - center[2]]);
+        }
+    }
+    Grouped { g1_xyz, g2_idx, g2_xyz, c2_xyz }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::data::modelnet;
+    use crate::util::rng::Rng;
+
+    fn cloud(seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        modelnet::sample_cloud(2, &mut rng)
+    }
+
+    #[test]
+    fn fps_indices_are_distinct_and_spread() {
+        let pts = cloud(1);
+        let n = pts.len() / 3;
+        let idx = farthest_point_sample(&pts, n, 32);
+        let mut seen = std::collections::HashSet::new();
+        for &i in &idx {
+            assert!(i < n);
+            assert!(seen.insert(i), "duplicate FPS index {i}");
+        }
+        // spread check: min pairwise distance among FPS points exceeds
+        // the expected min distance of a random subset
+        let min_d = |ids: &[usize]| -> f32 {
+            let mut m = f32::INFINITY;
+            for (a, &i) in ids.iter().enumerate() {
+                for &j in &ids[a + 1..] {
+                    m = m.min(dist2(&pts, i, j));
+                }
+            }
+            m
+        };
+        let random: Vec<usize> = (0..32).collect();
+        assert!(min_d(&idx) >= min_d(&random));
+    }
+
+    #[test]
+    fn ball_query_respects_radius_and_pads() {
+        let pts = cloud(2);
+        let n = pts.len() / 3;
+        let idx = ball_query(&pts, n, 5, 0.25, 16);
+        assert_eq!(idx.len(), 16);
+        for &i in &idx {
+            assert!(dist2(&pts, i, 5) <= 0.25 * 0.25 + 1e-6);
+        }
+        // tiny radius: only the center itself, padded
+        let idx2 = ball_query(&pts, n, 5, 1e-6, 4);
+        assert_eq!(idx2, vec![5, 5, 5, 5]);
+    }
+
+    #[test]
+    fn grouped_shapes_match_aot_specs() {
+        let cfg = GroupingConfig::default();
+        let g = group_cloud(&cloud(3), &cfg);
+        assert_eq!(g.g1_xyz.len(), cfg.s1 * cfg.k1 * 3);
+        assert_eq!(g.g2_idx.len(), cfg.s2 * cfg.k2);
+        assert_eq!(g.g2_xyz.len(), cfg.s2 * cfg.k2 * 3);
+        assert_eq!(g.c2_xyz.len(), cfg.s2 * 3);
+        // g2 indices must address SA1 centers
+        assert!(g.g2_idx.iter().all(|&i| (i as usize) < cfg.s1));
+    }
+
+    #[test]
+    fn relative_coords_are_bounded_by_radius() {
+        let cfg = GroupingConfig::default();
+        let g = group_cloud(&cloud(4), &cfg);
+        for c in g.g1_xyz.chunks(3) {
+            let r = (c[0] * c[0] + c[1] * c[1] + c[2] * c[2]).sqrt();
+            assert!(r <= cfg.r1 + 1e-4, "neighbor outside ball: {r}");
+        }
+    }
+}

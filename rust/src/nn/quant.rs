@@ -1,0 +1,89 @@
+//! Quantizers shared by the chip-in-the-loop path — mirrors the Python
+//! side (`model.binarize_ste` / `fake_quant_int8_ste`) so the bits that
+//! land on RRAM rows are the same bits the AOT graph trains with.
+
+/// Scaled sign binarization of one kernel: bits = sign(w), alpha = mean|w|
+/// (XNOR-Net). Returns (bits, alpha). The bits go on the RRAM row, the
+/// alpha is the digital S&A multiplier.
+pub fn binarize_kernel(w: &[f32]) -> (Vec<bool>, f32) {
+    let alpha = w.iter().map(|x| x.abs()).sum::<f32>() / w.len().max(1) as f32;
+    (w.iter().map(|&x| x >= 0.0).collect(), alpha)
+}
+
+/// Symmetric per-channel INT8 quantization matching the Python
+/// `fake_quant_int8_ste`: scale = max|w| / 127 for one output channel.
+pub fn quantize_channel_int8(w: &[f32]) -> (Vec<i8>, f32) {
+    let max = w.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+    let scale = max / 127.0;
+    (
+        w.iter()
+            .map(|&x| (x / scale).round().clamp(-128.0, 127.0) as i8)
+            .collect(),
+        scale,
+    )
+}
+
+/// Unsigned 8-bit activation quantization (post-ReLU): scale = max/255.
+pub fn quantize_activations_u8(xs: &[f32]) -> (Vec<u8>, f32) {
+    let max = xs.iter().fold(0f32, |m, &x| m.max(x)).max(1e-8);
+    let scale = max / 255.0;
+    (
+        xs.iter()
+            .map(|&x| (x / scale).round().clamp(0.0, 255.0) as u8)
+            .collect(),
+        scale,
+    )
+}
+
+/// Signed int8 activation quantization (pre-activation values).
+pub fn quantize_activations_i8(xs: &[f32]) -> (Vec<i8>, f32) {
+    let max = xs.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+    let scale = max / 127.0;
+    (
+        xs.iter()
+            .map(|&x| (x / scale).round().clamp(-128.0, 127.0) as i8)
+            .collect(),
+        scale,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binarize_matches_python_semantics() {
+        let (bits, alpha) = binarize_kernel(&[0.5, -0.25, 0.0, 1.25]);
+        assert_eq!(bits, vec![true, false, true, true]); // sign(0) = +1
+        assert!((alpha - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn int8_channel_quant_hits_extremes() {
+        let (q, scale) = quantize_channel_int8(&[-2.0, 1.0, 2.0]);
+        assert_eq!(q, vec![-127, 64, 127]);
+        assert!((scale - 2.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn u8_quant_clamps_negatives() {
+        let (q, _) = quantize_activations_u8(&[-1.0, 0.0, 2.0]);
+        assert_eq!(q[0], 0);
+        assert_eq!(q[2], 255);
+    }
+
+    #[test]
+    fn i8_quant_symmetric() {
+        let (q, _) = quantize_activations_i8(&[-3.0, 3.0]);
+        assert_eq!(q, vec![-127, 127]);
+    }
+
+    #[test]
+    fn quant_roundtrip_error_bounded() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 * 0.37).sin()).collect();
+        let (q, s) = quantize_activations_i8(&xs);
+        for (x, qv) in xs.iter().zip(&q) {
+            assert!((x - *qv as f32 * s).abs() <= s * 0.5 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! A small dense f32 tensor (row-major) — just enough for the host-side
+//! reference ops, dataset synthesis, and PJRT literal packing. Heavy
+//! compute lives in the AOT artifacts or the chip simulator, not here.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape without copying; total element count must match.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len(), "reshape mismatch");
+        self.shape = shape;
+        self
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.flat_index(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let i = self.flat_index(idx);
+        self.data[i] = v;
+    }
+
+    #[inline]
+    fn flat_index(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut flat = 0;
+        for (d, (&i, &s)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(i < s, "index {i} out of bounds for dim {d} (size {s})");
+            flat = flat * s + i;
+        }
+        flat
+    }
+
+    /// Slice of one leading-axis entry (e.g. one image of a batch).
+    pub fn subtensor(&self, i: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && i < self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor::new(self.shape[1..].to_vec(), self.data[i * inner..(i + 1) * inner].to_vec())
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        self.data.iter_mut().for_each(|x| *x = f(*x));
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_indexing() {
+        let mut t = Tensor::zeros(vec![2, 3, 4]);
+        t.set(&[1, 2, 3], 7.0);
+        assert_eq!(t.at(&[1, 2, 3]), 7.0);
+        assert_eq!(t.at(&[0, 0, 0]), 0.0);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.len(), 24);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let r = t.clone().reshape(vec![3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "reshape mismatch")]
+    fn reshape_validates() {
+        Tensor::zeros(vec![2, 2]).reshape(vec![5]);
+    }
+
+    #[test]
+    fn subtensor_extracts_batch_entry() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let s = t.subtensor(1);
+        assert_eq!(s.shape(), &[3]);
+        assert_eq!(s.data(), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn map_applies_elementwise() {
+        let t = Tensor::new(vec![3], vec![1., -2., 3.]).map(f32::abs);
+        assert_eq!(t.data(), &[1., 2., 3.]);
+    }
+}

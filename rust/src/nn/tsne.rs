@@ -1,0 +1,229 @@
+//! Minimal exact t-SNE (O(n^2), n <= a few hundred) for the
+//! feature-separability panels (Figs. 4f/g, 5d/e). Standard formulation:
+//! binary-search per-point sigmas to a target perplexity, symmetrize P,
+//! optimize the KL divergence with momentum + early exaggeration.
+
+use crate::util::rng::Rng;
+
+/// t-SNE hyperparameters.
+#[derive(Clone, Debug)]
+pub struct TsneConfig {
+    pub perplexity: f64,
+    pub iters: usize,
+    pub lr: f64,
+    pub early_exaggeration: f64,
+    pub exaggeration_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        // NOTE: this exact O(n^2) implementation uses normalized-P
+        // gradients, so the effective step is ~n x smaller than the
+        // classic van-der-Maaten lr=200 setting — lr ~10 converges.
+        TsneConfig {
+            perplexity: 10.0,
+            iters: 800,
+            lr: 10.0,
+            early_exaggeration: 4.0,
+            exaggeration_iters: 100,
+            seed: 0,
+        }
+    }
+}
+
+/// Embed `n` points of `d` dims (row-major `features`) into 2-D.
+pub fn tsne(features: &[f32], n: usize, d: usize, cfg: &TsneConfig) -> Vec<[f64; 2]> {
+    assert_eq!(features.len(), n * d);
+    assert!(n >= 5, "t-SNE needs a handful of points");
+    // pairwise squared distances
+    let mut d2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let mut s = 0.0f64;
+            for k in 0..d {
+                let diff = (features[i * d + k] - features[j * d + k]) as f64;
+                s += diff * diff;
+            }
+            d2[i * n + j] = s;
+            d2[j * n + i] = s;
+        }
+    }
+    // per-point sigma via binary search on perplexity
+    let target_h = cfg.perplexity.ln();
+    let mut p = vec![0.0f64; n * n];
+    for i in 0..n {
+        let (mut lo, mut hi) = (1e-20f64, 1e20f64);
+        let mut beta = 1.0f64; // 1/(2 sigma^2)
+        for _ in 0..50 {
+            let mut sum = 0.0;
+            for j in 0..n {
+                if j != i {
+                    p[i * n + j] = (-beta * d2[i * n + j]).exp();
+                    sum += p[i * n + j];
+                }
+            }
+            let sum = sum.max(1e-300);
+            let mut h = 0.0;
+            for j in 0..n {
+                if j != i {
+                    let pj = p[i * n + j] / sum;
+                    if pj > 1e-300 {
+                        h -= pj * pj.ln();
+                    }
+                }
+            }
+            if (h - target_h).abs() < 1e-4 {
+                break;
+            }
+            if h > target_h {
+                lo = beta;
+                beta = if hi >= 1e19 { beta * 2.0 } else { (beta + hi) / 2.0 };
+            } else {
+                hi = beta;
+                beta = (beta + lo) / 2.0;
+            }
+        }
+        let row_sum: f64 = (0..n).filter(|&j| j != i).map(|j| p[i * n + j]).sum::<f64>().max(1e-300);
+        for j in 0..n {
+            if j != i {
+                p[i * n + j] /= row_sum;
+            }
+        }
+    }
+    // symmetrize
+    let mut psym = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            psym[i * n + j] = ((p[i * n + j] + p[j * n + i]) / (2.0 * n as f64)).max(1e-12);
+        }
+    }
+    // init + gradient descent
+    let mut rng = Rng::new(cfg.seed);
+    let mut y: Vec<[f64; 2]> = (0..n).map(|_| [rng.normal() * 1e-2, rng.normal() * 1e-2]).collect();
+    let mut vel = vec![[0.0f64; 2]; n];
+    for it in 0..cfg.iters {
+        let exag = if it < cfg.exaggeration_iters { cfg.early_exaggeration } else { 1.0 };
+        // q distribution (student-t)
+        let mut qnum = vec![0.0f64; n * n];
+        let mut qsum = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dx = y[i][0] - y[j][0];
+                let dy = y[i][1] - y[j][1];
+                let q = 1.0 / (1.0 + dx * dx + dy * dy);
+                qnum[i * n + j] = q;
+                qnum[j * n + i] = q;
+                qsum += 2.0 * q;
+            }
+        }
+        let qsum = qsum.max(1e-300);
+        // gradient
+        let momentum = if it < 120 { 0.5 } else { 0.8 };
+        for i in 0..n {
+            let mut g = [0.0f64; 2];
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let q = qnum[i * n + j];
+                let pij = exag * psym[i * n + j];
+                let mult = 4.0 * (pij - q / qsum) * q;
+                g[0] += mult * (y[i][0] - y[j][0]);
+                g[1] += mult * (y[i][1] - y[j][1]);
+            }
+            for k in 0..2 {
+                vel[i][k] = momentum * vel[i][k] - cfg.lr * g[k];
+                y[i][k] += vel[i][k];
+            }
+        }
+    }
+    y
+}
+
+/// Cluster-separation score of an embedding: mean inter-class centroid
+/// distance / mean intra-class spread. Used to assert Figs. 4f-g / 5d-e
+/// qualitatively (after-training features separate better than before).
+pub fn separation_score(embedding: &[[f64; 2]], labels: &[i32], n_classes: usize) -> f64 {
+    let mut centroids = vec![[0.0f64; 2]; n_classes];
+    let mut counts = vec![0usize; n_classes];
+    for (y, &l) in embedding.iter().zip(labels) {
+        centroids[l as usize][0] += y[0];
+        centroids[l as usize][1] += y[1];
+        counts[l as usize] += 1;
+    }
+    for (c, &n) in centroids.iter_mut().zip(&counts) {
+        if n > 0 {
+            c[0] /= n as f64;
+            c[1] /= n as f64;
+        }
+    }
+    let mut intra = 0.0f64;
+    for (y, &l) in embedding.iter().zip(labels) {
+        let c = centroids[l as usize];
+        intra += ((y[0] - c[0]).powi(2) + (y[1] - c[1]).powi(2)).sqrt();
+    }
+    intra /= embedding.len() as f64;
+    let mut inter = 0.0f64;
+    let mut pairs = 0usize;
+    for i in 0..n_classes {
+        for j in (i + 1)..n_classes {
+            if counts[i] > 0 && counts[j] > 0 {
+                inter += ((centroids[i][0] - centroids[j][0]).powi(2)
+                    + (centroids[i][1] - centroids[j][1]).powi(2))
+                .sqrt();
+                pairs += 1;
+            }
+        }
+    }
+    inter / pairs.max(1) as f64 / intra.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated Gaussian blobs in 10-D must embed into three
+    /// separable clusters.
+    #[test]
+    fn blobs_stay_separated() {
+        let mut rng = Rng::new(3);
+        let n_per = 20;
+        let d = 10;
+        let mut feats = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..3 {
+            for _ in 0..n_per {
+                for k in 0..d {
+                    let center = if k == c { 8.0 } else { 0.0 };
+                    feats.push((center + rng.normal() * 0.5) as f32);
+                }
+                labels.push(c as i32);
+            }
+        }
+        let cfg = TsneConfig::default();
+        let y = tsne(&feats, 3 * n_per, d, &cfg);
+        let score = separation_score(&y, &labels, 3);
+        assert!(score > 1.5, "separation too low: {score}");
+    }
+
+    #[test]
+    fn random_features_score_low() {
+        let mut rng = Rng::new(4);
+        let n = 60;
+        let d = 10;
+        let feats: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let labels: Vec<i32> = (0..n).map(|i| (i % 3) as i32).collect();
+        let y = tsne(&feats, n, d, &TsneConfig { iters: 200, ..Default::default() });
+        let score = separation_score(&y, &labels, 3);
+        assert!(score < 1.5, "random features should not separate: {score}");
+    }
+
+    #[test]
+    fn output_is_finite() {
+        let mut rng = Rng::new(5);
+        let feats: Vec<f32> = (0..20 * 4).map(|_| rng.normal() as f32).collect();
+        let y = tsne(&feats, 20, 4, &TsneConfig { iters: 50, ..Default::default() });
+        assert!(y.iter().all(|p| p[0].is_finite() && p[1].is_finite()));
+    }
+}

@@ -1,0 +1,18 @@
+//! The paper's real-time dynamic weight-pruning algorithm (Fig. 1a,
+//! Fig. 4b): during training, monitor pairwise kernel similarity
+//! (Hamming distance over binarized kernels), collect a candidate list of
+//! overly similar pairs, count each kernel's appearance frequency, and
+//! prune kernels whose frequency crosses the threshold — while always
+//! keeping one representative of every similar cluster alive.
+//!
+//! The similarity matrix can come from three interchangeable sources that
+//! agree bit-for-bit:
+//! * the chip's search-in-memory XOR passes ([`crate::cim::similarity`]) — HPN mode,
+//! * the AOT Pallas `similarity` artifact ([`crate::runtime`]),
+//! * the bit-packed software path ([`similarity`] below) — SPN mode.
+
+pub mod scheduler;
+pub mod similarity;
+
+pub use scheduler::{PruneConfig, PruneEvent, PruningScheduler};
+pub use similarity::{pack_bits, packed_hamming, PackedKernels};

@@ -1,0 +1,328 @@
+//! The dynamic pruning scheduler (paper Fig. 4b):
+//!
+//! 1. every `prune_interval` epochs (after a warm-up), build the pairwise
+//!    similarity matrix of each layer's *live* kernels;
+//! 2. kernel pairs whose normalized similarity exceeds `sim_threshold`
+//!    enter the candidate list;
+//! 3. kernels whose candidate-list frequency exceeds `freq_threshold`
+//!    are pruned — except that one representative of every similar
+//!    cluster is always retained, and per-layer / global floors cap the
+//!    total pruning rate.
+//!
+//! NOTE (paper discrepancy): the text says "distances exceeding a
+//! predefined threshold" join the candidate list, but Fig. 4d marks
+//! *excessive similarity* as the prune trigger; we implement similarity
+//! above threshold (see DESIGN.md §4).
+
+use crate::cim::similarity::SimilarityMatrix;
+
+/// Scheduler configuration.
+#[derive(Clone, Debug)]
+pub struct PruneConfig {
+    /// Normalized similarity above which a pair becomes a candidate.
+    pub sim_threshold: f64,
+    /// Candidate-list frequency (number of similar partners) above which
+    /// a kernel may be pruned.
+    pub freq_threshold: usize,
+    /// Epochs between prune evaluations.
+    pub prune_interval: usize,
+    /// Epochs before the first evaluation (let weights differentiate).
+    pub warmup_epochs: usize,
+    /// Hard floor of live kernels per layer.
+    pub min_live_per_layer: usize,
+    /// Global cap on the pruned fraction (0..1).
+    pub max_prune_rate: f64,
+}
+
+impl Default for PruneConfig {
+    fn default() -> Self {
+        PruneConfig {
+            sim_threshold: 0.75,
+            freq_threshold: 1,
+            prune_interval: 2,
+            warmup_epochs: 2,
+            min_live_per_layer: 4,
+            max_prune_rate: 0.60,
+        }
+    }
+}
+
+/// What happened at one prune evaluation.
+#[derive(Clone, Debug, Default)]
+pub struct PruneEvent {
+    pub epoch: usize,
+    /// (layer, kernel) pairs pruned at this event.
+    pub pruned: Vec<(usize, usize)>,
+    /// candidate-list sizes per layer (diagnostics / Fig. 4e).
+    pub candidates_per_layer: Vec<usize>,
+}
+
+/// Per-layer live masks + pruning bookkeeping.
+#[derive(Clone, Debug)]
+pub struct PruningScheduler {
+    cfg: PruneConfig,
+    /// live[layer][kernel]
+    live: Vec<Vec<bool>>,
+    /// weights (parameter count) per kernel of each layer, for the
+    /// Fig. 4i "total weights" curve.
+    weights_per_kernel: Vec<usize>,
+    events: Vec<PruneEvent>,
+}
+
+impl PruningScheduler {
+    /// `layer_sizes[(kernels, weights_per_kernel)]` per prunable layer.
+    pub fn new(cfg: PruneConfig, layer_sizes: &[(usize, usize)]) -> Self {
+        PruningScheduler {
+            cfg,
+            live: layer_sizes.iter().map(|&(k, _)| vec![true; k]).collect(),
+            weights_per_kernel: layer_sizes.iter().map(|&(_, w)| w).collect(),
+            events: Vec::new(),
+        }
+    }
+
+    pub fn cfg(&self) -> &PruneConfig {
+        &self.cfg
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn live_mask(&self, layer: usize) -> &[bool] {
+        &self.live[layer]
+    }
+
+    /// Float masks (1.0 live / 0.0 pruned) in the artifact's layout.
+    pub fn mask_f32(&self, layer: usize) -> Vec<f32> {
+        self.live[layer].iter().map(|&b| if b { 1.0 } else { 0.0 }).collect()
+    }
+
+    pub fn live_count(&self, layer: usize) -> usize {
+        self.live[layer].iter().filter(|&&b| b).count()
+    }
+
+    pub fn total_kernels(&self) -> usize {
+        self.live.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn total_live(&self) -> usize {
+        self.live.iter().map(|l| l.iter().filter(|&&b| b).count()).sum()
+    }
+
+    /// Live parameter count (Fig. 4i right axis).
+    pub fn total_live_weights(&self) -> usize {
+        self.live
+            .iter()
+            .zip(&self.weights_per_kernel)
+            .map(|(l, &w)| l.iter().filter(|&&b| b).count() * w)
+            .sum()
+    }
+
+    /// Fraction of kernels pruned so far.
+    pub fn prune_rate(&self) -> f64 {
+        1.0 - self.total_live() as f64 / self.total_kernels().max(1) as f64
+    }
+
+    pub fn events(&self) -> &[PruneEvent] {
+        &self.events
+    }
+
+    /// Is `epoch` a prune-evaluation epoch?
+    pub fn is_prune_epoch(&self, epoch: usize) -> bool {
+        epoch >= self.cfg.warmup_epochs
+            && (epoch - self.cfg.warmup_epochs) % self.cfg.prune_interval == 0
+    }
+
+    /// Run one prune evaluation given per-layer similarity matrices of
+    /// the *current* live kernels (entries for pruned kernels must be
+    /// u32::MAX, as all three similarity sources produce).
+    pub fn evaluate(&mut self, epoch: usize, sims: &[SimilarityMatrix]) -> PruneEvent {
+        assert_eq!(sims.len(), self.live.len(), "one matrix per layer");
+        let mut event = PruneEvent { epoch, ..Default::default() };
+        let total = self.total_kernels();
+        for (layer, sim) in sims.iter().enumerate() {
+            let k = sim.k;
+            assert_eq!(k, self.live[layer].len(), "layer {layer} size");
+            // 1) candidate pairs + per-kernel frequency
+            let mut freq = vec![0usize; k];
+            let mut pairs: Vec<(usize, usize, f64)> = Vec::new();
+            for i in 0..k {
+                for j in (i + 1)..k {
+                    if sim.dist[i * k + j] == u32::MAX {
+                        continue;
+                    }
+                    let s = sim.similarity(i, j);
+                    if s > self.cfg.sim_threshold {
+                        freq[i] += 1;
+                        freq[j] += 1;
+                        pairs.push((i, j, s));
+                    }
+                }
+            }
+            event.candidates_per_layer.push(pairs.len());
+            // 2) prune by descending frequency, most-redundant first
+            let mut order: Vec<usize> = (0..k).collect();
+            order.sort_by(|&a, &b| freq[b].cmp(&freq[a]).then(b.cmp(&a)));
+            for &i in &order {
+                if freq[i] < self.cfg.freq_threshold || !self.live[layer][i] {
+                    continue;
+                }
+                // floors: per-layer minimum and global rate cap
+                if self.live_count(layer) <= self.cfg.min_live_per_layer {
+                    break;
+                }
+                let rate_after = 1.0 - (self.total_live() - 1) as f64 / total as f64;
+                if rate_after > self.cfg.max_prune_rate {
+                    break;
+                }
+                // cluster representative: keep i alive if every similar
+                // partner of i is already pruned
+                let partners_alive = pairs
+                    .iter()
+                    .filter(|&&(a, b, _)| a == i || b == i)
+                    .any(|&(a, b, _)| {
+                        let other = if a == i { b } else { a };
+                        self.live[layer][other]
+                    });
+                if !partners_alive {
+                    continue;
+                }
+                self.live[layer][i] = false;
+                event.pruned.push((layer, i));
+            }
+        }
+        self.events.push(event.clone());
+        event
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::similarity::PackedKernels;
+    use crate::util::rng::Rng;
+
+    /// Build kernels where groups share the same sign pattern.
+    fn clustered_kernels(groups: &[usize], n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for (g, &count) in groups.iter().enumerate() {
+            let proto: Vec<f32> = (0..n)
+                .map(|i| if (i + g) % (g + 2) == 0 { 1.0 } else { -1.0 })
+                .collect();
+            for c in 0..count {
+                // tiny magnitude jitter, same signs -> similarity 1.0
+                let k: Vec<f32> = proto
+                    .iter()
+                    .map(|&v| v * (1.0 + 0.1 * rng.f32()))
+                    .collect();
+                let _ = c;
+                out.push(k);
+            }
+        }
+        out
+    }
+
+    fn sim_of(kernels: &[Vec<f32>], live: &[bool]) -> SimilarityMatrix {
+        PackedKernels::from_kernels(kernels).similarity_matrix(live)
+    }
+
+    #[test]
+    fn prunes_duplicates_but_keeps_representative() {
+        let kernels = clustered_kernels(&[4, 3, 1], 64, 1);
+        let mut sched = PruningScheduler::new(
+            PruneConfig { min_live_per_layer: 1, max_prune_rate: 1.0, ..Default::default() },
+            &[(8, 64)],
+        );
+        let sim = sim_of(&kernels, sched.live_mask(0));
+        let ev = sched.evaluate(2, &[sim]);
+        assert!(!ev.pruned.is_empty());
+        // exactly one representative per cluster must survive
+        assert_eq!(sched.live_count(0), 3, "live: {:?}", sched.live_mask(0));
+        // cluster of size 1 (last kernel) must survive
+        assert!(sched.live_mask(0)[7]);
+    }
+
+    #[test]
+    fn respects_min_live_floor() {
+        let kernels = clustered_kernels(&[6], 64, 2); // all identical-ish
+        let mut sched = PruningScheduler::new(
+            PruneConfig { min_live_per_layer: 4, ..Default::default() },
+            &[(6, 64)],
+        );
+        let sim = sim_of(&kernels, sched.live_mask(0));
+        sched.evaluate(2, &[sim]);
+        assert!(sched.live_count(0) >= 4);
+    }
+
+    #[test]
+    fn respects_global_rate_cap() {
+        let kernels = clustered_kernels(&[10], 64, 3);
+        let mut sched = PruningScheduler::new(
+            PruneConfig {
+                min_live_per_layer: 1,
+                max_prune_rate: 0.30,
+                ..Default::default()
+            },
+            &[(10, 64)],
+        );
+        let sim = sim_of(&kernels, sched.live_mask(0));
+        sched.evaluate(2, &[sim]);
+        assert!(sched.prune_rate() <= 0.30 + 1e-9);
+    }
+
+    #[test]
+    fn dissimilar_kernels_are_untouched() {
+        let mut rng = Rng::new(4);
+        let kernels: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..128).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut sched = PruningScheduler::new(PruneConfig::default(), &[(8, 128)]);
+        let sim = sim_of(&kernels, sched.live_mask(0));
+        let ev = sched.evaluate(2, &[sim]);
+        // random 128-bit kernels essentially never reach 0.75 similarity
+        assert!(ev.pruned.is_empty(), "pruned {:?}", ev.pruned);
+        assert_eq!(sched.prune_rate(), 0.0);
+    }
+
+    #[test]
+    fn prune_epoch_schedule() {
+        let sched = PruningScheduler::new(
+            PruneConfig { warmup_epochs: 3, prune_interval: 2, ..Default::default() },
+            &[(4, 9)],
+        );
+        let epochs: Vec<usize> = (0..10).filter(|&e| sched.is_prune_epoch(e)).collect();
+        assert_eq!(epochs, vec![3, 5, 7, 9]);
+    }
+
+    #[test]
+    fn weights_accounting_tracks_pruning() {
+        let kernels = clustered_kernels(&[5, 1], 32, 5);
+        let mut sched = PruningScheduler::new(
+            PruneConfig { min_live_per_layer: 1, ..Default::default() },
+            &[(6, 32)],
+        );
+        assert_eq!(sched.total_live_weights(), 6 * 32);
+        let sim = sim_of(&kernels, sched.live_mask(0));
+        sched.evaluate(2, &[sim]);
+        assert_eq!(sched.total_live_weights(), sched.total_live() * 32);
+        assert!(sched.total_live() < 6);
+    }
+
+    #[test]
+    fn second_evaluation_skips_pruned_kernels() {
+        let kernels = clustered_kernels(&[4], 64, 6);
+        let mut sched = PruningScheduler::new(
+            PruneConfig { min_live_per_layer: 1, ..Default::default() },
+            &[(4, 64)],
+        );
+        let sim = sim_of(&kernels, sched.live_mask(0));
+        sched.evaluate(2, &[sim]);
+        let live_after_first = sched.total_live();
+        // re-evaluate with the updated live mask: sole survivor stays
+        let sim2 = sim_of(&kernels, sched.live_mask(0));
+        let ev2 = sched.evaluate(4, &[sim2]);
+        assert!(ev2.pruned.is_empty());
+        assert_eq!(sched.total_live(), live_after_first);
+    }
+}

@@ -1,0 +1,168 @@
+//! Host tensor <-> `xla::Literal` conversion.
+
+use xla::{ArrayShape, ElementType, Literal};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A host-side tensor of one of the dtypes the artifacts use.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    I8(Vec<i8>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, d) | HostTensor::I32(_, d) | HostTensor::I8(_, d) => d,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v, _) => v.len(),
+            HostTensor::I32(v, _) => v.len(),
+            HostTensor::I8(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+            HostTensor::I8(..) => DType::I8,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            HostTensor::I32(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Unwrap f32 data or panic with the artifact context.
+    pub fn expect_f32(&self, what: &str) -> &[f32] {
+        self.as_f32().unwrap_or_else(|| panic!("{what}: expected f32, got {:?}", self.dtype()))
+    }
+
+    pub fn expect_i32(&self, what: &str) -> &[i32] {
+        self.as_i32().unwrap_or_else(|| panic!("{what}: expected i32, got {:?}", self.dtype()))
+    }
+
+    /// Validate against a manifest spec.
+    pub fn check(&self, spec: &TensorSpec, ctx: &str) -> Result<(), String> {
+        if self.dtype() != spec.dtype {
+            return Err(format!("{ctx}: dtype {:?} != spec {:?}", self.dtype(), spec.dtype));
+        }
+        if self.dims() != spec.dims.as_slice() {
+            return Err(format!("{ctx}: dims {:?} != spec {:?}", self.dims(), spec.dims));
+        }
+        Ok(())
+    }
+
+    /// Convert to an XLA literal (copies). Uses the untyped-bytes
+    /// constructor because the crate's `NativeType` (vec1) does not cover
+    /// i8, while `ElementType` does.
+    pub fn to_literal(&self) -> Result<Literal, xla::Error> {
+        fn as_bytes<T>(v: &[T]) -> &[u8] {
+            // SAFETY: plain-old-data reinterpretation for upload only.
+            unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+            }
+        }
+        match self {
+            HostTensor::F32(v, d) => {
+                Literal::create_from_shape_and_untyped_data(ElementType::F32, d, as_bytes(v))
+            }
+            HostTensor::I32(v, d) => {
+                Literal::create_from_shape_and_untyped_data(ElementType::S32, d, as_bytes(v))
+            }
+            HostTensor::I8(v, d) => {
+                Literal::create_from_shape_and_untyped_data(ElementType::S8, d, as_bytes(v))
+            }
+        }
+    }
+
+    /// Convert from an XLA literal (copies), recovering dims.
+    pub fn from_literal(lit: &Literal) -> Result<Self, String> {
+        let shape: ArrayShape = lit
+            .array_shape()
+            .map_err(|e| format!("literal shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(HostTensor::F32(
+                lit.to_vec::<f32>().map_err(|e| e.to_string())?,
+                dims,
+            )),
+            ElementType::S32 => Ok(HostTensor::I32(
+                lit.to_vec::<i32>().map_err(|e| e.to_string())?,
+                dims,
+            )),
+            ElementType::S8 => Ok(HostTensor::I8(
+                lit.to_vec::<i8>().map_err(|e| e.to_string())?,
+                dims,
+            )),
+            other => Err(format!("unsupported literal type {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn roundtrip_scalar() {
+        let t = HostTensor::scalar_f32(2.5);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn roundtrip_i8_and_i32() {
+        for t in [
+            HostTensor::I8(vec![-1, 0, 1, 2], vec![4]),
+            HostTensor::I32(vec![7, -9], vec![2]),
+        ] {
+            let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn check_validates_spec() {
+        let t = HostTensor::F32(vec![0.0; 6], vec![2, 3]);
+        let ok = TensorSpec { dtype: DType::F32, dims: vec![2, 3] };
+        let bad_dims = TensorSpec { dtype: DType::F32, dims: vec![3, 2] };
+        let bad_ty = TensorSpec { dtype: DType::I32, dims: vec![2, 3] };
+        assert!(t.check(&ok, "x").is_ok());
+        assert!(t.check(&bad_dims, "x").is_err());
+        assert!(t.check(&bad_ty, "x").is_err());
+    }
+}

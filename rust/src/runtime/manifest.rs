@@ -1,0 +1,194 @@
+//! Parser for `artifacts/manifest.txt`, the signature contract emitted by
+//! `python/compile/aot.py`. The runtime validates every execution against
+//! it, so a drifted artifact fails loudly instead of feeding garbage.
+//!
+//! Format (line-oriented):
+//! ```text
+//! artifact mnist_train file=mnist_train.hlo.txt inputs=14 outputs=10
+//!   in 0 float32 32,1,3,3
+//!   ...
+//!   out 9 int32 scalar
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Element type of a tensor in the manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            "int8" => Ok(DType::I8),
+            other => Err(format!("unsupported dtype {other:?}")),
+        }
+    }
+}
+
+/// Shape+dtype of one argument.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One artifact's signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>, String> {
+    if s == "scalar" {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|d| d.parse().map_err(|_| format!("bad dim {d:?}")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut m = Manifest::default();
+        let mut current: Option<ArtifactSpec> = None;
+        for (no, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = t.split_whitespace().collect();
+            match fields[0] {
+                "artifact" => {
+                    if let Some(done) = current.take() {
+                        m.artifacts.insert(done.name.clone(), done);
+                    }
+                    let name = fields.get(1).ok_or(format!("line {no}: missing name"))?;
+                    let mut file = String::new();
+                    for f in &fields[2..] {
+                        if let Some(v) = f.strip_prefix("file=") {
+                            file = v.to_string();
+                        }
+                    }
+                    if file.is_empty() {
+                        return Err(format!("line {no}: missing file="));
+                    }
+                    current = Some(ArtifactSpec {
+                        name: name.to_string(),
+                        file,
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    });
+                }
+                "in" | "out" => {
+                    let spec = current
+                        .as_mut()
+                        .ok_or(format!("line {no}: arg before artifact"))?;
+                    if fields.len() != 4 {
+                        return Err(format!("line {no}: want `in IDX DTYPE DIMS`"));
+                    }
+                    let ts = TensorSpec {
+                        dtype: DType::parse(fields[2]).map_err(|e| format!("line {no}: {e}"))?,
+                        dims: parse_dims(fields[3]).map_err(|e| format!("line {no}: {e}"))?,
+                    };
+                    if fields[0] == "in" {
+                        spec.inputs.push(ts);
+                    } else {
+                        spec.outputs.push(ts);
+                    }
+                }
+                other => return Err(format!("line {no}: unknown record {other:?}")),
+            }
+        }
+        if let Some(done) = current.take() {
+            m.artifacts.insert(done.name.clone(), done);
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, String> {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact similarity file=similarity.hlo.txt inputs=1 outputs=1
+  in 0 int8 64,576
+  out 0 int32 64,64
+artifact mnist_train file=mnist_train.hlo.txt inputs=3 outputs=2
+  in 0 float32 32,1,3,3
+  in 1 int32 64
+  in 2 float32 scalar
+  out 0 float32 32,1,3,3
+  out 1 float32 scalar
+";
+
+    #[test]
+    fn parses_two_artifacts() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let sim = m.get("similarity").unwrap();
+        assert_eq!(sim.file, "similarity.hlo.txt");
+        assert_eq!(sim.inputs[0], TensorSpec { dtype: DType::I8, dims: vec![64, 576] });
+        assert_eq!(sim.outputs[0].elements(), 64 * 64);
+        let t = m.get("mnist_train").unwrap();
+        assert_eq!(t.inputs.len(), 3);
+        assert_eq!(t.inputs[2].dims, Vec::<usize>::new());
+        assert_eq!(t.inputs[2].elements(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("in 0 float32 1").is_err()); // arg before artifact
+        assert!(Manifest::parse("artifact x").is_err()); // missing file=
+        assert!(Manifest::parse("garbage here").is_err());
+        assert!(Manifest::parse("artifact x file=y\n  in 0 float64 1").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.txt");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        for name in ["mnist_train", "mnist_eval", "pointnet_train", "similarity"] {
+            assert!(m.get(name).is_some(), "missing artifact {name}");
+        }
+        let t = m.get("mnist_train").unwrap();
+        assert_eq!(t.inputs.len(), 14);
+        assert_eq!(t.outputs.len(), 10);
+    }
+}

@@ -1,0 +1,92 @@
+//! Property-testing driver (proptest is not in the offline vendored crate
+//! set): generates N random cases from a seeded generator and reports the
+//! failing seed for reproduction.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random property checks. `gen` builds an input from an Rng;
+/// `prop` returns Err(description) on violation. Panics with the case
+/// seed on failure so the case can be replayed exactly.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(why) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {case_seed:#x}):\n  {why}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Shrinking helper for vec inputs: try removing chunks while the
+/// property still fails, to report a smaller counterexample.
+pub fn shrink_vec<T: Clone + std::fmt::Debug>(
+    mut input: Vec<T>,
+    mut fails: impl FnMut(&[T]) -> bool,
+) -> Vec<T> {
+    let mut chunk = input.len() / 2;
+    while chunk > 0 {
+        let mut i = 0;
+        while i + chunk <= input.len() {
+            let mut candidate = input.clone();
+            candidate.drain(i..i + chunk);
+            if fails(&candidate) {
+                input = candidate;
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    input
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_valid_property() {
+        forall(
+            "abs is non-negative",
+            1,
+            100,
+            |rng| rng.normal(),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failures() {
+        forall(
+            "always fails",
+            2,
+            10,
+            |rng| rng.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrink_finds_minimal_failing_vec() {
+        // property fails iff the vec contains a 7
+        let input = vec![1, 2, 7, 3, 4, 5, 6];
+        let out = shrink_vec(input, |v| v.contains(&7));
+        assert_eq!(out, vec![7]);
+    }
+}

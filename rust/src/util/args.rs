@@ -1,0 +1,179 @@
+//! Minimal CLI argument parser (the offline image has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands; generates usage text from registered options.
+
+use std::collections::HashMap;
+
+/// Declarative option spec for usage text.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Parse a raw token list (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self, String> {
+        let mut a = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminates option parsing
+                    a.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.opts.insert(rest.to_string(), v);
+                } else {
+                    a.flags.push(rest.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    /// Parse the process arguments after the given number of leading
+    /// tokens (1 = skip argv[0], 2 = skip argv[0] + subcommand).
+    pub fn from_env(skip: usize) -> Result<Self, String> {
+        Args::parse(std::env::args().skip(skip))
+    }
+
+    pub fn describe(&mut self, specs: Vec<OptSpec>) -> &mut Self {
+        self.specs = specs;
+        self
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self
+                .opts
+                .get(name)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// All parsed option keys (for unknown-option validation).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(|s| s.as_str()).chain(self.flags.iter().map(|s| s.as_str()))
+    }
+
+    /// Error if any provided option is not in `allowed`.
+    pub fn reject_unknown(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.keys() {
+            if !allowed.contains(&k) {
+                return Err(format!(
+                    "unknown option --{k}; allowed: {}",
+                    allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("usage: {prog} [options]\n");
+        for spec in &self.specs {
+            let kind = if spec.is_flag { "" } else { " <value>" };
+            let def = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\t{}{def}\n", spec.name, spec.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        // NOTE: a bare `--flag` followed by a non-option token would
+        // consume it as a value; flags therefore come last or use
+        // `--flag=true`. Subcommands are parsed before options anyway.
+        let a = Args::parse(toks("run --epochs 30 --seed=42 --verbose")).unwrap();
+        assert_eq!(a.get("epochs"), Some("30"));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn parse_or_with_defaults() {
+        let a = Args::parse(toks("--lr 0.05")).unwrap();
+        assert_eq!(a.parse_or("lr", 0.1f64).unwrap(), 0.05);
+        assert_eq!(a.parse_or("epochs", 30usize).unwrap(), 30);
+        assert!(a.parse_or::<usize>("lr", 1).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = Args::parse(toks("--x 1 -- --not-an-option")).unwrap();
+        assert_eq!(a.get("x"), Some("1"));
+        assert_eq!(a.positional(), &["--not-an-option".to_string()]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(toks("--fast")).unwrap();
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn reject_unknown_options() {
+        let a = Args::parse(toks("--good 1 --bad 2")).unwrap();
+        assert!(a.reject_unknown(&["good"]).is_err());
+        assert!(a.reject_unknown(&["good", "bad"]).is_ok());
+    }
+}

@@ -1,0 +1,274 @@
+//! Config-file parser: a pragmatic TOML subset (the offline image has no
+//! `serde`/`toml`). Supports `[section]` headers, `key = value` pairs with
+//! string/bool/int/float/array values, `#` comments, and dotted lookup
+//! (`section.key`). Used by the experiment launcher so sweeps live in
+//! checked-in config files rather than code.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// A parsed config: flat map from "section.key" (or bare "key") to value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {0}: {1}")]
+    Parse(usize, String),
+    #[error("missing key {0:?}")]
+    Missing(String),
+    #[error("key {0:?} has wrong type (found {1})")]
+    Type(String, String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+fn parse_scalar(raw: &str, line_no: usize) -> Result<Value, ConfigError> {
+    let t = raw.trim();
+    if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+        return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+    }
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare strings allowed for ergonomics (mode = hpn)
+    if !t.is_empty() && !t.contains(['[', ']', '=']) {
+        return Ok(Value::Str(t.to_string()));
+    }
+    Err(ConfigError::Parse(line_no, format!("cannot parse value {t:?}")))
+}
+
+fn parse_value(raw: &str, line_no: usize) -> Result<Value, ConfigError> {
+    let t = raw.trim();
+    if t.starts_with('[') {
+        if !t.ends_with(']') {
+            return Err(ConfigError::Parse(line_no, "unterminated array".into()));
+        }
+        let inner = &t[1..t.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_scalar(part, line_no)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    parse_scalar(t, line_no)
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (i, raw_line) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = match raw_line.find('#') {
+                // a '#' inside quotes would be nice to keep, but config
+                // strings here never contain '#'
+                Some(pos) => &raw_line[..pos],
+                None => raw_line,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(ConfigError::Parse(line_no, "bad section header".into()));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::Parse(line_no, format!("expected key = value, got {line:?}")))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            cfg.entries.insert(key, parse_value(v, line_no)?);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, ConfigError> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn require_float(&self, key: &str) -> Result<f64, ConfigError> {
+        self.get(key)
+            .ok_or_else(|| ConfigError::Missing(key.into()))?
+            .as_float()
+            .ok_or_else(|| ConfigError::Type(key.into(), "non-float".into()))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Merge another config over this one (other wins).
+    pub fn merge(&mut self, other: Config) {
+        self.entries.extend(other.entries);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+seed = 42
+[chip]
+rows = 512
+cols = 32
+vform_mean = 1.89      # volts
+levels = [2, 4, 8, 16]
+name = "block-one"
+mode = hpn
+digital = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.int_or("seed", 0), 42);
+        assert_eq!(c.int_or("chip.rows", 0), 512);
+        assert!((c.float_or("chip.vform_mean", 0.0) - 1.89).abs() < 1e-12);
+        assert_eq!(c.str_or("chip.name", ""), "block-one");
+        assert_eq!(c.str_or("chip.mode", ""), "hpn");
+        assert!(c.bool_or("chip.digital", false));
+        let levels = c.get("chip.levels").unwrap().as_array().unwrap();
+        assert_eq!(levels.len(), 4);
+        assert_eq!(levels[3].as_int(), Some(16));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.float_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("nonsense without equals").is_err());
+        assert!(Config::parse("[unclosed\nx=1").is_err());
+        assert!(Config::parse("a = [1, 2").is_err());
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = Config::parse("x = 1\ny = 2").unwrap();
+        let b = Config::parse("y = 3").unwrap();
+        a.merge(b);
+        assert_eq!(a.int_or("x", 0), 1);
+        assert_eq!(a.int_or("y", 0), 3);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let c = Config::parse("x = 1").unwrap();
+        assert!(c.require_float("nope").is_err());
+        assert!(c.require_float("x").is_ok());
+    }
+}

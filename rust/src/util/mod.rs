@@ -1,0 +1,11 @@
+//! Small self-contained substrates this repo ships in place of the crates
+//! that are unavailable in the offline image (clap/serde/rand/tracing):
+//! a deterministic PRNG, a CLI argument parser, a config-file parser, a
+//! statistics toolkit, a tiny JSON writer, and an env-filtered logger.
+
+pub mod args;
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
