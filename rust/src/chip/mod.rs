@@ -100,6 +100,22 @@ impl ChipConfig {
     }
 }
 
+/// Lifetime wear counters for endurance-aware scheduling. Unlike the
+/// energy/timing ledgers these are **never reset** by
+/// [`Chip::reset_ledgers`]: the serve placer ranks chips by them to
+/// spread programming wear across a pool ([`crate::serve::placement`]).
+#[derive(Clone, Debug, Default)]
+pub struct WearLedger {
+    /// Write-verify pulses applied over the chip's lifetime (forming +
+    /// programming) — the quantity RRAM endurance is specified against.
+    pub write_pulses: u64,
+    /// Logical cells successfully (re)programmed.
+    pub programmed_cells: u64,
+    /// Word-line activations (read/compute wear is negligible for RRAM
+    /// but the count sizes the WRC duty cycle).
+    pub wl_activations: u64,
+}
+
 /// One RRAM block with its periphery state.
 struct Block {
     array: Array1T1R,
@@ -121,9 +137,17 @@ pub struct Chip {
     acc: Accumulator,
     pub energy: EnergyLedger,
     pub timing: TimingLedger,
+    pub wear: WearLedger,
     area: AreaModel,
     formed: bool,
 }
+
+// The serve subsystem moves chips into per-worker threads; keep `Chip`
+// (and everything it owns) `Send`.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<Chip>();
+};
 
 impl Chip {
     pub fn new(cfg: ChipConfig, rng: &mut Rng) -> Self {
@@ -152,6 +176,7 @@ impl Chip {
             acc: Accumulator::new(cols),
             energy: EnergyLedger::default(),
             timing: TimingLedger::default(),
+            wear: WearLedger::default(),
             area: AreaModel::default(),
             formed: false,
             blocks,
@@ -178,6 +203,7 @@ impl Chip {
             let rep = b.array.form_all();
             // forming pulses: one write-class pulse per cell
             self.energy.rram_write_pulses += (self.cfg.rows * self.cfg.cols) as u64;
+            self.wear.write_pulses += (self.cfg.rows * self.cfg.cols) as u64;
             self.timing.program_cycles +=
                 (self.cfg.rows * self.cfg.cols) as u64 * self.cfg.timing.write_pulse_cycles;
             yields.push(rep.yield_frac);
@@ -205,9 +231,11 @@ impl Chip {
         let pulses = b.array.program_cell(pr, pc, target);
         let used = pulses.unwrap_or(b.array.cfg().prog_max_iters) as u64;
         self.energy.rram_write_pulses += used;
+        self.wear.write_pulses += used;
         self.timing.program_cycles += used * self.cfg.timing.write_pulse_cycles;
         if pulses.is_some() {
             b.shadow[pr * self.cfg.cols + pc] = value;
+            self.wear.programmed_cells += 1;
             true
         } else {
             false
@@ -312,8 +340,70 @@ impl Chip {
         }
         self.energy.compute_cycle(n as u64, with_acc);
         self.timing.compute_cycles += 1;
+        self.wear.wl_activations += 1;
         let _ = pop;
         out
+    }
+
+    /// Sense one logical row's data columns in a single WL activation and
+    /// return them bit-packed (bit `i` = data column `i`). This is the
+    /// read half of a batched row-parallel burst: the word line stays
+    /// selected while the caller streams many X vectors against the
+    /// returned word, accounting the column-side events with
+    /// [`Chip::account_batched_passes`]. Behaviourally identical to
+    /// reading the bits through [`Chip::read_bit`] (ECC plan included).
+    pub fn sense_row_packed(&mut self, block: usize, row: usize) -> u64 {
+        assert!(self.formed, "sense before forming");
+        let n = self.cfg.data_cols();
+        debug_assert!(n <= 64, "packed sense needs <= 64 data columns");
+        let read_path = self.cfg.read_path;
+        let cols = self.cfg.cols;
+        let rref = self.cfg.device.rref_1bit();
+        let mut word = 0u64;
+        {
+            let b = &mut self.blocks[block];
+            let plan = b.ecc.plan_row_ref(row, &b.stuck_map).expect("unmapped row");
+            b.wl.select(plan.phys_row);
+            b.bl.note_broadcast();
+            match read_path {
+                ReadPath::Digital => {
+                    let base = plan.phys_row * cols;
+                    for (i, &pc) in plan.col_map.iter().enumerate() {
+                        if b.shadow[base + pc] >= 2 {
+                            word |= 1u64 << i;
+                        }
+                    }
+                }
+                ReadPath::Electrical => {
+                    let phys_row = plan.phys_row;
+                    let mut map = [0usize; MAX_COLS];
+                    map[..plan.col_map.len()].copy_from_slice(&plan.col_map);
+                    let n_map = plan.col_map.len();
+                    let all = b.array.read_row_bits(phys_row, rref);
+                    for (i, &pc) in map[..n_map].iter().enumerate() {
+                        if all[pc] {
+                            word |= 1u64 << i;
+                        }
+                    }
+                }
+            }
+        }
+        self.energy.sense_cycle(n as u64);
+        self.timing.compute_cycles += 1;
+        self.wear.wl_activations += 1;
+        word
+    }
+
+    /// Account a row-parallel batched burst: `passes` X vectors streamed
+    /// over `cols` columns of an already-selected row (the WRC walk was
+    /// paid by the preceding [`Chip::sense_row_packed`]). The batched VMM
+    /// in [`crate::cim::vmm`] computes on the packed sensed word and
+    /// charges the chip through this hook, so ledgers stay faithful while
+    /// the simulation runs at popcount speed (§Perf, same philosophy as
+    /// [`ReadPath::Digital`]).
+    pub fn account_batched_passes(&mut self, cols: u64, passes: u64, with_acc: bool) {
+        self.energy.batched_passes(cols, passes, with_acc);
+        self.timing.compute_cycles += passes;
     }
 
     /// Search-in-memory pass: XOR a stored row against another stored row
@@ -363,6 +453,7 @@ impl Chip {
             self.energy.rram_reads += n as u64;
             self.energy.rr_senses += n as u64;
         }
+        self.wear.wl_activations += 1; // row B's read activation
         let x = [true; MAX_COLS]; // X=1 exposes W xor K directly
         let out = self.logic_pass(block_a, row_a, LogicOp::Xor, &x[..n], &k_bits[..n], false);
         self.timing.search_cycles += 1;
@@ -409,11 +500,13 @@ impl Chip {
         self.energy.compute_cycle(n as u64, true);
         self.energy.rr_senses += n as u64; // 2-bit sense = 2 comparisons
         self.timing.compute_cycles += 1;
+        self.wear.wl_activations += 1;
         out
     }
 
     /// Zero all energy/timing counters (e.g. after forming/programming,
-    /// so a measurement window covers only the compute phase).
+    /// so a measurement window covers only the compute phase). The
+    /// lifetime [`WearLedger`] is deliberately *not* reset.
     pub fn reset_ledgers(&mut self) {
         self.energy = EnergyLedger::default();
         self.timing = TimingLedger::default();
@@ -541,6 +634,74 @@ mod tests {
         // WRC must dominate (Fig. 3e)
         let shares = chip.energy_breakdown().shares();
         assert_eq!(shares[0].0, "WRC");
+    }
+
+    #[test]
+    fn sense_row_packed_matches_read_bits() {
+        let mut chip = test_chip(8);
+        let n = chip.cfg().data_cols();
+        for col in 0..n {
+            assert!(chip.program_bit(0, 9, col, (col * 7) % 3 == 0));
+        }
+        let word = chip.sense_row_packed(0, 9);
+        for col in 0..n {
+            assert_eq!((word >> col) & 1 == 1, chip.read_bit(0, 9, col), "col {col}");
+        }
+        // columns beyond the data width must be zero
+        assert_eq!(word >> n, 0);
+    }
+
+    #[test]
+    fn sense_row_packed_agrees_across_read_paths() {
+        let mut rng = Rng::new(9);
+        let mut cfg = ChipConfig::small_test();
+        cfg.read_path = ReadPath::Electrical;
+        let mut chip_e = Chip::new(cfg.clone(), &mut rng.fork(1));
+        cfg.read_path = ReadPath::Digital;
+        let mut chip_d = Chip::new(cfg, &mut rng.fork(1));
+        chip_e.form();
+        chip_d.form();
+        for col in 0..16 {
+            chip_e.program_bit(0, 4, col, col % 3 != 0);
+            chip_d.program_bit(0, 4, col, col % 3 != 0);
+        }
+        assert_eq!(chip_e.sense_row_packed(0, 4), chip_d.sense_row_packed(0, 4));
+    }
+
+    #[test]
+    fn wear_ledger_survives_reset_and_tracks_programming() {
+        let mut chip = test_chip(10);
+        let after_forming = chip.wear.write_pulses;
+        assert!(after_forming > 0, "forming must wear the array");
+        chip.program_bit(0, 0, 0, true);
+        assert!(chip.wear.write_pulses > after_forming);
+        assert_eq!(chip.wear.programmed_cells, 1);
+        let wear = chip.wear.clone();
+        chip.reset_ledgers();
+        assert_eq!(chip.wear.write_pulses, wear.write_pulses, "reset must keep wear");
+        assert_eq!(chip.energy.rram_write_pulses, 0);
+    }
+
+    #[test]
+    fn batched_pass_accounting_is_cheaper_than_unbatched() {
+        let mut chip = test_chip(11);
+        let n = chip.cfg().data_cols();
+        for col in 0..n {
+            chip.program_bit(0, 3, col, true);
+        }
+        chip.reset_ledgers();
+        let _ = chip.sense_row_packed(0, 3);
+        chip.account_batched_passes(n as u64, 200, true);
+        let batched = chip.energy_breakdown().total_pj();
+        chip.reset_ledgers();
+        for _ in 0..200 {
+            chip.logic_pass(0, 3, LogicOp::And, &vec![true; n], &vec![true; n], true);
+        }
+        let unbatched = chip.energy_breakdown().total_pj();
+        assert!(
+            batched < unbatched * 0.5,
+            "batched {batched} pJ !<< unbatched {unbatched} pJ"
+        );
     }
 
     #[test]

@@ -81,6 +81,27 @@ pub struct RowSpan {
     pub len: usize,
 }
 
+impl RowSpan {
+    /// Cells per row segment (full rows, then the tail) — the geometry
+    /// the batched VMM packs activation windows against.
+    pub fn seg_widths(&self, per_row: usize) -> Vec<usize> {
+        segment_widths(self.len, per_row)
+    }
+}
+
+/// Segment widths of an `n_cells` vector striped over `per_row`-wide
+/// rows: every span of `n_cells` allocated by [`RowAllocator::alloc`]
+/// has exactly this geometry, so all kernels of one layer share it and
+/// one packed activation window serves every kernel (see
+/// [`crate::cim::vmm::pack_windows`]).
+pub fn segment_widths(n_cells: usize, per_row: usize) -> Vec<usize> {
+    assert!(n_cells > 0 && per_row > 0);
+    let need = n_cells.div_ceil(per_row);
+    (0..need)
+        .map(|s| if s + 1 == need { n_cells - (need - 1) * per_row } else { per_row })
+        .collect()
+}
+
 /// Sequential allocator of array rows across the chip's blocks.
 #[derive(Clone, Debug)]
 pub struct RowAllocator {
@@ -263,6 +284,21 @@ mod tests {
         let span = alloc.alloc(4 * ws.len()).unwrap();
         assert_eq!(store_int8(&mut c, &span, &ws), 0);
         assert_eq!(load_int8(&mut c, &span), ws);
+    }
+
+    #[test]
+    fn segment_widths_match_allocated_spans() {
+        let c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let per_row = alloc.data_cols;
+        for n in [1, per_row - 1, per_row, per_row + 1, 3 * per_row + 5] {
+            let span = alloc.alloc(n).unwrap();
+            let widths = span.seg_widths(per_row);
+            assert_eq!(widths, segment_widths(n, per_row));
+            assert_eq!(widths.len(), span.slots.len());
+            assert_eq!(widths.iter().sum::<usize>(), n);
+            assert_eq!(*widths.last().unwrap(), span.tail_width);
+        }
     }
 
     #[test]

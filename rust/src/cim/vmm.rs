@@ -90,6 +90,131 @@ pub fn int8_dot(chip: &mut Chip, span: &RowSpan, x: &[i8]) -> i64 {
     s - 128 * sum_ux - 128 * sum_uw + n * 128 * 128
 }
 
+// ---------------------------------------------------------------------------
+// Batched multi-row VMM (the serve subsystem's hot path): sense a span's
+// rows once, then stream many activation vectors bit-serially against the
+// packed sensed words. Bit-exact equal to per-vector `binary_dot_u8`,
+// with the WRC row-walk amortized across the whole batch and the
+// simulation running at u64-popcount speed.
+// ---------------------------------------------------------------------------
+
+/// A span's stored bits after one sensing burst: one packed word per row
+/// segment (bit `i` = cell `i` of that segment, ECC already applied).
+#[derive(Clone, Debug)]
+pub struct PackedSpan {
+    pub words: Vec<u64>,
+    pub len: usize,
+}
+
+/// Sense every row segment of `span` once (one WL activation each) and
+/// return the stored bits packed per segment.
+pub fn sense_span_packed(chip: &mut Chip, span: &RowSpan) -> PackedSpan {
+    let per_row = chip.cfg().data_cols();
+    let words = segments(span, per_row)
+        .map(|(block, row, _start, width)| {
+            let w = chip.sense_row_packed(block, row);
+            if width >= 64 {
+                w
+            } else {
+                w & ((1u64 << width) - 1)
+            }
+        })
+        .collect();
+    PackedSpan { words, len: span.len }
+}
+
+/// Activation windows packed for batched bit-serial streaming: for each
+/// window and input bit plane, one u64 per span segment. Every kernel of
+/// a layer shares the same segment geometry
+/// ([`crate::cim::mapping::segment_widths`]), so one packed batch serves
+/// all of a layer's kernels.
+#[derive(Clone, Debug)]
+pub struct PackedWindows {
+    pub n_windows: usize,
+    pub seg_widths: Vec<usize>,
+    /// `planes[(window * 8 + bit) * n_seg + seg]`
+    pub planes: Vec<u64>,
+    /// per-window activation sums for the `2S - sum(x)` sign fold
+    pub sum_x: Vec<i64>,
+}
+
+/// Pack u8 activation windows into bit planes aligned to a span's row
+/// segments. `flat` holds consecutive windows of `sum(seg_widths)` cells
+/// each (exactly the layout [`crate::serve::model::im2col_u8`] emits),
+/// so the serving hot path packs straight from the im2col buffer with no
+/// per-window allocation.
+pub fn pack_windows(flat: &[u8], seg_widths: &[usize]) -> PackedWindows {
+    let n_seg = seg_widths.len();
+    let len: usize = seg_widths.iter().sum();
+    assert!(len > 0 && flat.len() % len == 0, "flat windows vs span segments");
+    let n_windows = flat.len() / len;
+    let mut planes = vec![0u64; n_windows * 8 * n_seg];
+    let mut sum_x = Vec::with_capacity(n_windows);
+    for (wi, win) in flat.chunks_exact(len).enumerate() {
+        sum_x.push(win.iter().map(|&v| v as i64).sum());
+        let mut cell = 0usize;
+        for (seg, &sw) in seg_widths.iter().enumerate() {
+            for i in 0..sw {
+                let v = win[cell];
+                cell += 1;
+                if v == 0 {
+                    continue;
+                }
+                for bit in 0..8usize {
+                    if (v >> bit) & 1 == 1 {
+                        planes[(wi * 8 + bit) * n_seg + seg] |= 1u64 << i;
+                    }
+                }
+            }
+        }
+    }
+    PackedWindows {
+        n_windows,
+        seg_widths: seg_widths.to_vec(),
+        planes,
+        sum_x,
+    }
+}
+
+/// Batched binary dots: sense the span once, stream every packed window
+/// bit-serially (8 planes) against it in AND/popcount mode. Returns one
+/// signed dot per window, bit-exact equal to [`binary_dot_u8`].
+pub fn binary_dots_batched(chip: &mut Chip, span: &RowSpan, pw: &PackedWindows) -> Vec<i64> {
+    let ps = sense_span_packed(chip, span);
+    let n_seg = pw.seg_widths.len();
+    assert_eq!(ps.words.len(), n_seg, "span geometry vs packed windows");
+    let mut out = Vec::with_capacity(pw.n_windows);
+    for wi in 0..pw.n_windows {
+        let mut s: i64 = 0;
+        for bit in 0..8usize {
+            let base = (wi * 8 + bit) * n_seg;
+            let mut pop: i64 = 0;
+            for (seg, &w) in ps.words.iter().enumerate() {
+                pop += (w & pw.planes[base + seg]).count_ones() as i64;
+            }
+            s += pop << bit;
+        }
+        out.push(2 * s - pw.sum_x[wi]);
+    }
+    // column-side events: 8 bit planes per window per segment. Charge the
+    // full data-column width per pass — the bit lines broadcast across
+    // the whole row exactly as in the unbatched `logic_pass`, so batched
+    // and unbatched serving differ only by the amortized WRC walk.
+    let cols = chip.cfg().data_cols() as u64;
+    chip.account_batched_passes(cols, 8 * pw.n_windows as u64 * n_seg as u64, true);
+    out
+}
+
+/// Convenience batched form of [`binary_dot_u8`]: packs `xs` internally.
+pub fn binary_dot_u8_batch(chip: &mut Chip, span: &RowSpan, xs: &[Vec<u8>]) -> Vec<i64> {
+    assert!(xs.iter().all(|x| x.len() == span.len), "activation length vs span");
+    let per_row = chip.cfg().data_cols();
+    let widths = span.seg_widths(per_row);
+    let flat = xs.concat();
+    let pw = pack_windows(&flat, &widths);
+    binary_dots_batched(chip, span, &pw)
+}
+
 /// Reference software dot for validation: binary weights from bits.
 pub fn binary_dot_ref(bits: &[bool], x: &[u8]) -> i64 {
     bits.iter()
@@ -162,6 +287,72 @@ mod tests {
         let span = alloc.alloc(16).unwrap();
         store_int8(&mut c, &span, &w);
         assert_eq!(int8_dot(&mut c, &span, &x), int8_dot_ref(&w, &x));
+    }
+
+    #[test]
+    fn batched_dots_match_unbatched_bit_exactly() {
+        let mut c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let mut rng = Rng::new(21);
+        let n = 77; // spills across 3 rows
+        let bits: Vec<bool> = (0..n).map(|_| rng.chance(0.5)).collect();
+        let span = alloc.alloc(n).unwrap();
+        assert_eq!(store_bits(&mut c, &span, &bits), 0);
+        let xs: Vec<Vec<u8>> = (0..5)
+            .map(|_| (0..n).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        let batched = binary_dot_u8_batch(&mut c, &span, &xs);
+        for (x, &got) in xs.iter().zip(&batched) {
+            assert_eq!(got, binary_dot_u8(&mut c, &span, x));
+            assert_eq!(got, binary_dot_ref(&bits, x));
+        }
+    }
+
+    #[test]
+    fn batched_dots_amortize_row_selection_energy() {
+        let mut c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let mut rng = Rng::new(22);
+        let n = 60;
+        let bits: Vec<bool> = (0..n).map(|_| rng.chance(0.5)).collect();
+        let span = alloc.alloc(n).unwrap();
+        store_bits(&mut c, &span, &bits);
+        let xs: Vec<Vec<u8>> = (0..32)
+            .map(|_| (0..n).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        c.reset_ledgers();
+        let _ = binary_dot_u8_batch(&mut c, &span, &xs);
+        let batched_pj = c.energy_breakdown().total_pj();
+        c.reset_ledgers();
+        for x in &xs {
+            let _ = binary_dot_u8(&mut c, &span, x);
+        }
+        let unbatched_pj = c.energy_breakdown().total_pj();
+        assert!(
+            batched_pj < unbatched_pj * 0.5,
+            "batched {batched_pj} pJ !<< unbatched {unbatched_pj} pJ"
+        );
+    }
+
+    #[test]
+    fn batched_dots_survive_stuck_faults_via_ecc() {
+        let mut rng = Rng::new(23);
+        let mut cfg = ChipConfig::small_test();
+        cfg.device.stuck_fault_prob = 0.01;
+        let mut c = Chip::new(cfg, &mut rng);
+        c.form();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let mut r = Rng::new(24);
+        let n = 45;
+        let bits: Vec<bool> = (0..n).map(|_| r.chance(0.5)).collect();
+        let span = alloc.alloc(n).unwrap();
+        assert_eq!(store_bits(&mut c, &span, &bits), 0, "ECC should absorb faults");
+        let xs: Vec<Vec<u8>> = (0..4)
+            .map(|_| (0..n).map(|_| r.below(200) as u8).collect())
+            .collect();
+        for (x, got) in xs.iter().zip(binary_dot_u8_batch(&mut c, &span, &xs)) {
+            assert_eq!(got, binary_dot_ref(&bits, x));
+        }
     }
 
     #[test]

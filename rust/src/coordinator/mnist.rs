@@ -137,6 +137,17 @@ impl MnistTrainer {
         &self.sched
     }
 
+    pub fn test_set(&self) -> &Dataset {
+        &self.test_set
+    }
+
+    /// Export the current (trained, pruned) parameters as a servable
+    /// bundle for the [`crate::serve`] subsystem: binarized conv filters
+    /// with their digital scales plus the live masks and FC head.
+    pub fn export_bundle(&self) -> crate::serve::ModelBundle {
+        crate::serve::ModelBundle::from_params(&self.params, &self.sched.live_masks())
+    }
+
     fn train_artifact(&self) -> &'static str {
         if self.cfg.use_pallas { "mnist_train" } else { "mnist_train_fast" }
     }
@@ -467,9 +478,10 @@ mod tests {
     use super::*;
 
     fn artifacts_ready() -> bool {
-        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-            .join("artifacts/manifest.txt")
-            .exists()
+        cfg!(feature = "pjrt")
+            && std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                .join("artifacts/manifest.txt")
+                .exists()
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //!   substrate: a transaction-level simulator of the paper's fully digital
 //!   180 nm 1T1R RRAM compute-in-memory chip ([`device`], [`chip`],
 //!   [`cim`]), the dynamic-pruning algorithm ([`pruning`]), baselines
-//!   ([`baselines`]), and the training orchestrator ([`coordinator`]).
+//!   ([`baselines`]), the training orchestrator ([`coordinator`]), and
+//!   the batched multi-chip inference serving subsystem ([`serve`]):
+//!   wear-aware shard placement over a chip pool, request coalescing,
+//!   and worker-per-chip execution.
 //! * **Layer 2** — JAX models (`python/compile/model.py`), AOT-lowered to
 //!   HLO text once; executed from Rust via PJRT ([`runtime`]).
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) inside those
@@ -31,6 +34,7 @@ pub mod metrics;
 pub mod nn;
 pub mod pruning;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;
 
@@ -44,5 +48,6 @@ pub mod prelude {
     pub use crate::device::{Array1T1R, DeviceConfig};
     pub use crate::pruning::{PruneConfig, PruningScheduler};
     pub use crate::runtime::{Engine, HostTensor};
+    pub use crate::serve::{BatcherConfig, ModelBundle, PoolConfig, Server, ServerConfig};
     pub use crate::util::rng::Rng;
 }

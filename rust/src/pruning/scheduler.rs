@@ -97,6 +97,12 @@ impl PruningScheduler {
         self.live[layer].iter().map(|&b| if b { 1.0 } else { 0.0 }).collect()
     }
 
+    /// All live masks, one per layer — the export format the serve
+    /// placer consumes ([`crate::serve::ModelBundle::from_params`]).
+    pub fn live_masks(&self) -> Vec<Vec<bool>> {
+        self.live.clone()
+    }
+
     pub fn live_count(&self, layer: usize) -> usize {
         self.live[layer].iter().filter(|&&b| b).count()
     }

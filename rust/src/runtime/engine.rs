@@ -1,0 +1,173 @@
+//! The PJRT-backed [`Engine`] (compiled only with the `pjrt` feature):
+//! manifest + PJRT CPU client + compiled executables.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{ExecStats, HostTensor, Manifest};
+
+/// The artifact engine: manifest + PJRT client + compiled executables.
+pub struct Engine {
+    dir: PathBuf,
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: HashMap<String, ExecStats>,
+}
+
+impl Engine {
+    /// Open an artifact directory (must contain manifest.txt).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))
+            .map_err(|e| anyhow!("manifest: {e} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        log::info!(
+            "runtime: PJRT platform={} devices={}, {} artifacts",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Engine { dir, manifest, client, executables: HashMap::new(), stats: HashMap::new() })
+    }
+
+    /// Default artifacts directory (repo root).
+    pub fn open_default() -> Result<Self> {
+        Engine::new(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (and cache) an artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.entry(name.to_string()).or_default().compile_ms = dt;
+        log::info!("runtime: compiled {name} in {dt:.0} ms");
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with validated inputs; returns flat outputs.
+    pub fn run(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.load(name)?;
+        let spec = self.manifest.get(name).unwrap().clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                spec.inputs.len()
+            ));
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            t.check(s, &format!("{name} input {i}")).map_err(|e| anyhow!(e))?;
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<std::result::Result<_, _>>()
+            .context("literal conversion")?;
+        let t0 = Instant::now();
+        let exe = self.executables.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True: unpack the tuple
+        let parts = result.to_tuple().context("untuple result")?;
+        let outs: Vec<HostTensor> = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|e| anyhow!(e))?;
+        if outs.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{name}: {} outputs returned, {} expected",
+                outs.len(),
+                spec.outputs.len()
+            ));
+        }
+        for (i, (t, s)) in outs.iter().zip(&spec.outputs).enumerate() {
+            t.check(s, &format!("{name} output {i}")).map_err(|e| anyhow!(e))?;
+        }
+        let st = self.stats.entry(name.to_string()).or_default();
+        st.calls += 1;
+        st.total_ms += t0.elapsed().as_secs_f64() * 1e3;
+        Ok(outs)
+    }
+
+    pub fn stats(&self) -> &HashMap<String, ExecStats> {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.txt").exists()
+    }
+
+    #[test]
+    fn similarity_artifact_matches_packed_hamming() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut eng = Engine::open_default().unwrap();
+        let spec = eng.manifest().get("similarity").unwrap().clone();
+        let (k, n) = (spec.inputs[0].dims[0], spec.inputs[0].dims[1]);
+        // random bits
+        let mut rng = crate::util::rng::Rng::new(5);
+        let bits: Vec<i8> = (0..k * n).map(|_| rng.chance(0.5) as i8).collect();
+        let out = eng.run("similarity", &[HostTensor::I8(bits.clone(), vec![k, n])]).unwrap();
+        let d = out[0].expect_i32("similarity out");
+        // oracle: packed hamming
+        for i in 0..k.min(8) {
+            for j in 0..k.min(8) {
+                let expect: i32 = (0..n)
+                    .map(|b| (bits[i * n + b] != bits[j * n + b]) as i32)
+                    .sum();
+                assert_eq!(d[i * k + j], expect, "({i},{j})");
+            }
+        }
+        let st = &eng.stats()["similarity"];
+        assert_eq!(st.calls, 1);
+        assert!(st.compile_ms > 0.0);
+    }
+
+    #[test]
+    fn input_validation_rejects_bad_shapes() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut eng = Engine::open_default().unwrap();
+        let err = eng
+            .run("similarity", &[HostTensor::I8(vec![0; 10], vec![10])])
+            .unwrap_err();
+        assert!(err.to_string().contains("dims"), "{err}");
+        let err2 = eng.run("nonexistent", &[]).unwrap_err();
+        assert!(err2.to_string().contains("unknown artifact"));
+    }
+}

@@ -1,5 +1,7 @@
-//! Host tensor <-> `xla::Literal` conversion.
+//! Host-side tensors (always available) and their `xla::Literal`
+//! conversions (compiled only with the `pjrt` feature).
 
+#[cfg(feature = "pjrt")]
 use xla::{ArrayShape, ElementType, Literal};
 
 use super::manifest::{DType, TensorSpec};
@@ -80,6 +82,7 @@ impl HostTensor {
     /// Convert to an XLA literal (copies). Uses the untyped-bytes
     /// constructor because the crate's `NativeType` (vec1) does not cover
     /// i8, while `ElementType` does.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<Literal, xla::Error> {
         fn as_bytes<T>(v: &[T]) -> &[u8] {
             // SAFETY: plain-old-data reinterpretation for upload only.
@@ -101,6 +104,7 @@ impl HostTensor {
     }
 
     /// Convert from an XLA literal (copies), recovering dims.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &Literal) -> Result<Self, String> {
         let shape: ArrayShape = lit
             .array_shape()
@@ -128,6 +132,7 @@ impl HostTensor {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn roundtrip_f32() {
         let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
@@ -136,6 +141,7 @@ mod tests {
         assert_eq!(back, t);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn roundtrip_scalar() {
         let t = HostTensor::scalar_f32(2.5);
@@ -144,6 +150,7 @@ mod tests {
         assert_eq!(back, t);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn roundtrip_i8_and_i32() {
         for t in [

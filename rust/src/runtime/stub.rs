@@ -1,0 +1,64 @@
+//! Offline [`Engine`] stub, compiled when the `pjrt` feature is off.
+//!
+//! The type exists so coordinator / bench / example code typechecks
+//! identically in both builds; construction always fails with an
+//! actionable message instead of a link-time xla_extension requirement.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::{ExecStats, HostTensor, Manifest};
+
+const NO_PJRT: &str = "this build has no PJRT runtime: rebuild with `cargo build --features pjrt` \
+(requires the xla_extension toolchain) to compile and execute the AOT artifacts; the chip \
+simulator, pruning, and serve subsystems work without it";
+
+/// Stub artifact engine: every constructor returns an error explaining
+/// how to enable the real PJRT backend.
+pub struct Engine {
+    manifest: Manifest,
+    stats: HashMap<String, ExecStats>,
+}
+
+impl Engine {
+    /// Always fails in a non-`pjrt` build (see module docs).
+    pub fn new(_dir: impl AsRef<Path>) -> Result<Self> {
+        Err(anyhow!(NO_PJRT))
+    }
+
+    /// Always fails in a non-`pjrt` build (see module docs).
+    pub fn open_default() -> Result<Self> {
+        Err(anyhow!(NO_PJRT))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn load(&mut self, _name: &str) -> Result<()> {
+        Err(anyhow!(NO_PJRT))
+    }
+
+    pub fn run(&mut self, _name: &str, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        Err(anyhow!(NO_PJRT))
+    }
+
+    pub fn stats(&self) -> &HashMap<String, ExecStats> {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_fails_with_actionable_message() {
+        let err = Engine::open_default().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        let err = Engine::new("/nonexistent").unwrap_err();
+        assert!(err.to_string().contains("--features pjrt"), "{err}");
+    }
+}

@@ -1,0 +1,181 @@
+//! Admission queue + batch coalescing: single-image requests enter a
+//! bounded queue and leave as batches sized to fill the arrays'
+//! row-parallel width.
+//!
+//! * **Coalescing** — a batch closes when it reaches `max_batch` images
+//!   or `max_wait` has elapsed since its first request, whichever comes
+//!   first (bounded added latency for sparse traffic).
+//! * **Backpressure** — the queue holds at most `queue_depth` requests.
+//!   Blocking submission ([`std::sync::mpsc::SyncSender::send`]) never
+//!   drops a request; `try_send` surfaces a full queue as an error for
+//!   callers that prefer shedding to waiting.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::time::{Duration, Instant};
+
+/// Batching knobs.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Maximum images coalesced into one batch.
+    pub max_batch: usize,
+    /// Maximum time a batch waits for more images after its first one.
+    pub max_wait: Duration,
+    /// Bound on queued (admitted but unbatched) requests.
+    pub queue_depth: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 256,
+        }
+    }
+}
+
+/// One admitted inference request.
+pub struct Request {
+    pub id: u64,
+    /// Flat grayscale image, `input_hw^2` floats in [0,1].
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+    /// Where the scheduler sends the result.
+    pub reply: Sender<Response>,
+}
+
+/// One served inference.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// Submit-to-reply latency (queueing + batching + compute).
+    pub latency: Duration,
+}
+
+/// The consuming half of the admission queue.
+pub struct Batcher {
+    rx: Receiver<Request>,
+    cfg: BatcherConfig,
+}
+
+impl Batcher {
+    /// Build the bounded admission channel and its batcher.
+    pub fn channel(cfg: BatcherConfig) -> (SyncSender<Request>, Batcher) {
+        assert!(cfg.max_batch > 0 && cfg.queue_depth > 0);
+        let (tx, rx) = sync_channel(cfg.queue_depth);
+        (tx, Batcher { rx, cfg })
+    }
+
+    pub fn cfg(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Block for the next coalesced batch. Returns `None` once every
+    /// submitter has hung up and the queue is drained — the scheduler's
+    /// shutdown signal. A batch always holds 1..=`max_batch` requests.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let first = self.rx.recv().ok()?;
+        let deadline = Instant::now() + self.cfg.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{channel, TrySendError};
+
+    fn request(id: u64) -> (Request, Receiver<Response>) {
+        let (reply, rx) = channel();
+        (
+            Request { id, image: vec![0.0; 4], submitted: Instant::now(), reply },
+            rx,
+        )
+    }
+
+    #[test]
+    fn coalesces_up_to_max_batch() {
+        let (tx, batcher) = Batcher::channel(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+            queue_depth: 16,
+        });
+        let mut replies = Vec::new();
+        for i in 0..10 {
+            let (r, rx) = request(i);
+            tx.send(r).unwrap();
+            replies.push(rx);
+        }
+        drop(tx); // disconnect: batches flush without waiting max_wait
+        let sizes: Vec<usize> = std::iter::from_fn(|| batcher.next_batch())
+            .map(|b| b.len())
+            .collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+        assert!(batcher.next_batch().is_none(), "drained queue ends the stream");
+    }
+
+    #[test]
+    fn batch_order_preserves_admission_order() {
+        let (tx, batcher) = Batcher::channel(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+            queue_depth: 8,
+        });
+        for i in 0..5 {
+            let (r, _rx) = request(i);
+            tx.send(r).unwrap();
+        }
+        drop(tx);
+        let ids: Vec<u64> = batcher.next_batch().unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn max_wait_bounds_partial_batch_latency() {
+        let (tx, batcher) = Batcher::channel(BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(10),
+            queue_depth: 8,
+        });
+        let (r, _rx) = request(0);
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        // sender stays alive: only max_wait can close this batch
+        let batch = batcher.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(9), "closed too early: {waited:?}");
+        assert!(waited < Duration::from_secs(2), "missed the deadline: {waited:?}");
+        drop(tx);
+    }
+
+    #[test]
+    fn queue_depth_bounds_admission() {
+        let (tx, _batcher) = Batcher::channel(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 2,
+        });
+        let (r0, _k0) = request(0);
+        let (r1, _k1) = request(1);
+        let (r2, _k2) = request(2);
+        assert!(tx.try_send(r0).is_ok());
+        assert!(tx.try_send(r1).is_ok());
+        match tx.try_send(r2) {
+            Err(TrySendError::Full(r)) => assert_eq!(r.id, 2, "request returned intact"),
+            other => panic!("expected backpressure, got {:?}", other.map(|_| ()).map_err(|_| ())),
+        }
+    }
+}

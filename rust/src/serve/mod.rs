@@ -1,0 +1,66 @@
+//! Batched, multi-chip inference serving: the subsystem that answers
+//! "how many inferences/sec can a fleet of these chips sustain?".
+//!
+//! A trained (and pruned) model is exported as a [`ModelBundle`]
+//! (binarized conv filters + digital scales + live masks + host-side FC),
+//! sharded filter-by-filter across a [`pool::ChipPool`] by the
+//! **wear-aware placer** ([`placement`]), and driven by a worker-per-chip
+//! [`scheduler::Server`] fed from a coalescing admission queue
+//! ([`batcher`]).
+//!
+//! # Architecture
+//!
+//! ```text
+//!  submit() ──► bounded queue ──► Batcher (max_batch / max_wait)
+//!                                   │ batch of requests
+//!                                   ▼
+//!                         coordinator thread
+//!              quantize u8 → im2col → pack bit planes (shared)
+//!                   │ Job(layer, Arc<PackedWindows>)
+//!         ┌─────────┼─────────────┐
+//!         ▼         ▼             ▼
+//!     worker 0   worker 1  ...  worker N-1     (one thread per Chip;
+//!     chip dots  chip dots      chip dots       weight-stationary shards)
+//!         └─────────┴───────┬─────┘
+//!                           ▼
+//!              scale + bias + ReLU + pool → next layer → FC → reply
+//! ```
+//!
+//! # Model & numeric contract
+//!
+//! * Each conv filter's sign bits live on RRAM rows of exactly one chip
+//!   (weight-stationary). Activations are u8-quantized per image per
+//!   layer and streamed bit-serially (8 planes) against the stored rows —
+//!   the paper's XNOR/popcount binary convolution.
+//! * Chip dots are integer-exact ([`crate::cim::vmm::binary_dots_batched`]),
+//!   so pool-of-N serving output equals the software reference
+//!   ([`ModelBundle::reference_logits`]) bit for bit, regardless of pool
+//!   size, batch size, or thread interleaving.
+//! * Batching amortizes the dominant WRC row-walk energy: the word line
+//!   stays selected while a whole batch streams, which is where the
+//!   nJ/inference win over unbatched serving comes from (Fig. 3e).
+//!
+//! # Knobs
+//!
+//! * [`PoolConfig`] — pool size, per-chip [`crate::chip::ChipConfig`], seed.
+//! * [`BatcherConfig`] — `max_batch` (coalescing width), `max_wait`
+//!   (latency bound for partially filled batches), `queue_depth`
+//!   (admission bound: blocking `submit` gives lossless backpressure,
+//!   `try_submit` surfaces it as an error instead).
+//! * Placement prefers chips with the fewest lifetime
+//!   [`crate::chip::WearLedger::write_pulses`] and routes around tiles
+//!   whose stuck cells defeat the ECC spare budget.
+
+pub mod batcher;
+pub mod model;
+pub mod placement;
+pub mod pool;
+pub mod scheduler;
+pub mod stats;
+
+pub use batcher::{BatcherConfig, Request, Response};
+pub use model::{ConvLayer, ModelBundle};
+pub use placement::{place, Placement, ShardLoc};
+pub use pool::{ChipPool, PoolConfig};
+pub use scheduler::{Server, ServerConfig};
+pub use stats::{ServeReport, ServeStats};

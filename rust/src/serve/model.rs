@@ -1,0 +1,387 @@
+//! The servable model format: binarized conv filters with their digital
+//! scales, live (pruning) masks, and the host-side FC head — everything
+//! the placer and scheduler need, decoupled from training state. Also the
+//! bit-exact software reference the chip pipeline is validated against.
+
+use crate::coordinator::params::ParamSet;
+use crate::nn::quant;
+use crate::util::rng::Rng;
+
+/// One binary conv layer of the servable model.
+#[derive(Clone, Debug)]
+pub struct ConvLayer {
+    pub name: String,
+    pub out_c: usize,
+    pub in_c: usize,
+    pub ksize: usize,
+    /// Per-filter sign bits, each of length `in_c * ksize * ksize`,
+    /// flattened in kernel order (channel-major, then ky, kx).
+    pub bits: Vec<Vec<bool>>,
+    /// Per-filter digital scale alpha = mean|w| (XNOR-Net), applied in
+    /// the S&A stage on the host side of the serve pipeline.
+    pub alpha: Vec<f32>,
+    pub bias: Vec<f32>,
+    /// Live mask from the pruning scheduler; pruned filters occupy no
+    /// RRAM rows and contribute exactly-zero channels.
+    pub live: Vec<bool>,
+    /// 2x2 max-pool after this layer?
+    pub pool: bool,
+}
+
+impl ConvLayer {
+    /// RRAM cells one filter occupies.
+    pub fn kernel_cells(&self) -> usize {
+        self.in_c * self.ksize * self.ksize
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&b| b).count()
+    }
+}
+
+/// A trained model exported for serving.
+#[derive(Clone, Debug)]
+pub struct ModelBundle {
+    pub conv: Vec<ConvLayer>,
+    /// FC weight, row-major `(fc_in, n_classes)` — column `o` is class o.
+    pub fc_w: Vec<f32>,
+    pub fc_b: Vec<f32>,
+    pub fc_in: usize,
+    pub n_classes: usize,
+    /// Input image side length (images are `input_hw^2` grayscale f32).
+    pub input_hw: usize,
+}
+
+impl ModelBundle {
+    /// Export a trained MNIST-CNN [`ParamSet`] (+ per-layer live masks)
+    /// into a servable bundle. The conv weights are binarized exactly as
+    /// the training graph binarizes them (`binarize_ste` semantics).
+    pub fn from_params(params: &ParamSet, live: &[Vec<bool>]) -> ModelBundle {
+        assert_eq!(live.len(), 3, "one live mask per conv layer");
+        let names = [("w1", "b1"), ("w2", "b2"), ("w3", "b3")];
+        let mut conv = Vec::with_capacity(3);
+        for (l, (wn, bn)) in names.iter().enumerate() {
+            let w = params.get(wn);
+            assert_eq!(w.dims.len(), 4, "{wn}: conv weight must be 4-d");
+            let kernels = params.kernels_of(wn);
+            assert_eq!(live[l].len(), kernels.len(), "{wn}: mask size");
+            let mut bits = Vec::with_capacity(kernels.len());
+            let mut alpha = Vec::with_capacity(kernels.len());
+            for kr in &kernels {
+                let (b, a) = quant::binarize_kernel(kr);
+                bits.push(b);
+                alpha.push(a);
+            }
+            conv.push(ConvLayer {
+                name: wn.to_string(),
+                out_c: w.dims[0],
+                in_c: w.dims[1],
+                ksize: w.dims[2],
+                bits,
+                alpha,
+                bias: params.get(bn).data.clone(),
+                live: live[l].clone(),
+                pool: l < 2,
+            });
+        }
+        let wf = params.get("wf");
+        assert_eq!(wf.dims.len(), 2, "wf must be 2-d");
+        ModelBundle {
+            conv,
+            fc_w: wf.data.clone(),
+            fc_b: params.get("bf").data.clone(),
+            fc_in: wf.dims[0],
+            n_classes: wf.dims[1],
+            input_hw: 28,
+        }
+    }
+
+    /// A randomly initialized (He) MNIST-shaped bundle with an evenly
+    /// spread synthetic prune mask — the standard throughput-bench model
+    /// when no trained checkpoint is at hand. `prune_rate` in [0,1);
+    /// every layer keeps at least one live filter.
+    pub fn synthetic_mnist(channels: [usize; 3], prune_rate: f64, seed: u64) -> ModelBundle {
+        assert!((0.0..1.0).contains(&prune_rate));
+        let mut rng = Rng::new(seed ^ 0x5e7e_b00d);
+        let in_chans = [1, channels[0], channels[1]];
+        let mut conv = Vec::with_capacity(3);
+        for l in 0..3 {
+            let (out_c, in_c, k) = (channels[l], in_chans[l], 3usize);
+            let cells = in_c * k * k;
+            let mut bits = Vec::with_capacity(out_c);
+            let mut alpha = Vec::with_capacity(out_c);
+            for _ in 0..out_c {
+                let scale = (2.0 / cells as f64).sqrt();
+                let kr: Vec<f32> = (0..cells).map(|_| (rng.normal() * scale) as f32).collect();
+                let (b, a) = quant::binarize_kernel(&kr);
+                bits.push(b);
+                alpha.push(a);
+            }
+            let p = ((out_c as f64 * prune_rate) as usize).min(out_c.saturating_sub(1));
+            let mut live = vec![true; out_c];
+            for (i, slot) in live.iter_mut().enumerate() {
+                // Bresenham spread: exactly p filters pruned, evenly spaced
+                if (i + 1) * p / out_c > i * p / out_c {
+                    *slot = false;
+                }
+            }
+            conv.push(ConvLayer {
+                name: format!("w{}", l + 1),
+                out_c,
+                in_c,
+                ksize: k,
+                bits,
+                alpha,
+                bias: (0..out_c).map(|_| (rng.normal() * 0.01) as f32).collect(),
+                live,
+                pool: l < 2,
+            });
+        }
+        let fc_in = channels[2] * 7 * 7;
+        let n_classes = 10;
+        let fscale = (2.0 / fc_in as f64).sqrt();
+        ModelBundle {
+            conv,
+            fc_w: (0..fc_in * n_classes).map(|_| (rng.normal() * fscale) as f32).collect(),
+            fc_b: vec![0.0; n_classes],
+            fc_in,
+            n_classes,
+            input_hw: 28,
+        }
+    }
+
+    pub fn total_filters(&self) -> usize {
+        self.conv.iter().map(|l| l.out_c).sum()
+    }
+
+    pub fn live_filters(&self) -> usize {
+        self.conv.iter().map(|l| l.live_count()).sum()
+    }
+
+    /// Array rows the live filters need at `per_row` data columns per row
+    /// — the placer's feasibility measure against pool capacity.
+    pub fn rows_required(&self, per_row: usize) -> usize {
+        self.conv
+            .iter()
+            .map(|l| l.live_count() * l.kernel_cells().div_ceil(per_row))
+            .sum()
+    }
+
+    /// Bit-exact software reference of the serve pipeline for one image:
+    /// per-layer u8 activation quantization, integer binary-conv dots,
+    /// identical scale/bias/ReLU arithmetic, host FC. Chip serving must
+    /// reproduce these logits exactly (see the serve property tests).
+    pub fn reference_logits(&self, image: &[f32]) -> Vec<f32> {
+        assert_eq!(image.len(), self.input_hw * self.input_hw, "image size");
+        let mut x = image.to_vec(); // channel-major (C,H,W), C=1
+        let mut c = 1usize;
+        let mut hw = self.input_hw;
+        for layer in &self.conv {
+            assert_eq!(layer.in_c, c, "{}: channel chain", layer.name);
+            let (q, s) = quant::quantize_activations_u8(&x);
+            let (windows, oh, ow) = im2col_u8(&q, c, hw, hw, layer.ksize, 1);
+            let cells = layer.kernel_cells();
+            let n_pos = oh * ow;
+            let mut y = vec![0.0f32; layer.out_c * n_pos];
+            for (f, bits) in layer.bits.iter().enumerate() {
+                if !layer.live[f] {
+                    continue;
+                }
+                for p in 0..n_pos {
+                    let win = &windows[p * cells..(p + 1) * cells];
+                    let dot = crate::nn::layers::binary_mac_ref(bits, win);
+                    y[f * n_pos + p] = scale_mac(layer.alpha[f], s, dot, layer.bias[f]).max(0.0);
+                }
+            }
+            if layer.pool {
+                x = maxpool2_flat(&y, layer.out_c, oh, ow);
+                hw = oh / 2;
+            } else {
+                x = y;
+                hw = oh;
+            }
+            c = layer.out_c;
+        }
+        assert_eq!(c * hw * hw, self.fc_in, "conv output vs fc head");
+        fc_logits(&x, &self.fc_w, &self.fc_b, self.fc_in, self.n_classes)
+    }
+}
+
+/// The serve pipeline's scale step: integer chip dot -> f32 activation.
+/// One shared function so the chip path and the software reference use
+/// the exact same f32 operation order (bit-exact comparability).
+#[inline]
+pub fn scale_mac(alpha: f32, act_scale: f32, dot: i64, bias: f32) -> f32 {
+    alpha * act_scale * dot as f32 + bias
+}
+
+/// Host FC head shared by reference and scheduler (same accumulation
+/// order, hence bit-exact agreement).
+pub fn fc_logits(x: &[f32], w: &[f32], b: &[f32], fc_in: usize, n_classes: usize) -> Vec<f32> {
+    assert_eq!(x.len(), fc_in);
+    let mut logits = Vec::with_capacity(n_classes);
+    for o in 0..n_classes {
+        let mut acc = b[o];
+        for (i, &xv) in x.iter().enumerate() {
+            acc += xv * w[i * n_classes + o];
+        }
+        logits.push(acc);
+    }
+    logits
+}
+
+/// u8 im2col: stride 1, zero padding `pad`, window layout channel-major
+/// then (ky, kx) — the order conv filters are flattened in. Returns
+/// `(windows, oh, ow)` with `windows` holding `oh*ow` consecutive
+/// `c*k*k`-cell windows.
+pub fn im2col_u8(q: &[u8], c: usize, h: usize, w: usize, k: usize, pad: usize) -> (Vec<u8>, usize, usize) {
+    assert_eq!(q.len(), c * h * w, "activation map size");
+    let oh = h + 2 * pad - k + 1;
+    let ow = w + 2 * pad - k + 1;
+    let cells = c * k * k;
+    let mut out = vec![0u8; oh * ow * cells];
+    for y in 0..oh {
+        for x in 0..ow {
+            let base = (y * ow + x) * cells;
+            let mut j = 0usize;
+            for cc in 0..c {
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let iy = y + ky;
+                        let ix = x + kx;
+                        if iy >= pad && ix >= pad && iy - pad < h && ix - pad < w {
+                            out[base + j] = q[cc * h * w + (iy - pad) * w + (ix - pad)];
+                        }
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+/// 2x2 max-pool over a channel-major `(c, h, w)` map.
+pub fn maxpool2_flat(y: &[f32], c: usize, h: usize, w: usize) -> Vec<f32> {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; c * oh * ow];
+    for cc in 0..c {
+        for yy in 0..oh {
+            for xx in 0..ow {
+                let at = |dy: usize, dx: usize| y[cc * h * w + (2 * yy + dy) * w + 2 * xx + dx];
+                out[cc * oh * ow + yy * ow + xx] =
+                    at(0, 0).max(at(0, 1)).max(at(1, 0)).max(at(1, 1));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::params::Param;
+    use crate::nn::data::mnist;
+
+    #[test]
+    fn from_params_exports_masks_scales_and_fc() {
+        let mut rng = Rng::new(44);
+        let mut p = ParamSet::default();
+        p.push(Param::he("w1", vec![2, 1, 3, 3], 9, &mut rng));
+        p.push(Param::zeros("b1", vec![2]));
+        p.push(Param::he("w2", vec![2, 2, 3, 3], 18, &mut rng));
+        p.push(Param::zeros("b2", vec![2]));
+        p.push(Param::he("w3", vec![2, 2, 3, 3], 18, &mut rng));
+        p.push(Param::zeros("b3", vec![2]));
+        p.push(Param::he("wf", vec![2 * 7 * 7, 10], 98, &mut rng));
+        p.push(Param::zeros("bf", vec![10]));
+        let live = vec![vec![true, false], vec![true, true], vec![false, true]];
+        let m = ModelBundle::from_params(&p, &live);
+        assert_eq!(m.conv.len(), 3);
+        assert_eq!(m.conv[0].live, vec![true, false]);
+        assert_eq!(m.live_filters(), 4);
+        assert_eq!(m.fc_in, 98);
+        assert_eq!(m.n_classes, 10);
+        // bits/alpha mirror binarize_kernel on the raw kernels
+        let kernels = p.kernels_of("w1");
+        let (bits, alpha) = quant::binarize_kernel(&kernels[0]);
+        assert_eq!(m.conv[0].bits[0], bits);
+        assert_eq!(m.conv[0].alpha[0], alpha);
+        // the exported bundle runs end to end
+        let ds = mnist::generate(1, 45);
+        assert_eq!(m.reference_logits(ds.sample(0)).len(), 10);
+    }
+
+    #[test]
+    fn synthetic_bundle_shapes_and_prune_spread() {
+        let m = ModelBundle::synthetic_mnist([32, 64, 32], 0.35, 1);
+        assert_eq!(m.conv.len(), 3);
+        assert_eq!(m.conv[0].in_c, 1);
+        assert_eq!(m.conv[1].in_c, 32);
+        assert_eq!(m.conv[2].in_c, 64);
+        assert_eq!(m.fc_in, 32 * 7 * 7);
+        assert_eq!(m.total_filters(), 128);
+        // ~35% pruned per layer, never below one live filter
+        for l in &m.conv {
+            let pruned = l.out_c - l.live_count();
+            assert_eq!(pruned, (l.out_c as f64 * 0.35) as usize, "{}", l.name);
+            assert!(l.live_count() >= 1);
+        }
+        assert!(m.rows_required(30) < ModelBundle::synthetic_mnist([32, 64, 32], 0.0, 1).rows_required(30));
+    }
+
+    #[test]
+    fn prune_rate_zero_keeps_everything() {
+        let m = ModelBundle::synthetic_mnist([8, 8, 8], 0.0, 2);
+        assert_eq!(m.live_filters(), m.total_filters());
+    }
+
+    #[test]
+    fn im2col_center_window_matches_manual_gather() {
+        // 1 channel, 4x4 map, 3x3 kernel, pad 1
+        let q: Vec<u8> = (1..=16).collect();
+        let (win, oh, ow) = im2col_u8(&q, 1, 4, 4, 3, 1);
+        assert_eq!((oh, ow), (4, 4));
+        // window at (1,1) covers rows 0..3, cols 0..3 of the map
+        let w11 = &win[(1 * 4 + 1) * 9..(1 * 4 + 1) * 9 + 9];
+        assert_eq!(w11, &[1, 2, 3, 5, 6, 7, 9, 10, 11]);
+        // corner (0,0): padding zeros on top/left
+        let w00 = &win[0..9];
+        assert_eq!(w00, &[0, 0, 0, 0, 1, 2, 0, 5, 6]);
+    }
+
+    #[test]
+    fn maxpool_flat_picks_blockwise_max() {
+        // one channel, 2x2 -> 1x1
+        assert_eq!(maxpool2_flat(&[1., 5., 3., 2.], 1, 2, 2), vec![5.0]);
+        // two channels
+        let y = [1., 2., 3., 4., 10., 9., 8., 7.];
+        assert_eq!(maxpool2_flat(&y, 2, 2, 2), vec![4.0, 10.0]);
+    }
+
+    #[test]
+    fn reference_logits_are_deterministic_and_shaped() {
+        let m = ModelBundle::synthetic_mnist([4, 4, 4], 0.3, 3);
+        let ds = mnist::generate(2, 9);
+        let a = m.reference_logits(ds.sample(0));
+        let b = m.reference_logits(ds.sample(0));
+        assert_eq!(a.len(), 10);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+        // different images give different logits
+        assert_ne!(a, m.reference_logits(ds.sample(1)));
+    }
+
+    #[test]
+    fn pruned_filters_zero_their_channels() {
+        let mut m = ModelBundle::synthetic_mnist([4, 4, 4], 0.0, 4);
+        let ds = mnist::generate(1, 5);
+        let base = m.reference_logits(ds.sample(0));
+        // pruning the whole last conv layer except filter 0 changes logits
+        for f in 1..4 {
+            m.conv[2].live[f] = false;
+        }
+        let pruned = m.reference_logits(ds.sample(0));
+        assert_ne!(base, pruned);
+    }
+}

@@ -1,0 +1,228 @@
+//! Wear-aware shard placement: map every live (unpruned) conv filter's
+//! sign bits onto RRAM rows of exactly one pool chip.
+//!
+//! Policy, per filter in layer/filter order:
+//! 1. rank candidate chips by lifetime [`crate::chip::WearLedger`]
+//!    `write_pulses` ascending (least-worn first), ties broken toward
+//!    more free rows — on a fresh pool this degenerates to row-balanced
+//!    round-robin, on a warm pool it steers programming away from tired
+//!    chips;
+//! 2. allocate a [`RowSpan`] on the best candidate and program the bits
+//!    through the ECC plan;
+//! 3. if the store hits cells the ECC spare/backup budget cannot absorb
+//!    (a *stuck tile*), retire that span and retry on the next candidate.
+//!
+//! Pruning is what makes dense models feasible at all on small pools: a
+//! dense 32-64-32 MNIST model needs more rows than one 2x512x32 chip
+//! offers, while the ~35%-pruned model fits — the serving-throughput win
+//! measured by `benches/serve_throughput.rs`.
+
+use anyhow::{anyhow, Result};
+
+use crate::cim::mapping::{store_bits, RowAllocator, RowSpan};
+
+use super::model::ModelBundle;
+use super::pool::ChipPool;
+
+/// Where one live filter's bits physically live.
+#[derive(Clone, Debug)]
+pub struct ShardLoc {
+    pub chip: usize,
+    pub span: RowSpan,
+}
+
+/// The full model-to-pool mapping.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// `shards[layer][filter]` — `None` for pruned filters.
+    pub shards: Vec<Vec<Option<ShardLoc>>>,
+    /// Rows consumed per chip (including rows retired by stuck-tile
+    /// retries).
+    pub rows_used: Vec<usize>,
+    /// Store attempts abandoned because stuck cells defeated the ECC.
+    pub stuck_retries: usize,
+}
+
+impl Placement {
+    /// Number of placed (live) shards.
+    pub fn live_shards(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|l| l.iter().filter(|s| s.is_some()).count())
+            .sum()
+    }
+
+    /// Chips hosting at least one shard.
+    pub fn chips_touched(&self) -> usize {
+        let mut used: Vec<bool> = vec![false; self.rows_used.len()];
+        for layer in &self.shards {
+            for loc in layer.iter().flatten() {
+                used[loc.chip] = true;
+            }
+        }
+        used.iter().filter(|&&b| b).count()
+    }
+}
+
+/// Place (and program) every live filter of `model` onto `pool`.
+/// Fails if some filter fits on no chip (capacity or unrecoverable
+/// faults); on success every live filter is on exactly one chip.
+pub fn place(model: &ModelBundle, pool: &mut ChipPool) -> Result<Placement> {
+    let n = pool.len();
+    if n == 0 {
+        return Err(anyhow!("placement needs a non-empty pool"));
+    }
+    let mut allocs: Vec<RowAllocator> =
+        pool.chips().iter().map(RowAllocator::for_chip).collect();
+    let per_row = allocs[0].data_cols;
+    let capacity = n * pool.rows_per_chip();
+    let required = model.rows_required(per_row);
+    if required > capacity {
+        return Err(anyhow!(
+            "model needs {required} rows but the {n}-chip pool offers {capacity}; \
+             prune harder or grow the pool"
+        ));
+    }
+    let mut shards = Vec::with_capacity(model.conv.len());
+    let mut stuck_retries = 0usize;
+    for layer in &model.conv {
+        let cells = layer.kernel_cells();
+        let mut layer_shards: Vec<Option<ShardLoc>> = Vec::with_capacity(layer.out_c);
+        for f in 0..layer.out_c {
+            if !layer.live[f] {
+                layer_shards.push(None);
+                continue;
+            }
+            let bits = &layer.bits[f];
+            // wear-aware candidate order (recomputed per filter: wear
+            // accrued by this very placement run feeds back immediately)
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by_key(|&c| {
+                (
+                    pool.chips()[c].wear.write_pulses,
+                    usize::MAX - allocs[c].rows_free(),
+                    c,
+                )
+            });
+            let mut placed = None;
+            for &c in &order {
+                let Some(span) = allocs[c].alloc(cells) else {
+                    continue; // chip full
+                };
+                let failures = store_bits(&mut pool.chips_mut()[c], &span, bits);
+                if failures == 0 {
+                    placed = Some(ShardLoc { chip: c, span });
+                    break;
+                }
+                // stuck tile: rows stay retired, try the next chip
+                stuck_retries += 1;
+            }
+            let Some(loc) = placed else {
+                return Err(anyhow!(
+                    "placement failed: layer {} filter {f} ({cells} cells) fits no chip \
+                     ({stuck_retries} stuck-tile retries so far)",
+                    layer.name
+                ));
+            };
+            layer_shards.push(Some(loc));
+        }
+        shards.push(layer_shards);
+    }
+    let rows_used = allocs.iter().map(|a| a.capacity_rows() - a.rows_free()).collect();
+    Ok(Placement { shards, rows_used, stuck_retries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipConfig;
+    use crate::cim::mapping::load_bits;
+    use crate::serve::pool::PoolConfig;
+    use crate::serve::ModelBundle;
+
+    fn small_pool(chips: usize, seed: u64) -> ChipPool {
+        ChipPool::new(&PoolConfig { chips, chip: ChipConfig::small_test(), seed })
+    }
+
+    #[test]
+    fn roundtrip_every_live_filter_on_exactly_one_tile() {
+        let model = ModelBundle::synthetic_mnist([4, 4, 4], 0.3, 11);
+        let mut pool = small_pool(2, 12);
+        let placement = place(&model, &mut pool).unwrap();
+        assert_eq!(placement.shards.len(), 3);
+        for (l, layer) in model.conv.iter().enumerate() {
+            for f in 0..layer.out_c {
+                let loc = &placement.shards[l][f];
+                assert_eq!(loc.is_some(), layer.live[f], "layer {l} filter {f}");
+                if let Some(loc) = loc {
+                    assert!(loc.chip < pool.len());
+                    // bits read back through the ECC are the stored bits
+                    let got = load_bits(&mut pool.chips_mut()[loc.chip], &loc.span);
+                    assert_eq!(&got, &layer.bits[f], "layer {l} filter {f}");
+                }
+            }
+        }
+        assert_eq!(placement.live_shards(), model.live_filters());
+    }
+
+    #[test]
+    fn placement_balances_across_fresh_chips() {
+        let model = ModelBundle::synthetic_mnist([4, 4, 4], 0.0, 13);
+        let mut pool = small_pool(2, 14);
+        let placement = place(&model, &mut pool).unwrap();
+        assert_eq!(placement.chips_touched(), 2, "fresh pool must be load-balanced");
+        assert!(placement.rows_used.iter().all(|&r| r > 0));
+    }
+
+    #[test]
+    fn placement_prefers_less_worn_chips() {
+        let model = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 15);
+        let mut pool = small_pool(2, 16);
+        // artificially age chip 0 far beyond anything placement adds
+        pool.chips_mut()[0].wear.write_pulses += 10_000_000;
+        let placement = place(&model, &mut pool).unwrap();
+        for layer in &placement.shards {
+            for loc in layer.iter().flatten() {
+                assert_eq!(loc.chip, 1, "worn chip must be avoided");
+            }
+        }
+    }
+
+    #[test]
+    fn stuck_tiles_are_skipped() {
+        // chip 0: no ECC spares + heavy stuck faults => most rows
+        // unusable once the tiny backup region is exhausted; chip 1 ideal.
+        let mut bad_cfg = ChipConfig::small_test();
+        bad_cfg.spares_per_row = 0;
+        bad_cfg.device.stuck_fault_prob = 0.05;
+        let mut rng = crate::util::rng::Rng::new(17);
+        let mut bad = crate::chip::Chip::new(bad_cfg, &mut rng.fork(1));
+        bad.form();
+        let mut good = crate::chip::Chip::new(ChipConfig::small_test(), &mut rng.fork(2));
+        good.form();
+        // make the bad chip the preferred candidate
+        good.wear.write_pulses = bad.wear.write_pulses + 1_000_000;
+        let mut pool = ChipPool::from_chips(vec![bad, good]);
+        let model = ModelBundle::synthetic_mnist([4, 4, 4], 0.0, 18);
+        let placement = place(&model, &mut pool).unwrap();
+        assert!(placement.stuck_retries > 0, "expected stuck-tile retries");
+        // every filter still landed somewhere, and reads back intact
+        assert_eq!(placement.live_shards(), model.live_filters());
+        for (l, layer) in model.conv.iter().enumerate() {
+            for (f, loc) in placement.shards[l].iter().enumerate() {
+                let loc = loc.as_ref().unwrap();
+                let got = load_bits(&mut pool.chips_mut()[loc.chip], &loc.span);
+                assert_eq!(&got, &layer.bits[f]);
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_model_fails_with_capacity_error() {
+        // dense MNIST model needs ~1312 rows; one small test chip has 60
+        let model = ModelBundle::synthetic_mnist([32, 64, 32], 0.0, 19);
+        let mut pool = small_pool(1, 20);
+        let err = place(&model, &mut pool).unwrap_err();
+        assert!(err.to_string().contains("rows"), "{err}");
+    }
+}

@@ -1,0 +1,129 @@
+//! The chip pool: N independently fabricated + formed [`Chip`] instances
+//! with their per-chip energy/timing/endurance ledgers. The pool is the
+//! unit the placer shards a model across and the scheduler spawns one
+//! worker thread per member of.
+
+use crate::chip::{Chip, ChipConfig, WearLedger};
+use crate::util::rng::Rng;
+
+/// Pool construction knobs.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Number of chips in the pool.
+    pub chips: usize,
+    /// Per-chip configuration (all pool members share it; their device
+    /// statistics still differ through per-chip RNG forks).
+    pub chip: ChipConfig,
+    /// Root seed for fabrication randomness.
+    pub seed: u64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { chips: 4, chip: ChipConfig::default(), seed: 0x5e7e }
+    }
+}
+
+/// A pool of formed chips.
+pub struct ChipPool {
+    chips: Vec<Chip>,
+}
+
+impl ChipPool {
+    /// Fabricate and form `cfg.chips` chips, each from an independent
+    /// RNG fork (distinct device statistics / stuck maps per chip).
+    pub fn new(cfg: &PoolConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let chips = (0..cfg.chips)
+            .map(|i| {
+                let mut chip = Chip::new(cfg.chip.clone(), &mut rng.fork(0x9001 + i as u64));
+                chip.form();
+                chip
+            })
+            .collect();
+        ChipPool { chips }
+    }
+
+    /// Wrap already-built chips (placement tests, warm pools).
+    pub fn from_chips(chips: Vec<Chip>) -> Self {
+        ChipPool { chips }
+    }
+
+    pub fn len(&self) -> usize {
+        self.chips.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chips.is_empty()
+    }
+
+    pub fn chips(&self) -> &[Chip] {
+        &self.chips
+    }
+
+    pub fn chips_mut(&mut self) -> &mut [Chip] {
+        &mut self.chips
+    }
+
+    /// Hand the chips to the scheduler's worker threads.
+    pub fn into_chips(self) -> Vec<Chip> {
+        self.chips
+    }
+
+    /// Array rows one pool member offers to the placer.
+    pub fn rows_per_chip(&self) -> usize {
+        self.chips
+            .first()
+            .map(|c| c.cfg().blocks * c.cfg().logical_rows())
+            .unwrap_or(0)
+    }
+
+    /// Per-chip lifetime wear snapshot (endurance ledger).
+    pub fn wear(&self) -> Vec<WearLedger> {
+        self.chips.iter().map(|c| c.wear.clone()).collect()
+    }
+
+    /// Total energy currently on the pool's ledgers (pJ).
+    pub fn energy_pj(&self) -> f64 {
+        self.chips.iter().map(|c| c.energy_breakdown().total_pj()).sum()
+    }
+
+    /// Zero every chip's energy/timing ledgers (wear persists) — called
+    /// after placement so serving measurements exclude programming cost.
+    pub fn reset_energy(&mut self) {
+        for c in &mut self.chips {
+            c.reset_ledgers();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_members_are_formed_and_distinct() {
+        let cfg = PoolConfig {
+            chips: 3,
+            chip: ChipConfig::small_test(),
+            seed: 7,
+        };
+        let pool = ChipPool::new(&cfg);
+        assert_eq!(pool.len(), 3);
+        assert!(pool.chips().iter().all(|c| c.is_formed()));
+        assert!(pool.rows_per_chip() > 0);
+        // forming wear is on the ledgers
+        assert!(pool.wear().iter().all(|w| w.write_pulses > 0));
+    }
+
+    #[test]
+    fn reset_energy_keeps_wear() {
+        let cfg = PoolConfig { chips: 1, chip: ChipConfig::small_test(), seed: 8 };
+        let mut pool = ChipPool::new(&cfg);
+        let wear_before = pool.wear()[0].write_pulses;
+        assert!(pool.energy_pj() > 0.0, "forming energy expected");
+        pool.reset_energy();
+        assert_eq!(pool.energy_pj(), 0.0);
+        assert_eq!(pool.wear()[0].write_pulses, wear_before);
+    }
+}

@@ -1,0 +1,395 @@
+//! The serving engine: one worker thread per pool chip plus a
+//! coordinator thread that owns the batcher and the layer pipeline.
+//!
+//! Shards are **weight-stationary** — a filter's dots can only be
+//! computed by the chip holding its rows — so conv work pins to its
+//! chip's queue and load balance comes from the placer spreading filters
+//! evenly. The coordinator fans a batch's packed activation windows out
+//! to every worker with shards in the current layer (`Arc`-shared, built
+//! once per batch per layer), collects the integer dot maps, applies
+//! scale/bias/ReLU/pool on the host, and replies with per-request logits
+//! and latency.
+//!
+//! Numeric contract: a request's logits equal
+//! [`ModelBundle::reference_logits`] bit for bit, for any pool size,
+//! batch size, or thread interleaving — chip dots are integer-exact and
+//! every f32 step is shared with the reference implementation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::chip::Chip;
+use crate::cim::mapping::{segment_widths, RowSpan};
+use crate::cim::vmm::{self, PackedWindows};
+use crate::nn::quant;
+
+use super::batcher::{Batcher, BatcherConfig, Request, Response};
+use super::model::{fc_logits, im2col_u8, maxpool2_flat, scale_mac, ModelBundle};
+use super::placement::{self, Placement};
+use super::pool::{ChipPool, PoolConfig};
+use super::stats::{ServeReport, ServeStats};
+
+/// Server construction knobs.
+#[derive(Clone, Debug, Default)]
+pub struct ServerConfig {
+    pub pool: PoolConfig,
+    pub batcher: BatcherConfig,
+}
+
+/// A layer's worth of work for one chip: compute dots of its shards
+/// against the shared packed windows.
+struct Job {
+    layer: usize,
+    windows: Arc<PackedWindows>,
+}
+
+/// Integer dot maps of one worker for one layer.
+struct JobResult {
+    /// (filter index, dots per window) for every shard the chip holds.
+    dots: Vec<(usize, Vec<i64>)>,
+}
+
+fn worker_loop(
+    mut chip: Chip,
+    shards_by_layer: Vec<Vec<(usize, RowSpan)>>,
+    jobs: Receiver<Job>,
+    results: Sender<JobResult>,
+) -> Chip {
+    while let Ok(job) = jobs.recv() {
+        let mut dots = Vec::with_capacity(shards_by_layer[job.layer].len());
+        for (filter, span) in &shards_by_layer[job.layer] {
+            dots.push((*filter, vmm::binary_dots_batched(&mut chip, span, &job.windows)));
+        }
+        if results.send(JobResult { dots }).is_err() {
+            break; // coordinator gone: shut down
+        }
+    }
+    chip
+}
+
+/// A running inference server. Submit images, then [`Server::shutdown`]
+/// to drain the queue and collect the [`ServeReport`].
+pub struct Server {
+    submit_tx: Option<SyncSender<Request>>,
+    next_id: AtomicU64,
+    /// Expected request image length (`input_hw^2`), checked at
+    /// admission so a malformed request cannot kill the pipeline.
+    image_len: usize,
+    coordinator: Option<JoinHandle<ServeReport>>,
+}
+
+impl Server {
+    /// Fabricate the pool, place (program) the model wear-aware, reset
+    /// the energy ledgers so serving measurements exclude programming,
+    /// and spawn the worker + coordinator threads.
+    pub fn start(model: ModelBundle, cfg: &ServerConfig) -> Result<Self> {
+        let mut pool = ChipPool::new(&cfg.pool);
+        let placement = placement::place(&model, &mut pool)?;
+        pool.reset_energy();
+        let data_cols = pool
+            .chips()
+            .first()
+            .ok_or_else(|| anyhow!("empty pool"))?
+            .cfg()
+            .data_cols();
+        let (tx, batcher) = Batcher::channel(cfg.batcher.clone());
+        let chips = pool.into_chips();
+        let image_len = model.input_hw * model.input_hw;
+        let coordinator = std::thread::spawn(move || {
+            coordinator_loop(model, placement, batcher, chips, data_cols)
+        });
+        Ok(Server {
+            submit_tx: Some(tx),
+            next_id: AtomicU64::new(0),
+            image_len,
+            coordinator: Some(coordinator),
+        })
+    }
+
+    /// Submit one image, blocking while the admission queue is full
+    /// (lossless backpressure). The returned receiver yields the
+    /// [`Response`] when the batch containing this request completes.
+    ///
+    /// Panics (in the caller, never the pipeline) if `image` is not
+    /// `input_hw^2` floats.
+    pub fn submit(&self, image: Vec<f32>) -> Receiver<Response> {
+        assert_eq!(
+            image.len(),
+            self.image_len,
+            "request image length vs model input ({} expected)",
+            self.image_len
+        );
+        let (reply, rx) = channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            image,
+            submitted: Instant::now(),
+            reply,
+        };
+        self.submit_tx
+            .as_ref()
+            .expect("server already shut down")
+            .send(req)
+            .expect("serving pipeline hung up");
+        rx
+    }
+
+    /// Non-blocking submit: on a full queue the image is handed back so
+    /// the caller can shed or retry (explicit backpressure signal).
+    ///
+    /// Panics (in the caller, never the pipeline) if `image` is not
+    /// `input_hw^2` floats.
+    pub fn try_submit(&self, image: Vec<f32>) -> std::result::Result<Receiver<Response>, Vec<f32>> {
+        assert_eq!(
+            image.len(),
+            self.image_len,
+            "request image length vs model input ({} expected)",
+            self.image_len
+        );
+        let (reply, rx) = channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            image,
+            submitted: Instant::now(),
+            reply,
+        };
+        match self.submit_tx.as_ref().expect("server already shut down").try_send(req) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => Err(r.image),
+        }
+    }
+
+    /// Stop admitting, drain every queued request, join all threads, and
+    /// report. Every request submitted before this call is served.
+    pub fn shutdown(mut self) -> ServeReport {
+        self.submit_tx.take(); // hang up: the batcher drains, then stops
+        self.coordinator
+            .take()
+            .expect("server already shut down")
+            .join()
+            .expect("serving coordinator panicked")
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.submit_tx.take();
+        if let Some(h) = self.coordinator.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn coordinator_loop(
+    model: ModelBundle,
+    placement: Placement,
+    batcher: Batcher,
+    chips: Vec<Chip>,
+    data_cols: usize,
+) -> ServeReport {
+    let n_chips = chips.len();
+    let n_layers = model.conv.len();
+    // group shards per chip per layer
+    let mut per_chip: Vec<Vec<Vec<(usize, RowSpan)>>> =
+        vec![vec![Vec::new(); n_layers]; n_chips];
+    for (l, layer_shards) in placement.shards.iter().enumerate() {
+        for (f, shard) in layer_shards.iter().enumerate() {
+            if let Some(loc) = shard {
+                per_chip[loc.chip][l].push((f, loc.span.clone()));
+            }
+        }
+    }
+    let shard_counts: Vec<Vec<usize>> = per_chip
+        .iter()
+        .map(|layers| layers.iter().map(|v| v.len()).collect())
+        .collect();
+
+    // spawn one worker per chip
+    let (res_tx, res_rx) = channel::<JobResult>();
+    let mut job_txs: Vec<Sender<Job>> = Vec::with_capacity(n_chips);
+    let mut handles: Vec<JoinHandle<Chip>> = Vec::with_capacity(n_chips);
+    for (i, chip) in chips.into_iter().enumerate() {
+        let (jtx, jrx) = channel::<Job>();
+        let shards = std::mem::take(&mut per_chip[i]);
+        let rtx = res_tx.clone();
+        handles.push(std::thread::spawn(move || worker_loop(chip, shards, jrx, rtx)));
+        job_txs.push(jtx);
+    }
+    drop(res_tx);
+
+    let mut stats = ServeStats::default();
+    let t_start = Instant::now();
+
+    while let Some(batch) = batcher.next_batch() {
+        let b = batch.len();
+        // per-image activation maps, channel-major; layer 0 input = image
+        let mut maps: Vec<Vec<f32>> = batch.iter().map(|r| r.image.clone()).collect();
+        let mut c = 1usize;
+        let mut hw = model.input_hw;
+        for (l, layer) in model.conv.iter().enumerate() {
+            debug_assert_eq!(layer.in_c, c);
+            let cells = layer.kernel_cells();
+            // quantize each image, im2col, and pack all windows together
+            // (one shared packing serves every filter of the layer; the
+            // im2col buffers concatenate directly into window-major order)
+            let mut scales = Vec::with_capacity(b);
+            let mut flat_windows: Vec<u8> = Vec::with_capacity(b * hw * hw * cells);
+            let (mut oh, mut ow) = (hw, hw);
+            for m in &maps {
+                let (q, s) = quant::quantize_activations_u8(m);
+                scales.push(s);
+                let (flat, oh2, ow2) = im2col_u8(&q, c, hw, hw, layer.ksize, 1);
+                oh = oh2;
+                ow = ow2;
+                flat_windows.extend_from_slice(&flat);
+            }
+            let n_pos = oh * ow;
+            let widths = segment_widths(cells, data_cols);
+            let pw = Arc::new(vmm::pack_windows(&flat_windows, &widths));
+            // fan out to every chip holding shards of this layer
+            let mut expected = 0usize;
+            for (ci, jtx) in job_txs.iter().enumerate() {
+                if shard_counts[ci][l] == 0 {
+                    continue;
+                }
+                jtx.send(Job { layer: l, windows: Arc::clone(&pw) })
+                    .expect("worker hung up");
+                expected += 1;
+            }
+            // fan in: integer dots -> scaled activations
+            let mut y = vec![0.0f32; b * layer.out_c * n_pos];
+            for _ in 0..expected {
+                let r = res_rx.recv().expect("worker died mid-batch");
+                for (f, dvec) in r.dots {
+                    debug_assert_eq!(dvec.len(), b * n_pos);
+                    for (bi, &scale) in scales.iter().enumerate() {
+                        let src = &dvec[bi * n_pos..(bi + 1) * n_pos];
+                        let dst_base = bi * layer.out_c * n_pos + f * n_pos;
+                        for (p, &dot) in src.iter().enumerate() {
+                            y[dst_base + p] =
+                                scale_mac(layer.alpha[f], scale, dot, layer.bias[f]).max(0.0);
+                        }
+                    }
+                }
+            }
+            // pool + advance to the next layer's input maps
+            maps = (0..b)
+                .map(|bi| {
+                    let m = &y[bi * layer.out_c * n_pos..(bi + 1) * layer.out_c * n_pos];
+                    if layer.pool {
+                        maxpool2_flat(m, layer.out_c, oh, ow)
+                    } else {
+                        m.to_vec()
+                    }
+                })
+                .collect();
+            hw = if layer.pool { oh / 2 } else { oh };
+            c = layer.out_c;
+        }
+        // FC head + replies
+        for (req, m) in batch.iter().zip(&maps) {
+            debug_assert_eq!(m.len(), model.fc_in);
+            let logits = fc_logits(m, &model.fc_w, &model.fc_b, model.fc_in, model.n_classes);
+            let latency = req.submitted.elapsed();
+            stats.record_latency(latency);
+            // a dropped reply receiver is the client's choice, not an error
+            let _ = req.reply.send(Response { id: req.id, logits, latency });
+        }
+        stats.n_requests += b as u64;
+        stats.n_batches += 1;
+    }
+
+    // all submitters hung up and the queue is drained: stop the workers
+    drop(job_txs);
+    let chips: Vec<Chip> = handles
+        .into_iter()
+        .map(|h| h.join().expect("serve worker panicked"))
+        .collect();
+    stats.wall_s = t_start.elapsed().as_secs_f64();
+    stats.energy_pj = chips.iter().map(|c| c.energy_breakdown().total_pj()).sum();
+    ServeReport {
+        stats,
+        wear: chips.iter().map(|c| c.wear.clone()).collect(),
+        rows_used: placement.rows_used.clone(),
+        stuck_retries: placement.stuck_retries,
+        dropped: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipConfig;
+    use crate::nn::data::mnist;
+    use std::time::Duration;
+
+    fn small_server(model: ModelBundle, chips: usize, seed: u64) -> Server {
+        let cfg = ServerConfig {
+            pool: PoolConfig { chips, chip: ChipConfig::small_test(), seed },
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 16,
+            },
+        };
+        Server::start(model, &cfg).unwrap()
+    }
+
+    #[test]
+    fn zero_request_lifecycle() {
+        let model = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 31);
+        let server = small_server(model, 2, 32);
+        let report = server.shutdown();
+        assert_eq!(report.stats.n_requests, 0);
+        assert_eq!(report.dropped, 0);
+        assert_eq!(report.wear.len(), 2);
+    }
+
+    #[test]
+    fn serving_matches_reference_logits_exactly() {
+        let model = ModelBundle::synthetic_mnist([3, 4, 3], 0.3, 33);
+        let ds = mnist::generate(5, 34);
+        let server = small_server(model.clone(), 2, 35);
+        let pending: Vec<_> = (0..5).map(|i| server.submit(ds.sample(i).to_vec())).collect();
+        for (i, rx) in pending.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(
+                resp.logits,
+                model.reference_logits(ds.sample(i)),
+                "image {i} diverged from the software reference"
+            );
+            assert!(resp.latency > Duration::ZERO);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.stats.n_requests, 5);
+        assert!(report.stats.energy_pj > 0.0, "serving must spend chip energy");
+        assert!(report.stats.p99_ms() >= report.stats.p50_ms());
+    }
+
+    #[test]
+    #[should_panic(expected = "request image length")]
+    fn malformed_request_is_rejected_at_admission() {
+        let model = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 39);
+        let server = small_server(model, 1, 40);
+        // wrong-sized image must fail in the caller, not kill the pipeline
+        let _ = server.submit(vec![0.0; 10]);
+    }
+
+    #[test]
+    fn wear_accrues_from_placement_not_serving() {
+        let model = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 36);
+        let ds = mnist::generate(1, 37);
+        let server = small_server(model, 1, 38);
+        let rx = server.submit(ds.sample(0).to_vec());
+        rx.recv().unwrap();
+        let report = server.shutdown();
+        // serving reads rows (WL activations) but never programs cells
+        assert!(report.wear[0].wl_activations > 0);
+        assert!(report.wear[0].programmed_cells > 0, "placement programmed the shards");
+    }
+}

@@ -1,0 +1,123 @@
+//! Serving statistics: latency percentiles, throughput, and energy per
+//! inference — the numbers the serve bench prints through the existing
+//! `bench` tables.
+
+use std::time::Duration;
+
+use crate::chip::WearLedger;
+use crate::util::stats::percentile;
+
+/// Aggregated counters of one serving run.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub n_requests: u64,
+    pub n_batches: u64,
+    /// Wall-clock of the serving loop (first batch to shutdown), seconds.
+    pub wall_s: f64,
+    /// Chip energy spent while serving (pJ, programming excluded).
+    pub energy_pj: f64,
+    /// Per-request submit-to-reply latencies, microseconds.
+    latencies_us: Vec<f64>,
+}
+
+impl ServeStats {
+    pub fn record_latency(&mut self, latency: Duration) {
+        self.latencies_us.push(latency.as_secs_f64() * 1e6);
+    }
+
+    pub fn latencies_us(&self) -> &[f64] {
+        &self.latencies_us
+    }
+
+    /// p-th latency percentile in milliseconds (0 for an empty run).
+    pub fn latency_ms(&self, p: f64) -> f64 {
+        if self.latencies_us.is_empty() {
+            0.0
+        } else {
+            percentile(&self.latencies_us, p) / 1e3
+        }
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.latency_ms(50.0)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.latency_ms(95.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.latency_ms(99.0)
+    }
+
+    pub fn inferences_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.n_requests as f64 / self.wall_s
+        }
+    }
+
+    /// Average served batch size (coalescing effectiveness).
+    pub fn mean_batch(&self) -> f64 {
+        if self.n_batches == 0 {
+            0.0
+        } else {
+            self.n_requests as f64 / self.n_batches as f64
+        }
+    }
+
+    pub fn nj_per_inference(&self) -> f64 {
+        if self.n_requests == 0 {
+            0.0
+        } else {
+            self.energy_pj * 1e-3 / self.n_requests as f64
+        }
+    }
+}
+
+/// Everything a serving run reports back at shutdown.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub stats: ServeStats,
+    /// Per-chip lifetime wear at shutdown (placement + any history).
+    pub wear: Vec<WearLedger>,
+    /// Rows the placer consumed per chip.
+    pub rows_used: Vec<usize>,
+    /// Stuck-tile retries during placement.
+    pub stuck_retries: usize,
+    /// Requests dropped (always 0 under blocking backpressure).
+    pub dropped: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_monotone_and_throughput_sane() {
+        let mut s = ServeStats::default();
+        for i in 1..=100u64 {
+            s.record_latency(Duration::from_micros(i * 100));
+        }
+        s.n_requests = 100;
+        s.n_batches = 25;
+        s.wall_s = 2.0;
+        s.energy_pj = 5_000_000.0; // 5 uJ
+        assert!(s.p50_ms() <= s.p95_ms());
+        assert!(s.p95_ms() <= s.p99_ms());
+        assert!((s.inferences_per_sec() - 50.0).abs() < 1e-9);
+        assert!((s.mean_batch() - 4.0).abs() < 1e-9);
+        // 5 uJ / 100 inferences = 50 nJ each
+        assert!((s.nj_per_inference() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_run_reports_zeros() {
+        let s = ServeStats::default();
+        assert_eq!(s.p99_ms(), 0.0);
+        assert_eq!(s.inferences_per_sec(), 0.0);
+        assert_eq!(s.nj_per_inference(), 0.0);
+        assert_eq!(s.mean_batch(), 0.0);
+    }
+}

@@ -4,6 +4,7 @@
 //! Tests that need AOT artifacts skip gracefully when they are missing.
 
 use std::path::Path;
+use std::time::Duration;
 
 use rram_cim::chip::{Chip, ChipConfig, ReadPath};
 use rram_cim::cim::mapping::{store_bits, store_int8, RowAllocator};
@@ -11,14 +12,19 @@ use rram_cim::cim::{similarity as chip_sim, vmm};
 use rram_cim::coordinator::mnist::{MnistConfig, MnistTrainer};
 use rram_cim::coordinator::pointnet::{PointNetConfig, PointNetTrainer};
 use rram_cim::coordinator::TrainMode;
+use rram_cim::nn::data::mnist;
 use rram_cim::pruning::similarity::PackedKernels;
 use rram_cim::pruning::PruneConfig;
 use rram_cim::runtime::{Engine, HostTensor};
+use rram_cim::serve::{BatcherConfig, ModelBundle, PoolConfig, Server, ServerConfig};
 use rram_cim::testing::forall;
 use rram_cim::util::rng::Rng;
 
 fn artifacts_ready() -> bool {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.txt").exists()
+    // the artifacts are only runnable with the PJRT engine compiled in;
+    // a default (offline) build must skip even when artifacts exist
+    cfg!(feature = "pjrt")
+        && Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.txt").exists()
 }
 
 /// Property: chip search-in-memory == bit-packed software similarity for
@@ -140,6 +146,116 @@ fn artifact_similarity_agrees_with_chip() {
             assert_eq!(d[i * kmax + j] as u32, m_chip.distance(i, j), "({i},{j})");
         }
     }
+}
+
+/// Property: serving a model through a chip pool of any size reproduces
+/// the software quantized reference bit for bit, for random model
+/// shapes, prune rates, pool sizes, batch shapes, and images.
+#[test]
+fn prop_pool_serving_equals_reference_logits() {
+    forall(
+        "pool serving == quantized software reference",
+        0x5e47e,
+        6,
+        |rng| {
+            let channels = [2 + rng.below(3), 2 + rng.below(3), 2 + rng.below(3)];
+            let prune = if rng.chance(0.5) { 0.3 } else { 0.0 };
+            let pool = 1 + rng.below(3);
+            let n_img = 1 + rng.below(3);
+            let max_batch = 1 + rng.below(4);
+            (channels, prune, pool, n_img, max_batch, rng.next_u64())
+        },
+        |&(channels, prune, pool, n_img, max_batch, seed)| {
+            let model = ModelBundle::synthetic_mnist(channels, prune, seed);
+            let images = mnist::generate(n_img, seed ^ 0x1111);
+            let cfg = ServerConfig {
+                pool: PoolConfig { chips: pool, chip: ChipConfig::small_test(), seed },
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_wait: Duration::from_millis(1),
+                    queue_depth: 16,
+                },
+            };
+            let server = Server::start(model.clone(), &cfg).map_err(|e| e.to_string())?;
+            let pending: Vec<_> = (0..n_img)
+                .map(|i| server.submit(images.sample(i).to_vec()))
+                .collect();
+            for (i, rx) in pending.into_iter().enumerate() {
+                let resp = rx.recv().map_err(|e| e.to_string())?;
+                let want = model.reference_logits(images.sample(i));
+                if resp.logits != want {
+                    return Err(format!(
+                        "image {i}: served {:?} != reference {:?}",
+                        resp.logits, want
+                    ));
+                }
+            }
+            let report = server.shutdown();
+            if report.stats.n_requests != n_img as u64 {
+                return Err(format!("served {} of {n_img}", report.stats.n_requests));
+            }
+            if report.dropped != 0 {
+                return Err("dropped requests under blocking backpressure".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Pool-of-1 serving of a *trained* model tracks `MnistTrainer::evaluate`:
+/// the chip pipeline (binary weights + u8 activations) must land close to
+/// the f32 artifact accuracy.
+#[test]
+fn serving_tracks_trained_eval_accuracy() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::open_default().unwrap();
+    let cfg = MnistConfig {
+        epochs: 3,
+        train_samples: 448,
+        test_samples: 64,
+        mode: TrainMode::Spn,
+        prune: PruneConfig { warmup_epochs: 1, prune_interval: 1, ..PruneConfig::default() },
+        ..MnistConfig::default()
+    };
+    let mut tr = MnistTrainer::new(cfg, engine);
+    tr.train().unwrap();
+    let (eval_acc, _) = tr.evaluate().unwrap();
+    let bundle = tr.export_bundle();
+    let test_set = tr.test_set().clone();
+    // a 768-row chip fits even the unpruned 32-64-32 model on one chip
+    let serve_cfg = ServerConfig {
+        pool: PoolConfig {
+            chips: 1,
+            chip: ChipConfig { rows: 768, ..ChipConfig::default() },
+            seed: 0xe7a1,
+        },
+        batcher: BatcherConfig::default(),
+    };
+    let server = Server::start(bundle, &serve_cfg).unwrap();
+    let n = test_set.len();
+    let pending: Vec<_> = (0..n).map(|i| server.submit(test_set.sample(i).to_vec())).collect();
+    let mut correct = 0usize;
+    for (i, rx) in pending.into_iter().enumerate() {
+        let logits = rx.recv().unwrap().logits;
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred as i32 == test_set.labels[i] {
+            correct += 1;
+        }
+    }
+    server.shutdown();
+    let serve_acc = correct as f64 / n as f64;
+    assert!(
+        (serve_acc - eval_acc).abs() < 0.25,
+        "chip serving accuracy {serve_acc:.3} drifted from artifact eval {eval_acc:.3}"
+    );
 }
 
 /// Mini end-to-end: MNIST SPN training must reduce loss, prune kernels,
