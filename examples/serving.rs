@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     let report = server.shutdown();
 
     assert_eq!(served, n_requests, "every request must be answered");
-    assert_eq!(report.dropped, 0, "no drops under blocking backpressure");
+    assert_eq!(report.stats.dropped, 0, "no drops under blocking backpressure");
     assert_eq!(report.stats.n_requests as usize, n_requests);
 
     let s = &report.stats;

@@ -1,18 +1,29 @@
 //! Serving-throughput sweep: pool size x batch size x {dense, pruned}
-//! MNIST model — inferences/sec, latency percentiles, nJ/inference.
-//! The pruned model's higher inferences/sec on the same pool is the
-//! serving-side payoff of the paper's in-situ pruning.
+//! for BOTH serve paths — the binary MNIST model and the INT8 PointNet
+//! model — inferences/sec, latency percentiles, nJ/inference. The pruned
+//! models' higher inferences/sec (and the PointNet op-count drop) on the
+//! same pool is the serving-side payoff of the paper's in-situ pruning.
 //! Run: cargo bench --bench serve_throughput
 
 use std::time::Duration;
 
 use rram_cim::bench::print_table;
-use rram_cim::nn::data::mnist;
-use rram_cim::serve::{BatcherConfig, ModelBundle, PoolConfig, Server, ServerConfig};
+use rram_cim::nn::data::{mnist, modelnet, Dataset};
+use rram_cim::nn::pointnet::GroupingConfig;
+use rram_cim::serve::{
+    BatcherConfig, ModelBundle, PointNetBundle, PoolConfig, Server, ServerConfig,
+};
 
-const N_REQUESTS: usize = 96;
+const MNIST_REQUESTS: usize = 96;
+const POINTNET_REQUESTS: usize = 24;
 
-fn run_config(model: &ModelBundle, pool: usize, batch: usize, images: &rram_cim::nn::data::Dataset) -> Result<rram_cim::serve::ServeReport, String> {
+fn run_config(
+    model: &ModelBundle,
+    pool: usize,
+    batch: usize,
+    inputs: &Dataset,
+    n_requests: usize,
+) -> Result<rram_cim::serve::ServeReport, String> {
     let cfg = ServerConfig {
         pool: PoolConfig { chips: pool, seed: 0x700 + pool as u64, ..PoolConfig::default() },
         batcher: BatcherConfig {
@@ -22,39 +33,38 @@ fn run_config(model: &ModelBundle, pool: usize, batch: usize, images: &rram_cim:
         },
     };
     let server = Server::start(model.clone(), &cfg).map_err(|e| e.to_string())?;
-    let mut pending = Vec::with_capacity(N_REQUESTS);
-    for i in 0..N_REQUESTS {
-        pending.push(server.submit(images.sample(i).to_vec()));
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        pending.push(server.submit(inputs.sample(i % inputs.len()).to_vec()));
     }
     for rx in pending {
         rx.recv().map_err(|e| e.to_string())?;
     }
     let report = server.shutdown();
-    assert_eq!(report.stats.n_requests as usize, N_REQUESTS, "lost requests");
-    assert_eq!(report.dropped, 0, "dropped requests under blocking backpressure");
+    assert_eq!(report.stats.n_requests as usize, n_requests, "lost requests");
+    assert_eq!(report.stats.dropped, 0, "dropped requests under blocking backpressure");
     Ok(report)
 }
 
-fn main() {
-    rram_cim::util::logging::init();
-    let images = mnist::generate(N_REQUESTS, 0xbe7c);
-    let dense = ModelBundle::synthetic_mnist([32, 64, 32], 0.0, 7);
-    let pruned = ModelBundle::synthetic_mnist([32, 64, 32], 0.35, 7);
-    println!(
-        "dense: {} live filters ({} rows @30 cols); pruned: {} live filters ({} rows)",
-        dense.live_filters(),
-        dense.rows_required(30),
-        pruned.live_filters(),
-        pruned.rows_required(30)
-    );
-
+/// Sweep one workload over pool x batch x {dense, pruned}; returns the
+/// (pool, batch, speedup) triples of every comparable configuration.
+#[allow(clippy::too_many_arguments)]
+fn sweep(
+    title: &str,
+    dense: &ModelBundle,
+    pruned: &ModelBundle,
+    inputs: &Dataset,
+    n_requests: usize,
+    pools: &[usize],
+    batches: &[usize],
+) -> Vec<(usize, usize, f64)> {
     let mut rows = Vec::new();
     let mut speedups = Vec::new();
-    for &pool in &[1usize, 2, 4, 8] {
-        for &batch in &[1usize, 8, 32, 128] {
+    for &pool in pools {
+        for &batch in batches {
             let mut inf_s = [0.0f64; 2];
-            for (mi, (label, model)) in [("dense", &dense), ("pruned", &pruned)].iter().enumerate() {
-                match run_config(model, pool, batch, &images) {
+            for (mi, (label, model)) in [("dense", dense), ("pruned", pruned)].iter().enumerate() {
+                match run_config(model, pool, batch, inputs, n_requests) {
                     Ok(report) => {
                         let s = &report.stats;
                         inf_s[mi] = s.inferences_per_sec();
@@ -70,7 +80,7 @@ fn main() {
                         ]);
                     }
                     Err(e) => {
-                        // e.g. the dense model outgrows a 1-chip pool —
+                        // e.g. the dense model outgrows a small pool —
                         // exactly the capacity pressure pruning relieves
                         rows.push(vec![
                             pool.to_string(),
@@ -92,13 +102,17 @@ fn main() {
         }
     }
     print_table(
-        &format!("serve: pool x batch sweep ({N_REQUESTS} requests per cell)"),
+        title,
         &["pool", "batch", "model", "inf/s", "p50 ms", "p99 ms", "nJ/inf", "avg batch"],
         &rows,
     );
-    println!("\npruned-vs-dense serving speedup (same pool, same batch):");
+    speedups
+}
+
+fn report_speedups(workload: &str, speedups: &[(usize, usize, f64)]) {
+    println!("\n{workload}: pruned-vs-dense serving speedup (same pool, same batch):");
     let mut min_speedup = f64::INFINITY;
-    for (pool, batch, s) in &speedups {
+    for (pool, batch, s) in speedups {
         println!("  pool {pool} batch {batch:>3}: {s:.2}x");
         min_speedup = min_speedup.min(*s);
     }
@@ -107,6 +121,71 @@ fn main() {
             min_speedup > 1.0,
             "pruned model must out-serve the dense one on the same pool (min {min_speedup:.2}x)"
         );
-        println!("\nOK: pruned model out-serves dense on every comparable configuration");
+        println!("OK: pruned {workload} out-serves dense on every comparable configuration");
     }
+}
+
+fn main() {
+    rram_cim::util::logging::init();
+
+    // --- binary MNIST path ---
+    let images = mnist::generate(MNIST_REQUESTS, 0xbe7c);
+    let dense = ModelBundle::synthetic_mnist([32, 64, 32], 0.0, 7);
+    let pruned = ModelBundle::synthetic_mnist([32, 64, 32], 0.35, 7);
+    println!(
+        "mnist: dense {} live filters ({} rows @30 cols); pruned {} live filters ({} rows)",
+        dense.live_filters(),
+        dense.rows_required(30),
+        pruned.live_filters(),
+        pruned.rows_required(30)
+    );
+    let mnist_speedups = sweep(
+        &format!("serve: MNIST binary, pool x batch sweep ({MNIST_REQUESTS} requests per cell)"),
+        &dense,
+        &pruned,
+        &images,
+        MNIST_REQUESTS,
+        &[1, 2, 4, 8],
+        &[1, 8, 32, 128],
+    );
+    report_speedups("mnist", &mnist_speedups);
+
+    // --- INT8 PointNet path ---
+    let clouds = modelnet::generate(POINTNET_REQUESTS, 0xc10d);
+    let grouping = GroupingConfig { s1: 32, k1: 8, r1: 0.25, s2: 8, k2: 4, r2: 0.5 };
+    let widths = [16, 16, 32, 32, 32, 64, 64, 128];
+    let pn_dense: ModelBundle =
+        PointNetBundle::synthetic(widths, 64, 0.0, grouping, 9).into();
+    let pn_pruned: ModelBundle =
+        PointNetBundle::synthetic(widths, 64, 0.5, grouping, 9).into();
+    let (dense_ops, pruned_ops) = match (&pn_dense, &pn_pruned) {
+        (ModelBundle::PointNet(d), ModelBundle::PointNet(p)) => {
+            (d.mac_ops_per_cloud(), p.mac_ops_per_cloud())
+        }
+        _ => unreachable!(),
+    };
+    println!(
+        "\npointnet: dense {} live channels ({} rows @30 cols, {} MAC ops/cloud); \
+         pruned {} live channels ({} rows, {} MAC ops/cloud, {:.1}% ops saved)",
+        pn_dense.live_filters(),
+        pn_dense.rows_required(30),
+        dense_ops,
+        pn_pruned.live_filters(),
+        pn_pruned.rows_required(30),
+        pruned_ops,
+        100.0 * (1.0 - pruned_ops as f64 / dense_ops as f64),
+    );
+    assert!(pruned_ops < dense_ops, "pruning must cut PointNet op count");
+    let pn_speedups = sweep(
+        &format!(
+            "serve: PointNet INT8, pool x batch sweep ({POINTNET_REQUESTS} requests per cell)"
+        ),
+        &pn_dense,
+        &pn_pruned,
+        &clouds,
+        POINTNET_REQUESTS,
+        &[2, 4],
+        &[1, 8],
+    );
+    report_speedups("pointnet", &pn_speedups);
 }

@@ -394,6 +394,56 @@ impl Chip {
         word
     }
 
+    /// Sense one logical row's data columns as 2-bit values in a single
+    /// WL activation, returned as two packed bit planes `(lo, hi)` —
+    /// bit `i` of `lo`/`hi` is bit 0/1 of data column `i`'s stored 2-bit
+    /// value (ECC plan included). The INT8 counterpart of
+    /// [`Chip::sense_row_packed`]: the word line stays selected while the
+    /// batched VMM streams offset-encoded activation planes against the
+    /// returned words, accounting the column-side events with
+    /// [`Chip::account_batched_passes`].
+    pub fn sense_row_2bit_packed(&mut self, block: usize, row: usize) -> (u64, u64) {
+        assert!(self.formed, "sense before forming");
+        let n = self.cfg.data_cols();
+        debug_assert!(n <= 64, "packed sense needs <= 64 data columns");
+        let read_path = self.cfg.read_path;
+        let cols = self.cfg.cols;
+        let dev = self.cfg.device.clone();
+        let (mut lo, mut hi) = (0u64, 0u64);
+        {
+            let b = &mut self.blocks[block];
+            let plan = b.ecc.plan_row_ref(row, &b.stuck_map).expect("unmapped row");
+            b.wl.select(plan.phys_row);
+            b.bl.note_broadcast();
+            match read_path {
+                ReadPath::Digital => {
+                    let base = plan.phys_row * cols;
+                    for (i, &pc) in plan.col_map.iter().enumerate() {
+                        let v = b.shadow[base + pc];
+                        lo |= ((v & 1) as u64) << i;
+                        hi |= (((v >> 1) & 1) as u64) << i;
+                    }
+                }
+                ReadPath::Electrical => {
+                    let phys_row = plan.phys_row;
+                    let mut map = [0usize; MAX_COLS];
+                    map[..plan.col_map.len()].copy_from_slice(&plan.col_map);
+                    let n_map = plan.col_map.len();
+                    for (i, &pc) in map[..n_map].iter().enumerate() {
+                        let v = rr::read_2bit(&mut b.array, phys_row, pc, &dev).value;
+                        lo |= ((v & 1) as u64) << i;
+                        hi |= (((v >> 1) & 1) as u64) << i;
+                    }
+                }
+            }
+        }
+        self.energy.sense_cycle(n as u64);
+        self.energy.rr_senses += n as u64; // 2-bit sense = 2 comparisons
+        self.timing.compute_cycles += 1;
+        self.wear.wl_activations += 1;
+        (lo, hi)
+    }
+
     /// Account a row-parallel batched burst: `passes` X vectors streamed
     /// over `cols` columns of an already-selected row (the WRC walk was
     /// paid by the preceding [`Chip::sense_row_packed`]). The batched VMM

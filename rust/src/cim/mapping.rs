@@ -48,14 +48,11 @@ impl WeightCodec {
     }
 
     /// Symmetric per-tensor quantization of floats to i8 (scale returned).
+    /// Thin wrapper over [`crate::nn::quant::quantize_channel_int8`] so
+    /// the codec path can never diverge from the quantizer edge contract
+    /// (positive finite scale for all-zero input, never `i8::MIN`).
     pub fn quantize_int8(xs: &[f32]) -> (Vec<i8>, f32) {
-        let max = xs.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
-        let scale = max / 127.0;
-        let q = xs
-            .iter()
-            .map(|&x| (x / scale).round().clamp(-128.0, 127.0) as i8)
-            .collect();
-        (q, scale)
+        crate::nn::quant::quantize_channel_int8(xs)
     }
 
     /// Quantize activations to u8 (unsigned, post-ReLU) with scale.

@@ -215,6 +215,168 @@ pub fn binary_dot_u8_batch(chip: &mut Chip, span: &RowSpan, xs: &[Vec<u8>]) -> V
     binary_dots_batched(chip, span, &pw)
 }
 
+// ---------------------------------------------------------------------------
+// Batched multi-row INT8 VMM (the PointNet serve path): sense a span's
+// rows once as 2-bit slice planes, then stream many offset-encoded
+// activation vectors bit-serially against the packed sensed words.
+// Bit-exact equal to per-vector `int8_dot`, with the WRC row walk
+// amortized across the whole batch exactly like `binary_dots_batched`.
+// ---------------------------------------------------------------------------
+
+/// A span's stored 2-bit cells after one sensing burst: per row segment,
+/// the low and high bit planes of the cell values plus the four
+/// slice-significance masks (bit `i` of `slice_masks[seg][s]` is set when
+/// global cell `start + i` carries weight bits `2s..2s+2`). Row geometry
+/// can split a weight's four cells across segments; the masks keep each
+/// cell's significance regardless of where the row boundary falls.
+#[derive(Clone, Debug)]
+pub struct PackedSpanI8 {
+    pub lo: Vec<u64>,
+    pub hi: Vec<u64>,
+    pub slice_masks: Vec<[u64; 4]>,
+    /// Offset sum of the stored weights, `sum_j (w_j + 128)`,
+    /// reconstructed from the same sensed data.
+    pub sum_uw: i64,
+    pub len: usize,
+}
+
+/// Sense every row segment of an INT8 span once (one WL activation each)
+/// and return the stored 2-bit values packed per segment.
+pub fn sense_span_2bit(chip: &mut Chip, span: &RowSpan) -> PackedSpanI8 {
+    let per_row = chip.cfg().data_cols();
+    let n_seg = span.slots.len();
+    let mut lo = Vec::with_capacity(n_seg);
+    let mut hi = Vec::with_capacity(n_seg);
+    let mut slice_masks = Vec::with_capacity(n_seg);
+    let mut sum_uw: i64 = 0;
+    for (block, row, start, width) in segments(span, per_row) {
+        let (mut l, mut h) = chip.sense_row_2bit_packed(block, row);
+        if width < 64 {
+            let mask = (1u64 << width) - 1;
+            l &= mask;
+            h &= mask;
+        }
+        let mut masks = [0u64; 4];
+        for i in 0..width {
+            masks[(start + i) % 4] |= 1u64 << i;
+        }
+        for (s, &m) in masks.iter().enumerate() {
+            let v = (l & m).count_ones() as i64 + 2 * (h & m).count_ones() as i64;
+            sum_uw += v << (2 * s as u32);
+        }
+        lo.push(l);
+        hi.push(h);
+        slice_masks.push(masks);
+    }
+    PackedSpanI8 { lo, hi, slice_masks, sum_uw, len: span.len }
+}
+
+/// i8 activation windows packed for batched bit-serial streaming against
+/// an INT8 span: activations are offset-encoded (`u = x + 128`) and, for
+/// each window and input bit plane, one u64 per span segment carries the
+/// plane bit of the weight each cell belongs to. All kernels of a layer
+/// share the same segment geometry, so one packed batch serves every
+/// kernel (exactly like [`PackedWindows`] on the binary path).
+#[derive(Clone, Debug)]
+pub struct PackedWindowsI8 {
+    pub n_windows: usize,
+    /// Segment widths in *cells* (4 per weight).
+    pub seg_widths: Vec<usize>,
+    /// `planes[(window * 8 + bit) * n_seg + seg]`
+    pub planes: Vec<u64>,
+    /// Per-window offset-encoded activation sums, `sum_j (x_j + 128)`,
+    /// for the offset-removal fold.
+    pub sum_ux: Vec<i64>,
+}
+
+/// Pack i8 activation windows into offset-encoded bit planes aligned to
+/// an INT8 span's row segments. `flat` holds consecutive windows of
+/// `sum(seg_widths) / 4` weights each; `seg_widths` must come from
+/// [`crate::cim::mapping::segment_widths`] over the span's cell count
+/// (4 cells per weight). An empty `flat` packs zero windows.
+pub fn pack_windows_i8(flat: &[i8], seg_widths: &[usize]) -> PackedWindowsI8 {
+    let n_seg = seg_widths.len();
+    let cells: usize = seg_widths.iter().sum();
+    assert!(cells > 0 && cells % 4 == 0, "INT8 span must hold 4 cells per weight");
+    let n = cells / 4;
+    assert!(flat.len() % n == 0, "flat windows vs span weight count");
+    let n_windows = flat.len() / n;
+    let mut planes = vec![0u64; n_windows * 8 * n_seg];
+    let mut sum_ux = Vec::with_capacity(n_windows);
+    for (wi, win) in flat.chunks_exact(n).enumerate() {
+        let ux: Vec<u16> = win.iter().map(|&v| (v as i16 + 128) as u16).collect();
+        sum_ux.push(ux.iter().map(|&v| v as i64).sum());
+        let mut cell = 0usize;
+        for (seg, &sw) in seg_widths.iter().enumerate() {
+            for i in 0..sw {
+                let u = ux[cell / 4];
+                cell += 1;
+                if u == 0 {
+                    continue;
+                }
+                for bit in 0..8usize {
+                    if (u >> bit) & 1 == 1 {
+                        planes[(wi * 8 + bit) * n_seg + seg] |= 1u64 << i;
+                    }
+                }
+            }
+        }
+    }
+    PackedWindowsI8 {
+        n_windows,
+        seg_widths: seg_widths.to_vec(),
+        planes,
+        sum_ux,
+    }
+}
+
+/// Batched INT8 dots: sense the span's 2-bit slices once, stream every
+/// packed window bit-serially (8 offset-encoded planes) against them, and
+/// remove both offsets after accumulation. Returns one signed dot per
+/// window, bit-exact equal to [`int8_dot`] (and, with an intact store,
+/// to [`int8_dot_ref`]).
+pub fn int8_dots_batched(chip: &mut Chip, span: &RowSpan, pw: &PackedWindowsI8) -> Vec<i64> {
+    let ps = sense_span_2bit(chip, span);
+    let n_seg = pw.seg_widths.len();
+    assert_eq!(ps.lo.len(), n_seg, "span geometry vs packed windows");
+    let n = (pw.seg_widths.iter().sum::<usize>() / 4) as i64;
+    let mut out = Vec::with_capacity(pw.n_windows);
+    for wi in 0..pw.n_windows {
+        // s = sum_j u_x[j] * u_w[j], accumulated plane by plane: each
+        // X-gated popcount of a slice plane carries weight 2^(2*slice+bit)
+        let mut s: i64 = 0;
+        for bit in 0..8usize {
+            let base = (wi * 8 + bit) * n_seg;
+            for seg in 0..n_seg {
+                let x = pw.planes[base + seg];
+                let l = ps.lo[seg] & x;
+                let h = ps.hi[seg] & x;
+                for (sl, &m) in ps.slice_masks[seg].iter().enumerate() {
+                    let v = (l & m).count_ones() as i64 + 2 * (h & m).count_ones() as i64;
+                    s += v << (2 * sl + bit) as u32;
+                }
+            }
+        }
+        out.push(s - 128 * pw.sum_ux[wi] - 128 * ps.sum_uw + n * 128 * 128);
+    }
+    // column-side events: 8 offset-encoded bit planes per window per
+    // segment, charged at full data-column width — batched and unbatched
+    // INT8 serving differ only by the amortized WRC walk + sense burst.
+    let cols = chip.cfg().data_cols() as u64;
+    chip.account_batched_passes(cols, 8 * pw.n_windows as u64 * n_seg as u64, true);
+    out
+}
+
+/// Convenience batched form of [`int8_dot`]: packs `xs` internally.
+pub fn int8_dot_batch(chip: &mut Chip, span: &RowSpan, xs: &[Vec<i8>]) -> Vec<i64> {
+    assert!(xs.iter().all(|x| 4 * x.len() == span.len), "span must hold 4 cells per weight");
+    let per_row = chip.cfg().data_cols();
+    let widths = span.seg_widths(per_row);
+    let flat = xs.concat();
+    let pw = pack_windows_i8(&flat, &widths);
+    int8_dots_batched(chip, span, &pw)
+}
+
 /// Reference software dot for validation: binary weights from bits.
 pub fn binary_dot_ref(bits: &[bool], x: &[u8]) -> i64 {
     bits.iter()
@@ -352,6 +514,137 @@ mod tests {
             .collect();
         for (x, got) in xs.iter().zip(binary_dot_u8_batch(&mut c, &span, &xs)) {
             assert_eq!(got, binary_dot_ref(&bits, x));
+        }
+    }
+
+    #[test]
+    fn int8_batched_matches_unbatched_and_reference() {
+        let mut c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let mut rng = Rng::new(31);
+        let n = 17; // 68 cells -> 3 rows of 30 data cols, weights split across rows
+        let w: Vec<i8> = (0..n).map(|_| (rng.below(255) as i16 - 127) as i8).collect();
+        let span = alloc.alloc(4 * n).unwrap();
+        assert_eq!(store_int8(&mut c, &span, &w), 0);
+        let xs: Vec<Vec<i8>> = (0..5)
+            .map(|_| (0..n).map(|_| (rng.below(255) as i16 - 127) as i8).collect())
+            .collect();
+        let batched = int8_dot_batch(&mut c, &span, &xs);
+        for (x, &got) in xs.iter().zip(&batched) {
+            assert_eq!(got, int8_dot(&mut c, &span, x));
+            assert_eq!(got, int8_dot_ref(&w, x));
+        }
+    }
+
+    #[test]
+    fn int8_batched_extremes_and_single_weight() {
+        let mut c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        // single-element kernel at the extremes of the quantizer range
+        let w: Vec<i8> = vec![-127];
+        let span = alloc.alloc(4).unwrap();
+        store_int8(&mut c, &span, &w);
+        let xs: Vec<Vec<i8>> = vec![vec![127], vec![-127], vec![0], vec![1]];
+        for (x, got) in xs.iter().zip(int8_dot_batch(&mut c, &span, &xs)) {
+            assert_eq!(got, int8_dot_ref(&w, x));
+        }
+    }
+
+    #[test]
+    fn int8_batched_zero_windows_is_empty() {
+        let mut c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let w: Vec<i8> = vec![5, -9, 77];
+        let span = alloc.alloc(12).unwrap();
+        store_int8(&mut c, &span, &w);
+        assert!(int8_dot_batch(&mut c, &span, &[]).is_empty());
+    }
+
+    #[test]
+    fn prop_int8_batched_random_shapes() {
+        crate::testing::forall(
+            "int8_dots_batched == int8_dot_ref",
+            0x1217,
+            10,
+            |rng| {
+                let n = 1 + rng.below(20);
+                let extreme = rng.chance(0.3);
+                let val = |rng: &mut Rng| -> i8 {
+                    if extreme {
+                        if rng.chance(0.5) { 127 } else { -127 }
+                    } else {
+                        (rng.below(255) as i16 - 127) as i8
+                    }
+                };
+                let w: Vec<i8> = (0..n).map(|_| val(rng)).collect();
+                let n_win = rng.below(4);
+                let xs: Vec<Vec<i8>> = (0..n_win)
+                    .map(|_| (0..n).map(|_| val(rng)).collect())
+                    .collect();
+                (w, xs)
+            },
+            |(w, xs)| {
+                let mut c = chip();
+                let mut alloc = RowAllocator::for_chip(&c);
+                let span = alloc.alloc(4 * w.len()).unwrap();
+                if store_int8(&mut c, &span, w) != 0 {
+                    return Err("unrecoverable store on ideal devices".into());
+                }
+                for (x, got) in xs.iter().zip(int8_dot_batch(&mut c, &span, xs)) {
+                    let want = int8_dot_ref(w, x);
+                    if got != want {
+                        return Err(format!("batched dot {got} != reference {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn int8_batched_amortizes_row_selection_energy() {
+        let mut c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let mut rng = Rng::new(33);
+        let n = 15; // 60 cells -> 2 rows
+        let w: Vec<i8> = (0..n).map(|_| (rng.below(255) as i16 - 127) as i8).collect();
+        let span = alloc.alloc(4 * n).unwrap();
+        store_int8(&mut c, &span, &w);
+        let xs: Vec<Vec<i8>> = (0..32)
+            .map(|_| (0..n).map(|_| (rng.below(255) as i16 - 127) as i8).collect())
+            .collect();
+        c.reset_ledgers();
+        let _ = int8_dot_batch(&mut c, &span, &xs);
+        let batched_pj = c.energy_breakdown().total_pj();
+        c.reset_ledgers();
+        for x in &xs {
+            let _ = int8_dot(&mut c, &span, x);
+        }
+        let unbatched_pj = c.energy_breakdown().total_pj();
+        assert!(
+            batched_pj < unbatched_pj * 0.5,
+            "batched {batched_pj} pJ !<< unbatched {unbatched_pj} pJ"
+        );
+    }
+
+    #[test]
+    fn int8_batched_survives_stuck_faults_via_ecc() {
+        let mut rng = Rng::new(34);
+        let mut cfg = ChipConfig::small_test();
+        cfg.device.stuck_fault_prob = 0.01;
+        let mut c = Chip::new(cfg, &mut rng);
+        c.form();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let mut r = Rng::new(35);
+        let n = 11;
+        let w: Vec<i8> = (0..n).map(|_| (r.below(255) as i16 - 127) as i8).collect();
+        let span = alloc.alloc(4 * n).unwrap();
+        assert_eq!(store_int8(&mut c, &span, &w), 0, "ECC should absorb faults");
+        let xs: Vec<Vec<i8>> = (0..4)
+            .map(|_| (0..n).map(|_| (r.below(255) as i16 - 127) as i8).collect())
+            .collect();
+        for (x, got) in xs.iter().zip(int8_dot_batch(&mut c, &span, &xs)) {
+            assert_eq!(got, int8_dot_ref(&w, x));
         }
     }
 

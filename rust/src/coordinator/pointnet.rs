@@ -158,6 +158,20 @@ impl PointNetTrainer {
         &self.sched
     }
 
+    /// Export the current (trained, pruned) parameters as a servable
+    /// bundle for the [`crate::serve`] subsystem: per-channel
+    /// INT8-quantized pointwise kernels (`w0..w7`, 4 RRAM cells per
+    /// weight) with the scheduler's live masks, plus the `w8`/`w9` host
+    /// head — parity with `MnistTrainer::export_bundle`.
+    pub fn export_bundle(&self) -> crate::serve::ModelBundle {
+        crate::serve::PointNetBundle::from_params(
+            &self.params,
+            &self.sched.live_masks(),
+            &self.cfg.grouping,
+        )
+        .into()
+    }
+
     fn train_artifact(&self) -> &'static str {
         if self.cfg.use_pallas { "pointnet_train" } else { "pointnet_train_fast" }
     }
@@ -488,6 +502,37 @@ mod tests {
         assert_eq!(p.len(), 20);
         assert_eq!(p.get("w3").dims, vec![67, 64]);
         assert_eq!(p.get("w9").dims, vec![128, 10]);
+    }
+
+    #[test]
+    fn init_params_export_as_servable_bundle() {
+        // export parity does not need a trained engine: the bundle is a
+        // pure function of params + masks + grouping
+        let mut rng = Rng::new(5);
+        let params = init_params(&mut rng);
+        let live: Vec<Vec<bool>> = LAYER_DIMS[..MASKED_LAYERS]
+            .iter()
+            .map(|&(_, fo)| vec![true; fo])
+            .collect();
+        let grouping = GroupingConfig::default();
+        let bundle =
+            crate::serve::PointNetBundle::from_params(&params, &live, &grouping);
+        bundle.validate().unwrap();
+        assert_eq!(bundle.total_filters(), bundle.live_filters());
+        assert_eq!(bundle.n_classes, 10);
+        // per-channel quantization matches the HPN precision-check path
+        let kernels = params.kernels_of("w0");
+        let (q, s) = quant::quantize_channel_int8(&kernels[0]);
+        assert_eq!(bundle.layers[0].w_q[0], q);
+        assert_eq!(bundle.layers[0].w_scale[0], s);
+        // masked export drops rows
+        let mut masked = live.clone();
+        for m in masked[7].iter_mut().take(128) {
+            *m = false;
+        }
+        let pruned = crate::serve::PointNetBundle::from_params(&params, &masked, &grouping);
+        assert!(pruned.rows_required(30) < bundle.rows_required(30));
+        assert!(pruned.mac_ops_per_cloud() < bundle.mac_ops_per_cloud());
     }
 
     #[test]

@@ -48,6 +48,8 @@ pub mod prelude {
     pub use crate::device::{Array1T1R, DeviceConfig};
     pub use crate::pruning::{PruneConfig, PruningScheduler};
     pub use crate::runtime::{Engine, HostTensor};
-    pub use crate::serve::{BatcherConfig, ModelBundle, PoolConfig, Server, ServerConfig};
+    pub use crate::serve::{
+        BatcherConfig, MnistBundle, ModelBundle, PointNetBundle, PoolConfig, Server, ServerConfig,
+    };
     pub use crate::util::rng::Rng;
 }

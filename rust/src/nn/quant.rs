@@ -12,20 +12,31 @@ pub fn binarize_kernel(w: &[f32]) -> (Vec<bool>, f32) {
 
 /// Symmetric per-channel INT8 quantization matching the Python
 /// `fake_quant_int8_ste`: scale = max|w| / 127 for one output channel.
+///
+/// Edge contract (shared by every signed quantizer here): an all-zero
+/// input still returns a strictly positive, finite scale (no NaN /
+/// div-by-zero downstream), and the quantized range is `[-127, 127]` —
+/// `i8::MIN` is never produced, so `-q` can never overflow in the
+/// chip-side INT8 dot machinery.
 pub fn quantize_channel_int8(w: &[f32]) -> (Vec<i8>, f32) {
-    let max = w.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+    let max = w.iter().fold(0f32, |m, &x| m.max(x.abs())).max(MIN_SCALE_INPUT);
     let scale = max / 127.0;
     (
         w.iter()
-            .map(|&x| (x / scale).round().clamp(-128.0, 127.0) as i8)
+            .map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8)
             .collect(),
         scale,
     )
 }
 
+/// Floor on the dynamic range fed to the signed/unsigned quantizers: an
+/// all-zero (or denormal) input quantizes against this instead of 0,
+/// keeping every returned scale strictly positive and finite.
+const MIN_SCALE_INPUT: f32 = 1e-8;
+
 /// Unsigned 8-bit activation quantization (post-ReLU): scale = max/255.
 pub fn quantize_activations_u8(xs: &[f32]) -> (Vec<u8>, f32) {
-    let max = xs.iter().fold(0f32, |m, &x| m.max(x)).max(1e-8);
+    let max = xs.iter().fold(0f32, |m, &x| m.max(x)).max(MIN_SCALE_INPUT);
     let scale = max / 255.0;
     (
         xs.iter()
@@ -35,13 +46,15 @@ pub fn quantize_activations_u8(xs: &[f32]) -> (Vec<u8>, f32) {
     )
 }
 
-/// Signed int8 activation quantization (pre-activation values).
+/// Signed int8 activation quantization (pre-activation values). Same
+/// edge contract as [`quantize_channel_int8`]: positive finite scale for
+/// all-zero input, output range `[-127, 127]` (never `i8::MIN`).
 pub fn quantize_activations_i8(xs: &[f32]) -> (Vec<i8>, f32) {
-    let max = xs.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+    let max = xs.iter().fold(0f32, |m, &x| m.max(x.abs())).max(MIN_SCALE_INPUT);
     let scale = max / 127.0;
     (
         xs.iter()
-            .map(|&x| (x / scale).round().clamp(-128.0, 127.0) as i8)
+            .map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8)
             .collect(),
         scale,
     )
@@ -76,6 +89,54 @@ mod tests {
     fn i8_quant_symmetric() {
         let (q, _) = quantize_activations_i8(&[-3.0, 3.0]);
         assert_eq!(q, vec![-127, 127]);
+    }
+
+    #[test]
+    fn all_zero_input_returns_positive_scale_and_zero_codes() {
+        for n in [0usize, 1, 7] {
+            let zeros = vec![0.0f32; n];
+            let (qc, sc) = quantize_channel_int8(&zeros);
+            assert!(sc > 0.0 && sc.is_finite(), "channel scale {sc}");
+            assert!(qc.iter().all(|&v| v == 0));
+            let (qa, sa) = quantize_activations_i8(&zeros);
+            assert!(sa > 0.0 && sa.is_finite(), "i8 act scale {sa}");
+            assert!(qa.iter().all(|&v| v == 0));
+            let (qu, su) = quantize_activations_u8(&zeros);
+            assert!(su > 0.0 && su.is_finite(), "u8 act scale {su}");
+            assert!(qu.iter().all(|&v| v == 0));
+        }
+    }
+
+    #[test]
+    fn prop_signed_quantizers_never_emit_i8_min() {
+        crate::testing::forall(
+            "signed quantizers stay in [-127, 127]",
+            0x9_1a7,
+            64,
+            |rng| {
+                let n = rng.below(32);
+                let kind = rng.below(4);
+                (0..n)
+                    .map(|_| match kind {
+                        0 => 0.0f32,
+                        1 => (rng.normal() * 1e-38) as f32, // denormal territory
+                        2 => (rng.normal() * 1e20) as f32,
+                        _ => rng.normal() as f32,
+                    })
+                    .collect::<Vec<f32>>()
+            },
+            |xs| {
+                let (qc, sc) = quantize_channel_int8(xs);
+                let (qa, sa) = quantize_activations_i8(xs);
+                if !(sc > 0.0 && sc.is_finite() && sa > 0.0 && sa.is_finite()) {
+                    return Err(format!("bad scale: channel {sc}, act {sa}"));
+                }
+                if let Some(&v) = qc.iter().chain(&qa).find(|&&v| v == i8::MIN) {
+                    return Err(format!("quantizer emitted {v}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -37,8 +37,9 @@ impl Default for BatcherConfig {
 /// One admitted inference request.
 pub struct Request {
     pub id: u64,
-    /// Flat grayscale image, `input_hw^2` floats in [0,1].
-    pub image: Vec<f32>,
+    /// Flat request input: `input_hw^2` grayscale floats (MNIST path)
+    /// or `3 * cloud_points` interleaved xyz floats (PointNet path).
+    pub input: Vec<f32>,
     pub submitted: Instant,
     /// Where the scheduler sends the result.
     pub reply: Sender<Response>,
@@ -100,7 +101,7 @@ mod tests {
     fn request(id: u64) -> (Request, Receiver<Response>) {
         let (reply, rx) = channel();
         (
-            Request { id, image: vec![0.0; 4], submitted: Instant::now(), reply },
+            Request { id, input: vec![0.0; 4], submitted: Instant::now(), reply },
             rx,
         )
     }
@@ -140,6 +141,30 @@ mod tests {
         drop(tx);
         let ids: Vec<u64> = batcher.next_batch().unwrap().iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn fifo_order_is_preserved_across_coalescing_rounds() {
+        // one client's requests must drain in admission order even when
+        // they span several full coalescing rounds of a saturated pool
+        let (tx, batcher) = Batcher::channel(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+            queue_depth: 32,
+        });
+        for i in 0..11 {
+            let (r, _rx) = request(i);
+            tx.send(r).unwrap();
+        }
+        drop(tx);
+        let mut next = 0u64;
+        while let Some(batch) = batcher.next_batch() {
+            for r in &batch {
+                assert_eq!(r.id, next, "request served out of client order");
+                next += 1;
+            }
+        }
+        assert_eq!(next, 11, "every admitted request drained exactly once");
     }
 
     #[test]

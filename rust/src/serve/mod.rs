@@ -1,12 +1,28 @@
 //! Batched, multi-chip inference serving: the subsystem that answers
 //! "how many inferences/sec can a fleet of these chips sustain?".
 //!
-//! A trained (and pruned) model is exported as a [`ModelBundle`]
-//! (binarized conv filters + digital scales + live masks + host-side FC),
-//! sharded filter-by-filter across a [`pool::ChipPool`] by the
-//! **wear-aware placer** ([`placement`]), and driven by a worker-per-chip
-//! [`scheduler::Server`] fed from a coalescing admission queue
-//! ([`batcher`]).
+//! A trained (and pruned) model is exported as a [`ModelBundle`] — the
+//! two-path servable format — sharded filter-by-filter across a
+//! [`pool::ChipPool`] by the **wear-aware placer** ([`placement`]), and
+//! driven by a worker-per-chip [`scheduler::Server`] fed from a
+//! coalescing admission queue ([`batcher`]).
+//!
+//! # The two model paths
+//!
+//! | | [`MnistBundle`] (binary) | [`PointNetBundle`] (INT8) |
+//! |---|---|---|
+//! | workload | 28x28 grayscale images | raw xyz point clouds |
+//! | weight encoding | 1 cell per weight (sign bit) | 4 x 2-bit cells per weight (offset-encoded) |
+//! | activations | u8 per image per layer | i8 per cloud per layer |
+//! | batched VMM | [`crate::cim::vmm::binary_dots_batched`] | [`crate::cim::vmm::int8_dots_batched`] |
+//! | host stages | scale/bias/ReLU, 2x2 max-pool, FC | scale/bias/ReLU, set-abstraction pool/concat, dense head |
+//! | exported by | `MnistTrainer::export_bundle` | `PointNetTrainer::export_bundle` |
+//!
+//! Both variants flow through the same placement, admission, fan-out,
+//! and stats machinery; a [`ModelBundle`] value is all a caller needs
+//! (`Server::start(bundle, &cfg)`). Construct one via
+//! [`ModelBundle::synthetic_mnist`] / [`PointNetBundle::synthetic`] for
+//! benches, or the trainers' `export_bundle` for trained checkpoints.
 //!
 //! # Architecture
 //!
@@ -15,30 +31,32 @@
 //!                                   │ batch of requests
 //!                                   ▼
 //!                         coordinator thread
-//!              quantize u8 → im2col → pack bit planes (shared)
-//!                   │ Job(layer, Arc<PackedWindows>)
+//!        quantize → window (im2col / grouped points) → pack planes
+//!                   │ Job(layer, Arc<packed windows>)
 //!         ┌─────────┼─────────────┐
 //!         ▼         ▼             ▼
 //!     worker 0   worker 1  ...  worker N-1     (one thread per Chip;
 //!     chip dots  chip dots      chip dots       weight-stationary shards)
 //!         └─────────┴───────┬─────┘
 //!                           ▼
-//!              scale + bias + ReLU + pool → next layer → FC → reply
+//!            scale + bias + ReLU + pool/concat → next layer → head → reply
 //! ```
 //!
-//! # Model & numeric contract
+//! # Numeric contract
 //!
-//! * Each conv filter's sign bits live on RRAM rows of exactly one chip
-//!   (weight-stationary). Activations are u8-quantized per image per
-//!   layer and streamed bit-serially (8 planes) against the stored rows —
-//!   the paper's XNOR/popcount binary convolution.
-//! * Chip dots are integer-exact ([`crate::cim::vmm::binary_dots_batched`]),
-//!   so pool-of-N serving output equals the software reference
-//!   ([`ModelBundle::reference_logits`]) bit for bit, regardless of pool
-//!   size, batch size, or thread interleaving.
+//! * Each filter's cells live on RRAM rows of exactly one chip
+//!   (weight-stationary). Activations are quantized per request per
+//!   layer and streamed bit-serially (8 planes) against the stored rows.
+//! * Chip dots are integer-exact, so pool-of-N serving output equals the
+//!   software reference ([`ModelBundle::reference_logits`]) bit for bit,
+//!   regardless of pool size, batch size, or thread interleaving — for
+//!   both paths (property-tested in `tests/integration_stack.rs`).
 //! * Batching amortizes the dominant WRC row-walk energy: the word line
 //!   stays selected while a whole batch streams, which is where the
-//!   nJ/inference win over unbatched serving comes from (Fig. 3e).
+//!   nJ/inference win over unbatched serving comes from (Fig. 3e). The
+//!   INT8 path additionally pays one 2-bit sense burst per row segment
+//!   and is charged per offset-encoded bit plane
+//!   ([`crate::chip::Chip::account_batched_passes`]).
 //!
 //! # Knobs
 //!
@@ -46,7 +64,8 @@
 //! * [`BatcherConfig`] — `max_batch` (coalescing width), `max_wait`
 //!   (latency bound for partially filled batches), `queue_depth`
 //!   (admission bound: blocking `submit` gives lossless backpressure,
-//!   `try_submit` surfaces it as an error instead).
+//!   `try_submit` sheds on a full queue and the shed is counted in
+//!   [`ServeStats::dropped`]).
 //! * Placement prefers chips with the fewest lifetime
 //!   [`crate::chip::WearLedger::write_pulses`] and routes around tiles
 //!   whose stuck cells defeat the ECC spare budget.
@@ -54,13 +73,15 @@
 pub mod batcher;
 pub mod model;
 pub mod placement;
+pub mod pointnet_model;
 pub mod pool;
 pub mod scheduler;
 pub mod stats;
 
 pub use batcher::{BatcherConfig, Request, Response};
-pub use model::{ConvLayer, ModelBundle};
+pub use model::{ConvLayer, MnistBundle, ModelBundle, PlacementLayer, ShardPayload};
 pub use placement::{place, Placement, ShardLoc};
+pub use pointnet_model::{max_over_groups, PointNetBundle, PointwiseLayer, POINTWISE_LAYERS};
 pub use pool::{ChipPool, PoolConfig};
 pub use scheduler::{Server, ServerConfig};
 pub use stats::{ServeReport, ServeStats};

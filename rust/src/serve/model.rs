@@ -1,11 +1,23 @@
-//! The servable model format: binarized conv filters with their digital
-//! scales, live (pruning) masks, and the host-side FC head — everything
-//! the placer and scheduler need, decoupled from training state. Also the
-//! bit-exact software reference the chip pipeline is validated against.
+//! The servable model formats: everything the placer and scheduler need,
+//! decoupled from training state, plus the bit-exact software references
+//! the chip pipeline is validated against.
+//!
+//! Two paths share one serving engine through the [`ModelBundle`] enum:
+//!
+//! * [`MnistBundle`] — binary conv filters (1 RRAM cell per weight, u8
+//!   activations, `binary_dots_batched`) with digital scales, live masks,
+//!   and a host FC head.
+//! * [`crate::serve::PointNetBundle`] — per-channel INT8 pointwise
+//!   kernels (4 RRAM cells per weight, i8 activations,
+//!   `int8_dots_batched`) over the PointNet++ set-abstraction geometry.
+
+use anyhow::{anyhow, Result};
 
 use crate::coordinator::params::ParamSet;
 use crate::nn::quant;
 use crate::util::rng::Rng;
+
+use super::pointnet_model::PointNetBundle;
 
 /// One binary conv layer of the servable model.
 #[derive(Clone, Debug)]
@@ -39,9 +51,169 @@ impl ConvLayer {
     }
 }
 
-/// A trained model exported for serving.
+/// Evenly spread synthetic prune mask: exactly `floor(out_c *
+/// prune_rate)` entries false (Bresenham spacing), always keeping at
+/// least one live filter. Shared by the synthetic constructors of both
+/// bundle kinds so their bench models prune identically.
+pub fn synthetic_live_mask(out_c: usize, prune_rate: f64) -> Vec<bool> {
+    assert!((0.0..1.0).contains(&prune_rate));
+    let p = ((out_c as f64 * prune_rate) as usize).min(out_c.saturating_sub(1));
+    let mut live = vec![true; out_c];
+    for (i, slot) in live.iter_mut().enumerate() {
+        if (i + 1) * p / out_c > i * p / out_c {
+            *slot = false;
+        }
+    }
+    live
+}
+
+/// What one placeable shard stores on its RRAM rows: the sign bits of a
+/// binary filter (1 cell per weight) or the offset-encoded slices of an
+/// INT8 kernel (4 cells per weight).
+#[derive(Clone, Copy, Debug)]
+pub enum ShardPayload<'a> {
+    Binary(&'a [bool]),
+    Int8(&'a [i8]),
+}
+
+/// One model layer as the placer sees it: uniform cell footprint and one
+/// optional payload per filter (`None` = pruned, occupies no rows).
+pub struct PlacementLayer<'a> {
+    pub name: &'a str,
+    /// RRAM cells every live filter of this layer occupies.
+    pub cells: usize,
+    pub shards: Vec<Option<ShardPayload<'a>>>,
+}
+
+/// A trained model exported for serving: the two-path entry point the
+/// placer, scheduler, benches, and examples consume. Both variants share
+/// the pool/placement/batching machinery; they differ in weight encoding
+/// (1 vs 4 cells per weight), activation quantization (u8 vs i8), and
+/// the batched VMM primitive that computes their dots.
 #[derive(Clone, Debug)]
-pub struct ModelBundle {
+pub enum ModelBundle {
+    Mnist(MnistBundle),
+    PointNet(PointNetBundle),
+}
+
+impl From<MnistBundle> for ModelBundle {
+    fn from(m: MnistBundle) -> Self {
+        ModelBundle::Mnist(m)
+    }
+}
+
+impl From<PointNetBundle> for ModelBundle {
+    fn from(p: PointNetBundle) -> Self {
+        ModelBundle::PointNet(p)
+    }
+}
+
+impl ModelBundle {
+    /// Export a trained MNIST-CNN [`ParamSet`] (+ per-layer live masks)
+    /// into a servable bundle (see [`MnistBundle::from_params`]).
+    pub fn from_params(params: &ParamSet, live: &[Vec<bool>]) -> ModelBundle {
+        MnistBundle::from_params(params, live).into()
+    }
+
+    /// A randomly initialized MNIST-shaped bundle (see
+    /// [`MnistBundle::synthetic`]).
+    pub fn synthetic_mnist(channels: [usize; 3], prune_rate: f64, seed: u64) -> ModelBundle {
+        MnistBundle::synthetic(channels, prune_rate, seed).into()
+    }
+
+    /// Expected request input length (floats), checked at admission:
+    /// `input_hw^2` grayscale pixels for MNIST, `3 * cloud_points`
+    /// interleaved xyz coordinates for PointNet.
+    pub fn input_len(&self) -> usize {
+        match self {
+            ModelBundle::Mnist(m) => m.input_hw * m.input_hw,
+            ModelBundle::PointNet(p) => 3 * p.cloud_points,
+        }
+    }
+
+    /// Number of chip-resident layers (conv or pointwise) — the shard
+    /// tables the scheduler's workers index by.
+    pub fn n_layers(&self) -> usize {
+        match self {
+            ModelBundle::Mnist(m) => m.conv.len(),
+            ModelBundle::PointNet(p) => p.layers.len(),
+        }
+    }
+
+    pub fn total_filters(&self) -> usize {
+        match self {
+            ModelBundle::Mnist(m) => m.total_filters(),
+            ModelBundle::PointNet(p) => p.total_filters(),
+        }
+    }
+
+    pub fn live_filters(&self) -> usize {
+        match self {
+            ModelBundle::Mnist(m) => m.live_filters(),
+            ModelBundle::PointNet(p) => p.live_filters(),
+        }
+    }
+
+    /// Array rows the live filters need at `per_row` data columns per row
+    /// — the placer's feasibility measure against pool capacity.
+    pub fn rows_required(&self, per_row: usize) -> usize {
+        match self {
+            ModelBundle::Mnist(m) => m.rows_required(per_row),
+            ModelBundle::PointNet(p) => p.rows_required(per_row),
+        }
+    }
+
+    /// Bit-exact software reference of the serve pipeline for one input
+    /// (image or cloud). Chip serving must reproduce these logits exactly
+    /// (see the serve property tests).
+    pub fn reference_logits(&self, input: &[f32]) -> Vec<f32> {
+        match self {
+            ModelBundle::Mnist(m) => m.reference_logits(input),
+            ModelBundle::PointNet(p) => p.reference_logits(input),
+        }
+    }
+
+    /// The layers/filters/payloads view the wear-aware placer consumes.
+    pub fn placement_layers(&self) -> Vec<PlacementLayer<'_>> {
+        match self {
+            ModelBundle::Mnist(m) => m
+                .conv
+                .iter()
+                .map(|l| PlacementLayer {
+                    name: &l.name,
+                    cells: l.kernel_cells(),
+                    shards: (0..l.out_c)
+                        .map(|f| l.live[f].then_some(ShardPayload::Binary(l.bits[f].as_slice())))
+                        .collect(),
+                })
+                .collect(),
+            ModelBundle::PointNet(p) => p
+                .layers
+                .iter()
+                .map(|l| PlacementLayer {
+                    name: &l.name,
+                    cells: l.kernel_cells(),
+                    shards: (0..l.out_c)
+                        .map(|f| l.live[f].then_some(ShardPayload::Int8(l.w_q[f].as_slice())))
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Structural sanity check run once at [`super::Server::start`], so a
+    /// malformed bundle fails fast instead of panicking a worker thread.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            ModelBundle::Mnist(m) => m.validate(),
+            ModelBundle::PointNet(p) => p.validate(),
+        }
+    }
+}
+
+/// A trained binary-MNIST model exported for serving.
+#[derive(Clone, Debug)]
+pub struct MnistBundle {
     pub conv: Vec<ConvLayer>,
     /// FC weight, row-major `(fc_in, n_classes)` — column `o` is class o.
     pub fc_w: Vec<f32>,
@@ -52,11 +224,11 @@ pub struct ModelBundle {
     pub input_hw: usize,
 }
 
-impl ModelBundle {
+impl MnistBundle {
     /// Export a trained MNIST-CNN [`ParamSet`] (+ per-layer live masks)
     /// into a servable bundle. The conv weights are binarized exactly as
     /// the training graph binarizes them (`binarize_ste` semantics).
-    pub fn from_params(params: &ParamSet, live: &[Vec<bool>]) -> ModelBundle {
+    pub fn from_params(params: &ParamSet, live: &[Vec<bool>]) -> MnistBundle {
         assert_eq!(live.len(), 3, "one live mask per conv layer");
         let names = [("w1", "b1"), ("w2", "b2"), ("w3", "b3")];
         let mut conv = Vec::with_capacity(3);
@@ -86,7 +258,7 @@ impl ModelBundle {
         }
         let wf = params.get("wf");
         assert_eq!(wf.dims.len(), 2, "wf must be 2-d");
-        ModelBundle {
+        MnistBundle {
             conv,
             fc_w: wf.data.clone(),
             fc_b: params.get("bf").data.clone(),
@@ -100,7 +272,7 @@ impl ModelBundle {
     /// spread synthetic prune mask — the standard throughput-bench model
     /// when no trained checkpoint is at hand. `prune_rate` in [0,1);
     /// every layer keeps at least one live filter.
-    pub fn synthetic_mnist(channels: [usize; 3], prune_rate: f64, seed: u64) -> ModelBundle {
+    pub fn synthetic(channels: [usize; 3], prune_rate: f64, seed: u64) -> MnistBundle {
         assert!((0.0..1.0).contains(&prune_rate));
         let mut rng = Rng::new(seed ^ 0x5e7e_b00d);
         let in_chans = [1, channels[0], channels[1]];
@@ -117,14 +289,7 @@ impl ModelBundle {
                 bits.push(b);
                 alpha.push(a);
             }
-            let p = ((out_c as f64 * prune_rate) as usize).min(out_c.saturating_sub(1));
-            let mut live = vec![true; out_c];
-            for (i, slot) in live.iter_mut().enumerate() {
-                // Bresenham spread: exactly p filters pruned, evenly spaced
-                if (i + 1) * p / out_c > i * p / out_c {
-                    *slot = false;
-                }
-            }
+            let live = synthetic_live_mask(out_c, prune_rate);
             conv.push(ConvLayer {
                 name: format!("w{}", l + 1),
                 out_c,
@@ -140,7 +305,7 @@ impl ModelBundle {
         let fc_in = channels[2] * 7 * 7;
         let n_classes = 10;
         let fscale = (2.0 / fc_in as f64).sqrt();
-        ModelBundle {
+        MnistBundle {
             conv,
             fc_w: (0..fc_in * n_classes).map(|_| (rng.normal() * fscale) as f32).collect(),
             fc_b: vec![0.0; n_classes],
@@ -165,6 +330,43 @@ impl ModelBundle {
             .iter()
             .map(|l| l.live_count() * l.kernel_cells().div_ceil(per_row))
             .sum()
+    }
+
+    /// Structural sanity: per-layer mask/bits/alpha/bias widths, the
+    /// channel chain, and the conv-output-vs-FC-head seam — tracking the
+    /// spatial size exactly as the serve pipeline computes it
+    /// (stride-1 conv with pad 1: `oh = hw + 3 - ksize`).
+    pub fn validate(&self) -> Result<()> {
+        let mut c = 1usize;
+        let mut hw = self.input_hw;
+        for layer in &self.conv {
+            if layer.in_c != c {
+                return Err(anyhow!("{}: in_c {} breaks channel chain ({c})", layer.name, layer.in_c));
+            }
+            if layer.bits.len() != layer.out_c
+                || layer.alpha.len() != layer.out_c
+                || layer.bias.len() != layer.out_c
+                || layer.live.len() != layer.out_c
+            {
+                return Err(anyhow!("{}: per-filter vectors disagree with out_c", layer.name));
+            }
+            if layer.bits.iter().any(|b| b.len() != layer.kernel_cells()) {
+                return Err(anyhow!("{}: filter bit length vs kernel cells", layer.name));
+            }
+            if layer.ksize == 0 || layer.ksize > hw + 2 {
+                return Err(anyhow!("{}: ksize {} infeasible at {hw}x{hw}", layer.name, layer.ksize));
+            }
+            let oh = hw + 3 - layer.ksize;
+            hw = if layer.pool { oh / 2 } else { oh };
+            c = layer.out_c;
+        }
+        if c * hw * hw != self.fc_in {
+            return Err(anyhow!("conv output {c}x{hw}x{hw} does not feed fc_in {}", self.fc_in));
+        }
+        if self.fc_w.len() != self.fc_in * self.n_classes || self.fc_b.len() != self.n_classes {
+            return Err(anyhow!("FC head shape mismatch"));
+        }
+        Ok(())
     }
 
     /// Bit-exact software reference of the serve pipeline for one image:
@@ -296,7 +498,7 @@ mod tests {
         p.push(Param::he("wf", vec![2 * 7 * 7, 10], 98, &mut rng));
         p.push(Param::zeros("bf", vec![10]));
         let live = vec![vec![true, false], vec![true, true], vec![false, true]];
-        let m = ModelBundle::from_params(&p, &live);
+        let m = MnistBundle::from_params(&p, &live);
         assert_eq!(m.conv.len(), 3);
         assert_eq!(m.conv[0].live, vec![true, false]);
         assert_eq!(m.live_filters(), 4);
@@ -314,7 +516,7 @@ mod tests {
 
     #[test]
     fn synthetic_bundle_shapes_and_prune_spread() {
-        let m = ModelBundle::synthetic_mnist([32, 64, 32], 0.35, 1);
+        let m = MnistBundle::synthetic([32, 64, 32], 0.35, 1);
         assert_eq!(m.conv.len(), 3);
         assert_eq!(m.conv[0].in_c, 1);
         assert_eq!(m.conv[1].in_c, 32);
@@ -327,12 +529,12 @@ mod tests {
             assert_eq!(pruned, (l.out_c as f64 * 0.35) as usize, "{}", l.name);
             assert!(l.live_count() >= 1);
         }
-        assert!(m.rows_required(30) < ModelBundle::synthetic_mnist([32, 64, 32], 0.0, 1).rows_required(30));
+        assert!(m.rows_required(30) < MnistBundle::synthetic([32, 64, 32], 0.0, 1).rows_required(30));
     }
 
     #[test]
     fn prune_rate_zero_keeps_everything() {
-        let m = ModelBundle::synthetic_mnist([8, 8, 8], 0.0, 2);
+        let m = MnistBundle::synthetic([8, 8, 8], 0.0, 2);
         assert_eq!(m.live_filters(), m.total_filters());
     }
 
@@ -361,7 +563,7 @@ mod tests {
 
     #[test]
     fn reference_logits_are_deterministic_and_shaped() {
-        let m = ModelBundle::synthetic_mnist([4, 4, 4], 0.3, 3);
+        let m = MnistBundle::synthetic([4, 4, 4], 0.3, 3);
         let ds = mnist::generate(2, 9);
         let a = m.reference_logits(ds.sample(0));
         let b = m.reference_logits(ds.sample(0));
@@ -373,8 +575,42 @@ mod tests {
     }
 
     #[test]
+    fn enum_bundle_delegates_both_paths() {
+        use crate::nn::pointnet::GroupingConfig;
+        use crate::serve::PointNetBundle;
+        let m = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 6);
+        m.validate().unwrap();
+        assert_eq!(m.input_len(), 28 * 28);
+        assert_eq!(m.n_layers(), 3);
+        assert!(m
+            .placement_layers()
+            .iter()
+            .flat_map(|l| l.shards.iter().flatten())
+            .all(|s| matches!(s, ShardPayload::Binary(_))));
+        let p: ModelBundle = PointNetBundle::synthetic(
+            [2, 2, 3, 2, 2, 3, 2, 4],
+            3,
+            0.0,
+            GroupingConfig { s1: 8, k1: 4, r1: 0.3, s2: 4, k2: 2, r2: 0.6 },
+            7,
+        )
+        .into();
+        p.validate().unwrap();
+        assert_eq!(p.input_len(), 3 * crate::nn::data::modelnet::POINTS);
+        assert_eq!(p.n_layers(), 8);
+        assert!(p
+            .placement_layers()
+            .iter()
+            .flat_map(|l| l.shards.iter().flatten())
+            .all(|s| matches!(s, ShardPayload::Int8(_))));
+        // both variants report consistent filter accounting
+        assert_eq!(m.live_filters(), m.total_filters());
+        assert!(p.rows_required(30) > 0);
+    }
+
+    #[test]
     fn pruned_filters_zero_their_channels() {
-        let mut m = ModelBundle::synthetic_mnist([4, 4, 4], 0.0, 4);
+        let mut m = MnistBundle::synthetic([4, 4, 4], 0.0, 4);
         let ds = mnist::generate(1, 5);
         let base = m.reference_logits(ds.sample(0));
         // pruning the whole last conv layer except filter 0 changes logits

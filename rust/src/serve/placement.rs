@@ -1,5 +1,7 @@
-//! Wear-aware shard placement: map every live (unpruned) conv filter's
-//! sign bits onto RRAM rows of exactly one pool chip.
+//! Wear-aware shard placement: map every live (unpruned) filter of a
+//! [`ModelBundle`] — binary sign bits (MNIST path, 1 cell per weight) or
+//! offset-encoded INT8 slices (PointNet path, 4 cells per weight) — onto
+//! RRAM rows of exactly one pool chip.
 //!
 //! Policy, per filter in layer/filter order:
 //! 1. rank candidate chips by lifetime [`crate::chip::WearLedger`]
@@ -7,24 +9,24 @@
 //!    more free rows — on a fresh pool this degenerates to row-balanced
 //!    round-robin, on a warm pool it steers programming away from tired
 //!    chips;
-//! 2. allocate a [`RowSpan`] on the best candidate and program the bits
-//!    through the ECC plan;
+//! 2. allocate a [`RowSpan`] on the best candidate and program the
+//!    payload through the ECC plan;
 //! 3. if the store hits cells the ECC spare/backup budget cannot absorb
 //!    (a *stuck tile*), retire that span and retry on the next candidate.
 //!
 //! Pruning is what makes dense models feasible at all on small pools: a
 //! dense 32-64-32 MNIST model needs more rows than one 2x512x32 chip
-//! offers, while the ~35%-pruned model fits — the serving-throughput win
-//! measured by `benches/serve_throughput.rs`.
+//! offers, and the INT8 PointNet stack is 4x hungrier per weight — the
+//! serving-throughput win measured by `benches/serve_throughput.rs`.
 
 use anyhow::{anyhow, Result};
 
-use crate::cim::mapping::{store_bits, RowAllocator, RowSpan};
+use crate::cim::mapping::{store_bits, store_int8, RowAllocator, RowSpan};
 
-use super::model::ModelBundle;
+use super::model::{ModelBundle, ShardPayload};
 use super::pool::ChipPool;
 
-/// Where one live filter's bits physically live.
+/// Where one live filter's cells physically live.
 #[derive(Clone, Debug)]
 pub struct ShardLoc {
     pub chip: usize,
@@ -83,17 +85,16 @@ pub fn place(model: &ModelBundle, pool: &mut ChipPool) -> Result<Placement> {
              prune harder or grow the pool"
         ));
     }
-    let mut shards = Vec::with_capacity(model.conv.len());
+    let mut shards = Vec::with_capacity(model.n_layers());
     let mut stuck_retries = 0usize;
-    for layer in &model.conv {
-        let cells = layer.kernel_cells();
-        let mut layer_shards: Vec<Option<ShardLoc>> = Vec::with_capacity(layer.out_c);
-        for f in 0..layer.out_c {
-            if !layer.live[f] {
+    for layer in model.placement_layers() {
+        let cells = layer.cells;
+        let mut layer_shards: Vec<Option<ShardLoc>> = Vec::with_capacity(layer.shards.len());
+        for (f, payload) in layer.shards.iter().enumerate() {
+            let Some(payload) = payload else {
                 layer_shards.push(None);
                 continue;
-            }
-            let bits = &layer.bits[f];
+            };
             // wear-aware candidate order (recomputed per filter: wear
             // accrued by this very placement run feeds back immediately)
             let mut order: Vec<usize> = (0..n).collect();
@@ -109,7 +110,11 @@ pub fn place(model: &ModelBundle, pool: &mut ChipPool) -> Result<Placement> {
                 let Some(span) = allocs[c].alloc(cells) else {
                     continue; // chip full
                 };
-                let failures = store_bits(&mut pool.chips_mut()[c], &span, bits);
+                let chip = &mut pool.chips_mut()[c];
+                let failures = match *payload {
+                    ShardPayload::Binary(bits) => store_bits(chip, &span, bits),
+                    ShardPayload::Int8(weights) => store_int8(chip, &span, weights),
+                };
                 if failures == 0 {
                     placed = Some(ShardLoc { chip: c, span });
                     break;
@@ -136,21 +141,33 @@ pub fn place(model: &ModelBundle, pool: &mut ChipPool) -> Result<Placement> {
 mod tests {
     use super::*;
     use crate::chip::ChipConfig;
-    use crate::cim::mapping::load_bits;
+    use crate::cim::mapping::{load_bits, load_int8};
+    use crate::nn::pointnet::GroupingConfig;
     use crate::serve::pool::PoolConfig;
-    use crate::serve::ModelBundle;
+    use crate::serve::{MnistBundle, ModelBundle, PointNetBundle};
 
     fn small_pool(chips: usize, seed: u64) -> ChipPool {
         ChipPool::new(&PoolConfig { chips, chip: ChipConfig::small_test(), seed })
     }
 
+    fn tiny_pointnet(prune: f64, seed: u64) -> PointNetBundle {
+        PointNetBundle::synthetic(
+            [2, 2, 3, 2, 2, 3, 2, 4],
+            3,
+            prune,
+            GroupingConfig { s1: 8, k1: 4, r1: 0.3, s2: 4, k2: 2, r2: 0.6 },
+            seed,
+        )
+    }
+
     #[test]
     fn roundtrip_every_live_filter_on_exactly_one_tile() {
-        let model = ModelBundle::synthetic_mnist([4, 4, 4], 0.3, 11);
+        let mnist = MnistBundle::synthetic([4, 4, 4], 0.3, 11);
+        let model: ModelBundle = mnist.clone().into();
         let mut pool = small_pool(2, 12);
         let placement = place(&model, &mut pool).unwrap();
         assert_eq!(placement.shards.len(), 3);
-        for (l, layer) in model.conv.iter().enumerate() {
+        for (l, layer) in mnist.conv.iter().enumerate() {
             for f in 0..layer.out_c {
                 let loc = &placement.shards[l][f];
                 assert_eq!(loc.is_some(), layer.live[f], "layer {l} filter {f}");
@@ -159,6 +176,27 @@ mod tests {
                     // bits read back through the ECC are the stored bits
                     let got = load_bits(&mut pool.chips_mut()[loc.chip], &loc.span);
                     assert_eq!(&got, &layer.bits[f], "layer {l} filter {f}");
+                }
+            }
+        }
+        assert_eq!(placement.live_shards(), model.live_filters());
+    }
+
+    #[test]
+    fn pointnet_int8_shards_roundtrip() {
+        let pn = tiny_pointnet(0.3, 21);
+        let model: ModelBundle = pn.clone().into();
+        let mut pool = small_pool(2, 22);
+        let placement = place(&model, &mut pool).unwrap();
+        assert_eq!(placement.shards.len(), 8);
+        for (l, layer) in pn.layers.iter().enumerate() {
+            for f in 0..layer.out_c {
+                let loc = &placement.shards[l][f];
+                assert_eq!(loc.is_some(), layer.live[f], "layer {l} channel {f}");
+                if let Some(loc) = loc {
+                    assert_eq!(loc.span.len, 4 * layer.in_c, "4 cells per weight");
+                    let got = load_int8(&mut pool.chips_mut()[loc.chip], &loc.span);
+                    assert_eq!(&got, &layer.w_q[f], "layer {l} channel {f}");
                 }
             }
         }
@@ -203,12 +241,13 @@ mod tests {
         // make the bad chip the preferred candidate
         good.wear.write_pulses = bad.wear.write_pulses + 1_000_000;
         let mut pool = ChipPool::from_chips(vec![bad, good]);
-        let model = ModelBundle::synthetic_mnist([4, 4, 4], 0.0, 18);
+        let mnist = MnistBundle::synthetic([4, 4, 4], 0.0, 18);
+        let model: ModelBundle = mnist.clone().into();
         let placement = place(&model, &mut pool).unwrap();
         assert!(placement.stuck_retries > 0, "expected stuck-tile retries");
         // every filter still landed somewhere, and reads back intact
         assert_eq!(placement.live_shards(), model.live_filters());
-        for (l, layer) in model.conv.iter().enumerate() {
+        for (l, layer) in mnist.conv.iter().enumerate() {
             for (f, loc) in placement.shards[l].iter().enumerate() {
                 let loc = loc.as_ref().unwrap();
                 let got = load_bits(&mut pool.chips_mut()[loc.chip], &loc.span);
@@ -222,6 +261,22 @@ mod tests {
         // dense MNIST model needs ~1312 rows; one small test chip has 60
         let model = ModelBundle::synthetic_mnist([32, 64, 32], 0.0, 19);
         let mut pool = small_pool(1, 20);
+        let err = place(&model, &mut pool).unwrap_err();
+        assert!(err.to_string().contains("rows"), "{err}");
+    }
+
+    #[test]
+    fn oversized_pointnet_fails_with_capacity_error() {
+        // full-width INT8 stack needs thousands of rows
+        let model: ModelBundle = PointNetBundle::synthetic(
+            [32, 32, 64, 64, 64, 128, 128, 256],
+            128,
+            0.0,
+            GroupingConfig::default(),
+            23,
+        )
+        .into();
+        let mut pool = small_pool(1, 24);
         let err = place(&model, &mut pool).unwrap_err();
         assert!(err.to_string().contains("rows"), "{err}");
     }

@@ -1,0 +1,514 @@
+//! The servable PointNet INT8 model: per-channel-quantized pointwise
+//! (1x1) kernels over the PointNet++ set-abstraction geometry, plus the
+//! bit-exact software reference the chip pipeline is validated against.
+//!
+//! The paper's ModelNet10 result runs on this path: every weight is
+//! stored as four 2-bit RRAM cells ([`crate::cim::mapping::store_int8`]),
+//! activations are i8-quantized per cloud per layer
+//! ([`crate::nn::quant::quantize_activations_i8`]), and dots are computed
+//! by the batched offset-encoded VMM
+//! ([`crate::cim::vmm::int8_dots_batched`]).
+//!
+//! # Architecture (fixed 3/3/2 stage split, mirroring the trainer)
+//!
+//! ```text
+//! cloud (N x 3) ── group_cloud ──► SA1 points (s1*k1 x 3)
+//!   layers 0..3 (pointwise INT8) ── max over k1 ──► s1 x c2
+//!   concat [feat, g2 rel xyz]    ──► SA2 points (s2*k2 x c2+3)
+//!   layers 3..6                  ── max over k2 ──► s2 x c5
+//!   concat [feat, center xyz]    ──► global points (s2 x c5+3)
+//!   layers 6..8                  ── max over s2 ──► feature (c7)
+//!   host head: ReLU dense + dense ──► logits
+//! ```
+//!
+//! Grouping ([`crate::nn::pointnet::group_cloud`]) depends only on point
+//! coordinates, so the serve coordinator and the software reference
+//! compute identical tensors from the same request — the chip path
+//! differs from [`PointNetBundle::reference_logits`] only in who computes
+//! the integer dots, which are exact on both sides.
+
+use anyhow::{anyhow, Result};
+
+use crate::cim::vmm;
+use crate::coordinator::params::ParamSet;
+use crate::nn::data::modelnet;
+use crate::nn::pointnet::{group_cloud, Grouped, GroupingConfig};
+use crate::nn::quant;
+use crate::util::rng::Rng;
+
+use super::model::{fc_logits, scale_mac, synthetic_live_mask};
+
+/// Number of chip-resident pointwise layers (3 SA1 + 3 SA2 + 2 global).
+pub const POINTWISE_LAYERS: usize = 8;
+
+/// One INT8 pointwise (1x1-conv) layer of the servable model.
+#[derive(Clone, Debug)]
+pub struct PointwiseLayer {
+    pub name: String,
+    pub out_c: usize,
+    pub in_c: usize,
+    /// Per-channel quantized kernels, each of length `in_c`.
+    pub w_q: Vec<Vec<i8>>,
+    /// Per-channel INT8 weight scale (max|w| / 127), the digital S&A
+    /// multiplier on the host side of the serve pipeline.
+    pub w_scale: Vec<f32>,
+    pub bias: Vec<f32>,
+    /// Live mask from the pruning scheduler; pruned channels occupy no
+    /// RRAM rows and contribute exactly-zero features.
+    pub live: Vec<bool>,
+}
+
+impl PointwiseLayer {
+    /// RRAM cells one channel's kernel occupies (4 cells per weight).
+    pub fn kernel_cells(&self) -> usize {
+        4 * self.in_c
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&b| b).count()
+    }
+}
+
+/// A trained PointNet exported for serving.
+#[derive(Clone, Debug)]
+pub struct PointNetBundle {
+    pub grouping: GroupingConfig,
+    /// Points per request cloud (requests are `3 * cloud_points` floats).
+    pub cloud_points: usize,
+    /// The [`POINTWISE_LAYERS`] chip-resident layers in stage order.
+    pub layers: Vec<PointwiseLayer>,
+    /// Host head, dense 1: `(head_in, head_mid)` row-major + ReLU.
+    pub head_w1: Vec<f32>,
+    pub head_b1: Vec<f32>,
+    pub head_mid: usize,
+    /// Host head, dense 2: `(head_mid, n_classes)` row-major.
+    pub head_w2: Vec<f32>,
+    pub head_b2: Vec<f32>,
+    pub n_classes: usize,
+}
+
+/// Channel-wise max over groups of `k` consecutive points: `y` holds
+/// `n_groups * k` point-major rows of `c` features; the result holds one
+/// row per group. Shared by the reference and the serve coordinator so
+/// both sides fold in the identical order.
+pub fn max_over_groups(y: &[f32], n_groups: usize, k: usize, c: usize) -> Vec<f32> {
+    assert_eq!(y.len(), n_groups * k * c, "pool input size");
+    let mut out = vec![f32::NEG_INFINITY; n_groups * c];
+    for gi in 0..n_groups {
+        for j in 0..k {
+            let row = &y[(gi * k + j) * c..(gi * k + j + 1) * c];
+            for (o, &v) in out[gi * c..(gi + 1) * c].iter_mut().zip(row) {
+                *o = o.max(v);
+            }
+        }
+    }
+    out
+}
+
+impl PointNetBundle {
+    /// Export trained PointNet parameters (+ the 8 per-layer live masks
+    /// from the pruning scheduler) into a servable bundle: pointwise
+    /// layers `w0..w7` are per-channel INT8-quantized exactly as the
+    /// chip-in-the-loop precision check quantizes them
+    /// (`quantize_channel_int8`), `w8`/`w9` become the host head.
+    pub fn from_params(
+        params: &ParamSet,
+        live: &[Vec<bool>],
+        grouping: &GroupingConfig,
+    ) -> PointNetBundle {
+        assert_eq!(live.len(), POINTWISE_LAYERS, "one live mask per pointwise layer");
+        let mut layers = Vec::with_capacity(POINTWISE_LAYERS);
+        for (l, mask) in live.iter().enumerate() {
+            let name = format!("w{l}");
+            let w = params.get(&name);
+            assert_eq!(w.dims.len(), 2, "{name}: pointwise weight must be 2-d");
+            let kernels = params.kernels_of(&name);
+            assert_eq!(mask.len(), kernels.len(), "{name}: mask size");
+            let mut w_q = Vec::with_capacity(kernels.len());
+            let mut w_scale = Vec::with_capacity(kernels.len());
+            for kr in &kernels {
+                let (q, s) = quant::quantize_channel_int8(kr);
+                w_q.push(q);
+                w_scale.push(s);
+            }
+            layers.push(PointwiseLayer {
+                name,
+                out_c: w.dims[1],
+                in_c: w.dims[0],
+                w_q,
+                w_scale,
+                bias: params.get(&format!("b{l}")).data.clone(),
+                live: mask.clone(),
+            });
+        }
+        let w8 = params.get("w8");
+        let w9 = params.get("w9");
+        assert_eq!(w8.dims.len(), 2, "w8 must be 2-d");
+        assert_eq!(w9.dims.len(), 2, "w9 must be 2-d");
+        PointNetBundle {
+            grouping: *grouping,
+            cloud_points: modelnet::POINTS,
+            layers,
+            head_w1: w8.data.clone(),
+            head_b1: params.get("b8").data.clone(),
+            head_mid: w8.dims[1],
+            head_w2: w9.data.clone(),
+            head_b2: params.get("b9").data.clone(),
+            n_classes: w9.dims[1],
+        }
+    }
+
+    /// A randomly initialized (He) PointNet-shaped bundle with an evenly
+    /// spread synthetic prune mask — the throughput-bench model when no
+    /// trained checkpoint is at hand. `widths` are the 8 pointwise output
+    /// widths; `prune_rate` in [0,1); every layer keeps >= 1 live channel.
+    pub fn synthetic(
+        widths: [usize; POINTWISE_LAYERS],
+        head_mid: usize,
+        prune_rate: f64,
+        grouping: GroupingConfig,
+        seed: u64,
+    ) -> PointNetBundle {
+        assert!((0.0..1.0).contains(&prune_rate));
+        let mut rng = Rng::new(seed ^ 0x707e_b00d);
+        let mut layers = Vec::with_capacity(POINTWISE_LAYERS);
+        let mut prev = 3usize;
+        for (l, &out_c) in widths.iter().enumerate() {
+            // geometry re-enters at the SA2 and global concat seams
+            let in_c = if l == 3 || l == 6 { prev + 3 } else { prev };
+            let scale = (2.0 / in_c as f64).sqrt();
+            let mut w_q = Vec::with_capacity(out_c);
+            let mut w_scale = Vec::with_capacity(out_c);
+            for _ in 0..out_c {
+                let kr: Vec<f32> = (0..in_c).map(|_| (rng.normal() * scale) as f32).collect();
+                let (q, s) = quant::quantize_channel_int8(&kr);
+                w_q.push(q);
+                w_scale.push(s);
+            }
+            let live = synthetic_live_mask(out_c, prune_rate);
+            layers.push(PointwiseLayer {
+                name: format!("w{l}"),
+                out_c,
+                in_c,
+                w_q,
+                w_scale,
+                bias: (0..out_c).map(|_| (rng.normal() * 0.01) as f32).collect(),
+                live,
+            });
+            prev = out_c;
+        }
+        let n_classes = 10;
+        let hscale = (2.0 / prev as f64).sqrt();
+        PointNetBundle {
+            grouping,
+            cloud_points: modelnet::POINTS,
+            layers,
+            head_w1: (0..prev * head_mid).map(|_| (rng.normal() * hscale) as f32).collect(),
+            head_b1: vec![0.0; head_mid],
+            head_mid,
+            head_w2: (0..head_mid * n_classes)
+                .map(|_| (rng.normal() * (2.0 / head_mid as f64).sqrt()) as f32)
+                .collect(),
+            head_b2: vec![0.0; n_classes],
+            n_classes,
+        }
+    }
+
+    /// Stage of a layer index: 0 = SA1, 1 = SA2, 2 = global.
+    pub fn stage_of(l: usize) -> usize {
+        match l {
+            0..=2 => 0,
+            3..=5 => 1,
+            _ => 2,
+        }
+    }
+
+    /// Points every layer of a stage runs over.
+    pub fn points_in_stage(&self, stage: usize) -> usize {
+        match stage {
+            0 => self.grouping.s1 * self.grouping.k1,
+            1 => self.grouping.s2 * self.grouping.k2,
+            _ => self.grouping.s2,
+        }
+    }
+
+    /// Feature width the host head consumes.
+    pub fn head_in(&self) -> usize {
+        self.layers.last().map(|l| l.out_c).unwrap_or(0)
+    }
+
+    /// Stage-1 input map of one grouped cloud: the SA1 neighbor coords,
+    /// point-major `(s1 * k1, 3)`.
+    pub fn sa1_input(&self, g: &Grouped) -> Vec<f32> {
+        g.g1_xyz.clone()
+    }
+
+    /// Stage-2 input: per SA2 member, the pooled SA1 feature of the
+    /// center it indexes concatenated with its relative coords —
+    /// point-major `(s2 * k2, c1 + 3)`.
+    fn sa2_input(&self, g: &Grouped, f1: &[f32], c1: usize) -> Vec<f32> {
+        let gc = &self.grouping;
+        let mut out = Vec::with_capacity(gc.s2 * gc.k2 * (c1 + 3));
+        for j in 0..gc.s2 * gc.k2 {
+            let idx = g.g2_idx[j] as usize;
+            out.extend_from_slice(&f1[idx * c1..(idx + 1) * c1]);
+            out.extend_from_slice(&g.g2_xyz[3 * j..3 * j + 3]);
+        }
+        out
+    }
+
+    /// Stage-3 input: per SA2 center, its pooled feature concatenated
+    /// with the absolute center coords — point-major `(s2, c2 + 3)`.
+    fn global_input(&self, g: &Grouped, f2: &[f32], c2: usize) -> Vec<f32> {
+        let gc = &self.grouping;
+        let mut out = Vec::with_capacity(gc.s2 * (c2 + 3));
+        for si in 0..gc.s2 {
+            out.extend_from_slice(&f2[si * c2..(si + 1) * c2]);
+            out.extend_from_slice(&g.c2_xyz[3 * si..3 * si + 3]);
+        }
+        out
+    }
+
+    /// Advance layer `l`'s point-major output `y` to the next layer's
+    /// input map: pool + concat at the stage seams (after layers 2 and
+    /// 5), global pool after the last layer, identity elsewhere. Shared
+    /// by the software reference and the serve coordinator, so the two
+    /// paths differ only in who computed the integer dots.
+    pub fn advance(&self, l: usize, g: &Grouped, y: Vec<f32>) -> Vec<f32> {
+        let gc = &self.grouping;
+        let c = self.layers[l].out_c;
+        match l {
+            2 => {
+                let f1 = max_over_groups(&y, gc.s1, gc.k1, c);
+                self.sa2_input(g, &f1, c)
+            }
+            5 => {
+                let f2 = max_over_groups(&y, gc.s2, gc.k2, c);
+                self.global_input(g, &f2, c)
+            }
+            l if l + 1 == self.layers.len() => max_over_groups(&y, 1, gc.s2, c),
+            _ => y,
+        }
+    }
+
+    /// Host classification head over the pooled global feature: dense +
+    /// ReLU + dense, both through [`fc_logits`] (shared accumulation
+    /// order, hence bit-exact agreement between reference and serving).
+    pub fn head_logits(&self, feat: &[f32]) -> Vec<f32> {
+        let h: Vec<f32> = fc_logits(feat, &self.head_w1, &self.head_b1, self.head_in(), self.head_mid)
+            .into_iter()
+            .map(|v| v.max(0.0))
+            .collect();
+        fc_logits(&h, &self.head_w2, &self.head_b2, self.head_mid, self.n_classes)
+    }
+
+    pub fn total_filters(&self) -> usize {
+        self.layers.iter().map(|l| l.out_c).sum()
+    }
+
+    pub fn live_filters(&self) -> usize {
+        self.layers.iter().map(|l| l.live_count()).sum()
+    }
+
+    /// Array rows the live channels need at `per_row` data columns per
+    /// row (4 cells per weight).
+    pub fn rows_required(&self, per_row: usize) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.live_count() * l.kernel_cells().div_ceil(per_row))
+            .sum()
+    }
+
+    /// Pointwise MAC ops one cloud costs with the current live masks —
+    /// the op count the paper's Fig. 5i meters and the serve bench
+    /// reports as the pruning payoff.
+    pub fn mac_ops_per_cloud(&self) -> u64 {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(l, layer)| {
+                (self.points_in_stage(Self::stage_of(l)) * layer.in_c * layer.live_count()) as u64
+            })
+            .sum()
+    }
+
+    /// Structural sanity: stage count, channel chain (with the +3
+    /// geometry re-entry at the concat seams), per-layer vector widths,
+    /// grouping-vs-cloud feasibility, and head shapes.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.len() != POINTWISE_LAYERS {
+            return Err(anyhow!(
+                "PointNet bundle needs {POINTWISE_LAYERS} pointwise layers, got {}",
+                self.layers.len()
+            ));
+        }
+        let gc = &self.grouping;
+        if gc.s1 == 0 || gc.k1 == 0 || gc.s2 == 0 || gc.k2 == 0 {
+            return Err(anyhow!("degenerate grouping config"));
+        }
+        if gc.s1 > self.cloud_points {
+            return Err(anyhow!("grouping s1 {} exceeds cloud points {}", gc.s1, self.cloud_points));
+        }
+        if gc.s2 > gc.s1 {
+            return Err(anyhow!("grouping s2 {} exceeds s1 {}", gc.s2, gc.s1));
+        }
+        let mut prev = 3usize;
+        for (l, layer) in self.layers.iter().enumerate() {
+            let want_in = if l == 3 || l == 6 { prev + 3 } else { prev };
+            if layer.in_c != want_in {
+                return Err(anyhow!("{}: in_c {} breaks channel chain ({want_in})", layer.name, layer.in_c));
+            }
+            if layer.w_q.len() != layer.out_c
+                || layer.w_scale.len() != layer.out_c
+                || layer.bias.len() != layer.out_c
+                || layer.live.len() != layer.out_c
+            {
+                return Err(anyhow!("{}: per-channel vectors disagree with out_c", layer.name));
+            }
+            if layer.w_q.iter().any(|k| k.len() != layer.in_c) {
+                return Err(anyhow!("{}: kernel length vs in_c", layer.name));
+            }
+            prev = layer.out_c;
+        }
+        if self.head_w1.len() != prev * self.head_mid
+            || self.head_b1.len() != self.head_mid
+            || self.head_w2.len() != self.head_mid * self.n_classes
+            || self.head_b2.len() != self.n_classes
+        {
+            return Err(anyhow!("head shape mismatch"));
+        }
+        Ok(())
+    }
+
+    /// Bit-exact software reference of the INT8 serve pipeline for one
+    /// raw cloud (`3 * cloud_points` interleaved xyz floats): identical
+    /// grouping, per-layer i8 activation quantization, integer INT8 dots,
+    /// identical scale/bias/ReLU, pooling, and host head. Chip serving
+    /// must reproduce these logits exactly (see the serve property
+    /// tests).
+    pub fn reference_logits(&self, cloud: &[f32]) -> Vec<f32> {
+        assert_eq!(cloud.len(), 3 * self.cloud_points, "cloud size");
+        let g = group_cloud(cloud, &self.grouping);
+        let mut x = self.sa1_input(&g);
+        for (l, layer) in self.layers.iter().enumerate() {
+            let n_points = self.points_in_stage(Self::stage_of(l));
+            debug_assert_eq!(x.len(), n_points * layer.in_c);
+            let (q, s) = quant::quantize_activations_i8(&x);
+            let mut y = vec![0.0f32; n_points * layer.out_c];
+            for (f, wq) in layer.w_q.iter().enumerate() {
+                if !layer.live[f] {
+                    continue;
+                }
+                for pnt in 0..n_points {
+                    let win = &q[pnt * layer.in_c..(pnt + 1) * layer.in_c];
+                    let dot = vmm::int8_dot_ref(wq, win);
+                    y[pnt * layer.out_c + f] =
+                        scale_mac(layer.w_scale[f], s, dot, layer.bias[f]).max(0.0);
+                }
+            }
+            x = self.advance(l, &g, y);
+        }
+        self.head_logits(&x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small, fast geometry + widths for unit tests.
+    fn tiny_grouping() -> GroupingConfig {
+        GroupingConfig { s1: 8, k1: 4, r1: 0.3, s2: 4, k2: 2, r2: 0.6 }
+    }
+
+    fn tiny_bundle(prune: f64, seed: u64) -> PointNetBundle {
+        PointNetBundle::synthetic([2, 2, 3, 2, 2, 3, 2, 4], 3, prune, tiny_grouping(), seed)
+    }
+
+    fn cloud(seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        modelnet::sample_cloud(3, &mut rng)
+    }
+
+    #[test]
+    fn synthetic_shapes_and_chain_validate() {
+        let b = tiny_bundle(0.4, 1);
+        b.validate().unwrap();
+        assert_eq!(b.layers.len(), POINTWISE_LAYERS);
+        assert_eq!(b.layers[0].in_c, 3);
+        assert_eq!(b.layers[3].in_c, b.layers[2].out_c + 3);
+        assert_eq!(b.layers[6].in_c, b.layers[5].out_c + 3);
+        assert!(b.live_filters() < b.total_filters());
+        assert!(b.layers.iter().all(|l| l.live_count() >= 1));
+        assert!(b.rows_required(30) < tiny_bundle(0.0, 1).rows_required(30));
+        assert!(b.mac_ops_per_cloud() < tiny_bundle(0.0, 1).mac_ops_per_cloud());
+    }
+
+    #[test]
+    fn reference_logits_deterministic_shaped_and_input_sensitive() {
+        let b = tiny_bundle(0.3, 2);
+        let c0 = cloud(10);
+        let a = b.reference_logits(&c0);
+        assert_eq!(a.len(), 10);
+        assert!(a.iter().all(|v| v.is_finite()));
+        assert_eq!(a, b.reference_logits(&c0));
+        assert_ne!(a, b.reference_logits(&cloud(11)));
+    }
+
+    #[test]
+    fn pruning_a_channel_changes_logits() {
+        let mut b = tiny_bundle(0.0, 3);
+        let c0 = cloud(12);
+        let base = b.reference_logits(&c0);
+        for f in 1..b.layers[7].out_c {
+            b.layers[7].live[f] = false;
+        }
+        assert_ne!(base, b.reference_logits(&c0));
+    }
+
+    #[test]
+    fn max_over_groups_folds_blockwise() {
+        // 2 groups of k=2 points with c=2 features
+        let y = [1., 2., 3., 1., /* group 1 */ 0., 9., 5., 4.];
+        assert_eq!(max_over_groups(&y, 2, 2, 2), vec![3., 2., 5., 9.]);
+        // global pool = one group over everything
+        assert_eq!(max_over_groups(&y, 1, 4, 2), vec![5., 9.]);
+    }
+
+    #[test]
+    fn validate_rejects_broken_chain_and_bad_grouping() {
+        let mut b = tiny_bundle(0.0, 4);
+        b.layers[4].in_c += 1;
+        assert!(b.validate().is_err());
+        let mut b = tiny_bundle(0.0, 5);
+        b.grouping.s1 = b.cloud_points + 1;
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn from_params_quantizes_per_channel_and_keeps_masks() {
+        let mut rng = Rng::new(6);
+        let mut p = ParamSet::default();
+        let dims: [(usize, usize); 10] = [
+            (3, 2), (2, 2), (2, 3), (6, 2), (2, 2), (2, 3), (6, 2), (2, 4), (4, 3), (3, 10),
+        ];
+        for (l, &(fi, fo)) in dims.iter().enumerate() {
+            p.push(crate::coordinator::params::Param::he(&format!("w{l}"), vec![fi, fo], fi, &mut rng));
+            p.push(crate::coordinator::params::Param::zeros(&format!("b{l}"), vec![fo]));
+        }
+        let mut live: Vec<Vec<bool>> = dims[..POINTWISE_LAYERS].iter().map(|&(_, fo)| vec![true; fo]).collect();
+        live[1][0] = false;
+        let b = PointNetBundle::from_params(&p, &live, &tiny_grouping());
+        b.validate().unwrap();
+        assert_eq!(b.layers[1].live, vec![false, true]);
+        assert_eq!(b.head_mid, 3);
+        assert_eq!(b.n_classes, 10);
+        // per-channel quantization mirrors quantize_channel_int8
+        let kernels = p.kernels_of("w0");
+        let (q, s) = quant::quantize_channel_int8(&kernels[0]);
+        assert_eq!(b.layers[0].w_q[0], q);
+        assert_eq!(b.layers[0].w_scale[0], s);
+        // the exported bundle runs end to end
+        assert_eq!(b.reference_logits(&cloud(13)).len(), 10);
+    }
+}

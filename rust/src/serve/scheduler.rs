@@ -7,8 +7,15 @@
 //! evenly. The coordinator fans a batch's packed activation windows out
 //! to every worker with shards in the current layer (`Arc`-shared, built
 //! once per batch per layer), collects the integer dot maps, applies
-//! scale/bias/ReLU/pool on the host, and replies with per-request logits
+//! scale/bias/ReLU/pool (and, on the PointNet path, the set-abstraction
+//! pool/concat seams) on the host, and replies with per-request logits
 //! and latency.
+//!
+//! Both [`ModelBundle`] paths run through the same fan-out/fan-in
+//! machinery; a job carries either binary u8 planes
+//! ([`vmm::PackedWindows`] → [`vmm::binary_dots_batched`]) or
+//! offset-encoded i8 planes ([`vmm::PackedWindowsI8`] →
+//! [`vmm::int8_dots_batched`]).
 //!
 //! Numeric contract: a request's logits equal
 //! [`ModelBundle::reference_logits`] bit for bit, for any pool size,
@@ -25,12 +32,14 @@ use anyhow::{anyhow, Result};
 
 use crate::chip::Chip;
 use crate::cim::mapping::{segment_widths, RowSpan};
-use crate::cim::vmm::{self, PackedWindows};
+use crate::cim::vmm;
+use crate::nn::pointnet::group_cloud;
 use crate::nn::quant;
 
 use super::batcher::{Batcher, BatcherConfig, Request, Response};
-use super::model::{fc_logits, im2col_u8, maxpool2_flat, scale_mac, ModelBundle};
+use super::model::{fc_logits, im2col_u8, maxpool2_flat, scale_mac, MnistBundle, ModelBundle};
 use super::placement::{self, Placement};
+use super::pointnet_model::PointNetBundle;
 use super::pool::{ChipPool, PoolConfig};
 use super::stats::{ServeReport, ServeStats};
 
@@ -41,11 +50,19 @@ pub struct ServerConfig {
     pub batcher: BatcherConfig,
 }
 
+/// One batch's packed activation windows for one layer — the payload a
+/// job fans out to every chip holding shards of that layer.
+#[derive(Clone)]
+enum LayerWindows {
+    Binary(Arc<vmm::PackedWindows>),
+    Int8(Arc<vmm::PackedWindowsI8>),
+}
+
 /// A layer's worth of work for one chip: compute dots of its shards
 /// against the shared packed windows.
 struct Job {
     layer: usize,
-    windows: Arc<PackedWindows>,
+    windows: LayerWindows,
 }
 
 /// Integer dot maps of one worker for one layer.
@@ -63,7 +80,11 @@ fn worker_loop(
     while let Ok(job) = jobs.recv() {
         let mut dots = Vec::with_capacity(shards_by_layer[job.layer].len());
         for (filter, span) in &shards_by_layer[job.layer] {
-            dots.push((*filter, vmm::binary_dots_batched(&mut chip, span, &job.windows)));
+            let d = match &job.windows {
+                LayerWindows::Binary(pw) => vmm::binary_dots_batched(&mut chip, span, pw),
+                LayerWindows::Int8(pw) => vmm::int8_dots_batched(&mut chip, span, pw),
+            };
+            dots.push((*filter, d));
         }
         if results.send(JobResult { dots }).is_err() {
             break; // coordinator gone: shut down
@@ -72,14 +93,18 @@ fn worker_loop(
     chip
 }
 
-/// A running inference server. Submit images, then [`Server::shutdown`]
+/// A running inference server. Submit inputs, then [`Server::shutdown`]
 /// to drain the queue and collect the [`ServeReport`].
 pub struct Server {
     submit_tx: Option<SyncSender<Request>>,
     next_id: AtomicU64,
-    /// Expected request image length (`input_hw^2`), checked at
-    /// admission so a malformed request cannot kill the pipeline.
-    image_len: usize,
+    /// Expected request input length ([`ModelBundle::input_len`]),
+    /// checked at admission so a malformed request cannot kill the
+    /// pipeline.
+    input_len: usize,
+    /// Requests shed by [`Server::try_submit`] on a full queue, folded
+    /// into [`ServeStats::dropped`] at shutdown.
+    dropped: Arc<AtomicU64>,
     coordinator: Option<JoinHandle<ServeReport>>,
 }
 
@@ -88,6 +113,7 @@ impl Server {
     /// the energy ledgers so serving measurements exclude programming,
     /// and spawn the worker + coordinator threads.
     pub fn start(model: ModelBundle, cfg: &ServerConfig) -> Result<Self> {
+        model.validate()?;
         let mut pool = ChipPool::new(&cfg.pool);
         let placement = placement::place(&model, &mut pool)?;
         pool.reset_energy();
@@ -99,35 +125,39 @@ impl Server {
             .data_cols();
         let (tx, batcher) = Batcher::channel(cfg.batcher.clone());
         let chips = pool.into_chips();
-        let image_len = model.input_hw * model.input_hw;
+        let input_len = model.input_len();
+        let dropped = Arc::new(AtomicU64::new(0));
+        let dropped_in_coord = Arc::clone(&dropped);
         let coordinator = std::thread::spawn(move || {
-            coordinator_loop(model, placement, batcher, chips, data_cols)
+            coordinator_loop(model, placement, batcher, chips, data_cols, dropped_in_coord)
         });
         Ok(Server {
             submit_tx: Some(tx),
             next_id: AtomicU64::new(0),
-            image_len,
+            input_len,
+            dropped,
             coordinator: Some(coordinator),
         })
     }
 
-    /// Submit one image, blocking while the admission queue is full
-    /// (lossless backpressure). The returned receiver yields the
-    /// [`Response`] when the batch containing this request completes.
+    /// Submit one input (image or cloud), blocking while the admission
+    /// queue is full (lossless backpressure). The returned receiver
+    /// yields the [`Response`] when the batch containing this request
+    /// completes.
     ///
-    /// Panics (in the caller, never the pipeline) if `image` is not
-    /// `input_hw^2` floats.
-    pub fn submit(&self, image: Vec<f32>) -> Receiver<Response> {
+    /// Panics (in the caller, never the pipeline) if `input` is not
+    /// [`ModelBundle::input_len`] floats.
+    pub fn submit(&self, input: Vec<f32>) -> Receiver<Response> {
         assert_eq!(
-            image.len(),
-            self.image_len,
-            "request image length vs model input ({} expected)",
-            self.image_len
+            input.len(),
+            self.input_len,
+            "request input length vs model input ({} expected)",
+            self.input_len
         );
         let (reply, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            image,
+            input,
             submitted: Instant::now(),
             reply,
         };
@@ -139,28 +169,34 @@ impl Server {
         rx
     }
 
-    /// Non-blocking submit: on a full queue the image is handed back so
-    /// the caller can shed or retry (explicit backpressure signal).
+    /// Non-blocking submit: on a full queue the input is handed back so
+    /// the caller can shed or retry (explicit backpressure signal), and
+    /// the shed request is counted in [`ServeStats::dropped`]. A dropped
+    /// request is never admitted, so it can never also be answered.
     ///
-    /// Panics (in the caller, never the pipeline) if `image` is not
-    /// `input_hw^2` floats.
-    pub fn try_submit(&self, image: Vec<f32>) -> std::result::Result<Receiver<Response>, Vec<f32>> {
+    /// Panics (in the caller, never the pipeline) if `input` is not
+    /// [`ModelBundle::input_len`] floats.
+    pub fn try_submit(&self, input: Vec<f32>) -> std::result::Result<Receiver<Response>, Vec<f32>> {
         assert_eq!(
-            image.len(),
-            self.image_len,
-            "request image length vs model input ({} expected)",
-            self.image_len
+            input.len(),
+            self.input_len,
+            "request input length vs model input ({} expected)",
+            self.input_len
         );
         let (reply, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            image,
+            input,
             submitted: Instant::now(),
             reply,
         };
         match self.submit_tx.as_ref().expect("server already shut down").try_send(req) {
             Ok(()) => Ok(rx),
-            Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => Err(r.image),
+            Err(TrySendError::Full(r)) => {
+                self.dropped.fetch_add(1, Ordering::SeqCst);
+                Err(r.input)
+            }
+            Err(TrySendError::Disconnected(r)) => Err(r.input),
         }
     }
 
@@ -185,15 +221,171 @@ impl Drop for Server {
     }
 }
 
+/// Fan a layer's packed windows out to every chip holding shards of it
+/// and fold each (filter, dots) pair into the caller's output buffer as
+/// it arrives — no worker's result is buffered beyond its own
+/// [`JobResult`], so peak transient memory stays independent of pool
+/// size.
+fn dispatch(
+    job_txs: &[Sender<Job>],
+    shard_counts: &[Vec<usize>],
+    res_rx: &Receiver<JobResult>,
+    layer: usize,
+    windows: LayerWindows,
+    mut on_dots: impl FnMut(usize, Vec<i64>),
+) {
+    let mut expected = 0usize;
+    for (ci, jtx) in job_txs.iter().enumerate() {
+        if shard_counts[ci][layer] == 0 {
+            continue;
+        }
+        jtx.send(Job { layer, windows: windows.clone() }).expect("worker hung up");
+        expected += 1;
+    }
+    for _ in 0..expected {
+        for (f, dots) in res_rx.recv().expect("worker died mid-batch").dots {
+            on_dots(f, dots);
+        }
+    }
+}
+
+/// One batch through the binary MNIST path: per-layer u8 quantization,
+/// shared im2col packing, chip dots, host scale/bias/ReLU/pool, FC head.
+/// Returns per-request logits.
+fn serve_mnist_batch(
+    m: &MnistBundle,
+    batch: &[Request],
+    data_cols: usize,
+    job_txs: &[Sender<Job>],
+    shard_counts: &[Vec<usize>],
+    res_rx: &Receiver<JobResult>,
+) -> Vec<Vec<f32>> {
+    let b = batch.len();
+    // per-image activation maps, channel-major; layer 0 input = image
+    let mut maps: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
+    let mut c = 1usize;
+    let mut hw = m.input_hw;
+    for (l, layer) in m.conv.iter().enumerate() {
+        debug_assert_eq!(layer.in_c, c);
+        let cells = layer.kernel_cells();
+        // quantize each image, im2col, and pack all windows together
+        // (one shared packing serves every filter of the layer; the
+        // im2col buffers concatenate directly into window-major order)
+        let mut scales = Vec::with_capacity(b);
+        let mut flat_windows: Vec<u8> = Vec::with_capacity(b * hw * hw * cells);
+        let (mut oh, mut ow) = (hw, hw);
+        for map in &maps {
+            let (q, s) = quant::quantize_activations_u8(map);
+            scales.push(s);
+            let (flat, oh2, ow2) = im2col_u8(&q, c, hw, hw, layer.ksize, 1);
+            oh = oh2;
+            ow = ow2;
+            flat_windows.extend_from_slice(&flat);
+        }
+        let n_pos = oh * ow;
+        let widths = segment_widths(cells, data_cols);
+        let pw = Arc::new(vmm::pack_windows(&flat_windows, &widths));
+        // fan in: integer dots -> scaled activations, folded as they land
+        let mut y = vec![0.0f32; b * layer.out_c * n_pos];
+        dispatch(job_txs, shard_counts, res_rx, l, LayerWindows::Binary(pw), |f, dvec| {
+            debug_assert_eq!(dvec.len(), b * n_pos);
+            for (bi, &scale) in scales.iter().enumerate() {
+                let src = &dvec[bi * n_pos..(bi + 1) * n_pos];
+                let dst_base = bi * layer.out_c * n_pos + f * n_pos;
+                for (p, &dot) in src.iter().enumerate() {
+                    y[dst_base + p] =
+                        scale_mac(layer.alpha[f], scale, dot, layer.bias[f]).max(0.0);
+                }
+            }
+        });
+        // pool + advance to the next layer's input maps
+        maps = (0..b)
+            .map(|bi| {
+                let map = &y[bi * layer.out_c * n_pos..(bi + 1) * layer.out_c * n_pos];
+                if layer.pool {
+                    maxpool2_flat(map, layer.out_c, oh, ow)
+                } else {
+                    map.to_vec()
+                }
+            })
+            .collect();
+        hw = if layer.pool { oh / 2 } else { oh };
+        c = layer.out_c;
+    }
+    maps.iter()
+        .map(|map| {
+            debug_assert_eq!(map.len(), m.fc_in);
+            fc_logits(map, &m.fc_w, &m.fc_b, m.fc_in, m.n_classes)
+        })
+        .collect()
+}
+
+/// One batch through the INT8 PointNet path: host grouping, per-layer i8
+/// quantization, offset-encoded packing, chip dots, host
+/// scale/bias/ReLU + set-abstraction pool/concat seams, dense head.
+/// Returns per-request logits.
+fn serve_pointnet_batch(
+    p: &PointNetBundle,
+    batch: &[Request],
+    data_cols: usize,
+    job_txs: &[Sender<Job>],
+    shard_counts: &[Vec<usize>],
+    res_rx: &Receiver<JobResult>,
+) -> Vec<Vec<f32>> {
+    let b = batch.len();
+    // grouping geometry is parameter-free: computed once per request on
+    // the host, identically to the software reference
+    let groups: Vec<_> = batch.iter().map(|r| group_cloud(&r.input, &p.grouping)).collect();
+    let mut xs: Vec<Vec<f32>> = groups.iter().map(|g| p.sa1_input(g)).collect();
+    for (l, layer) in p.layers.iter().enumerate() {
+        let n_points = p.points_in_stage(PointNetBundle::stage_of(l));
+        // quantize each cloud's map and pack all windows together (a
+        // point's feature row is one window; one shared packing serves
+        // every channel of the layer)
+        let mut scales = Vec::with_capacity(b);
+        let mut flat: Vec<i8> = Vec::with_capacity(b * n_points * layer.in_c);
+        for x in &xs {
+            debug_assert_eq!(x.len(), n_points * layer.in_c);
+            let (q, s) = quant::quantize_activations_i8(x);
+            scales.push(s);
+            flat.extend_from_slice(&q);
+        }
+        let widths = segment_widths(4 * layer.in_c, data_cols);
+        let pw = Arc::new(vmm::pack_windows_i8(&flat, &widths));
+        // fan in: integer dots -> scaled activations, point-major,
+        // folded as they land
+        let mut ys: Vec<Vec<f32>> = (0..b).map(|_| vec![0.0f32; n_points * layer.out_c]).collect();
+        dispatch(job_txs, shard_counts, res_rx, l, LayerWindows::Int8(pw), |f, dvec| {
+            debug_assert_eq!(dvec.len(), b * n_points);
+            for (bi, &scale) in scales.iter().enumerate() {
+                let y = &mut ys[bi];
+                for pnt in 0..n_points {
+                    y[pnt * layer.out_c + f] =
+                        scale_mac(layer.w_scale[f], scale, dvec[bi * n_points + pnt], layer.bias[f])
+                            .max(0.0);
+                }
+            }
+        });
+        // pool/concat seams, shared with the reference implementation
+        xs = ys
+            .into_iter()
+            .zip(&groups)
+            .map(|(y, g)| p.advance(l, g, y))
+            .collect();
+    }
+    xs.iter().map(|x| p.head_logits(x)).collect()
+}
+
 fn coordinator_loop(
     model: ModelBundle,
     placement: Placement,
     batcher: Batcher,
     chips: Vec<Chip>,
     data_cols: usize,
+    dropped: Arc<AtomicU64>,
 ) -> ServeReport {
     let n_chips = chips.len();
-    let n_layers = model.conv.len();
+    let n_layers = model.n_layers();
     // group shards per chip per layer
     let mut per_chip: Vec<Vec<Vec<(usize, RowSpan)>>> =
         vec![vec![Vec::new(); n_layers]; n_chips];
@@ -227,78 +419,20 @@ fn coordinator_loop(
 
     while let Some(batch) = batcher.next_batch() {
         let b = batch.len();
-        // per-image activation maps, channel-major; layer 0 input = image
-        let mut maps: Vec<Vec<f32>> = batch.iter().map(|r| r.image.clone()).collect();
-        let mut c = 1usize;
-        let mut hw = model.input_hw;
-        for (l, layer) in model.conv.iter().enumerate() {
-            debug_assert_eq!(layer.in_c, c);
-            let cells = layer.kernel_cells();
-            // quantize each image, im2col, and pack all windows together
-            // (one shared packing serves every filter of the layer; the
-            // im2col buffers concatenate directly into window-major order)
-            let mut scales = Vec::with_capacity(b);
-            let mut flat_windows: Vec<u8> = Vec::with_capacity(b * hw * hw * cells);
-            let (mut oh, mut ow) = (hw, hw);
-            for m in &maps {
-                let (q, s) = quant::quantize_activations_u8(m);
-                scales.push(s);
-                let (flat, oh2, ow2) = im2col_u8(&q, c, hw, hw, layer.ksize, 1);
-                oh = oh2;
-                ow = ow2;
-                flat_windows.extend_from_slice(&flat);
+        let logits = match &model {
+            ModelBundle::Mnist(m) => {
+                serve_mnist_batch(m, &batch, data_cols, &job_txs, &shard_counts, &res_rx)
             }
-            let n_pos = oh * ow;
-            let widths = segment_widths(cells, data_cols);
-            let pw = Arc::new(vmm::pack_windows(&flat_windows, &widths));
-            // fan out to every chip holding shards of this layer
-            let mut expected = 0usize;
-            for (ci, jtx) in job_txs.iter().enumerate() {
-                if shard_counts[ci][l] == 0 {
-                    continue;
-                }
-                jtx.send(Job { layer: l, windows: Arc::clone(&pw) })
-                    .expect("worker hung up");
-                expected += 1;
+            ModelBundle::PointNet(p) => {
+                serve_pointnet_batch(p, &batch, data_cols, &job_txs, &shard_counts, &res_rx)
             }
-            // fan in: integer dots -> scaled activations
-            let mut y = vec![0.0f32; b * layer.out_c * n_pos];
-            for _ in 0..expected {
-                let r = res_rx.recv().expect("worker died mid-batch");
-                for (f, dvec) in r.dots {
-                    debug_assert_eq!(dvec.len(), b * n_pos);
-                    for (bi, &scale) in scales.iter().enumerate() {
-                        let src = &dvec[bi * n_pos..(bi + 1) * n_pos];
-                        let dst_base = bi * layer.out_c * n_pos + f * n_pos;
-                        for (p, &dot) in src.iter().enumerate() {
-                            y[dst_base + p] =
-                                scale_mac(layer.alpha[f], scale, dot, layer.bias[f]).max(0.0);
-                        }
-                    }
-                }
-            }
-            // pool + advance to the next layer's input maps
-            maps = (0..b)
-                .map(|bi| {
-                    let m = &y[bi * layer.out_c * n_pos..(bi + 1) * layer.out_c * n_pos];
-                    if layer.pool {
-                        maxpool2_flat(m, layer.out_c, oh, ow)
-                    } else {
-                        m.to_vec()
-                    }
-                })
-                .collect();
-            hw = if layer.pool { oh / 2 } else { oh };
-            c = layer.out_c;
-        }
-        // FC head + replies
-        for (req, m) in batch.iter().zip(&maps) {
-            debug_assert_eq!(m.len(), model.fc_in);
-            let logits = fc_logits(m, &model.fc_w, &model.fc_b, model.fc_in, model.n_classes);
+        };
+        // replies, in admission order (per-client FIFO)
+        for (req, lg) in batch.iter().zip(logits) {
             let latency = req.submitted.elapsed();
             stats.record_latency(latency);
             // a dropped reply receiver is the client's choice, not an error
-            let _ = req.reply.send(Response { id: req.id, logits, latency });
+            let _ = req.reply.send(Response { id: req.id, logits: lg, latency });
         }
         stats.n_requests += b as u64;
         stats.n_batches += 1;
@@ -312,12 +446,12 @@ fn coordinator_loop(
         .collect();
     stats.wall_s = t_start.elapsed().as_secs_f64();
     stats.energy_pj = chips.iter().map(|c| c.energy_breakdown().total_pj()).sum();
+    stats.dropped = dropped.load(Ordering::SeqCst);
     ServeReport {
         stats,
         wear: chips.iter().map(|c| c.wear.clone()).collect(),
         rows_used: placement.rows_used.clone(),
         stuck_retries: placement.stuck_retries,
-        dropped: 0,
     }
 }
 
@@ -325,7 +459,8 @@ fn coordinator_loop(
 mod tests {
     use super::*;
     use crate::chip::ChipConfig;
-    use crate::nn::data::mnist;
+    use crate::nn::data::{mnist, modelnet};
+    use crate::nn::pointnet::GroupingConfig;
     use std::time::Duration;
 
     fn small_server(model: ModelBundle, chips: usize, seed: u64) -> Server {
@@ -340,13 +475,23 @@ mod tests {
         Server::start(model, &cfg).unwrap()
     }
 
+    fn tiny_pointnet(prune: f64, seed: u64) -> PointNetBundle {
+        PointNetBundle::synthetic(
+            [2, 2, 3, 2, 2, 3, 2, 4],
+            3,
+            prune,
+            GroupingConfig { s1: 8, k1: 4, r1: 0.3, s2: 4, k2: 2, r2: 0.6 },
+            seed,
+        )
+    }
+
     #[test]
     fn zero_request_lifecycle() {
         let model = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 31);
         let server = small_server(model, 2, 32);
         let report = server.shutdown();
         assert_eq!(report.stats.n_requests, 0);
-        assert_eq!(report.dropped, 0);
+        assert_eq!(report.stats.dropped, 0);
         assert_eq!(report.wear.len(), 2);
     }
 
@@ -372,12 +517,42 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "request image length")]
+    fn pointnet_serving_matches_reference_logits_exactly() {
+        let model: ModelBundle = tiny_pointnet(0.3, 41).into();
+        let ds = modelnet::generate(4, 42);
+        let server = small_server(model.clone(), 2, 43);
+        let pending: Vec<_> = (0..4).map(|i| server.submit(ds.sample(i).to_vec())).collect();
+        for (i, rx) in pending.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(
+                resp.logits,
+                model.reference_logits(ds.sample(i)),
+                "cloud {i} diverged from the software reference"
+            );
+        }
+        let report = server.shutdown();
+        assert_eq!(report.stats.n_requests, 4);
+        assert!(report.stats.energy_pj > 0.0, "serving must spend chip energy");
+    }
+
+    #[test]
+    #[should_panic(expected = "request input length")]
     fn malformed_request_is_rejected_at_admission() {
         let model = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 39);
         let server = small_server(model, 1, 40);
-        // wrong-sized image must fail in the caller, not kill the pipeline
+        // wrong-sized input must fail in the caller, not kill the pipeline
         let _ = server.submit(vec![0.0; 10]);
+    }
+
+    #[test]
+    fn invalid_bundle_fails_at_start_not_in_a_worker() {
+        let mut pn = tiny_pointnet(0.0, 44);
+        pn.grouping.s1 = pn.cloud_points + 1; // infeasible grouping
+        let cfg = ServerConfig {
+            pool: PoolConfig { chips: 1, chip: ChipConfig::small_test(), seed: 45 },
+            batcher: BatcherConfig::default(),
+        };
+        assert!(Server::start(pn.into(), &cfg).is_err());
     }
 
     #[test]
@@ -391,5 +566,54 @@ mod tests {
         // serving reads rows (WL activations) but never programs cells
         assert!(report.wear[0].wl_activations > 0);
         assert!(report.wear[0].programmed_cells > 0, "placement programmed the shards");
+    }
+
+    #[test]
+    fn try_submit_drops_are_counted_and_never_answered() {
+        let model = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 51);
+        let cfg = ServerConfig {
+            pool: PoolConfig { chips: 1, chip: ChipConfig::small_test(), seed: 52 },
+            batcher: BatcherConfig {
+                // serve one request at a time behind a depth-1 queue: a
+                // tight submit loop outpaces inference and must shed
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 1,
+            },
+        };
+        let server = Server::start(model, &cfg).unwrap();
+        let ds = mnist::generate(1, 53);
+        let mut attempts = 0u64;
+        let mut receivers = Vec::new();
+        let mut shed = 0u64;
+        while attempts < 10_000 && (shed < 3 || attempts < 8) {
+            attempts += 1;
+            match server.try_submit(ds.sample(0).to_vec()) {
+                Ok(rx) => receivers.push(rx),
+                Err(input) => {
+                    assert_eq!(input.len(), 28 * 28, "shed input returned intact");
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed > 0, "depth-1 queue under a tight burst must shed");
+        // every admitted request is answered exactly once, in id order
+        let mut ids = Vec::new();
+        for rx in receivers {
+            let resp = rx.recv().expect("admitted request must be answered");
+            ids.push(resp.id);
+        }
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len(), "duplicate replies");
+        assert_eq!(ids, sorted, "single-client replies arrive in FIFO order");
+        let report = server.shutdown();
+        assert_eq!(report.stats.dropped, shed, "stats vs observed sheds");
+        assert_eq!(
+            report.stats.n_requests + shed,
+            attempts,
+            "dropped + answered must partition the attempts"
+        );
     }
 }

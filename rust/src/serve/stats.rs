@@ -12,6 +12,10 @@ use crate::util::stats::percentile;
 pub struct ServeStats {
     pub n_requests: u64,
     pub n_batches: u64,
+    /// Requests shed at the bounded admission queue (`try_submit` on a
+    /// full queue). A dropped request was never admitted, so it is never
+    /// also answered: `n_requests + dropped` partitions the attempts.
+    pub dropped: u64,
     /// Wall-clock of the serving loop (first batch to shutdown), seconds.
     pub wall_s: f64,
     /// Chip energy spent while serving (pJ, programming excluded).
@@ -86,8 +90,6 @@ pub struct ServeReport {
     pub rows_used: Vec<usize>,
     /// Stuck-tile retries during placement.
     pub stuck_retries: usize,
-    /// Requests dropped (always 0 under blocking backpressure).
-    pub dropped: u64,
 }
 
 #[cfg(test)]
@@ -119,5 +121,6 @@ mod tests {
         assert_eq!(s.inferences_per_sec(), 0.0);
         assert_eq!(s.nj_per_inference(), 0.0);
         assert_eq!(s.mean_batch(), 0.0);
+        assert_eq!(s.dropped, 0);
     }
 }

@@ -12,12 +12,15 @@ use rram_cim::cim::{similarity as chip_sim, vmm};
 use rram_cim::coordinator::mnist::{MnistConfig, MnistTrainer};
 use rram_cim::coordinator::pointnet::{PointNetConfig, PointNetTrainer};
 use rram_cim::coordinator::TrainMode;
-use rram_cim::nn::data::mnist;
+use rram_cim::nn::data::{mnist, modelnet};
+use rram_cim::nn::pointnet::GroupingConfig;
 use rram_cim::pruning::similarity::PackedKernels;
 use rram_cim::pruning::PruneConfig;
 use rram_cim::runtime::{Engine, HostTensor};
-use rram_cim::serve::{BatcherConfig, ModelBundle, PoolConfig, Server, ServerConfig};
-use rram_cim::testing::forall;
+use rram_cim::serve::{
+    BatcherConfig, ModelBundle, PointNetBundle, PoolConfig, Server, ServerConfig,
+};
+use rram_cim::testing::{forall, shrink_vec};
 use rram_cim::util::rng::Rng;
 
 fn artifacts_ready() -> bool {
@@ -109,6 +112,84 @@ fn prop_chip_dots_are_exact() {
     );
 }
 
+/// Property: the batched INT8 VMM (the PointNet serve hot path) is
+/// integer-exact vs `int8_dot_ref` and vs the unbatched `int8_dot` for
+/// random kernel sizes (including single-element), batch shapes
+/// (including zero windows), and ±127 extremes. A failing activation
+/// vector is shrunk to a minimal counterexample before reporting.
+#[test]
+fn prop_int8_batched_dots_are_exact() {
+    forall(
+        "int8_dots_batched == int8_dot == int8_dot_ref",
+        0x1278,
+        10,
+        |rng| {
+            let n = 1 + rng.below(24);
+            let extreme = rng.chance(0.25);
+            let val = |rng: &mut Rng| -> i8 {
+                if extreme {
+                    if rng.chance(0.5) { 127 } else { -127 }
+                } else {
+                    (rng.below(255) as i16 - 127) as i8
+                }
+            };
+            let w: Vec<i8> = (0..n).map(|_| val(rng)).collect();
+            let n_win = rng.below(4);
+            let xs: Vec<Vec<i8>> = (0..n_win).map(|_| (0..n).map(|_| val(rng)).collect()).collect();
+            (w, xs, rng.next_u64())
+        },
+        |(w, xs, seed)| {
+            // one chip runs the whole case; a fresh chip replays shrunken
+            // candidates so the counterexample is self-contained
+            let run = |w: &[i8], x: &[i8], seed: u64| -> Option<i64> {
+                let mut rng = Rng::new(seed);
+                let mut chip = Chip::new(ChipConfig::small_test(), &mut rng);
+                chip.form();
+                let mut alloc = RowAllocator::for_chip(&chip);
+                let span = alloc.alloc(4 * w.len())?;
+                if store_int8(&mut chip, &span, w) != 0 {
+                    return None;
+                }
+                vmm::int8_dot_batch(&mut chip, &span, &[x.to_vec()]).pop()
+            };
+            for x in xs {
+                let got = run(w, x, *seed).ok_or("store/alloc failed on ideal devices")?;
+                let want = vmm::int8_dot_ref(w, x);
+                if got != want {
+                    // pair (w, x) elementwise so shrinking keeps them aligned
+                    let pairs: Vec<(i8, i8)> = w.iter().copied().zip(x.iter().copied()).collect();
+                    let minimal = shrink_vec(pairs, |cand| {
+                        if cand.is_empty() {
+                            return false;
+                        }
+                        let (cw, cx): (Vec<i8>, Vec<i8>) = cand.iter().copied().unzip();
+                        run(&cw, &cx, *seed)
+                            .map(|g| g != vmm::int8_dot_ref(&cw, &cx))
+                            .unwrap_or(false)
+                    });
+                    return Err(format!(
+                        "batched {got} != ref {want}; minimal failing (w,x) pairs: {minimal:?}"
+                    ));
+                }
+                // unbatched agreement on the same stored span
+                let mut rng = Rng::new(*seed);
+                let mut chip = Chip::new(ChipConfig::small_test(), &mut rng);
+                chip.form();
+                let mut alloc = RowAllocator::for_chip(&chip);
+                let span = alloc.alloc(4 * w.len()).unwrap();
+                if store_int8(&mut chip, &span, w) != 0 {
+                    return Err("unrecoverable store on ideal devices".into());
+                }
+                let unbatched = vmm::int8_dot(&mut chip, &span, x);
+                if unbatched != want {
+                    return Err(format!("unbatched {unbatched} != ref {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// The Pallas `similarity` artifact agrees with the chip on real kernels.
 #[test]
 fn artifact_similarity_agrees_with_chip() {
@@ -194,9 +275,145 @@ fn prop_pool_serving_equals_reference_logits() {
             if report.stats.n_requests != n_img as u64 {
                 return Err(format!("served {} of {n_img}", report.stats.n_requests));
             }
-            if report.dropped != 0 {
+            if report.stats.dropped != 0 {
                 return Err("dropped requests under blocking backpressure".into());
             }
+            Ok(())
+        },
+    );
+}
+
+fn tiny_pointnet(widths: [usize; 8], prune: f64, seed: u64) -> PointNetBundle {
+    PointNetBundle::synthetic(
+        widths,
+        3,
+        prune,
+        GroupingConfig { s1: 8, k1: 4, r1: 0.3, s2: 4, k2: 2, r2: 0.6 },
+        seed,
+    )
+}
+
+/// Property: serving a PointNet INT8 bundle through a chip pool of any
+/// size reproduces the software quantized reference bit for bit, for
+/// random widths, prune rates, pool sizes, batch shapes, and clouds —
+/// the INT8 twin of `prop_pool_serving_equals_reference_logits`.
+#[test]
+fn prop_pointnet_pool_serving_equals_reference_logits() {
+    forall(
+        "PointNet pool serving == quantized software reference",
+        0x907e7,
+        5,
+        |rng| {
+            let w = 2 + rng.below(2);
+            let widths = [w, w, w + 1, w, w, w + 1, w, w + 2];
+            let prune = if rng.chance(0.5) { 0.3 } else { 0.0 };
+            let pool = 1 + rng.below(3);
+            let n_clouds = 1 + rng.below(3);
+            let max_batch = 1 + rng.below(4);
+            (widths, prune, pool, n_clouds, max_batch, rng.next_u64())
+        },
+        |&(widths, prune, pool, n_clouds, max_batch, seed)| {
+            let model: ModelBundle = tiny_pointnet(widths, prune, seed).into();
+            let clouds = modelnet::generate(n_clouds, seed ^ 0x2222);
+            let cfg = ServerConfig {
+                pool: PoolConfig { chips: pool, chip: ChipConfig::small_test(), seed },
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_wait: Duration::from_millis(1),
+                    queue_depth: 16,
+                },
+            };
+            let server = Server::start(model.clone(), &cfg).map_err(|e| e.to_string())?;
+            let pending: Vec<_> = (0..n_clouds)
+                .map(|i| server.submit(clouds.sample(i).to_vec()))
+                .collect();
+            for (i, rx) in pending.into_iter().enumerate() {
+                let resp = rx.recv().map_err(|e| e.to_string())?;
+                let want = model.reference_logits(clouds.sample(i));
+                if resp.logits != want {
+                    return Err(format!(
+                        "cloud {i}: served {:?} != reference {:?}",
+                        resp.logits, want
+                    ));
+                }
+            }
+            let report = server.shutdown();
+            if report.stats.n_requests != n_clouds as u64 {
+                return Err(format!("served {} of {n_clouds}", report.stats.n_requests));
+            }
+            if report.stats.dropped != 0 {
+                return Err("dropped requests under blocking backpressure".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: placement onto pools with randomly stuck tiles either
+/// routes around the faults and serves bit-exact logits (both bundle
+/// kinds), or fails with a clean placement error when the usable
+/// capacity is exhausted — never silent corruption.
+#[test]
+fn prop_stuck_tile_placement_is_exact_or_cleanly_rejected() {
+    forall(
+        "stuck tiles: bit-exact serving or clean placement error",
+        0xfa017,
+        6,
+        |rng| {
+            // fault pressure up to the point where capacity loss is real;
+            // spares stay at the small_test default so ECC absorbs some
+            let fault = [0.0, 0.01, 0.05][rng.below(3)];
+            let spares = rng.below(3);
+            let pool = 1 + rng.below(2);
+            let use_mnist = rng.chance(0.5);
+            (fault, spares, pool, use_mnist, rng.next_u64())
+        },
+        |&(fault, spares, pool, use_mnist, seed)| {
+            let mut chip_cfg = ChipConfig::small_test();
+            chip_cfg.device.stuck_fault_prob = fault;
+            chip_cfg.spares_per_row = spares;
+            let model: ModelBundle = if use_mnist {
+                ModelBundle::synthetic_mnist([3, 3, 3], 0.2, seed)
+            } else {
+                tiny_pointnet([2, 2, 3, 2, 2, 3, 2, 4], 0.2, seed).into()
+            };
+            let cfg = ServerConfig {
+                pool: PoolConfig { chips: pool, chip: chip_cfg, seed },
+                batcher: BatcherConfig {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(1),
+                    queue_depth: 8,
+                },
+            };
+            let server = match Server::start(model.clone(), &cfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    // capacity exhausted by faults: must be the placer's
+                    // explicit verdict, not a panic or a corrupted serve
+                    let msg = e.to_string();
+                    return if msg.contains("placement") || msg.contains("rows") {
+                        Ok(())
+                    } else {
+                        Err(format!("unexpected start error: {msg}"))
+                    };
+                }
+            };
+            let n = 2usize;
+            let inputs: Vec<Vec<f32>> = if use_mnist {
+                let ds = mnist::generate(n, seed ^ 0x3333);
+                (0..n).map(|i| ds.sample(i).to_vec()).collect()
+            } else {
+                let ds = modelnet::generate(n, seed ^ 0x4444);
+                (0..n).map(|i| ds.sample(i).to_vec()).collect()
+            };
+            let pending: Vec<_> = inputs.iter().map(|x| server.submit(x.clone())).collect();
+            for (x, rx) in inputs.iter().zip(pending) {
+                let resp = rx.recv().map_err(|e| e.to_string())?;
+                if resp.logits != model.reference_logits(x) {
+                    return Err("stuck tiles silently corrupted the logits".into());
+                }
+            }
+            server.shutdown();
             Ok(())
         },
     );
