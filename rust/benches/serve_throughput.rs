@@ -3,6 +3,9 @@
 //! model — inferences/sec, latency percentiles, nJ/inference. The pruned
 //! models' higher inferences/sec (and the PointNet op-count drop) on the
 //! same pool is the serving-side payoff of the paper's in-situ pruning.
+//! A final mixed-tenancy table serves BOTH pruned models from ONE pool
+//! through the multi-tenant engine (DRR admission, result cache, wear
+//! rebalancing) next to their single-tenant baselines.
 //! Run: cargo bench --bench serve_throughput
 
 use std::time::Duration;
@@ -11,7 +14,8 @@ use rram_cim::bench::print_table;
 use rram_cim::nn::data::{mnist, modelnet, Dataset};
 use rram_cim::nn::pointnet::GroupingConfig;
 use rram_cim::serve::{
-    BatcherConfig, ModelBundle, PointNetBundle, PoolConfig, Server, ServerConfig,
+    AdmissionConfig, BatcherConfig, CacheConfig, Engine, EngineConfig, ModelBundle,
+    PointNetBundle, PoolConfig, RebalanceConfig, Server, ServerConfig, TenantConfig,
 };
 
 const MNIST_REQUESTS: usize = 96;
@@ -188,4 +192,75 @@ fn main() {
         &[1, 8],
     );
     report_speedups("pointnet", &pn_speedups);
+
+    // --- mixed tenancy: both pruned models on ONE 4-chip pool ---
+    mixed_tenancy_table(&pruned, &pn_pruned, &images, &clouds);
+}
+
+/// One 4-chip pool serving the pruned MNIST and PointNet models
+/// concurrently through the multi-tenant engine, with 2x request reuse
+/// so the result cache participates. Prints per-tenant rows next to the
+/// single-model tables above (same request counts, same pool size).
+fn mixed_tenancy_table(
+    mnist_model: &ModelBundle,
+    pn_model: &ModelBundle,
+    images: &Dataset,
+    clouds: &Dataset,
+) {
+    let cfg = EngineConfig {
+        pool: PoolConfig { chips: 4, seed: 0x71ed, ..PoolConfig::default() },
+        admission: AdmissionConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+            quantum: 32,
+        },
+        cache: CacheConfig { capacity: 512 },
+        rebalance: RebalanceConfig { every_batches: 8, max_moves: 2 },
+    };
+    let tenants = vec![
+        TenantConfig::new("mnist", mnist_model.clone()),
+        TenantConfig::new("pointnet", pn_model.clone()),
+    ];
+    let engine = Engine::start(tenants, &cfg).expect("both pruned tenants fit a 4-chip pool");
+    let mut pending = Vec::new();
+    // interleaved traffic, each input served twice (cache fodder)
+    for i in 0..MNIST_REQUESTS {
+        pending.push(engine.submit(0, images.sample(i % (MNIST_REQUESTS / 2)).to_vec()));
+        if i < POINTNET_REQUESTS {
+            pending.push(engine.submit(1, clouds.sample(i % (POINTNET_REQUESTS / 2)).to_vec()));
+        }
+    }
+    for rx in pending {
+        rx.recv().expect("mixed engine answered every request");
+    }
+    let report = engine.shutdown();
+    assert_eq!(report.answered() as usize, MNIST_REQUESTS + POINTNET_REQUESTS, "lost requests");
+    assert_eq!(report.dropped(), 0, "blocking submits never drop");
+    let rows: Vec<Vec<String>> = report
+        .tenants
+        .iter()
+        .map(|t| {
+            vec![
+                t.name.clone(),
+                t.answered.to_string(),
+                t.cache_hits.to_string(),
+                t.chip_batches.to_string(),
+                format!("{:.2}", t.latency.p50_ms()),
+                format!("{:.2}", t.latency.p99_ms()),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!(
+            "serve: mixed tenancy, one 4-chip pool, both pruned models \
+             ({} + {} requests, {} rebalances / {} shards moved, {:.1} inf/s aggregate)",
+            MNIST_REQUESTS,
+            POINTNET_REQUESTS,
+            report.rebalances,
+            report.shards_moved,
+            report.inferences_per_sec()
+        ),
+        &["tenant", "answered", "cache hits", "chip batches", "p50 ms", "p99 ms"],
+        &rows,
+    );
 }

@@ -116,6 +116,29 @@ pub struct WearLedger {
     pub wl_activations: u64,
 }
 
+impl WearLedger {
+    /// Per-counter wear accrued since an `earlier` snapshot of the same
+    /// chip — the rebalancer's hotness signal
+    /// ([`crate::serve::engine::rebalance`]). Saturating, so comparing
+    /// snapshots from unrelated chips cannot underflow.
+    pub fn delta(&self, earlier: &WearLedger) -> WearLedger {
+        WearLedger {
+            write_pulses: self.write_pulses.saturating_sub(earlier.write_pulses),
+            programmed_cells: self.programmed_cells.saturating_sub(earlier.programmed_cells),
+            wl_activations: self.wl_activations.saturating_sub(earlier.wl_activations),
+        }
+    }
+
+    /// True when no counter has gone backwards since `earlier` — the
+    /// invariant every pair of same-chip snapshots must satisfy (wear is
+    /// lifetime state, never reset).
+    pub fn is_monotone_since(&self, earlier: &WearLedger) -> bool {
+        self.write_pulses >= earlier.write_pulses
+            && self.programmed_cells >= earlier.programmed_cells
+            && self.wl_activations >= earlier.wl_activations
+    }
+}
+
 /// One RRAM block with its periphery state.
 struct Block {
     array: Array1T1R,
@@ -591,6 +614,21 @@ mod tests {
         let mut chip = Chip::new(ChipConfig::small_test(), &mut rng);
         chip.form();
         chip
+    }
+
+    #[test]
+    fn wear_delta_and_monotonicity() {
+        let mut chip = test_chip(77);
+        let before = chip.wear.clone();
+        assert!(chip.program_2bit(0, 0, 0, 3));
+        let after = chip.wear.clone();
+        assert!(after.is_monotone_since(&before), "programming only adds wear");
+        let d = after.delta(&before);
+        assert!(d.write_pulses > 0 && d.programmed_cells > 0);
+        // deltas never underflow, even against a later snapshot
+        let rev = before.delta(&after);
+        assert_eq!(rev.write_pulses, 0);
+        assert!(!before.is_monotone_since(&after));
     }
 
     #[test]

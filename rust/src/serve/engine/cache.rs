@@ -1,0 +1,242 @@
+//! Bit-exact result cache: repeated inputs skip the chip pipeline
+//! entirely and replay the logits computed the first time.
+//!
+//! # Keying — why it is collision-proof
+//!
+//! The cache key is the **exact numeric content the pipeline consumes**,
+//! not a lossy digest of it:
+//!
+//! * **MNIST path** — the serve pipeline's first act is per-image u8
+//!   activation quantization; every downstream value is a function of
+//!   the quantized pixels plus their scale *only*. The key is therefore
+//!   `(quantized pixels, scale bits)` — two float images that quantize
+//!   identically share one entry, and the replayed logits are still bit
+//!   for bit what the pipeline would compute.
+//! * **PointNet path** — set-abstraction grouping runs on the *raw*
+//!   float cloud before any quantization, so the key is the raw f32 bit
+//!   pattern of the cloud. Only bit-identical clouds share an entry.
+//!
+//! Lookups compare the full key content (the map hashes it internally),
+//! so a hash collision can never replay the wrong logits — a cache hit
+//! is bit-exact by construction, which the property harness verifies
+//! against fresh [`ModelBundle::reference_logits`] recomputes.
+//!
+//! # Invalidation
+//!
+//! Entries outlive batches but not placements: any re-shard (a wear
+//! rebalance that moved at least one shard) calls
+//! [`ResultCache::invalidate_all`]. Strictly, a migrated shard stores a
+//! byte-identical payload so cached logits would still be correct — but
+//! correctness of the *cache* should not depend on correctness of the
+//! *migration*, so the engine drops every entry and lets the next
+//! requests re-validate the new placement against silicon.
+
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
+
+use crate::nn::quant;
+use crate::serve::model::ModelBundle;
+
+/// Result-cache knobs.
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    /// Maximum cached entries per tenant; 0 disables the cache.
+    pub capacity: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { capacity: 1024 }
+    }
+}
+
+/// One tenant's result cache (tenants never share entries — their
+/// models differ, so their logits do too).
+#[derive(Debug)]
+pub struct ResultCache {
+    capacity: usize,
+    map: HashMap<Vec<u8>, Vec<f32>>,
+    /// Insertion order for FIFO eviction (oldest entry leaves first;
+    /// plain FIFO keeps eviction O(1) without per-hit bookkeeping).
+    order: VecDeque<Vec<u8>>,
+    pub hits: u64,
+    pub misses: u64,
+    pub invalidations: u64,
+}
+
+impl ResultCache {
+    pub fn new(capacity: usize) -> Self {
+        ResultCache {
+            capacity,
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+            invalidations: 0,
+        }
+    }
+
+    /// Is caching on at all? (capacity 0 = every lookup misses and
+    /// nothing is stored — the legacy `Server` parity mode)
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// The content key of one request input under `model`'s path (see
+    /// the module docs for why each path keys differently).
+    pub fn key_for(model: &ModelBundle, input: &[f32]) -> Vec<u8> {
+        match model {
+            ModelBundle::Mnist(_) => {
+                let (q, s) = quant::quantize_activations_u8(input);
+                let mut key = Vec::with_capacity(1 + 4 + q.len());
+                key.push(0u8);
+                key.extend_from_slice(&s.to_le_bytes());
+                key.extend_from_slice(&q);
+                key
+            }
+            ModelBundle::PointNet(_) => {
+                let mut key = Vec::with_capacity(1 + 4 * input.len());
+                key.push(1u8);
+                for v in input {
+                    key.extend_from_slice(&v.to_le_bytes());
+                }
+                key
+            }
+        }
+    }
+
+    /// Look one key up, counting the hit or miss. Disabled caches miss
+    /// silently (no counter noise).
+    pub fn lookup(&mut self, key: &[u8]) -> Option<Vec<f32>> {
+        if !self.enabled() {
+            return None;
+        }
+        match self.map.get(key) {
+            Some(logits) => {
+                self.hits += 1;
+                Some(logits.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store freshly computed logits. Duplicate keys (two identical
+    /// inputs in one batch) keep the first entry; at capacity the
+    /// oldest entry is evicted.
+    pub fn insert(&mut self, key: Vec<u8>, logits: Vec<f32>) {
+        if !self.enabled() {
+            return;
+        }
+        match self.map.entry(key) {
+            Entry::Occupied(_) => {} // first result wins (bit-identical anyway)
+            Entry::Vacant(slot) => {
+                self.order.push_back(slot.key().clone());
+                slot.insert(logits);
+            }
+        }
+        if self.map.len() > self.capacity {
+            if let Some(oldest) = self.order.pop_front() {
+                self.map.remove(&oldest);
+            }
+        }
+    }
+
+    /// Drop every entry — called by the engine after any re-shard.
+    pub fn invalidate_all(&mut self) {
+        self.invalidations += self.map.len() as u64;
+        self.map.clear();
+        self.order.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::model::MnistBundle;
+
+    fn mnist() -> ModelBundle {
+        MnistBundle::synthetic([2, 2, 2], 0.0, 5).into()
+    }
+
+    #[test]
+    fn hit_replays_inserted_logits_and_counts() {
+        let m = mnist();
+        let mut c = ResultCache::new(4);
+        let input = vec![0.5f32; 28 * 28];
+        let key = ResultCache::key_for(&m, &input);
+        assert!(c.lookup(&key).is_none());
+        c.insert(key.clone(), vec![1.0, 2.0]);
+        assert_eq!(c.lookup(&key), Some(vec![1.0, 2.0]));
+        assert_eq!((c.hits, c.misses), (1, 1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn mnist_key_folds_quantization_pointnet_key_does_not() {
+        let m = mnist();
+        // two images that differ below the u8 quantization step share a
+        // key: with max 1.0 the scale is 1/255, and both 0.299 and
+        // 0.2991 round to the same u8 bucket (76) with wide margin
+        let mut a = vec![0.299f32; 28 * 28];
+        a[0] = 1.0;
+        let mut b = a.clone();
+        b[1] = 0.2991;
+        assert_eq!(ResultCache::key_for(&m, &a), ResultCache::key_for(&m, &b));
+        // a quantization-visible change separates them
+        b[1] = 0.0;
+        assert_ne!(ResultCache::key_for(&m, &a), ResultCache::key_for(&m, &b));
+        // the PointNet key is the raw bit pattern: any f32 change separates
+        let p: ModelBundle = crate::serve::PointNetBundle::synthetic(
+            [2, 2, 3, 2, 2, 3, 2, 4],
+            3,
+            0.0,
+            crate::nn::pointnet::GroupingConfig { s1: 8, k1: 4, r1: 0.3, s2: 4, k2: 2, r2: 0.6 },
+            6,
+        )
+        .into();
+        let cloud = vec![0.25f32; 3 * crate::nn::data::modelnet::POINTS];
+        let mut cloud2 = cloud.clone();
+        cloud2[0] += 1e-7;
+        assert_ne!(ResultCache::key_for(&p, &cloud), ResultCache::key_for(&p, &cloud2));
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_and_zero_disables() {
+        let mut c = ResultCache::new(2);
+        c.insert(vec![0], vec![0.0]);
+        c.insert(vec![1], vec![1.0]);
+        c.insert(vec![2], vec![2.0]); // evicts key [0]
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup(&[0]).is_none());
+        assert!(c.lookup(&[2]).is_some());
+
+        let mut off = ResultCache::new(0);
+        off.insert(vec![0], vec![0.0]);
+        assert!(off.lookup(&[0]).is_none());
+        assert!(off.is_empty());
+        assert_eq!((off.hits, off.misses), (0, 0), "disabled cache stays silent");
+    }
+
+    #[test]
+    fn invalidate_all_empties_and_counts() {
+        let mut c = ResultCache::new(8);
+        for i in 0..5u8 {
+            c.insert(vec![i], vec![i as f32]);
+        }
+        c.invalidate_all();
+        assert!(c.is_empty());
+        assert_eq!(c.invalidations, 5);
+        assert!(c.lookup(&[3]).is_none());
+    }
+}

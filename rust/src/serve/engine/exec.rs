@@ -1,0 +1,179 @@
+//! The tenant-agnostic batch executor: one batch of inputs through one
+//! [`ModelBundle`]'s layer pipeline, with the chip fan-out abstracted
+//! behind [`Dispatch`].
+//!
+//! Both serve front ends route through these functions — the legacy
+//! single-model [`crate::serve::Server`] (worker-per-chip channels keyed
+//! by a static shard table) and the multi-tenant
+//! [`crate::serve::engine::Engine`] (stateless workers fed the shard
+//! list per job, so the coordinator can re-shard between batches). The
+//! numeric contract is owned here: integer chip dots plus f32 host
+//! stages shared with [`ModelBundle::reference_logits`], so any
+//! dispatcher that returns bit-exact dots serves bit-exact logits.
+
+use std::sync::Arc;
+
+use crate::cim::mapping::segment_widths;
+use crate::cim::vmm;
+use crate::nn::pointnet::group_cloud;
+use crate::nn::quant;
+use crate::serve::model::{fc_logits, im2col_u8, maxpool2_flat, scale_mac, MnistBundle, ModelBundle};
+use crate::serve::pointnet_model::PointNetBundle;
+
+/// One batch's packed activation windows for one layer — the payload a
+/// dispatcher fans out to every chip holding shards of that layer.
+#[derive(Clone)]
+pub(crate) enum LayerWindows {
+    Binary(Arc<vmm::PackedWindows>),
+    Int8(Arc<vmm::PackedWindowsI8>),
+}
+
+/// The chip fan-out seam: deliver one layer's packed windows to every
+/// chip holding shards of that layer and feed each shard's integer dot
+/// vector back through `on_dots(filter, dots)` as it arrives. The
+/// executor neither knows nor cares how many chips are involved or
+/// where the shards live — that is the dispatcher's (and hence the
+/// rebalancer's) business.
+pub(crate) trait Dispatch {
+    fn dispatch(
+        &mut self,
+        layer: usize,
+        windows: LayerWindows,
+        on_dots: &mut dyn FnMut(usize, Vec<i64>),
+    );
+}
+
+/// One batch through the whole model: routes to the path-specific
+/// pipeline. Returns per-input logits, in input order.
+pub(crate) fn run_batch(
+    model: &ModelBundle,
+    inputs: &[&[f32]],
+    data_cols: usize,
+    d: &mut dyn Dispatch,
+) -> Vec<Vec<f32>> {
+    match model {
+        ModelBundle::Mnist(m) => run_mnist_batch(m, inputs, data_cols, d),
+        ModelBundle::PointNet(p) => run_pointnet_batch(p, inputs, data_cols, d),
+    }
+}
+
+/// One batch through the binary MNIST path: per-layer u8 quantization,
+/// shared im2col packing, chip dots, host scale/bias/ReLU/pool, FC head.
+pub(crate) fn run_mnist_batch(
+    m: &MnistBundle,
+    inputs: &[&[f32]],
+    data_cols: usize,
+    d: &mut dyn Dispatch,
+) -> Vec<Vec<f32>> {
+    let b = inputs.len();
+    // per-image activation maps, channel-major; layer 0 input = image
+    let mut maps: Vec<Vec<f32>> = inputs.iter().map(|x| x.to_vec()).collect();
+    let mut c = 1usize;
+    let mut hw = m.input_hw;
+    for (l, layer) in m.conv.iter().enumerate() {
+        debug_assert_eq!(layer.in_c, c);
+        let cells = layer.kernel_cells();
+        // quantize each image, im2col, and pack all windows together
+        // (one shared packing serves every filter of the layer; the
+        // im2col buffers concatenate directly into window-major order)
+        let mut scales = Vec::with_capacity(b);
+        let mut flat_windows: Vec<u8> = Vec::with_capacity(b * hw * hw * cells);
+        let (mut oh, mut ow) = (hw, hw);
+        for map in &maps {
+            let (q, s) = quant::quantize_activations_u8(map);
+            scales.push(s);
+            let (flat, oh2, ow2) = im2col_u8(&q, c, hw, hw, layer.ksize, 1);
+            oh = oh2;
+            ow = ow2;
+            flat_windows.extend_from_slice(&flat);
+        }
+        let n_pos = oh * ow;
+        let widths = segment_widths(cells, data_cols);
+        let pw = Arc::new(vmm::pack_windows(&flat_windows, &widths));
+        // fan in: integer dots -> scaled activations, folded as they land
+        let mut y = vec![0.0f32; b * layer.out_c * n_pos];
+        d.dispatch(l, LayerWindows::Binary(pw), &mut |f, dvec| {
+            debug_assert_eq!(dvec.len(), b * n_pos);
+            for (bi, &scale) in scales.iter().enumerate() {
+                let src = &dvec[bi * n_pos..(bi + 1) * n_pos];
+                let dst_base = bi * layer.out_c * n_pos + f * n_pos;
+                for (p, &dot) in src.iter().enumerate() {
+                    y[dst_base + p] =
+                        scale_mac(layer.alpha[f], scale, dot, layer.bias[f]).max(0.0);
+                }
+            }
+        });
+        // pool + advance to the next layer's input maps
+        maps = (0..b)
+            .map(|bi| {
+                let map = &y[bi * layer.out_c * n_pos..(bi + 1) * layer.out_c * n_pos];
+                if layer.pool {
+                    maxpool2_flat(map, layer.out_c, oh, ow)
+                } else {
+                    map.to_vec()
+                }
+            })
+            .collect();
+        hw = if layer.pool { oh / 2 } else { oh };
+        c = layer.out_c;
+    }
+    maps.iter()
+        .map(|map| {
+            debug_assert_eq!(map.len(), m.fc_in);
+            fc_logits(map, &m.fc_w, &m.fc_b, m.fc_in, m.n_classes)
+        })
+        .collect()
+}
+
+/// One batch through the INT8 PointNet path: host grouping, per-layer i8
+/// quantization, offset-encoded packing, chip dots, host
+/// scale/bias/ReLU + set-abstraction pool/concat seams, dense head.
+pub(crate) fn run_pointnet_batch(
+    p: &PointNetBundle,
+    inputs: &[&[f32]],
+    data_cols: usize,
+    d: &mut dyn Dispatch,
+) -> Vec<Vec<f32>> {
+    let b = inputs.len();
+    // grouping geometry is parameter-free: computed once per request on
+    // the host, identically to the software reference
+    let groups: Vec<_> = inputs.iter().map(|x| group_cloud(x, &p.grouping)).collect();
+    let mut xs: Vec<Vec<f32>> = groups.iter().map(|g| p.sa1_input(g)).collect();
+    for (l, layer) in p.layers.iter().enumerate() {
+        let n_points = p.points_in_stage(PointNetBundle::stage_of(l));
+        // quantize each cloud's map and pack all windows together (a
+        // point's feature row is one window; one shared packing serves
+        // every channel of the layer)
+        let mut scales = Vec::with_capacity(b);
+        let mut flat: Vec<i8> = Vec::with_capacity(b * n_points * layer.in_c);
+        for x in &xs {
+            debug_assert_eq!(x.len(), n_points * layer.in_c);
+            let (q, s) = quant::quantize_activations_i8(x);
+            scales.push(s);
+            flat.extend_from_slice(&q);
+        }
+        let widths = segment_widths(4 * layer.in_c, data_cols);
+        let pw = Arc::new(vmm::pack_windows_i8(&flat, &widths));
+        // fan in: integer dots -> scaled activations, point-major,
+        // folded as they land
+        let mut ys: Vec<Vec<f32>> = (0..b).map(|_| vec![0.0f32; n_points * layer.out_c]).collect();
+        d.dispatch(l, LayerWindows::Int8(pw), &mut |f, dvec| {
+            debug_assert_eq!(dvec.len(), b * n_points);
+            for (bi, &scale) in scales.iter().enumerate() {
+                let y = &mut ys[bi];
+                for pnt in 0..n_points {
+                    y[pnt * layer.out_c + f] =
+                        scale_mac(layer.w_scale[f], scale, dvec[bi * n_points + pnt], layer.bias[f])
+                            .max(0.0);
+                }
+            }
+        });
+        // pool/concat seams, shared with the reference implementation
+        xs = ys
+            .into_iter()
+            .zip(&groups)
+            .map(|(y, g)| p.advance(l, g, y))
+            .collect();
+    }
+    xs.iter().map(|x| p.head_logits(x)).collect()
+}

@@ -1,0 +1,879 @@
+//! The multi-tenant async serving engine: one chip pool, N named
+//! models, an event-loop admission plane, a bit-exact result cache, and
+//! live wear rebalancing.
+//!
+//! This subsystem replaces the single-bundle blocking front end for
+//! multi-workload deployments — the paper's "one reconfigurable fabric,
+//! many workloads" claim made operational. One [`Engine`] serves the
+//! binary MNIST path and the INT8 PointNet path *concurrently from the
+//! same arrays*:
+//!
+//! ```text
+//!  try_submit(tenant, input)      try_submit(tenant, input)
+//!        │ per-tenant bounded queues (shed on full, counted per tenant)
+//!        ▼
+//!  [admission] deficit-round-robin drain → single-tenant coalesced batch
+//!        │
+//!        ▼
+//!  [cache]  content-keyed logits replay (bit-exact, per tenant)
+//!        │ misses only
+//!        ▼
+//!  [exec]   quantize → pack planes → fan out to stateless chip workers
+//!        │                     (shard list travels with each job, so
+//!        ▼                      the coordinator may re-shard any time)
+//!  [rebalance] every K batches: diff WearLedger snapshots, migrate the
+//!              hottest shards to the least-worn chip (drained pool, so
+//!              logits stay bit-exact mid-migration), invalidate caches
+//! ```
+//!
+//! # Differences from the legacy [`crate::serve::Server`]
+//!
+//! | | `Server` | `Engine` |
+//! |---|---|---|
+//! | models per pool | 1 | N, each with a row quota |
+//! | admission | one blocking `sync_channel` | per-tenant bounded queues, DRR drain |
+//! | workers | static shard table per worker | stateless; shards travel with the job |
+//! | placement | fixed at start | migrates on live wear deltas |
+//! | repeated inputs | recomputed | replayed from the bit-exact cache |
+//!
+//! Both front ends share the batch executor (the crate-private `exec`
+//! submodule) and therefore the numeric contract: every answer equals
+//! the tenant model's
+//! [`crate::serve::ModelBundle::reference_logits`] bit for bit — cache
+//! hit or miss, before or after any number of migrations, under stuck
+//! tile fault injection (property-tested in
+//! `tests/integration_stack.rs`).
+
+pub mod admission;
+pub mod cache;
+pub(crate) mod exec;
+pub mod rebalance;
+pub mod tenant;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::chip::{Chip, WearLedger};
+use crate::cim::mapping::{store_bits, store_int8, RowAllocator, RowSpan};
+use crate::cim::vmm;
+
+use super::batcher::{Request, Response};
+use super::model::{ModelBundle, ShardPayload};
+use super::placement::{self, Placement, ShardLoc};
+use super::pool::{ChipPool, PoolConfig};
+use super::stats::{EngineReport, TenantStats};
+
+use admission::{Admission, AdmissionConfig};
+use cache::{CacheConfig, ResultCache};
+use exec::{run_batch, Dispatch, LayerWindows};
+use rebalance::{plan_moves, RebalanceConfig, Rebalancer, ShardHeat};
+use tenant::{TenantConfig, TenantId};
+
+/// Engine construction knobs. The defaults serve: 4-chip pool, 32-deep
+/// coalescing with DRR fairness, a 1024-entry cache per tenant, and
+/// rebalancing off (enable via [`RebalanceConfig::every_batches`]).
+#[derive(Clone, Debug, Default)]
+pub struct EngineConfig {
+    pub pool: PoolConfig,
+    pub admission: AdmissionConfig,
+    pub cache: CacheConfig,
+    pub rebalance: RebalanceConfig,
+}
+
+/// A shard's payload as the worker protocol carries it (owned: the
+/// coordinator keeps the bundles, workers only ever see copies).
+enum OwnedPayload {
+    Binary(Vec<bool>),
+    Int8(Vec<i8>),
+}
+
+impl From<ShardPayload<'_>> for OwnedPayload {
+    fn from(p: ShardPayload<'_>) -> Self {
+        match p {
+            ShardPayload::Binary(bits) => OwnedPayload::Binary(bits.to_vec()),
+            ShardPayload::Int8(ws) => OwnedPayload::Int8(ws.to_vec()),
+        }
+    }
+}
+
+/// One instruction to a (stateless) chip worker. Unlike the legacy
+/// scheduler's workers, engine workers hold **no shard table**: every
+/// dots job names the shards it wants, which is what lets the
+/// coordinator re-shard between batches without touching the workers.
+enum EngineJob {
+    /// Compute dots of the named shards against the shared windows.
+    Dots { shards: LayerShards, windows: LayerWindows },
+    /// Program a migrated shard's payload into a freshly allocated span.
+    Program { span: RowSpan, payload: OwnedPayload },
+    /// Report the chip's lifetime wear ledger.
+    Wear,
+}
+
+/// A worker's answer, tagged with its chip index by the send loop.
+enum EngineReply {
+    Dots(Vec<(usize, Vec<i64>)>),
+    Programmed { failures: usize },
+    Wear(WearLedger),
+}
+
+fn engine_worker(
+    idx: usize,
+    mut chip: Chip,
+    jobs: Receiver<EngineJob>,
+    results: Sender<(usize, EngineReply)>,
+) -> Chip {
+    while let Ok(job) = jobs.recv() {
+        let reply = match job {
+            EngineJob::Dots { shards, windows } => {
+                let mut dots = Vec::with_capacity(shards.len());
+                for (filter, span) in shards.iter() {
+                    let d = match &windows {
+                        LayerWindows::Binary(pw) => vmm::binary_dots_batched(&mut chip, span, pw),
+                        LayerWindows::Int8(pw) => vmm::int8_dots_batched(&mut chip, span, pw),
+                    };
+                    dots.push((*filter, d));
+                }
+                EngineReply::Dots(dots)
+            }
+            EngineJob::Program { span, payload } => {
+                let failures = match &payload {
+                    OwnedPayload::Binary(bits) => store_bits(&mut chip, &span, bits),
+                    OwnedPayload::Int8(ws) => store_int8(&mut chip, &span, ws),
+                };
+                EngineReply::Programmed { failures }
+            }
+            EngineJob::Wear => EngineReply::Wear(chip.wear.clone()),
+        };
+        if results.send((idx, reply)).is_err() {
+            break; // coordinator gone: shut down
+        }
+    }
+    chip
+}
+
+/// One (chip, layer) shard list, shared with the worker protocol by
+/// `Arc` so a per-batch job send costs one refcount bump, not a deep
+/// copy of every span.
+type LayerShards = Arc<Vec<(usize, RowSpan)>>;
+
+/// Per-tenant shard routing table: `[chip][layer] -> (filter, span)`.
+/// Rebuilt from the placement whenever a migration lands (fresh `Arc`s;
+/// in-flight jobs keep the old ones alive until done).
+type ChipLayerShards = Vec<Vec<LayerShards>>;
+
+fn shard_table(placement: &Placement, n_chips: usize, n_layers: usize) -> ChipLayerShards {
+    let mut table: Vec<Vec<Vec<(usize, RowSpan)>>> = vec![vec![Vec::new(); n_layers]; n_chips];
+    for (l, layer) in placement.shards.iter().enumerate() {
+        for (f, loc) in layer.iter().enumerate() {
+            if let Some(loc) = loc {
+                table[loc.chip][l].push((f, loc.span.clone()));
+            }
+        }
+    }
+    table
+        .into_iter()
+        .map(|layers| layers.into_iter().map(Arc::new).collect())
+        .collect()
+}
+
+/// The engine's chip fan-out: like the legacy scheduler's, but the
+/// shard list rides along with each job (stateless workers). Also
+/// meters the windows each layer dispatches — the per-shard heat the
+/// rebalancer ranks migrations by.
+struct EngineFanout<'a> {
+    job_txs: &'a [Sender<EngineJob>],
+    res_rx: &'a Receiver<(usize, EngineReply)>,
+    table: &'a ChipLayerShards,
+    /// Windows dispatched per layer during this batch (indexed by layer).
+    layer_windows: &'a mut [u64],
+}
+
+impl Dispatch for EngineFanout<'_> {
+    fn dispatch(
+        &mut self,
+        layer: usize,
+        windows: LayerWindows,
+        on_dots: &mut dyn FnMut(usize, Vec<i64>),
+    ) {
+        let n_windows = match &windows {
+            LayerWindows::Binary(pw) => pw.n_windows,
+            LayerWindows::Int8(pw) => pw.n_windows,
+        };
+        self.layer_windows[layer] += n_windows as u64;
+        let mut expected = 0usize;
+        for (ci, jtx) in self.job_txs.iter().enumerate() {
+            let shards = &self.table[ci][layer];
+            if shards.is_empty() {
+                continue;
+            }
+            jtx.send(EngineJob::Dots { shards: Arc::clone(shards), windows: windows.clone() })
+                .expect("engine worker hung up");
+            expected += 1;
+        }
+        for _ in 0..expected {
+            let (_, reply) = self.res_rx.recv().expect("engine worker died mid-batch");
+            match reply {
+                EngineReply::Dots(dots) => {
+                    for (f, d) in dots {
+                        on_dots(f, d);
+                    }
+                }
+                _ => unreachable!("only dots jobs are in flight during a batch"),
+            }
+        }
+    }
+}
+
+/// The single thread that owns all serving state: placements, routing
+/// tables, caches, allocators, heat counters, and the worker channels.
+/// Its single-threadedness is the drain-before-migrate invariant — a
+/// rebalance can only run at a batch boundary, when no job is in
+/// flight anywhere.
+struct Coordinator {
+    admission: Admission,
+    models: Vec<ModelBundle>,
+    quotas: Vec<Option<usize>>,
+    placements: Vec<Placement>,
+    tables: Vec<ChipLayerShards>,
+    /// Per-shard dispatch heat `heat[tenant][layer][filter]` (windows
+    /// computed), the rebalancer's shard-ranking signal.
+    heat: Vec<ShardHeat>,
+    caches: Vec<Arc<Mutex<ResultCache>>>,
+    stats: Vec<TenantStats>,
+    allocs: Vec<RowAllocator>,
+    job_txs: Vec<Sender<EngineJob>>,
+    res_rx: Receiver<(usize, EngineReply)>,
+    handles: Vec<JoinHandle<Chip>>,
+    data_cols: usize,
+    n_chips: usize,
+    rebalancer: Rebalancer,
+    force_rebalance: Arc<AtomicBool>,
+    /// Batches that reached the chips (cache-only batches excluded).
+    chip_batches_total: u64,
+    /// Last batch count a periodic pass ran at (so a quiet pool does
+    /// not re-run the pass every drained batch).
+    last_pass_at: u64,
+    stuck_retries: usize,
+    rows_used: Vec<usize>,
+}
+
+impl Coordinator {
+    fn run(mut self) -> EngineReport {
+        let t_start = Instant::now();
+        while let Some((t, batch)) = self.admission.next_batch() {
+            let force = self.force_rebalance.swap(false, Ordering::SeqCst);
+            if force
+                || (self.rebalancer.due(self.chip_batches_total)
+                    && self.chip_batches_total != self.last_pass_at)
+            {
+                self.last_pass_at = self.chip_batches_total;
+                self.rebalance_pass(force);
+            }
+            self.serve_batch(t, batch);
+        }
+        self.finish(t_start)
+    }
+
+    fn serve_batch(&mut self, t: usize, batch: Vec<Request>) {
+        let b = batch.len();
+        // cache pass: resolve hits, remember the keys of misses
+        let mut results: Vec<Option<Vec<f32>>> = vec![None; b];
+        let mut keys: Vec<Option<Vec<u8>>> = vec![None; b];
+        {
+            let mut cache = self.caches[t].lock().unwrap();
+            if cache.enabled() {
+                for (i, req) in batch.iter().enumerate() {
+                    let key = ResultCache::key_for(&self.models[t], &req.input);
+                    results[i] = cache.lookup(&key);
+                    keys[i] = Some(key);
+                }
+            }
+        }
+        let miss_idx: Vec<usize> = (0..b).filter(|&i| results[i].is_none()).collect();
+        let hits = (b - miss_idx.len()) as u64;
+        if !miss_idx.is_empty() {
+            let inputs: Vec<&[f32]> =
+                miss_idx.iter().map(|&i| batch[i].input.as_slice()).collect();
+            let mut layer_windows = vec![0u64; self.models[t].n_layers()];
+            let logits = {
+                let mut fanout = EngineFanout {
+                    job_txs: &self.job_txs,
+                    res_rx: &self.res_rx,
+                    table: &self.tables[t],
+                    layer_windows: &mut layer_windows,
+                };
+                run_batch(&self.models[t], &inputs, self.data_cols, &mut fanout)
+            };
+            let mut cache = self.caches[t].lock().unwrap();
+            for (&i, lg) in miss_idx.iter().zip(&logits) {
+                if let Some(key) = keys[i].take() {
+                    cache.insert(key, lg.clone());
+                }
+                results[i] = Some(lg.clone());
+            }
+            drop(cache);
+            // heat: every live shard of layer l served that layer's
+            // windows (within a layer all live filters do equal work;
+            // across layers window counts differ by orders of magnitude,
+            // which is what ranks migrations meaningfully)
+            for (l, layer) in self.placements[t].shards.iter().enumerate() {
+                for (f, loc) in layer.iter().enumerate() {
+                    if loc.is_some() {
+                        self.heat[t][l][f] += layer_windows[l];
+                    }
+                }
+            }
+            self.stats[t].chip_batches += 1;
+            self.chip_batches_total += 1;
+        }
+        // replies, in admission order (per-tenant FIFO)
+        for (req, res) in batch.iter().zip(results) {
+            let logits = res.expect("every batched request is resolved");
+            let latency = req.submitted.elapsed();
+            self.stats[t].latency.record(latency);
+            // a dropped reply receiver is the client's choice, not an error
+            let _ = req.reply.send(Response { id: req.id, logits, latency });
+        }
+        self.stats[t].answered += b as u64;
+        self.stats[t].cache_hits += hits;
+    }
+
+    /// Snapshot every chip's wear ledger. Runs at a batch boundary, so
+    /// the probes are the only jobs in flight.
+    fn collect_wear(&mut self) -> Vec<WearLedger> {
+        for jtx in &self.job_txs {
+            jtx.send(EngineJob::Wear).expect("engine worker hung up");
+        }
+        let mut out: Vec<Option<WearLedger>> = vec![None; self.n_chips];
+        for _ in 0..self.n_chips {
+            let (ci, reply) = self.res_rx.recv().expect("engine worker died in wear probe");
+            match reply {
+                EngineReply::Wear(w) => out[ci] = Some(w),
+                _ => unreachable!("only wear probes are in flight"),
+            }
+        }
+        out.into_iter().map(|w| w.expect("every chip reports wear")).collect()
+    }
+
+    /// One rebalance pass: diff wear snapshots, migrate up to
+    /// `max_moves` hottest shards off the hottest chip, invalidate every
+    /// tenant's cache if anything moved. See [`rebalance`] for the
+    /// drain-before-migrate protocol.
+    fn rebalance_pass(&mut self, force: bool) {
+        let wear = self.collect_wear();
+        let rows_free: Vec<usize> = self.allocs.iter().map(|a| a.rows_free()).collect();
+        let mut moved = 0u64;
+        if let Some((src, dst)) = self.rebalancer.pick_chips(&wear, &rows_free, force) {
+            let moves =
+                plan_moves(&self.placements, &self.heat, src, self.rebalancer.cfg.max_moves);
+            for mv in moves {
+                if self.try_migrate(&mv, dst) {
+                    moved += 1;
+                }
+            }
+        }
+        if moved > 0 {
+            // any re-shard invalidates every cached entry (see `cache`)
+            for cache in &self.caches {
+                cache.lock().unwrap().invalidate_all();
+            }
+            self.rebalancer.rebalances += 1;
+            self.rebalancer.shards_moved += moved;
+        }
+        self.rebalancer.last = wear;
+    }
+
+    /// Re-program one shard on `dst`. The placement flips only on a
+    /// clean store (`failures == 0`); a stuck tile retires the fresh
+    /// rows and the shard keeps serving from where it is.
+    fn try_migrate(&mut self, mv: &rebalance::Move, dst: usize) -> bool {
+        let old = self.placements[mv.tenant].shards[mv.layer][mv.filter]
+            .clone()
+            .expect("planned move targets a live shard");
+        let cells = old.span.len;
+        let per_row = self.allocs[dst].data_cols;
+        let need = cells.div_ceil(per_row);
+        if let Some(quota) = self.quotas[mv.tenant] {
+            let live = self.placements[mv.tenant].rows_live();
+            if live - old.span.slots.len() + need > quota {
+                return false; // the move would overdraw the tenant's quota
+            }
+        }
+        let Some(span) = self.allocs[dst].alloc(cells) else {
+            return false; // destination filled up within this pass
+        };
+        self.rows_used[dst] += span.slots.len();
+        let payload: OwnedPayload = self.models[mv.tenant]
+            .shard_payload(mv.layer, mv.filter)
+            .expect("live shard has a payload")
+            .into();
+        self.job_txs[dst]
+            .send(EngineJob::Program { span: span.clone(), payload })
+            .expect("engine worker hung up");
+        let (_, reply) = self.res_rx.recv().expect("engine worker died mid-migration");
+        let failures = match reply {
+            EngineReply::Programmed { failures } => failures,
+            _ => unreachable!("only the migration store is in flight"),
+        };
+        if failures > 0 {
+            self.stuck_retries += 1;
+            return false;
+        }
+        self.placements[mv.tenant].shards[mv.layer][mv.filter] =
+            Some(ShardLoc { chip: dst, span });
+        self.tables[mv.tenant] = shard_table(
+            &self.placements[mv.tenant],
+            self.n_chips,
+            self.models[mv.tenant].n_layers(),
+        );
+        true
+    }
+
+    fn finish(mut self, t_start: Instant) -> EngineReport {
+        for (t, st) in self.stats.iter_mut().enumerate() {
+            st.dropped = self.admission.dropped(t);
+        }
+        drop(std::mem::take(&mut self.job_txs)); // workers: channel closed
+        let chips: Vec<Chip> = std::mem::take(&mut self.handles)
+            .into_iter()
+            .map(|h| h.join().expect("engine worker panicked"))
+            .collect();
+        EngineReport {
+            tenants: std::mem::take(&mut self.stats),
+            wall_s: t_start.elapsed().as_secs_f64(),
+            energy_pj: chips.iter().map(|c| c.energy_breakdown().total_pj()).sum(),
+            wear: chips.iter().map(|c| c.wear.clone()).collect(),
+            rows_used: std::mem::take(&mut self.rows_used),
+            stuck_retries: self.stuck_retries,
+            rebalances: self.rebalancer.rebalances,
+            shards_moved: self.rebalancer.shards_moved,
+        }
+    }
+}
+
+/// A running multi-tenant inference engine. Submit inputs against a
+/// [`TenantId`] (see [`Engine::tenant`]), then [`Engine::shutdown`] to
+/// drain every queue, join all threads, and collect the
+/// [`EngineReport`].
+pub struct Engine {
+    admission: Admission,
+    names: Vec<String>,
+    input_lens: Vec<usize>,
+    caches: Vec<Arc<Mutex<ResultCache>>>,
+    next_id: AtomicU64,
+    force: Arc<AtomicBool>,
+    coordinator: Option<JoinHandle<EngineReport>>,
+}
+
+impl Engine {
+    /// Fabricate the pool, place every tenant's model onto it in
+    /// registration order (shared allocators, per-tenant quotas), reset
+    /// the energy ledgers so serving measurements exclude initial
+    /// programming, and spawn the workers + coordinator.
+    pub fn start(tenants: Vec<TenantConfig>, cfg: &EngineConfig) -> Result<Engine> {
+        tenant::validate_tenants(&tenants)?;
+        let mut pool = ChipPool::new(&cfg.pool);
+        let n_chips = pool.len();
+        if n_chips == 0 {
+            return Err(anyhow!("engine needs a non-empty pool"));
+        }
+        let mut allocs: Vec<RowAllocator> =
+            pool.chips().iter().map(RowAllocator::for_chip).collect();
+        let mut placements = Vec::with_capacity(tenants.len());
+        let mut stuck_retries = 0usize;
+        let mut rows_used = vec![0usize; n_chips];
+        for t in &tenants {
+            let p = placement::place_with(&t.model, &mut pool, &mut allocs, t.row_quota)
+                .map_err(|e| anyhow!("tenant {:?}: {e}", t.name))?;
+            stuck_retries += p.stuck_retries;
+            for (c, r) in p.rows_used.iter().enumerate() {
+                rows_used[c] += *r;
+            }
+            placements.push(p);
+        }
+        pool.reset_energy();
+        let data_cols = pool.chips()[0].cfg().data_cols();
+        let initial_wear = pool.wear();
+
+        let names: Vec<String> = tenants.iter().map(|t| t.name.clone()).collect();
+        let input_lens: Vec<usize> = tenants.iter().map(|t| t.model.input_len()).collect();
+        let quotas: Vec<Option<usize>> = tenants.iter().map(|t| t.row_quota).collect();
+        let depths: Vec<usize> = tenants.iter().map(|t| t.queue_depth).collect();
+        let models: Vec<ModelBundle> = tenants.into_iter().map(|t| t.model).collect();
+        let tables: Vec<ChipLayerShards> = placements
+            .iter()
+            .zip(&models)
+            .map(|(p, m)| shard_table(p, n_chips, m.n_layers()))
+            .collect();
+        let heat: Vec<ShardHeat> = placements
+            .iter()
+            .map(|p| p.shards.iter().map(|l| vec![0u64; l.len()]).collect())
+            .collect();
+        let caches: Vec<Arc<Mutex<ResultCache>>> = models
+            .iter()
+            .map(|_| Arc::new(Mutex::new(ResultCache::new(cfg.cache.capacity))))
+            .collect();
+        let stats: Vec<TenantStats> = names
+            .iter()
+            .map(|n| TenantStats { name: n.clone(), ..TenantStats::default() })
+            .collect();
+        let admission = Admission::new(cfg.admission.clone(), &depths);
+        let force = Arc::new(AtomicBool::new(false));
+
+        let (res_tx, res_rx) = channel::<(usize, EngineReply)>();
+        let mut job_txs: Vec<Sender<EngineJob>> = Vec::with_capacity(n_chips);
+        let mut handles: Vec<JoinHandle<Chip>> = Vec::with_capacity(n_chips);
+        for (i, chip) in pool.into_chips().into_iter().enumerate() {
+            let (jtx, jrx) = channel::<EngineJob>();
+            let rtx = res_tx.clone();
+            handles.push(std::thread::spawn(move || engine_worker(i, chip, jrx, rtx)));
+            job_txs.push(jtx);
+        }
+        drop(res_tx);
+
+        let coordinator = Coordinator {
+            admission: admission.clone(),
+            models,
+            quotas,
+            placements,
+            tables,
+            heat,
+            caches: caches.clone(),
+            stats,
+            allocs,
+            job_txs,
+            res_rx,
+            handles,
+            data_cols,
+            n_chips,
+            rebalancer: Rebalancer::new(cfg.rebalance.clone(), initial_wear),
+            force_rebalance: Arc::clone(&force),
+            chip_batches_total: 0,
+            last_pass_at: u64::MAX,
+            stuck_retries,
+            rows_used,
+        };
+        let handle = std::thread::spawn(move || coordinator.run());
+        Ok(Engine {
+            admission,
+            names,
+            input_lens,
+            caches,
+            next_id: AtomicU64::new(0),
+            force,
+            coordinator: Some(handle),
+        })
+    }
+
+    /// Resolve a tenant name to the id submits route by.
+    pub fn tenant(&self, name: &str) -> Option<TenantId> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    /// Registered tenant names, in registration (= [`TenantId`]) order.
+    pub fn tenants(&self) -> &[String] {
+        &self.names
+    }
+
+    fn request(&self, tenant: TenantId, input: Vec<f32>) -> (Request, Receiver<Response>) {
+        assert!(tenant < self.names.len(), "unknown tenant id {tenant}");
+        assert_eq!(
+            input.len(),
+            self.input_lens[tenant],
+            "request input length vs tenant model ({} expected)",
+            self.input_lens[tenant]
+        );
+        let (reply, rx) = channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            input,
+            submitted: Instant::now(),
+            reply,
+        };
+        (req, rx)
+    }
+
+    /// Blocking submit: waits while the tenant's queue is full (lossless
+    /// per-tenant backpressure). The receiver yields the [`Response`]
+    /// when the batch containing this request completes.
+    ///
+    /// Panics (in the caller, never the pipeline) if `input` is not the
+    /// tenant model's input length.
+    pub fn submit(&self, tenant: TenantId, input: Vec<f32>) -> Receiver<Response> {
+        let (req, rx) = self.request(tenant, input);
+        self.admission.submit(tenant, req);
+        rx
+    }
+
+    /// Non-blocking submit: on a full tenant queue the input is handed
+    /// back (explicit backpressure) and the shed is counted in that
+    /// tenant's [`TenantStats::dropped`] — never admitted, so never
+    /// also answered.
+    pub fn try_submit(
+        &self,
+        tenant: TenantId,
+        input: Vec<f32>,
+    ) -> std::result::Result<Receiver<Response>, Vec<f32>> {
+        let (req, rx) = self.request(tenant, input);
+        match self.admission.try_submit(tenant, req) {
+            Ok(()) => Ok(rx),
+            Err(req) => Err(req.input),
+        }
+    }
+
+    /// Request a rebalance pass at the next batch boundary (wear-delta
+    /// thresholds are bypassed; capacity and quota checks are not).
+    pub fn force_rebalance(&self) {
+        self.force.store(true, Ordering::SeqCst);
+    }
+
+    /// Live entry count of one tenant's result cache.
+    pub fn cache_len(&self, tenant: TenantId) -> usize {
+        self.caches[tenant].lock().unwrap().len()
+    }
+
+    /// Entries dropped by re-shard invalidation so far, one tenant.
+    pub fn cache_invalidations(&self, tenant: TenantId) -> u64 {
+        self.caches[tenant].lock().unwrap().invalidations
+    }
+
+    /// Stop admitting, drain every tenant queue, join all threads, and
+    /// report. Every request admitted before this call is answered.
+    pub fn shutdown(mut self) -> EngineReport {
+        self.admission.close();
+        self.coordinator
+            .take()
+            .expect("engine already shut down")
+            .join()
+            .expect("engine coordinator panicked")
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.admission.close();
+        if let Some(h) = self.coordinator.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipConfig;
+    use crate::nn::data::{mnist, modelnet};
+    use crate::nn::pointnet::GroupingConfig;
+    use crate::serve::PointNetBundle;
+    use std::time::Duration;
+
+    fn tiny_pointnet(prune: f64, seed: u64) -> PointNetBundle {
+        PointNetBundle::synthetic(
+            [2, 2, 3, 2, 2, 3, 2, 4],
+            3,
+            prune,
+            GroupingConfig { s1: 8, k1: 4, r1: 0.3, s2: 4, k2: 2, r2: 0.6 },
+            seed,
+        )
+    }
+
+    fn small_cfg(chips: usize, seed: u64) -> EngineConfig {
+        EngineConfig {
+            pool: PoolConfig { chips, chip: ChipConfig::small_test(), seed },
+            admission: AdmissionConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                quantum: 4,
+            },
+            cache: CacheConfig::default(),
+            rebalance: RebalanceConfig::default(),
+        }
+    }
+
+    #[test]
+    fn zero_request_lifecycle() {
+        let tenants = vec![TenantConfig::new("mnist", ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 71))];
+        let engine = Engine::start(tenants, &small_cfg(2, 72)).unwrap();
+        assert_eq!(engine.tenant("mnist"), Some(0));
+        assert_eq!(engine.tenant("nope"), None);
+        let report = engine.shutdown();
+        assert_eq!(report.answered(), 0);
+        assert_eq!(report.dropped(), 0);
+        assert_eq!(report.wear.len(), 2);
+        assert_eq!(report.rebalances, 0);
+    }
+
+    #[test]
+    fn registration_errors_are_clean() {
+        let m = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 73);
+        let dup = vec![
+            TenantConfig::new("a", m.clone()),
+            TenantConfig::new("a", m.clone()),
+        ];
+        let err = match Engine::start(dup, &small_cfg(2, 74)) {
+            Err(e) => e,
+            Ok(_) => panic!("duplicate names must fail"),
+        };
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        let strangled = vec![TenantConfig::new("a", m).with_row_quota(3)];
+        let err = match Engine::start(strangled, &small_cfg(2, 75)) {
+            Err(e) => e,
+            Ok(_) => panic!("a 3-row quota must fail placement"),
+        };
+        assert!(err.to_string().contains("quota"), "{err}");
+    }
+
+    #[test]
+    fn two_tenants_serve_interleaved_bit_exactly() {
+        let mnist_model = ModelBundle::synthetic_mnist([3, 4, 3], 0.3, 81);
+        let pn_model: ModelBundle = tiny_pointnet(0.3, 82).into();
+        let tenants = vec![
+            TenantConfig::new("mnist", mnist_model.clone()),
+            TenantConfig::new("pointnet", pn_model.clone()),
+        ];
+        let engine = Engine::start(tenants, &small_cfg(3, 83)).unwrap();
+        let (tm, tp) = (engine.tenant("mnist").unwrap(), engine.tenant("pointnet").unwrap());
+        let images = mnist::generate(4, 84);
+        let clouds = modelnet::generate(4, 85);
+        // interleave the two workloads through one pool
+        let mut pending = Vec::new();
+        for i in 0..4 {
+            pending.push((tm, i, engine.submit(tm, images.sample(i).to_vec())));
+            pending.push((tp, i, engine.submit(tp, clouds.sample(i).to_vec())));
+        }
+        for (t, i, rx) in pending {
+            let resp = rx.recv().unwrap();
+            let (model, input) = if t == tm {
+                (&mnist_model, images.sample(i))
+            } else {
+                (&pn_model, clouds.sample(i))
+            };
+            assert_eq!(
+                resp.logits,
+                model.reference_logits(input),
+                "tenant {t} input {i} diverged from its software reference"
+            );
+        }
+        let report = engine.shutdown();
+        assert_eq!(report.answered(), 8);
+        assert_eq!(report.tenants[tm].answered, 4);
+        assert_eq!(report.tenants[tp].answered, 4);
+        assert_eq!(report.dropped(), 0);
+        assert!(report.energy_pj > 0.0, "serving must spend chip energy");
+        assert!(report.tenants[tm].latency.count() == 4);
+    }
+
+    #[test]
+    fn cache_hits_replay_and_forced_reshard_invalidates() {
+        let model = ModelBundle::synthetic_mnist([3, 4, 3], 0.3, 91);
+        let tenants = vec![TenantConfig::new("mnist", model.clone())];
+        let engine = Engine::start(tenants, &small_cfg(2, 92)).unwrap();
+        let ds = mnist::generate(1, 93);
+        let reference = model.reference_logits(ds.sample(0));
+        // miss, then hit: identical logits, one cache entry
+        let a = engine.submit(0, ds.sample(0).to_vec()).recv().unwrap();
+        assert_eq!(a.logits, reference);
+        assert_eq!(engine.cache_len(0), 1);
+        let b = engine.submit(0, ds.sample(0).to_vec()).recv().unwrap();
+        assert_eq!(b.logits, reference, "cache hit must replay bit-exactly");
+        // force a re-shard: the entry must be invalidated, the recompute
+        // must go through the migrated placement and stay bit-exact
+        engine.force_rebalance();
+        let c = engine.submit(0, ds.sample(0).to_vec()).recv().unwrap();
+        assert_eq!(c.logits, reference, "post-migration logits diverged");
+        assert!(engine.cache_invalidations(0) >= 1, "re-shard must flush the cache");
+        let report = engine.shutdown();
+        assert_eq!(report.rebalances, 1);
+        assert!(report.shards_moved >= 1);
+        // first + third computed, second replayed
+        assert_eq!(report.tenants[0].cache_hits, 1);
+        assert_eq!(report.tenants[0].chip_batches, 2);
+    }
+
+    #[test]
+    fn periodic_rebalance_keeps_logits_bit_exact() {
+        let model = ModelBundle::synthetic_mnist([3, 4, 3], 0.0, 95);
+        let tenants = vec![TenantConfig::new("mnist", model.clone())];
+        let mut cfg = small_cfg(2, 96);
+        cfg.rebalance = RebalanceConfig { every_batches: 2, max_moves: 1 };
+        cfg.cache = CacheConfig { capacity: 0 }; // every request hits silicon
+        let engine = Engine::start(tenants, &cfg).unwrap();
+        let ds = mnist::generate(6, 97);
+        for i in 0..6 {
+            let resp = engine.submit(0, ds.sample(i).to_vec()).recv().unwrap();
+            assert_eq!(
+                resp.logits,
+                model.reference_logits(ds.sample(i)),
+                "image {i} diverged (mid-run migrations must be invisible)"
+            );
+        }
+        let report = engine.shutdown();
+        assert!(report.rebalances >= 1, "periodic passes must have fired");
+        assert!(report.shards_moved >= 1);
+        assert_eq!(report.tenants[0].answered, 6);
+        assert_eq!(report.tenants[0].cache_hits, 0);
+    }
+
+    #[test]
+    fn bursty_tenant_drops_are_its_own_and_fifo_holds() {
+        let m = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 101);
+        let tenants = vec![
+            TenantConfig::new("burst", m.clone()).with_queue_depth(2),
+            TenantConfig::new("steady", m.clone()).with_queue_depth(8),
+        ];
+        let mut cfg = small_cfg(2, 102);
+        cfg.admission.max_batch = 2;
+        cfg.admission.quantum = 2;
+        cfg.cache = CacheConfig { capacity: 0 };
+        let engine = Engine::start(tenants, &cfg).unwrap();
+        let ds = mnist::generate(1, 103);
+        // tenant 0 floods a depth-2 queue; tenant 1 trickles
+        let mut burst_rx = Vec::new();
+        let mut burst_shed = 0u64;
+        let mut steady_rx = Vec::new();
+        let mut steady_shed = 0u64;
+        for i in 0..60 {
+            match engine.try_submit(0, ds.sample(0).to_vec()) {
+                Ok(rx) => burst_rx.push(rx),
+                Err(input) => {
+                    assert_eq!(input.len(), 28 * 28, "shed input returned intact");
+                    burst_shed += 1;
+                }
+            }
+            if i % 10 == 0 {
+                match engine.try_submit(1, ds.sample(0).to_vec()) {
+                    Ok(rx) => steady_rx.push(rx),
+                    Err(_) => steady_shed += 1,
+                }
+            }
+        }
+        // every admitted request is answered, FIFO per tenant
+        let drain = |rxs: Vec<std::sync::mpsc::Receiver<Response>>| -> Vec<u64> {
+            rxs.into_iter()
+                .map(|rx| rx.recv().expect("admitted request must be answered").id)
+                .collect()
+        };
+        let burst_ids = drain(burst_rx);
+        let steady_ids = drain(steady_rx);
+        assert!(burst_ids.windows(2).all(|w| w[0] < w[1]), "burst FIFO broken");
+        assert!(steady_ids.windows(2).all(|w| w[0] < w[1]), "steady FIFO broken");
+        let report = engine.shutdown();
+        assert_eq!(
+            report.tenants[0].answered + report.tenants[0].dropped,
+            60,
+            "burst tenant: answered + dropped must partition its attempts"
+        );
+        assert_eq!(report.tenants[0].dropped, burst_shed);
+        assert_eq!(
+            report.tenants[1].answered + report.tenants[1].dropped,
+            6,
+            "steady tenant: nothing silently lost"
+        );
+        assert_eq!(report.tenants[1].dropped, steady_shed);
+    }
+}

@@ -1,0 +1,215 @@
+//! Live wear rebalancing: every K batches the engine diffs per-chip
+//! [`WearLedger`] snapshots, finds the chip that absorbed the most
+//! word-line activity in the window, and migrates its hottest shards to
+//! the least-worn chip with free rows.
+//!
+//! # Protocol (drain before migrate)
+//!
+//! The engine's coordinator is the only thread that feeds the workers,
+//! and it runs batches to completion before looking at the rebalance
+//! clock — so when a rebalance fires there is **no in-flight compute
+//! anywhere in the pool**. Migration then is a plain re-program: the
+//! shard's payload (byte-identical to what initial placement stored,
+//! [`crate::serve::ModelBundle::shard_payload`]) is written to a fresh
+//! span on the target chip; only if every cell lands (`failures == 0`)
+//! does the placement table flip to the new location. A stuck tile on
+//! the target retires those rows and the shard simply stays put — at
+//! every instant exactly one complete, verified copy of each shard is
+//! addressable, so logits stay bit-exact through any number of
+//! migrations.
+//!
+//! Vacated source rows are retired, not recycled (the row allocator is
+//! append-only, mirroring the stuck-tile policy): rebalancing trades
+//! spare capacity for wear-leveling, and stops when capacity or tenant
+//! quotas say so.
+
+use crate::chip::WearLedger;
+use crate::serve::placement::Placement;
+
+/// Rebalancer knobs.
+#[derive(Clone, Debug)]
+pub struct RebalanceConfig {
+    /// Diff wear snapshots and consider migrating after every this many
+    /// served (chip-computed) batches; 0 disables rebalancing.
+    pub every_batches: u64,
+    /// Max shards migrated per rebalance pass.
+    pub max_moves: usize,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig { every_batches: 0, max_moves: 2 }
+    }
+}
+
+/// One planned shard migration off the hottest chip. The destination is
+/// chosen once per pass ([`Rebalancer::pick_chips`]); execution may
+/// still skip a move when the destination lacks rows or the tenant's
+/// quota would be exceeded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) struct Move {
+    pub tenant: usize,
+    pub layer: usize,
+    pub filter: usize,
+}
+
+/// The rebalance clock + chip chooser. The engine coordinator owns one
+/// and executes the moves it plans (it has the worker channels and the
+/// allocators; this type deliberately has neither).
+pub(crate) struct Rebalancer {
+    pub cfg: RebalanceConfig,
+    /// Per-chip wear at the last rebalance (or engine start).
+    pub last: Vec<WearLedger>,
+    /// Passes that migrated at least one shard.
+    pub rebalances: u64,
+    pub shards_moved: u64,
+}
+
+impl Rebalancer {
+    pub fn new(cfg: RebalanceConfig, initial: Vec<WearLedger>) -> Rebalancer {
+        Rebalancer { cfg, last: initial, rebalances: 0, shards_moved: 0 }
+    }
+
+    /// Is a periodic pass due after `batches_served` chip batches?
+    pub fn due(&self, batches_served: u64) -> bool {
+        self.cfg.every_batches > 0
+            && batches_served > 0
+            && batches_served % self.cfg.every_batches == 0
+    }
+
+    /// Choose `(hottest source, least-worn destination)` from the wear
+    /// accrued since the last pass. Returns `None` when nothing is hot
+    /// (unless `force`) or when no other chip has free rows.
+    pub fn pick_chips(
+        &self,
+        now: &[WearLedger],
+        rows_free: &[usize],
+        force: bool,
+    ) -> Option<(usize, usize)> {
+        debug_assert_eq!(now.len(), self.last.len());
+        let (src, hottest) = now
+            .iter()
+            .zip(&self.last)
+            .map(|(n, l)| n.delta(l).wl_activations)
+            .enumerate()
+            .max_by_key(|&(i, d)| (d, usize::MAX - i))?;
+        if hottest == 0 && !force {
+            return None; // idle window: nothing to level
+        }
+        let dst = (0..now.len())
+            .filter(|&c| c != src && rows_free[c] > 0)
+            .min_by_key(|&c| (now[c].write_pulses, c))?;
+        Some((src, dst))
+    }
+}
+
+/// One tenant's per-shard dispatch heat: `heat[layer][filter]` counts
+/// the activation windows that shard has served.
+pub(crate) type ShardHeat = Vec<Vec<u64>>;
+
+/// The hottest shards currently living on `src`, across every tenant,
+/// hottest first, at most `max_moves`. Heat is the per-shard dispatch
+/// count the coordinator maintains (`heat[tenant][layer][filter]`).
+pub(crate) fn plan_moves(
+    placements: &[Placement],
+    heat: &[ShardHeat],
+    src: usize,
+    max_moves: usize,
+) -> Vec<Move> {
+    let mut candidates: Vec<(u64, Move)> = Vec::new();
+    for (t, placement) in placements.iter().enumerate() {
+        for (l, layer) in placement.shards.iter().enumerate() {
+            for (f, loc) in layer.iter().enumerate() {
+                if let Some(loc) = loc {
+                    if loc.chip == src {
+                        candidates.push((heat[t][l][f], Move { tenant: t, layer: l, filter: f }));
+                    }
+                }
+            }
+        }
+    }
+    // hottest first; ties in stable (tenant, layer, filter) order
+    candidates.sort_by(|a, b| b.0.cmp(&a.0));
+    candidates.truncate(max_moves);
+    candidates.into_iter().map(|(_, mv)| mv).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::mapping::RowSpan;
+    use crate::serve::placement::ShardLoc;
+
+    fn wear(wp: u64, wl: u64) -> WearLedger {
+        WearLedger { write_pulses: wp, programmed_cells: 0, wl_activations: wl }
+    }
+
+    fn loc(chip: usize, rows: usize) -> Option<ShardLoc> {
+        Some(ShardLoc {
+            chip,
+            span: RowSpan { slots: (0..rows).map(|r| (0, r)).collect(), tail_width: 4, len: 4 },
+        })
+    }
+
+    #[test]
+    fn picks_hottest_source_and_least_worn_destination() {
+        let rb = Rebalancer::new(
+            RebalanceConfig { every_batches: 4, max_moves: 2 },
+            vec![wear(100, 10), wear(900, 10), wear(500, 10)],
+        );
+        // chip 0 served the window; chip 1 is tired, chip 2 fresh-ish
+        let now = [wear(100, 500), wear(900, 11), wear(500, 12)];
+        let free = [10, 10, 10];
+        assert_eq!(rb.pick_chips(&now, &free, false), Some((0, 2)));
+        // a full destination is skipped
+        assert_eq!(rb.pick_chips(&now, &[10, 10, 0], false), Some((0, 1)));
+        // idle window: only a forced pass migrates
+        let idle = [wear(100, 10), wear(900, 10), wear(500, 10)];
+        assert_eq!(rb.pick_chips(&idle, &free, false), None);
+        assert!(rb.pick_chips(&idle, &free, true).is_some());
+        // clock: due on multiples of every_batches only
+        assert!(!rb.due(0));
+        assert!(!rb.due(3));
+        assert!(rb.due(4));
+        assert!(rb.due(8));
+    }
+
+    #[test]
+    fn plans_hottest_shards_on_source_only() {
+        // tenant 0: two shards on chip 0, one on chip 1; tenant 1: one on chip 0
+        let p0 = Placement {
+            shards: vec![vec![loc(0, 1), loc(1, 1)], vec![loc(0, 2), None]],
+            rows_used: vec![3, 1],
+            stuck_retries: 0,
+        };
+        let p1 = Placement {
+            shards: vec![vec![loc(0, 1)]],
+            rows_used: vec![1, 0],
+            stuck_retries: 0,
+        };
+        let heat = vec![vec![vec![5, 9], vec![7, 0]], vec![vec![100]]];
+        let moves = plan_moves(&[p0, p1], &heat, 0, 2);
+        assert_eq!(
+            moves,
+            vec![
+                Move { tenant: 1, layer: 0, filter: 0 }, // heat 100
+                Move { tenant: 0, layer: 1, filter: 0 }, // heat 7 (shard on chip 0)
+            ]
+        );
+        // pruned (None) and off-source shards never appear
+        let all = plan_moves(&[plan_clone(), plan_clone()], &heat_uniform(), 1, 10);
+        assert!(all.iter().all(|m| m.filter == 1));
+    }
+
+    fn plan_clone() -> Placement {
+        Placement {
+            shards: vec![vec![loc(0, 1), loc(1, 1)]],
+            rows_used: vec![1, 1],
+            stuck_retries: 0,
+        }
+    }
+
+    fn heat_uniform() -> Vec<Vec<Vec<u64>>> {
+        vec![vec![vec![1, 1]], vec![vec![1, 1]]]
+    }
+}

@@ -1,0 +1,108 @@
+//! Tenant registry: the named models a multi-tenant pool serves
+//! concurrently, each with its own admission queue bound and an
+//! optional chip-row quota.
+//!
+//! The paper's point is that one reconfigurable fabric serves *both*
+//! headline workloads; a [`TenantConfig`] is how a workload claims its
+//! slice — the quota bounds the rows its live shards may occupy across
+//! the pool, enforced at placement time
+//! ([`crate::serve::placement::place_with`]) and re-checked by the
+//! rebalancer before every migration, so one tenant's growth can never
+//! evict another's shards.
+
+use anyhow::{anyhow, Result};
+
+use crate::serve::model::ModelBundle;
+
+/// Index of a registered tenant — the handle submits route by.
+pub type TenantId = usize;
+
+/// One tenant: a named model plus its resource bounds.
+#[derive(Clone, Debug)]
+pub struct TenantConfig {
+    /// Unique tenant name (the submit-side lookup key).
+    pub name: String,
+    pub model: ModelBundle,
+    /// Max pool rows this tenant's live shards may occupy, `None` for
+    /// unlimited (first come, first served against pool capacity).
+    pub row_quota: Option<usize>,
+    /// Bound on this tenant's admitted-but-unbatched requests.
+    pub queue_depth: usize,
+}
+
+impl TenantConfig {
+    pub fn new(name: impl Into<String>, model: impl Into<ModelBundle>) -> TenantConfig {
+        TenantConfig {
+            name: name.into(),
+            model: model.into(),
+            row_quota: None,
+            queue_depth: 256,
+        }
+    }
+
+    pub fn with_row_quota(mut self, rows: usize) -> TenantConfig {
+        self.row_quota = Some(rows);
+        self
+    }
+
+    pub fn with_queue_depth(mut self, depth: usize) -> TenantConfig {
+        self.queue_depth = depth;
+        self
+    }
+}
+
+/// Registry-level sanity: at least one tenant, unique names, positive
+/// queue depths, and every model structurally valid — checked once at
+/// engine start so a malformed registration fails fast.
+pub fn validate_tenants(tenants: &[TenantConfig]) -> Result<()> {
+    if tenants.is_empty() {
+        return Err(anyhow!("the engine needs at least one tenant"));
+    }
+    for (i, t) in tenants.iter().enumerate() {
+        if t.name.is_empty() {
+            return Err(anyhow!("tenant {i} has an empty name"));
+        }
+        if t.queue_depth == 0 {
+            return Err(anyhow!("tenant {:?}: queue_depth must be positive", t.name));
+        }
+        if tenants[..i].iter().any(|u| u.name == t.name) {
+            return Err(anyhow!("duplicate tenant name {:?}", t.name));
+        }
+        t.model
+            .validate()
+            .map_err(|e| anyhow!("tenant {:?}: {e}", t.name))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mnist(seed: u64) -> ModelBundle {
+        ModelBundle::synthetic_mnist([2, 2, 2], 0.0, seed)
+    }
+
+    #[test]
+    fn builder_defaults_and_knobs() {
+        let t = TenantConfig::new("mnist", mnist(1));
+        assert_eq!(t.name, "mnist");
+        assert_eq!(t.row_quota, None);
+        assert_eq!(t.queue_depth, 256);
+        let t = t.with_row_quota(64).with_queue_depth(8);
+        assert_eq!(t.row_quota, Some(64));
+        assert_eq!(t.queue_depth, 8);
+    }
+
+    #[test]
+    fn registry_rejects_duplicates_and_empties() {
+        assert!(validate_tenants(&[]).is_err());
+        let a = TenantConfig::new("a", mnist(2));
+        let dup = vec![a.clone(), TenantConfig::new("a", mnist(3))];
+        let err = validate_tenants(&dup).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        let zero_depth = vec![a.clone().with_queue_depth(0)];
+        assert!(validate_tenants(&zero_depth).is_err());
+        assert!(validate_tenants(&[a]).is_ok());
+    }
+}

@@ -69,8 +69,23 @@
 //! * Placement prefers chips with the fewest lifetime
 //!   [`crate::chip::WearLedger::write_pulses`] and routes around tiles
 //!   whose stuck cells defeat the ECC spare budget.
+//!
+//! # Multi-tenancy
+//!
+//! The diagram above is the single-model [`Server`]. The multi-tenant
+//! front end is [`engine::Engine`]: one pool registers N named
+//! [`ModelBundle`]s concurrently (per-tenant chip-row quotas,
+//! [`TenantConfig`]), admission is an event loop of per-tenant bounded
+//! queues drained deficit-round-robin ([`engine::admission`]), repeated
+//! inputs replay from a bit-exact result cache ([`engine::cache`]), and
+//! placement adapts to live wear deltas — every K batches the hottest
+//! shards migrate to the least-worn chip with the pool drained, so
+//! logits stay bit-exact mid-migration ([`engine::rebalance`]). Both
+//! front ends share one batch executor and numeric contract; see the
+//! [`engine`] docs for the comparison table.
 
 pub mod batcher;
+pub mod engine;
 pub mod model;
 pub mod placement;
 pub mod pointnet_model;
@@ -79,9 +94,14 @@ pub mod scheduler;
 pub mod stats;
 
 pub use batcher::{BatcherConfig, Request, Response};
+pub use engine::admission::AdmissionConfig;
+pub use engine::cache::{CacheConfig, ResultCache};
+pub use engine::rebalance::RebalanceConfig;
+pub use engine::tenant::{TenantConfig, TenantId};
+pub use engine::{Engine, EngineConfig};
 pub use model::{ConvLayer, MnistBundle, ModelBundle, PlacementLayer, ShardPayload};
-pub use placement::{place, Placement, ShardLoc};
+pub use placement::{place, place_with, Placement, ShardLoc};
 pub use pointnet_model::{max_over_groups, PointNetBundle, PointwiseLayer, POINTWISE_LAYERS};
-pub use pool::{ChipPool, PoolConfig};
+pub use pool::{ChipPool, PoolConfig, WearSnapshot};
 pub use scheduler::{Server, ServerConfig};
-pub use stats::{ServeReport, ServeStats};
+pub use stats::{EngineReport, LatencyHistogram, ServeReport, ServeStats, TenantStats};

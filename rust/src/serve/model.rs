@@ -173,6 +173,24 @@ impl ModelBundle {
         }
     }
 
+    /// The stored payload of one filter (`None` if pruned) — what the
+    /// engine's rebalancer re-programs on the target chip when it
+    /// migrates a shard ([`crate::serve::engine::rebalance`]). The
+    /// payload is byte-identical to what initial placement stored, so a
+    /// migrated shard's dots stay bit-exact.
+    pub fn shard_payload(&self, layer: usize, filter: usize) -> Option<ShardPayload<'_>> {
+        match self {
+            ModelBundle::Mnist(m) => {
+                let l = &m.conv[layer];
+                l.live[filter].then(|| ShardPayload::Binary(l.bits[filter].as_slice()))
+            }
+            ModelBundle::PointNet(p) => {
+                let l = &p.layers[layer];
+                l.live[filter].then(|| ShardPayload::Int8(l.w_q[filter].as_slice()))
+            }
+        }
+    }
+
     /// The layers/filters/payloads view the wear-aware placer consumes.
     pub fn placement_layers(&self) -> Vec<PlacementLayer<'_>> {
         match self {

@@ -54,6 +54,17 @@ impl Placement {
             .sum()
     }
 
+    /// Array rows currently occupied by live shards (excludes rows
+    /// retired by stuck-tile retries or vacated by migration) — the
+    /// quantity tenant row quotas are enforced against.
+    pub fn rows_live(&self) -> usize {
+        self.shards
+            .iter()
+            .flat_map(|layer| layer.iter().flatten())
+            .map(|loc| loc.span.slots.len())
+            .sum()
+    }
+
     /// Chips hosting at least one shard.
     pub fn chips_touched(&self) -> usize {
         let mut used: Vec<bool> = vec![false; self.rows_used.len()];
@@ -70,31 +81,67 @@ impl Placement {
 /// Fails if some filter fits on no chip (capacity or unrecoverable
 /// faults); on success every live filter is on exactly one chip.
 pub fn place(model: &ModelBundle, pool: &mut ChipPool) -> Result<Placement> {
-    let n = pool.len();
-    if n == 0 {
-        return Err(anyhow!("placement needs a non-empty pool"));
-    }
     let mut allocs: Vec<RowAllocator> =
         pool.chips().iter().map(RowAllocator::for_chip).collect();
+    place_with(model, pool, &mut allocs, None)
+}
+
+/// Multi-tenant placement: place `model` onto `pool` through a set of
+/// **shared** row allocators (one per chip), so several models can be
+/// placed onto one pool in sequence — each sees only the rows its
+/// predecessors left free. `row_quota`, when set, bounds the rows this
+/// model's live shards may occupy across the whole pool (enforced here
+/// at placement time and again by the rebalancer at migration time).
+///
+/// The single-model [`place`] is this with fresh allocators and no quota.
+pub fn place_with(
+    model: &ModelBundle,
+    pool: &mut ChipPool,
+    allocs: &mut [RowAllocator],
+    row_quota: Option<usize>,
+) -> Result<Placement> {
+    let n = pool.len();
+    if n == 0 || allocs.len() != n {
+        return Err(anyhow!("placement needs a non-empty pool with one allocator per chip"));
+    }
     let per_row = allocs[0].data_cols;
-    let capacity = n * pool.rows_per_chip();
+    let free: usize = allocs.iter().map(|a| a.rows_free()).sum();
     let required = model.rows_required(per_row);
-    if required > capacity {
+    if required > free {
         return Err(anyhow!(
-            "model needs {required} rows but the {n}-chip pool offers {capacity}; \
-             prune harder or grow the pool"
+            "model needs {required} rows but the {n}-chip pool has {free} free; \
+             prune harder, grow the pool, or evict a tenant"
         ));
+    }
+    if let Some(quota) = row_quota {
+        if required > quota {
+            return Err(anyhow!(
+                "model needs {required} rows but its tenant row quota is {quota}"
+            ));
+        }
     }
     let mut shards = Vec::with_capacity(model.n_layers());
     let mut stuck_retries = 0usize;
+    let mut rows_used = vec![0usize; n];
+    let mut quota_rows = 0usize;
     for layer in model.placement_layers() {
         let cells = layer.cells;
+        let need = cells.div_ceil(per_row);
         let mut layer_shards: Vec<Option<ShardLoc>> = Vec::with_capacity(layer.shards.len());
         for (f, payload) in layer.shards.iter().enumerate() {
             let Some(payload) = payload else {
                 layer_shards.push(None);
                 continue;
             };
+            if let Some(quota) = row_quota {
+                if quota_rows + need > quota {
+                    return Err(anyhow!(
+                        "tenant row quota {quota} exhausted at layer {} filter {f} \
+                         ({quota_rows} rows already live)",
+                        layer.name
+                    ));
+                }
+            }
             // wear-aware candidate order (recomputed per filter: wear
             // accrued by this very placement run feeds back immediately)
             let mut order: Vec<usize> = (0..n).collect();
@@ -110,6 +157,7 @@ pub fn place(model: &ModelBundle, pool: &mut ChipPool) -> Result<Placement> {
                 let Some(span) = allocs[c].alloc(cells) else {
                     continue; // chip full
                 };
+                rows_used[c] += span.slots.len();
                 let chip = &mut pool.chips_mut()[c];
                 let failures = match *payload {
                     ShardPayload::Binary(bits) => store_bits(chip, &span, bits),
@@ -129,11 +177,11 @@ pub fn place(model: &ModelBundle, pool: &mut ChipPool) -> Result<Placement> {
                     layer.name
                 ));
             };
+            quota_rows += loc.span.slots.len();
             layer_shards.push(Some(loc));
         }
         shards.push(layer_shards);
     }
-    let rows_used = allocs.iter().map(|a| a.capacity_rows() - a.rows_free()).collect();
     Ok(Placement { shards, rows_used, stuck_retries })
 }
 
@@ -254,6 +302,53 @@ mod tests {
                 assert_eq!(&got, &layer.bits[f]);
             }
         }
+    }
+
+    #[test]
+    fn shared_allocators_host_two_models_disjointly() {
+        // two tenants placed in sequence through the same allocators:
+        // every shard row is owned by exactly one tenant
+        let mnist: ModelBundle = MnistBundle::synthetic([3, 4, 3], 0.0, 61).into();
+        let pointnet: ModelBundle = tiny_pointnet(0.0, 62).into();
+        let mut pool = small_pool(3, 63);
+        let mut allocs: Vec<_> =
+            pool.chips().iter().map(crate::cim::mapping::RowAllocator::for_chip).collect();
+        let pa = place_with(&mnist, &mut pool, &mut allocs, None).unwrap();
+        let pb = place_with(&pointnet, &mut pool, &mut allocs, None).unwrap();
+        assert_eq!(pa.live_shards(), mnist.live_filters());
+        assert_eq!(pb.live_shards(), pointnet.live_filters());
+        // no (chip, block, row) slot is shared between the two tenants
+        let slots = |p: &Placement| -> Vec<(usize, usize, usize)> {
+            p.shards
+                .iter()
+                .flat_map(|l| l.iter().flatten())
+                .flat_map(|loc| {
+                    loc.span.slots.iter().map(move |&(b, r)| (loc.chip, b, r))
+                })
+                .collect()
+        };
+        let a_slots = slots(&pa);
+        for s in slots(&pb) {
+            assert!(!a_slots.contains(&s), "row {s:?} double-booked across tenants");
+        }
+        assert_eq!(pa.rows_live(), a_slots.len());
+    }
+
+    #[test]
+    fn row_quota_is_enforced_at_placement() {
+        let model: ModelBundle = MnistBundle::synthetic([4, 4, 4], 0.0, 64).into();
+        let mut pool = small_pool(2, 65);
+        let mut allocs: Vec<_> =
+            pool.chips().iter().map(crate::cim::mapping::RowAllocator::for_chip).collect();
+        let err = place_with(&model, &mut pool, &mut allocs, Some(3)).unwrap_err();
+        assert!(err.to_string().contains("quota"), "{err}");
+        // a generous quota places normally and stays within bound
+        let mut pool = small_pool(2, 66);
+        let mut allocs: Vec<_> =
+            pool.chips().iter().map(crate::cim::mapping::RowAllocator::for_chip).collect();
+        let p = place_with(&model, &mut pool, &mut allocs, Some(64)).unwrap();
+        assert!(p.rows_live() <= 64);
+        assert_eq!(p.live_shards(), model.live_filters());
     }
 
     #[test]

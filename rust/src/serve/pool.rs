@@ -24,6 +24,40 @@ impl Default for PoolConfig {
     }
 }
 
+/// A point-in-time copy of every pool member's lifetime [`WearLedger`]
+/// — the rebalancer's input ([`crate::serve::engine::rebalance`]).
+/// Snapshots of the same pool are monotone non-decreasing over time
+/// (wear is lifetime state, never reset), so the per-chip
+/// [`WearSnapshot::delta`] against an earlier snapshot is always
+/// well-defined and measures the wear accrued in between.
+#[derive(Clone, Debug)]
+pub struct WearSnapshot {
+    /// One ledger per pool chip, in pool order.
+    pub per_chip: Vec<WearLedger>,
+}
+
+impl WearSnapshot {
+    /// Per-chip wear accrued since `earlier` (saturating per counter).
+    pub fn delta(&self, earlier: &WearSnapshot) -> Vec<WearLedger> {
+        assert_eq!(self.per_chip.len(), earlier.per_chip.len(), "snapshot pool size");
+        self.per_chip
+            .iter()
+            .zip(&earlier.per_chip)
+            .map(|(now, then)| now.delta(then))
+            .collect()
+    }
+
+    /// True when no counter of any chip went backwards since `earlier`.
+    pub fn is_monotone_since(&self, earlier: &WearSnapshot) -> bool {
+        self.per_chip.len() == earlier.per_chip.len()
+            && self
+                .per_chip
+                .iter()
+                .zip(&earlier.per_chip)
+                .all(|(now, then)| now.is_monotone_since(then))
+    }
+}
+
 /// A pool of formed chips.
 pub struct ChipPool {
     chips: Vec<Chip>,
@@ -83,6 +117,14 @@ impl ChipPool {
         self.chips.iter().map(|c| c.wear.clone()).collect()
     }
 
+    /// Point-in-time [`WearSnapshot`] of the whole pool. Successive
+    /// snapshots are monotone non-decreasing per chip, so their
+    /// [`WearSnapshot::delta`] is the wear a serving window accrued —
+    /// the signal the engine's rebalancer migrates shards on.
+    pub fn wear_snapshot(&self) -> WearSnapshot {
+        WearSnapshot { per_chip: self.wear() }
+    }
+
     /// Total energy currently on the pool's ledgers (pJ).
     pub fn energy_pj(&self) -> f64 {
         self.chips.iter().map(|c| c.energy_breakdown().total_pj()).sum()
@@ -114,6 +156,39 @@ mod tests {
         assert!(pool.rows_per_chip() > 0);
         // forming wear is on the ledgers
         assert!(pool.wear().iter().all(|w| w.write_pulses > 0));
+    }
+
+    #[test]
+    fn wear_snapshots_are_monotone_across_batches() {
+        use crate::cim::mapping::{segment_widths, store_bits, RowAllocator};
+        use crate::cim::vmm;
+
+        let cfg = PoolConfig { chips: 2, chip: ChipConfig::small_test(), seed: 9 };
+        let mut pool = ChipPool::new(&cfg);
+        // shard a small filter onto chip 0 (placement wear)
+        let mut alloc = RowAllocator::for_chip(&pool.chips()[0]);
+        let bits: Vec<bool> = (0..9).map(|i| i % 2 == 0).collect();
+        let span = alloc.alloc(bits.len()).unwrap();
+        let mut snap = pool.wear_snapshot();
+        assert_eq!(store_bits(&mut pool.chips_mut()[0], &span, &bits), 0);
+        // serve a few "batches" of dot products; every batch moves the
+        // snapshot forward and never backwards, on every chip
+        let widths = segment_widths(bits.len(), alloc.data_cols);
+        for batch in 0..4 {
+            let flat: Vec<u8> = (0..2 * bits.len()).map(|i| (i % 7) as u8).collect();
+            let pw = vmm::pack_windows(&flat, &widths);
+            let dots = vmm::binary_dots_batched(&mut pool.chips_mut()[0], &span, &pw);
+            assert_eq!(dots.len(), 2);
+            let next = pool.wear_snapshot();
+            assert!(
+                next.is_monotone_since(&snap),
+                "batch {batch}: wear went backwards"
+            );
+            let delta = next.delta(&snap);
+            assert!(delta[0].wl_activations > 0, "batch {batch}: chip 0 served rows");
+            assert_eq!(delta[1].wl_activations, 0, "chip 1 is idle");
+            snap = next;
+        }
     }
 
     #[test]

@@ -21,6 +21,12 @@
 //! [`ModelBundle::reference_logits`] bit for bit, for any pool size,
 //! batch size, or thread interleaving — chip dots are integer-exact and
 //! every f32 step is shared with the reference implementation.
+//!
+//! The layer pipeline itself lives in the tenant-agnostic executor
+//! (`serve::engine::exec`), shared with the multi-tenant
+//! [`crate::serve::engine::Engine`]; this module contributes the
+//! single-model front end: the blocking admission queue, the static
+//! worker-per-chip fan-out, and the legacy `Server` API.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
@@ -31,15 +37,13 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::chip::Chip;
-use crate::cim::mapping::{segment_widths, RowSpan};
+use crate::cim::mapping::RowSpan;
 use crate::cim::vmm;
-use crate::nn::pointnet::group_cloud;
-use crate::nn::quant;
 
 use super::batcher::{Batcher, BatcherConfig, Request, Response};
-use super::model::{fc_logits, im2col_u8, maxpool2_flat, scale_mac, MnistBundle, ModelBundle};
+use super::engine::exec::{run_batch, Dispatch, LayerWindows};
+use super::model::ModelBundle;
 use super::placement::{self, Placement};
-use super::pointnet_model::PointNetBundle;
 use super::pool::{ChipPool, PoolConfig};
 use super::stats::{ServeReport, ServeStats};
 
@@ -48,14 +52,6 @@ use super::stats::{ServeReport, ServeStats};
 pub struct ServerConfig {
     pub pool: PoolConfig,
     pub batcher: BatcherConfig,
-}
-
-/// One batch's packed activation windows for one layer — the payload a
-/// job fans out to every chip holding shards of that layer.
-#[derive(Clone)]
-enum LayerWindows {
-    Binary(Arc<vmm::PackedWindows>),
-    Int8(Arc<vmm::PackedWindowsI8>),
 }
 
 /// A layer's worth of work for one chip: compute dots of its shards
@@ -221,159 +217,39 @@ impl Drop for Server {
     }
 }
 
-/// Fan a layer's packed windows out to every chip holding shards of it
-/// and fold each (filter, dots) pair into the caller's output buffer as
+/// The [`Server`]'s chip fan-out: deliver a layer's packed windows to
+/// every worker whose static shard table has filters in that layer and
+/// fold each (filter, dots) pair into the executor's output buffer as
 /// it arrives — no worker's result is buffered beyond its own
 /// [`JobResult`], so peak transient memory stays independent of pool
 /// size.
-fn dispatch(
-    job_txs: &[Sender<Job>],
-    shard_counts: &[Vec<usize>],
-    res_rx: &Receiver<JobResult>,
-    layer: usize,
-    windows: LayerWindows,
-    mut on_dots: impl FnMut(usize, Vec<i64>),
-) {
-    let mut expected = 0usize;
-    for (ci, jtx) in job_txs.iter().enumerate() {
-        if shard_counts[ci][layer] == 0 {
-            continue;
-        }
-        jtx.send(Job { layer, windows: windows.clone() }).expect("worker hung up");
-        expected += 1;
-    }
-    for _ in 0..expected {
-        for (f, dots) in res_rx.recv().expect("worker died mid-batch").dots {
-            on_dots(f, dots);
-        }
-    }
+struct WorkerFanout<'a> {
+    job_txs: &'a [Sender<Job>],
+    shard_counts: &'a [Vec<usize>],
+    res_rx: &'a Receiver<JobResult>,
 }
 
-/// One batch through the binary MNIST path: per-layer u8 quantization,
-/// shared im2col packing, chip dots, host scale/bias/ReLU/pool, FC head.
-/// Returns per-request logits.
-fn serve_mnist_batch(
-    m: &MnistBundle,
-    batch: &[Request],
-    data_cols: usize,
-    job_txs: &[Sender<Job>],
-    shard_counts: &[Vec<usize>],
-    res_rx: &Receiver<JobResult>,
-) -> Vec<Vec<f32>> {
-    let b = batch.len();
-    // per-image activation maps, channel-major; layer 0 input = image
-    let mut maps: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
-    let mut c = 1usize;
-    let mut hw = m.input_hw;
-    for (l, layer) in m.conv.iter().enumerate() {
-        debug_assert_eq!(layer.in_c, c);
-        let cells = layer.kernel_cells();
-        // quantize each image, im2col, and pack all windows together
-        // (one shared packing serves every filter of the layer; the
-        // im2col buffers concatenate directly into window-major order)
-        let mut scales = Vec::with_capacity(b);
-        let mut flat_windows: Vec<u8> = Vec::with_capacity(b * hw * hw * cells);
-        let (mut oh, mut ow) = (hw, hw);
-        for map in &maps {
-            let (q, s) = quant::quantize_activations_u8(map);
-            scales.push(s);
-            let (flat, oh2, ow2) = im2col_u8(&q, c, hw, hw, layer.ksize, 1);
-            oh = oh2;
-            ow = ow2;
-            flat_windows.extend_from_slice(&flat);
-        }
-        let n_pos = oh * ow;
-        let widths = segment_widths(cells, data_cols);
-        let pw = Arc::new(vmm::pack_windows(&flat_windows, &widths));
-        // fan in: integer dots -> scaled activations, folded as they land
-        let mut y = vec![0.0f32; b * layer.out_c * n_pos];
-        dispatch(job_txs, shard_counts, res_rx, l, LayerWindows::Binary(pw), |f, dvec| {
-            debug_assert_eq!(dvec.len(), b * n_pos);
-            for (bi, &scale) in scales.iter().enumerate() {
-                let src = &dvec[bi * n_pos..(bi + 1) * n_pos];
-                let dst_base = bi * layer.out_c * n_pos + f * n_pos;
-                for (p, &dot) in src.iter().enumerate() {
-                    y[dst_base + p] =
-                        scale_mac(layer.alpha[f], scale, dot, layer.bias[f]).max(0.0);
-                }
+impl Dispatch for WorkerFanout<'_> {
+    fn dispatch(
+        &mut self,
+        layer: usize,
+        windows: LayerWindows,
+        on_dots: &mut dyn FnMut(usize, Vec<i64>),
+    ) {
+        let mut expected = 0usize;
+        for (ci, jtx) in self.job_txs.iter().enumerate() {
+            if self.shard_counts[ci][layer] == 0 {
+                continue;
             }
-        });
-        // pool + advance to the next layer's input maps
-        maps = (0..b)
-            .map(|bi| {
-                let map = &y[bi * layer.out_c * n_pos..(bi + 1) * layer.out_c * n_pos];
-                if layer.pool {
-                    maxpool2_flat(map, layer.out_c, oh, ow)
-                } else {
-                    map.to_vec()
-                }
-            })
-            .collect();
-        hw = if layer.pool { oh / 2 } else { oh };
-        c = layer.out_c;
-    }
-    maps.iter()
-        .map(|map| {
-            debug_assert_eq!(map.len(), m.fc_in);
-            fc_logits(map, &m.fc_w, &m.fc_b, m.fc_in, m.n_classes)
-        })
-        .collect()
-}
-
-/// One batch through the INT8 PointNet path: host grouping, per-layer i8
-/// quantization, offset-encoded packing, chip dots, host
-/// scale/bias/ReLU + set-abstraction pool/concat seams, dense head.
-/// Returns per-request logits.
-fn serve_pointnet_batch(
-    p: &PointNetBundle,
-    batch: &[Request],
-    data_cols: usize,
-    job_txs: &[Sender<Job>],
-    shard_counts: &[Vec<usize>],
-    res_rx: &Receiver<JobResult>,
-) -> Vec<Vec<f32>> {
-    let b = batch.len();
-    // grouping geometry is parameter-free: computed once per request on
-    // the host, identically to the software reference
-    let groups: Vec<_> = batch.iter().map(|r| group_cloud(&r.input, &p.grouping)).collect();
-    let mut xs: Vec<Vec<f32>> = groups.iter().map(|g| p.sa1_input(g)).collect();
-    for (l, layer) in p.layers.iter().enumerate() {
-        let n_points = p.points_in_stage(PointNetBundle::stage_of(l));
-        // quantize each cloud's map and pack all windows together (a
-        // point's feature row is one window; one shared packing serves
-        // every channel of the layer)
-        let mut scales = Vec::with_capacity(b);
-        let mut flat: Vec<i8> = Vec::with_capacity(b * n_points * layer.in_c);
-        for x in &xs {
-            debug_assert_eq!(x.len(), n_points * layer.in_c);
-            let (q, s) = quant::quantize_activations_i8(x);
-            scales.push(s);
-            flat.extend_from_slice(&q);
+            jtx.send(Job { layer, windows: windows.clone() }).expect("worker hung up");
+            expected += 1;
         }
-        let widths = segment_widths(4 * layer.in_c, data_cols);
-        let pw = Arc::new(vmm::pack_windows_i8(&flat, &widths));
-        // fan in: integer dots -> scaled activations, point-major,
-        // folded as they land
-        let mut ys: Vec<Vec<f32>> = (0..b).map(|_| vec![0.0f32; n_points * layer.out_c]).collect();
-        dispatch(job_txs, shard_counts, res_rx, l, LayerWindows::Int8(pw), |f, dvec| {
-            debug_assert_eq!(dvec.len(), b * n_points);
-            for (bi, &scale) in scales.iter().enumerate() {
-                let y = &mut ys[bi];
-                for pnt in 0..n_points {
-                    y[pnt * layer.out_c + f] =
-                        scale_mac(layer.w_scale[f], scale, dvec[bi * n_points + pnt], layer.bias[f])
-                            .max(0.0);
-                }
+        for _ in 0..expected {
+            for (f, dots) in self.res_rx.recv().expect("worker died mid-batch").dots {
+                on_dots(f, dots);
             }
-        });
-        // pool/concat seams, shared with the reference implementation
-        xs = ys
-            .into_iter()
-            .zip(&groups)
-            .map(|(y, g)| p.advance(l, g, y))
-            .collect();
+        }
     }
-    xs.iter().map(|x| p.head_logits(x)).collect()
 }
 
 fn coordinator_loop(
@@ -419,14 +295,10 @@ fn coordinator_loop(
 
     while let Some(batch) = batcher.next_batch() {
         let b = batch.len();
-        let logits = match &model {
-            ModelBundle::Mnist(m) => {
-                serve_mnist_batch(m, &batch, data_cols, &job_txs, &shard_counts, &res_rx)
-            }
-            ModelBundle::PointNet(p) => {
-                serve_pointnet_batch(p, &batch, data_cols, &job_txs, &shard_counts, &res_rx)
-            }
-        };
+        let inputs: Vec<&[f32]> = batch.iter().map(|r| r.input.as_slice()).collect();
+        let mut fanout =
+            WorkerFanout { job_txs: &job_txs, shard_counts: &shard_counts, res_rx: &res_rx };
+        let logits = run_batch(&model, &inputs, data_cols, &mut fanout);
         // replies, in admission order (per-client FIFO)
         for (req, lg) in batch.iter().zip(logits) {
             let latency = req.submitted.elapsed();
@@ -461,6 +333,7 @@ mod tests {
     use crate::chip::ChipConfig;
     use crate::nn::data::{mnist, modelnet};
     use crate::nn::pointnet::GroupingConfig;
+    use crate::serve::pointnet_model::PointNetBundle;
     use std::time::Duration;
 
     fn small_server(model: ModelBundle, chips: usize, seed: u64) -> Server {

@@ -80,6 +80,135 @@ impl ServeStats {
     }
 }
 
+/// Fixed-footprint log2-bucketed latency histogram: bucket 0 counts
+/// sub-microsecond latencies, bucket `i >= 1` counts `[2^(i-1), 2^i)`
+/// microseconds, and everything above ~2.3 minutes saturates the last
+/// bucket. Constant memory per tenant regardless of traffic — the
+/// multi-tenant engine keeps one per tenant where the single-model
+/// [`ServeStats`] stores every latency exactly.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyHistogram {
+    buckets: [u64; 28],
+    count: u64,
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, latency: std::time::Duration) {
+        let us = latency.as_micros() as u64;
+        let bucket = (64 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[bucket] += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Conservative (upper-bound) p-th percentile estimate in
+    /// milliseconds: the upper edge of the bucket holding the p-th
+    /// sample. 0 for an empty histogram; monotone in `p`.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0 * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return (1u64 << i) as f64 / 1e3;
+            }
+        }
+        (1u64 << (self.buckets.len() - 1)) as f64 / 1e3
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.percentile_ms(50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.percentile_ms(99.0)
+    }
+}
+
+/// One tenant's counters in a multi-tenant engine run. The invariant
+/// the admission plane guarantees: every attempted request lands in
+/// exactly one of `answered` or `dropped` — nothing is silently lost.
+#[derive(Clone, Debug, Default)]
+pub struct TenantStats {
+    pub name: String,
+    /// Requests answered with logits (computed or cache-replayed).
+    pub answered: u64,
+    /// Requests shed at this tenant's bounded admission queue.
+    pub dropped: u64,
+    /// Answers replayed from the bit-exact result cache.
+    pub cache_hits: u64,
+    /// Batches of this tenant that reached the chip pipeline (fully
+    /// cache-served batches don't count).
+    pub chip_batches: u64,
+    pub latency: LatencyHistogram,
+}
+
+/// Everything a multi-tenant engine run reports at shutdown.
+#[derive(Clone, Debug)]
+pub struct EngineReport {
+    /// Per-tenant counters, in registration order.
+    pub tenants: Vec<TenantStats>,
+    /// Wall-clock of the serving loop (spawn to shutdown), seconds.
+    pub wall_s: f64,
+    /// Chip energy spent serving + migrating (pJ, initial placement
+    /// excluded).
+    pub energy_pj: f64,
+    /// Per-chip lifetime wear at shutdown.
+    pub wear: Vec<WearLedger>,
+    /// Rows consumed per chip over the whole run (placement, stuck
+    /// retries, and migrations — vacated rows stay retired).
+    pub rows_used: Vec<usize>,
+    /// Store attempts abandoned to stuck tiles (placement + migration).
+    pub stuck_retries: usize,
+    /// Rebalance passes that migrated at least one shard.
+    pub rebalances: u64,
+    /// Shards migrated across all rebalance passes.
+    pub shards_moved: u64,
+}
+
+impl EngineReport {
+    pub fn answered(&self) -> u64 {
+        self.tenants.iter().map(|t| t.answered).sum()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.tenants.iter().map(|t| t.dropped).sum()
+    }
+
+    pub fn cache_hits(&self) -> u64 {
+        self.tenants.iter().map(|t| t.cache_hits).sum()
+    }
+
+    pub fn inferences_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.answered() as f64 / self.wall_s
+        }
+    }
+
+    /// Energy per *computed* answer; cache hits spend no chip energy and
+    /// are excluded from the denominator.
+    pub fn nj_per_computed_inference(&self) -> f64 {
+        let computed = self.answered() - self.cache_hits();
+        if computed == 0 {
+            0.0
+        } else {
+            self.energy_pj * 1e-3 / computed as f64
+        }
+    }
+}
+
 /// Everything a serving run reports back at shutdown.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -112,6 +241,49 @@ mod tests {
         assert!((s.mean_batch() - 4.0).abs() < 1e-9);
         // 5 uJ / 100 inferences = 50 nJ each
         assert!((s.nj_per_inference() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_monotone_upper_bounds() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.p99_ms(), 0.0, "empty histogram reports zero");
+        for us in [1u64, 3, 7, 100, 100, 800, 5_000, 60_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 8);
+        assert!(h.p50_ms() <= h.percentile_ms(95.0));
+        assert!(h.percentile_ms(95.0) <= h.p99_ms());
+        // upper-bound property: the p100 bucket edge is >= the true max
+        assert!(h.percentile_ms(100.0) >= 60.0);
+        // and the p50 edge is >= the true median (100us = 0.1ms)
+        assert!(h.p50_ms() >= 0.1);
+        assert_eq!(h.buckets().iter().sum::<u64>(), 8);
+    }
+
+    #[test]
+    fn engine_report_aggregates_tenants() {
+        let mut a = TenantStats { name: "a".into(), ..TenantStats::default() };
+        a.answered = 90;
+        a.cache_hits = 40;
+        let mut b = TenantStats { name: "b".into(), ..TenantStats::default() };
+        b.answered = 10;
+        b.dropped = 5;
+        let r = EngineReport {
+            tenants: vec![a, b],
+            wall_s: 2.0,
+            energy_pj: 6_000_000.0,
+            wear: vec![],
+            rows_used: vec![],
+            stuck_retries: 0,
+            rebalances: 1,
+            shards_moved: 2,
+        };
+        assert_eq!(r.answered(), 100);
+        assert_eq!(r.dropped(), 5);
+        assert_eq!(r.cache_hits(), 40);
+        assert!((r.inferences_per_sec() - 50.0).abs() < 1e-9);
+        // 6 uJ over 60 computed answers = 100 nJ each
+        assert!((r.nj_per_computed_inference() - 100.0).abs() < 1e-9);
     }
 
     #[test]
