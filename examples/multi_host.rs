@@ -1,0 +1,163 @@
+//! Multi-host serving demo: TWO worker daemons ("hosts"), each owning
+//! its own 2-chip pool behind a TCP loopback socket, form one hedged
+//! replica group serving a pruned binary-MNIST tenant.
+//!
+//! What this exercises end to end:
+//!
+//! * placement over the wire — every shard payload is programmed onto
+//!   BOTH hosts through `Backend::program` RPCs (byte-identical copies,
+//!   each host allocating its own spans);
+//! * hedged dispatch — each layer's packed windows go to one host; if
+//!   it straggles past the deadline the same request (same id, same
+//!   shard epoch) duplicates to the replica, the first bit-exact reply
+//!   wins, and the loser is discarded by identity;
+//! * a live wear rebalance on a remote host mid-run — shards migrate
+//!   between the host's own chips over the transport, the tenant's
+//!   shard epoch advances, and the answers stay bit-exact.
+//!
+//! Every response is asserted against `ModelBundle::reference_logits`:
+//! zero wrong logits, by construction — the chips are digital, so a
+//! fleet of them has no analogue drift to reconcile.
+//!
+//! Run with: `cargo run --release --example multi_host`
+
+use std::time::Duration;
+
+use rram_cim::bench::print_table;
+use rram_cim::chip::ChipConfig;
+use rram_cim::nn::data::mnist;
+use rram_cim::serve::transport::{Backend, Host, HostConfig, RemoteBackend, ShardRouter};
+use rram_cim::serve::{
+    AdmissionConfig, CacheConfig, Engine, EngineConfig, HedgeConfig, ModelBundle, PoolConfig,
+    RebalanceConfig, RouterConfig, TenantConfig,
+};
+
+fn main() -> anyhow::Result<()> {
+    rram_cim::util::logging::init();
+
+    // --- two loopback hosts, each with its own pool ---
+    let pool = |seed| PoolConfig { chips: 2, chip: ChipConfig::default(), seed };
+    let host_a = Host::spawn(HostConfig { pool: pool(0xa11ce) })?;
+    let host_b = Host::spawn(HostConfig { pool: pool(0xb0b) })?;
+    println!("host A on {}, host B on {}", host_a.addr(), host_b.addr());
+
+    // --- one hedged replica group over both hosts ---
+    // an aggressive fixed deadline so the demo visibly fires hedges;
+    // production leaves `after: None` and lets the latency histogram
+    // derive it (quantile(0.99) x factor)
+    let router_cfg = RouterConfig {
+        hedge: HedgeConfig { after: Some(Duration::from_micros(500)), ..HedgeConfig::default() },
+        ..RouterConfig::default()
+    };
+    let backends: Vec<Box<dyn Backend>> = vec![
+        Box::new(RemoteBackend::connect(host_a.addr())?),
+        Box::new(RemoteBackend::connect(host_b.addr())?),
+    ];
+    let router = ShardRouter::replicated(backends, router_cfg)?;
+
+    // --- one pruned tenant, placed onto BOTH hosts over the wire ---
+    let model = ModelBundle::synthetic_mnist([32, 64, 32], 0.35, 42);
+    println!(
+        "tenant mnist: {}/{} live filters, {} rows per host @ 30 data cols",
+        model.live_filters(),
+        model.total_filters(),
+        model.rows_required(30)
+    );
+    let cfg = EngineConfig {
+        pool: PoolConfig::default(), // ignored: the fleet is the router's
+        admission: AdmissionConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            quantum: 8,
+        },
+        cache: CacheConfig { capacity: 0 }, // every request hits silicon
+        rebalance: RebalanceConfig { every_batches: 4, max_moves: 2 },
+    };
+    let engine =
+        Engine::start_with_router(vec![TenantConfig::new("mnist", model.clone())], router, &cfg)?;
+
+    // --- traffic: distinct images, every answer checked bit-exactly ---
+    let images = mnist::generate(24, 0x5eed);
+    let references: Vec<Vec<f32>> =
+        (0..images.len()).map(|i| model.reference_logits(images.sample(i))).collect();
+    let mut exact = 0u64;
+    let mut pending = Vec::new();
+    for round in 0..3 {
+        if round == 1 {
+            // mid-run: force a wear rebalance — it lands on whichever
+            // REMOTE host ran hottest, over plain program RPCs
+            engine.force_rebalance();
+        }
+        for i in 0..images.len() {
+            pending.push((i, engine.submit(0, images.sample(i).to_vec())));
+        }
+        for (i, rx) in pending.drain(..) {
+            let resp = rx.recv()?;
+            assert_eq!(
+                resp.logits, references[i],
+                "image {i}: a hedged two-host fleet must stay bit-exact"
+            );
+            exact += 1;
+        }
+    }
+    let report = engine.shutdown();
+
+    // --- the receipts ---
+    let t = &report.tenants[0];
+    println!(
+        "\n{exact} answered responses, every one bit-exact; \
+         {} rebalance passes migrated {} shards on the remote hosts",
+        report.rebalances, report.shards_moved
+    );
+    print_table(
+        "multi_host: hedged 2-host replica group, one pruned MNIST tenant",
+        &["answered", "chip batches", "p50 ms", "p99 ms", "rows/host A+B"],
+        &[vec![
+            t.answered.to_string(),
+            t.chip_batches.to_string(),
+            format!("{:.2}", t.latency.p50_ms()),
+            format!("{:.2}", t.latency.p99_ms()),
+            format!("{:?}", report.rows_used),
+        ]],
+    );
+    let s = &report.transport;
+    print_table(
+        "multi_host: transport counters",
+        &["dispatches", "hedges fired", "hedge wins", "stale discarded", "spills"],
+        &[vec![
+            s.dispatches.to_string(),
+            s.hedges_fired.to_string(),
+            s.hedge_wins.to_string(),
+            s.stale_discarded.to_string(),
+            s.spills.to_string(),
+        ]],
+    );
+    let wear_rows: Vec<Vec<String>> = report
+        .wear
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            vec![
+                format!("host {} chip {}", if i < 2 { "A" } else { "B" }, i % 2),
+                w.write_pulses.to_string(),
+                w.wl_activations.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "multi_host: per-chip lifetime wear across the fleet",
+        &["chip", "write pulses", "WL activations"],
+        &wear_rows,
+    );
+
+    assert_eq!(t.answered, exact, "nothing silently lost");
+    assert_eq!(report.dropped(), 0, "blocking submits never drop");
+    assert!(
+        report.shards_moved >= 1,
+        "the forced pass must migrate at least one shard on a remote host"
+    );
+    host_a.join();
+    host_b.join();
+    println!("\nmulti-host serving OK: two hosts, one hedged tenant, zero wrong logits");
+    Ok(())
+}

@@ -13,9 +13,11 @@ use std::time::Duration;
 use rram_cim::bench::print_table;
 use rram_cim::nn::data::{mnist, modelnet, Dataset};
 use rram_cim::nn::pointnet::GroupingConfig;
+use rram_cim::serve::transport::{Backend, Host, HostConfig, LocalBackend, RemoteBackend};
 use rram_cim::serve::{
-    AdmissionConfig, BatcherConfig, CacheConfig, Engine, EngineConfig, ModelBundle,
-    PointNetBundle, PoolConfig, RebalanceConfig, Server, ServerConfig, TenantConfig,
+    AdmissionConfig, BatcherConfig, CacheConfig, Engine, EngineConfig, HedgeConfig, ModelBundle,
+    PointNetBundle, PoolConfig, RebalanceConfig, RouterConfig, Server, ServerConfig, ShardRouter,
+    TenantConfig,
 };
 
 const MNIST_REQUESTS: usize = 96;
@@ -195,6 +197,94 @@ fn main() {
 
     // --- mixed tenancy: both pruned models on ONE 4-chip pool ---
     mixed_tenancy_table(&pruned, &pn_pruned, &images, &clouds);
+
+    // --- transport: the same tenant over local / remote / hedged ---
+    transport_table(&pruned, &images);
+}
+
+/// The pruned MNIST tenant served through three fleets of identical
+/// silicon: an in-process 4-chip pool, the same pool behind a
+/// TCP-loopback host daemon (the framing + syscall overhead made
+/// visible), and a hedged 2-host replica group (2 + 2 chips, hedge
+/// deadline derived from the latency histogram) — so the transport tax
+/// and the hedge win both land in the perf trajectory.
+fn transport_table(model: &ModelBundle, images: &Dataset) {
+    let cfg = EngineConfig {
+        pool: PoolConfig::default(),
+        admission: AdmissionConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+            quantum: 32,
+        },
+        cache: CacheConfig { capacity: 0 }, // every request hits silicon
+        rebalance: RebalanceConfig::default(),
+    };
+    let pool = |chips: usize, seed: u64| PoolConfig { chips, seed, ..PoolConfig::default() };
+    let mut rows = Vec::new();
+    for which in ["local x4", "remote x4", "hedged 2x2"] {
+        let mut hosts = Vec::new();
+        let router = match which {
+            "local x4" => ShardRouter::single(Box::new(
+                LocalBackend::from_pool_config(&pool(4, 0x7a0)).expect("pool"),
+            )),
+            "remote x4" => {
+                let host = Host::spawn(HostConfig { pool: pool(4, 0x7a1) }).expect("host");
+                let backend = RemoteBackend::connect(host.addr()).expect("connect");
+                hosts.push(host);
+                ShardRouter::single(Box::new(backend))
+            }
+            _ => {
+                let mut backends: Vec<Box<dyn Backend>> = Vec::new();
+                for seed in [0x7a2u64, 0x7a3] {
+                    let host = Host::spawn(HostConfig { pool: pool(2, seed) }).expect("host");
+                    backends.push(Box::new(RemoteBackend::connect(host.addr()).expect("connect")));
+                    hosts.push(host);
+                }
+                // derive the hedge deadline from the live histogram
+                // after a short warmup, so tail stragglers get hedged
+                let hedge = HedgeConfig { min_samples: 4, factor: 3.0, ..HedgeConfig::default() };
+                ShardRouter::replicated(backends, RouterConfig { hedge, ..RouterConfig::default() })
+            }
+        }
+        .expect("router");
+        let engine = Engine::start_with_router(
+            vec![TenantConfig::new("mnist", model.clone())],
+            router,
+            &cfg,
+        )
+        .expect("the pruned tenant fits every fleet");
+        let mut pending = Vec::with_capacity(MNIST_REQUESTS);
+        for i in 0..MNIST_REQUESTS {
+            pending.push(engine.submit(0, images.sample(i % images.len()).to_vec()));
+        }
+        for rx in pending {
+            rx.recv().expect("transport fleet answered every request");
+        }
+        let report = engine.shutdown();
+        assert_eq!(report.answered() as usize, MNIST_REQUESTS, "lost requests");
+        let t = &report.tenants[0];
+        let s = &report.transport;
+        rows.push(vec![
+            which.to_string(),
+            format!("{:.1}", report.inferences_per_sec()),
+            format!("{:.2}", t.latency.p50_ms()),
+            format!("{:.2}", t.latency.p99_ms()),
+            s.dispatches.to_string(),
+            s.hedges_fired.to_string(),
+            s.hedge_wins.to_string(),
+        ]);
+        for host in hosts {
+            host.join();
+        }
+    }
+    print_table(
+        &format!(
+            "serve: transport overhead + hedging, pruned MNIST tenant \
+             ({MNIST_REQUESTS} requests per fleet)"
+        ),
+        &["fleet", "inf/s", "p50 ms", "p99 ms", "dispatches", "hedges", "hedge wins"],
+        &rows,
+    );
 }
 
 /// One 4-chip pool serving the pruned MNIST and PointNet models

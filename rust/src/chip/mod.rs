@@ -104,7 +104,7 @@ impl ChipConfig {
 /// energy/timing ledgers these are **never reset** by
 /// [`Chip::reset_ledgers`]: the serve placer ranks chips by them to
 /// spread programming wear across a pool ([`crate::serve::placement`]).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct WearLedger {
     /// Write-verify pulses applied over the chip's lifetime (forming +
     /// programming) — the quantity RRAM endurance is specified against.

@@ -15,6 +15,16 @@
 //! pipeline), and requests leave in admission order per tenant — FIFO
 //! is preserved across coalescing rounds exactly as in the legacy
 //! batcher.
+//!
+//! This plane is the only place a request may be *dropped*: once a
+//! batch leaves here, the transport layer below
+//! ([`crate::serve::transport`]) spills a dispatch off a full backend
+//! queue to its replica and hedges stragglers, but never sheds — so
+//! `answered + dropped` partitions every tenant's attempts no matter
+//! how many hosts or replicas serve it. (The legacy single-model
+//! server's replica-set analogue is
+//! [`crate::serve::Server::try_submit_spill`], which counts a request
+//! every replica rejected exactly once.)
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};

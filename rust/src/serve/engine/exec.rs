@@ -1,15 +1,20 @@
 //! The tenant-agnostic batch executor: one batch of inputs through one
-//! [`ModelBundle`]'s layer pipeline, with the chip fan-out abstracted
-//! behind [`Dispatch`].
+//! [`ModelBundle`]'s layer pipeline, with the chip fan-out behind the
+//! public transport seam ([`crate::serve::transport::Backend`], driven
+//! through a [`ShardRouter`]).
 //!
 //! Both serve front ends route through these functions — the legacy
-//! single-model [`crate::serve::Server`] (worker-per-chip channels keyed
-//! by a static shard table) and the multi-tenant
-//! [`crate::serve::engine::Engine`] (stateless workers fed the shard
-//! list per job, so the coordinator can re-shard between batches). The
-//! numeric contract is owned here: integer chip dots plus f32 host
-//! stages shared with [`ModelBundle::reference_logits`], so any
-//! dispatcher that returns bit-exact dots serves bit-exact logits.
+//! single-model [`crate::serve::Server`] (one local backend, a static
+//! route) and the multi-tenant [`crate::serve::engine::Engine`]
+//! (per-tenant routes rebuilt on every migration, possibly spanning
+//! remote hosts and replica groups). Per layer, the executor packs the
+//! batch's activation windows once, dispatches them with the layer's
+//! [`TenantRoute`] entry, and folds the returned integer dot vectors —
+//! it neither knows nor cares how many backends, hosts, or replicas
+//! were involved. The numeric contract is owned here: integer chip dots
+//! plus f32 host stages shared with [`ModelBundle::reference_logits`],
+//! so any transport that returns bit-exact dots serves bit-exact
+//! logits.
 
 use std::sync::Arc;
 
@@ -19,41 +24,25 @@ use crate::nn::pointnet::group_cloud;
 use crate::nn::quant;
 use crate::serve::model::{fc_logits, im2col_u8, maxpool2_flat, scale_mac, MnistBundle, ModelBundle};
 use crate::serve::pointnet_model::PointNetBundle;
-
-/// One batch's packed activation windows for one layer — the payload a
-/// dispatcher fans out to every chip holding shards of that layer.
-#[derive(Clone)]
-pub(crate) enum LayerWindows {
-    Binary(Arc<vmm::PackedWindows>),
-    Int8(Arc<vmm::PackedWindowsI8>),
-}
-
-/// The chip fan-out seam: deliver one layer's packed windows to every
-/// chip holding shards of that layer and feed each shard's integer dot
-/// vector back through `on_dots(filter, dots)` as it arrives. The
-/// executor neither knows nor cares how many chips are involved or
-/// where the shards live — that is the dispatcher's (and hence the
-/// rebalancer's) business.
-pub(crate) trait Dispatch {
-    fn dispatch(
-        &mut self,
-        layer: usize,
-        windows: LayerWindows,
-        on_dots: &mut dyn FnMut(usize, Vec<i64>),
-    );
-}
+use crate::serve::transport::{Result, ShardRouter, TenantRoute, WireWindows};
 
 /// One batch through the whole model: routes to the path-specific
-/// pipeline. Returns per-input logits, in input order.
+/// pipeline. Returns per-input logits, in input order; `layer_windows`
+/// accumulates the windows dispatched per layer (the rebalancer's
+/// shard-heat signal).
 pub(crate) fn run_batch(
     model: &ModelBundle,
     inputs: &[&[f32]],
     data_cols: usize,
-    d: &mut dyn Dispatch,
-) -> Vec<Vec<f32>> {
+    router: &mut ShardRouter,
+    route: &TenantRoute,
+    layer_windows: &mut [u64],
+) -> Result<Vec<Vec<f32>>> {
     match model {
-        ModelBundle::Mnist(m) => run_mnist_batch(m, inputs, data_cols, d),
-        ModelBundle::PointNet(p) => run_pointnet_batch(p, inputs, data_cols, d),
+        ModelBundle::Mnist(m) => run_mnist_batch(m, inputs, data_cols, router, route, layer_windows),
+        ModelBundle::PointNet(p) => {
+            run_pointnet_batch(p, inputs, data_cols, router, route, layer_windows)
+        }
     }
 }
 
@@ -63,8 +52,10 @@ pub(crate) fn run_mnist_batch(
     m: &MnistBundle,
     inputs: &[&[f32]],
     data_cols: usize,
-    d: &mut dyn Dispatch,
-) -> Vec<Vec<f32>> {
+    router: &mut ShardRouter,
+    route: &TenantRoute,
+    layer_windows: &mut [u64],
+) -> Result<Vec<Vec<f32>>> {
     let b = inputs.len();
     // per-image activation maps, channel-major; layer 0 input = image
     let mut maps: Vec<Vec<f32>> = inputs.iter().map(|x| x.to_vec()).collect();
@@ -90,19 +81,21 @@ pub(crate) fn run_mnist_batch(
         let n_pos = oh * ow;
         let widths = segment_widths(cells, data_cols);
         let pw = Arc::new(vmm::pack_windows(&flat_windows, &widths));
-        // fan in: integer dots -> scaled activations, folded as they land
+        layer_windows[l] += pw.n_windows as u64;
+        // fan out through the transport seam, fold the dots as returned
+        let dots = router.dispatch_layer(route, l, WireWindows::Binary(pw))?;
         let mut y = vec![0.0f32; b * layer.out_c * n_pos];
-        d.dispatch(l, LayerWindows::Binary(pw), &mut |f, dvec| {
+        for (f, dvec) in dots {
+            let f = f as usize;
             debug_assert_eq!(dvec.len(), b * n_pos);
             for (bi, &scale) in scales.iter().enumerate() {
                 let src = &dvec[bi * n_pos..(bi + 1) * n_pos];
                 let dst_base = bi * layer.out_c * n_pos + f * n_pos;
                 for (p, &dot) in src.iter().enumerate() {
-                    y[dst_base + p] =
-                        scale_mac(layer.alpha[f], scale, dot, layer.bias[f]).max(0.0);
+                    y[dst_base + p] = scale_mac(layer.alpha[f], scale, dot, layer.bias[f]).max(0.0);
                 }
             }
-        });
+        }
         // pool + advance to the next layer's input maps
         maps = (0..b)
             .map(|bi| {
@@ -117,12 +110,13 @@ pub(crate) fn run_mnist_batch(
         hw = if layer.pool { oh / 2 } else { oh };
         c = layer.out_c;
     }
-    maps.iter()
+    Ok(maps
+        .iter()
         .map(|map| {
             debug_assert_eq!(map.len(), m.fc_in);
             fc_logits(map, &m.fc_w, &m.fc_b, m.fc_in, m.n_classes)
         })
-        .collect()
+        .collect())
 }
 
 /// One batch through the INT8 PointNet path: host grouping, per-layer i8
@@ -132,8 +126,10 @@ pub(crate) fn run_pointnet_batch(
     p: &PointNetBundle,
     inputs: &[&[f32]],
     data_cols: usize,
-    d: &mut dyn Dispatch,
-) -> Vec<Vec<f32>> {
+    router: &mut ShardRouter,
+    route: &TenantRoute,
+    layer_windows: &mut [u64],
+) -> Result<Vec<Vec<f32>>> {
     let b = inputs.len();
     // grouping geometry is parameter-free: computed once per request on
     // the host, identically to the software reference
@@ -154,10 +150,12 @@ pub(crate) fn run_pointnet_batch(
         }
         let widths = segment_widths(4 * layer.in_c, data_cols);
         let pw = Arc::new(vmm::pack_windows_i8(&flat, &widths));
-        // fan in: integer dots -> scaled activations, point-major,
-        // folded as they land
+        layer_windows[l] += pw.n_windows as u64;
+        // fan out through the transport seam, fold point-major
+        let dots = router.dispatch_layer(route, l, WireWindows::Int8(pw))?;
         let mut ys: Vec<Vec<f32>> = (0..b).map(|_| vec![0.0f32; n_points * layer.out_c]).collect();
-        d.dispatch(l, LayerWindows::Int8(pw), &mut |f, dvec| {
+        for (f, dvec) in dots {
+            let f = f as usize;
             debug_assert_eq!(dvec.len(), b * n_points);
             for (bi, &scale) in scales.iter().enumerate() {
                 let y = &mut ys[bi];
@@ -167,7 +165,7 @@ pub(crate) fn run_pointnet_batch(
                             .max(0.0);
                 }
             }
-        });
+        }
         // pool/concat seams, shared with the reference implementation
         xs = ys
             .into_iter()
@@ -175,5 +173,5 @@ pub(crate) fn run_pointnet_batch(
             .map(|(y, g)| p.advance(l, g, y))
             .collect();
     }
-    xs.iter().map(|x| p.head_logits(x)).collect()
+    Ok(xs.iter().map(|x| p.head_logits(x)).collect())
 }

@@ -1,6 +1,9 @@
-//! The multi-tenant async serving engine: one chip pool, N named
+//! The multi-tenant async serving engine: one chip fleet, N named
 //! models, an event-loop admission plane, a bit-exact result cache, and
-//! live wear rebalancing.
+//! live wear rebalancing — with every chip interaction behind the
+//! public transport seam ([`crate::serve::transport`]), so the fleet
+//! may be a local pool, a TCP-loopback host daemon, several hosts with
+//! a tenant's layers split across them, or hedged replica groups.
 //!
 //! This subsystem replaces the single-bundle blocking front end for
 //! multi-workload deployments — the paper's "one reconfigurable fabric,
@@ -18,11 +21,12 @@
 //!  [cache]  content-keyed logits replay (bit-exact, per tenant)
 //!        │ misses only
 //!        ▼
-//!  [exec]   quantize → pack planes → fan out to stateless chip workers
-//!        │                     (shard list travels with each job, so
-//!        ▼                      the coordinator may re-shard any time)
-//!  [rebalance] every K batches: diff WearLedger snapshots, migrate the
-//!              hottest shards to the least-worn chip (drained pool, so
+//!  [exec]   quantize → pack planes → DispatchRequest per layer
+//!        │                   (ShardRouter: group split, replica choice,
+//!        ▼                    hedging, spillover — Backend::dispatch)
+//!  [rebalance] every K batches: diff WearLedger snapshots over the
+//!              transport, migrate the hottest shards to the least-worn
+//!              chip of their backend (drained fleet, epoch bump, so
 //!              logits stay bit-exact mid-migration), invalidate caches
 //! ```
 //!
@@ -32,7 +36,7 @@
 //! |---|---|---|
 //! | models per pool | 1 | N, each with a row quota |
 //! | admission | one blocking `sync_channel` | per-tenant bounded queues, DRR drain |
-//! | workers | static shard table per worker | stateless; shards travel with the job |
+//! | backends | one local pool | any [`crate::serve::transport::Backend`] fleet |
 //! | placement | fixed at start | migrates on live wear deltas |
 //! | repeated inputs | recomputed | replayed from the bit-exact cache |
 //!
@@ -40,9 +44,10 @@
 //! submodule) and therefore the numeric contract: every answer equals
 //! the tenant model's
 //! [`crate::serve::ModelBundle::reference_logits`] bit for bit — cache
-//! hit or miss, before or after any number of migrations, under stuck
-//! tile fault injection (property-tested in
-//! `tests/integration_stack.rs`).
+//! hit or miss, before or after any number of migrations, local or
+//! remote, hedged or not, under stuck tile fault injection
+//! (property-tested in `tests/integration_stack.rs` and
+//! `tests/transport_remote.rs`).
 
 pub mod admission;
 pub mod cache;
@@ -51,215 +56,71 @@ pub mod rebalance;
 pub mod tenant;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::chip::{Chip, WearLedger};
-use crate::cim::mapping::{store_bits, store_int8, RowAllocator, RowSpan};
-use crate::cim::vmm;
+use crate::chip::WearLedger;
 
 use super::batcher::{Request, Response};
-use super::model::{ModelBundle, ShardPayload};
-use super::placement::{self, Placement, ShardLoc};
-use super::pool::{ChipPool, PoolConfig};
+use super::model::ModelBundle;
 use super::stats::{EngineReport, TenantStats};
+use super::transport::{
+    LocalBackend, OwnedPayload, RouterPlacement, ShardRef, ShardRouter, TenantRoute,
+};
 
 use admission::{Admission, AdmissionConfig};
 use cache::{CacheConfig, ResultCache};
-use exec::{run_batch, Dispatch, LayerWindows};
+use exec::run_batch;
 use rebalance::{plan_moves, RebalanceConfig, Rebalancer, ShardHeat};
 use tenant::{TenantConfig, TenantId};
 
 /// Engine construction knobs. The defaults serve: 4-chip pool, 32-deep
 /// coalescing with DRR fairness, a 1024-entry cache per tenant, and
 /// rebalancing off (enable via [`RebalanceConfig::every_batches`]).
+/// `pool` describes the local backend [`Engine::start`] builds; it is
+/// ignored by [`Engine::start_with_router`], where the fleet is handed
+/// in ready-made.
 #[derive(Clone, Debug, Default)]
 pub struct EngineConfig {
-    pub pool: PoolConfig,
+    pub pool: super::pool::PoolConfig,
     pub admission: AdmissionConfig,
     pub cache: CacheConfig,
     pub rebalance: RebalanceConfig,
 }
 
-/// A shard's payload as the worker protocol carries it (owned: the
-/// coordinator keeps the bundles, workers only ever see copies).
-enum OwnedPayload {
-    Binary(Vec<bool>),
-    Int8(Vec<i8>),
-}
-
-impl From<ShardPayload<'_>> for OwnedPayload {
-    fn from(p: ShardPayload<'_>) -> Self {
-        match p {
-            ShardPayload::Binary(bits) => OwnedPayload::Binary(bits.to_vec()),
-            ShardPayload::Int8(ws) => OwnedPayload::Int8(ws.to_vec()),
-        }
-    }
-}
-
-/// One instruction to a (stateless) chip worker. Unlike the legacy
-/// scheduler's workers, engine workers hold **no shard table**: every
-/// dots job names the shards it wants, which is what lets the
-/// coordinator re-shard between batches without touching the workers.
-enum EngineJob {
-    /// Compute dots of the named shards against the shared windows.
-    Dots { shards: LayerShards, windows: LayerWindows },
-    /// Program a migrated shard's payload into a freshly allocated span.
-    Program { span: RowSpan, payload: OwnedPayload },
-    /// Report the chip's lifetime wear ledger.
-    Wear,
-}
-
-/// A worker's answer, tagged with its chip index by the send loop.
-enum EngineReply {
-    Dots(Vec<(usize, Vec<i64>)>),
-    Programmed { failures: usize },
-    Wear(WearLedger),
-}
-
-fn engine_worker(
-    idx: usize,
-    mut chip: Chip,
-    jobs: Receiver<EngineJob>,
-    results: Sender<(usize, EngineReply)>,
-) -> Chip {
-    while let Ok(job) = jobs.recv() {
-        let reply = match job {
-            EngineJob::Dots { shards, windows } => {
-                let mut dots = Vec::with_capacity(shards.len());
-                for (filter, span) in shards.iter() {
-                    let d = match &windows {
-                        LayerWindows::Binary(pw) => vmm::binary_dots_batched(&mut chip, span, pw),
-                        LayerWindows::Int8(pw) => vmm::int8_dots_batched(&mut chip, span, pw),
-                    };
-                    dots.push((*filter, d));
-                }
-                EngineReply::Dots(dots)
-            }
-            EngineJob::Program { span, payload } => {
-                let failures = match &payload {
-                    OwnedPayload::Binary(bits) => store_bits(&mut chip, &span, bits),
-                    OwnedPayload::Int8(ws) => store_int8(&mut chip, &span, ws),
-                };
-                EngineReply::Programmed { failures }
-            }
-            EngineJob::Wear => EngineReply::Wear(chip.wear.clone()),
-        };
-        if results.send((idx, reply)).is_err() {
-            break; // coordinator gone: shut down
-        }
-    }
-    chip
-}
-
-/// One (chip, layer) shard list, shared with the worker protocol by
-/// `Arc` so a per-batch job send costs one refcount bump, not a deep
-/// copy of every span.
-type LayerShards = Arc<Vec<(usize, RowSpan)>>;
-
-/// Per-tenant shard routing table: `[chip][layer] -> (filter, span)`.
-/// Rebuilt from the placement whenever a migration lands (fresh `Arc`s;
-/// in-flight jobs keep the old ones alive until done).
-type ChipLayerShards = Vec<Vec<LayerShards>>;
-
-fn shard_table(placement: &Placement, n_chips: usize, n_layers: usize) -> ChipLayerShards {
-    let mut table: Vec<Vec<Vec<(usize, RowSpan)>>> = vec![vec![Vec::new(); n_layers]; n_chips];
-    for (l, layer) in placement.shards.iter().enumerate() {
-        for (f, loc) in layer.iter().enumerate() {
-            if let Some(loc) = loc {
-                table[loc.chip][l].push((f, loc.span.clone()));
-            }
-        }
-    }
-    table
-        .into_iter()
-        .map(|layers| layers.into_iter().map(Arc::new).collect())
-        .collect()
-}
-
-/// The engine's chip fan-out: like the legacy scheduler's, but the
-/// shard list rides along with each job (stateless workers). Also
-/// meters the windows each layer dispatches — the per-shard heat the
-/// rebalancer ranks migrations by.
-struct EngineFanout<'a> {
-    job_txs: &'a [Sender<EngineJob>],
-    res_rx: &'a Receiver<(usize, EngineReply)>,
-    table: &'a ChipLayerShards,
-    /// Windows dispatched per layer during this batch (indexed by layer).
-    layer_windows: &'a mut [u64],
-}
-
-impl Dispatch for EngineFanout<'_> {
-    fn dispatch(
-        &mut self,
-        layer: usize,
-        windows: LayerWindows,
-        on_dots: &mut dyn FnMut(usize, Vec<i64>),
-    ) {
-        let n_windows = match &windows {
-            LayerWindows::Binary(pw) => pw.n_windows,
-            LayerWindows::Int8(pw) => pw.n_windows,
-        };
-        self.layer_windows[layer] += n_windows as u64;
-        let mut expected = 0usize;
-        for (ci, jtx) in self.job_txs.iter().enumerate() {
-            let shards = &self.table[ci][layer];
-            if shards.is_empty() {
-                continue;
-            }
-            jtx.send(EngineJob::Dots { shards: Arc::clone(shards), windows: windows.clone() })
-                .expect("engine worker hung up");
-            expected += 1;
-        }
-        for _ in 0..expected {
-            let (_, reply) = self.res_rx.recv().expect("engine worker died mid-batch");
-            match reply {
-                EngineReply::Dots(dots) => {
-                    for (f, d) in dots {
-                        on_dots(f, d);
-                    }
-                }
-                _ => unreachable!("only dots jobs are in flight during a batch"),
-            }
-        }
-    }
-}
-
-/// The single thread that owns all serving state: placements, routing
-/// tables, caches, allocators, heat counters, and the worker channels.
+/// The single thread that owns all serving state: placements, routes,
+/// caches, heat counters, and the router driving the backend fleet.
 /// Its single-threadedness is the drain-before-migrate invariant — a
-/// rebalance can only run at a batch boundary, when no job is in
-/// flight anywhere.
+/// rebalance can only run at a batch boundary, when no dispatch is in
+/// flight anywhere (a lost hedge duplicate may still be draining, but
+/// its reply is discarded by request id, never folded).
 struct Coordinator {
     admission: Admission,
     models: Vec<ModelBundle>,
     quotas: Vec<Option<usize>>,
-    placements: Vec<Placement>,
-    tables: Vec<ChipLayerShards>,
+    placements: Vec<RouterPlacement>,
+    /// Per-tenant routing view of the placement; rebuilt (epoch bumped)
+    /// whenever a migration lands.
+    routes: Vec<TenantRoute>,
     /// Per-shard dispatch heat `heat[tenant][layer][filter]` (windows
     /// computed), the rebalancer's shard-ranking signal.
     heat: Vec<ShardHeat>,
     caches: Vec<Arc<Mutex<ResultCache>>>,
     stats: Vec<TenantStats>,
-    allocs: Vec<RowAllocator>,
-    job_txs: Vec<Sender<EngineJob>>,
-    res_rx: Receiver<(usize, EngineReply)>,
-    handles: Vec<JoinHandle<Chip>>,
+    router: ShardRouter,
     data_cols: usize,
-    n_chips: usize,
     rebalancer: Rebalancer,
     force_rebalance: Arc<AtomicBool>,
     /// Batches that reached the chips (cache-only batches excluded).
     chip_batches_total: u64,
-    /// Last batch count a periodic pass ran at (so a quiet pool does
+    /// Last batch count a periodic pass ran at (so a quiet fleet does
     /// not re-run the pass every drained batch).
     last_pass_at: u64,
     stuck_retries: usize,
-    rows_used: Vec<usize>,
 }
 
 impl Coordinator {
@@ -300,15 +161,19 @@ impl Coordinator {
             let inputs: Vec<&[f32]> =
                 miss_idx.iter().map(|&i| batch[i].input.as_slice()).collect();
             let mut layer_windows = vec![0u64; self.models[t].n_layers()];
-            let logits = {
-                let mut fanout = EngineFanout {
-                    job_txs: &self.job_txs,
-                    res_rx: &self.res_rx,
-                    table: &self.tables[t],
-                    layer_windows: &mut layer_windows,
-                };
-                run_batch(&self.models[t], &inputs, self.data_cols, &mut fanout)
-            };
+            let logits = run_batch(
+                &self.models[t],
+                &inputs,
+                self.data_cols,
+                &mut self.router,
+                &self.routes[t],
+                &mut layer_windows,
+            )
+            // an unrecoverable fleet loss (the router already failed
+            // over to any replica) is crash-only by design: admitted
+            // requests must never be silently mis-answered, and
+            // reconnect/retry is the ROADMAP's next transport step
+            .expect("serving transport failed mid-batch");
             let mut cache = self.caches[t].lock().unwrap();
             for (&i, lg) in miss_idx.iter().zip(&logits) {
                 if let Some(key) = keys[i].take() {
@@ -321,8 +186,8 @@ impl Coordinator {
             // windows (within a layer all live filters do equal work;
             // across layers window counts differ by orders of magnitude,
             // which is what ranks migrations meaningfully)
-            for (l, layer) in self.placements[t].shards.iter().enumerate() {
-                for (f, loc) in layer.iter().enumerate() {
+            for (l, pl) in self.placements[t].layers.iter().enumerate() {
+                for (f, loc) in pl.shards[0].iter().enumerate() {
                     if loc.is_some() {
                         self.heat[t][l][f] += layer_windows[l];
                     }
@@ -343,36 +208,31 @@ impl Coordinator {
         self.stats[t].cache_hits += hits;
     }
 
-    /// Snapshot every chip's wear ledger. Runs at a batch boundary, so
-    /// the probes are the only jobs in flight.
-    fn collect_wear(&mut self) -> Vec<WearLedger> {
-        for jtx in &self.job_txs {
-            jtx.send(EngineJob::Wear).expect("engine worker hung up");
-        }
-        let mut out: Vec<Option<WearLedger>> = vec![None; self.n_chips];
-        for _ in 0..self.n_chips {
-            let (ci, reply) = self.res_rx.recv().expect("engine worker died in wear probe");
-            match reply {
-                EngineReply::Wear(w) => out[ci] = Some(w),
-                _ => unreachable!("only wear probes are in flight"),
-            }
-        }
-        out.into_iter().map(|w| w.expect("every chip reports wear")).collect()
-    }
-
-    /// One rebalance pass: diff wear snapshots, migrate up to
-    /// `max_moves` hottest shards off the hottest chip, invalidate every
-    /// tenant's cache if anything moved. See [`rebalance`] for the
+    /// One rebalance pass: snapshot every backend's wear over the
+    /// transport, migrate up to `max_moves` hottest shards off the
+    /// hottest chip (within its backend), invalidate every tenant's
+    /// cache if anything moved. See [`rebalance`] for the
     /// drain-before-migrate protocol.
     fn rebalance_pass(&mut self, force: bool) {
-        let wear = self.collect_wear();
-        let rows_free: Vec<usize> = self.allocs.iter().map(|a| a.rows_free()).collect();
+        let wears = self.router.wear_all().expect("transport failed in wear probe");
+        let now: Vec<Vec<WearLedger>> = wears.iter().map(|w| w.wear.clone()).collect();
+        let rows_free: Vec<Vec<usize>> = wears
+            .iter()
+            .map(|w| w.rows_free.iter().map(|&r| r as usize).collect())
+            .collect();
         let mut moved = 0u64;
-        if let Some((src, dst)) = self.rebalancer.pick_chips(&wear, &rows_free, force) {
-            let moves =
-                plan_moves(&self.placements, &self.heat, src, self.rebalancer.cfg.max_moves);
+        if let Some((member, src, dst)) = self.rebalancer.pick_chips(&now, &rows_free, force) {
+            let (group, local) = self.router.member_group(member);
+            let moves = plan_moves(
+                &self.placements,
+                &self.heat,
+                group,
+                local,
+                src,
+                self.rebalancer.cfg.max_moves,
+            );
             for mv in moves {
-                if self.try_migrate(&mv, dst) {
+                if self.try_migrate(&mv, member, group, local, dst) {
                     moved += 1;
                 }
             }
@@ -385,52 +245,51 @@ impl Coordinator {
             self.rebalancer.rebalances += 1;
             self.rebalancer.shards_moved += moved;
         }
-        self.rebalancer.last = wear;
+        self.rebalancer.last = now;
     }
 
-    /// Re-program one shard on `dst`. The placement flips only on a
-    /// clean store (`failures == 0`); a stuck tile retires the fresh
-    /// rows and the shard keeps serving from where it is.
-    fn try_migrate(&mut self, mv: &rebalance::Move, dst: usize) -> bool {
-        let old = self.placements[mv.tenant].shards[mv.layer][mv.filter]
+    /// Re-program one shard on `dst` of the same backend. The placement
+    /// flips — and the tenant's shard epoch advances — only on a clean
+    /// store (`failures == 0`); a stuck tile retires the fresh rows and
+    /// the shard keeps serving from where it is.
+    fn try_migrate(
+        &mut self,
+        mv: &rebalance::Move,
+        member: usize,
+        group: usize,
+        local: usize,
+        dst: usize,
+    ) -> bool {
+        let old = self.placements[mv.tenant].layers[mv.layer].shards[local][mv.filter]
             .clone()
             .expect("planned move targets a live shard");
         let cells = old.span.len;
-        let per_row = self.allocs[dst].data_cols;
-        let need = cells.div_ceil(per_row);
+        let need = cells.div_ceil(self.data_cols);
         if let Some(quota) = self.quotas[mv.tenant] {
-            let live = self.placements[mv.tenant].rows_live();
+            let live = self.placements[mv.tenant].rows_live_on(group, local);
             if live - old.span.slots.len() + need > quota {
                 return false; // the move would overdraw the tenant's quota
             }
         }
-        let Some(span) = self.allocs[dst].alloc(cells) else {
-            return false; // destination filled up within this pass
-        };
-        self.rows_used[dst] += span.slots.len();
         let payload: OwnedPayload = self.models[mv.tenant]
             .shard_payload(mv.layer, mv.filter)
             .expect("live shard has a payload")
             .into();
-        self.job_txs[dst]
-            .send(EngineJob::Program { span: span.clone(), payload })
-            .expect("engine worker hung up");
-        let (_, reply) = self.res_rx.recv().expect("engine worker died mid-migration");
-        let failures = match reply {
-            EngineReply::Programmed { failures } => failures,
-            _ => unreachable!("only the migration store is in flight"),
+        let reply = self
+            .router
+            .program(member, dst, payload)
+            .expect("transport failed mid-migration");
+        let Some(span) = reply.span else {
+            return false; // destination filled up within this pass
         };
-        if failures > 0 {
+        if reply.failures > 0 {
             self.stuck_retries += 1;
             return false;
         }
-        self.placements[mv.tenant].shards[mv.layer][mv.filter] =
-            Some(ShardLoc { chip: dst, span });
-        self.tables[mv.tenant] = shard_table(
-            &self.placements[mv.tenant],
-            self.n_chips,
-            self.models[mv.tenant].n_layers(),
-        );
+        self.placements[mv.tenant].layers[mv.layer].shards[local][mv.filter] =
+            Some(ShardRef { chip: dst as u32, filter: mv.filter as u32, span });
+        let epoch = self.routes[mv.tenant].epoch + 1;
+        self.routes[mv.tenant] = TenantRoute::from_placement(&self.placements[mv.tenant], epoch);
         true
     }
 
@@ -438,20 +297,21 @@ impl Coordinator {
         for (t, st) in self.stats.iter_mut().enumerate() {
             st.dropped = self.admission.dropped(t);
         }
-        drop(std::mem::take(&mut self.job_txs)); // workers: channel closed
-        let chips: Vec<Chip> = std::mem::take(&mut self.handles)
-            .into_iter()
-            .map(|h| h.join().expect("engine worker panicked"))
-            .collect();
+        let rows_used = self.router.rows_used_flat();
+        let finishes = self.router.finish().expect("transport failed at shutdown");
+        // read the counters only after finish(): draining the last lost
+        // hedge replies during shutdown still increments stale_discarded
+        let transport = self.router.stats();
         EngineReport {
             tenants: std::mem::take(&mut self.stats),
             wall_s: t_start.elapsed().as_secs_f64(),
-            energy_pj: chips.iter().map(|c| c.energy_breakdown().total_pj()).sum(),
-            wear: chips.iter().map(|c| c.wear.clone()).collect(),
-            rows_used: std::mem::take(&mut self.rows_used),
+            energy_pj: finishes.iter().map(|f| f.energy_pj).sum(),
+            wear: finishes.into_iter().flat_map(|f| f.wear).collect(),
+            rows_used,
             stuck_retries: self.stuck_retries,
             rebalances: self.rebalancer.rebalances,
             shards_moved: self.rebalancer.shards_moved,
+            transport,
         }
     }
 }
@@ -471,48 +331,59 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Fabricate the pool, place every tenant's model onto it in
-    /// registration order (shared allocators, per-tenant quotas), reset
-    /// the energy ledgers so serving measurements exclude initial
-    /// programming, and spawn the workers + coordinator.
+    /// Single-pool start: fabricate `cfg.pool` as one local backend and
+    /// serve through it — the zero-configuration shape. See
+    /// [`Engine::start_with_router`] for multi-host fleets.
     pub fn start(tenants: Vec<TenantConfig>, cfg: &EngineConfig) -> Result<Engine> {
+        let backend = LocalBackend::from_pool_config(&cfg.pool)?;
+        let router = ShardRouter::single(Box::new(backend))?;
+        Engine::start_with_router(tenants, router, cfg)
+    }
+
+    /// Serve through a ready-made [`ShardRouter`] fleet (local pools,
+    /// TCP hosts, replica groups — any [`crate::serve::transport::Backend`]
+    /// mix): place every tenant's model across the fleet in
+    /// registration order (every member of a layer's owning group gets
+    /// a byte-identical shard copy, per-member row quotas enforced),
+    /// reset the energy ledgers so serving measurements exclude initial
+    /// programming, and spawn the coordinator. `cfg.pool` is ignored —
+    /// the fleet is the router's.
+    pub fn start_with_router(
+        tenants: Vec<TenantConfig>,
+        mut router: ShardRouter,
+        cfg: &EngineConfig,
+    ) -> Result<Engine> {
         tenant::validate_tenants(&tenants)?;
-        let mut pool = ChipPool::new(&cfg.pool);
-        let n_chips = pool.len();
-        if n_chips == 0 {
-            return Err(anyhow!("engine needs a non-empty pool"));
-        }
-        let mut allocs: Vec<RowAllocator> =
-            pool.chips().iter().map(RowAllocator::for_chip).collect();
+        let data_cols = router.data_cols();
         let mut placements = Vec::with_capacity(tenants.len());
         let mut stuck_retries = 0usize;
-        let mut rows_used = vec![0usize; n_chips];
         for t in &tenants {
-            let p = placement::place_with(&t.model, &mut pool, &mut allocs, t.row_quota)
+            let p = router
+                .place(&t.model, t.row_quota)
                 .map_err(|e| anyhow!("tenant {:?}: {e}", t.name))?;
             stuck_retries += p.stuck_retries;
-            for (c, r) in p.rows_used.iter().enumerate() {
-                rows_used[c] += *r;
-            }
             placements.push(p);
         }
-        pool.reset_energy();
-        let data_cols = pool.chips()[0].cfg().data_cols();
-        let initial_wear = pool.wear();
+        router
+            .reset_energy_all()
+            .map_err(|e| anyhow!("transport failed after placement: {e}"))?;
+        let initial_wear: Vec<Vec<WearLedger>> = router
+            .wear_all()
+            .map_err(|e| anyhow!("transport failed in initial wear probe: {e}"))?
+            .into_iter()
+            .map(|w| w.wear)
+            .collect();
 
         let names: Vec<String> = tenants.iter().map(|t| t.name.clone()).collect();
         let input_lens: Vec<usize> = tenants.iter().map(|t| t.model.input_len()).collect();
         let quotas: Vec<Option<usize>> = tenants.iter().map(|t| t.row_quota).collect();
         let depths: Vec<usize> = tenants.iter().map(|t| t.queue_depth).collect();
         let models: Vec<ModelBundle> = tenants.into_iter().map(|t| t.model).collect();
-        let tables: Vec<ChipLayerShards> = placements
-            .iter()
-            .zip(&models)
-            .map(|(p, m)| shard_table(p, n_chips, m.n_layers()))
-            .collect();
+        let routes: Vec<TenantRoute> =
+            placements.iter().map(|p| TenantRoute::from_placement(p, 0)).collect();
         let heat: Vec<ShardHeat> = placements
             .iter()
-            .map(|p| p.shards.iter().map(|l| vec![0u64; l.len()]).collect())
+            .map(|p| p.layers.iter().map(|pl| vec![0u64; pl.shards[0].len()]).collect())
             .collect();
         let caches: Vec<Arc<Mutex<ResultCache>>> = models
             .iter()
@@ -525,38 +396,22 @@ impl Engine {
         let admission = Admission::new(cfg.admission.clone(), &depths);
         let force = Arc::new(AtomicBool::new(false));
 
-        let (res_tx, res_rx) = channel::<(usize, EngineReply)>();
-        let mut job_txs: Vec<Sender<EngineJob>> = Vec::with_capacity(n_chips);
-        let mut handles: Vec<JoinHandle<Chip>> = Vec::with_capacity(n_chips);
-        for (i, chip) in pool.into_chips().into_iter().enumerate() {
-            let (jtx, jrx) = channel::<EngineJob>();
-            let rtx = res_tx.clone();
-            handles.push(std::thread::spawn(move || engine_worker(i, chip, jrx, rtx)));
-            job_txs.push(jtx);
-        }
-        drop(res_tx);
-
         let coordinator = Coordinator {
             admission: admission.clone(),
             models,
             quotas,
             placements,
-            tables,
+            routes,
             heat,
             caches: caches.clone(),
             stats,
-            allocs,
-            job_txs,
-            res_rx,
-            handles,
+            router,
             data_cols,
-            n_chips,
             rebalancer: Rebalancer::new(cfg.rebalance.clone(), initial_wear),
             force_rebalance: Arc::clone(&force),
             chip_batches_total: 0,
             last_pass_at: u64::MAX,
             stuck_retries,
-            rows_used,
         };
         let handle = std::thread::spawn(move || coordinator.run());
         Ok(Engine {
@@ -669,6 +524,7 @@ mod tests {
     use crate::chip::ChipConfig;
     use crate::nn::data::{mnist, modelnet};
     use crate::nn::pointnet::GroupingConfig;
+    use crate::serve::pool::PoolConfig;
     use crate::serve::PointNetBundle;
     use std::time::Duration;
 
@@ -706,6 +562,7 @@ mod tests {
         assert_eq!(report.dropped(), 0);
         assert_eq!(report.wear.len(), 2);
         assert_eq!(report.rebalances, 0);
+        assert_eq!(report.transport.dispatches, 0);
     }
 
     #[test]
@@ -766,6 +623,7 @@ mod tests {
         assert_eq!(report.dropped(), 0);
         assert!(report.energy_pj > 0.0, "serving must spend chip energy");
         assert!(report.tenants[tm].latency.count() == 4);
+        assert!(report.transport.dispatches > 0, "batches flowed through the router");
     }
 
     #[test]

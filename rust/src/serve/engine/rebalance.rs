@@ -1,30 +1,38 @@
 //! Live wear rebalancing: every K batches the engine diffs per-chip
-//! [`WearLedger`] snapshots, finds the chip that absorbed the most
-//! word-line activity in the window, and migrates its hottest shards to
-//! the least-worn chip with free rows.
+//! [`WearLedger`] snapshots — fetched through the transport seam, so a
+//! chip behind a TCP host reports exactly like a local one — finds the
+//! chip that absorbed the most word-line activity in the window, and
+//! migrates its hottest shards to the least-worn chip *of the same
+//! backend* with free rows.
 //!
 //! # Protocol (drain before migrate)
 //!
-//! The engine's coordinator is the only thread that feeds the workers,
+//! The engine's coordinator is the only thread that feeds the router,
 //! and it runs batches to completion before looking at the rebalance
 //! clock — so when a rebalance fires there is **no in-flight compute
-//! anywhere in the pool**. Migration then is a plain re-program: the
-//! shard's payload (byte-identical to what initial placement stored,
-//! [`crate::serve::ModelBundle::shard_payload`]) is written to a fresh
-//! span on the target chip; only if every cell lands (`failures == 0`)
-//! does the placement table flip to the new location. A stuck tile on
-//! the target retires those rows and the shard simply stays put — at
-//! every instant exactly one complete, verified copy of each shard is
-//! addressable, so logits stay bit-exact through any number of
-//! migrations.
+//! anywhere in the fleet**. Migration then is a plain re-program RPC:
+//! the shard's payload (byte-identical to what initial placement
+//! stored, [`crate::serve::ModelBundle::shard_payload`]) is written to
+//! a fresh span on the target chip; only if every cell lands
+//! (`failures == 0`) does the placement flip and the tenant's shard
+//! epoch advance — a dispatch reply carrying the old epoch can never be
+//! folded into a batch. A stuck tile on the target retires those rows
+//! and the shard simply stays put — at every instant exactly one
+//! complete, verified copy of each shard is addressable per replica, so
+//! logits stay bit-exact through any number of migrations, local or
+//! remote.
 //!
-//! Vacated source rows are retired, not recycled (the row allocator is
+//! Migrations never cross a backend boundary: shards are
+//! weight-stationary within their host's pool (replicas hold their own
+//! copies already), so wear is leveled where the wear happened.
+//!
+//! Vacated source rows are retired, not recycled (row allocators are
 //! append-only, mirroring the stuck-tile policy): rebalancing trades
 //! spare capacity for wear-leveling, and stops when capacity or tenant
 //! quotas say so.
 
 use crate::chip::WearLedger;
-use crate::serve::placement::Placement;
+use crate::serve::transport::RouterPlacement;
 
 /// Rebalancer knobs.
 #[derive(Clone, Debug)]
@@ -42,10 +50,10 @@ impl Default for RebalanceConfig {
     }
 }
 
-/// One planned shard migration off the hottest chip. The destination is
-/// chosen once per pass ([`Rebalancer::pick_chips`]); execution may
-/// still skip a move when the destination lacks rows or the tenant's
-/// quota would be exceeded.
+/// One planned shard migration off the hottest chip. The member and
+/// destination are chosen once per pass ([`Rebalancer::pick_chips`]);
+/// execution may still skip a move when the destination lacks rows or
+/// the tenant's quota would be exceeded.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub(crate) struct Move {
     pub tenant: usize,
@@ -54,19 +62,20 @@ pub(crate) struct Move {
 }
 
 /// The rebalance clock + chip chooser. The engine coordinator owns one
-/// and executes the moves it plans (it has the worker channels and the
-/// allocators; this type deliberately has neither).
+/// and executes the moves it plans (it has the router and the
+/// placements; this type deliberately has neither). Wear state is kept
+/// per router member, per chip.
 pub(crate) struct Rebalancer {
     pub cfg: RebalanceConfig,
-    /// Per-chip wear at the last rebalance (or engine start).
-    pub last: Vec<WearLedger>,
+    /// Per-member per-chip wear at the last rebalance (or engine start).
+    pub last: Vec<Vec<WearLedger>>,
     /// Passes that migrated at least one shard.
     pub rebalances: u64,
     pub shards_moved: u64,
 }
 
 impl Rebalancer {
-    pub fn new(cfg: RebalanceConfig, initial: Vec<WearLedger>) -> Rebalancer {
+    pub fn new(cfg: RebalanceConfig, initial: Vec<Vec<WearLedger>>) -> Rebalancer {
         Rebalancer { cfg, last: initial, rebalances: 0, shards_moved: 0 }
     }
 
@@ -77,29 +86,35 @@ impl Rebalancer {
             && batches_served % self.cfg.every_batches == 0
     }
 
-    /// Choose `(hottest source, least-worn destination)` from the wear
-    /// accrued since the last pass. Returns `None` when nothing is hot
-    /// (unless `force`) or when no other chip has free rows.
+    /// Choose `(member, hottest source chip, least-worn destination
+    /// chip)` from the wear accrued since the last pass. Returns `None`
+    /// when nothing is hot (unless `force`) or when no other chip of
+    /// the hot member has free rows.
     pub fn pick_chips(
         &self,
-        now: &[WearLedger],
-        rows_free: &[usize],
+        now: &[Vec<WearLedger>],
+        rows_free: &[Vec<usize>],
         force: bool,
-    ) -> Option<(usize, usize)> {
+    ) -> Option<(usize, usize, usize)> {
         debug_assert_eq!(now.len(), self.last.len());
-        let (src, hottest) = now
-            .iter()
-            .zip(&self.last)
-            .map(|(n, l)| n.delta(l).wl_activations)
-            .enumerate()
-            .max_by_key(|&(i, d)| (d, usize::MAX - i))?;
+        let mut best: Option<(u64, usize, usize)> = None;
+        for (m, chips) in now.iter().enumerate() {
+            debug_assert_eq!(chips.len(), self.last[m].len());
+            for (c, w) in chips.iter().enumerate() {
+                let d = w.delta(&self.last[m][c]).wl_activations;
+                if best.map(|(bd, _, _)| d > bd).unwrap_or(true) {
+                    best = Some((d, m, c));
+                }
+            }
+        }
+        let (hottest, m, src) = best?;
         if hottest == 0 && !force {
             return None; // idle window: nothing to level
         }
-        let dst = (0..now.len())
-            .filter(|&c| c != src && rows_free[c] > 0)
-            .min_by_key(|&c| (now[c].write_pulses, c))?;
-        Some((src, dst))
+        let dst = (0..now[m].len())
+            .filter(|&c| c != src && rows_free[m][c] > 0)
+            .min_by_key(|&c| (now[m][c].write_pulses, c))?;
+        Some((m, src, dst))
     }
 }
 
@@ -107,21 +122,27 @@ impl Rebalancer {
 /// the activation windows that shard has served.
 pub(crate) type ShardHeat = Vec<Vec<u64>>;
 
-/// The hottest shards currently living on `src`, across every tenant,
-/// hottest first, at most `max_moves`. Heat is the per-shard dispatch
-/// count the coordinator maintains (`heat[tenant][layer][filter]`).
+/// The hottest shards currently living on `src_chip` of member
+/// `(group, member_local)`, across every tenant, hottest first, at
+/// most `max_moves`. Heat is the per-shard dispatch count the
+/// coordinator maintains (`heat[tenant][layer][filter]`).
 pub(crate) fn plan_moves(
-    placements: &[Placement],
+    placements: &[RouterPlacement],
     heat: &[ShardHeat],
-    src: usize,
+    group: usize,
+    member_local: usize,
+    src_chip: usize,
     max_moves: usize,
 ) -> Vec<Move> {
     let mut candidates: Vec<(u64, Move)> = Vec::new();
     for (t, placement) in placements.iter().enumerate() {
-        for (l, layer) in placement.shards.iter().enumerate() {
-            for (f, loc) in layer.iter().enumerate() {
+        for (l, pl) in placement.layers.iter().enumerate() {
+            if pl.group != group {
+                continue;
+            }
+            for (f, loc) in pl.shards[member_local].iter().enumerate() {
                 if let Some(loc) = loc {
-                    if loc.chip == src {
+                    if loc.chip as usize == src_chip {
                         candidates.push((heat[t][l][f], Move { tenant: t, layer: l, filter: f }));
                     }
                 }
@@ -138,15 +159,16 @@ pub(crate) fn plan_moves(
 mod tests {
     use super::*;
     use crate::cim::mapping::RowSpan;
-    use crate::serve::placement::ShardLoc;
+    use crate::serve::transport::{PlacedLayer, ShardRef};
 
     fn wear(wp: u64, wl: u64) -> WearLedger {
         WearLedger { write_pulses: wp, programmed_cells: 0, wl_activations: wl }
     }
 
-    fn loc(chip: usize, rows: usize) -> Option<ShardLoc> {
-        Some(ShardLoc {
-            chip,
+    fn shard(chip: usize, rows: usize) -> Option<ShardRef> {
+        Some(ShardRef {
+            chip: chip as u32,
+            filter: 0,
             span: RowSpan { slots: (0..rows).map(|r| (0, r)).collect(), tail_width: 4, len: 4 },
         })
     }
@@ -155,16 +177,16 @@ mod tests {
     fn picks_hottest_source_and_least_worn_destination() {
         let rb = Rebalancer::new(
             RebalanceConfig { every_batches: 4, max_moves: 2 },
-            vec![wear(100, 10), wear(900, 10), wear(500, 10)],
+            vec![vec![wear(100, 10), wear(900, 10), wear(500, 10)]],
         );
         // chip 0 served the window; chip 1 is tired, chip 2 fresh-ish
-        let now = [wear(100, 500), wear(900, 11), wear(500, 12)];
-        let free = [10, 10, 10];
-        assert_eq!(rb.pick_chips(&now, &free, false), Some((0, 2)));
+        let now = vec![vec![wear(100, 500), wear(900, 11), wear(500, 12)]];
+        let free = vec![vec![10, 10, 10]];
+        assert_eq!(rb.pick_chips(&now, &free, false), Some((0, 0, 2)));
         // a full destination is skipped
-        assert_eq!(rb.pick_chips(&now, &[10, 10, 0], false), Some((0, 1)));
+        assert_eq!(rb.pick_chips(&now, &[vec![10, 10, 0]], false), Some((0, 0, 1)));
         // idle window: only a forced pass migrates
-        let idle = [wear(100, 10), wear(900, 10), wear(500, 10)];
+        let idle = vec![vec![wear(100, 10), wear(900, 10), wear(500, 10)]];
         assert_eq!(rb.pick_chips(&idle, &free, false), None);
         assert!(rb.pick_chips(&idle, &free, true).is_some());
         // clock: due on multiples of every_batches only
@@ -175,20 +197,38 @@ mod tests {
     }
 
     #[test]
+    fn hottest_chip_is_found_across_members() {
+        let rb = Rebalancer::new(
+            RebalanceConfig { every_batches: 1, max_moves: 1 },
+            vec![vec![wear(10, 0), wear(20, 0)], vec![wear(30, 0), wear(40, 0)]],
+        );
+        // member 1 chip 0 absorbed the window; its sibling chip 1 is
+        // the only legal destination (migrations stay on the member)
+        let now = vec![vec![wear(10, 5), wear(20, 0)], vec![wear(30, 900), wear(40, 1)]];
+        let free = vec![vec![10, 10], vec![10, 10]];
+        assert_eq!(rb.pick_chips(&now, &free, false), Some((1, 0, 1)));
+        // no free rows on the hot member: no pick, even when another
+        // member has room
+        assert_eq!(rb.pick_chips(&now, &[vec![10, 10], vec![10, 0]], false), None);
+    }
+
+    #[test]
     fn plans_hottest_shards_on_source_only() {
-        // tenant 0: two shards on chip 0, one on chip 1; tenant 1: one on chip 0
-        let p0 = Placement {
-            shards: vec![vec![loc(0, 1), loc(1, 1)], vec![loc(0, 2), None]],
-            rows_used: vec![3, 1],
+        // tenant 0: two layers on group 0; layer 0 filters on chips 0/1,
+        // layer 1 filter 0 on chip 0. tenant 1: one layer, chip 0.
+        let p0 = RouterPlacement {
+            layers: vec![
+                PlacedLayer { group: 0, shards: vec![vec![shard(0, 1), shard(1, 1)]] },
+                PlacedLayer { group: 0, shards: vec![vec![shard(0, 2), None]] },
+            ],
             stuck_retries: 0,
         };
-        let p1 = Placement {
-            shards: vec![vec![loc(0, 1)]],
-            rows_used: vec![1, 0],
+        let p1 = RouterPlacement {
+            layers: vec![PlacedLayer { group: 0, shards: vec![vec![shard(0, 1)]] }],
             stuck_retries: 0,
         };
         let heat = vec![vec![vec![5, 9], vec![7, 0]], vec![vec![100]]];
-        let moves = plan_moves(&[p0, p1], &heat, 0, 2);
+        let moves = plan_moves(&[p0.clone(), p1], &heat, 0, 0, 0, 2);
         assert_eq!(
             moves,
             vec![
@@ -196,20 +236,14 @@ mod tests {
                 Move { tenant: 0, layer: 1, filter: 0 }, // heat 7 (shard on chip 0)
             ]
         );
-        // pruned (None) and off-source shards never appear
-        let all = plan_moves(&[plan_clone(), plan_clone()], &heat_uniform(), 1, 10);
-        assert!(all.iter().all(|m| m.filter == 1));
-    }
-
-    fn plan_clone() -> Placement {
-        Placement {
-            shards: vec![vec![loc(0, 1), loc(1, 1)]],
-            rows_used: vec![1, 1],
+        // shards of another group are never candidates
+        let other_group = RouterPlacement {
+            layers: vec![PlacedLayer { group: 1, shards: vec![vec![shard(0, 1)]] }],
             stuck_retries: 0,
-        }
-    }
-
-    fn heat_uniform() -> Vec<Vec<Vec<u64>>> {
-        vec![vec![vec![1, 1]], vec![vec![1, 1]]]
+        };
+        assert!(plan_moves(&[other_group], &[vec![vec![50]]], 0, 0, 0, 4).is_empty());
+        // pruned (None) and off-source shards never appear
+        let all = plan_moves(&[p0], &heat, 0, 0, 1, 10);
+        assert_eq!(all, vec![Move { tenant: 0, layer: 0, filter: 1 }]);
     }
 }

@@ -4,11 +4,13 @@
 //!
 //! The paper's point is that one reconfigurable fabric serves *both*
 //! headline workloads; a [`TenantConfig`] is how a workload claims its
-//! slice — the quota bounds the rows its live shards may occupy across
-//! the pool, enforced at placement time
-//! ([`crate::serve::placement::place_with`]) and re-checked by the
-//! rebalancer before every migration, so one tenant's growth can never
-//! evict another's shards.
+//! slice — the quota bounds the rows its live shards may occupy **per
+//! fleet member** (a replica mirrors the tenant, so it spends the same
+//! quota on its own pool), enforced at placement time
+//! ([`crate::serve::transport::ShardRouter::place`]; the single-pool
+//! [`crate::serve::placement::place_with`] applies the same rule for
+//! direct-pool callers) and re-checked by the rebalancer before every
+//! migration, so one tenant's growth can never evict another's shards.
 
 use anyhow::{anyhow, Result};
 
@@ -23,8 +25,11 @@ pub struct TenantConfig {
     /// Unique tenant name (the submit-side lookup key).
     pub name: String,
     pub model: ModelBundle,
-    /// Max pool rows this tenant's live shards may occupy, `None` for
-    /// unlimited (first come, first served against pool capacity).
+    /// Max rows this tenant's live shards may occupy on each fleet
+    /// member's pool (on a single-pool engine: across the pool), `None`
+    /// for unlimited (first come, first served against pool capacity).
+    /// A replica group holding the tenant spends the quota once per
+    /// member — replicas are full copies, not a shared budget.
     pub row_quota: Option<usize>,
     /// Bound on this tenant's admitted-but-unbatched requests.
     pub queue_depth: usize,

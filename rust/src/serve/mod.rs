@@ -83,6 +83,22 @@
 //! logits stay bit-exact mid-migration ([`engine::rebalance`]). Both
 //! front ends share one batch executor and numeric contract; see the
 //! [`engine`] docs for the comparison table.
+//!
+//! # Multi-host transport
+//!
+//! Every chip interaction flows through the public [`transport`] seam:
+//! a [`transport::Backend`] speaks owned, wire-serializable
+//! request/reply types, so "the pool" may equally be a
+//! [`transport::LocalBackend`] in this process, a
+//! [`transport::RemoteBackend`] talking length-prefixed frames to a
+//! [`transport::Host`] daemon over TCP, or a [`transport::ShardRouter`]
+//! fleet — one tenant's layers split across several hosts, replica
+//! groups with request hedging for tail latency, and spillover off
+//! full queues. Because the chips are fully digital, every replica's
+//! reply is bit-identical, which is what makes hedging and multi-host
+//! scaling drift-free (DESIGN.md §8). See `tests/transport_remote.rs`
+//! for the bit-exactness harness over every backend combination and
+//! `examples/multi_host.rs` for a two-host hedged deployment.
 
 pub mod batcher;
 pub mod engine;
@@ -92,6 +108,7 @@ pub mod pointnet_model;
 pub mod pool;
 pub mod scheduler;
 pub mod stats;
+pub mod transport;
 
 pub use batcher::{BatcherConfig, Request, Response};
 pub use engine::admission::AdmissionConfig;
@@ -105,3 +122,7 @@ pub use pointnet_model::{max_over_groups, PointNetBundle, PointwiseLayer, POINTW
 pub use pool::{ChipPool, PoolConfig, WearSnapshot};
 pub use scheduler::{Server, ServerConfig};
 pub use stats::{EngineReport, LatencyHistogram, ServeReport, ServeStats, TenantStats};
+pub use transport::{
+    Backend, HedgeConfig, Host, HostConfig, LocalBackend, RemoteBackend, RouterConfig,
+    RouterStats, ShardRouter, TransportError,
+};

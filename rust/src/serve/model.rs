@@ -69,7 +69,11 @@ pub fn synthetic_live_mask(out_c: usize, prune_rate: f64) -> Vec<bool> {
 
 /// What one placeable shard stores on its RRAM rows: the sign bits of a
 /// binary filter (1 cell per weight) or the offset-encoded slices of an
-/// INT8 kernel (4 cells per weight).
+/// INT8 kernel (4 cells per weight). The borrowed view the in-process
+/// placer consumes; the wire carries its owned twin
+/// ([`crate::serve::transport::OwnedPayload`], byte-identical content),
+/// which is what lets a remote host or a hedged replica program the
+/// exact same cells and return bit-exact dots.
 #[derive(Clone, Copy, Debug)]
 pub enum ShardPayload<'a> {
     Binary(&'a [bool]),

@@ -18,6 +18,14 @@
 //! dense 32-64-32 MNIST model needs more rows than one 2x512x32 chip
 //! offers, and the INT8 PointNet stack is 4x hungrier per weight — the
 //! serving-throughput win measured by `benches/serve_throughput.rs`.
+//!
+//! This module places onto a pool it can touch directly (the legacy
+//! [`crate::serve::Server`] path and the placement tests). The
+//! multi-host engine places through the transport seam instead —
+//! [`crate::serve::transport::ShardRouter::place`] speaks
+//! `ProgramRequest`s to backends it cannot reach into — but applies
+//! the same policy: least-worn chip first, ties toward free rows,
+//! stuck-tile spans retired and retried on the next candidate.
 
 use anyhow::{anyhow, Result};
 

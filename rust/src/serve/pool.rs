@@ -1,7 +1,9 @@
 //! The chip pool: N independently fabricated + formed [`Chip`] instances
 //! with their per-chip energy/timing/endurance ledgers. The pool is the
-//! unit the placer shards a model across and the scheduler spawns one
-//! worker thread per member of.
+//! unit the placer shards a model across, the unit a
+//! [`crate::serve::transport::LocalBackend`] spawns one worker thread
+//! per member of, and the unit a [`crate::serve::transport::Host`]
+//! daemon owns on the far side of a TCP connection.
 
 use crate::chip::{Chip, ChipConfig, WearLedger};
 use crate::util::rng::Rng;

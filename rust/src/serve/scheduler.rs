@@ -1,21 +1,22 @@
-//! The serving engine: one worker thread per pool chip plus a
-//! coordinator thread that owns the batcher and the layer pipeline.
+//! The single-model serving engine: a blocking admission queue feeding
+//! a coordinator thread that owns the batcher and the layer pipeline,
+//! dispatching chip work through the public transport seam
+//! ([`crate::serve::transport`]) — a one-member [`ShardRouter`] over a
+//! [`LocalBackend`] wrapping this server's pool.
 //!
 //! Shards are **weight-stationary** — a filter's dots can only be
-//! computed by the chip holding its rows — so conv work pins to its
-//! chip's queue and load balance comes from the placer spreading filters
-//! evenly. The coordinator fans a batch's packed activation windows out
-//! to every worker with shards in the current layer (`Arc`-shared, built
-//! once per batch per layer), collects the integer dot maps, applies
-//! scale/bias/ReLU/pool (and, on the PointNet path, the set-abstraction
-//! pool/concat seams) on the host, and replies with per-request logits
-//! and latency.
+//! computed by a chip holding its rows — so conv work pins to its
+//! chip and load balance comes from the placer spreading filters
+//! evenly. Per layer, the coordinator packs the batch's activation
+//! windows once (`Arc`-shared), sends one [`DispatchRequest`] naming
+//! the layer's shards, and folds the reply's integer dot maps through
+//! the host stages (scale/bias/ReLU/pool, and on the PointNet path the
+//! set-abstraction pool/concat seams).
 //!
-//! Both [`ModelBundle`] paths run through the same fan-out/fan-in
-//! machinery; a job carries either binary u8 planes
-//! ([`vmm::PackedWindows`] → [`vmm::binary_dots_batched`]) or
-//! offset-encoded i8 planes ([`vmm::PackedWindowsI8`] →
-//! [`vmm::int8_dots_batched`]).
+//! Both [`ModelBundle`] paths run through the same machinery; a request
+//! carries either binary u8 planes ([`vmm::PackedWindows`] →
+//! [`vmm::binary_dots_batched`]) or offset-encoded i8 planes
+//! ([`vmm::PackedWindowsI8`] → [`vmm::int8_dots_batched`]).
 //!
 //! Numeric contract: a request's logits equal
 //! [`ModelBundle::reference_logits`] bit for bit, for any pool size,
@@ -25,68 +26,39 @@
 //! The layer pipeline itself lives in the tenant-agnostic executor
 //! (`serve::engine::exec`), shared with the multi-tenant
 //! [`crate::serve::engine::Engine`]; this module contributes the
-//! single-model front end: the blocking admission queue, the static
-//! worker-per-chip fan-out, and the legacy `Server` API.
+//! single-model front end: the blocking admission queue, the
+//! replica-aware shedding path ([`Server::try_submit_spill`]), and the
+//! legacy `Server` API.
+//!
+//! [`DispatchRequest`]: crate::serve::transport::DispatchRequest
+//! [`vmm::PackedWindows`]: crate::cim::vmm::PackedWindows
+//! [`vmm::binary_dots_batched`]: crate::cim::vmm::binary_dots_batched
+//! [`vmm::PackedWindowsI8`]: crate::cim::vmm::PackedWindowsI8
+//! [`vmm::int8_dots_batched`]: crate::cim::vmm::int8_dots_batched
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::chip::Chip;
-use crate::cim::mapping::RowSpan;
-use crate::cim::vmm;
+use crate::cim::mapping::RowAllocator;
 
 use super::batcher::{Batcher, BatcherConfig, Request, Response};
-use super::engine::exec::{run_batch, Dispatch, LayerWindows};
+use super::engine::exec::run_batch;
 use super::model::ModelBundle;
 use super::placement::{self, Placement};
 use super::pool::{ChipPool, PoolConfig};
 use super::stats::{ServeReport, ServeStats};
+use super::transport::{LocalBackend, ShardRouter, TenantRoute};
 
 /// Server construction knobs.
 #[derive(Clone, Debug, Default)]
 pub struct ServerConfig {
     pub pool: PoolConfig,
     pub batcher: BatcherConfig,
-}
-
-/// A layer's worth of work for one chip: compute dots of its shards
-/// against the shared packed windows.
-struct Job {
-    layer: usize,
-    windows: LayerWindows,
-}
-
-/// Integer dot maps of one worker for one layer.
-struct JobResult {
-    /// (filter index, dots per window) for every shard the chip holds.
-    dots: Vec<(usize, Vec<i64>)>,
-}
-
-fn worker_loop(
-    mut chip: Chip,
-    shards_by_layer: Vec<Vec<(usize, RowSpan)>>,
-    jobs: Receiver<Job>,
-    results: Sender<JobResult>,
-) -> Chip {
-    while let Ok(job) = jobs.recv() {
-        let mut dots = Vec::with_capacity(shards_by_layer[job.layer].len());
-        for (filter, span) in &shards_by_layer[job.layer] {
-            let d = match &job.windows {
-                LayerWindows::Binary(pw) => vmm::binary_dots_batched(&mut chip, span, pw),
-                LayerWindows::Int8(pw) => vmm::int8_dots_batched(&mut chip, span, pw),
-            };
-            dots.push((*filter, d));
-        }
-        if results.send(JobResult { dots }).is_err() {
-            break; // coordinator gone: shut down
-        }
-    }
-    chip
 }
 
 /// A running inference server. Submit inputs, then [`Server::shutdown`]
@@ -98,8 +70,9 @@ pub struct Server {
     /// checked at admission so a malformed request cannot kill the
     /// pipeline.
     input_len: usize,
-    /// Requests shed by [`Server::try_submit`] on a full queue, folded
-    /// into [`ServeStats::dropped`] at shutdown.
+    /// Requests shed by [`Server::try_submit`] (and terminal rejections
+    /// of [`Server::try_submit_spill`]) on a full queue, folded into
+    /// [`ServeStats::dropped`] at shutdown.
     dropped: Arc<AtomicU64>,
     coordinator: Option<JoinHandle<ServeReport>>,
 }
@@ -107,25 +80,29 @@ pub struct Server {
 impl Server {
     /// Fabricate the pool, place (program) the model wear-aware, reset
     /// the energy ledgers so serving measurements exclude programming,
-    /// and spawn the worker + coordinator threads.
+    /// wrap the placed chips as a [`LocalBackend`] behind a one-member
+    /// [`ShardRouter`], and spawn the coordinator thread.
     pub fn start(model: ModelBundle, cfg: &ServerConfig) -> Result<Self> {
         model.validate()?;
         let mut pool = ChipPool::new(&cfg.pool);
-        let placement = placement::place(&model, &mut pool)?;
+        if pool.is_empty() {
+            return Err(anyhow!("empty pool"));
+        }
+        // the allocators that place the model travel into the backend:
+        // fresh ones would double-book the rows placement just consumed
+        let mut allocs: Vec<RowAllocator> =
+            pool.chips().iter().map(RowAllocator::for_chip).collect();
+        let placement = placement::place_with(&model, &mut pool, &mut allocs, None)?;
         pool.reset_energy();
-        let data_cols = pool
-            .chips()
-            .first()
-            .ok_or_else(|| anyhow!("empty pool"))?
-            .cfg()
-            .data_cols();
+        let data_cols = pool.chips()[0].cfg().data_cols();
         let (tx, batcher) = Batcher::channel(cfg.batcher.clone());
-        let chips = pool.into_chips();
+        let backend = LocalBackend::from_parts(pool.into_chips(), allocs)?;
+        let router = ShardRouter::single(Box::new(backend))?;
         let input_len = model.input_len();
         let dropped = Arc::new(AtomicU64::new(0));
         let dropped_in_coord = Arc::clone(&dropped);
         let coordinator = std::thread::spawn(move || {
-            coordinator_loop(model, placement, batcher, chips, data_cols, dropped_in_coord)
+            coordinator_loop(model, placement, batcher, router, data_cols, dropped_in_coord)
         });
         Ok(Server {
             submit_tx: Some(tx),
@@ -165,14 +142,13 @@ impl Server {
         rx
     }
 
-    /// Non-blocking submit: on a full queue the input is handed back so
-    /// the caller can shed or retry (explicit backpressure signal), and
-    /// the shed request is counted in [`ServeStats::dropped`]. A dropped
-    /// request is never admitted, so it can never also be answered.
-    ///
-    /// Panics (in the caller, never the pipeline) if `input` is not
-    /// [`ModelBundle::input_len`] floats.
-    pub fn try_submit(&self, input: Vec<f32>) -> std::result::Result<Receiver<Response>, Vec<f32>> {
+    /// Admission without accounting: hand the input back on a full (or
+    /// closing) queue and let the caller decide what the rejection
+    /// means — retry, spill to a replica, or shed. The spillover path
+    /// needs this separation: a request that three replicas each turned
+    /// away was still *one* client request, and must be counted as one
+    /// drop, not three.
+    fn try_admit(&self, input: Vec<f32>) -> std::result::Result<Receiver<Response>, Vec<f32>> {
         assert_eq!(
             input.len(),
             self.input_len,
@@ -188,12 +164,59 @@ impl Server {
         };
         match self.submit_tx.as_ref().expect("server already shut down").try_send(req) {
             Ok(()) => Ok(rx),
-            Err(TrySendError::Full(r)) => {
-                self.dropped.fetch_add(1, Ordering::SeqCst);
-                Err(r.input)
-            }
-            Err(TrySendError::Disconnected(r)) => Err(r.input),
+            Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => Err(r.input),
         }
+    }
+
+    /// Non-blocking submit: on a full queue the input is handed back so
+    /// the caller can shed or retry (explicit backpressure signal), and
+    /// the shed request is counted in [`ServeStats::dropped`]. A dropped
+    /// request is never admitted, so it can never also be answered.
+    ///
+    /// Panics (in the caller, never the pipeline) if `input` is not
+    /// [`ModelBundle::input_len`] floats.
+    pub fn try_submit(&self, input: Vec<f32>) -> std::result::Result<Receiver<Response>, Vec<f32>> {
+        match self.try_admit(input) {
+            Ok(rx) => Ok(rx),
+            Err(input) => {
+                self.dropped.fetch_add(1, Ordering::SeqCst);
+                Err(input)
+            }
+        }
+    }
+
+    /// Admission-plane spillover: admit into this server's queue, or —
+    /// if it is full — into the first replica with space, returning
+    /// which server (0 = self, `i + 1` = `replicas[i]`) took the
+    /// request. A request every queue rejects is handed back and
+    /// counted **exactly once**, in *this* server's
+    /// [`ServeStats::dropped`] — the seed-era shape (count on every
+    /// rejection) would have double-counted a spilled-then-dropped
+    /// request once per queue it bounced off, breaking the
+    /// `attempts == answered + dropped` partition the fleet's
+    /// accounting rests on (property-tested in
+    /// `tests/integration_stack.rs`).
+    ///
+    /// The replicas must serve the same model (asserted via input
+    /// length); latency accounting starts at each server's own
+    /// admission, exactly like a direct submit.
+    pub fn try_submit_spill(
+        &self,
+        replicas: &[&Server],
+        input: Vec<f32>,
+    ) -> std::result::Result<(usize, Receiver<Response>), Vec<f32>> {
+        let mut input = match self.try_admit(input) {
+            Ok(rx) => return Ok((0, rx)),
+            Err(input) => input,
+        };
+        for (i, replica) in replicas.iter().enumerate() {
+            match replica.try_admit(input) {
+                Ok(rx) => return Ok((i + 1, rx)),
+                Err(back) => input = back,
+            }
+        }
+        self.dropped.fetch_add(1, Ordering::SeqCst);
+        Err(input)
     }
 
     /// Stop admitting, drain every queued request, join all threads, and
@@ -217,88 +240,25 @@ impl Drop for Server {
     }
 }
 
-/// The [`Server`]'s chip fan-out: deliver a layer's packed windows to
-/// every worker whose static shard table has filters in that layer and
-/// fold each (filter, dots) pair into the executor's output buffer as
-/// it arrives — no worker's result is buffered beyond its own
-/// [`JobResult`], so peak transient memory stays independent of pool
-/// size.
-struct WorkerFanout<'a> {
-    job_txs: &'a [Sender<Job>],
-    shard_counts: &'a [Vec<usize>],
-    res_rx: &'a Receiver<JobResult>,
-}
-
-impl Dispatch for WorkerFanout<'_> {
-    fn dispatch(
-        &mut self,
-        layer: usize,
-        windows: LayerWindows,
-        on_dots: &mut dyn FnMut(usize, Vec<i64>),
-    ) {
-        let mut expected = 0usize;
-        for (ci, jtx) in self.job_txs.iter().enumerate() {
-            if self.shard_counts[ci][layer] == 0 {
-                continue;
-            }
-            jtx.send(Job { layer, windows: windows.clone() }).expect("worker hung up");
-            expected += 1;
-        }
-        for _ in 0..expected {
-            for (f, dots) in self.res_rx.recv().expect("worker died mid-batch").dots {
-                on_dots(f, dots);
-            }
-        }
-    }
-}
-
 fn coordinator_loop(
     model: ModelBundle,
     placement: Placement,
     batcher: Batcher,
-    chips: Vec<Chip>,
+    mut router: ShardRouter,
     data_cols: usize,
     dropped: Arc<AtomicU64>,
 ) -> ServeReport {
-    let n_chips = chips.len();
+    let route = TenantRoute::single_member(&placement);
     let n_layers = model.n_layers();
-    // group shards per chip per layer
-    let mut per_chip: Vec<Vec<Vec<(usize, RowSpan)>>> =
-        vec![vec![Vec::new(); n_layers]; n_chips];
-    for (l, layer_shards) in placement.shards.iter().enumerate() {
-        for (f, shard) in layer_shards.iter().enumerate() {
-            if let Some(loc) = shard {
-                per_chip[loc.chip][l].push((f, loc.span.clone()));
-            }
-        }
-    }
-    let shard_counts: Vec<Vec<usize>> = per_chip
-        .iter()
-        .map(|layers| layers.iter().map(|v| v.len()).collect())
-        .collect();
-
-    // spawn one worker per chip
-    let (res_tx, res_rx) = channel::<JobResult>();
-    let mut job_txs: Vec<Sender<Job>> = Vec::with_capacity(n_chips);
-    let mut handles: Vec<JoinHandle<Chip>> = Vec::with_capacity(n_chips);
-    for (i, chip) in chips.into_iter().enumerate() {
-        let (jtx, jrx) = channel::<Job>();
-        let shards = std::mem::take(&mut per_chip[i]);
-        let rtx = res_tx.clone();
-        handles.push(std::thread::spawn(move || worker_loop(chip, shards, jrx, rtx)));
-        job_txs.push(jtx);
-    }
-    drop(res_tx);
-
     let mut stats = ServeStats::default();
     let t_start = Instant::now();
 
     while let Some(batch) = batcher.next_batch() {
         let b = batch.len();
         let inputs: Vec<&[f32]> = batch.iter().map(|r| r.input.as_slice()).collect();
-        let mut fanout =
-            WorkerFanout { job_txs: &job_txs, shard_counts: &shard_counts, res_rx: &res_rx };
-        let logits = run_batch(&model, &inputs, data_cols, &mut fanout);
+        let mut layer_windows = vec![0u64; n_layers];
+        let logits = run_batch(&model, &inputs, data_cols, &mut router, &route, &mut layer_windows)
+            .expect("serving transport failed mid-batch");
         // replies, in admission order (per-client FIFO)
         for (req, lg) in batch.iter().zip(logits) {
             let latency = req.submitted.elapsed();
@@ -310,18 +270,14 @@ fn coordinator_loop(
         stats.n_batches += 1;
     }
 
-    // all submitters hung up and the queue is drained: stop the workers
-    drop(job_txs);
-    let chips: Vec<Chip> = handles
-        .into_iter()
-        .map(|h| h.join().expect("serve worker panicked"))
-        .collect();
+    // all submitters hung up and the queue is drained: stop the backend
+    let finishes = router.finish().expect("serving transport failed at shutdown");
     stats.wall_s = t_start.elapsed().as_secs_f64();
-    stats.energy_pj = chips.iter().map(|c| c.energy_breakdown().total_pj()).sum();
+    stats.energy_pj = finishes.iter().map(|f| f.energy_pj).sum();
     stats.dropped = dropped.load(Ordering::SeqCst);
     ServeReport {
         stats,
-        wear: chips.iter().map(|c| c.wear.clone()).collect(),
+        wear: finishes.into_iter().flat_map(|f| f.wear).collect(),
         rows_used: placement.rows_used.clone(),
         stuck_retries: placement.stuck_retries,
     }
@@ -487,6 +443,65 @@ mod tests {
             report.stats.n_requests + shed,
             attempts,
             "dropped + answered must partition the attempts"
+        );
+    }
+
+    #[test]
+    fn spillover_counts_a_twice_rejected_request_once() {
+        // primary and replica both serve one-at-a-time behind depth-1
+        // queues: a tight spillover loop must overflow both, and every
+        // terminal rejection lands once in the PRIMARY's dropped
+        let model = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 54);
+        let cfg = |seed| ServerConfig {
+            pool: PoolConfig { chips: 1, chip: ChipConfig::small_test(), seed },
+            batcher: BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 1,
+            },
+        };
+        let primary = Server::start(model.clone(), &cfg(55)).unwrap();
+        let replica = Server::start(model, &cfg(56)).unwrap();
+        let ds = mnist::generate(1, 57);
+        let mut attempts = 0u64;
+        let mut shed = 0u64;
+        let mut spilled = 0u64;
+        let mut primary_rx = Vec::new();
+        let mut replica_rx = Vec::new();
+        while attempts < 10_000 && (shed < 3 || spilled < 3 || attempts < 8) {
+            attempts += 1;
+            match primary.try_submit_spill(&[&replica], ds.sample(0).to_vec()) {
+                Ok((0, rx)) => primary_rx.push(rx),
+                Ok((_, rx)) => {
+                    spilled += 1;
+                    replica_rx.push(rx);
+                }
+                Err(input) => {
+                    assert_eq!(input.len(), 28 * 28, "rejected input returned intact");
+                    shed += 1;
+                }
+            }
+        }
+        assert!(spilled > 0, "a full primary must spill to its replica");
+        assert!(shed > 0, "two full queues must eventually shed");
+        let answered_primary = primary_rx.len() as u64;
+        for rx in primary_rx {
+            rx.recv().expect("admitted request must be answered");
+        }
+        let answered_replica = replica_rx.len() as u64;
+        for rx in replica_rx {
+            rx.recv().expect("spilled request must be answered");
+        }
+        let pr = primary.shutdown();
+        let rr = replica.shutdown();
+        assert_eq!(pr.stats.dropped, shed, "terminal rejections count once, on the primary");
+        assert_eq!(rr.stats.dropped, 0, "a spill target never books the client's drop");
+        assert_eq!(pr.stats.n_requests, answered_primary);
+        assert_eq!(rr.stats.n_requests, answered_replica);
+        assert_eq!(
+            answered_primary + answered_replica + shed,
+            attempts,
+            "attempts == answered (anywhere) + dropped (once)"
         );
     }
 }

@@ -5,6 +5,7 @@
 use std::time::Duration;
 
 use crate::chip::WearLedger;
+use crate::serve::transport::RouterStats;
 use crate::util::stats::percentile;
 
 /// Aggregated counters of one serving run.
@@ -13,8 +14,11 @@ pub struct ServeStats {
     pub n_requests: u64,
     pub n_batches: u64,
     /// Requests shed at the bounded admission queue (`try_submit` on a
-    /// full queue). A dropped request was never admitted, so it is never
-    /// also answered: `n_requests + dropped` partitions the attempts.
+    /// full queue, or a `try_submit_spill` every replica turned away).
+    /// A dropped request was never admitted anywhere, so it is never
+    /// also answered, and a spilled-then-dropped request is counted
+    /// exactly once (on the primary): summed over a replica set,
+    /// `n_requests + dropped` partitions the attempts.
     pub dropped: u64,
     /// Wall-clock of the serving loop (first batch to shutdown), seconds.
     pub wall_s: f64,
@@ -108,6 +112,19 @@ impl LatencyHistogram {
         &self.buckets
     }
 
+    /// Upper edge (microseconds) of the bucket holding the `target`-th
+    /// recorded sample (`1 <= target <= count`).
+    fn upper_edge_us(&self, target: u64) -> u64 {
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        1u64 << (self.buckets.len() - 1)
+    }
+
     /// Conservative (upper-bound) p-th percentile estimate in
     /// milliseconds: the upper edge of the bucket holding the p-th
     /// sample. 0 for an empty histogram; monotone in `p`.
@@ -116,14 +133,24 @@ impl LatencyHistogram {
             return 0.0;
         }
         let target = ((p / 100.0 * self.count as f64).ceil() as u64).clamp(1, self.count);
-        let mut seen = 0u64;
-        for (i, &n) in self.buckets.iter().enumerate() {
-            seen += n;
-            if seen >= target {
-                return (1u64 << i) as f64 / 1e3;
-            }
+        self.upper_edge_us(target) as f64 / 1e3
+    }
+
+    /// Conservative (upper-bound) `q`-quantile (`q` in `[0, 1]`,
+    /// clamped) as a [`Duration`]: the upper edge of the bucket holding
+    /// the `⌈q·count⌉`-th sample. [`Duration::ZERO`] for an empty
+    /// histogram; monotone in `q`; saturates at the last bucket's edge
+    /// (~2.3 minutes). This is the hedging deadline's estimator
+    /// ([`crate::serve::transport::HedgeConfig`]): an upper bound is
+    /// the right bias there, since hedging early costs duplicate work
+    /// while hedging late only costs latency.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
         }
-        (1u64 << (self.buckets.len() - 1)) as f64 / 1e3
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        Duration::from_micros(self.upper_edge_us(target))
     }
 
     pub fn p50_ms(&self) -> f64 {
@@ -174,6 +201,10 @@ pub struct EngineReport {
     pub rebalances: u64,
     /// Shards migrated across all rebalance passes.
     pub shards_moved: u64,
+    /// Fleet-level dispatch counters (hedges fired/won, spills, stale
+    /// replies discarded) from the engine's
+    /// [`crate::serve::transport::ShardRouter`].
+    pub transport: RouterStats,
 }
 
 impl EngineReport {
@@ -261,6 +292,39 @@ mod tests {
     }
 
     #[test]
+    fn quantile_handles_empty_single_bucket_and_saturation() {
+        // empty: zero, at every q
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile(0.0), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.quantile(1.0), Duration::ZERO);
+        // single bucket: every quantile reports that bucket's upper
+        // edge (100us lands in [64, 128) -> edge 128us)
+        let mut h = LatencyHistogram::default();
+        for _ in 0..5 {
+            h.record(Duration::from_micros(100));
+        }
+        let edge = Duration::from_micros(128);
+        assert_eq!(h.quantile(0.0), edge);
+        assert_eq!(h.quantile(0.5), edge);
+        assert_eq!(h.quantile(1.0), edge);
+        // upper-bound property vs the true value
+        assert!(h.quantile(0.5) >= Duration::from_micros(100));
+        // out-of-range q clamps instead of panicking
+        assert_eq!(h.quantile(-3.0), edge);
+        assert_eq!(h.quantile(7.0), edge);
+        // saturating bucket: absurd latencies pin to the last edge
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_secs(1_000_000));
+        h.record(Duration::from_micros(1));
+        let top = Duration::from_micros(1 << 27);
+        assert_eq!(h.quantile(1.0), top);
+        assert!(h.quantile(0.25) <= top);
+        // quantile and percentile_ms agree on the same estimator
+        assert!((h.quantile(0.5).as_secs_f64() * 1e3 - h.percentile_ms(50.0)).abs() < 1e-12);
+    }
+
+    #[test]
     fn engine_report_aggregates_tenants() {
         let mut a = TenantStats { name: "a".into(), ..TenantStats::default() };
         a.answered = 90;
@@ -277,6 +341,7 @@ mod tests {
             stuck_retries: 0,
             rebalances: 1,
             shards_moved: 2,
+            transport: RouterStats::default(),
         };
         assert_eq!(r.answered(), 100);
         assert_eq!(r.dropped(), 5);

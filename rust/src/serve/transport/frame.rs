@@ -1,0 +1,757 @@
+//! The wire codec: length-prefixed frames carrying a hand-rolled binary
+//! encoding of every [`Backend`](super::Backend) request and reply.
+//!
+//! # Frame layout
+//!
+//! ```text
+//! [len: u32 LE] [payload: len bytes]
+//! payload = [tag: u8] [tag-specific body]
+//! ```
+//!
+//! Body primitives are little-endian (`u32`/`u64`/`i64`/`f64`); vectors
+//! are a `u64` length followed by items; booleans are one byte each.
+//! Decoding is strict: a truncated body, an unknown tag, an absurd
+//! length, or trailing bytes all return [`TransportError::Frame`] —
+//! never a panic, never a silently misparsed value (property-tested
+//! below: every request/reply survives encode→decode bit-exactly, and
+//! every strict prefix of an encoding is rejected).
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use crate::chip::WearLedger;
+use crate::cim::mapping::RowSpan;
+use crate::cim::vmm::{PackedWindows, PackedWindowsI8};
+
+use super::{
+    BackendInfo, DispatchReply, DispatchRequest, FinishReply, OwnedPayload, ProgramReply,
+    ProgramRequest, Result, ShardRef, TransportError, WearReply, WireWindows,
+};
+
+/// Hard bound on one frame's payload (256 MiB): a corrupt length prefix
+/// fails fast instead of attempting a absurd allocation.
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// Every request a backend understands, as the wire sees it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireRequest {
+    Dispatch(DispatchRequest),
+    Program(ProgramRequest),
+    Wear,
+    Describe,
+    ResetEnergy,
+    Finish,
+}
+
+/// Every reply a backend produces. `Err` relays a host-side failure to
+/// the client, which surfaces it as [`TransportError::Remote`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireReply {
+    Dispatch(DispatchReply),
+    Program(ProgramReply),
+    Wear(WearReply),
+    Describe(BackendInfo),
+    ResetEnergy,
+    Finish(FinishReply),
+    Err(String),
+}
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+/// Write one `[u32 LE length][payload]` frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(TransportError::Frame(format!(
+            "frame of {} bytes exceeds MAX_FRAME ({MAX_FRAME})",
+            payload.len()
+        )));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's payload. A clean EOF before any length byte is
+/// [`TransportError::Closed`] (the peer hung up between frames); EOF
+/// mid-frame is a truncation error.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    match r.read_exact(&mut len) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Err(TransportError::Closed)
+        }
+        Err(e) => return Err(TransportError::Io(e)),
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME {
+        return Err(TransportError::Frame(format!(
+            "frame length {len} exceeds MAX_FRAME ({MAX_FRAME})"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    match r.read_exact(&mut payload) {
+        Ok(()) => Ok(payload),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            Err(TransportError::Frame("truncated frame body".into()))
+        }
+        Err(e) => Err(TransportError::Io(e)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------------
+
+const REQ_DISPATCH: u8 = 1;
+const REQ_PROGRAM: u8 = 2;
+const REQ_WEAR: u8 = 3;
+const REQ_DESCRIBE: u8 = 4;
+const REQ_RESET_ENERGY: u8 = 5;
+const REQ_FINISH: u8 = 6;
+
+const REP_DISPATCH: u8 = 129;
+const REP_PROGRAM: u8 = 130;
+const REP_WEAR: u8 = 131;
+const REP_DESCRIBE: u8 = 132;
+const REP_RESET_ENERGY: u8 = 133;
+const REP_FINISH: u8 = 134;
+const REP_ERR: u8 = 255;
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i64(buf: &mut Vec<u8>, v: i64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(buf: &mut Vec<u8>, v: usize) {
+    put_u64(buf, v as u64);
+}
+
+fn put_u64s(buf: &mut Vec<u8>, vs: &[u64]) {
+    put_usize(buf, vs.len());
+    for &v in vs {
+        put_u64(buf, v);
+    }
+}
+
+fn put_i64s(buf: &mut Vec<u8>, vs: &[i64]) {
+    put_usize(buf, vs.len());
+    for &v in vs {
+        put_i64(buf, v);
+    }
+}
+
+fn put_usizes(buf: &mut Vec<u8>, vs: &[usize]) {
+    put_usize(buf, vs.len());
+    for &v in vs {
+        put_usize(buf, v);
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_usize(buf, s.len());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_span(buf: &mut Vec<u8>, span: &RowSpan) {
+    put_usize(buf, span.slots.len());
+    for &(b, r) in &span.slots {
+        put_usize(buf, b);
+        put_usize(buf, r);
+    }
+    put_usize(buf, span.tail_width);
+    put_usize(buf, span.len);
+}
+
+fn put_wear(buf: &mut Vec<u8>, w: &WearLedger) {
+    put_u64(buf, w.write_pulses);
+    put_u64(buf, w.programmed_cells);
+    put_u64(buf, w.wl_activations);
+}
+
+fn put_windows(buf: &mut Vec<u8>, w: &WireWindows) {
+    match w {
+        WireWindows::Binary(pw) => {
+            buf.push(0);
+            put_usize(buf, pw.n_windows);
+            put_usizes(buf, &pw.seg_widths);
+            put_u64s(buf, &pw.planes);
+            put_i64s(buf, &pw.sum_x);
+        }
+        WireWindows::Int8(pw) => {
+            buf.push(1);
+            put_usize(buf, pw.n_windows);
+            put_usizes(buf, &pw.seg_widths);
+            put_u64s(buf, &pw.planes);
+            put_i64s(buf, &pw.sum_ux);
+        }
+    }
+}
+
+fn put_payload(buf: &mut Vec<u8>, p: &OwnedPayload) {
+    match p {
+        OwnedPayload::Binary(bits) => {
+            buf.push(0);
+            put_usize(buf, bits.len());
+            buf.extend(bits.iter().map(|&b| b as u8));
+        }
+        OwnedPayload::Int8(ws) => {
+            buf.push(1);
+            put_usize(buf, ws.len());
+            buf.extend(ws.iter().map(|&w| w as u8));
+        }
+    }
+}
+
+fn put_dispatch_request(buf: &mut Vec<u8>, req: &DispatchRequest) {
+    put_u64(buf, req.request_id);
+    put_u64(buf, req.shard_epoch);
+    put_u32(buf, req.layer);
+    put_usize(buf, req.shards.len());
+    for s in req.shards.iter() {
+        put_u32(buf, s.chip);
+        put_u32(buf, s.filter);
+        put_span(buf, &s.span);
+    }
+    put_windows(buf, &req.windows);
+}
+
+fn put_dispatch_reply(buf: &mut Vec<u8>, rep: &DispatchReply) {
+    put_u64(buf, rep.request_id);
+    put_u64(buf, rep.shard_epoch);
+    put_u32(buf, rep.layer);
+    put_usize(buf, rep.dots.len());
+    for (f, dots) in &rep.dots {
+        put_u32(buf, *f);
+        put_i64s(buf, dots);
+    }
+}
+
+/// Encode one request payload (framing is [`write_frame`]'s job).
+pub fn encode_request(req: &WireRequest) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match req {
+        WireRequest::Dispatch(r) => {
+            buf.push(REQ_DISPATCH);
+            put_dispatch_request(&mut buf, r);
+        }
+        WireRequest::Program(r) => {
+            buf.push(REQ_PROGRAM);
+            put_u32(&mut buf, r.chip);
+            put_payload(&mut buf, &r.payload);
+        }
+        WireRequest::Wear => buf.push(REQ_WEAR),
+        WireRequest::Describe => buf.push(REQ_DESCRIBE),
+        WireRequest::ResetEnergy => buf.push(REQ_RESET_ENERGY),
+        WireRequest::Finish => buf.push(REQ_FINISH),
+    }
+    buf
+}
+
+/// Encode one reply payload.
+pub fn encode_reply(rep: &WireReply) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match rep {
+        WireReply::Dispatch(r) => {
+            buf.push(REP_DISPATCH);
+            put_dispatch_reply(&mut buf, r);
+        }
+        WireReply::Program(r) => {
+            buf.push(REP_PROGRAM);
+            match &r.span {
+                None => buf.push(0),
+                Some(span) => {
+                    buf.push(1);
+                    put_span(&mut buf, span);
+                }
+            }
+            put_u64(&mut buf, r.failures);
+        }
+        WireReply::Wear(r) => {
+            buf.push(REP_WEAR);
+            put_usize(&mut buf, r.wear.len());
+            for w in &r.wear {
+                put_wear(&mut buf, w);
+            }
+            put_u64s(&mut buf, &r.rows_free);
+        }
+        WireReply::Describe(info) => {
+            buf.push(REP_DESCRIBE);
+            put_u32(&mut buf, info.chips);
+            put_u32(&mut buf, info.data_cols);
+        }
+        WireReply::ResetEnergy => buf.push(REP_RESET_ENERGY),
+        WireReply::Finish(r) => {
+            buf.push(REP_FINISH);
+            put_f64(&mut buf, r.energy_pj);
+            put_usize(&mut buf, r.wear.len());
+            for w in &r.wear {
+                put_wear(&mut buf, w);
+            }
+        }
+        WireReply::Err(msg) => {
+            buf.push(REP_ERR);
+            put_str(&mut buf, msg);
+        }
+    }
+    buf
+}
+
+// ---------------------------------------------------------------------------
+// decoding
+// ---------------------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(TransportError::Frame(format!(
+                "truncated: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| TransportError::Frame(format!("length {v} overflows")))
+    }
+
+    /// A vector length, sanity-bounded by what the remaining bytes could
+    /// possibly hold (`min_item_bytes` per item) so a corrupt length
+    /// fails here instead of in an absurd allocation.
+    fn len(&mut self, min_item_bytes: usize) -> Result<usize> {
+        let n = self.usize()?;
+        let room = self.buf.len() - self.pos;
+        if n > room / min_item_bytes.max(1) + 1 {
+            return Err(TransportError::Frame(format!(
+                "length {n} impossible with {room} bytes left"
+            )));
+        }
+        Ok(n)
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.len(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    fn i64s(&mut self) -> Result<Vec<i64>> {
+        let n = self.len(8)?;
+        (0..n).map(|_| self.i64()).collect()
+    }
+
+    fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.len(8)?;
+        (0..n).map(|_| self.usize()).collect()
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| TransportError::Frame("non-utf8 string".into()))
+    }
+
+    fn span(&mut self) -> Result<RowSpan> {
+        let n = self.len(16)?;
+        let mut slots = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.usize()?;
+            let r = self.usize()?;
+            slots.push((b, r));
+        }
+        let tail_width = self.usize()?;
+        let len = self.usize()?;
+        Ok(RowSpan { slots, tail_width, len })
+    }
+
+    fn wear(&mut self) -> Result<WearLedger> {
+        Ok(WearLedger {
+            write_pulses: self.u64()?,
+            programmed_cells: self.u64()?,
+            wl_activations: self.u64()?,
+        })
+    }
+
+    fn windows(&mut self) -> Result<WireWindows> {
+        let tag = self.u8()?;
+        let n_windows = self.usize()?;
+        let seg_widths = self.usizes()?;
+        let planes = self.u64s()?;
+        match tag {
+            0 => {
+                let sum_x = self.i64s()?;
+                Ok(WireWindows::Binary(Arc::new(PackedWindows {
+                    n_windows,
+                    seg_widths,
+                    planes,
+                    sum_x,
+                })))
+            }
+            1 => {
+                let sum_ux = self.i64s()?;
+                Ok(WireWindows::Int8(Arc::new(PackedWindowsI8 {
+                    n_windows,
+                    seg_widths,
+                    planes,
+                    sum_ux,
+                })))
+            }
+            t => Err(TransportError::Frame(format!("unknown windows tag {t}"))),
+        }
+    }
+
+    fn payload(&mut self) -> Result<OwnedPayload> {
+        let tag = self.u8()?;
+        let n = self.len(1)?;
+        let bytes = self.take(n)?;
+        match tag {
+            0 => Ok(OwnedPayload::Binary(bytes.iter().map(|&b| b != 0).collect())),
+            1 => Ok(OwnedPayload::Int8(bytes.iter().map(|&b| b as i8).collect())),
+            t => Err(TransportError::Frame(format!("unknown payload tag {t}"))),
+        }
+    }
+
+    fn dispatch_request(&mut self) -> Result<DispatchRequest> {
+        let request_id = self.u64()?;
+        let shard_epoch = self.u64()?;
+        let layer = self.u32()?;
+        let n = self.len(8)?;
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            let chip = self.u32()?;
+            let filter = self.u32()?;
+            let span = self.span()?;
+            shards.push(ShardRef { chip, filter, span });
+        }
+        let windows = self.windows()?;
+        Ok(DispatchRequest { request_id, shard_epoch, layer, shards: Arc::new(shards), windows })
+    }
+
+    fn dispatch_reply(&mut self) -> Result<DispatchReply> {
+        let request_id = self.u64()?;
+        let shard_epoch = self.u64()?;
+        let layer = self.u32()?;
+        let n = self.len(8)?;
+        let mut dots = Vec::with_capacity(n);
+        for _ in 0..n {
+            let f = self.u32()?;
+            let d = self.i64s()?;
+            dots.push((f, d));
+        }
+        Ok(DispatchReply { request_id, shard_epoch, layer, dots })
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(TransportError::Frame(format!(
+                "{} trailing bytes after a complete message",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Decode one request payload (strict: trailing bytes are an error).
+pub fn decode_request(buf: &[u8]) -> Result<WireRequest> {
+    let mut r = Reader::new(buf);
+    let req = match r.u8()? {
+        REQ_DISPATCH => WireRequest::Dispatch(r.dispatch_request()?),
+        REQ_PROGRAM => {
+            let chip = r.u32()?;
+            let payload = r.payload()?;
+            WireRequest::Program(ProgramRequest { chip, payload })
+        }
+        REQ_WEAR => WireRequest::Wear,
+        REQ_DESCRIBE => WireRequest::Describe,
+        REQ_RESET_ENERGY => WireRequest::ResetEnergy,
+        REQ_FINISH => WireRequest::Finish,
+        t => return Err(TransportError::Frame(format!("unknown request tag {t}"))),
+    };
+    r.done()?;
+    Ok(req)
+}
+
+/// Decode one reply payload (strict: trailing bytes are an error).
+pub fn decode_reply(buf: &[u8]) -> Result<WireReply> {
+    let mut r = Reader::new(buf);
+    let rep = match r.u8()? {
+        REP_DISPATCH => WireReply::Dispatch(r.dispatch_reply()?),
+        REP_PROGRAM => {
+            let span = match r.u8()? {
+                0 => None,
+                1 => Some(r.span()?),
+                t => return Err(TransportError::Frame(format!("unknown span flag {t}"))),
+            };
+            let failures = r.u64()?;
+            WireReply::Program(ProgramReply { span, failures })
+        }
+        REP_WEAR => {
+            let n = r.len(24)?;
+            let wear = (0..n).map(|_| r.wear()).collect::<Result<Vec<_>>>()?;
+            let rows_free = r.u64s()?;
+            WireReply::Wear(WearReply { wear, rows_free })
+        }
+        REP_DESCRIBE => {
+            let chips = r.u32()?;
+            let data_cols = r.u32()?;
+            WireReply::Describe(BackendInfo { chips, data_cols })
+        }
+        REP_RESET_ENERGY => WireReply::ResetEnergy,
+        REP_FINISH => {
+            let energy_pj = r.f64()?;
+            let n = r.len(24)?;
+            let wear = (0..n).map(|_| r.wear()).collect::<Result<Vec<_>>>()?;
+            WireReply::Finish(FinishReply { energy_pj, wear })
+        }
+        REP_ERR => WireReply::Err(r.str()?),
+        t => return Err(TransportError::Frame(format!("unknown reply tag {t}"))),
+    };
+    r.done()?;
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    fn rand_span(rng: &mut Rng) -> RowSpan {
+        let rows = 1 + rng.below(4);
+        let per_row = 1 + rng.below(30);
+        let tail = 1 + rng.below(per_row);
+        RowSpan {
+            slots: (0..rows).map(|_| (rng.below(4), rng.below(512))).collect(),
+            tail_width: tail,
+            len: (rows - 1) * per_row + tail,
+        }
+    }
+
+    fn rand_windows(rng: &mut Rng) -> WireWindows {
+        // empty windows (n_windows == 0) are a required round-trip case
+        let n_windows = rng.below(4);
+        let n_seg = 1 + rng.below(3);
+        let seg_widths: Vec<usize> = (0..n_seg).map(|_| 1 + rng.below(30)).collect();
+        let planes: Vec<u64> = (0..n_windows * 8 * n_seg).map(|_| rng.next_u64()).collect();
+        if rng.chance(0.5) {
+            WireWindows::Binary(Arc::new(PackedWindows {
+                n_windows,
+                seg_widths,
+                planes,
+                sum_x: (0..n_windows).map(|_| rng.below(1 << 20) as i64).collect(),
+            }))
+        } else {
+            WireWindows::Int8(Arc::new(PackedWindowsI8 {
+                n_windows,
+                seg_widths,
+                planes,
+                sum_ux: (0..n_windows).map(|_| rng.below(1 << 20) as i64).collect(),
+            }))
+        }
+    }
+
+    fn rand_dispatch_request(rng: &mut Rng) -> DispatchRequest {
+        let n_shards = rng.below(5);
+        DispatchRequest {
+            request_id: rng.next_u64(),
+            shard_epoch: rng.next_u64(),
+            layer: rng.below(8) as u32,
+            shards: Arc::new(
+                (0..n_shards)
+                    .map(|f| ShardRef {
+                        chip: rng.below(8) as u32,
+                        filter: f as u32,
+                        span: rand_span(rng),
+                    })
+                    .collect(),
+            ),
+            windows: rand_windows(rng),
+        }
+    }
+
+    fn rand_dispatch_reply(rng: &mut Rng) -> DispatchReply {
+        let n = rng.below(5);
+        DispatchReply {
+            request_id: rng.next_u64(),
+            shard_epoch: rng.next_u64(),
+            layer: rng.below(8) as u32,
+            dots: (0..n)
+                .map(|f| {
+                    let extremes = rng.chance(0.3);
+                    let dots = (0..rng.below(6))
+                        .map(|_| {
+                            if extremes {
+                                if rng.chance(0.5) {
+                                    i64::MAX
+                                } else {
+                                    i64::MIN
+                                }
+                            } else {
+                                rng.next_u64() as i64
+                            }
+                        })
+                        .collect();
+                    (f as u32, dots)
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn prop_dispatch_round_trips_bit_exactly() {
+        forall(
+            "frame codec: DispatchRequest/DispatchReply encode→decode identity",
+            0xf4a3e,
+            40,
+            |rng| (rand_dispatch_request(rng), rand_dispatch_reply(rng)),
+            |(req, rep)| {
+                let got = decode_request(&encode_request(&WireRequest::Dispatch(req.clone())))
+                    .map_err(|e| e.to_string())?;
+                if got != WireRequest::Dispatch(req.clone()) {
+                    return Err(format!("request mangled: {got:?}"));
+                }
+                let got = decode_reply(&encode_reply(&WireReply::Dispatch(rep.clone())))
+                    .map_err(|e| e.to_string())?;
+                if got != WireReply::Dispatch(rep.clone()) {
+                    return Err(format!("reply mangled: {got:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_every_strict_prefix_of_a_dispatch_frame_is_rejected() {
+        forall(
+            "frame codec: truncated frames error, never panic or misparse",
+            0x7c47e,
+            12,
+            rand_dispatch_request,
+            |req| {
+                let buf = encode_request(&WireRequest::Dispatch(req.clone()));
+                for cut in 0..buf.len() {
+                    match decode_request(&buf[..cut]) {
+                        Err(TransportError::Frame(_)) => {}
+                        Err(e) => return Err(format!("cut {cut}: wrong error kind {e}")),
+                        Ok(_) => return Err(format!("cut {cut}: truncation decoded cleanly")),
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn max_width_int8_payload_round_trips() {
+        // ±127 extremes — the INT8 path's full dynamic range
+        let payload = OwnedPayload::Int8(vec![127, -127, 0, -1, 1, 127, -127]);
+        let req = WireRequest::Program(ProgramRequest { chip: 3, payload });
+        assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+        let bits = OwnedPayload::Binary(vec![true, false, true, true]);
+        let req = WireRequest::Program(ProgramRequest { chip: 0, payload: bits });
+        assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+    }
+
+    #[test]
+    fn control_messages_round_trip() {
+        for req in [
+            WireRequest::Wear,
+            WireRequest::Describe,
+            WireRequest::ResetEnergy,
+            WireRequest::Finish,
+        ] {
+            assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+        }
+        let wear = WearLedger { write_pulses: 7, programmed_cells: 9, wl_activations: 11 };
+        for rep in [
+            WireReply::Program(ProgramReply { span: None, failures: 2 }),
+            WireReply::Program(ProgramReply {
+                span: Some(RowSpan { slots: vec![(0, 1), (1, 2)], tail_width: 3, len: 33 }),
+                failures: 0,
+            }),
+            WireReply::Wear(WearReply { wear: vec![wear.clone()], rows_free: vec![12] }),
+            WireReply::Describe(BackendInfo { chips: 4, data_cols: 30 }),
+            WireReply::ResetEnergy,
+            WireReply::Finish(FinishReply { energy_pj: 123.5, wear: vec![wear] }),
+            WireReply::Err("stuck tile".into()),
+        ] {
+            assert_eq!(decode_reply(&encode_reply(&rep)).unwrap(), rep);
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_and_bad_tags_are_rejected() {
+        let mut buf = encode_request(&WireRequest::Wear);
+        buf.push(0);
+        assert!(matches!(decode_request(&buf), Err(TransportError::Frame(_))));
+        assert!(matches!(decode_request(&[0x7f]), Err(TransportError::Frame(_))));
+        assert!(matches!(decode_reply(&[0x01]), Err(TransportError::Frame(_))));
+        assert!(matches!(decode_request(&[]), Err(TransportError::Frame(_))));
+    }
+
+    #[test]
+    fn framing_round_trips_and_detects_truncation() {
+        let payload = encode_request(&WireRequest::Describe);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &payload).unwrap();
+        let mut r = &wire[..];
+        assert_eq!(read_frame(&mut r).unwrap(), payload);
+        // a second read on the drained stream is a clean close
+        assert!(matches!(read_frame(&mut r), Err(TransportError::Closed)));
+        // truncated body
+        let mut cut = &wire[..wire.len() - 1];
+        assert!(matches!(read_frame(&mut cut), Err(TransportError::Frame(_))));
+        // absurd length prefix fails fast
+        let mut bogus = &[0xff, 0xff, 0xff, 0xff][..];
+        assert!(matches!(read_frame(&mut bogus), Err(TransportError::Frame(_))));
+    }
+}

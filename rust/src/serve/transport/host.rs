@@ -1,0 +1,127 @@
+//! The worker daemon of the multi-host story: a [`Host`] binds a TCP
+//! listener, fabricates **its own** chip pool, and serves the
+//! [`Backend`](super::Backend) protocol to one client connection —
+//! decode a request frame, execute it on an in-process
+//! [`LocalBackend`], reply. A remote worker really is just a transport
+//! change: the host reuses the exact execution core the local path uses.
+//!
+//! The daemon is **single-session**: the first connection owns the pool
+//! until it sends `Finish` or hangs up, and then the daemon exits (the
+//! pool's terminal report has been issued — there is nothing left to
+//! serve; the in-tree usage pairs one host with one engine for the
+//! host's lifetime). A malformed frame gets an `Err` reply and the
+//! connection lives on — a bad client request must never take the
+//! silicon down.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::thread::JoinHandle;
+
+use super::frame::{self, WireReply, WireRequest};
+use super::local::LocalBackend;
+use super::{Backend, TransportError};
+use crate::serve::pool::PoolConfig;
+
+/// Host daemon construction knobs.
+#[derive(Clone, Debug, Default)]
+pub struct HostConfig {
+    /// The pool this host fabricates and owns.
+    pub pool: PoolConfig,
+}
+
+/// A running worker daemon. [`Host::spawn`] binds an OS-assigned
+/// loopback port; connect a [`super::remote::RemoteBackend`] to
+/// [`Host::addr`]. The daemon thread exits once a client finishes (or
+/// abandons) its session; [`Host::join`] reaps it.
+pub struct Host {
+    addr: SocketAddr,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Host {
+    /// Bind `127.0.0.1:0` and serve `cfg`'s pool from a daemon thread.
+    pub fn spawn(cfg: HostConfig) -> std::io::Result<Host> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let handle = std::thread::spawn(move || host_loop(listener, cfg));
+        Ok(Host { addr, handle: Some(handle) })
+    }
+
+    /// The address clients connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wait for the daemon to exit (after its client finished).
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn host_loop(listener: TcpListener, cfg: HostConfig) {
+    let Ok((stream, _)) = listener.accept() else { return };
+    let _ = stream.set_nodelay(true);
+    match LocalBackend::from_pool_config(&cfg.pool) {
+        Ok(mut backend) => {
+            serve_client(stream, &mut backend);
+            let _ = backend.finish();
+        }
+        Err(e) => {
+            // a host that cannot build its pool still answers: every
+            // request gets the construction error relayed
+            let msg = format!("host pool construction failed: {e}");
+            let mut stream = stream;
+            while frame::read_frame(&mut stream).is_ok() {
+                let rep = frame::encode_reply(&WireReply::Err(msg.clone()));
+                if frame::write_frame(&mut stream, &rep).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Serve one client connection to completion. Returns after `Finish`
+/// has been answered or the client hung up.
+fn serve_client(mut stream: TcpStream, backend: &mut LocalBackend) {
+    loop {
+        let payload = match frame::read_frame(&mut stream) {
+            Ok(p) => p,
+            Err(_) => return, // client gone (clean or not): session over
+        };
+        let (reply, done) = match frame::decode_request(&payload) {
+            Err(e) => (WireReply::Err(format!("bad request frame: {e}")), false),
+            Ok(req) => execute(backend, req),
+        };
+        let buf = frame::encode_reply(&reply);
+        if frame::write_frame(&mut stream, &buf).is_err() {
+            return;
+        }
+        if done {
+            return;
+        }
+    }
+}
+
+/// Run one decoded request against the backend; the bool says whether
+/// this was the session-ending `Finish`.
+fn execute(backend: &mut LocalBackend, req: WireRequest) -> (WireReply, bool) {
+    fn relay<T>(r: super::Result<T>, ok: impl FnOnce(T) -> WireReply) -> WireReply {
+        match r {
+            Ok(v) => ok(v),
+            Err(TransportError::Closed) => WireReply::Err("host backend closed".into()),
+            Err(e) => WireReply::Err(e.to_string()),
+        }
+    }
+    match req {
+        WireRequest::Describe => (relay(backend.describe(), WireReply::Describe), false),
+        WireRequest::Dispatch(r) => (relay(backend.dispatch(r), WireReply::Dispatch), false),
+        WireRequest::Program(r) => (relay(backend.program(r), WireReply::Program), false),
+        WireRequest::Wear => (relay(backend.wear(), WireReply::Wear), false),
+        WireRequest::ResetEnergy => {
+            (relay(backend.reset_energy(), |()| WireReply::ResetEnergy), false)
+        }
+        WireRequest::Finish => (relay(backend.finish(), WireReply::Finish), true),
+    }
+}

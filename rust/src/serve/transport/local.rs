@@ -1,0 +1,471 @@
+//! [`LocalBackend`]: the worker-per-chip pool of the seed serving stack,
+//! refactored onto the transport types. One OS thread per [`Chip`]
+//! computes dot maps, programs migrated shards, and reports wear; the
+//! backend front end fans a [`DispatchRequest`]'s shard list out by chip
+//! and merges the dot vectors back into one [`DispatchReply`].
+//!
+//! This is both halves of the wire: the in-process backend the engine
+//! uses directly, and the execution core a [`super::host::Host`] daemon
+//! wraps to serve [`super::remote::RemoteBackend`] clients.
+//!
+//! Workers are stateless with respect to routing — every dots job names
+//! the shards it wants — so the coordinator can re-shard between batches
+//! without touching a worker. Each worker *does* own its chip's
+//! [`RowAllocator`] (append-only, rows retired on stuck tiles), because
+//! allocation must live wherever the chip lives: on a remote host, the
+//! client cannot reach into the host's arrays.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::anyhow;
+
+use crate::chip::{Chip, WearLedger};
+use crate::cim::mapping::{store_bits, store_int8, RowAllocator, RowSpan};
+use crate::cim::vmm;
+use crate::serve::pool::{ChipPool, PoolConfig};
+
+use super::{
+    Backend, BackendInfo, DispatchReply, DispatchRequest, FinishReply, OwnedPayload, ProgramReply,
+    ProgramRequest, Result, ShardRef, TransportError, WearReply, WireWindows,
+};
+
+/// One instruction to a chip worker.
+enum ChipJob {
+    /// Compute dots of this chip's subset of the named shards.
+    Dots { shards: Arc<Vec<ShardRef>>, windows: WireWindows },
+    /// Allocate a fresh span and program the payload into it.
+    Program { payload: OwnedPayload },
+    /// Report lifetime wear + free rows.
+    Wear,
+    /// Zero the energy/timing ledgers (wear persists).
+    ResetEnergy,
+}
+
+/// A chip worker's answer, tagged with its chip index by the send loop.
+enum ChipReply {
+    Dots(Vec<(u32, Vec<i64>)>),
+    Programmed { span: Option<RowSpan>, failures: u64 },
+    Wear { wear: WearLedger, rows_free: u64 },
+    EnergyReset,
+}
+
+fn chip_worker(
+    idx: usize,
+    mut chip: Chip,
+    mut alloc: RowAllocator,
+    jobs: Receiver<ChipJob>,
+    results: Sender<(usize, ChipReply)>,
+) -> Chip {
+    while let Ok(job) = jobs.recv() {
+        let reply = match job {
+            ChipJob::Dots { shards, windows } => {
+                let mut dots = Vec::new();
+                for s in shards.iter().filter(|s| s.chip as usize == idx) {
+                    let d = match &windows {
+                        WireWindows::Binary(pw) => {
+                            vmm::binary_dots_batched(&mut chip, &s.span, pw)
+                        }
+                        WireWindows::Int8(pw) => vmm::int8_dots_batched(&mut chip, &s.span, pw),
+                    };
+                    dots.push((s.filter, d));
+                }
+                ChipReply::Dots(dots)
+            }
+            ChipJob::Program { payload } => match alloc.alloc(payload.cells()) {
+                None => ChipReply::Programmed { span: None, failures: 0 },
+                Some(span) => {
+                    let failures = match &payload {
+                        OwnedPayload::Binary(bits) => store_bits(&mut chip, &span, bits),
+                        OwnedPayload::Int8(ws) => store_int8(&mut chip, &span, ws),
+                    };
+                    // a failed store retires the span (append-only
+                    // allocator): the rows stay consumed either way
+                    ChipReply::Programmed { span: Some(span), failures: failures as u64 }
+                }
+            },
+            ChipJob::Wear => ChipReply::Wear {
+                wear: chip.wear.clone(),
+                rows_free: alloc.rows_free() as u64,
+            },
+            ChipJob::ResetEnergy => {
+                chip.reset_ledgers();
+                ChipReply::EnergyReset
+            }
+        };
+        if results.send((idx, reply)).is_err() {
+            break; // backend gone: shut down
+        }
+    }
+    chip
+}
+
+/// An in-process [`Backend`] over a pool of chips, one worker thread
+/// per chip. Dots jobs run in parallel across the involved chips; the
+/// control operations (program / wear / reset / finish) are sequential.
+pub struct LocalBackend {
+    job_txs: Vec<Sender<ChipJob>>,
+    res_rx: Receiver<(usize, ChipReply)>,
+    handles: Vec<JoinHandle<Chip>>,
+    data_cols: usize,
+    /// Array geometry (uniform across the pool), used to reject
+    /// semantically bogus shard addresses before they reach a worker.
+    blocks: usize,
+    logical_rows: usize,
+    finished: Option<FinishReply>,
+}
+
+impl LocalBackend {
+    /// Fabricate and form a fresh pool per `cfg` and spawn its workers.
+    pub fn from_pool_config(cfg: &PoolConfig) -> anyhow::Result<LocalBackend> {
+        let pool = ChipPool::new(cfg);
+        if pool.is_empty() {
+            return Err(anyhow!("engine needs a non-empty pool"));
+        }
+        let allocs: Vec<RowAllocator> = pool.chips().iter().map(RowAllocator::for_chip).collect();
+        LocalBackend::from_parts(pool.into_chips(), allocs)
+    }
+
+    /// Wrap already-built (possibly already-placed) chips with the row
+    /// allocators that placed them — the allocators must be the ones
+    /// used for any prior programming, or fresh allocations would
+    /// double-book occupied rows.
+    pub fn from_parts(chips: Vec<Chip>, allocs: Vec<RowAllocator>) -> anyhow::Result<LocalBackend> {
+        if chips.is_empty() {
+            return Err(anyhow!("engine needs a non-empty pool"));
+        }
+        if chips.len() != allocs.len() {
+            return Err(anyhow!("one row allocator per chip"));
+        }
+        let data_cols = chips[0].cfg().data_cols();
+        let blocks = chips[0].cfg().blocks;
+        let logical_rows = chips[0].cfg().logical_rows();
+        let (res_tx, res_rx) = channel::<(usize, ChipReply)>();
+        let mut job_txs = Vec::with_capacity(chips.len());
+        let mut handles = Vec::with_capacity(chips.len());
+        for (i, (chip, alloc)) in chips.into_iter().zip(allocs).enumerate() {
+            let (jtx, jrx) = channel::<ChipJob>();
+            let rtx = res_tx.clone();
+            handles.push(std::thread::spawn(move || chip_worker(i, chip, alloc, jrx, rtx)));
+            job_txs.push(jtx);
+        }
+        Ok(LocalBackend {
+            job_txs,
+            res_rx,
+            handles,
+            data_cols,
+            blocks,
+            logical_rows,
+            finished: None,
+        })
+    }
+
+    /// Reject a shard address the arrays cannot hold. The frame codec
+    /// guarantees well-formed *bytes*; this guards well-formed *content*
+    /// — a forged span must come back as a clean `Remote` error, never
+    /// panic a chip worker (which would hang the whole backend).
+    fn check_shard(&self, s: &ShardRef) -> Result<()> {
+        let n = self.job_txs.len();
+        if s.chip as usize >= n {
+            return Err(TransportError::Remote(format!(
+                "shard names chip {} of a {n}-chip backend",
+                s.chip
+            )));
+        }
+        let span = &s.span;
+        if span.slots.is_empty()
+            || span.tail_width == 0
+            || span.tail_width > self.data_cols
+            || span.len != (span.slots.len() - 1) * self.data_cols + span.tail_width
+        {
+            return Err(TransportError::Remote(format!(
+                "shard span geometry is inconsistent ({} slots, tail {}, len {})",
+                span.slots.len(),
+                span.tail_width,
+                span.len
+            )));
+        }
+        if let Some(&(b, r)) = span
+            .slots
+            .iter()
+            .find(|&&(b, r)| b >= self.blocks || r >= self.logical_rows)
+        {
+            return Err(TransportError::Remote(format!(
+                "shard slot ({b}, {r}) outside the {}x{} array geometry",
+                self.blocks, self.logical_rows
+            )));
+        }
+        Ok(())
+    }
+
+    fn live(&self) -> Result<()> {
+        if self.finished.is_some() {
+            return Err(TransportError::Closed);
+        }
+        Ok(())
+    }
+
+    fn send(&self, chip: usize, job: ChipJob) -> Result<()> {
+        self.job_txs[chip].send(job).map_err(|_| TransportError::Closed)
+    }
+
+    fn recv(&self) -> Result<(usize, ChipReply)> {
+        self.res_rx.recv().map_err(|_| TransportError::Closed)
+    }
+}
+
+impl Backend for LocalBackend {
+    fn describe(&mut self) -> Result<BackendInfo> {
+        self.live()?;
+        Ok(BackendInfo { chips: self.job_txs.len() as u32, data_cols: self.data_cols as u32 })
+    }
+
+    fn dispatch(&mut self, req: DispatchRequest) -> Result<DispatchReply> {
+        self.live()?;
+        // content validation (same spirit as `check_shard`): the dots
+        // kernels index planes/sums by window and assert span-vs-window
+        // geometry, so a forged shape must be rejected here, not let
+        // panic a worker
+        let (n_windows, n_seg, planes, sums) = match &req.windows {
+            WireWindows::Binary(pw) => {
+                (pw.n_windows, pw.seg_widths.len(), pw.planes.len(), pw.sum_x.len())
+            }
+            WireWindows::Int8(pw) => {
+                (pw.n_windows, pw.seg_widths.len(), pw.planes.len(), pw.sum_ux.len())
+            }
+        };
+        if planes != n_windows * 8 * n_seg || sums != n_windows {
+            return Err(TransportError::Remote(format!(
+                "packed windows shape is inconsistent ({n_windows} windows, {n_seg} segments, \
+                 {planes} plane words, {sums} sums)"
+            )));
+        }
+        let n = self.job_txs.len();
+        let mut involved = vec![false; n];
+        for s in req.shards.iter() {
+            self.check_shard(s)?;
+            if s.span.slots.len() != n_seg {
+                return Err(TransportError::Remote(format!(
+                    "shard span has {} row segments but the windows pack {n_seg}",
+                    s.span.slots.len()
+                )));
+            }
+            involved[s.chip as usize] = true;
+        }
+        let mut expected = 0usize;
+        for (c, on) in involved.iter().enumerate() {
+            if *on {
+                self.send(
+                    c,
+                    ChipJob::Dots { shards: Arc::clone(&req.shards), windows: req.windows.clone() },
+                )?;
+                expected += 1;
+            }
+        }
+        let mut dots = Vec::with_capacity(req.shards.len());
+        for _ in 0..expected {
+            match self.recv()? {
+                (_, ChipReply::Dots(d)) => dots.extend(d),
+                _ => unreachable!("only dots jobs are in flight during a dispatch"),
+            }
+        }
+        Ok(DispatchReply {
+            request_id: req.request_id,
+            shard_epoch: req.shard_epoch,
+            layer: req.layer,
+            dots,
+        })
+    }
+
+    fn program(&mut self, req: ProgramRequest) -> Result<ProgramReply> {
+        self.live()?;
+        let c = req.chip as usize;
+        if c >= self.job_txs.len() {
+            return Err(TransportError::Remote(format!(
+                "program names chip {c} of a {}-chip backend",
+                self.job_txs.len()
+            )));
+        }
+        self.send(c, ChipJob::Program { payload: req.payload })?;
+        match self.recv()? {
+            (_, ChipReply::Programmed { span, failures }) => Ok(ProgramReply { span, failures }),
+            _ => unreachable!("only the program job is in flight"),
+        }
+    }
+
+    fn wear(&mut self) -> Result<WearReply> {
+        self.live()?;
+        let n = self.job_txs.len();
+        for c in 0..n {
+            self.send(c, ChipJob::Wear)?;
+        }
+        let mut wear: Vec<Option<WearLedger>> = vec![None; n];
+        let mut rows_free = vec![0u64; n];
+        for _ in 0..n {
+            match self.recv()? {
+                (c, ChipReply::Wear { wear: w, rows_free: r }) => {
+                    wear[c] = Some(w);
+                    rows_free[c] = r;
+                }
+                _ => unreachable!("only wear probes are in flight"),
+            }
+        }
+        Ok(WearReply {
+            wear: wear.into_iter().map(|w| w.expect("every chip reports wear")).collect(),
+            rows_free,
+        })
+    }
+
+    fn reset_energy(&mut self) -> Result<()> {
+        self.live()?;
+        let n = self.job_txs.len();
+        for c in 0..n {
+            self.send(c, ChipJob::ResetEnergy)?;
+        }
+        for _ in 0..n {
+            match self.recv()? {
+                (_, ChipReply::EnergyReset) => {}
+                _ => unreachable!("only energy resets are in flight"),
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<FinishReply> {
+        if let Some(rep) = &self.finished {
+            return Ok(rep.clone());
+        }
+        self.job_txs.clear(); // hang up: workers drain and return chips
+        let chips: Vec<Chip> = std::mem::take(&mut self.handles)
+            .into_iter()
+            .map(|h| h.join().expect("chip worker panicked"))
+            .collect();
+        let rep = FinishReply {
+            energy_pj: chips.iter().map(|c| c.energy_breakdown().total_pj()).sum(),
+            wear: chips.iter().map(|c| c.wear.clone()).collect(),
+        };
+        self.finished = Some(rep.clone());
+        Ok(rep)
+    }
+}
+
+impl Drop for LocalBackend {
+    fn drop(&mut self) {
+        let _ = self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipConfig;
+    use crate::cim::mapping::segment_widths;
+
+    fn backend(chips: usize, seed: u64) -> LocalBackend {
+        LocalBackend::from_pool_config(&PoolConfig {
+            chips,
+            chip: ChipConfig::small_test(),
+            seed,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn program_then_dispatch_is_bit_exact_vs_reference() {
+        let mut b = backend(2, 0x10ca1);
+        let info = b.describe().unwrap();
+        assert_eq!(info.chips, 2);
+        let bits: Vec<bool> = (0..17).map(|i| i % 3 == 0).collect();
+        let rep = b
+            .program(ProgramRequest { chip: 1, payload: OwnedPayload::Binary(bits.clone()) })
+            .unwrap();
+        assert_eq!(rep.failures, 0, "ideal chip stores cleanly");
+        let span = rep.span.expect("fresh chip has rows");
+        // two windows of u8 activations against the stored sign bits
+        let widths = segment_widths(bits.len(), info.data_cols as usize);
+        let flat: Vec<u8> = (0..2 * bits.len()).map(|i| (i * 7 % 256) as u8).collect();
+        let pw = Arc::new(vmm::pack_windows(&flat, &widths));
+        let reply = b
+            .dispatch(DispatchRequest {
+                request_id: 42,
+                shard_epoch: 7,
+                layer: 0,
+                shards: Arc::new(vec![ShardRef { chip: 1, filter: 5, span }]),
+                windows: WireWindows::Binary(pw),
+            })
+            .unwrap();
+        assert_eq!((reply.request_id, reply.shard_epoch, reply.layer), (42, 7, 0));
+        assert_eq!(reply.dots.len(), 1);
+        let (f, dots) = &reply.dots[0];
+        assert_eq!(*f, 5);
+        let want: Vec<i64> = flat
+            .chunks(bits.len())
+            .map(|w| vmm::binary_dot_ref(&bits, w))
+            .collect();
+        assert_eq!(dots, &want, "backend dots diverge from the integer reference");
+    }
+
+    #[test]
+    fn wear_and_finish_report_per_chip_state() {
+        let mut b = backend(3, 0x10ca2);
+        let w = b.wear().unwrap();
+        assert_eq!(w.wear.len(), 3);
+        assert_eq!(w.rows_free.len(), 3);
+        assert!(w.wear.iter().all(|l| l.write_pulses > 0), "forming wear on the ledgers");
+        assert!(w.rows_free.iter().all(|&r| r > 0));
+        b.reset_energy().unwrap();
+        let fin = b.finish().unwrap();
+        assert_eq!(fin.wear.len(), 3);
+        assert_eq!(fin.energy_pj, 0.0, "energy ledgers were just reset");
+        // after finish every op is a clean Closed error
+        assert!(matches!(b.describe(), Err(TransportError::Closed)));
+        assert!(matches!(b.wear(), Err(TransportError::Closed)));
+        // finish is idempotent
+        assert_eq!(b.finish().unwrap().wear.len(), 3);
+    }
+
+    #[test]
+    fn bad_chip_index_is_a_clean_remote_error() {
+        let mut b = backend(1, 0x10ca3);
+        let err = b
+            .program(ProgramRequest { chip: 9, payload: OwnedPayload::Binary(vec![true]) })
+            .unwrap_err();
+        assert!(matches!(err, TransportError::Remote(_)));
+    }
+
+    #[test]
+    fn forged_shard_content_is_rejected_not_panicked() {
+        // a wire-decodable request can still be semantically bogus; the
+        // backend must answer with a Remote error, never panic a worker
+        // (which would hang every later dispatch)
+        let mut b = backend(1, 0x10ca4);
+        let info = b.describe().unwrap();
+        let windows = WireWindows::Binary(Arc::new(vmm::PackedWindows {
+            n_windows: 1,
+            seg_widths: vec![4],
+            planes: vec![0; 8],
+            sum_x: vec![0],
+        }));
+        let dispatch = |b: &mut LocalBackend, span: RowSpan| {
+            b.dispatch(DispatchRequest {
+                request_id: 1,
+                shard_epoch: 1,
+                layer: 0,
+                shards: Arc::new(vec![ShardRef { chip: 0, filter: 0, span }]),
+                windows: windows.clone(),
+            })
+        };
+        // out-of-range row
+        let bogus = RowSpan { slots: vec![(0, 99_999)], tail_width: 4, len: 4 };
+        assert!(matches!(dispatch(&mut b, bogus), Err(TransportError::Remote(_))));
+        // inconsistent span geometry
+        let bogus = RowSpan { slots: vec![(0, 0)], tail_width: 4, len: 4000 };
+        assert!(matches!(dispatch(&mut b, bogus), Err(TransportError::Remote(_))));
+        // span segments disagree with the packed windows
+        let bogus = RowSpan { slots: vec![(0, 0), (0, 1)], tail_width: 4, len: info.data_cols as usize + 4 };
+        assert!(matches!(dispatch(&mut b, bogus), Err(TransportError::Remote(_))));
+        // the backend is still alive and serving
+        assert_eq!(b.describe().unwrap().chips, 1);
+    }
+}

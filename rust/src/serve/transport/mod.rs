@@ -1,0 +1,298 @@
+//! The transport-agnostic execution seam of the serving stack: a
+//! [`Backend`] is "somewhere that holds programmed shards and computes
+//! integer dot maps", reachable through owned, `Send`, wire-serializable
+//! request/reply types — so a remote worker is a *transport* change, not
+//! a *protocol* change.
+//!
+//! This module replaces the seed-era `pub(crate) trait Dispatch` (a
+//! callback-based, borrow-heavy, in-process-only contract): the batch
+//! executor now builds a [`DispatchRequest`] per layer (request id,
+//! shard epoch, shard list, packed activation windows) and folds the
+//! [`DispatchReply`]'s integer dots, whoever computed them.
+//!
+//! # Pieces
+//!
+//! | type | role |
+//! |---|---|
+//! | [`Backend`] | the RPC-shaped seam (dispatch / program / wear / finish) |
+//! | [`local::LocalBackend`] | worker-per-chip pool in this process |
+//! | [`remote::RemoteBackend`] | length-prefixed frames over TCP ([`frame`]) |
+//! | [`host::Host`] | loopback worker daemon serving its own pool |
+//! | [`router::ShardRouter`] | layer sharding, replica groups, hedging, spillover |
+//!
+//! # Numeric contract
+//!
+//! Chip dots are integer-exact and the payload programmed into every
+//! replica is byte-identical, so any backend combination — local pool,
+//! TCP-loopback host, a hedged replica group — returns bit-identical
+//! [`DispatchReply::dots`] for the same request. That is what makes
+//! hedging safe: the first reply to arrive *is* the answer, and a late
+//! duplicate (matched by request id + shard epoch) can be discarded
+//! without reconciliation. An analogue CIM fleet could not make this
+//! guarantee — per-chip drift would make replica replies disagree.
+
+pub mod frame;
+pub mod host;
+pub mod local;
+pub mod remote;
+pub mod router;
+
+use std::sync::Arc;
+
+use crate::chip::WearLedger;
+use crate::cim::mapping::RowSpan;
+use crate::cim::vmm::{PackedWindows, PackedWindowsI8};
+use crate::serve::model::ShardPayload;
+
+pub use host::{Host, HostConfig};
+pub use local::LocalBackend;
+pub use remote::RemoteBackend;
+pub use router::{
+    HedgeConfig, LayerRoute, PlacedLayer, RouterConfig, RouterPlacement, RouterStats, ShardRouter,
+    TenantRoute,
+};
+
+/// Transport-layer failure: the connection, the frame, or the far side.
+#[derive(Debug)]
+pub enum TransportError {
+    /// Socket-level failure (connect, read, write).
+    Io(std::io::Error),
+    /// A frame that cannot be decoded (truncated, oversized, bad tag,
+    /// trailing garbage) — the protocol equivalent of memory corruption,
+    /// always surfaced, never guessed around.
+    Frame(String),
+    /// The far side executed the request and reported an error.
+    Remote(String),
+    /// The backend has already finished (or its worker is gone).
+    Closed,
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Io(e) => write!(f, "transport i/o: {e}"),
+            TransportError::Frame(m) => write!(f, "bad frame: {m}"),
+            TransportError::Remote(m) => write!(f, "remote error: {m}"),
+            TransportError::Closed => write!(f, "backend closed"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e)
+    }
+}
+
+/// Transport-layer result.
+pub type Result<T> = std::result::Result<T, TransportError>;
+
+/// One batch's packed activation windows for one layer, shared by every
+/// shard of that layer. `Arc`-wrapped so an in-process send costs one
+/// refcount bump; the wire codec serializes through the `Arc`.
+#[derive(Clone, Debug)]
+pub enum WireWindows {
+    /// Binary path: u8 activations as 8 bit planes ([`PackedWindows`]).
+    Binary(Arc<PackedWindows>),
+    /// INT8 path: offset-encoded i8 activations ([`PackedWindowsI8`]).
+    Int8(Arc<PackedWindowsI8>),
+}
+
+impl WireWindows {
+    /// Activation windows carried (0 for an empty batch).
+    pub fn n_windows(&self) -> usize {
+        match self {
+            WireWindows::Binary(pw) => pw.n_windows,
+            WireWindows::Int8(pw) => pw.n_windows,
+        }
+    }
+}
+
+impl PartialEq for WireWindows {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (WireWindows::Binary(a), WireWindows::Binary(b)) => {
+                a.n_windows == b.n_windows
+                    && a.seg_widths == b.seg_widths
+                    && a.planes == b.planes
+                    && a.sum_x == b.sum_x
+            }
+            (WireWindows::Int8(a), WireWindows::Int8(b)) => {
+                a.n_windows == b.n_windows
+                    && a.seg_widths == b.seg_widths
+                    && a.planes == b.planes
+                    && a.sum_ux == b.sum_ux
+            }
+            _ => false,
+        }
+    }
+}
+
+/// One shard's address inside a backend: which chip, which filter the
+/// dots belong to, and the row span the payload was programmed into.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardRef {
+    /// Chip index within the backend's own pool.
+    pub chip: u32,
+    /// Filter (output channel) index within the layer.
+    pub filter: u32,
+    /// Rows holding the shard's cells on that chip.
+    pub span: RowSpan,
+}
+
+/// One layer's dots RPC: compute the integer dot vector of every named
+/// shard against the shared packed windows. Owned and `Send`; the shard
+/// list rides along with every request, so backends hold no routing
+/// state and the coordinator can re-shard between batches.
+#[derive(Clone, Debug)]
+pub struct DispatchRequest {
+    /// Unique per logical dispatch; a hedged duplicate reuses the id so
+    /// the router can accept the first reply and discard the second.
+    pub request_id: u64,
+    /// The placement generation these shard addresses belong to; bumped
+    /// by every migration. A reply carrying a stale epoch is discarded.
+    pub shard_epoch: u64,
+    /// Model layer index (for tracing; routing is by the shard list).
+    pub layer: u32,
+    /// The shards to compute, addressed within the receiving backend.
+    pub shards: Arc<Vec<ShardRef>>,
+    /// The batch's packed activation windows, shared by every shard.
+    pub windows: WireWindows,
+}
+
+impl PartialEq for DispatchRequest {
+    fn eq(&self, other: &Self) -> bool {
+        self.request_id == other.request_id
+            && self.shard_epoch == other.shard_epoch
+            && self.layer == other.layer
+            && *self.shards == *other.shards
+            && self.windows == other.windows
+    }
+}
+
+/// The dots answer to one [`DispatchRequest`], echoing the request id
+/// and shard epoch so duplicates (hedges, stale placements) are
+/// discarded by identity, never by guesswork.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DispatchReply {
+    pub request_id: u64,
+    pub shard_epoch: u64,
+    pub layer: u32,
+    /// `(filter, dots per window)` for every requested shard, in
+    /// whatever order the backend's chips finished.
+    pub dots: Vec<(u32, Vec<i64>)>,
+}
+
+/// An owned shard payload as the wire carries it — byte-identical to
+/// what initial placement stored, so a re-programmed replica computes
+/// bit-identical dots.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum OwnedPayload {
+    /// Binary sign bits, 1 RRAM cell per weight.
+    Binary(Vec<bool>),
+    /// INT8 weights, offset-encoded into 4 cells per weight.
+    Int8(Vec<i8>),
+}
+
+impl OwnedPayload {
+    /// RRAM cells this payload occupies when programmed.
+    pub fn cells(&self) -> usize {
+        match self {
+            OwnedPayload::Binary(bits) => bits.len(),
+            OwnedPayload::Int8(ws) => 4 * ws.len(),
+        }
+    }
+}
+
+impl From<ShardPayload<'_>> for OwnedPayload {
+    fn from(p: ShardPayload<'_>) -> Self {
+        match p {
+            ShardPayload::Binary(bits) => OwnedPayload::Binary(bits.to_vec()),
+            ShardPayload::Int8(ws) => OwnedPayload::Int8(ws.to_vec()),
+        }
+    }
+}
+
+/// Program one shard's payload into a fresh row span on the named chip
+/// of the receiving backend (placement and migration both speak this).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProgramRequest {
+    /// Chip index within the backend's pool.
+    pub chip: u32,
+    pub payload: OwnedPayload,
+}
+
+/// The outcome of a [`ProgramRequest`]. `span: None` means the chip had
+/// too few free rows; `failures > 0` means stuck cells defeated the ECC
+/// and the span was retired (the rows stay consumed, mirroring the
+/// placement policy) — the caller must not route dots at it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProgramReply {
+    pub span: Option<RowSpan>,
+    pub failures: u64,
+}
+
+/// Per-chip lifetime wear + free rows of one backend — the rebalancer's
+/// input, fetched at batch boundaries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WearReply {
+    pub wear: Vec<WearLedger>,
+    pub rows_free: Vec<u64>,
+}
+
+/// Static facts about a backend, fetched once at connection time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BackendInfo {
+    /// Chips in the backend's pool.
+    pub chips: u32,
+    /// Data columns per array row (must match across a fleet — the
+    /// window packing geometry depends on it).
+    pub data_cols: u32,
+}
+
+/// The backend's terminal report: serving energy spent and final wear.
+/// After `finish` a backend accepts no further requests.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FinishReply {
+    pub energy_pj: f64,
+    pub wear: Vec<WearLedger>,
+}
+
+/// The serving stack's execution seam: anything that holds programmed
+/// shards and can compute integer dot maps against packed activation
+/// windows. All methods are synchronous request/reply — concurrency
+/// (fan-out across backends, hedging) is the [`router::ShardRouter`]'s
+/// job, which drives each backend from its own thread.
+///
+/// Implementations ship in-tree for both sides of the wire:
+/// [`local::LocalBackend`] (worker-per-chip pool in this process, also
+/// the execution engine inside a [`host::Host`] daemon) and
+/// [`remote::RemoteBackend`] (frames over TCP). The bit-exactness
+/// property harness passes identically over either — see
+/// `tests/transport_remote.rs`.
+pub trait Backend: Send {
+    /// Pool shape facts (chip count, data-column geometry).
+    fn describe(&mut self) -> Result<BackendInfo>;
+
+    /// Compute the integer dots of every shard named in `req` against
+    /// its packed windows. The reply echoes `request_id`/`shard_epoch`.
+    fn dispatch(&mut self, req: DispatchRequest) -> Result<DispatchReply>;
+
+    /// Program a shard payload into a fresh span on one of this
+    /// backend's chips (see [`ProgramReply`] for the partial-failure
+    /// contract).
+    fn program(&mut self, req: ProgramRequest) -> Result<ProgramReply>;
+
+    /// Lifetime wear + free rows per chip.
+    fn wear(&mut self) -> Result<WearReply>;
+
+    /// Zero the energy/timing ledgers (wear persists) — called once
+    /// after placement so serving measurements exclude programming.
+    fn reset_energy(&mut self) -> Result<()>;
+
+    /// Stop the backend's workers and collect the terminal report.
+    /// Every call after this returns [`TransportError::Closed`].
+    fn finish(&mut self) -> Result<FinishReply>;
+}

@@ -1,0 +1,91 @@
+//! [`RemoteBackend`]: the [`Backend`](super::Backend) trait spoken over
+//! a TCP connection as length-prefixed frames ([`super::frame`]) — the
+//! client half of the multi-host story. The server half is a
+//! [`super::host::Host`] daemon serving its own pool.
+//!
+//! The protocol is strictly synchronous per connection (one request in
+//! flight at a time); the [`super::router::ShardRouter`] gets
+//! concurrency by driving each backend from its own thread, which is
+//! what makes hedging a straggling host possible without an async
+//! runtime.
+
+use std::net::{TcpStream, ToSocketAddrs};
+
+use super::frame::{self, WireReply, WireRequest};
+use super::{
+    Backend, BackendInfo, DispatchReply, DispatchRequest, FinishReply, ProgramReply,
+    ProgramRequest, Result, TransportError, WearReply,
+};
+
+/// A backend living behind a TCP connection (loopback in the in-tree
+/// tests and examples; the framing is address-agnostic).
+pub struct RemoteBackend {
+    stream: Option<TcpStream>,
+}
+
+impl RemoteBackend {
+    /// Connect to a [`super::host::Host`] daemon.
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<RemoteBackend> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(RemoteBackend { stream: Some(stream) })
+    }
+
+    fn call(&mut self, req: &WireRequest) -> Result<WireReply> {
+        let stream = self.stream.as_mut().ok_or(TransportError::Closed)?;
+        frame::write_frame(stream, &frame::encode_request(req))?;
+        let payload = frame::read_frame(stream)?;
+        match frame::decode_reply(&payload)? {
+            WireReply::Err(msg) => Err(TransportError::Remote(msg)),
+            rep => Ok(rep),
+        }
+    }
+}
+
+impl Backend for RemoteBackend {
+    fn describe(&mut self) -> Result<BackendInfo> {
+        match self.call(&WireRequest::Describe)? {
+            WireReply::Describe(info) => Ok(info),
+            rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to Describe"))),
+        }
+    }
+
+    fn dispatch(&mut self, req: DispatchRequest) -> Result<DispatchReply> {
+        match self.call(&WireRequest::Dispatch(req))? {
+            WireReply::Dispatch(rep) => Ok(rep),
+            rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to Dispatch"))),
+        }
+    }
+
+    fn program(&mut self, req: ProgramRequest) -> Result<ProgramReply> {
+        match self.call(&WireRequest::Program(req))? {
+            WireReply::Program(rep) => Ok(rep),
+            rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to Program"))),
+        }
+    }
+
+    fn wear(&mut self) -> Result<WearReply> {
+        match self.call(&WireRequest::Wear)? {
+            WireReply::Wear(rep) => Ok(rep),
+            rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to Wear"))),
+        }
+    }
+
+    fn reset_energy(&mut self) -> Result<()> {
+        match self.call(&WireRequest::ResetEnergy)? {
+            WireReply::ResetEnergy => Ok(()),
+            rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to ResetEnergy"))),
+        }
+    }
+
+    fn finish(&mut self) -> Result<FinishReply> {
+        let rep = self.call(&WireRequest::Finish)?;
+        // the host closes its side after Finish; drop ours too so a
+        // late call is a clean Closed, not a broken pipe
+        self.stream = None;
+        match rep {
+            WireReply::Finish(rep) => Ok(rep),
+            rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to Finish"))),
+        }
+    }
+}

@@ -1,0 +1,1025 @@
+//! [`ShardRouter`]: the fleet-shaped composite over N [`Backend`]s —
+//! one tenant's layers split across backends ("groups"), each group
+//! optionally a **replica set** holding byte-identical shard payloads,
+//! with request **hedging** for tail latency and dispatch-plane
+//! **spillover** off a full member queue.
+//!
+//! # Topology
+//!
+//! ```text
+//!   ShardRouter
+//!     ├─ group 0: layers 0..k     [ member A ─ replica A' ]   (hedged pair)
+//!     └─ group 1: layers k..N     [ member B ]                (solo)
+//! ```
+//!
+//! Each member backend is driven from its own thread, so a synchronous
+//! `Backend` (a TCP host, a local pool) becomes concurrently
+//! dispatchable without an async runtime. The router itself is used
+//! from one coordinator thread; its concurrency is *across members*.
+//!
+//! # Hedging invariant
+//!
+//! A dispatch goes to one member of the owning group (round-robin). If
+//! no reply lands within the hedge deadline — derived from the group's
+//! dispatch [`LatencyHistogram`] (`quantile(q) × factor`, clamped), or
+//! fixed via [`HedgeConfig::after`] — the *same* request (same request
+//! id, same shard epoch, the replica's own shard spans) is duplicated
+//! to the next replica. Replies are bit-exact across replicas (digital
+//! chips, byte-identical payloads), so **the first reply wins** and the
+//! loser is discarded by `(request id, shard epoch)` identity when it
+//! eventually arrives. A hedged duplicate can therefore never produce a
+//! second answer to the caller: `dispatch_layer` returns exactly once
+//! per request id, and stale replies only increment a counter.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use crate::serve::model::ModelBundle;
+use crate::serve::placement::Placement;
+use crate::serve::stats::LatencyHistogram;
+
+use super::{
+    Backend, BackendInfo, DispatchReply, DispatchRequest, FinishReply, OwnedPayload, ProgramReply,
+    ProgramRequest, Result, ShardRef, TransportError, WearReply, WireWindows,
+};
+
+/// When to duplicate a straggling dispatch to a replica.
+#[derive(Clone, Debug)]
+pub struct HedgeConfig {
+    /// Master switch (hedging also needs a group with ≥ 2 members).
+    pub enabled: bool,
+    /// Fixed deadline override. `Some(Duration::ZERO)` hedges every
+    /// dispatch — the determinism knob the duplicate-discard tests use.
+    /// `None` derives the deadline from the latency histogram.
+    pub after: Option<Duration>,
+    /// Histogram quantile the deadline is derived from (0..=1).
+    pub quantile: f64,
+    /// Multiplier on the quantile estimate.
+    pub factor: f64,
+    /// Below this many recorded dispatches the deadline stays at
+    /// `ceiling` (no meaningful tail estimate yet).
+    pub min_samples: u64,
+    /// Deadline clamp, low side.
+    pub floor: Duration,
+    /// Deadline clamp, high side (also the cold-start deadline).
+    pub ceiling: Duration,
+}
+
+impl Default for HedgeConfig {
+    fn default() -> Self {
+        HedgeConfig {
+            enabled: true,
+            after: None,
+            quantile: 0.99,
+            factor: 4.0,
+            min_samples: 64,
+            floor: Duration::from_micros(200),
+            ceiling: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Router construction knobs.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    pub hedge: HedgeConfig,
+    /// Bound on queued-but-unstarted jobs per member; a full primary
+    /// queue spills the dispatch to its replica.
+    pub inflight: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { hedge: HedgeConfig::default(), inflight: 32 }
+    }
+}
+
+/// Fleet-level dispatch counters (surfaced in
+/// [`crate::serve::EngineReport::transport`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Layer dispatches issued (hedged duplicates not double-counted).
+    pub dispatches: u64,
+    /// Duplicates sent to a replica after the hedge deadline (or after
+    /// the only outstanding attempt failed).
+    pub hedges_fired: u64,
+    /// Hedged dispatches whose *duplicate* replied first.
+    pub hedge_wins: u64,
+    /// Replies discarded by request-id/epoch identity (the losing half
+    /// of a hedge, arriving after its request was already answered).
+    pub stale_discarded: u64,
+    /// Dispatches rerouted to a replica because the chosen member's
+    /// bounded queue was full (dispatch-plane admission spillover).
+    pub spills: u64,
+}
+
+enum MemberJob {
+    Dispatch(DispatchRequest),
+    Program(ProgramRequest),
+    Wear,
+    Describe,
+    ResetEnergy,
+    Finish,
+}
+
+enum MemberReply {
+    Dispatch { request_id: u64, result: Result<DispatchReply> },
+    Program(Result<ProgramReply>),
+    Wear(Result<WearReply>),
+    Describe(Result<BackendInfo>),
+    ResetEnergy(Result<()>),
+    Finish(Result<FinishReply>),
+}
+
+fn member_worker(
+    idx: usize,
+    mut backend: Box<dyn Backend>,
+    jobs: Receiver<MemberJob>,
+    results: Sender<(usize, MemberReply)>,
+) {
+    while let Ok(job) = jobs.recv() {
+        let (reply, done) = match job {
+            MemberJob::Dispatch(req) => {
+                let request_id = req.request_id;
+                (MemberReply::Dispatch { request_id, result: backend.dispatch(req) }, false)
+            }
+            MemberJob::Program(req) => (MemberReply::Program(backend.program(req)), false),
+            MemberJob::Wear => (MemberReply::Wear(backend.wear()), false),
+            MemberJob::Describe => (MemberReply::Describe(backend.describe()), false),
+            MemberJob::ResetEnergy => (MemberReply::ResetEnergy(backend.reset_energy()), false),
+            MemberJob::Finish => (MemberReply::Finish(backend.finish()), true),
+        };
+        if results.send((idx, reply)).is_err() {
+            break; // router gone: shut down
+        }
+        if done {
+            break;
+        }
+    }
+}
+
+struct Member {
+    job_tx: Option<SyncSender<MemberJob>>,
+    handle: Option<JoinHandle<()>>,
+    group: usize,
+    local: usize,
+    info: BackendInfo,
+    /// Client-side mirror of per-chip free rows (kept exact by every
+    /// program reply; resynced from every wear probe).
+    rows_free: Vec<usize>,
+    /// Placement-ranking wear estimate per chip (resynced likewise).
+    est_pulses: Vec<u64>,
+    /// Rows consumed per chip over this router's lifetime (placement,
+    /// stuck retries, migrations — retired rows included).
+    rows_used: Vec<usize>,
+}
+
+struct Group {
+    members: Vec<usize>,
+    lat: LatencyHistogram,
+    rr: usize,
+}
+
+/// One tenant's layer → group/shard routing, built from a
+/// [`RouterPlacement`] and carried into every batch. Rebuilt (with a
+/// bumped epoch) whenever a migration lands; in-flight requests keep
+/// the old `Arc`s alive until their replies are folded or discarded.
+#[derive(Clone, Debug)]
+pub struct TenantRoute {
+    /// Placement generation — stamped into every request, echoed in
+    /// every reply, checked before a reply is accepted.
+    pub epoch: u64,
+    pub layers: Vec<LayerRoute>,
+}
+
+/// One layer's route: the owning group and, per group member, the
+/// member-local shard list (each replica holds its own spans).
+#[derive(Clone, Debug)]
+pub struct LayerRoute {
+    pub group: usize,
+    pub shards: Vec<Arc<Vec<ShardRef>>>,
+}
+
+impl TenantRoute {
+    /// Build the per-batch routing view of a [`RouterPlacement`].
+    pub fn from_placement(p: &RouterPlacement, epoch: u64) -> TenantRoute {
+        TenantRoute {
+            epoch,
+            layers: p
+                .layers
+                .iter()
+                .map(|pl| LayerRoute {
+                    group: pl.group,
+                    shards: pl
+                        .shards
+                        .iter()
+                        .map(|ms| Arc::new(ms.iter().flatten().cloned().collect::<Vec<_>>()))
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Adapt a legacy single-pool [`Placement`] (chips addressed
+    /// directly, no replicas) onto a single-member group-0 route — how
+    /// the legacy [`crate::serve::Server`] rides the transport seam.
+    pub fn single_member(p: &Placement) -> TenantRoute {
+        TenantRoute {
+            epoch: 0,
+            layers: p
+                .shards
+                .iter()
+                .map(|layer| LayerRoute {
+                    group: 0,
+                    shards: vec![Arc::new(
+                        layer
+                            .iter()
+                            .enumerate()
+                            .filter_map(|(f, loc)| {
+                                loc.as_ref().map(|loc| ShardRef {
+                                    chip: loc.chip as u32,
+                                    filter: f as u32,
+                                    span: loc.span.clone(),
+                                })
+                            })
+                            .collect::<Vec<_>>(),
+                    )],
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One model's placement across the router's fleet: per layer, the
+/// owning group and — per group member — where every live filter's
+/// payload was programmed. Replicas hold the same *payloads* in their
+/// own *spans*.
+#[derive(Clone, Debug)]
+pub struct RouterPlacement {
+    pub layers: Vec<PlacedLayer>,
+    /// Store attempts abandoned to stuck tiles across all members.
+    pub stuck_retries: usize,
+}
+
+/// See [`RouterPlacement`]; `shards[member_local][filter]`.
+#[derive(Clone, Debug)]
+pub struct PlacedLayer {
+    pub group: usize,
+    pub shards: Vec<Vec<Option<ShardRef>>>,
+}
+
+impl RouterPlacement {
+    /// Rows currently occupied by live shards on one member of one
+    /// group — what per-member tenant row quotas are enforced against.
+    pub fn rows_live_on(&self, group: usize, member_local: usize) -> usize {
+        self.layers
+            .iter()
+            .filter(|pl| pl.group == group)
+            .flat_map(|pl| pl.shards[member_local].iter().flatten())
+            .map(|s| s.span.slots.len())
+            .sum()
+    }
+
+    /// Placed (live) shards, counted once per logical shard (replicas
+    /// do not multiply the count).
+    pub fn live_shards(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|pl| pl.shards[0].iter().filter(|s| s.is_some()).count())
+            .sum()
+    }
+}
+
+enum PlaceOutcome {
+    Placed { chip: usize, span: crate::cim::mapping::RowSpan, retries: usize },
+    NoRoom { retries: usize },
+}
+
+/// The composite front end over the fleet. See the module docs for the
+/// topology and the hedging invariant.
+pub struct ShardRouter {
+    cfg: RouterConfig,
+    members: Vec<Member>,
+    groups: Vec<Group>,
+    res_rx: Receiver<(usize, MemberReply)>,
+    next_request: u64,
+    stats: RouterStats,
+}
+
+impl ShardRouter {
+    /// Build a router over `groups` of replica backends: `groups[g]`
+    /// all hold the same shards once a model is placed; distinct groups
+    /// own distinct layer ranges. Fails if any group is empty or the
+    /// backends disagree on data-column geometry.
+    pub fn new(groups: Vec<Vec<Box<dyn Backend>>>, cfg: RouterConfig) -> anyhow::Result<ShardRouter> {
+        if groups.is_empty() || groups.iter().any(|g| g.is_empty()) {
+            return Err(anyhow!("router needs at least one backend per group"));
+        }
+        if cfg.inflight == 0 {
+            return Err(anyhow!("router inflight bound must be positive"));
+        }
+        let (res_tx, res_rx) = channel::<(usize, MemberReply)>();
+        let mut members: Vec<Member> = Vec::new();
+        let mut group_meta: Vec<Group> = Vec::new();
+        for (gi, group) in groups.into_iter().enumerate() {
+            let mut ids = Vec::with_capacity(group.len());
+            for (li, backend) in group.into_iter().enumerate() {
+                let idx = members.len();
+                let (jtx, jrx) = std::sync::mpsc::sync_channel::<MemberJob>(cfg.inflight);
+                let rtx = res_tx.clone();
+                let handle = std::thread::spawn(move || member_worker(idx, backend, jrx, rtx));
+                members.push(Member {
+                    job_tx: Some(jtx),
+                    handle: Some(handle),
+                    group: gi,
+                    local: li,
+                    info: BackendInfo { chips: 0, data_cols: 0 },
+                    rows_free: Vec::new(),
+                    est_pulses: Vec::new(),
+                    rows_used: Vec::new(),
+                });
+                ids.push(idx);
+            }
+            group_meta.push(Group { members: ids, lat: LatencyHistogram::default(), rr: 0 });
+        }
+        drop(res_tx);
+        let mut router = ShardRouter {
+            cfg,
+            members,
+            groups: group_meta,
+            res_rx,
+            next_request: 0,
+            stats: RouterStats::default(),
+        };
+        for m in 0..router.members.len() {
+            let info = match router.call(m, MemberJob::Describe)? {
+                MemberReply::Describe(r) => r?,
+                _ => unreachable!("describe answers describe"),
+            };
+            if info.chips == 0 {
+                return Err(anyhow!("backend {m} has no chips"));
+            }
+            router.members[m].info = info;
+            router.members[m].rows_used = vec![0; router.members[m].info.chips as usize];
+            router.wear_member(m)?;
+        }
+        let dc = router.members[0].info.data_cols;
+        if router.members.iter().any(|m| m.info.data_cols != dc) {
+            return Err(anyhow!("backends disagree on data-column geometry"));
+        }
+        Ok(router)
+    }
+
+    /// A trivial fleet: one group, one member — the drop-in shape for
+    /// single-pool serving (local or remote alike).
+    pub fn single(backend: Box<dyn Backend>) -> anyhow::Result<ShardRouter> {
+        ShardRouter::new(vec![vec![backend]], RouterConfig::default())
+    }
+
+    /// One hedged replica group over all `backends`.
+    pub fn replicated(
+        backends: Vec<Box<dyn Backend>>,
+        cfg: RouterConfig,
+    ) -> anyhow::Result<ShardRouter> {
+        ShardRouter::new(vec![backends], cfg)
+    }
+
+    // -- plumbing ----------------------------------------------------------
+
+    fn job_tx(&self, member: usize) -> Result<&SyncSender<MemberJob>> {
+        self.members[member].job_tx.as_ref().ok_or(TransportError::Closed)
+    }
+
+    fn send_blocking(&self, member: usize, job: MemberJob) -> Result<()> {
+        self.job_tx(member)?.send(job).map_err(|_| TransportError::Closed)
+    }
+
+    /// `Ok(false)` = the member's bounded queue is full right now.
+    fn try_send(&self, member: usize, job: MemberJob) -> Result<bool> {
+        match self.job_tx(member)?.try_send(job) {
+            Ok(()) => Ok(true),
+            Err(TrySendError::Full(_)) => Ok(false),
+            Err(TrySendError::Disconnected(_)) => Err(TransportError::Closed),
+        }
+    }
+
+    /// Serialized control call: send one job, return its (non-dispatch)
+    /// reply. Stale dispatch replies draining in are discarded by
+    /// identity — they belong to hedges that already lost.
+    fn call(&mut self, member: usize, job: MemberJob) -> Result<MemberReply> {
+        self.send_blocking(member, job)?;
+        loop {
+            let (m, reply) = self.res_rx.recv().map_err(|_| TransportError::Closed)?;
+            match reply {
+                MemberReply::Dispatch { .. } => self.stats.stale_discarded += 1,
+                other => {
+                    debug_assert_eq!(m, member, "control replies are strictly serialized");
+                    return Ok(other);
+                }
+            }
+        }
+    }
+
+    // -- accessors ---------------------------------------------------------
+
+    /// Data columns per array row, uniform across the fleet.
+    pub fn data_cols(&self) -> usize {
+        self.members[0].info.data_cols as usize
+    }
+
+    pub fn n_members(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// `(group, member-local index)` of a global member id.
+    pub fn member_group(&self, member: usize) -> (usize, usize) {
+        (self.members[member].group, self.members[member].local)
+    }
+
+    /// Chips behind one member backend.
+    pub fn member_chips(&self, member: usize) -> usize {
+        self.members[member].info.chips as usize
+    }
+
+    /// Rows consumed so far, flattened member-major (the fleet-level
+    /// `rows_used` the engine reports).
+    pub fn rows_used_flat(&self) -> Vec<usize> {
+        self.members.iter().flat_map(|m| m.rows_used.iter().copied()).collect()
+    }
+
+    /// Fleet dispatch counters so far.
+    pub fn stats(&self) -> RouterStats {
+        self.stats.clone()
+    }
+
+    // -- control plane -----------------------------------------------------
+
+    /// Program one payload onto `chip` of `member`, keeping the
+    /// client-side row/wear mirrors exact. See [`ProgramReply`].
+    pub fn program(
+        &mut self,
+        member: usize,
+        chip: usize,
+        payload: OwnedPayload,
+    ) -> Result<ProgramReply> {
+        let need = payload.cells().div_ceil(self.members[member].info.data_cols as usize);
+        let rep = match self.call(
+            member,
+            MemberJob::Program(ProgramRequest { chip: chip as u32, payload }),
+        )? {
+            MemberReply::Program(r) => r?,
+            _ => unreachable!("program answers program"),
+        };
+        let mm = &mut self.members[member];
+        match &rep.span {
+            Some(span) => {
+                let used = span.slots.len();
+                mm.rows_free[chip] = mm.rows_free[chip].saturating_sub(used);
+                mm.rows_used[chip] += used;
+                mm.est_pulses[chip] += span.len as u64;
+            }
+            None => {
+                // the backend had fewer free rows than our mirror
+                // thought: resync conservatively
+                mm.rows_free[chip] = mm.rows_free[chip].min(need.saturating_sub(1));
+            }
+        }
+        Ok(rep)
+    }
+
+    fn wear_member(&mut self, member: usize) -> Result<WearReply> {
+        let rep = match self.call(member, MemberJob::Wear)? {
+            MemberReply::Wear(r) => r?,
+            _ => unreachable!("wear answers wear"),
+        };
+        let mm = &mut self.members[member];
+        mm.rows_free = rep.rows_free.iter().map(|&r| r as usize).collect();
+        mm.est_pulses = rep.wear.iter().map(|w| w.write_pulses).collect();
+        Ok(rep)
+    }
+
+    /// Per-member wear + free rows (the rebalancer's input), refreshing
+    /// the client-side mirrors along the way.
+    pub fn wear_all(&mut self) -> Result<Vec<WearReply>> {
+        (0..self.members.len()).map(|m| self.wear_member(m)).collect()
+    }
+
+    /// Zero every member's energy ledgers (post-placement baseline).
+    pub fn reset_energy_all(&mut self) -> Result<()> {
+        for m in 0..self.members.len() {
+            match self.call(m, MemberJob::ResetEnergy)? {
+                MemberReply::ResetEnergy(r) => r?,
+                _ => unreachable!("reset answers reset"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Finish every member (workers join; remote hosts close) and
+    /// collect their terminal reports, member-major.
+    pub fn finish(&mut self) -> Result<Vec<FinishReply>> {
+        let mut out = Vec::with_capacity(self.members.len());
+        for m in 0..self.members.len() {
+            let rep = match self.call(m, MemberJob::Finish)? {
+                MemberReply::Finish(r) => r?,
+                _ => unreachable!("finish answers finish"),
+            };
+            self.members[m].job_tx = None;
+            if let Some(h) = self.members[m].handle.take() {
+                let _ = h.join();
+            }
+            out.push(rep);
+        }
+        Ok(out)
+    }
+
+    // -- placement ---------------------------------------------------------
+
+    /// Which group owns layer `l` of an `n_layers` model: a contiguous
+    /// split, balanced by layer count.
+    pub fn group_of_layer(&self, l: usize, n_layers: usize) -> usize {
+        l * self.groups.len() / n_layers.max(1)
+    }
+
+    /// Place (and program) every live filter of `model` across the
+    /// fleet: layers are split across groups, and **every member** of
+    /// the owning group receives a byte-identical copy of each shard
+    /// (that is what makes its replies interchangeable under hedging).
+    /// `row_quota`, when set, bounds the rows the model may occupy *per
+    /// member*; chip choice within a member is least-estimated-wear
+    /// first with stuck-tile retry, mirroring the single-pool placer.
+    pub fn place(
+        &mut self,
+        model: &ModelBundle,
+        row_quota: Option<usize>,
+    ) -> anyhow::Result<RouterPlacement> {
+        let per_row = self.data_cols();
+        let n_layers = model.n_layers();
+        let pls = model.placement_layers();
+        // pre-checks: each member must fit — and have quota for — its
+        // own group's layers. The quota is per member (a replica spends
+        // it again on its own pool), so a multi-group split is checked
+        // against each group's share, not the whole model.
+        for (gi, group) in self.groups.iter().enumerate() {
+            let need: usize = pls
+                .iter()
+                .enumerate()
+                .filter(|(l, _)| self.group_of_layer(*l, n_layers) == gi)
+                .map(|(_, pl)| {
+                    pl.shards.iter().flatten().count() * pl.cells.div_ceil(per_row)
+                })
+                .sum();
+            if let Some(quota) = row_quota {
+                if need > quota {
+                    return Err(anyhow!(
+                        "model needs {need} rows on each member of group {gi} \
+                         but its tenant row quota is {quota}"
+                    ));
+                }
+            }
+            for &m in &group.members {
+                let free: usize = self.members[m].rows_free.iter().sum();
+                if need > free {
+                    return Err(anyhow!(
+                        "model needs {need} rows on backend {m} but it has {free} free; \
+                         prune harder, grow the pool, or evict a tenant"
+                    ));
+                }
+            }
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut stuck_retries = 0usize;
+        let mut quota_rows = vec![0usize; self.members.len()];
+        for (l, pl) in pls.iter().enumerate() {
+            let g = self.group_of_layer(l, n_layers);
+            let group_members = self.groups[g].members.clone();
+            let need = pl.cells.div_ceil(per_row);
+            let mut member_shards: Vec<Vec<Option<ShardRef>>> =
+                Vec::with_capacity(group_members.len());
+            for &m in &group_members {
+                let mut shards: Vec<Option<ShardRef>> = Vec::with_capacity(pl.shards.len());
+                for (f, payload) in pl.shards.iter().enumerate() {
+                    let Some(payload) = payload else {
+                        shards.push(None);
+                        continue;
+                    };
+                    if let Some(quota) = row_quota {
+                        if quota_rows[m] + need > quota {
+                            return Err(anyhow!(
+                                "tenant row quota {quota} exhausted at layer {} filter {f} \
+                                 ({} rows already live)",
+                                pl.name,
+                                quota_rows[m]
+                            ));
+                        }
+                    }
+                    let owned: OwnedPayload = (*payload).into();
+                    match self
+                        .place_filter(m, need, &owned)
+                        .map_err(|e| anyhow!("transport failed during placement: {e}"))?
+                    {
+                        PlaceOutcome::Placed { chip, span, retries } => {
+                            stuck_retries += retries;
+                            quota_rows[m] += span.slots.len();
+                            shards.push(Some(ShardRef {
+                                chip: chip as u32,
+                                filter: f as u32,
+                                span,
+                            }));
+                        }
+                        PlaceOutcome::NoRoom { retries } => {
+                            stuck_retries += retries;
+                            return Err(anyhow!(
+                                "placement failed: layer {} filter {f} ({} cells) fits no chip \
+                                 of backend {m} ({stuck_retries} stuck-tile retries so far)",
+                                pl.name,
+                                pl.cells
+                            ));
+                        }
+                    }
+                }
+                member_shards.push(shards);
+            }
+            layers.push(PlacedLayer { group: g, shards: member_shards });
+        }
+        Ok(RouterPlacement { layers, stuck_retries })
+    }
+
+    /// One filter onto one member: chips in least-estimated-wear order
+    /// (ties toward more free rows), retrying past stuck tiles.
+    fn place_filter(
+        &mut self,
+        member: usize,
+        need: usize,
+        payload: &OwnedPayload,
+    ) -> Result<PlaceOutcome> {
+        let n_chips = self.members[member].info.chips as usize;
+        let mut order: Vec<usize> = (0..n_chips).collect();
+        {
+            let mm = &self.members[member];
+            order.sort_by_key(|&c| (mm.est_pulses[c], usize::MAX - mm.rows_free[c], c));
+        }
+        let mut retries = 0usize;
+        for &c in &order {
+            if self.members[member].rows_free[c] < need {
+                continue;
+            }
+            let rep = self.program(member, c, payload.clone())?;
+            match rep.span {
+                None => continue, // mirror already resynced by program()
+                Some(span) => {
+                    if rep.failures > 0 {
+                        retries += 1; // stuck tile: rows retired, next chip
+                        continue;
+                    }
+                    return Ok(PlaceOutcome::Placed { chip: c, span, retries });
+                }
+            }
+        }
+        Ok(PlaceOutcome::NoRoom { retries })
+    }
+
+    // -- data plane --------------------------------------------------------
+
+    fn hedge_deadline(&self, group: usize) -> Duration {
+        if let Some(d) = self.cfg.hedge.after {
+            return d;
+        }
+        let lat = &self.groups[group].lat;
+        if lat.count() < self.cfg.hedge.min_samples {
+            return self.cfg.hedge.ceiling;
+        }
+        let q = lat.quantile(self.cfg.hedge.quantile);
+        Duration::from_secs_f64(q.as_secs_f64() * self.cfg.hedge.factor)
+            .clamp(self.cfg.hedge.floor, self.cfg.hedge.ceiling)
+    }
+
+    /// Dispatch one layer's windows to the owning group and return the
+    /// `(filter, dots)` pairs of the first matching reply. Spills off a
+    /// full member queue, hedges past the group's deadline, and
+    /// discards duplicate replies by `(request id, shard epoch)` — the
+    /// caller sees exactly one answer per call.
+    pub fn dispatch_layer(
+        &mut self,
+        route: &TenantRoute,
+        layer: usize,
+        windows: WireWindows,
+    ) -> Result<Vec<(u32, Vec<i64>)>> {
+        let lr = &route.layers[layer];
+        let g = lr.group;
+        let members = self.groups[g].members.clone();
+        let n = members.len();
+        debug_assert_eq!(lr.shards.len(), n, "route member count vs group");
+        self.stats.dispatches += 1;
+        let req_id = self.next_request;
+        self.next_request += 1;
+        let start = self.groups[g].rr % n;
+        self.groups[g].rr = self.groups[g].rr.wrapping_add(1);
+        let request = |local: usize| DispatchRequest {
+            request_id: req_id,
+            shard_epoch: route.epoch,
+            layer: layer as u32,
+            shards: Arc::clone(&lr.shards[local]),
+            windows: windows.clone(),
+        };
+        // pick the primary round-robin; a full queue spills to the next
+        // replica, and only if every queue is full do we block (compute
+        // is never shed here — shedding belongs to the admission plane)
+        let mut primary_local = None;
+        for k in 0..n {
+            let local = (start + k) % n;
+            if self.try_send(members[local], MemberJob::Dispatch(request(local)))? {
+                if k > 0 {
+                    self.stats.spills += 1;
+                }
+                primary_local = Some(local);
+                break;
+            }
+        }
+        let primary_local = match primary_local {
+            Some(local) => local,
+            None => {
+                self.send_blocking(members[start], MemberJob::Dispatch(request(start)))?;
+                start
+            }
+        };
+        let t0 = Instant::now();
+        let hedge_after =
+            if n > 1 && self.cfg.hedge.enabled { Some(self.hedge_deadline(g)) } else { None };
+        let mut timer_armed = hedge_after.is_some();
+        let mut hedge_member: Option<usize> = None;
+        let mut in_flight = 1usize;
+        loop {
+            let received = if timer_armed && hedge_member.is_none() {
+                let after = hedge_after.expect("armed timer has a deadline");
+                let elapsed = t0.elapsed();
+                if elapsed >= after {
+                    Err(RecvTimeoutError::Timeout)
+                } else {
+                    self.res_rx.recv_timeout(after - elapsed)
+                }
+            } else {
+                self.res_rx.recv().map_err(|_| RecvTimeoutError::Disconnected)
+            };
+            match received {
+                Ok((m, MemberReply::Dispatch { request_id, result })) => {
+                    if request_id != req_id {
+                        self.stats.stale_discarded += 1; // a hedge that already lost
+                        continue;
+                    }
+                    let failed = match result {
+                        Ok(rep) if rep.shard_epoch == route.epoch => {
+                            self.groups[g].lat.record(t0.elapsed());
+                            if hedge_member == Some(m) {
+                                self.stats.hedge_wins += 1;
+                            }
+                            return Ok(rep.dots);
+                        }
+                        Ok(_) => {
+                            self.stats.stale_discarded += 1;
+                            TransportError::Remote("reply carries a stale shard epoch".into())
+                        }
+                        Err(e) => e,
+                    };
+                    in_flight -= 1;
+                    if in_flight == 0 {
+                        if n > 1 && hedge_member.is_none() {
+                            // the only attempt died: fail over to the
+                            // replica instead of surfacing the error
+                            let alt = (primary_local + 1) % n;
+                            self.send_blocking(members[alt], MemberJob::Dispatch(request(alt)))?;
+                            self.stats.hedges_fired += 1;
+                            hedge_member = Some(members[alt]);
+                            in_flight = 1;
+                        } else {
+                            return Err(failed);
+                        }
+                    }
+                }
+                Ok((_, _)) => {
+                    unreachable!("control replies cannot be in flight during a dispatch")
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    let alt = (primary_local + 1) % n;
+                    if self.try_send(members[alt], MemberJob::Dispatch(request(alt)))? {
+                        self.stats.hedges_fired += 1;
+                        hedge_member = Some(members[alt]);
+                        in_flight += 1;
+                    } else {
+                        // replica saturated: stop hedging this request
+                        timer_armed = false;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(TransportError::Closed),
+            }
+        }
+    }
+}
+
+impl Drop for ShardRouter {
+    fn drop(&mut self) {
+        for m in &mut self.members {
+            m.job_tx = None; // hang up: workers drain and exit
+        }
+        for m in &mut self.members {
+            if let Some(h) = m.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::WearLedger;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// A scriptable backend: fixed dots, optional per-dispatch delay,
+    /// optional scripted failures — enough to pin down hedging,
+    /// failover, and duplicate-discard behavior without silicon.
+    struct MockBackend {
+        delay: Duration,
+        fail_dispatches: u64,
+        served: Arc<AtomicU64>,
+        dot: i64,
+    }
+
+    impl MockBackend {
+        fn boxed(delay: Duration, fail_dispatches: u64, served: Arc<AtomicU64>, dot: i64) -> Box<dyn Backend> {
+            Box::new(MockBackend { delay, fail_dispatches, served, dot })
+        }
+    }
+
+    impl Backend for MockBackend {
+        fn describe(&mut self) -> Result<BackendInfo> {
+            Ok(BackendInfo { chips: 1, data_cols: 30 })
+        }
+
+        fn dispatch(&mut self, req: DispatchRequest) -> Result<DispatchReply> {
+            if self.fail_dispatches > 0 {
+                self.fail_dispatches -= 1;
+                return Err(TransportError::Remote("scripted failure".into()));
+            }
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            self.served.fetch_add(1, Ordering::SeqCst);
+            Ok(DispatchReply {
+                request_id: req.request_id,
+                shard_epoch: req.shard_epoch,
+                layer: req.layer,
+                dots: req.shards.iter().map(|s| (s.filter, vec![self.dot])).collect(),
+            })
+        }
+
+        fn program(&mut self, _req: ProgramRequest) -> Result<ProgramReply> {
+            Ok(ProgramReply {
+                span: Some(crate::cim::mapping::RowSpan {
+                    slots: vec![(0, 0)],
+                    tail_width: 1,
+                    len: 1,
+                }),
+                failures: 0,
+            })
+        }
+
+        fn wear(&mut self) -> Result<WearReply> {
+            Ok(WearReply { wear: vec![WearLedger::default()], rows_free: vec![64] })
+        }
+
+        fn reset_energy(&mut self) -> Result<()> {
+            Ok(())
+        }
+
+        fn finish(&mut self) -> Result<FinishReply> {
+            Ok(FinishReply { energy_pj: 0.0, wear: vec![WearLedger::default()] })
+        }
+    }
+
+    fn route_one_layer(n_members: usize) -> TenantRoute {
+        TenantRoute {
+            epoch: 1,
+            layers: vec![LayerRoute {
+                group: 0,
+                shards: (0..n_members)
+                    .map(|_| {
+                        Arc::new(vec![ShardRef {
+                            chip: 0,
+                            filter: 0,
+                            span: crate::cim::mapping::RowSpan {
+                                slots: vec![(0, 0)],
+                                tail_width: 1,
+                                len: 1,
+                            },
+                        }])
+                    })
+                    .collect(),
+            }],
+        }
+    }
+
+    fn empty_windows() -> WireWindows {
+        WireWindows::Binary(Arc::new(crate::cim::vmm::PackedWindows {
+            n_windows: 0,
+            seg_widths: vec![1],
+            planes: vec![],
+            sum_x: vec![],
+        }))
+    }
+
+    #[test]
+    fn hedge_fires_on_a_straggler_and_the_replica_wins() {
+        let slow_served = Arc::new(AtomicU64::new(0));
+        let fast_served = Arc::new(AtomicU64::new(0));
+        let cfg = RouterConfig {
+            hedge: HedgeConfig {
+                after: Some(Duration::from_millis(5)),
+                ..HedgeConfig::default()
+            },
+            ..RouterConfig::default()
+        };
+        let mut router = ShardRouter::replicated(
+            vec![
+                MockBackend::boxed(Duration::from_millis(250), 0, Arc::clone(&slow_served), 7),
+                MockBackend::boxed(Duration::ZERO, 0, Arc::clone(&fast_served), 7),
+            ],
+            cfg,
+        )
+        .unwrap();
+        let route = route_one_layer(2);
+        // round-robin starts at the slow member; the 5ms deadline fires
+        // and the instant replica answers first
+        let dots = router.dispatch_layer(&route, 0, empty_windows()).unwrap();
+        assert_eq!(dots, vec![(0, vec![7])]);
+        let stats = router.stats();
+        assert_eq!(stats.dispatches, 1);
+        assert_eq!(stats.hedges_fired, 1);
+        assert_eq!(stats.hedge_wins, 1, "the duplicate must have won");
+        assert_eq!(fast_served.load(Ordering::SeqCst), 1);
+        // the straggler's late reply is discarded by request id — drain
+        // it via a control call and check the counter
+        std::thread::sleep(Duration::from_millis(300));
+        let _ = router.wear_all().unwrap();
+        assert_eq!(router.stats().stale_discarded, 1, "losing reply discarded, not re-answered");
+        router.finish().unwrap();
+        assert_eq!(slow_served.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn failed_primary_fails_over_to_the_replica() {
+        let served = Arc::new(AtomicU64::new(0));
+        let cfg = RouterConfig {
+            hedge: HedgeConfig { after: Some(Duration::from_secs(5)), ..HedgeConfig::default() },
+            ..RouterConfig::default()
+        };
+        let mut router = ShardRouter::replicated(
+            vec![
+                MockBackend::boxed(Duration::ZERO, 1, Arc::clone(&served), 3),
+                MockBackend::boxed(Duration::ZERO, 0, Arc::clone(&served), 3),
+            ],
+            cfg,
+        )
+        .unwrap();
+        let route = route_one_layer(2);
+        let dots = router.dispatch_layer(&route, 0, empty_windows()).unwrap();
+        assert_eq!(dots, vec![(0, vec![3])]);
+        assert_eq!(router.stats().hedges_fired, 1, "failover counts as a hedge");
+        router.finish().unwrap();
+    }
+
+    #[test]
+    fn solo_member_surfaces_its_error() {
+        let served = Arc::new(AtomicU64::new(0));
+        let mut router = ShardRouter::single(MockBackend::boxed(
+            Duration::ZERO,
+            1,
+            Arc::clone(&served),
+            0,
+        ))
+        .unwrap();
+        let route = route_one_layer(1);
+        let err = router.dispatch_layer(&route, 0, empty_windows()).unwrap_err();
+        assert!(matches!(err, TransportError::Remote(_)));
+        // the next dispatch works again
+        assert_eq!(
+            router.dispatch_layer(&route, 0, empty_windows()).unwrap(),
+            vec![(0, vec![0])]
+        );
+        router.finish().unwrap();
+    }
+
+    #[test]
+    fn construction_rejects_empty_and_mismatched_fleets() {
+        assert!(ShardRouter::new(vec![], RouterConfig::default()).is_err());
+        assert!(ShardRouter::new(vec![vec![]], RouterConfig::default()).is_err());
+    }
+}

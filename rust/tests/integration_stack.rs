@@ -284,6 +284,78 @@ fn prop_pool_serving_equals_reference_logits() {
     );
 }
 
+/// Property (spillover accounting): over a primary + replica pair fed
+/// through `try_submit_spill`, every attempt lands in exactly one of
+/// {answered by primary, answered by replica, dropped} — and the drop
+/// is booked once, on the primary, no matter how many queues rejected
+/// the request. (The seed-era shape counted a rejection per queue, so
+/// a spilled-then-dropped request could double-count.)
+#[test]
+fn prop_spillover_partitions_attempts() {
+    forall(
+        "admission spillover: attempts == answered + dropped, dropped counted once",
+        0x59111,
+        4,
+        |rng| {
+            let depth = 1 + rng.below(2);
+            let flood = 8 + rng.below(24);
+            (depth, flood, rng.next_u64())
+        },
+        |&(depth, flood, seed)| {
+            let model = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, seed);
+            let cfg = |s| ServerConfig {
+                pool: PoolConfig { chips: 1, chip: ChipConfig::small_test(), seed: s },
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_wait: Duration::from_millis(1),
+                    queue_depth: depth,
+                },
+            };
+            let primary = Server::start(model.clone(), &cfg(seed ^ 1)).map_err(|e| e.to_string())?;
+            let replica = Server::start(model, &cfg(seed ^ 2)).map_err(|e| e.to_string())?;
+            let ds = mnist::generate(1, seed ^ 3);
+            let mut receivers = Vec::new();
+            let mut shed = 0u64;
+            for _ in 0..flood {
+                match primary.try_submit_spill(&[&replica], ds.sample(0).to_vec()) {
+                    Ok((_, rx)) => receivers.push(rx),
+                    Err(input) => {
+                        if input.len() != 28 * 28 {
+                            return Err("rejected input not returned intact".into());
+                        }
+                        shed += 1;
+                    }
+                }
+            }
+            let admitted = receivers.len() as u64;
+            for rx in receivers {
+                rx.recv().map_err(|_| "admitted request never answered".to_string())?;
+            }
+            let pr = primary.shutdown();
+            let rr = replica.shutdown();
+            if rr.stats.dropped != 0 {
+                return Err("replica booked a drop that belongs to the primary".into());
+            }
+            if pr.stats.dropped != shed {
+                return Err(format!(
+                    "primary dropped {} but {} requests were terminally rejected",
+                    pr.stats.dropped, shed
+                ));
+            }
+            if pr.stats.n_requests + rr.stats.n_requests != admitted {
+                return Err("answered across the pair must equal admissions".into());
+            }
+            if admitted + shed != flood as u64 {
+                return Err(format!(
+                    "attempts {} != answered {} + dropped {}",
+                    flood, admitted, shed
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 fn tiny_pointnet(widths: [usize; 8], prune: f64, seed: u64) -> PointNetBundle {
     PointNetBundle::synthetic(
         widths,

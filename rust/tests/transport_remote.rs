@@ -1,0 +1,326 @@
+//! The TCP-loopback transport suite: the serving stack's bit-exactness
+//! property harness run over every backend combination — in-process
+//! [`LocalBackend`], [`RemoteBackend`] against a [`Host`] daemon on
+//! loopback, and a hedged 2-replica [`ShardRouter`] of two hosts — with
+//! stuck-tile fault injection and a live wear rebalance on a remote
+//! host mid-test. Plus protocol robustness: a garbage frame must get an
+//! error reply, never kill the host.
+//!
+//! CI runs this file as its own job (`cargo test --test
+//! transport_remote`) under a 60-second timeout.
+
+use std::time::Duration;
+
+use rram_cim::chip::ChipConfig;
+use rram_cim::nn::data::{mnist, modelnet};
+use rram_cim::nn::pointnet::GroupingConfig;
+use rram_cim::serve::transport::{
+    frame, Backend, Host, HostConfig, LocalBackend, RemoteBackend, ShardRouter,
+};
+use rram_cim::serve::{
+    AdmissionConfig, CacheConfig, Engine, EngineConfig, HedgeConfig, ModelBundle, PointNetBundle,
+    PoolConfig, RebalanceConfig, RouterConfig, TenantConfig,
+};
+use rram_cim::testing::forall;
+
+#[derive(Clone, Copy, Debug)]
+enum Topology {
+    /// One in-process pool behind the router.
+    Local,
+    /// One TCP-loopback host daemon owning the pool.
+    Remote,
+    /// Two host daemons forming a hedged replica group (hedge fires on
+    /// every dispatch: `after == 0`).
+    Hedged,
+}
+
+fn tiny_pointnet(prune: f64, seed: u64) -> PointNetBundle {
+    PointNetBundle::synthetic(
+        [2, 2, 3, 2, 2, 3, 2, 4],
+        3,
+        prune,
+        GroupingConfig { s1: 8, k1: 4, r1: 0.3, s2: 4, k2: 2, r2: 0.6 },
+        seed,
+    )
+}
+
+fn pool_cfg(seed: u64, fault: f64) -> PoolConfig {
+    let mut chip = ChipConfig::small_test();
+    chip.device.stuck_fault_prob = fault;
+    PoolConfig { chips: 3, chip, seed }
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        pool: PoolConfig::default(), // ignored by start_with_router
+        admission: AdmissionConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            quantum: 4,
+        },
+        cache: CacheConfig::default(),
+        rebalance: RebalanceConfig { every_batches: 2, max_moves: 1 },
+    }
+}
+
+/// Build the topology's router (and keep its host daemons alive).
+fn build_router(
+    top: Topology,
+    seed: u64,
+    fault: f64,
+    hosts: &mut Vec<Host>,
+) -> Result<ShardRouter, String> {
+    let remote = |seed, hosts: &mut Vec<Host>| -> Result<RemoteBackend, String> {
+        let host = Host::spawn(HostConfig { pool: pool_cfg(seed, fault) })
+            .map_err(|e| e.to_string())?;
+        let backend = RemoteBackend::connect(host.addr()).map_err(|e| e.to_string())?;
+        hosts.push(host);
+        Ok(backend)
+    };
+    match top {
+        Topology::Local => {
+            let backend =
+                LocalBackend::from_pool_config(&pool_cfg(seed, fault)).map_err(|e| e.to_string())?;
+            ShardRouter::single(Box::new(backend)).map_err(|e| e.to_string())
+        }
+        Topology::Remote => {
+            let backend = remote(seed, hosts)?;
+            ShardRouter::single(Box::new(backend)).map_err(|e| e.to_string())
+        }
+        Topology::Hedged => {
+            let a = remote(seed, hosts)?;
+            let b = remote(seed ^ 0x5117, hosts)?;
+            let cfg = RouterConfig {
+                hedge: HedgeConfig { after: Some(Duration::ZERO), ..HedgeConfig::default() },
+                ..RouterConfig::default()
+            };
+            ShardRouter::replicated(vec![Box::new(a), Box::new(b)], cfg)
+                .map_err(|e| e.to_string())
+        }
+    }
+}
+
+/// The harness body: both bundles as tenants of one engine over the
+/// given topology, interleaved traffic, a forced rebalance mid-run, and
+/// a bit-exactness check on every answer. With fault injection the
+/// engine may instead reject at placement — that must be a clean,
+/// explicit error.
+fn run_harness(top: Topology, fault: f64, seed: u64) -> Result<(), String> {
+    let mnist_model = ModelBundle::synthetic_mnist([3, 4, 3], 0.3, seed);
+    let pn_model: ModelBundle = tiny_pointnet(0.3, seed ^ 1).into();
+    let mut hosts = Vec::new();
+    let router = build_router(top, seed ^ 2, fault, &mut hosts)?;
+    let tenants = vec![
+        TenantConfig::new("mnist", mnist_model.clone()),
+        TenantConfig::new("pointnet", pn_model.clone()),
+    ];
+    let engine = match Engine::start_with_router(tenants, router, &engine_cfg()) {
+        Ok(e) => e,
+        Err(e) => {
+            let msg = e.to_string();
+            drop(hosts); // daemons exit on connection close
+            return if msg.contains("placement") || msg.contains("rows") {
+                Ok(()) // capacity lost to faults: explicit verdict
+            } else {
+                Err(format!("unexpected start error: {msg}"))
+            };
+        }
+    };
+    let images = mnist::generate(4, seed ^ 3);
+    let clouds = modelnet::generate(4, seed ^ 4);
+    let check = |t: usize, i: usize, resp: rram_cim::serve::Response| -> Result<(), String> {
+        let want = if t == 0 {
+            mnist_model.reference_logits(images.sample(i))
+        } else {
+            pn_model.reference_logits(clouds.sample(i))
+        };
+        if resp.logits != want {
+            return Err(format!("{top:?}: tenant {t} input {i}: transport corrupted the logits"));
+        }
+        Ok(())
+    };
+    // phase 1: interleaved traffic (advances the rebalance clock)
+    let mut pending = Vec::new();
+    for i in 0..3 {
+        pending.push((0usize, i, engine.submit(0, images.sample(i).to_vec())));
+        pending.push((1usize, i, engine.submit(1, clouds.sample(i).to_vec())));
+    }
+    for (t, i, rx) in pending {
+        check(t, i, rx.recv().map_err(|e| e.to_string())?)?;
+    }
+    // phase 2: force a rebalance (on the remote host for Remote/Hedged
+    // topologies), then serve more traffic through the migrated
+    // placement — still bit-exact
+    engine.force_rebalance();
+    for i in 0..4 {
+        let resp = engine.submit(0, images.sample(i).to_vec()).recv().map_err(|e| e.to_string())?;
+        check(0, i, resp)?;
+        let resp = engine.submit(1, clouds.sample(i).to_vec()).recv().map_err(|e| e.to_string())?;
+        check(1, i, resp)?;
+    }
+    let report = engine.shutdown();
+    if report.answered() != 14 {
+        return Err(format!("{top:?}: answered {} of 14", report.answered()));
+    }
+    if report.dropped() != 0 {
+        return Err(format!("{top:?}: blocking submits must never drop"));
+    }
+    if fault == 0.0 && report.shards_moved == 0 {
+        return Err(format!(
+            "{top:?}: the forced pass must migrate at least one shard on an ideal pool"
+        ));
+    }
+    if let Topology::Hedged = top {
+        if report.transport.hedges_fired == 0 {
+            return Err("hedged topology must fire hedges with after == 0".into());
+        }
+    }
+    for host in hosts {
+        host.join();
+    }
+    Ok(())
+}
+
+/// Property: the bit-exactness harness (both bundles, fault injection,
+/// mid-run rebalance) passes identically over a local pool, a TCP
+/// host, and a hedged 2-replica fleet of hosts.
+#[test]
+fn prop_harness_is_bit_exact_over_every_backend_combination() {
+    forall(
+        "transport: local == remote == hedged, bit for bit",
+        0x77a9,
+        2,
+        |rng| {
+            let fault = [0.0, 0.01][rng.below(2)];
+            (fault, rng.next_u64())
+        },
+        |&(fault, seed)| {
+            for top in [Topology::Local, Topology::Remote, Topology::Hedged] {
+                run_harness(top, fault, seed)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A hedged replica group can never answer a request twice: every
+/// submitted request yields exactly one response, ids are unique, and
+/// the losing duplicates show up only as discarded-stale counts.
+#[test]
+fn hedged_duplicates_never_double_reply() {
+    let model = ModelBundle::synthetic_mnist([3, 4, 3], 0.0, 0xd0b1e);
+    let mut hosts = Vec::new();
+    let router = build_router(Topology::Hedged, 0xd0b1e, 0.0, &mut hosts).unwrap();
+    let engine = Engine::start_with_router(
+        vec![TenantConfig::new("mnist", model.clone())],
+        router,
+        &engine_cfg(),
+    )
+    .unwrap();
+    let ds = mnist::generate(6, 0xd0b2e);
+    let reference: Vec<Vec<f32>> =
+        (0..6).map(|i| model.reference_logits(ds.sample(i))).collect();
+    let mut pending = Vec::new();
+    for _round in 0..3 {
+        for i in 0..6 {
+            pending.push((i, engine.submit(0, ds.sample(i).to_vec())));
+        }
+    }
+    let mut ids = Vec::new();
+    for (i, rx) in pending {
+        let resp = rx.recv().expect("every request answered exactly once");
+        assert_eq!(resp.logits, reference[i], "hedged serving diverged on input {i}");
+        ids.push(resp.id);
+        // the channel must hold exactly one response — a duplicate
+        // reply would surface here as a second pending message
+        assert!(
+            rx.try_recv().is_err(),
+            "request {i} received a second response (hedge duplicate leaked)"
+        );
+    }
+    let mut deduped = ids.clone();
+    deduped.sort_unstable();
+    deduped.dedup();
+    assert_eq!(deduped.len(), ids.len(), "duplicate response ids");
+    let report = engine.shutdown();
+    assert_eq!(report.answered(), 18);
+    assert!(report.transport.hedges_fired > 0, "after == 0 must hedge");
+    for host in hosts {
+        host.join();
+    }
+}
+
+/// One tenant's layers split across two single-member groups (two
+/// hosts): both hosts compute, logits stay bit-exact.
+#[test]
+fn layers_shard_across_two_hosts_bit_exactly() {
+    let model = ModelBundle::synthetic_mnist([3, 4, 3], 0.0, 0x2b057);
+    let mut hosts = Vec::new();
+    let mut groups: Vec<Vec<Box<dyn Backend>>> = Vec::new();
+    for s in 0..2u64 {
+        let host = Host::spawn(HostConfig { pool: pool_cfg(0x2b057 ^ s, 0.0) }).unwrap();
+        groups.push(vec![Box::new(RemoteBackend::connect(host.addr()).unwrap())]);
+        hosts.push(host);
+    }
+    let router = ShardRouter::new(groups, RouterConfig::default()).unwrap();
+    assert_eq!(router.n_groups(), 2);
+    let engine = Engine::start_with_router(
+        vec![TenantConfig::new("mnist", model.clone())],
+        router,
+        &engine_cfg(),
+    )
+    .unwrap();
+    let ds = mnist::generate(5, 0x2b058);
+    for i in 0..5 {
+        let resp = engine.submit(0, ds.sample(i).to_vec()).recv().unwrap();
+        assert_eq!(
+            resp.logits,
+            model.reference_logits(ds.sample(i)),
+            "cross-host sharding diverged on image {i}"
+        );
+    }
+    let report = engine.shutdown();
+    assert_eq!(report.wear.len(), 6, "three chips per host, two hosts");
+    let host_wl =
+        |r: &[rram_cim::chip::WearLedger]| r.iter().map(|w| w.wl_activations).sum::<u64>();
+    assert!(host_wl(&report.wear[..3]) > 0, "host 0 never computed");
+    assert!(host_wl(&report.wear[3..]) > 0, "host 1 never computed");
+    for host in hosts {
+        host.join();
+    }
+}
+
+/// Protocol robustness: a garbage frame gets an error reply and the
+/// connection survives — the next well-formed request still works.
+#[test]
+fn garbage_frames_get_error_replies_not_a_dead_host() {
+    use std::net::TcpStream;
+
+    let host = Host::spawn(HostConfig { pool: pool_cfg(0xbad, 0.0) }).unwrap();
+    let mut stream = TcpStream::connect(host.addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    // a frame whose payload is not a valid request
+    frame::write_frame(&mut stream, &[0x7f, 0x00, 0x01]).unwrap();
+    let reply = frame::read_frame(&mut stream).unwrap();
+    match frame::decode_reply(&reply).unwrap() {
+        frame::WireReply::Err(msg) => assert!(msg.contains("bad request"), "{msg}"),
+        other => panic!("garbage must be answered with Err, got {other:?}"),
+    }
+    // the session is still alive: a proper Describe round-trips
+    frame::write_frame(&mut stream, &frame::encode_request(&frame::WireRequest::Describe))
+        .unwrap();
+    let reply = frame::read_frame(&mut stream).unwrap();
+    match frame::decode_reply(&reply).unwrap() {
+        frame::WireReply::Describe(info) => {
+            assert_eq!(info.chips, 3);
+            assert!(info.data_cols > 0);
+        }
+        other => panic!("expected Describe reply, got {other:?}"),
+    }
+    // a Finish ends the session cleanly
+    frame::write_frame(&mut stream, &frame::encode_request(&frame::WireRequest::Finish)).unwrap();
+    let reply = frame::read_frame(&mut stream).unwrap();
+    assert!(matches!(frame::decode_reply(&reply).unwrap(), frame::WireReply::Finish(_)));
+    drop(stream);
+    host.join();
+}
