@@ -47,7 +47,7 @@ fn run_phase(
         cache: CacheConfig { capacity: 256 },
         // every 3 chip batches: diff wear snapshots, migrate up to 2 of
         // the hottest shards to the least-worn chip
-        rebalance: RebalanceConfig { every_batches: 3, max_moves: 2 },
+        rebalance: RebalanceConfig { every_batches: 3, max_moves: 2, group_moves: 0 },
     };
     cfg.pool.chip.device.stuck_fault_prob = stuck_fault_prob;
     let engine = Engine::start(tenants, &cfg)?;

@@ -1,19 +1,29 @@
-//! Multi-host serving demo: TWO worker daemons ("hosts"), each owning
-//! its own 2-chip pool behind a TCP loopback socket, form one hedged
-//! replica group serving a pruned binary-MNIST tenant.
+//! Multi-host serving demo: THREE worker daemons ("hosts"), each owning
+//! its own 2-chip pool behind a TCP loopback socket, forming a
+//! two-group fleet serving a pruned binary-MNIST tenant:
 //!
-//! What this exercises end to end:
+//! ```text
+//!   group 0: hosts A1 + A2 (hedged replica pair, byte-identical shards)
+//!   group 1: host  B       (solo)
+//! ```
 //!
-//! * placement over the wire — every shard payload is programmed onto
-//!   BOTH hosts through `Backend::program` RPCs (byte-identical copies,
-//!   each host allocating its own spans);
-//! * hedged dispatch — each layer's packed windows go to one host; if
-//!   it straggles past the deadline the same request (same id, same
-//!   shard epoch) duplicates to the replica, the first bit-exact reply
-//!   wins, and the loser is discarded by identity;
-//! * a live wear rebalance on a remote host mid-run — shards migrate
-//!   between the host's own chips over the transport, the tenant's
-//!   shard epoch advances, and the answers stay bit-exact.
+//! What this exercises end to end (the whole fleet-operations story —
+//! see OPERATIONS.md for how to run this shape for real):
+//!
+//! * placement over the wire — layers split across the two groups, and
+//!   every member of a layer's owning group gets a byte-identical copy
+//!   programmed through `Backend::program` RPCs;
+//! * hedged dispatch — a straggling replica's request duplicates to its
+//!   sibling after the deadline; first bit-exact reply wins, the loser
+//!   is discarded by request-id/epoch identity;
+//! * a forced **cross-host layer migration** — a whole layer moves from
+//!   one group to the other through the epoch-fenced
+//!   program → fence → drain → free cutover (DESIGN.md §9), and the
+//!   freed source rows return to their allocator;
+//! * a **host bounce** — host B is killed mid-run and a replacement
+//!   (fresh pool, fresh incarnation) takes over its address; B's client
+//!   reconnects with bounded backoff, quarantines itself, and the
+//!   engine re-programs it at the current epoch before it serves again.
 //!
 //! Every response is asserted against `ModelBundle::reference_logits`:
 //! zero wrong logits, by construction — the chips are digital, so a
@@ -26,7 +36,9 @@ use std::time::Duration;
 use rram_cim::bench::print_table;
 use rram_cim::chip::ChipConfig;
 use rram_cim::nn::data::mnist;
-use rram_cim::serve::transport::{Backend, Host, HostConfig, RemoteBackend, ShardRouter};
+use rram_cim::serve::transport::{
+    Backend, Host, HostConfig, ReconnectPolicy, RemoteBackend, ShardRouter,
+};
 use rram_cim::serve::{
     AdmissionConfig, CacheConfig, Engine, EngineConfig, HedgeConfig, ModelBundle, PoolConfig,
     RebalanceConfig, RouterConfig, TenantConfig,
@@ -35,30 +47,39 @@ use rram_cim::serve::{
 fn main() -> anyhow::Result<()> {
     rram_cim::util::logging::init();
 
-    // --- two loopback hosts, each with its own pool ---
+    // --- three loopback hosts, each with its own pool ---
     let pool = |seed| PoolConfig { chips: 2, chip: ChipConfig::default(), seed };
-    let host_a = Host::spawn(HostConfig { pool: pool(0xa11ce) })?;
+    let host_a1 = Host::spawn(HostConfig { pool: pool(0xa11ce) })?;
+    let host_a2 = Host::spawn(HostConfig { pool: pool(0xa22) })?;
     let host_b = Host::spawn(HostConfig { pool: pool(0xb0b) })?;
-    println!("host A on {}, host B on {}", host_a.addr(), host_b.addr());
+    println!(
+        "group 0 (hedged pair): {} + {}   group 1: {}",
+        host_a1.addr(),
+        host_a2.addr(),
+        host_b.addr()
+    );
 
-    // --- one hedged replica group over both hosts ---
-    // an aggressive fixed deadline so the demo visibly fires hedges;
-    // production leaves `after: None` and lets the latency histogram
-    // derive it (quantile(0.99) x factor)
+    // --- the fleet: one hedged group + one solo group ---
+    // an aggressive fixed hedge deadline so the demo visibly fires
+    // hedges; production leaves `after: None` and lets the latency
+    // histogram derive it (quantile(0.99) x factor)
     let router_cfg = RouterConfig {
         hedge: HedgeConfig { after: Some(Duration::from_micros(500)), ..HedgeConfig::default() },
         ..RouterConfig::default()
     };
-    let backends: Vec<Box<dyn Backend>> = vec![
-        Box::new(RemoteBackend::connect(host_a.addr())?),
-        Box::new(RemoteBackend::connect(host_b.addr())?),
+    let connect = |addr| -> anyhow::Result<Box<dyn Backend>> {
+        Ok(Box::new(RemoteBackend::connect_with(addr, ReconnectPolicy::default())?))
+    };
+    let groups: Vec<Vec<Box<dyn Backend>>> = vec![
+        vec![connect(host_a1.addr())?, connect(host_a2.addr())?],
+        vec![connect(host_b.addr())?],
     ];
-    let router = ShardRouter::replicated(backends, router_cfg)?;
+    let router = ShardRouter::new(groups, router_cfg)?;
 
-    // --- one pruned tenant, placed onto BOTH hosts over the wire ---
+    // --- one pruned tenant, layers split across the groups ---
     let model = ModelBundle::synthetic_mnist([32, 64, 32], 0.35, 42);
     println!(
-        "tenant mnist: {}/{} live filters, {} rows per host @ 30 data cols",
+        "tenant mnist: {}/{} live filters, {} rows per member @ 30 data cols",
         model.live_filters(),
         model.total_filters(),
         model.rows_required(30)
@@ -71,7 +92,7 @@ fn main() -> anyhow::Result<()> {
             quantum: 8,
         },
         cache: CacheConfig { capacity: 0 }, // every request hits silicon
-        rebalance: RebalanceConfig { every_batches: 4, max_moves: 2 },
+        rebalance: RebalanceConfig { every_batches: 4, max_moves: 2, group_moves: 1 },
     };
     let engine =
         Engine::start_with_router(vec![TenantConfig::new("mnist", model.clone())], router, &cfg)?;
@@ -81,37 +102,51 @@ fn main() -> anyhow::Result<()> {
     let references: Vec<Vec<f32>> =
         (0..images.len()).map(|i| model.reference_logits(images.sample(i))).collect();
     let mut exact = 0u64;
-    let mut pending = Vec::new();
-    for round in 0..3 {
-        if round == 1 {
-            // mid-run: force a wear rebalance — it lands on whichever
-            // REMOTE host ran hottest, over plain program RPCs
-            engine.force_rebalance();
-        }
+    let round = |exact: &mut u64, label: &str| -> anyhow::Result<()> {
+        let mut pending = Vec::new();
         for i in 0..images.len() {
             pending.push((i, engine.submit(0, images.sample(i).to_vec())));
         }
-        for (i, rx) in pending.drain(..) {
+        for (i, rx) in pending {
             let resp = rx.recv()?;
-            assert_eq!(
-                resp.logits, references[i],
-                "image {i}: a hedged two-host fleet must stay bit-exact"
-            );
-            exact += 1;
+            assert_eq!(resp.logits, references[i], "image {i}: {label} must stay bit-exact");
+            *exact += 1;
         }
-    }
+        Ok(())
+    };
+    // round 1: warm-up (builds the heat signal and latency histograms)
+    round(&mut exact, "a hedged two-group fleet")?;
+    // round 2: force a rebalance pass — wear moves level the hottest
+    // chips, and the capacity planner may migrate a whole layer BETWEEN
+    // the groups through the epoch-fenced cutover
+    engine.force_rebalance();
+    round(&mut exact, "an epoch-fenced cross-host migration")?;
+    // round 3: host B crashes; a replacement with a fresh pool takes
+    // over the exact same address. B's backend reconnects with bounded
+    // backoff, reports the bounce, and the engine re-programs it at the
+    // current epoch before it serves a single dispatch.
+    let addr = host_b.addr();
+    println!("bouncing host B at {addr} …");
+    host_b.shutdown();
+    let replacement = Host::spawn_at(addr, HostConfig { pool: pool(0xb0b2) })?;
+    println!("replacement pool live at {addr}");
+    round(&mut exact, "a bounced-and-healed fleet")?;
     let report = engine.shutdown();
 
     // --- the receipts ---
     let t = &report.tenants[0];
     println!(
         "\n{exact} answered responses, every one bit-exact; \
-         {} rebalance passes migrated {} shards on the remote hosts",
-        report.rebalances, report.shards_moved
+         {} rebalance passes moved {} shards; \
+         {} cross-host migrations completed; {} reconnects",
+        report.rebalances,
+        report.shards_moved,
+        report.transport.migrations_completed,
+        report.transport.reconnects
     );
     print_table(
-        "multi_host: hedged 2-host replica group, one pruned MNIST tenant",
-        &["answered", "chip batches", "p50 ms", "p99 ms", "rows/host A+B"],
+        "multi_host: 2-group fleet (hedged pair + solo), one pruned MNIST tenant",
+        &["answered", "chip batches", "p50 ms", "p99 ms", "rows/chip"],
         &[vec![
             t.answered.to_string(),
             t.chip_batches.to_string(),
@@ -122,14 +157,30 @@ fn main() -> anyhow::Result<()> {
     );
     let s = &report.transport;
     print_table(
-        "multi_host: transport counters",
-        &["dispatches", "hedges fired", "hedge wins", "stale discarded", "spills"],
+        "multi_host: transport counters (the OPERATIONS.md telemetry)",
+        &[
+            "dispatches",
+            "hedges fired",
+            "hedge wins",
+            "stale disc.",
+            "epoch disc.",
+            "spills",
+            "migr started",
+            "migr completed",
+            "migr aborted",
+            "reconnects",
+        ],
         &[vec![
             s.dispatches.to_string(),
             s.hedges_fired.to_string(),
             s.hedge_wins.to_string(),
             s.stale_discarded.to_string(),
+            s.epoch_discards.to_string(),
             s.spills.to_string(),
+            s.migrations_started.to_string(),
+            s.migrations_completed.to_string(),
+            s.migrations_aborted.to_string(),
+            s.reconnects.to_string(),
         ]],
     );
     let wear_rows: Vec<Vec<String>> = report
@@ -137,8 +188,9 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .enumerate()
         .map(|(i, w)| {
+            let host = ["A1", "A1", "A2", "A2", "B", "B"][i.min(5)];
             vec![
-                format!("host {} chip {}", if i < 2 { "A" } else { "B" }, i % 2),
+                format!("host {host} chip {}", i % 2),
                 w.write_pulses.to_string(),
                 w.wl_activations.to_string(),
             ]
@@ -153,11 +205,19 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(t.answered, exact, "nothing silently lost");
     assert_eq!(report.dropped(), 0, "blocking submits never drop");
     assert!(
-        report.shards_moved >= 1,
-        "the forced pass must migrate at least one shard on a remote host"
+        report.transport.reconnects >= 1,
+        "the bounced host must have been reconnected to"
     );
-    host_a.join();
-    host_b.join();
-    println!("\nmulti-host serving OK: two hosts, one hedged tenant, zero wrong logits");
+    assert!(
+        report.transport.migrations_completed >= 1,
+        "the forced pass must complete a cross-host layer migration"
+    );
+    host_a1.join();
+    host_a2.join();
+    replacement.join();
+    println!(
+        "\nmulti-host serving OK: three hosts, a hedged pair, an epoch-fenced cross-host \
+         migration, one host bounce — zero wrong logits"
+    );
     Ok(())
 }

@@ -305,7 +305,7 @@ fn mixed_tenancy_table(
             quantum: 32,
         },
         cache: CacheConfig { capacity: 512 },
-        rebalance: RebalanceConfig { every_batches: 8, max_moves: 2 },
+        rebalance: RebalanceConfig { every_batches: 8, max_moves: 2, group_moves: 0 },
     };
     let tenants = vec![
         TenantConfig::new("mnist", mnist_model.clone()),

@@ -99,12 +99,19 @@ pub fn segment_widths(n_cells: usize, per_row: usize) -> Vec<usize> {
         .collect()
 }
 
-/// Sequential allocator of array rows across the chip's blocks.
+/// Sequential allocator of array rows across the chip's blocks, with a
+/// free list fed by [`RowAllocator::release`]. Rows are consumed from
+/// the release pool first, then from the append-only cursor. Stuck-tile
+/// retirement never releases (those rows are unusable); only the
+/// cross-group migration protocol frees rows, after its epoch fence has
+/// drained every request that could still address them.
 #[derive(Clone, Debug)]
 pub struct RowAllocator {
     blocks: usize,
     logical_rows: usize,
     next: usize, // linear cursor over block-major rows
+    /// Rows returned by [`RowAllocator::release`], reused LIFO.
+    freed: Vec<(usize, usize)>,
     pub data_cols: usize,
 }
 
@@ -114,6 +121,7 @@ impl RowAllocator {
             blocks: chip.cfg().blocks,
             logical_rows: chip.cfg().logical_rows(),
             next: 0,
+            freed: Vec::new(),
             data_cols: chip.cfg().data_cols(),
         }
     }
@@ -123,10 +131,13 @@ impl RowAllocator {
     }
 
     pub fn rows_free(&self) -> usize {
-        self.capacity_rows() - self.next
+        self.capacity_rows() - self.next + self.freed.len()
     }
 
     /// Allocate enough rows for `n_cells` cells. Returns None when full.
+    /// Released rows are reused before fresh ones; a span may therefore
+    /// mix recycled and never-used rows (its `slots` list is the only
+    /// authority on where the cells live).
     pub fn alloc(&mut self, n_cells: usize) -> Option<RowSpan> {
         assert!(n_cells > 0);
         let per_row = self.data_cols;
@@ -136,16 +147,46 @@ impl RowAllocator {
         }
         let mut slots = Vec::with_capacity(need);
         for _ in 0..need {
-            let lin = self.next;
-            self.next += 1;
-            slots.push((lin / self.logical_rows, lin % self.logical_rows));
+            if let Some(slot) = self.freed.pop() {
+                slots.push(slot);
+            } else {
+                let lin = self.next;
+                self.next += 1;
+                slots.push((lin / self.logical_rows, lin % self.logical_rows));
+            }
         }
         let tail = n_cells - (need - 1) * per_row;
         Some(RowSpan { slots, tail_width: tail, len: n_cells })
     }
 
+    /// Return a span's rows to the free pool. Returns `false` — and
+    /// frees nothing — unless every slot is distinct, was handed out by
+    /// this allocator, and is not already free: an immediate double
+    /// release, a duplicate-slot span off the wire, or a span from
+    /// another pool incarnation whose rows were never allocated here is
+    /// refused instead of double-booking rows. What the check *cannot*
+    /// see is a stale span whose rows have since been re-allocated to a
+    /// new owner — slot state looks live again — so the caller still
+    /// owns the span-identity discipline: release each span at most
+    /// once, and only after the epoch fence has drained everything that
+    /// could address it (DESIGN.md §9). The cells keep their old values
+    /// until the next store overwrites them — releasing is a
+    /// bookkeeping operation, not an erase.
+    pub fn release(&mut self, span: &RowSpan) -> bool {
+        let owned = span.slots.iter().enumerate().all(|(i, &(b, r))| {
+            b * self.logical_rows + r < self.next
+                && !self.freed.contains(&(b, r))
+                && !span.slots[..i].contains(&(b, r))
+        });
+        if owned {
+            self.freed.extend(span.slots.iter().copied());
+        }
+        owned
+    }
+
     pub fn reset(&mut self) {
         self.next = 0;
+        self.freed.clear();
     }
 }
 
@@ -260,6 +301,42 @@ mod tests {
         let mut alloc = RowAllocator::for_chip(&c);
         let all = alloc.capacity_rows() * alloc.data_cols;
         assert!(alloc.alloc(all).is_some());
+        assert!(alloc.alloc(1).is_none());
+    }
+
+    #[test]
+    fn released_rows_are_reused_and_restore_capacity() {
+        let c = chip();
+        let mut alloc = RowAllocator::for_chip(&c);
+        let per_row = alloc.data_cols;
+        let cap = alloc.capacity_rows();
+        let a = alloc.alloc(2 * per_row).unwrap();
+        let _b = alloc.alloc(per_row).unwrap();
+        assert_eq!(alloc.rows_free(), cap - 3);
+        // release the first span: its two rows come back
+        assert!(alloc.release(&a));
+        assert_eq!(alloc.rows_free(), cap - 1);
+        // a double release is refused and frees nothing
+        assert!(!alloc.release(&a));
+        assert_eq!(alloc.rows_free(), cap - 1);
+        // rows this allocator never handed out are refused too
+        let foreign = RowSpan { slots: vec![(0, cap - 1)], tail_width: 1, len: 1 };
+        assert!(!alloc.release(&foreign));
+        // a duplicate-slot span (possible off the wire) is refused whole
+        let b_slot = _b.slots[0];
+        let dup = RowSpan { slots: vec![b_slot, b_slot], tail_width: 1, len: per_row + 1 };
+        assert!(!alloc.release(&dup));
+        assert_eq!(alloc.rows_free(), cap - 1, "a refused release frees nothing");
+        // the next allocation drains the free pool before the cursor
+        let c2 = alloc.alloc(2 * per_row).unwrap();
+        for slot in &c2.slots {
+            assert!(a.slots.contains(slot), "recycled span must reuse released rows");
+        }
+        assert_eq!(alloc.rows_free(), cap - 3);
+        // a full-capacity drain works across freed + fresh rows
+        assert!(alloc.release(&c2));
+        let rest = alloc.rows_free() * per_row;
+        assert!(alloc.alloc(rest).is_some());
         assert!(alloc.alloc(1).is_none());
     }
 

@@ -15,6 +15,12 @@
 //! plus f32 host stages shared with [`ModelBundle::reference_logits`],
 //! so any transport that returns bit-exact dots serves bit-exact
 //! logits.
+//!
+//! A transport error aborts the batch mid-pipeline and surfaces to the
+//! caller; the multi-tenant coordinator heals the fleet (probe,
+//! re-program, rejoin — see [`crate::serve::engine`]) and re-runs the
+//! whole batch from its inputs, which is what makes the retry
+//! bit-exact: no partial layer state survives a failed attempt.
 
 use std::sync::Arc;
 

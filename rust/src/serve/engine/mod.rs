@@ -27,7 +27,13 @@
 //!  [rebalance] every K batches: diff WearLedger snapshots over the
 //!              transport, migrate the hottest shards to the least-worn
 //!              chip of their backend (drained fleet, epoch bump, so
-//!              logits stay bit-exact mid-migration), invalidate caches
+//!              logits stay bit-exact mid-migration), and — under
+//!              capacity pressure — migrate whole layers BETWEEN groups
+//!              through the epoch-fenced program→fence→drain→free
+//!              cutover (DESIGN.md §9); invalidate caches
+//!  [heal]      after any member dispatch failure: probe the fleet,
+//!              re-program a bounced host's shards at the current
+//!              epoch, rejoin it to its replica group, retry the batch
 //! ```
 //!
 //! # Differences from the legacy [`crate::serve::Server`]
@@ -68,15 +74,23 @@ use crate::chip::WearLedger;
 use super::batcher::{Request, Response};
 use super::model::ModelBundle;
 use super::stats::{EngineReport, TenantStats};
+use super::transport::router::PlaceOutcome;
 use super::transport::{
-    LocalBackend, OwnedPayload, RouterPlacement, ShardRef, ShardRouter, TenantRoute,
+    LocalBackend, MemberState, MigrationOutcome, OwnedPayload, PlacedLayer, RouterPlacement,
+    ShardRef, ShardRouter, TenantRoute,
 };
 
 use admission::{Admission, AdmissionConfig};
 use cache::{CacheConfig, ResultCache};
 use exec::run_batch;
-use rebalance::{plan_moves, RebalanceConfig, Rebalancer, ShardHeat};
+use rebalance::{plan_group_move, plan_moves, RebalanceConfig, Rebalancer, ShardHeat};
 use tenant::{TenantConfig, TenantId};
+
+/// Transport-failure retries per batch: each attempt is preceded by a
+/// fleet heal (probe, re-program bounced members, rejoin), so this
+/// bounds how long the coordinator chases an unreachable fleet before
+/// crashing — admitted requests must never be silently mis-answered.
+const MAX_BATCH_ATTEMPTS: u32 = 5;
 
 /// Engine construction knobs. The defaults serve: 4-chip pool, 32-deep
 /// coalescing with DRR fairness, a 1024-entry cache per tenant, and
@@ -127,6 +141,11 @@ impl Coordinator {
     fn run(mut self) -> EngineReport {
         let t_start = Instant::now();
         while let Some((t, batch)) = self.admission.next_batch() {
+            if self.router.has_suspects() {
+                // a member dispatch failed last batch: probe the fleet
+                // and re-program any bounced member before serving on
+                self.heal();
+            }
             let force = self.force_rebalance.swap(false, Ordering::SeqCst);
             if force
                 || (self.rebalancer.due(self.chip_batches_total)
@@ -160,20 +179,37 @@ impl Coordinator {
         if !miss_idx.is_empty() {
             let inputs: Vec<&[f32]> =
                 miss_idx.iter().map(|&i| batch[i].input.as_slice()).collect();
-            let mut layer_windows = vec![0u64; self.models[t].n_layers()];
-            let logits = run_batch(
-                &self.models[t],
-                &inputs,
-                self.data_cols,
-                &mut self.router,
-                &self.routes[t],
-                &mut layer_windows,
-            )
-            // an unrecoverable fleet loss (the router already failed
-            // over to any replica) is crash-only by design: admitted
-            // requests must never be silently mis-answered, and
-            // reconnect/retry is the ROADMAP's next transport step
-            .expect("serving transport failed mid-batch");
+            let mut layer_windows;
+            let mut attempt = 0u32;
+            // a batch survives transport failures by healing and
+            // retrying against the (possibly re-programmed, epoch-
+            // bumped) fleet — every retry recomputes from the inputs,
+            // so the eventual answer is bit-exact no matter how many
+            // attempts it took. Only a fleet that stays unreachable
+            // crashes the coordinator: admitted requests must never be
+            // silently mis-answered.
+            let logits = loop {
+                layer_windows = vec![0u64; self.models[t].n_layers()];
+                match run_batch(
+                    &self.models[t],
+                    &inputs,
+                    self.data_cols,
+                    &mut self.router,
+                    &self.routes[t],
+                    &mut layer_windows,
+                ) {
+                    Ok(logits) => break logits,
+                    Err(e) => {
+                        attempt += 1;
+                        assert!(
+                            attempt < MAX_BATCH_ATTEMPTS,
+                            "serving transport failed mid-batch after {attempt} heal \
+                             attempts: {e}"
+                        );
+                        self.heal();
+                    }
+                }
+            };
             let mut cache = self.caches[t].lock().unwrap();
             for (&i, lg) in miss_idx.iter().zip(&logits) {
                 if let Some(key) = keys[i].take() {
@@ -210,11 +246,21 @@ impl Coordinator {
 
     /// One rebalance pass: snapshot every backend's wear over the
     /// transport, migrate up to `max_moves` hottest shards off the
-    /// hottest chip (within its backend), invalidate every tenant's
-    /// cache if anything moved. See [`rebalance`] for the
-    /// drain-before-migrate protocol.
+    /// hottest chip (within its backend), then consider up to
+    /// `group_moves` epoch-fenced **cross-group layer migrations**
+    /// under capacity pressure; invalidate every tenant's cache if
+    /// anything moved. See [`rebalance`] for both protocols.
     fn rebalance_pass(&mut self, force: bool) {
-        let wears = self.router.wear_all().expect("transport failed in wear probe");
+        // heal first: the pass must plan against the fleet that will
+        // serve it (a bounced member re-programmed and rejoined, not
+        // migrated onto while its placement refs point at a dead pool).
+        // This is also the periodic re-probe that re-admits a member
+        // quarantined Unreachable once its host returns.
+        self.heal();
+        let wears = match self.router.wear_all() {
+            Ok(w) => w,
+            Err(_) => return, // fleet unhealthy: heal again next pass
+        };
         let now: Vec<Vec<WearLedger>> = wears.iter().map(|w| w.wear.clone()).collect();
         let rows_free: Vec<Vec<usize>> = wears
             .iter()
@@ -237,6 +283,7 @@ impl Coordinator {
                 }
             }
         }
+        moved += self.group_migration_pass(force);
         if moved > 0 {
             // any re-shard invalidates every cached entry (see `cache`)
             for cache in &self.caches {
@@ -246,6 +293,198 @@ impl Coordinator {
             self.rebalancer.shards_moved += moved;
         }
         self.rebalancer.last = now;
+    }
+
+    /// Up to `group_moves` cross-group layer migrations, chosen by
+    /// capacity pressure. Returns the number of shards that moved
+    /// (counted once per logical shard, like intra-backend moves).
+    fn group_migration_pass(&mut self, force: bool) -> u64 {
+        let mut moved = 0u64;
+        for _ in 0..self.rebalancer.cfg.group_moves {
+            // group headroom: the tightest member bounds what a group
+            // can absorb (replicas each need their own copy). Read from
+            // the router's live mirrors so a migration earlier in this
+            // pass is already accounted for.
+            let mut group_free = vec![usize::MAX; self.router.n_groups()];
+            for m in 0..self.router.n_members() {
+                let (g, _) = self.router.member_group(m);
+                group_free[g] = group_free[g].min(self.router.member_rows_free(m));
+            }
+            let Some(mv) = plan_group_move(&self.placements, &self.heat, &group_free, force)
+            else {
+                break;
+            };
+            match self.try_migrate_layer(mv.tenant, mv.layer, mv.from_group, mv.to_group) {
+                Some(shards) => moved += shards,
+                None => break, // aborted: conditions will not improve this pass
+            }
+        }
+        moved
+    }
+
+    /// Execute one planned cross-group layer migration through the
+    /// router's fence machine. Returns the number of logical shards
+    /// moved, or `None` when the migration aborted or a quota blocked
+    /// it (the source placement stays authoritative either way).
+    fn try_migrate_layer(
+        &mut self,
+        tenant: usize,
+        layer: usize,
+        from_group: usize,
+        to_group: usize,
+    ) -> Option<u64> {
+        let pl = &self.placements[tenant].layers[layer];
+        debug_assert_eq!(pl.group, from_group, "plan vs placement drift");
+        let live: Vec<usize> =
+            (0..pl.shards[0].len()).filter(|&f| pl.shards[0][f].is_some()).collect();
+        if live.is_empty() {
+            return None;
+        }
+        // per-member row quota on every destination member: the layer's
+        // need is what its copies occupy today (same cells, same striping)
+        if let Some(quota) = self.quotas[tenant] {
+            let need: usize =
+                pl.shards[0].iter().flatten().map(|s| s.span.slots.len()).sum();
+            for local in 0..self.router.group_size(to_group) {
+                if self.placements[tenant].rows_live_on(to_group, local) + need > quota {
+                    return None;
+                }
+            }
+        }
+        let payloads: Vec<Option<OwnedPayload>> = (0..self.placements[tenant].layers[layer]
+            .shards[0]
+            .len())
+            .map(|f| {
+                self.placements[tenant].layers[layer].shards[0][f]
+                    .as_ref()
+                    .map(|_| {
+                        self.models[tenant]
+                            .shard_payload(layer, f)
+                            .expect("live shard has a payload")
+                            .into()
+                    })
+            })
+            .collect();
+        let old_epoch = self.routes[tenant].epoch;
+        let old_shards = self.placements[tenant].layers[layer].shards.clone();
+        let outcome = match self.router.migrate_layer(
+            old_epoch,
+            from_group,
+            &old_shards,
+            to_group,
+            &payloads,
+        ) {
+            Ok(outcome) => outcome,
+            Err(_) => return None, // router workers gone; shutdown path reports
+        };
+        match outcome {
+            MigrationOutcome::Completed { shards, epoch, stuck_retries } => {
+                self.stuck_retries += stuck_retries;
+                self.placements[tenant].layers[layer] =
+                    PlacedLayer { group: to_group, shards };
+                self.routes[tenant] =
+                    TenantRoute::from_placement(&self.placements[tenant], epoch);
+                Some(live.len() as u64)
+            }
+            MigrationOutcome::Aborted { stuck_retries } => {
+                self.stuck_retries += stuck_retries;
+                None
+            }
+        }
+    }
+
+    /// Probe the fleet; re-program and rejoin every bounced member.
+    /// Any member that was re-programmed bumps the epoch of every
+    /// tenant with layers on its group (the classic "reconnecting host
+    /// missed a migration" hazard: it must serve the *current*
+    /// placement at the *current* epoch, never its pre-bounce memory).
+    fn heal(&mut self) {
+        let probes = self.router.probe_members();
+        let mut touched_groups: Vec<usize> = Vec::new();
+        for probe in probes {
+            if probe.state != MemberState::Bounced {
+                continue;
+            }
+            let (group, local) = self.router.member_group(probe.member);
+            if self.reprogram_member(probe.member, group, local)
+                && self.router.rejoin_member(probe.member).is_ok()
+                && !touched_groups.contains(&group)
+            {
+                touched_groups.push(group);
+            }
+        }
+        if touched_groups.is_empty() {
+            return;
+        }
+        // epoch-bump every tenant whose layers live on a healed group,
+        // and flush caches: the placement changed under them
+        for t in 0..self.routes.len() {
+            let affected = self.placements[t]
+                .layers
+                .iter()
+                .any(|pl| touched_groups.contains(&pl.group));
+            if affected {
+                let epoch = self.router.next_epoch();
+                self.routes[t] = TenantRoute::from_placement(&self.placements[t], epoch);
+            }
+        }
+        for cache in &self.caches {
+            cache.lock().unwrap().invalidate_all();
+        }
+    }
+
+    /// Re-program every live shard this member should hold (all tenants,
+    /// all layers of its group) onto its fresh pool. `true` when every
+    /// shard landed cleanly — only then do the new spans replace the
+    /// placement refs and may the member rejoin. A failed attempt
+    /// releases everything it staged, so the next heal retries against
+    /// a clean pool instead of leaking rows attempt after attempt.
+    fn reprogram_member(&mut self, member: usize, group: usize, local: usize) -> bool {
+        let mut staged: Vec<(usize, usize, usize, ShardRef)> = Vec::new();
+        for t in 0..self.placements.len() {
+            for l in 0..self.placements[t].layers.len() {
+                if self.placements[t].layers[l].group != group {
+                    continue;
+                }
+                for f in 0..self.placements[t].layers[l].shards[local].len() {
+                    if self.placements[t].layers[l].shards[local][f].is_none() {
+                        continue;
+                    }
+                    let payload: OwnedPayload = self.models[t]
+                        .shard_payload(l, f)
+                        .expect("live shard has a payload")
+                        .into();
+                    match self.router.place_shard(member, &payload) {
+                        Ok(PlaceOutcome::Placed { chip, span, retries }) => {
+                            self.stuck_retries += retries;
+                            let r = ShardRef { chip: chip as u32, filter: f as u32, span };
+                            staged.push((t, l, f, r));
+                        }
+                        Ok(PlaceOutcome::NoRoom { retries }) => {
+                            self.stuck_retries += retries;
+                            self.rollback_staged(member, &staged);
+                            return false; // stays quarantined; probed again later
+                        }
+                        Err(_) => {
+                            self.rollback_staged(member, &staged);
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+        for (t, l, f, r) in staged {
+            self.placements[t].layers[l].shards[local][f] = Some(r);
+        }
+        true
+    }
+
+    /// Release the spans a failed re-program attempt staged (they live
+    /// on the member's current pool, so the allocator accepts them).
+    fn rollback_staged(&mut self, member: usize, staged: &[(usize, usize, usize, ShardRef)]) {
+        for (_, _, _, r) in staged {
+            let _ = self.router.release(member, r.chip as usize, r.span.clone());
+        }
     }
 
     /// Re-program one shard on `dst` of the same backend. The placement
@@ -275,10 +514,9 @@ impl Coordinator {
             .shard_payload(mv.layer, mv.filter)
             .expect("live shard has a payload")
             .into();
-        let reply = self
-            .router
-            .program(member, dst, payload)
-            .expect("transport failed mid-migration");
+        let Ok(reply) = self.router.program(member, dst, payload) else {
+            return false; // member unreachable: the heal path takes over
+        };
         let Some(span) = reply.span else {
             return false; // destination filled up within this pass
         };
@@ -288,7 +526,7 @@ impl Coordinator {
         }
         self.placements[mv.tenant].layers[mv.layer].shards[local][mv.filter] =
             Some(ShardRef { chip: dst as u32, filter: mv.filter as u32, span });
-        let epoch = self.routes[mv.tenant].epoch + 1;
+        let epoch = self.router.next_epoch();
         self.routes[mv.tenant] = TenantRoute::from_placement(&self.placements[mv.tenant], epoch);
         true
     }
@@ -379,8 +617,13 @@ impl Engine {
         let quotas: Vec<Option<usize>> = tenants.iter().map(|t| t.row_quota).collect();
         let depths: Vec<usize> = tenants.iter().map(|t| t.queue_depth).collect();
         let models: Vec<ModelBundle> = tenants.into_iter().map(|t| t.model).collect();
-        let routes: Vec<TenantRoute> =
-            placements.iter().map(|p| TenantRoute::from_placement(p, 0)).collect();
+        // router-issued epochs are globally unique across tenants, so a
+        // fenced epoch can never be confused with a live one
+        let mut routes: Vec<TenantRoute> = Vec::with_capacity(placements.len());
+        for p in &placements {
+            let epoch = router.next_epoch();
+            routes.push(TenantRoute::from_placement(p, epoch));
+        }
         let heat: Vec<ShardHeat> = placements
             .iter()
             .map(|p| p.layers.iter().map(|pl| vec![0u64; pl.shards[0].len()]).collect())
@@ -658,7 +901,7 @@ mod tests {
         let model = ModelBundle::synthetic_mnist([3, 4, 3], 0.0, 95);
         let tenants = vec![TenantConfig::new("mnist", model.clone())];
         let mut cfg = small_cfg(2, 96);
-        cfg.rebalance = RebalanceConfig { every_batches: 2, max_moves: 1 };
+        cfg.rebalance = RebalanceConfig { every_batches: 2, max_moves: 1, group_moves: 0 };
         cfg.cache = CacheConfig { capacity: 0 }; // every request hits silicon
         let engine = Engine::start(tenants, &cfg).unwrap();
         let ds = mnist::generate(6, 97);
@@ -675,6 +918,62 @@ mod tests {
         assert!(report.shards_moved >= 1);
         assert_eq!(report.tenants[0].answered, 6);
         assert_eq!(report.tenants[0].cache_hits, 0);
+    }
+
+    #[test]
+    fn forced_cross_group_migration_keeps_logits_bit_exact() {
+        use crate::serve::transport::{Backend, RouterConfig};
+        // two single-member groups of local pools: the tenant's layers
+        // split across them, and a forced pass migrates a whole layer
+        // between the groups through the epoch-fenced cutover
+        let model = ModelBundle::synthetic_mnist([3, 4, 3], 0.0, 111);
+        let mk = |seed| -> Box<dyn Backend> {
+            Box::new(
+                LocalBackend::from_pool_config(&PoolConfig {
+                    chips: 2,
+                    chip: ChipConfig::small_test(),
+                    seed,
+                })
+                .unwrap(),
+            )
+        };
+        let router =
+            ShardRouter::new(vec![vec![mk(112)], vec![mk(113)]], RouterConfig::default())
+                .unwrap();
+        let mut cfg = small_cfg(2, 114);
+        cfg.rebalance = RebalanceConfig { every_batches: 0, max_moves: 0, group_moves: 1 };
+        cfg.cache = CacheConfig { capacity: 0 }; // every request hits silicon
+        let engine = Engine::start_with_router(
+            vec![TenantConfig::new("mnist", model.clone())],
+            router,
+            &cfg,
+        )
+        .unwrap();
+        let ds = mnist::generate(4, 115);
+        // warm-up traffic builds the heat signal the planner ranks by
+        for i in 0..2 {
+            let resp = engine.submit(0, ds.sample(i).to_vec()).recv().unwrap();
+            assert_eq!(resp.logits, model.reference_logits(ds.sample(i)));
+        }
+        engine.force_rebalance();
+        for i in 0..4 {
+            let resp = engine.submit(0, ds.sample(i).to_vec()).recv().unwrap();
+            assert_eq!(
+                resp.logits,
+                model.reference_logits(ds.sample(i)),
+                "image {i} diverged (the cross-group cutover must be invisible)"
+            );
+        }
+        let report = engine.shutdown();
+        let t = &report.transport;
+        assert!(t.migrations_started >= 1, "the forced pass must attempt a layer migration");
+        assert!(
+            t.migrations_completed >= 1,
+            "an ideal two-group fleet must complete the migration"
+        );
+        assert_eq!(t.migrations_fenced, t.migrations_completed, "every fence completes");
+        assert_eq!(report.answered(), 6);
+        assert_eq!(report.dropped(), 0);
     }
 
     #[test]

@@ -22,14 +22,27 @@
 //! logits stay bit-exact through any number of migrations, local or
 //! remote.
 //!
-//! Migrations never cross a backend boundary: shards are
+//! Intra-backend moves never cross a backend boundary: shards are
 //! weight-stationary within their host's pool (replicas hold their own
-//! copies already), so wear is leveled where the wear happened.
+//! copies already), so wear is leveled where the wear happened. Their
+//! vacated rows are retired, not recycled (append-only allocators,
+//! mirroring the stuck-tile policy).
 //!
-//! Vacated source rows are retired, not recycled (row allocators are
-//! append-only, mirroring the stuck-tile policy): rebalancing trades
-//! spare capacity for wear-leveling, and stops when capacity or tenant
-//! quotas say so.
+//! # Cross-group layer migration
+//!
+//! When [`RebalanceConfig::group_moves`] is nonzero the pass also
+//! considers moving a **whole layer between groups** — the mobility
+//! intra-backend moves cannot provide when one group's pools run out of
+//! rows (or run hot) while another group idles. `plan_group_move`
+//! picks the source group under the most capacity pressure (fewest
+//! min-free rows across its members), the destination with the most
+//! headroom, and the hottest layer owned by the source; the engine then
+//! executes it through the epoch-fenced
+//! [`crate::serve::transport::ShardRouter::migrate_layer`] state
+//! machine (program → fence → drain → free, DESIGN.md §9), which —
+//! unlike intra-backend moves — **does free** the vacated source rows,
+//! because the fence guarantees nothing in flight can still address
+//! them.
 
 use crate::chip::WearLedger;
 use crate::serve::transport::RouterPlacement;
@@ -40,13 +53,17 @@ pub struct RebalanceConfig {
     /// Diff wear snapshots and consider migrating after every this many
     /// served (chip-computed) batches; 0 disables rebalancing.
     pub every_batches: u64,
-    /// Max shards migrated per rebalance pass.
+    /// Max shards migrated per rebalance pass (intra-backend moves).
     pub max_moves: usize,
+    /// Max **cross-group layer migrations** per pass; 0 disables them.
+    /// A forced pass relaxes the capacity-pressure threshold but still
+    /// honors this cap.
+    pub group_moves: usize,
 }
 
 impl Default for RebalanceConfig {
     fn default() -> Self {
-        RebalanceConfig { every_batches: 0, max_moves: 2 }
+        RebalanceConfig { every_batches: 0, max_moves: 2, group_moves: 0 }
     }
 }
 
@@ -99,7 +116,9 @@ impl Rebalancer {
         debug_assert_eq!(now.len(), self.last.len());
         let mut best: Option<(u64, usize, usize)> = None;
         for (m, chips) in now.iter().enumerate() {
-            debug_assert_eq!(chips.len(), self.last[m].len());
+            if chips.len() != self.last[m].len() {
+                continue; // a bounced replacement pool changed shape: no delta yet
+            }
             for (c, w) in chips.iter().enumerate() {
                 let d = w.delta(&self.last[m][c]).wl_activations;
                 if best.map(|(bd, _, _)| d > bd).unwrap_or(true) {
@@ -155,6 +174,71 @@ pub(crate) fn plan_moves(
     candidates.into_iter().map(|(_, mv)| mv).collect()
 }
 
+/// One planned cross-group layer migration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) struct GroupMove {
+    pub tenant: usize,
+    pub layer: usize,
+    pub from_group: usize,
+    pub to_group: usize,
+}
+
+/// Plan one cross-group layer migration under capacity pressure.
+///
+/// `group_free[g]` is the group's headroom: the **minimum** across its
+/// members of total free rows (a replica group can only absorb what its
+/// tightest member can). The source is the group with the least
+/// headroom, the destination the one with the most; unless `force`d,
+/// the move only fires when the source has less than half the
+/// destination's headroom (genuine pressure, not noise). The migrated
+/// layer is the hottest (by served windows) layer the source owns whose
+/// row need fits the destination's headroom — moving the hottest layer
+/// both relieves the most future wear and frees its rows for whatever
+/// the source must host next.
+pub(crate) fn plan_group_move(
+    placements: &[RouterPlacement],
+    heat: &[ShardHeat],
+    group_free: &[usize],
+    force: bool,
+) -> Option<GroupMove> {
+    if group_free.len() < 2 {
+        return None;
+    }
+    let mut src = 0usize;
+    let mut dst = 0usize;
+    for g in 1..group_free.len() {
+        if group_free[g] < group_free[src] {
+            src = g;
+        }
+        if group_free[g] > group_free[dst] {
+            dst = g;
+        }
+    }
+    if src == dst || (!force && group_free[src] * 2 >= group_free[dst]) {
+        return None;
+    }
+    let mut best: Option<(u64, GroupMove)> = None;
+    for (t, placement) in placements.iter().enumerate() {
+        for (l, pl) in placement.layers.iter().enumerate() {
+            if pl.group != src {
+                continue;
+            }
+            // rows the layer needs per destination member == rows its
+            // copies occupy per source member (same cells, same striping)
+            let need: usize =
+                pl.shards[0].iter().flatten().map(|s| s.span.slots.len()).sum();
+            if need == 0 || need > group_free[dst] {
+                continue;
+            }
+            let h: u64 = heat[t][l].iter().sum();
+            if best.as_ref().map(|(bh, _)| h > *bh).unwrap_or(true) {
+                best = Some((h, GroupMove { tenant: t, layer: l, from_group: src, to_group: dst }));
+            }
+        }
+    }
+    best.map(|(_, mv)| mv)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,7 +260,7 @@ mod tests {
     #[test]
     fn picks_hottest_source_and_least_worn_destination() {
         let rb = Rebalancer::new(
-            RebalanceConfig { every_batches: 4, max_moves: 2 },
+            RebalanceConfig { every_batches: 4, max_moves: 2, group_moves: 0 },
             vec![vec![wear(100, 10), wear(900, 10), wear(500, 10)]],
         );
         // chip 0 served the window; chip 1 is tired, chip 2 fresh-ish
@@ -199,7 +283,7 @@ mod tests {
     #[test]
     fn hottest_chip_is_found_across_members() {
         let rb = Rebalancer::new(
-            RebalanceConfig { every_batches: 1, max_moves: 1 },
+            RebalanceConfig { every_batches: 1, max_moves: 1, group_moves: 0 },
             vec![vec![wear(10, 0), wear(20, 0)], vec![wear(30, 0), wear(40, 0)]],
         );
         // member 1 chip 0 absorbed the window; its sibling chip 1 is
@@ -245,5 +329,50 @@ mod tests {
         // pruned (None) and off-source shards never appear
         let all = plan_moves(&[p0], &heat, 0, 0, 1, 10);
         assert_eq!(all, vec![Move { tenant: 0, layer: 0, filter: 1 }]);
+    }
+
+    #[test]
+    fn group_move_fires_under_capacity_pressure_only() {
+        // tenant 0: layer 0 on group 0 (2 rows), layer 1 on group 1
+        let p = RouterPlacement {
+            layers: vec![
+                PlacedLayer { group: 0, shards: vec![vec![shard(0, 2)]] },
+                PlacedLayer { group: 1, shards: vec![vec![shard(0, 1)]] },
+            ],
+            stuck_retries: 0,
+        };
+        let heat = vec![vec![vec![10], vec![99]]];
+        // pressure: group 0 squeezed (3 free), group 1 roomy (10 free)
+        let mv = plan_group_move(&[p.clone()], &heat, &[3, 10], false).unwrap();
+        assert_eq!(
+            mv,
+            GroupMove { tenant: 0, layer: 0, from_group: 0, to_group: 1 },
+            "the source's own layer moves toward the headroom"
+        );
+        // balanced fleet: no move without force…
+        assert_eq!(plan_group_move(&[p.clone()], &heat, &[9, 10], false), None);
+        // …but a forced pass relaxes the threshold
+        assert!(plan_group_move(&[p.clone()], &heat, &[9, 10], true).is_some());
+        // a destination without room for the layer is never chosen
+        assert_eq!(plan_group_move(&[p.clone()], &heat, &[0, 1], false), None);
+        // single group: nothing to move between
+        assert_eq!(plan_group_move(&[p], &heat, &[3], true), None);
+    }
+
+    #[test]
+    fn group_move_picks_the_hottest_layer_of_the_source() {
+        let layer_on = |g: usize, rows: usize| PlacedLayer {
+            group: g,
+            shards: vec![vec![shard(0, rows)]],
+        };
+        let p0 = RouterPlacement {
+            layers: vec![layer_on(0, 1), layer_on(0, 1), layer_on(1, 1)],
+            stuck_retries: 0,
+        };
+        let p1 = RouterPlacement { layers: vec![layer_on(0, 1)], stuck_retries: 0 };
+        // tenant 1's only layer is hottest on the squeezed group 0
+        let heat = vec![vec![vec![5], vec![7], vec![1000]], vec![vec![50]]];
+        let mv = plan_group_move(&[p0, p1], &heat, &[1, 10], false).unwrap();
+        assert_eq!(mv, GroupMove { tenant: 1, layer: 0, from_group: 0, to_group: 1 });
     }
 }

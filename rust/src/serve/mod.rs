@@ -123,6 +123,6 @@ pub use pool::{ChipPool, PoolConfig, WearSnapshot};
 pub use scheduler::{Server, ServerConfig};
 pub use stats::{EngineReport, LatencyHistogram, ServeReport, ServeStats, TenantStats};
 pub use transport::{
-    Backend, HedgeConfig, Host, HostConfig, LocalBackend, RemoteBackend, RouterConfig,
-    RouterStats, ShardRouter, TransportError,
+    Backend, HedgeConfig, Host, HostConfig, LocalBackend, MemberState, MigrationOutcome,
+    ReconnectPolicy, RemoteBackend, RouterConfig, RouterStats, ShardRouter, TransportError,
 };

@@ -26,6 +26,13 @@
 //! `ProgramRequest`s to backends it cannot reach into — but applies
 //! the same policy: least-worn chip first, ties toward free rows,
 //! stuck-tile spans retired and retried on the next candidate.
+//!
+//! Rows retired by stuck tiles are never reused, and rows vacated by an
+//! intra-backend wear move stay retired too. The one sanctioned way
+//! rows come back is the **free** step of an epoch-fenced cross-group
+//! migration ([`crate::serve::transport::ShardRouter::migrate_layer`]),
+//! which releases them only after the fence has drained every request
+//! that could still address them — see DESIGN.md §9.
 
 use anyhow::{anyhow, Result};
 

@@ -192,18 +192,25 @@ pub struct EngineReport {
     pub energy_pj: f64,
     /// Per-chip lifetime wear at shutdown.
     pub wear: Vec<WearLedger>,
-    /// Rows consumed per chip over the whole run (placement, stuck
-    /// retries, and migrations — vacated rows stay retired).
+    /// Net rows consumed per chip over the whole run (placement, stuck
+    /// retries, and migrations; rows vacated by an intra-backend move
+    /// stay retired, rows freed by a fenced cross-group migration
+    /// leave the count again).
     pub rows_used: Vec<usize>,
-    /// Store attempts abandoned to stuck tiles (placement + migration).
+    /// Store attempts abandoned to stuck tiles (placement, migration,
+    /// and post-bounce re-programming).
     pub stuck_retries: usize,
     /// Rebalance passes that migrated at least one shard.
     pub rebalances: u64,
-    /// Shards migrated across all rebalance passes.
+    /// Shards migrated across all rebalance passes (intra-backend moves
+    /// plus shards carried by cross-group layer migrations).
     pub shards_moved: u64,
-    /// Fleet-level dispatch counters (hedges fired/won, spills, stale
-    /// replies discarded) from the engine's
-    /// [`crate::serve::transport::ShardRouter`].
+    /// Fleet-level dispatch counters from the engine's
+    /// [`crate::serve::transport::ShardRouter`]: hedges fired/won,
+    /// spills, stale/epoch-fenced replies discarded, cross-group
+    /// migrations started/fenced/completed/aborted, and member
+    /// reconnects — the telemetry OPERATIONS.md teaches operators to
+    /// read.
     pub transport: RouterStats,
 }
 

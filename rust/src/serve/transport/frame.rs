@@ -25,7 +25,8 @@ use crate::cim::vmm::{PackedWindows, PackedWindowsI8};
 
 use super::{
     BackendInfo, DispatchReply, DispatchRequest, FinishReply, OwnedPayload, ProgramReply,
-    ProgramRequest, Result, ShardRef, TransportError, WearReply, WireWindows,
+    ProgramRequest, ReleaseReply, ReleaseRequest, Result, ShardRef, TransportError, WearReply,
+    WireWindows,
 };
 
 /// Hard bound on one frame's payload (256 MiB): a corrupt length prefix
@@ -37,6 +38,7 @@ pub const MAX_FRAME: usize = 256 << 20;
 pub enum WireRequest {
     Dispatch(DispatchRequest),
     Program(ProgramRequest),
+    Release(ReleaseRequest),
     Wear,
     Describe,
     ResetEnergy,
@@ -49,6 +51,7 @@ pub enum WireRequest {
 pub enum WireReply {
     Dispatch(DispatchReply),
     Program(ProgramReply),
+    Release(ReleaseReply),
     Wear(WearReply),
     Describe(BackendInfo),
     ResetEnergy,
@@ -112,6 +115,7 @@ const REQ_WEAR: u8 = 3;
 const REQ_DESCRIBE: u8 = 4;
 const REQ_RESET_ENERGY: u8 = 5;
 const REQ_FINISH: u8 = 6;
+const REQ_RELEASE: u8 = 7;
 
 const REP_DISPATCH: u8 = 129;
 const REP_PROGRAM: u8 = 130;
@@ -119,6 +123,7 @@ const REP_WEAR: u8 = 131;
 const REP_DESCRIBE: u8 = 132;
 const REP_RESET_ENERGY: u8 = 133;
 const REP_FINISH: u8 = 134;
+const REP_RELEASE: u8 = 135;
 const REP_ERR: u8 = 255;
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
@@ -254,6 +259,11 @@ pub fn encode_request(req: &WireRequest) -> Vec<u8> {
             put_u32(&mut buf, r.chip);
             put_payload(&mut buf, &r.payload);
         }
+        WireRequest::Release(r) => {
+            buf.push(REQ_RELEASE);
+            put_u32(&mut buf, r.chip);
+            put_span(&mut buf, &r.span);
+        }
         WireRequest::Wear => buf.push(REQ_WEAR),
         WireRequest::Describe => buf.push(REQ_DESCRIBE),
         WireRequest::ResetEnergy => buf.push(REQ_RESET_ENERGY),
@@ -289,10 +299,15 @@ pub fn encode_reply(rep: &WireReply) -> Vec<u8> {
             }
             put_u64s(&mut buf, &r.rows_free);
         }
+        WireReply::Release(r) => {
+            buf.push(REP_RELEASE);
+            put_u64(&mut buf, r.rows_free);
+        }
         WireReply::Describe(info) => {
             buf.push(REP_DESCRIBE);
             put_u32(&mut buf, info.chips);
             put_u32(&mut buf, info.data_cols);
+            put_u64(&mut buf, info.incarnation);
         }
         WireReply::ResetEnergy => buf.push(REP_RESET_ENERGY),
         WireReply::Finish(r) => {
@@ -510,6 +525,11 @@ pub fn decode_request(buf: &[u8]) -> Result<WireRequest> {
             let payload = r.payload()?;
             WireRequest::Program(ProgramRequest { chip, payload })
         }
+        REQ_RELEASE => {
+            let chip = r.u32()?;
+            let span = r.span()?;
+            WireRequest::Release(ReleaseRequest { chip, span })
+        }
         REQ_WEAR => WireRequest::Wear,
         REQ_DESCRIBE => WireRequest::Describe,
         REQ_RESET_ENERGY => WireRequest::ResetEnergy,
@@ -540,10 +560,12 @@ pub fn decode_reply(buf: &[u8]) -> Result<WireReply> {
             let rows_free = r.u64s()?;
             WireReply::Wear(WearReply { wear, rows_free })
         }
+        REP_RELEASE => WireReply::Release(ReleaseReply { rows_free: r.u64()? }),
         REP_DESCRIBE => {
             let chips = r.u32()?;
             let data_cols = r.u32()?;
-            WireReply::Describe(BackendInfo { chips, data_cols })
+            let incarnation = r.u64()?;
+            WireReply::Describe(BackendInfo { chips, data_cols, incarnation })
         }
         REP_RESET_ENERGY => WireReply::ResetEnergy,
         REP_FINISH => {
@@ -708,6 +730,10 @@ mod tests {
             WireRequest::Describe,
             WireRequest::ResetEnergy,
             WireRequest::Finish,
+            WireRequest::Release(ReleaseRequest {
+                chip: 2,
+                span: RowSpan { slots: vec![(1, 7), (0, 3)], tail_width: 5, len: 35 },
+            }),
         ] {
             assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
         }
@@ -718,8 +744,9 @@ mod tests {
                 span: Some(RowSpan { slots: vec![(0, 1), (1, 2)], tail_width: 3, len: 33 }),
                 failures: 0,
             }),
+            WireReply::Release(ReleaseReply { rows_free: 17 }),
             WireReply::Wear(WearReply { wear: vec![wear.clone()], rows_free: vec![12] }),
-            WireReply::Describe(BackendInfo { chips: 4, data_cols: 30 }),
+            WireReply::Describe(BackendInfo { chips: 4, data_cols: 30, incarnation: 0xf1ee7 }),
             WireReply::ResetEnergy,
             WireReply::Finish(FinishReply { energy_pj: 123.5, wear: vec![wear] }),
             WireReply::Err("stuck tile".into()),

@@ -1,19 +1,34 @@
 //! The worker daemon of the multi-host story: a [`Host`] binds a TCP
 //! listener, fabricates **its own** chip pool, and serves the
-//! [`Backend`](super::Backend) protocol to one client connection —
-//! decode a request frame, execute it on an in-process
-//! [`LocalBackend`], reply. A remote worker really is just a transport
-//! change: the host reuses the exact execution core the local path uses.
+//! [`Backend`](super::Backend) protocol — decode a request frame,
+//! execute it on an in-process [`LocalBackend`], reply. A remote worker
+//! really is just a transport change: the host reuses the exact
+//! execution core the local path uses.
 //!
-//! The daemon is **single-session**: the first connection owns the pool
-//! until it sends `Finish` or hangs up, and then the daemon exits (the
-//! pool's terminal report has been issued — there is nothing left to
-//! serve; the in-tree usage pairs one host with one engine for the
-//! host's lifetime). A malformed frame gets an `Err` reply and the
-//! connection lives on — a bad client request must never take the
-//! silicon down.
+//! The pool outlives any single connection: if a client hangs up (or
+//! its connection drops) without sending `Finish`, the daemon keeps the
+//! pool — with every programmed shard intact — and waits for the next
+//! connection, which is what lets a [`super::remote::RemoteBackend`]
+//! reconnect after a network blip and keep serving the same shards.
+//! Only a served `Finish` (or [`Host::shutdown`]) ends the daemon: the
+//! pool's terminal report has been issued and there is nothing left to
+//! serve. One connection owns the pool at a time (the protocol is
+//! strictly request/reply per session).
+//!
+//! A *restarted* host is a different story: [`Host::spawn`] fabricates
+//! a fresh pool with a fresh incarnation
+//! ([`super::BackendInfo::incarnation`]), so a client reconnecting to a
+//! bounced host can tell its shards are gone and quarantine itself
+//! until re-programmed (DESIGN.md §9). [`Host::spawn_at`] exists so an
+//! operator (or a test) can bring a replacement host up on the exact
+//! address the old one served.
+//!
+//! A malformed frame gets an `Err` reply and the connection lives on —
+//! a bad client request must never take the silicon down.
 
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use super::frame::{self, WireReply, WireRequest};
@@ -29,21 +44,50 @@ pub struct HostConfig {
 }
 
 /// A running worker daemon. [`Host::spawn`] binds an OS-assigned
-/// loopback port; connect a [`super::remote::RemoteBackend`] to
-/// [`Host::addr`]. The daemon thread exits once a client finishes (or
-/// abandons) its session; [`Host::join`] reaps it.
+/// loopback port ([`Host::spawn_at`] binds a caller-chosen address);
+/// connect a [`super::remote::RemoteBackend`] to [`Host::addr`]. The
+/// daemon serves client sessions until one sends `Finish` — a dropped
+/// connection keeps the pool and awaits a reconnect. [`Host::join`]
+/// reaps a daemon that finished; [`Host::shutdown`] force-stops one
+/// that has not (simulating a host crash: the pool dies with it).
 pub struct Host {
     addr: SocketAddr,
     handle: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    /// The live session's stream, kept so `shutdown` can sever a
+    /// connection the daemon is blocked reading from.
+    live: Arc<Mutex<Option<TcpStream>>>,
 }
 
 impl Host {
     /// Bind `127.0.0.1:0` and serve `cfg`'s pool from a daemon thread.
+    ///
+    /// # Errors
+    ///
+    /// I/O errors from binding the listener.
     pub fn spawn(cfg: HostConfig) -> std::io::Result<Host> {
-        let listener = TcpListener::bind("127.0.0.1:0")?;
+        Host::spawn_at("127.0.0.1:0", cfg)
+    }
+
+    /// Bind a specific address — how a replacement host takes over the
+    /// address of a crashed one, so clients holding that address can
+    /// reconnect (and discover the fresh incarnation).
+    ///
+    /// # Errors
+    ///
+    /// I/O errors from binding the listener (e.g. the old host still
+    /// holds the port).
+    pub fn spawn_at(addr: impl ToSocketAddrs, cfg: HostConfig) -> std::io::Result<Host> {
+        let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
-        let handle = std::thread::spawn(move || host_loop(listener, cfg));
-        Ok(Host { addr, handle: Some(handle) })
+        let stop = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(Mutex::new(None));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let live = Arc::clone(&live);
+            std::thread::spawn(move || host_loop(listener, cfg, &stop, &live))
+        };
+        Ok(Host { addr, handle: Some(handle), stop, live })
     }
 
     /// The address clients connect to.
@@ -51,44 +95,101 @@ impl Host {
         self.addr
     }
 
-    /// Wait for the daemon to exit (after its client finished).
+    /// Wait for the daemon to exit (after a client served `Finish`).
     pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Kill the daemon *now*, abandoning the pool and any live session
+    /// — the in-tree stand-in for a host crash. The listener closes
+    /// (the port becomes free for a replacement [`Host::spawn_at`]) and
+    /// any connected client sees its next read fail mid-stream.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(stream) = self.live.lock().unwrap().take() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        // unblock a daemon parked in accept(); the dummy connection is
+        // dropped immediately by the stop check
+        let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
     }
 }
 
-fn host_loop(listener: TcpListener, cfg: HostConfig) {
-    let Ok((stream, _)) = listener.accept() else { return };
-    let _ = stream.set_nodelay(true);
-    match LocalBackend::from_pool_config(&cfg.pool) {
-        Ok(mut backend) => {
-            serve_client(stream, &mut backend);
-            let _ = backend.finish();
-        }
-        Err(e) => {
-            // a host that cannot build its pool still answers: every
-            // request gets the construction error relayed
-            let msg = format!("host pool construction failed: {e}");
-            let mut stream = stream;
-            while frame::read_frame(&mut stream).is_ok() {
-                let rep = frame::encode_reply(&WireReply::Err(msg.clone()));
-                if frame::write_frame(&mut stream, &rep).is_err() {
-                    break;
-                }
+impl Drop for Host {
+    fn drop(&mut self) {
+        // best effort: wake the daemon so an abandoned host does not
+        // leave a thread parked in accept() forever. No join — drops
+        // must not block.
+        if self.handle.is_some() {
+            self.stop.store(true, Ordering::SeqCst);
+            if let Some(stream) = self.live.lock().unwrap().take() {
+                let _ = stream.shutdown(Shutdown::Both);
             }
+            let _ = TcpStream::connect(self.addr);
         }
     }
 }
 
-/// Serve one client connection to completion. Returns after `Finish`
-/// has been answered or the client hung up.
-fn serve_client(mut stream: TcpStream, backend: &mut LocalBackend) {
+fn host_loop(
+    listener: TcpListener,
+    cfg: HostConfig,
+    stop: &AtomicBool,
+    live: &Mutex<Option<TcpStream>>,
+) {
+    let mut backend = match LocalBackend::from_pool_config(&cfg.pool) {
+        Ok(b) => b,
+        Err(e) => {
+            // a host that cannot build its pool still answers: every
+            // request of the first session gets the error relayed
+            let msg = format!("host pool construction failed: {e}");
+            if let Ok((mut stream, _)) = listener.accept() {
+                while frame::read_frame(&mut stream).is_ok() {
+                    let rep = frame::encode_reply(&WireReply::Err(msg.clone()));
+                    if frame::write_frame(&mut stream, &rep).is_err() {
+                        break;
+                    }
+                }
+            }
+            return;
+        }
+    };
+    // session loop: the pool persists across client connections until a
+    // Finish is served or the host is shut down
+    loop {
+        let Ok((stream, _)) = listener.accept() else { return };
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        *live.lock().unwrap() = stream.try_clone().ok();
+        // re-check after publishing the session: a shutdown that fired
+        // between accept and the publish severed nothing, so it relies
+        // on this check to stop the daemon from parking in a read
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let finished = serve_client(stream, &mut backend);
+        *live.lock().unwrap() = None;
+        if finished || stop.load(Ordering::SeqCst) {
+            let _ = backend.finish();
+            return;
+        }
+    }
+}
+
+/// Serve one client session. Returns `true` after `Finish` has been
+/// answered (the daemon must exit), `false` when the client hung up
+/// without finishing (the pool lives on for a reconnect).
+fn serve_client(mut stream: TcpStream, backend: &mut LocalBackend) -> bool {
     loop {
         let payload = match frame::read_frame(&mut stream) {
             Ok(p) => p,
-            Err(_) => return, // client gone (clean or not): session over
+            Err(_) => return false, // client gone (clean or not): await reconnect
         };
         let (reply, done) = match frame::decode_request(&payload) {
             Err(e) => (WireReply::Err(format!("bad request frame: {e}")), false),
@@ -96,10 +197,10 @@ fn serve_client(mut stream: TcpStream, backend: &mut LocalBackend) {
         };
         let buf = frame::encode_reply(&reply);
         if frame::write_frame(&mut stream, &buf).is_err() {
-            return;
+            return false;
         }
         if done {
-            return;
+            return true;
         }
     }
 }
@@ -118,6 +219,7 @@ fn execute(backend: &mut LocalBackend, req: WireRequest) -> (WireReply, bool) {
         WireRequest::Describe => (relay(backend.describe(), WireReply::Describe), false),
         WireRequest::Dispatch(r) => (relay(backend.dispatch(r), WireReply::Dispatch), false),
         WireRequest::Program(r) => (relay(backend.program(r), WireReply::Program), false),
+        WireRequest::Release(r) => (relay(backend.release(r), WireReply::Release), false),
         WireRequest::Wear => (relay(backend.wear(), WireReply::Wear), false),
         WireRequest::ResetEnergy => {
             (relay(backend.reset_energy(), |()| WireReply::ResetEnergy), false)

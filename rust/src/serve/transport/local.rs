@@ -15,6 +15,7 @@
 //! allocation must live wherever the chip lives: on a remote host, the
 //! client cannot reach into the host's arrays.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -28,8 +29,15 @@ use crate::serve::pool::{ChipPool, PoolConfig};
 
 use super::{
     Backend, BackendInfo, DispatchReply, DispatchRequest, FinishReply, OwnedPayload, ProgramReply,
-    ProgramRequest, Result, ShardRef, TransportError, WearReply, WireWindows,
+    ProgramRequest, ReleaseReply, ReleaseRequest, Result, ShardRef, TransportError, WearReply,
+    WireWindows,
 };
+
+/// Process-wide incarnation counter: every fabricated pool gets a fresh
+/// identity, so a restarted [`super::host::Host`] (which fabricates a
+/// new pool) is distinguishable from a surviving one whose TCP
+/// connection merely dropped.
+static NEXT_INCARNATION: AtomicU64 = AtomicU64::new(1);
 
 /// One instruction to a chip worker.
 enum ChipJob {
@@ -37,6 +45,9 @@ enum ChipJob {
     Dots { shards: Arc<Vec<ShardRef>>, windows: WireWindows },
     /// Allocate a fresh span and program the payload into it.
     Program { payload: OwnedPayload },
+    /// Return a span's rows to the chip's allocator (the migration
+    /// protocol's drained **free** step).
+    Release { span: RowSpan },
     /// Report lifetime wear + free rows.
     Wear,
     /// Zero the energy/timing ledgers (wear persists).
@@ -47,6 +58,7 @@ enum ChipJob {
 enum ChipReply {
     Dots(Vec<(u32, Vec<i64>)>),
     Programmed { span: Option<RowSpan>, failures: u64 },
+    Released { accepted: bool, rows_free: u64 },
     Wear { wear: WearLedger, rows_free: u64 },
     EnergyReset,
 }
@@ -85,6 +97,10 @@ fn chip_worker(
                     ChipReply::Programmed { span: Some(span), failures: failures as u64 }
                 }
             },
+            ChipJob::Release { span } => {
+                let accepted = alloc.release(&span);
+                ChipReply::Released { accepted, rows_free: alloc.rows_free() as u64 }
+            }
             ChipJob::Wear => ChipReply::Wear {
                 wear: chip.wear.clone(),
                 rows_free: alloc.rows_free() as u64,
@@ -113,6 +129,7 @@ pub struct LocalBackend {
     /// semantically bogus shard addresses before they reach a worker.
     blocks: usize,
     logical_rows: usize,
+    incarnation: u64,
     finished: Option<FinishReply>,
 }
 
@@ -157,6 +174,7 @@ impl LocalBackend {
             data_cols,
             blocks,
             logical_rows,
+            incarnation: NEXT_INCARNATION.fetch_add(1, Ordering::Relaxed),
             finished: None,
         })
     }
@@ -218,7 +236,11 @@ impl LocalBackend {
 impl Backend for LocalBackend {
     fn describe(&mut self) -> Result<BackendInfo> {
         self.live()?;
-        Ok(BackendInfo { chips: self.job_txs.len() as u32, data_cols: self.data_cols as u32 })
+        Ok(BackendInfo {
+            chips: self.job_txs.len() as u32,
+            data_cols: self.data_cols as u32,
+            incarnation: self.incarnation,
+        })
     }
 
     fn dispatch(&mut self, req: DispatchRequest) -> Result<DispatchReply> {
@@ -291,6 +313,43 @@ impl Backend for LocalBackend {
         match self.recv()? {
             (_, ChipReply::Programmed { span, failures }) => Ok(ProgramReply { span, failures }),
             _ => unreachable!("only the program job is in flight"),
+        }
+    }
+
+    fn release(&mut self, req: ReleaseRequest) -> Result<ReleaseReply> {
+        self.live()?;
+        let c = req.chip as usize;
+        if c >= self.job_txs.len() {
+            return Err(TransportError::Remote(format!(
+                "release names chip {c} of a {}-chip backend",
+                self.job_txs.len()
+            )));
+        }
+        // geometry is validated here; *ownership* (the span was handed
+        // out by this chip's allocator and not yet freed) is validated
+        // by the allocator itself, so a stale span from a dead pool
+        // incarnation — or a double release — is refused instead of
+        // double-booking rows
+        if let Some(&(b, r)) = req
+            .span
+            .slots
+            .iter()
+            .find(|&&(b, r)| b >= self.blocks || r >= self.logical_rows)
+        {
+            return Err(TransportError::Remote(format!(
+                "release slot ({b}, {r}) outside the {}x{} array geometry",
+                self.blocks, self.logical_rows
+            )));
+        }
+        self.send(c, ChipJob::Release { span: req.span })?;
+        match self.recv()? {
+            (_, ChipReply::Released { accepted: true, rows_free }) => {
+                Ok(ReleaseReply { rows_free })
+            }
+            (_, ChipReply::Released { accepted: false, .. }) => Err(TransportError::Remote(
+                "release names rows this allocator does not currently own".into(),
+            )),
+            _ => unreachable!("only the release job is in flight"),
         }
     }
 
@@ -423,6 +482,59 @@ mod tests {
         assert!(matches!(b.wear(), Err(TransportError::Closed)));
         // finish is idempotent
         assert_eq!(b.finish().unwrap().wear.len(), 3);
+    }
+
+    #[test]
+    fn released_rows_are_reprogrammable_and_stay_bit_exact() {
+        let mut b = backend(1, 0x10ca5);
+        let info = b.describe().unwrap();
+        assert!(info.incarnation > 0, "every pool carries a nonzero incarnation");
+        let per_row = info.data_cols as usize;
+        let before = b.wear().unwrap().rows_free[0];
+        let bits: Vec<bool> = (0..3 * per_row).map(|i| i % 2 == 0).collect();
+        let span = b
+            .program(ProgramRequest { chip: 0, payload: OwnedPayload::Binary(bits.clone()) })
+            .unwrap()
+            .span
+            .expect("fresh chip has rows");
+        assert_eq!(b.wear().unwrap().rows_free[0], before - 3);
+        // free the span: capacity is restored exactly
+        let rep = b.release(ReleaseRequest { chip: 0, span: span.clone() }).unwrap();
+        assert_eq!(rep.rows_free, before);
+        // a fresh program recycles the released rows; dots computed over
+        // the overwritten cells match the new payload, not the old one
+        let flipped: Vec<bool> = bits.iter().map(|&x| !x).collect();
+        let rep = b
+            .program(ProgramRequest { chip: 0, payload: OwnedPayload::Binary(flipped.clone()) })
+            .unwrap();
+        assert_eq!(rep.failures, 0, "ideal chip stores cleanly");
+        let span2 = rep.span.unwrap();
+        for slot in &span2.slots {
+            assert!(span.slots.contains(slot), "recycled program must reuse released rows");
+        }
+        let widths = segment_widths(flipped.len(), per_row);
+        let flat: Vec<u8> = (0..flipped.len()).map(|i| (i * 11 % 256) as u8).collect();
+        let pw = Arc::new(vmm::pack_windows(&flat, &widths));
+        let reply = b
+            .dispatch(DispatchRequest {
+                request_id: 1,
+                shard_epoch: 1,
+                layer: 0,
+                shards: Arc::new(vec![ShardRef { chip: 0, filter: 0, span: span2 }]),
+                windows: WireWindows::Binary(pw),
+            })
+            .unwrap();
+        assert_eq!(reply.dots[0].1, vec![vmm::binary_dot_ref(&flipped, &flat)]);
+        // a forged release is a clean Remote error, never a poisoned pool
+        let bogus = RowSpan { slots: vec![(99, 99_999)], tail_width: 1, len: 1 };
+        assert!(matches!(
+            b.release(ReleaseRequest { chip: 0, span: bogus }),
+            Err(TransportError::Remote(_))
+        ));
+        assert!(matches!(
+            b.release(ReleaseRequest { chip: 7, span: span }),
+            Err(TransportError::Remote(_))
+        ));
     }
 
     #[test]

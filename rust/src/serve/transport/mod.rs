@@ -14,11 +14,11 @@
 //!
 //! | type | role |
 //! |---|---|
-//! | [`Backend`] | the RPC-shaped seam (dispatch / program / wear / finish) |
+//! | [`Backend`] | the RPC-shaped seam (dispatch / program / release / wear / health / finish) |
 //! | [`local::LocalBackend`] | worker-per-chip pool in this process |
-//! | [`remote::RemoteBackend`] | length-prefixed frames over TCP ([`frame`]) |
-//! | [`host::Host`] | loopback worker daemon serving its own pool |
-//! | [`router::ShardRouter`] | layer sharding, replica groups, hedging, spillover |
+//! | [`remote::RemoteBackend`] | length-prefixed frames over TCP ([`frame`]), reconnect with bounded backoff |
+//! | [`host::Host`] | worker daemon serving its own pool across client sessions |
+//! | [`router::ShardRouter`] | layer sharding, replica groups, hedging, spillover, epoch-fenced cross-group migration |
 //!
 //! # Numeric contract
 //!
@@ -46,10 +46,10 @@ use crate::serve::model::ShardPayload;
 
 pub use host::{Host, HostConfig};
 pub use local::LocalBackend;
-pub use remote::RemoteBackend;
+pub use remote::{ReconnectPolicy, RemoteBackend};
 pub use router::{
-    HedgeConfig, LayerRoute, PlacedLayer, RouterConfig, RouterPlacement, RouterStats, ShardRouter,
-    TenantRoute,
+    HedgeConfig, LayerRoute, MemberProbe, MemberState, MigrationOutcome, PlacedLayer, RouterConfig,
+    RouterPlacement, RouterStats, ShardRouter, TenantRoute,
 };
 
 /// Transport-layer failure: the connection, the frame, or the far side.
@@ -242,7 +242,28 @@ pub struct WearReply {
     pub rows_free: Vec<u64>,
 }
 
-/// Static facts about a backend, fetched once at connection time.
+/// Return a span's rows to the backend's allocator — the **free** step
+/// of the cross-group migration protocol (DESIGN.md §9), issued only
+/// after the epoch fence has drained every request that could still
+/// address those rows.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReleaseRequest {
+    /// Chip index within the backend's pool.
+    pub chip: u32,
+    /// The span to free (must have been handed out by a prior
+    /// [`ProgramRequest`] on the same chip, and released at most once).
+    pub span: RowSpan,
+}
+
+/// The outcome of a [`ReleaseRequest`]: the chip's authoritative free
+/// row count after the release, so client-side mirrors resync exactly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReleaseReply {
+    pub rows_free: u64,
+}
+
+/// Static facts about a backend, fetched at connection time and
+/// re-checked by health probes.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BackendInfo {
     /// Chips in the backend's pool.
@@ -250,6 +271,26 @@ pub struct BackendInfo {
     /// Data columns per array row (must match across a fleet — the
     /// window packing geometry depends on it).
     pub data_cols: u32,
+    /// Identity of this *pool fabrication*. A restarted host fabricates
+    /// a fresh pool and therefore reports a new incarnation — the
+    /// signal that every shard it held is gone and the member must be
+    /// re-programmed before it may serve dispatches again.
+    pub incarnation: u64,
+}
+
+/// A liveness/identity probe answer (see [`Backend::health`]): the
+/// backend's current facts plus the client-side reconnect history a
+/// [`remote::RemoteBackend`] accumulates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HealthReply {
+    pub info: BackendInfo,
+    /// Connections re-established so far (bounded-backoff retries that
+    /// succeeded), cumulative over the backend's lifetime.
+    pub reconnects: u64,
+    /// The backend reconnected to a *different pool incarnation* and is
+    /// quarantined: dispatches fail fast until the owner re-programs
+    /// its shards and calls [`Backend::rejoin`].
+    pub bounced: bool,
 }
 
 /// The backend's terminal report: serving energy spent and final wear.
@@ -273,26 +314,116 @@ pub struct FinishReply {
 /// property harness passes identically over either — see
 /// `tests/transport_remote.rs`.
 pub trait Backend: Send {
-    /// Pool shape facts (chip count, data-column geometry).
+    /// Pool shape facts (chip count, data-column geometry, pool
+    /// incarnation).
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Closed`] after [`Backend::finish`];
+    /// [`TransportError::Io`]/[`TransportError::Frame`] when the
+    /// transport to a remote pool fails.
     fn describe(&mut self) -> Result<BackendInfo>;
 
     /// Compute the integer dots of every shard named in `req` against
     /// its packed windows. The reply echoes `request_id`/`shard_epoch`.
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Remote`] for a request the backend rejects
+    /// (forged shard addresses, inconsistent window shapes, or a
+    /// bounced remote pool awaiting re-programming);
+    /// [`TransportError::Io`] when the connection dies and bounded
+    /// reconnect/retry cannot restore it; [`TransportError::Closed`]
+    /// after [`Backend::finish`].
     fn dispatch(&mut self, req: DispatchRequest) -> Result<DispatchReply>;
 
     /// Program a shard payload into a fresh span on one of this
     /// backend's chips (see [`ProgramReply`] for the partial-failure
-    /// contract).
+    /// contract). Not idempotent: a transport failure mid-call is
+    /// surfaced, never blindly retried — the rows may or may not have
+    /// been consumed, and only a wear probe resyncs the truth.
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Remote`] for an invalid chip index;
+    /// [`TransportError::Io`] on connection loss (the call is *not*
+    /// replayed); [`TransportError::Closed`] after [`Backend::finish`].
     fn program(&mut self, req: ProgramRequest) -> Result<ProgramReply>;
 
+    /// Return a previously programmed span's rows to the chip's
+    /// allocator — the **free** step of cross-group migration. The
+    /// caller must have drained every in-flight request that could
+    /// still address the span (DESIGN.md §9).
+    ///
+    /// The default implementation refuses: a backend that does not
+    /// opt in keeps its append-only row discipline, and callers treat
+    /// the refusal as "rows retired instead of freed".
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Remote`] when unsupported or the request names
+    /// an invalid chip/span; [`TransportError::Io`] on connection loss;
+    /// [`TransportError::Closed`] after [`Backend::finish`].
+    fn release(&mut self, req: ReleaseRequest) -> Result<ReleaseReply> {
+        let _ = req;
+        Err(TransportError::Remote("backend does not support releasing rows".into()))
+    }
+
     /// Lifetime wear + free rows per chip.
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Io`]/[`TransportError::Frame`] on transport
+    /// failure; [`TransportError::Closed`] after [`Backend::finish`].
     fn wear(&mut self) -> Result<WearReply>;
+
+    /// Liveness/identity probe: current [`BackendInfo`] plus reconnect
+    /// history. The default derives it from [`Backend::describe`] with
+    /// no reconnect state (an in-process backend cannot bounce).
+    ///
+    /// # Errors
+    ///
+    /// Same failure modes as [`Backend::describe`]; for a remote
+    /// backend an `Err` means the host is unreachable even after
+    /// bounded reconnect attempts.
+    fn health(&mut self) -> Result<HealthReply> {
+        Ok(HealthReply { info: self.describe()?, reconnects: 0, bounced: false })
+    }
+
+    /// Lift the bounce quarantine after the owner has re-programmed
+    /// this backend's shards to the current epoch — the final step of
+    /// the reconnect lifecycle (DESIGN.md §9). A no-op for backends
+    /// that never bounce.
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Closed`] after [`Backend::finish`] (the
+    /// default implementation never fails).
+    fn rejoin(&mut self) -> Result<()> {
+        Ok(())
+    }
 
     /// Zero the energy/timing ledgers (wear persists) — called once
     /// after placement so serving measurements exclude programming.
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Io`]/[`TransportError::Frame`] on transport
+    /// failure; [`TransportError::Closed`] after [`Backend::finish`].
     fn reset_energy(&mut self) -> Result<()>;
 
     /// Stop the backend's workers and collect the terminal report.
     /// Every call after this returns [`TransportError::Closed`].
+    ///
+    /// Availability over telemetry purity at shutdown: a remote backend
+    /// replays `finish` across a reconnect even onto a bounced pool, so
+    /// the fleet always terminates cleanly — but the terminal report
+    /// then describes the *replacement* pool (near-zero energy/wear),
+    /// not the crashed one's lifetime.
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Io`]/[`TransportError::Frame`] when the
+    /// terminal handshake with a remote host fails.
     fn finish(&mut self) -> Result<FinishReply>;
 }

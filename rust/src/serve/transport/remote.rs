@@ -8,31 +8,223 @@
 //! concurrency by driving each backend from its own thread, which is
 //! what makes hedging a straggling host possible without an async
 //! runtime.
+//!
+//! # Reconnect lifecycle
+//!
+//! A dropped connection is not a dead pool. On an I/O failure the
+//! backend re-dials its address with bounded exponential backoff
+//! ([`ReconnectPolicy`]) and re-runs the incarnation handshake (a
+//! `Describe` on the fresh connection):
+//!
+//! * **same incarnation** — the host survived; its pool still holds
+//!   every programmed shard. The in-flight request is replayed iff it
+//!   is idempotent (dispatch, describe, wear, finish are; `program` and
+//!   `release` are not — their row-allocator effects may or may not
+//!   have landed, so the error is surfaced and only a wear probe
+//!   resyncs the truth).
+//! * **new incarnation** — the host *bounced*: a replacement daemon
+//!   fabricated a fresh pool and every shard this client programmed is
+//!   gone. The backend **quarantines itself**: every `dispatch` fails
+//!   fast (computing dots against unprogrammed arrays would return
+//!   well-formed garbage, which no epoch check could catch), while
+//!   `program`/`wear`/`describe` still pass so the owner can re-program
+//!   the current placement at the current epoch and then lift the
+//!   quarantine with [`Backend::rejoin`](super::Backend::rejoin).
+//!
+//! The owning [`super::router::ShardRouter`] observes the bounce via
+//! [`Backend::health`](super::Backend::health) and drives the
+//! re-program + rejoin sequence (DESIGN.md §9).
 
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use super::frame::{self, WireReply, WireRequest};
 use super::{
-    Backend, BackendInfo, DispatchReply, DispatchRequest, FinishReply, ProgramReply,
-    ProgramRequest, Result, TransportError, WearReply,
+    Backend, BackendInfo, DispatchReply, DispatchRequest, FinishReply, HealthReply, ProgramReply,
+    ProgramRequest, ReleaseReply, ReleaseRequest, Result, TransportError, WearReply,
 };
 
+/// Bounded-backoff reconnect knobs for a [`RemoteBackend`].
+#[derive(Clone, Debug)]
+pub struct ReconnectPolicy {
+    /// Re-dial attempts per failure before the error is surfaced;
+    /// 0 disables reconnecting entirely.
+    pub max_attempts: u32,
+    /// Backoff before the second attempt (the first re-dial is
+    /// immediate); doubles per attempt.
+    pub base: Duration,
+    /// Backoff clamp.
+    pub cap: Duration,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        ReconnectPolicy {
+            max_attempts: 6,
+            base: Duration::from_millis(20),
+            cap: Duration::from_millis(400),
+        }
+    }
+}
+
+impl ReconnectPolicy {
+    /// No reconnecting: every connection failure is surfaced at once.
+    pub fn disabled() -> Self {
+        ReconnectPolicy { max_attempts: 0, ..ReconnectPolicy::default() }
+    }
+}
+
 /// A backend living behind a TCP connection (loopback in the in-tree
-/// tests and examples; the framing is address-agnostic).
+/// tests and examples; the framing and reconnect logic are
+/// address-agnostic).
 pub struct RemoteBackend {
+    addr: SocketAddr,
+    policy: ReconnectPolicy,
     stream: Option<TcpStream>,
+    /// Incarnation of the pool our shards were programmed into, from
+    /// the connect-time handshake.
+    incarnation: Option<u64>,
+    reconnects: u64,
+    bounced: bool,
+    /// `finish` was served: every further call is a clean `Closed`.
+    finished: bool,
 }
 
 impl RemoteBackend {
-    /// Connect to a [`super::host::Host`] daemon.
-    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<RemoteBackend> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        Ok(RemoteBackend { stream: Some(stream) })
+    /// Connect to a [`super::host::Host`] daemon with the default
+    /// [`ReconnectPolicy`] and run the incarnation handshake.
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Io`] when the address does not resolve or the
+    /// dial fails; handshake failures as their transport error.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<RemoteBackend> {
+        RemoteBackend::connect_with(addr, ReconnectPolicy::default())
     }
 
-    fn call(&mut self, req: &WireRequest) -> Result<WireReply> {
-        let stream = self.stream.as_mut().ok_or(TransportError::Closed)?;
+    /// [`RemoteBackend::connect`] with explicit reconnect knobs.
+    ///
+    /// # Errors
+    ///
+    /// See [`RemoteBackend::connect`].
+    pub fn connect_with(
+        addr: impl ToSocketAddrs,
+        policy: ReconnectPolicy,
+    ) -> Result<RemoteBackend> {
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| {
+                TransportError::Io(std::io::Error::new(
+                    std::io::ErrorKind::AddrNotAvailable,
+                    "address resolved to nothing",
+                ))
+            })?;
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let mut backend = RemoteBackend {
+            addr,
+            policy,
+            stream: Some(stream),
+            incarnation: None,
+            reconnects: 0,
+            bounced: false,
+            finished: false,
+        };
+        backend.handshake()?;
+        Ok(backend)
+    }
+
+    /// Connections re-established so far.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// Is this backend quarantined after reconnecting to a fresh pool?
+    pub fn is_bounced(&self) -> bool {
+        self.bounced
+    }
+
+    /// One `Describe` round-trip recording (or checking) the pool
+    /// incarnation; flips the bounce quarantine on when the pool
+    /// changed identity under us.
+    fn handshake(&mut self) -> Result<()> {
+        let info = match self.call_raw(&WireRequest::Describe)? {
+            WireReply::Describe(info) => info,
+            rep => {
+                return Err(TransportError::Frame(format!(
+                    "unexpected reply {rep:?} to the handshake Describe"
+                )))
+            }
+        };
+        match self.incarnation {
+            None => self.incarnation = Some(info.incarnation),
+            Some(inc) if inc != info.incarnation => {
+                self.incarnation = Some(info.incarnation);
+                self.bounced = true;
+            }
+            Some(_) => {}
+        }
+        Ok(())
+    }
+
+    /// Per-attempt bound on the reconnect dial and handshake I/O, so a
+    /// half-open host (accepting into the backlog while parked on a
+    /// dead session) cannot wedge a nominally bounded retry loop.
+    fn handshake_timeout(&self) -> Duration {
+        (self.policy.cap * 4).max(Duration::from_secs(1))
+    }
+
+    /// Bounded-backoff re-dial + handshake. `true` once a connection is
+    /// live again (possibly to a bounced pool — see `self.bounced`).
+    fn try_reconnect(&mut self) -> bool {
+        self.stream = None;
+        let timeout = self.handshake_timeout();
+        for attempt in 0..self.policy.max_attempts {
+            if attempt > 0 {
+                let factor = 1u32 << (attempt - 1).min(16);
+                std::thread::sleep(
+                    self.policy
+                        .base
+                        .saturating_mul(factor)
+                        .min(self.policy.cap),
+                );
+            }
+            let Ok(stream) = TcpStream::connect_timeout(&self.addr, timeout) else { continue };
+            if stream.set_nodelay(true).is_err()
+                || stream.set_read_timeout(Some(timeout)).is_err()
+                || stream.set_write_timeout(Some(timeout)).is_err()
+            {
+                continue;
+            }
+            self.stream = Some(stream);
+            let handshook = self.handshake().is_ok();
+            // lift the timeouts for normal operation: a dispatch may
+            // legitimately compute for longer than any handshake bound
+            let lifted = self
+                .stream
+                .as_ref()
+                .map(|s| {
+                    s.set_read_timeout(None).is_ok() && s.set_write_timeout(None).is_ok()
+                })
+                .unwrap_or(false);
+            if handshook && lifted {
+                self.reconnects += 1;
+                return true;
+            }
+            self.stream = None;
+        }
+        false
+    }
+
+    /// One request/reply on the live stream — no reconnect logic.
+    fn call_raw(&mut self, req: &WireRequest) -> Result<WireReply> {
+        let stream = self.stream.as_mut().ok_or_else(|| {
+            TransportError::Io(std::io::Error::new(
+                std::io::ErrorKind::NotConnected,
+                "connection is down",
+            ))
+        })?;
         frame::write_frame(stream, &frame::encode_request(req))?;
         let payload = frame::read_frame(stream)?;
         match frame::decode_reply(&payload)? {
@@ -40,49 +232,120 @@ impl RemoteBackend {
             rep => Ok(rep),
         }
     }
+
+    /// One request/reply with the reconnect lifecycle wrapped around
+    /// it. `idempotent` requests are replayed once after a successful
+    /// same-incarnation reconnect; everything else surfaces the
+    /// original error (the connection is still re-established for the
+    /// next caller).
+    fn call(&mut self, req: &WireRequest, idempotent: bool) -> Result<WireReply> {
+        if self.finished {
+            return Err(TransportError::Closed);
+        }
+        if self.bounced && matches!(req, WireRequest::Dispatch(_)) {
+            return Err(TransportError::Remote(
+                "host bounced: shards lost, awaiting re-program + rejoin".into(),
+            ));
+        }
+        if self.stream.is_none() && !self.try_reconnect() {
+            return Err(TransportError::Io(std::io::Error::new(
+                std::io::ErrorKind::NotConnected,
+                "host unreachable after bounded reconnect attempts",
+            )));
+        }
+        // the reconnect handshake may have just flipped the quarantine
+        if self.bounced && matches!(req, WireRequest::Dispatch(_)) {
+            return Err(TransportError::Remote(
+                "host bounced: shards lost, awaiting re-program + rejoin".into(),
+            ));
+        }
+        match self.call_raw(req) {
+            Ok(rep) => Ok(rep),
+            Err(e @ (TransportError::Io(_) | TransportError::Closed)) => {
+                // the connection died mid-call: re-establish it for the
+                // next caller…
+                if !self.try_reconnect() {
+                    return Err(e);
+                }
+                // …and replay only what is safe: idempotent requests,
+                // except a dispatch against a pool that bounced out
+                // from under it (its shards are gone; recomputing would
+                // return well-formed garbage no epoch check can catch)
+                let dispatch_on_bounced =
+                    self.bounced && matches!(req, WireRequest::Dispatch(_));
+                if idempotent && !dispatch_on_bounced {
+                    self.call_raw(req)
+                } else {
+                    Err(e)
+                }
+            }
+            Err(e) => Err(e),
+        }
+    }
 }
 
 impl Backend for RemoteBackend {
     fn describe(&mut self) -> Result<BackendInfo> {
-        match self.call(&WireRequest::Describe)? {
+        match self.call(&WireRequest::Describe, true)? {
             WireReply::Describe(info) => Ok(info),
             rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to Describe"))),
         }
     }
 
     fn dispatch(&mut self, req: DispatchRequest) -> Result<DispatchReply> {
-        match self.call(&WireRequest::Dispatch(req))? {
+        match self.call(&WireRequest::Dispatch(req), true)? {
             WireReply::Dispatch(rep) => Ok(rep),
             rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to Dispatch"))),
         }
     }
 
     fn program(&mut self, req: ProgramRequest) -> Result<ProgramReply> {
-        match self.call(&WireRequest::Program(req))? {
+        match self.call(&WireRequest::Program(req), false)? {
             WireReply::Program(rep) => Ok(rep),
             rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to Program"))),
         }
     }
 
+    fn release(&mut self, req: ReleaseRequest) -> Result<ReleaseReply> {
+        match self.call(&WireRequest::Release(req), false)? {
+            WireReply::Release(rep) => Ok(rep),
+            rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to Release"))),
+        }
+    }
+
     fn wear(&mut self) -> Result<WearReply> {
-        match self.call(&WireRequest::Wear)? {
+        match self.call(&WireRequest::Wear, true)? {
             WireReply::Wear(rep) => Ok(rep),
             rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to Wear"))),
         }
     }
 
+    fn health(&mut self) -> Result<HealthReply> {
+        let info = self.describe()?;
+        Ok(HealthReply { info, reconnects: self.reconnects, bounced: self.bounced })
+    }
+
+    fn rejoin(&mut self) -> Result<()> {
+        if self.finished {
+            return Err(TransportError::Closed);
+        }
+        self.bounced = false;
+        Ok(())
+    }
+
     fn reset_energy(&mut self) -> Result<()> {
-        match self.call(&WireRequest::ResetEnergy)? {
+        match self.call(&WireRequest::ResetEnergy, false)? {
             WireReply::ResetEnergy => Ok(()),
             rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to ResetEnergy"))),
         }
     }
 
     fn finish(&mut self) -> Result<FinishReply> {
-        let rep = self.call(&WireRequest::Finish)?;
-        // the host closes its side after Finish; drop ours too so a
-        // late call is a clean Closed, not a broken pipe
+        let rep = self.call(&WireRequest::Finish, true)?;
+        // the host exits after Finish; drop our side too so a late call
+        // is a clean Closed, not a broken pipe
         self.stream = None;
+        self.finished = true;
         match rep {
             WireReply::Finish(rep) => Ok(rep),
             rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to Finish"))),

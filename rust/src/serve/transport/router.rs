@@ -19,18 +19,63 @@
 //!
 //! # Hedging invariant
 //!
-//! A dispatch goes to one member of the owning group (round-robin). If
-//! no reply lands within the hedge deadline — derived from the group's
-//! dispatch [`LatencyHistogram`] (`quantile(q) × factor`, clamped), or
-//! fixed via [`HedgeConfig::after`] — the *same* request (same request
-//! id, same shard epoch, the replica's own shard spans) is duplicated
-//! to the next replica. Replies are bit-exact across replicas (digital
-//! chips, byte-identical payloads), so **the first reply wins** and the
-//! loser is discarded by `(request id, shard epoch)` identity when it
+//! A dispatch goes to one member of the owning group (round-robin over
+//! the members not currently quarantined). If no reply lands within the
+//! hedge deadline — derived from the group's dispatch
+//! [`LatencyHistogram`] (`quantile(q) × factor`, clamped), or fixed via
+//! [`HedgeConfig::after`] — the *same* request (same request id, same
+//! shard epoch, the replica's own shard spans) is duplicated to the
+//! next replica. Replies are bit-exact across replicas (digital chips,
+//! byte-identical payloads), so **the first reply wins** and the loser
+//! is discarded by `(request id, shard epoch)` identity when it
 //! eventually arrives. A hedged duplicate can therefore never produce a
 //! second answer to the caller: `dispatch_layer` returns exactly once
 //! per request id, and stale replies only increment a counter.
+//!
+//! # Cross-group migration (epoch-fenced cutover)
+//!
+//! [`ShardRouter::migrate_layer`] moves a whole layer **between**
+//! groups — the capacity/wear mobility the single-backend rebalancer
+//! cannot provide — through a four-state fence machine (DESIGN.md §9):
+//!
+//! ```text
+//!   PROGRAM ──ok──▶ FENCE ──▶ DRAIN ──▶ FREE   (migration completed)
+//!      │
+//!      └─any failure─▶ ABORT (partial destination spans released;
+//!                             the source stays authoritative)
+//! ```
+//!
+//! * **program** — every member of the destination group receives a
+//!   byte-identical copy of every live shard payload over the wire
+//!   (least-worn chip first, stuck-tile retry — the placement policy).
+//!   The source keeps serving; nothing observable has changed.
+//! * **fence** — the tenant's epoch advances (epochs are router-issued
+//!   and globally monotone) and the old epoch is recorded as fenced.
+//!   From here the destination copies are authoritative.
+//! * **drain** — the router blocks until every in-flight
+//!   [`DispatchRequest`] has been answered. Because the coordinator
+//!   serializes batches, the only possible stragglers are hedge losers
+//!   of already-answered requests; each drained reply is discarded by
+//!   identity and counted exactly once
+//!   ([`RouterStats::epoch_discards`] when it carries a fenced epoch).
+//! * **free** — only now are the source spans released
+//!   ([`super::Backend::release`]), so no request that could still
+//!   address those rows exists anywhere in the fleet. A backend
+//!   without release support retires the rows instead (append-only
+//!   fallback); the migration still completes.
+//!
+//! # Reconnect / rejoin
+//!
+//! A [`super::remote::RemoteBackend`] reconnects on its own (bounded
+//! backoff) and quarantines itself when the host it re-reached is a
+//! fresh incarnation — its shards are gone. The router observes this
+//! via [`ShardRouter::probe_members`], skips quarantined members in
+//! the dispatch rotation, and — after the owner re-programs the
+//! member's shards at the current epoch — lifts the quarantine with
+//! [`ShardRouter::rejoin_member`], returning the member to its replica
+//! group (and to hedging duty).
 
+use std::collections::BTreeSet;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -43,8 +88,9 @@ use crate::serve::placement::Placement;
 use crate::serve::stats::LatencyHistogram;
 
 use super::{
-    Backend, BackendInfo, DispatchReply, DispatchRequest, FinishReply, OwnedPayload, ProgramReply,
-    ProgramRequest, Result, ShardRef, TransportError, WearReply, WireWindows,
+    Backend, BackendInfo, DispatchReply, DispatchRequest, FinishReply, HealthReply, OwnedPayload,
+    ProgramReply, ProgramRequest, ReleaseReply, ReleaseRequest, Result, ShardRef, TransportError,
+    WearReply, WireWindows,
 };
 
 /// When to duplicate a straggling dispatch to a replica.
@@ -109,19 +155,42 @@ pub struct RouterStats {
     pub hedges_fired: u64,
     /// Hedged dispatches whose *duplicate* replied first.
     pub hedge_wins: u64,
-    /// Replies discarded by request-id/epoch identity (the losing half
-    /// of a hedge, arriving after its request was already answered).
+    /// Replies discarded by request-id identity (the losing half of a
+    /// hedge, arriving after its request was already answered, with an
+    /// epoch that was never fenced).
     pub stale_discarded: u64,
+    /// Replies discarded because they carry a **fenced** (pre-cutover)
+    /// shard epoch. Each such reply is counted here exactly once and
+    /// never also in `stale_discarded`.
+    pub epoch_discards: u64,
     /// Dispatches rerouted to a replica because the chosen member's
     /// bounded queue was full (dispatch-plane admission spillover).
     pub spills: u64,
+    /// Cross-group layer migrations entered (the `program` state).
+    pub migrations_started: u64,
+    /// Migrations that reached the `fence` state (destination copies
+    /// verified; epoch advanced).
+    pub migrations_fenced: u64,
+    /// Migrations that completed (`drain` + `free` done; source rows
+    /// released or retired).
+    pub migrations_completed: u64,
+    /// Migrations abandoned in the `program` state (capacity, stuck
+    /// tiles, or transport failure); partial destination spans were
+    /// released and the source never stopped being authoritative.
+    pub migrations_aborted: u64,
+    /// Connections re-established by member backends (bounded-backoff
+    /// reconnects), as of the last [`ShardRouter::probe_members`].
+    pub reconnects: u64,
 }
 
 enum MemberJob {
     Dispatch(DispatchRequest),
     Program(ProgramRequest),
+    Release(ReleaseRequest),
     Wear,
     Describe,
+    Health,
+    Rejoin,
     ResetEnergy,
     Finish,
 }
@@ -129,8 +198,11 @@ enum MemberJob {
 enum MemberReply {
     Dispatch { request_id: u64, result: Result<DispatchReply> },
     Program(Result<ProgramReply>),
+    Release(Result<ReleaseReply>),
     Wear(Result<WearReply>),
     Describe(Result<BackendInfo>),
+    Health(Result<HealthReply>),
+    Rejoin(Result<()>),
     ResetEnergy(Result<()>),
     Finish(Result<FinishReply>),
 }
@@ -148,8 +220,11 @@ fn member_worker(
                 (MemberReply::Dispatch { request_id, result: backend.dispatch(req) }, false)
             }
             MemberJob::Program(req) => (MemberReply::Program(backend.program(req)), false),
+            MemberJob::Release(req) => (MemberReply::Release(backend.release(req)), false),
             MemberJob::Wear => (MemberReply::Wear(backend.wear()), false),
             MemberJob::Describe => (MemberReply::Describe(backend.describe()), false),
+            MemberJob::Health => (MemberReply::Health(backend.health()), false),
+            MemberJob::Rejoin => (MemberReply::Rejoin(backend.rejoin()), false),
             MemberJob::ResetEnergy => (MemberReply::ResetEnergy(backend.reset_energy()), false),
             MemberJob::Finish => (MemberReply::Finish(backend.finish()), true),
         };
@@ -169,13 +244,20 @@ struct Member {
     local: usize,
     info: BackendInfo,
     /// Client-side mirror of per-chip free rows (kept exact by every
-    /// program reply; resynced from every wear probe).
+    /// program/release reply; resynced from every wear probe).
     rows_free: Vec<usize>,
     /// Placement-ranking wear estimate per chip (resynced likewise).
     est_pulses: Vec<u64>,
-    /// Rows consumed per chip over this router's lifetime (placement,
-    /// stuck retries, migrations — retired rows included).
+    /// Net rows consumed per chip of the member's **current pool
+    /// incarnation** (placement, stuck retries, migrations — retired
+    /// rows included; rows freed by a fenced migration leave the count
+    /// again, and a bounce resets it with the pool).
     rows_used: Vec<usize>,
+    /// Reconnects this member's backend reported at the last probe.
+    reconnects: u64,
+    /// Quarantined members are skipped by the dispatch rotation until
+    /// re-programmed and rejoined (see the module docs).
+    quarantined: bool,
 }
 
 struct Group {
@@ -294,19 +376,82 @@ impl RouterPlacement {
     }
 }
 
-enum PlaceOutcome {
+pub(crate) enum PlaceOutcome {
     Placed { chip: usize, span: crate::cim::mapping::RowSpan, retries: usize },
     NoRoom { retries: usize },
 }
 
+/// The verdict of one [`ShardRouter::migrate_layer`] call.
+#[derive(Clone, Debug)]
+pub enum MigrationOutcome {
+    /// Every destination member holds a verified byte-identical copy,
+    /// the old epoch is fenced and drained, and the source rows are
+    /// released (or retired where the backend lacks release support).
+    Completed {
+        /// `shards[member_local][filter]` on the destination group.
+        shards: Vec<Vec<Option<ShardRef>>>,
+        /// The tenant's new (router-issued, globally monotone) epoch.
+        epoch: u64,
+        /// Store attempts abandoned to stuck tiles while programming.
+        stuck_retries: usize,
+    },
+    /// Programming the destination failed (capacity, stuck tiles, or
+    /// transport); every partially programmed destination span was
+    /// released again and the source never stopped being authoritative.
+    /// Nothing was fenced.
+    Aborted {
+        /// Store attempts abandoned to stuck tiles before the abort.
+        stuck_retries: usize,
+    },
+}
+
+/// One member's verdict from [`ShardRouter::probe_members`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MemberProbe {
+    /// Global member id.
+    pub member: usize,
+    pub state: MemberState,
+    /// Reconnects the member's backend has accumulated.
+    pub reconnects: u64,
+}
+
+/// A probed member's health (see [`ShardRouter::probe_members`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemberState {
+    /// Reachable, same pool incarnation: serving normally.
+    Healthy,
+    /// Reconnected to a **fresh pool incarnation** — its shards are
+    /// gone. Quarantined until re-programmed and rejoined.
+    Bounced,
+    /// Unreachable even after bounded reconnect attempts. Quarantined;
+    /// probed again at the next heal — the engine heals on every
+    /// rebalance pass and after any member dispatch failure, so a host
+    /// that comes back (same incarnation) is re-admitted there.
+    Unreachable,
+}
+
 /// The composite front end over the fleet. See the module docs for the
-/// topology and the hedging invariant.
+/// topology, the hedging invariant, and the migration fence machine.
 pub struct ShardRouter {
     cfg: RouterConfig,
     members: Vec<Member>,
     groups: Vec<Group>,
     res_rx: Receiver<(usize, MemberReply)>,
     next_request: u64,
+    /// Dispatch jobs sent but not yet answered (every reply — folded,
+    /// discarded, or failed — decrements). The drain step of the fence
+    /// machine waits for this to hit zero.
+    outstanding: usize,
+    /// Epochs retired by a fenced cutover (one entry per migration);
+    /// replies carrying one are counted as
+    /// [`RouterStats::epoch_discards`] — an exact set, so another
+    /// tenant's ordinary hedge losers are never misclassified.
+    fenced: BTreeSet<u64>,
+    /// Router-issued epoch source ([`ShardRouter::next_epoch`]).
+    epoch_counter: u64,
+    /// A member dispatch failed since the last probe: the owner should
+    /// run [`ShardRouter::probe_members`] at the next batch boundary.
+    suspect: bool,
     stats: RouterStats,
 }
 
@@ -337,10 +482,12 @@ impl ShardRouter {
                     handle: Some(handle),
                     group: gi,
                     local: li,
-                    info: BackendInfo { chips: 0, data_cols: 0 },
+                    info: BackendInfo { chips: 0, data_cols: 0, incarnation: 0 },
                     rows_free: Vec::new(),
                     est_pulses: Vec::new(),
                     rows_used: Vec::new(),
+                    reconnects: 0,
+                    quarantined: false,
                 });
                 ids.push(idx);
             }
@@ -353,6 +500,10 @@ impl ShardRouter {
             groups: group_meta,
             res_rx,
             next_request: 0,
+            outstanding: 0,
+            fenced: BTreeSet::new(),
+            epoch_counter: 0,
+            suspect: false,
             stats: RouterStats::default(),
         };
         for m in 0..router.members.len() {
@@ -407,6 +558,20 @@ impl ShardRouter {
         }
     }
 
+    /// Classify and count one dispatch reply that was **not** folded
+    /// into an answer: a reply carrying a fenced epoch is a pre-cutover
+    /// straggler ([`RouterStats::epoch_discards`]); any other unclaimed
+    /// reply is a plain hedge loser ([`RouterStats::stale_discarded`]).
+    /// Exactly one counter increments per discarded reply.
+    fn note_unclaimed_dispatch(&mut self, result: &Result<DispatchReply>) {
+        match result {
+            Ok(rep) if self.fenced.contains(&rep.shard_epoch) => {
+                self.stats.epoch_discards += 1
+            }
+            _ => self.stats.stale_discarded += 1,
+        }
+    }
+
     /// Serialized control call: send one job, return its (non-dispatch)
     /// reply. Stale dispatch replies draining in are discarded by
     /// identity — they belong to hedges that already lost.
@@ -415,7 +580,10 @@ impl ShardRouter {
         loop {
             let (m, reply) = self.res_rx.recv().map_err(|_| TransportError::Closed)?;
             match reply {
-                MemberReply::Dispatch { .. } => self.stats.stale_discarded += 1,
+                MemberReply::Dispatch { result, .. } => {
+                    self.outstanding = self.outstanding.saturating_sub(1);
+                    self.note_unclaimed_dispatch(&result);
+                }
                 other => {
                     debug_assert_eq!(m, member, "control replies are strictly serialized");
                     return Ok(other);
@@ -439,6 +607,11 @@ impl ShardRouter {
         self.groups.len()
     }
 
+    /// Members of one group (grouping is fixed at construction).
+    pub fn group_size(&self, group: usize) -> usize {
+        self.groups[group].members.len()
+    }
+
     /// `(group, member-local index)` of a global member id.
     pub fn member_group(&self, member: usize) -> (usize, usize) {
         (self.members[member].group, self.members[member].local)
@@ -455,9 +628,38 @@ impl ShardRouter {
         self.members.iter().flat_map(|m| m.rows_used.iter().copied()).collect()
     }
 
+    /// Total free rows on one member, from the client-side mirrors
+    /// (exact after every program/release reply and wear probe) — the
+    /// capacity-pressure planner's input.
+    pub fn member_rows_free(&self, member: usize) -> usize {
+        self.members[member].rows_free.iter().sum()
+    }
+
     /// Fleet dispatch counters so far.
     pub fn stats(&self) -> RouterStats {
         self.stats.clone()
+    }
+
+    /// Issue the next globally monotone shard epoch. Every
+    /// [`TenantRoute`] built against this router should carry a
+    /// router-issued epoch, so that "epoch `e` is fenced" is
+    /// unambiguous fleet-wide (no two tenants ever share an epoch).
+    pub fn next_epoch(&mut self) -> u64 {
+        self.epoch_counter += 1;
+        self.epoch_counter
+    }
+
+    /// Did a member dispatch fail since the last
+    /// [`ShardRouter::probe_members`]? The owner should probe (and heal
+    /// bounced members) at the next batch boundary.
+    pub fn has_suspects(&self) -> bool {
+        self.suspect
+    }
+
+    /// Is `member` currently quarantined (bounced or unreachable,
+    /// awaiting re-program + [`ShardRouter::rejoin_member`])?
+    pub fn is_quarantined(&self, member: usize) -> bool {
+        self.members[member].quarantined
     }
 
     // -- control plane -----------------------------------------------------
@@ -493,6 +695,110 @@ impl ShardRouter {
             }
         }
         Ok(rep)
+    }
+
+    /// Release a previously programmed span on `chip` of `member` —
+    /// the **free** step of the fence machine. Must only be called for
+    /// spans no in-flight request can still address (i.e. after
+    /// [`ShardRouter::fence_and_drain`]). Resyncs the client-side row
+    /// mirrors from the reply.
+    ///
+    /// # Errors
+    ///
+    /// The backend's [`super::Backend::release`] failure modes; a
+    /// backend without release support answers
+    /// [`TransportError::Remote`] and the rows simply stay retired.
+    pub fn release(
+        &mut self,
+        member: usize,
+        chip: usize,
+        span: crate::cim::mapping::RowSpan,
+    ) -> Result<ReleaseReply> {
+        let freed = span.slots.len();
+        let rep = match self.call(
+            member,
+            MemberJob::Release(ReleaseRequest { chip: chip as u32, span }),
+        )? {
+            MemberReply::Release(r) => r?,
+            _ => unreachable!("release answers release"),
+        };
+        let mm = &mut self.members[member];
+        mm.rows_free[chip] = rep.rows_free as usize;
+        mm.rows_used[chip] = mm.rows_used[chip].saturating_sub(freed);
+        Ok(rep)
+    }
+
+    /// Probe every member's health: reachability, reconnect count, and
+    /// pool incarnation. Bounced and unreachable members are
+    /// quarantined (skipped by the dispatch rotation) until
+    /// re-programmed and [rejoined](ShardRouter::rejoin_member); a
+    /// bounced member's row/wear mirrors are resynced from its fresh
+    /// pool. Clears the suspect flag and refreshes
+    /// [`RouterStats::reconnects`].
+    pub fn probe_members(&mut self) -> Vec<MemberProbe> {
+        self.suspect = false;
+        let mut out = Vec::with_capacity(self.members.len());
+        for m in 0..self.members.len() {
+            let state = match self.call(m, MemberJob::Health) {
+                Ok(MemberReply::Health(Ok(h))) => {
+                    self.members[m].reconnects = h.reconnects;
+                    if h.bounced {
+                        // fresh pool: the old mirrors describe arrays
+                        // that no longer exist
+                        let compatible = h.info.data_cols == self.members[m].info.data_cols
+                            && h.info.chips > 0;
+                        self.members[m].quarantined = true;
+                        if !compatible {
+                            // a replacement pool with different geometry
+                            // can never serve this fleet's packings
+                            MemberState::Unreachable
+                        } else {
+                            self.members[m].info = h.info;
+                            let chips = self.members[m].info.chips as usize;
+                            // consumption restarts with the fresh pool:
+                            // the dead pool's rows are gone, not in use
+                            self.members[m].rows_used = vec![0; chips];
+                            match self.wear_member(m) {
+                                Ok(_) => MemberState::Bounced,
+                                Err(_) => MemberState::Unreachable,
+                            }
+                        }
+                    } else {
+                        // a member is only ever quarantined by a bounce
+                        // or unreachability, both of which its backend
+                        // still reports until rejoined — so a healthy
+                        // verdict here means any stale quarantine from
+                        // a transient outage can be lifted
+                        self.members[m].quarantined = false;
+                        MemberState::Healthy
+                    }
+                }
+                Ok(MemberReply::Health(Err(_))) | Err(_) => {
+                    self.members[m].quarantined = true;
+                    MemberState::Unreachable
+                }
+                Ok(_) => unreachable!("health answers health"),
+            };
+            out.push(MemberProbe { member: m, state, reconnects: self.members[m].reconnects });
+        }
+        self.stats.reconnects = self.members.iter().map(|m| m.reconnects).sum();
+        out
+    }
+
+    /// Lift a member's quarantine after its shards were re-programmed
+    /// at the current epoch — the member returns to its replica group's
+    /// dispatch rotation (and to hedging duty).
+    ///
+    /// # Errors
+    ///
+    /// The backend's [`super::Backend::rejoin`] failure modes.
+    pub fn rejoin_member(&mut self, member: usize) -> Result<()> {
+        match self.call(member, MemberJob::Rejoin)? {
+            MemberReply::Rejoin(r) => r?,
+            _ => unreachable!("rejoin answers rejoin"),
+        }
+        self.members[member].quarantined = false;
+        Ok(())
     }
 
     fn wear_member(&mut self, member: usize) -> Result<WearReply> {
@@ -653,6 +959,18 @@ impl ShardRouter {
         Ok(RouterPlacement { layers, stuck_retries })
     }
 
+    /// One shard payload onto one member, chip chosen by the placement
+    /// policy — how cross-group migration and post-bounce re-programming
+    /// store copies (the engine's heal path calls this directly).
+    pub(crate) fn place_shard(
+        &mut self,
+        member: usize,
+        payload: &OwnedPayload,
+    ) -> Result<PlaceOutcome> {
+        let need = payload.cells().div_ceil(self.members[member].info.data_cols as usize);
+        self.place_filter(member, need, payload)
+    }
+
     /// One filter onto one member: chips in least-estimated-wear order
     /// (ties toward more free rows), retrying past stuck tiles.
     fn place_filter(
@@ -704,9 +1022,17 @@ impl ShardRouter {
 
     /// Dispatch one layer's windows to the owning group and return the
     /// `(filter, dots)` pairs of the first matching reply. Spills off a
-    /// full member queue, hedges past the group's deadline, and
-    /// discards duplicate replies by `(request id, shard epoch)` — the
-    /// caller sees exactly one answer per call.
+    /// full member queue, hedges past the group's deadline, skips
+    /// quarantined members, and discards duplicate replies by
+    /// `(request id, shard epoch)` — the caller sees exactly one answer
+    /// per call.
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Remote`] when every member of the owning group
+    /// is quarantined, or when the last reachable member rejected the
+    /// request; [`TransportError::Closed`] when the router's workers
+    /// are gone.
     pub fn dispatch_layer(
         &mut self,
         route: &TenantRoute,
@@ -716,13 +1042,25 @@ impl ShardRouter {
         let lr = &route.layers[layer];
         let g = lr.group;
         let members = self.groups[g].members.clone();
-        let n = members.len();
-        debug_assert_eq!(lr.shards.len(), n, "route member count vs group");
+        debug_assert_eq!(lr.shards.len(), members.len(), "route member count vs group");
+        // rotation order over the members currently allowed to serve
+        let live: Vec<usize> = (0..members.len())
+            .filter(|&l| !self.members[members[l]].quarantined)
+            .collect();
+        let n = live.len();
+        if n == 0 {
+            return Err(TransportError::Remote(format!(
+                "every member of group {g} is quarantined awaiting re-program"
+            )));
+        }
         self.stats.dispatches += 1;
         let req_id = self.next_request;
         self.next_request += 1;
         let start = self.groups[g].rr % n;
         self.groups[g].rr = self.groups[g].rr.wrapping_add(1);
+        // positions rotate through `order`; each entry is a member-local
+        // index of the owning group
+        let order: Vec<usize> = (0..n).map(|k| live[(start + k) % n]).collect();
         let request = |local: usize| DispatchRequest {
             request_id: req_id,
             shard_epoch: route.epoch,
@@ -733,22 +1071,23 @@ impl ShardRouter {
         // pick the primary round-robin; a full queue spills to the next
         // replica, and only if every queue is full do we block (compute
         // is never shed here — shedding belongs to the admission plane)
-        let mut primary_local = None;
-        for k in 0..n {
-            let local = (start + k) % n;
+        let mut primary_pos = None;
+        for (k, &local) in order.iter().enumerate() {
             if self.try_send(members[local], MemberJob::Dispatch(request(local)))? {
                 if k > 0 {
                     self.stats.spills += 1;
                 }
-                primary_local = Some(local);
+                self.outstanding += 1;
+                primary_pos = Some(k);
                 break;
             }
         }
-        let primary_local = match primary_local {
-            Some(local) => local,
+        let primary_pos = match primary_pos {
+            Some(pos) => pos,
             None => {
-                self.send_blocking(members[start], MemberJob::Dispatch(request(start)))?;
-                start
+                self.send_blocking(members[order[0]], MemberJob::Dispatch(request(order[0])))?;
+                self.outstanding += 1;
+                0
             }
         };
         let t0 = Instant::now();
@@ -771,8 +1110,11 @@ impl ShardRouter {
             };
             match received {
                 Ok((m, MemberReply::Dispatch { request_id, result })) => {
+                    self.outstanding = self.outstanding.saturating_sub(1);
                     if request_id != req_id {
-                        self.stats.stale_discarded += 1; // a hedge that already lost
+                        // a hedge that already lost (or a pre-cutover
+                        // straggler) — count it in exactly one bucket
+                        self.note_unclaimed_dispatch(&result);
                         continue;
                     }
                     let failed = match result {
@@ -783,19 +1125,25 @@ impl ShardRouter {
                             }
                             return Ok(rep.dots);
                         }
-                        Ok(_) => {
-                            self.stats.stale_discarded += 1;
+                        Ok(rep) => {
+                            self.note_unclaimed_dispatch(&Ok(rep));
                             TransportError::Remote("reply carries a stale shard epoch".into())
                         }
-                        Err(e) => e,
+                        Err(e) => {
+                            // a member failed a live dispatch: have the
+                            // owner probe the fleet at the next boundary
+                            self.suspect = true;
+                            e
+                        }
                     };
                     in_flight -= 1;
                     if in_flight == 0 {
                         if n > 1 && hedge_member.is_none() {
                             // the only attempt died: fail over to the
                             // replica instead of surfacing the error
-                            let alt = (primary_local + 1) % n;
+                            let alt = order[(primary_pos + 1) % n];
                             self.send_blocking(members[alt], MemberJob::Dispatch(request(alt)))?;
+                            self.outstanding += 1;
                             self.stats.hedges_fired += 1;
                             hedge_member = Some(members[alt]);
                             in_flight = 1;
@@ -808,8 +1156,9 @@ impl ShardRouter {
                     unreachable!("control replies cannot be in flight during a dispatch")
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    let alt = (primary_local + 1) % n;
+                    let alt = order[(primary_pos + 1) % n];
                     if self.try_send(members[alt], MemberJob::Dispatch(request(alt)))? {
+                        self.outstanding += 1;
                         self.stats.hedges_fired += 1;
                         hedge_member = Some(members[alt]);
                         in_flight += 1;
@@ -819,6 +1168,151 @@ impl ShardRouter {
                     }
                 }
                 Err(RecvTimeoutError::Disconnected) => return Err(TransportError::Closed),
+            }
+        }
+    }
+
+    // -- migration (the fence machine; see the module docs) ----------------
+
+    /// **Fence + drain**: retire `old_epoch` and block until every
+    /// in-flight dispatch has been answered. Afterwards no request that
+    /// was built against the pre-cutover placement exists anywhere in
+    /// the fleet, so its rows may be freed. Each drained reply is
+    /// discarded by identity and counted exactly once
+    /// ([`RouterStats::epoch_discards`] when its epoch is fenced,
+    /// [`RouterStats::stale_discarded`] otherwise).
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Closed`] when the router's workers are gone
+    /// (an in-flight reply can then never arrive).
+    pub fn fence_and_drain(&mut self, old_epoch: u64) -> Result<()> {
+        self.fenced.insert(old_epoch);
+        self.drain_inflight()
+    }
+
+    /// Wait for every outstanding dispatch reply and discard it. Member
+    /// workers are strictly serial, so every sent job is answered and
+    /// this terminates.
+    fn drain_inflight(&mut self) -> Result<()> {
+        while self.outstanding > 0 {
+            let (_, reply) = self.res_rx.recv().map_err(|_| TransportError::Closed)?;
+            match reply {
+                MemberReply::Dispatch { result, .. } => {
+                    self.outstanding -= 1;
+                    self.note_unclaimed_dispatch(&result);
+                }
+                _ => unreachable!("no control call is in flight during a drain"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Migrate one whole layer **between groups**: program byte-identical
+    /// copies of every live shard payload onto every member of
+    /// `to_group`, fence `old_epoch`, drain the fleet, then free the
+    /// source spans. The caller (the engine coordinator) must be the
+    /// only dispatcher — the drain guarantee assumes no new dispatches
+    /// are issued mid-migration — and applies the returned shard table
+    /// and epoch to its placement/route before dispatching again.
+    ///
+    /// `old_shards[member_local][filter]` are the source copies on
+    /// `from_group` (released in the free step); `payloads[filter]` is
+    /// `None` for pruned filters and must match the source's liveness.
+    ///
+    /// On any programming failure the migration aborts: partial
+    /// destination spans are released again, nothing is fenced, and the
+    /// source placement remains authoritative —
+    /// [`MigrationOutcome::Aborted`] tells the caller to keep serving
+    /// from where it was (bit-exactness is never at risk, because the
+    /// cutover happens only after every copy verified clean).
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Closed`] when the router's workers are gone.
+    /// Transport failures against individual members abort the
+    /// migration instead of erroring (the fleet may heal later).
+    pub fn migrate_layer(
+        &mut self,
+        old_epoch: u64,
+        from_group: usize,
+        old_shards: &[Vec<Option<ShardRef>>],
+        to_group: usize,
+        payloads: &[Option<OwnedPayload>],
+    ) -> Result<MigrationOutcome> {
+        assert_ne!(from_group, to_group, "cross-group migration needs distinct groups");
+        debug_assert_eq!(
+            old_shards.len(),
+            self.groups[from_group].members.len(),
+            "old shard table shape vs source group"
+        );
+        self.stats.migrations_started += 1;
+        let dst_members = self.groups[to_group].members.clone();
+        let mut stuck_retries = 0usize;
+        // -- program: every destination member gets every live payload
+        let mut new_shards: Vec<Vec<Option<ShardRef>>> = Vec::with_capacity(dst_members.len());
+        for &m in &dst_members {
+            let mut member_shards: Vec<Option<ShardRef>> = Vec::with_capacity(payloads.len());
+            let mut failed = false;
+            for (f, payload) in payloads.iter().enumerate() {
+                let Some(payload) = payload else {
+                    member_shards.push(None);
+                    continue;
+                };
+                match self.place_shard(m, payload) {
+                    Ok(PlaceOutcome::Placed { chip, span, retries }) => {
+                        stuck_retries += retries;
+                        member_shards.push(Some(ShardRef {
+                            chip: chip as u32,
+                            filter: f as u32,
+                            span,
+                        }));
+                    }
+                    Ok(PlaceOutcome::NoRoom { retries }) => {
+                        stuck_retries += retries;
+                        failed = true;
+                        break;
+                    }
+                    Err(TransportError::Closed) => return Err(TransportError::Closed),
+                    Err(_) => {
+                        // member unreachable mid-program: abort, heal later
+                        self.suspect = true;
+                        failed = true;
+                        break;
+                    }
+                }
+            }
+            new_shards.push(member_shards);
+            if failed {
+                self.rollback_partial(&dst_members, &new_shards);
+                self.stats.migrations_aborted += 1;
+                return Ok(MigrationOutcome::Aborted { stuck_retries });
+            }
+        }
+        // -- fence: the destination copies are now authoritative
+        let epoch = self.next_epoch();
+        self.stats.migrations_fenced += 1;
+        // -- drain: no pre-cutover request survives this call
+        self.fence_and_drain(old_epoch)?;
+        // -- free: the source rows can no longer be addressed by anyone
+        let src_members = self.groups[from_group].members.clone();
+        for (local, &m) in src_members.iter().enumerate() {
+            for shard in old_shards[local].iter().flatten() {
+                // best effort: a backend without release support (or an
+                // unreachable one) just retires these rows
+                let _ = self.release(m, shard.chip as usize, shard.span.clone());
+            }
+        }
+        self.stats.migrations_completed += 1;
+        Ok(MigrationOutcome::Completed { shards: new_shards, epoch, stuck_retries })
+    }
+
+    /// Undo the program phase of an aborted migration: release every
+    /// span already stored on the destination members.
+    fn rollback_partial(&mut self, dst_members: &[usize], partial: &[Vec<Option<ShardRef>>]) {
+        for (mi, shards) in partial.iter().enumerate() {
+            for shard in shards.iter().flatten() {
+                let _ = self.release(dst_members[mi], shard.chip as usize, shard.span.clone());
             }
         }
     }
@@ -844,24 +1338,35 @@ mod tests {
     use std::sync::atomic::{AtomicU64, Ordering};
 
     /// A scriptable backend: fixed dots, optional per-dispatch delay,
-    /// optional scripted failures — enough to pin down hedging,
-    /// failover, and duplicate-discard behavior without silicon.
+    /// optional scripted failures, a toy row allocator with release
+    /// accounting — enough to pin down hedging, failover,
+    /// duplicate-discard, and the migration fence machine without
+    /// silicon.
+    #[derive(Default)]
     struct MockBackend {
         delay: Duration,
         fail_dispatches: u64,
+        /// Scripted `span: None` program replies (capacity refusal).
+        fail_programs: u64,
+        /// Scripted `Err` program replies (the member dying mid-program
+        /// — the migration fence machine's transport-failure edge).
+        error_programs: u64,
         served: Arc<AtomicU64>,
+        /// Rows released onto this backend (the free/rollback steps).
+        released: Arc<AtomicU64>,
+        next_row: usize,
         dot: i64,
     }
 
     impl MockBackend {
         fn boxed(delay: Duration, fail_dispatches: u64, served: Arc<AtomicU64>, dot: i64) -> Box<dyn Backend> {
-            Box::new(MockBackend { delay, fail_dispatches, served, dot })
+            Box::new(MockBackend { delay, fail_dispatches, served, dot, ..MockBackend::default() })
         }
     }
 
     impl Backend for MockBackend {
         fn describe(&mut self) -> Result<BackendInfo> {
-            Ok(BackendInfo { chips: 1, data_cols: 30 })
+            Ok(BackendInfo { chips: 1, data_cols: 30, incarnation: 1 })
         }
 
         fn dispatch(&mut self, req: DispatchRequest) -> Result<DispatchReply> {
@@ -881,15 +1386,34 @@ mod tests {
             })
         }
 
-        fn program(&mut self, _req: ProgramRequest) -> Result<ProgramReply> {
+        fn program(&mut self, req: ProgramRequest) -> Result<ProgramReply> {
+            if self.error_programs > 0 {
+                self.error_programs -= 1;
+                return Err(TransportError::Remote("scripted program failure".into()));
+            }
+            if self.fail_programs > 0 {
+                self.fail_programs -= 1;
+                return Ok(ProgramReply { span: None, failures: 0 });
+            }
+            let per_row = 30usize;
+            let cells = req.payload.cells();
+            let need = cells.div_ceil(per_row);
+            let slots: Vec<(usize, usize)> =
+                (0..need).map(|i| (0, self.next_row + i)).collect();
+            self.next_row += need;
             Ok(ProgramReply {
                 span: Some(crate::cim::mapping::RowSpan {
-                    slots: vec![(0, 0)],
-                    tail_width: 1,
-                    len: 1,
+                    slots,
+                    tail_width: cells - (need - 1) * per_row,
+                    len: cells,
                 }),
                 failures: 0,
             })
+        }
+
+        fn release(&mut self, req: super::ReleaseRequest) -> Result<super::ReleaseReply> {
+            self.released.fetch_add(req.span.slots.len() as u64, Ordering::SeqCst);
+            Ok(super::ReleaseReply { rows_free: 64 })
         }
 
         fn wear(&mut self) -> Result<WearReply> {
@@ -1021,5 +1545,244 @@ mod tests {
     fn construction_rejects_empty_and_mismatched_fleets() {
         assert!(ShardRouter::new(vec![], RouterConfig::default()).is_err());
         assert!(ShardRouter::new(vec![vec![]], RouterConfig::default()).is_err());
+    }
+
+    #[test]
+    fn stale_epoch_reply_after_cutover_is_discarded_and_counted_once() {
+        // hedge on every dispatch: the loser's reply is still in flight
+        // when the cutover fences its epoch; the drain must discard it
+        // and bump epoch_discards exactly once (never stale_discarded)
+        let served = Arc::new(AtomicU64::new(0));
+        let cfg = RouterConfig {
+            hedge: HedgeConfig { after: Some(Duration::ZERO), ..HedgeConfig::default() },
+            ..RouterConfig::default()
+        };
+        let mut router = ShardRouter::replicated(
+            vec![
+                MockBackend::boxed(Duration::ZERO, 0, Arc::clone(&served), 9),
+                MockBackend::boxed(Duration::ZERO, 0, Arc::clone(&served), 9),
+            ],
+            cfg,
+        )
+        .unwrap();
+        let mut route = route_one_layer(2);
+        route.epoch = router.next_epoch();
+        let dots = router.dispatch_layer(&route, 0, empty_windows()).unwrap();
+        assert_eq!(dots, vec![(0, vec![9])]);
+        // exactly one attempt is still unanswered (the hedge loser)
+        router.fence_and_drain(route.epoch).unwrap();
+        let s = router.stats();
+        assert_eq!(s.epoch_discards, 1, "the fenced straggler is counted once");
+        assert_eq!(s.stale_discarded, 0, "…and never double-counted as a plain stale");
+        // nothing else is in flight: later control traffic sees nothing
+        let _ = router.wear_all().unwrap();
+        assert_eq!(router.stats().epoch_discards, 1);
+        assert_eq!(router.stats().stale_discarded, 0);
+        router.finish().unwrap();
+        assert_eq!(served.load(Ordering::SeqCst), 2, "both replicas computed the hedge");
+    }
+
+    #[test]
+    fn migrate_layer_programs_fences_drains_and_frees() {
+        let src_released = Arc::new(AtomicU64::new(0));
+        let dst_released = Arc::new(AtomicU64::new(0));
+        let src = Box::new(MockBackend {
+            released: Arc::clone(&src_released),
+            ..MockBackend::default()
+        });
+        let dst = Box::new(MockBackend {
+            released: Arc::clone(&dst_released),
+            ..MockBackend::default()
+        });
+        let mut router =
+            ShardRouter::new(vec![vec![src], vec![dst]], RouterConfig::default()).unwrap();
+        let old_epoch = router.next_epoch();
+        let old_shards = vec![vec![
+            Some(ShardRef {
+                chip: 0,
+                filter: 0,
+                span: crate::cim::mapping::RowSpan {
+                    slots: vec![(0, 0), (0, 1)],
+                    tail_width: 5,
+                    len: 35,
+                },
+            }),
+            None, // a pruned filter stays pruned through the move
+        ]];
+        let payloads = vec![Some(OwnedPayload::Binary(vec![true; 35])), None];
+        match router.migrate_layer(old_epoch, 0, &old_shards, 1, &payloads).unwrap() {
+            MigrationOutcome::Completed { shards, epoch, stuck_retries } => {
+                assert!(epoch > old_epoch, "the cutover must advance the epoch");
+                assert_eq!(stuck_retries, 0);
+                assert_eq!(shards.len(), 1, "one destination member");
+                let new = shards[0][0].as_ref().expect("live filter placed");
+                assert_eq!(new.span.len, 35, "byte-identical payload, same cell count");
+                assert!(shards[0][1].is_none(), "pruned filter still pruned");
+            }
+            MigrationOutcome::Aborted { .. } => panic!("ideal fleet must complete"),
+        }
+        let s = router.stats();
+        assert_eq!(s.migrations_started, 1);
+        assert_eq!(s.migrations_fenced, 1);
+        assert_eq!(s.migrations_completed, 1);
+        assert_eq!(s.migrations_aborted, 0);
+        assert_eq!(src_released.load(Ordering::SeqCst), 2, "both source rows freed");
+        assert_eq!(dst_released.load(Ordering::SeqCst), 0, "nothing rolled back");
+        router.finish().unwrap();
+    }
+
+    #[test]
+    fn aborted_migration_releases_partials_and_never_fences() {
+        // destination is a replica pair; the second member refuses the
+        // program (capacity), so the whole migration must unwind
+        let a_released = Arc::new(AtomicU64::new(0));
+        let b_released = Arc::new(AtomicU64::new(0));
+        let src = Box::new(MockBackend::default());
+        let dst_a = Box::new(MockBackend {
+            released: Arc::clone(&a_released),
+            ..MockBackend::default()
+        });
+        let dst_b = Box::new(MockBackend {
+            fail_programs: 64, // every candidate chip refuses
+            released: Arc::clone(&b_released),
+            ..MockBackend::default()
+        });
+        let mut router =
+            ShardRouter::new(vec![vec![src], vec![dst_a, dst_b]], RouterConfig::default())
+                .unwrap();
+        let old_epoch = router.next_epoch();
+        let span = crate::cim::mapping::RowSpan { slots: vec![(0, 0)], tail_width: 7, len: 7 };
+        let old_shards = vec![vec![Some(ShardRef { chip: 0, filter: 0, span: span.clone() })]];
+        let payloads = vec![Some(OwnedPayload::Binary(vec![true; 7]))];
+        match router.migrate_layer(old_epoch, 0, &old_shards, 1, &payloads).unwrap() {
+            MigrationOutcome::Aborted { .. } => {}
+            MigrationOutcome::Completed { .. } => {
+                panic!("a destination refusal must abort the migration")
+            }
+        }
+        let s = router.stats();
+        assert_eq!(s.migrations_started, 1);
+        assert_eq!(s.migrations_aborted, 1);
+        assert_eq!(s.migrations_fenced, 0, "an aborted migration never reaches the fence");
+        assert_eq!(s.migrations_completed, 0);
+        assert_eq!(a_released.load(Ordering::SeqCst), 1, "partial copy on A rolled back");
+        assert_eq!(b_released.load(Ordering::SeqCst), 0);
+        // the epoch counter never advanced past the caller's epoch
+        assert_eq!(router.next_epoch(), old_epoch + 1);
+        router.finish().unwrap();
+    }
+
+    #[test]
+    fn member_dying_mid_program_aborts_and_flags_the_fleet_suspect() {
+        // the transport-failure edge of the program state: member A of
+        // the destination pair takes its copies, then member B errors
+        // (unreachable) — the migration must unwind A's spans, never
+        // fence, and leave the source authoritative + the fleet suspect
+        let a_released = Arc::new(AtomicU64::new(0));
+        let src = Box::new(MockBackend::default());
+        let dst_a = Box::new(MockBackend {
+            released: Arc::clone(&a_released),
+            ..MockBackend::default()
+        });
+        let dst_b = Box::new(MockBackend { error_programs: 8, ..MockBackend::default() });
+        let mut router =
+            ShardRouter::new(vec![vec![src], vec![dst_a, dst_b]], RouterConfig::default())
+                .unwrap();
+        let old_epoch = router.next_epoch();
+        let span = crate::cim::mapping::RowSpan { slots: vec![(0, 0)], tail_width: 3, len: 3 };
+        let old_shards = vec![vec![Some(ShardRef { chip: 0, filter: 0, span })]];
+        let payloads = vec![Some(OwnedPayload::Binary(vec![true; 3]))];
+        assert!(!router.has_suspects());
+        match router.migrate_layer(old_epoch, 0, &old_shards, 1, &payloads).unwrap() {
+            MigrationOutcome::Aborted { .. } => {}
+            MigrationOutcome::Completed { .. } => {
+                panic!("a dying destination member must abort the migration")
+            }
+        }
+        let s = router.stats();
+        assert_eq!((s.migrations_started, s.migrations_aborted), (1, 1));
+        assert_eq!(s.migrations_fenced, 0, "the fence is never crossed");
+        assert_eq!(s.migrations_completed, 0);
+        assert_eq!(a_released.load(Ordering::SeqCst), 1, "A's partial copy rolled back");
+        assert!(router.has_suspects(), "a program failure must schedule a health probe");
+        router.finish().unwrap();
+    }
+
+    #[test]
+    fn quarantined_members_are_skipped_until_rejoined() {
+        struct BouncedBackend {
+            served: Arc<AtomicU64>,
+        }
+        impl Backend for BouncedBackend {
+            fn describe(&mut self) -> Result<BackendInfo> {
+                Ok(BackendInfo { chips: 1, data_cols: 30, incarnation: 2 })
+            }
+            fn dispatch(&mut self, req: DispatchRequest) -> Result<DispatchReply> {
+                self.served.fetch_add(1, Ordering::SeqCst);
+                Ok(DispatchReply {
+                    request_id: req.request_id,
+                    shard_epoch: req.shard_epoch,
+                    layer: req.layer,
+                    dots: req.shards.iter().map(|s| (s.filter, vec![5])).collect(),
+                })
+            }
+            fn program(&mut self, _req: ProgramRequest) -> Result<ProgramReply> {
+                Ok(ProgramReply {
+                    span: Some(crate::cim::mapping::RowSpan {
+                        slots: vec![(0, 0)],
+                        tail_width: 1,
+                        len: 1,
+                    }),
+                    failures: 0,
+                })
+            }
+            fn wear(&mut self) -> Result<WearReply> {
+                Ok(WearReply { wear: vec![WearLedger::default()], rows_free: vec![64] })
+            }
+            fn health(&mut self) -> Result<HealthReply> {
+                Ok(HealthReply { info: self.describe()?, reconnects: 3, bounced: true })
+            }
+            fn reset_energy(&mut self) -> Result<()> {
+                Ok(())
+            }
+            fn finish(&mut self) -> Result<FinishReply> {
+                Ok(FinishReply { energy_pj: 0.0, wear: vec![WearLedger::default()] })
+            }
+        }
+        let bounced_served = Arc::new(AtomicU64::new(0));
+        let healthy_served = Arc::new(AtomicU64::new(0));
+        let cfg = RouterConfig {
+            hedge: HedgeConfig { after: Some(Duration::from_secs(5)), ..HedgeConfig::default() },
+            ..RouterConfig::default()
+        };
+        let mut router = ShardRouter::replicated(
+            vec![
+                Box::new(BouncedBackend { served: Arc::clone(&bounced_served) }),
+                MockBackend::boxed(Duration::ZERO, 0, Arc::clone(&healthy_served), 5),
+            ],
+            cfg,
+        )
+        .unwrap();
+        let probes = router.probe_members();
+        assert_eq!(probes[0].state, MemberState::Bounced);
+        assert_eq!(probes[0].reconnects, 3);
+        assert_eq!(probes[1].state, MemberState::Healthy);
+        assert!(router.is_quarantined(0));
+        assert_eq!(router.stats().reconnects, 3);
+        // every dispatch lands on the healthy replica while member 0 is out
+        let route = route_one_layer(2);
+        for _ in 0..4 {
+            assert_eq!(router.dispatch_layer(&route, 0, empty_windows()).unwrap().len(), 1);
+        }
+        assert_eq!(bounced_served.load(Ordering::SeqCst), 0, "quarantined member never serves");
+        assert_eq!(healthy_served.load(Ordering::SeqCst), 4);
+        // after (re-programming and) rejoining, the rotation includes it again
+        router.rejoin_member(0).unwrap();
+        assert!(!router.is_quarantined(0));
+        for _ in 0..4 {
+            assert_eq!(router.dispatch_layer(&route, 0, empty_windows()).unwrap().len(), 1);
+        }
+        assert!(bounced_served.load(Ordering::SeqCst) > 0, "rejoined member serves again");
+        router.finish().unwrap();
     }
 }

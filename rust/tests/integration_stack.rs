@@ -706,7 +706,7 @@ fn prop_mixed_tenancy_serving_is_bit_exact() {
             let pn_model: ModelBundle = tiny_pointnet([2, 2, 3, 2, 2, 3, 2, 4], prune, seed ^ 1).into();
             let mut cfg = engine_cfg(chips, seed ^ 2, 4);
             cfg.pool.chip.device.stuck_fault_prob = fault;
-            cfg.rebalance = RebalanceConfig { every_batches: 3, max_moves: 1 };
+            cfg.rebalance = RebalanceConfig { every_batches: 3, max_moves: 1, group_moves: 0 };
             let tenants = vec![
                 TenantConfig::new("mnist", mnist_model.clone()),
                 TenantConfig::new("pointnet", pn_model.clone()),

@@ -2,20 +2,27 @@
 //! property harness run over every backend combination — in-process
 //! [`LocalBackend`], [`RemoteBackend`] against a [`Host`] daemon on
 //! loopback, and a hedged 2-replica [`ShardRouter`] of two hosts — with
-//! stuck-tile fault injection and a live wear rebalance on a remote
-//! host mid-test. Plus protocol robustness: a garbage frame must get an
-//! error reply, never kill the host.
+//! stuck-tile fault injection, a live wear rebalance on a remote host,
+//! an epoch-fenced **cross-host layer migration**, and a **host
+//! bounce** (crash + replacement at the same address) healed by
+//! reconnect + re-program + rejoin, all mid-test. Plus protocol
+//! robustness: a garbage frame must get an error reply, never kill the
+//! host, and a dropped connection must never lose the pool.
 //!
 //! CI runs this file as its own job (`cargo test --test
-//! transport_remote`) under a 60-second timeout.
+//! transport_remote`) under a timeout.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use rram_cim::chip::ChipConfig;
+use rram_cim::cim::mapping::segment_widths;
+use rram_cim::cim::vmm;
 use rram_cim::nn::data::{mnist, modelnet};
 use rram_cim::nn::pointnet::GroupingConfig;
 use rram_cim::serve::transport::{
-    frame, Backend, Host, HostConfig, LocalBackend, RemoteBackend, ShardRouter,
+    frame, Backend, Host, HostConfig, LocalBackend, OwnedPayload, ProgramRequest, ReconnectPolicy,
+    RemoteBackend, ShardRef, ShardRouter, TenantRoute, WireWindows,
 };
 use rram_cim::serve::{
     AdmissionConfig, CacheConfig, Engine, EngineConfig, HedgeConfig, ModelBundle, PointNetBundle,
@@ -59,7 +66,7 @@ fn engine_cfg() -> EngineConfig {
             quantum: 4,
         },
         cache: CacheConfig::default(),
-        rebalance: RebalanceConfig { every_batches: 2, max_moves: 1 },
+        rebalance: RebalanceConfig { every_batches: 2, max_moves: 1, group_moves: 0 },
     }
 }
 
@@ -288,6 +295,276 @@ fn layers_shard_across_two_hosts_bit_exactly() {
     for host in hosts {
         host.join();
     }
+}
+
+/// The pool outlives a dropped connection: shards programmed over one
+/// session are served (bit-exactly) over the next, and the incarnation
+/// is stable — the reconnect story's foundation.
+#[test]
+fn host_pool_survives_a_dropped_connection() {
+    let host = Host::spawn(HostConfig { pool: pool_cfg(0x5e55, 0.0) }).unwrap();
+    let bits: Vec<bool> = (0..17).map(|i| i % 3 == 0).collect();
+    let (incarnation, span) = {
+        let mut first = RemoteBackend::connect(host.addr()).unwrap();
+        let info = first.describe().unwrap();
+        let rep = first
+            .program(ProgramRequest { chip: 0, payload: OwnedPayload::Binary(bits.clone()) })
+            .unwrap();
+        assert_eq!(rep.failures, 0);
+        (info.incarnation, rep.span.unwrap())
+        // `first` drops here: the session ends WITHOUT Finish
+    };
+    // a second session reaches the same pool, same incarnation, and the
+    // shard programmed by the first session still computes exact dots
+    let mut second = RemoteBackend::connect(host.addr()).unwrap();
+    let info = second.describe().unwrap();
+    assert_eq!(info.incarnation, incarnation, "same pool across sessions");
+    let widths = segment_widths(bits.len(), info.data_cols as usize);
+    let flat: Vec<u8> = (0..2 * bits.len()).map(|i| (i * 13 % 256) as u8).collect();
+    let pw = Arc::new(vmm::pack_windows(&flat, &widths));
+    let reply = second
+        .dispatch(rram_cim::serve::transport::DispatchRequest {
+            request_id: 1,
+            shard_epoch: 1,
+            layer: 0,
+            shards: Arc::new(vec![ShardRef { chip: 0, filter: 0, span }]),
+            windows: WireWindows::Binary(pw),
+        })
+        .unwrap();
+    let want: Vec<i64> =
+        flat.chunks(bits.len()).map(|w| vmm::binary_dot_ref(&bits, w)).collect();
+    assert_eq!(reply.dots, vec![(0, want)], "cross-session dots diverged");
+    assert_eq!(second.reconnects(), 0, "nothing dropped mid-call here");
+    second.finish().unwrap();
+    host.join();
+}
+
+/// Epoch fencing over real TCP: a hedge loser still in flight when the
+/// cutover fences its epoch is discarded by the drain and counted in
+/// `epoch_discards` exactly once — never double-counted, never folded.
+#[test]
+fn fenced_stale_reply_over_tcp_is_counted_exactly_once() {
+    use rram_cim::serve::transport::LayerRoute;
+
+    let mut hosts = Vec::new();
+    let mut backends: Vec<Box<dyn Backend>> = Vec::new();
+    for s in 0..2u64 {
+        let host = Host::spawn(HostConfig { pool: pool_cfg(0xfe7ce ^ s, 0.0) }).unwrap();
+        backends.push(Box::new(RemoteBackend::connect(host.addr()).unwrap()));
+        hosts.push(host);
+    }
+    let cfg = RouterConfig {
+        hedge: HedgeConfig { after: Some(Duration::ZERO), ..HedgeConfig::default() },
+        ..RouterConfig::default()
+    };
+    let mut router = ShardRouter::replicated(backends, cfg).unwrap();
+    // one shard programmed onto each replica (its own span)
+    let bits: Vec<bool> = (0..9).map(|i| i % 2 == 0).collect();
+    let mut shards = Vec::new();
+    for m in 0..2 {
+        let rep = router.program(m, 0, OwnedPayload::Binary(bits.clone())).unwrap();
+        assert_eq!(rep.failures, 0);
+        shards.push(Arc::new(vec![ShardRef { chip: 0, filter: 0, span: rep.span.unwrap() }]));
+    }
+    let epoch = router.next_epoch();
+    let route = TenantRoute { epoch, layers: vec![LayerRoute { group: 0, shards }] };
+    let widths = segment_widths(bits.len(), router.data_cols());
+    let flat: Vec<u8> = (0..bits.len()).map(|i| (i * 7 % 256) as u8).collect();
+    let pw = Arc::new(vmm::pack_windows(&flat, &widths));
+    let dots = router.dispatch_layer(&route, 0, WireWindows::Binary(pw)).unwrap();
+    assert_eq!(dots, vec![(0, vec![vmm::binary_dot_ref(&bits, &flat)])]);
+    // hedge fired on every dispatch (after == 0): exactly one loser is
+    // still in flight; fence its epoch and drain it
+    assert_eq!(router.stats().hedges_fired, 1);
+    router.fence_and_drain(epoch).unwrap();
+    let s = router.stats();
+    assert_eq!(s.epoch_discards, 1, "the fenced loser is counted exactly once");
+    assert_eq!(s.stale_discarded, 0, "…and never also as a plain stale");
+    router.finish().unwrap();
+    for host in hosts {
+        host.join();
+    }
+}
+
+/// The reconnect lifecycle end to end: layers split across two hosts,
+/// a completed cross-host layer migration, then host B crashes and a
+/// replacement takes over its address. B's backend reconnects, reports
+/// the bounce, and the engine re-programs it with the **current**
+/// (post-migration) placement at the **current** epoch before it serves
+/// a single dispatch — so every answer stays bit-exact and the missed
+/// migration can never resurface pre-cutover shard addresses.
+#[test]
+fn reconnecting_host_that_missed_a_migration_is_reprogrammed_before_serving() {
+    let model = ModelBundle::synthetic_mnist([3, 4, 3], 0.0, 0x9ec0);
+    let mut hosts = Vec::new();
+    let mut groups: Vec<Vec<Box<dyn Backend>>> = Vec::new();
+    for s in 0..2u64 {
+        let host = Host::spawn(HostConfig { pool: pool_cfg(0x9ec0 ^ s, 0.0) }).unwrap();
+        let backend = RemoteBackend::connect_with(
+            host.addr(),
+            ReconnectPolicy { max_attempts: 8, ..ReconnectPolicy::default() },
+        )
+        .unwrap();
+        groups.push(vec![Box::new(backend)]);
+        hosts.push(host);
+    }
+    let router = ShardRouter::new(groups, RouterConfig::default()).unwrap();
+    let mut cfg = engine_cfg();
+    cfg.cache = CacheConfig { capacity: 0 }; // every request hits silicon
+    cfg.rebalance = RebalanceConfig { every_batches: 0, max_moves: 0, group_moves: 1 };
+    let engine = Engine::start_with_router(
+        vec![TenantConfig::new("mnist", model.clone())],
+        router,
+        &cfg,
+    )
+    .unwrap();
+    let ds = mnist::generate(5, 0x9ec1);
+    let check = |i: usize, resp: rram_cim::serve::Response| {
+        assert_eq!(
+            resp.logits,
+            model.reference_logits(ds.sample(i)),
+            "image {i} diverged"
+        );
+    };
+    // phase 1: traffic, then a forced cross-host layer migration
+    for i in 0..2 {
+        check(i, engine.submit(0, ds.sample(i).to_vec()).recv().unwrap());
+    }
+    engine.force_rebalance();
+    for i in 0..3 {
+        check(i, engine.submit(0, ds.sample(i).to_vec()).recv().unwrap());
+    }
+    // phase 2: host B crashes; a replacement binds the same address
+    // with a fresh (empty) pool and a fresh incarnation
+    let b = hosts.pop().unwrap();
+    let b_addr = b.addr();
+    b.shutdown();
+    hosts.push(Host::spawn_at(b_addr, HostConfig { pool: pool_cfg(0x9ec2, 0.0) }).unwrap());
+    // phase 3: traffic again — B's first touched dispatch fails fast
+    // (client-side bounce quarantine), the engine heals (probe,
+    // re-program to the post-migration placement, rejoin), and every
+    // answer is still bit-exact
+    for i in 0..5 {
+        check(i, engine.submit(0, ds.sample(i).to_vec()).recv().unwrap());
+    }
+    let report = engine.shutdown();
+    assert_eq!(report.answered(), 10);
+    assert_eq!(report.dropped(), 0);
+    let t = &report.transport;
+    assert!(t.migrations_started >= 1, "the forced pass must attempt a migration");
+    assert!(t.migrations_completed >= 1, "an ideal fleet must complete it");
+    assert!(t.reconnects >= 1, "host B must have been reconnected to");
+    for host in hosts {
+        host.join();
+    }
+}
+
+/// Property (the PR's acceptance bar): logits stay bit-exact through a
+/// host bounce and a cross-host layer migration landing at the **same
+/// pass boundary**, with stuck-tile fault injection on every pool. The
+/// pass heals first (probe → re-program the bounced member at the
+/// current epoch → rejoin), then the forced migration walks
+/// program → fence → drain → free against the healed fleet; a
+/// destination dying mid-program instead takes the documented ABORT
+/// edge (unit-tested in `router.rs`). If faults make any of it
+/// impossible, the failure is a clean, explicit error, never a wrong
+/// logit.
+#[test]
+fn prop_migration_with_mid_flight_host_bounce_stays_bit_exact() {
+    forall(
+        "transport: host bounce + cross-host migration, bit for bit",
+        0xb0517,
+        2,
+        |rng| {
+            let fault = [0.0, 0.01][rng.below(2)];
+            (fault, rng.next_u64())
+        },
+        |&(fault, seed)| run_bounce_harness(fault, seed),
+    );
+}
+
+fn run_bounce_harness(fault: f64, seed: u64) -> Result<(), String> {
+    let model = ModelBundle::synthetic_mnist([3, 4, 3], 0.2, seed);
+    let mut hosts = Vec::new();
+    let mut groups: Vec<Vec<Box<dyn Backend>>> = Vec::new();
+    for s in 0..2u64 {
+        let host = Host::spawn(HostConfig { pool: pool_cfg(seed ^ s, fault) })
+            .map_err(|e| e.to_string())?;
+        let backend = RemoteBackend::connect_with(
+            host.addr(),
+            ReconnectPolicy { max_attempts: 8, ..ReconnectPolicy::default() },
+        )
+        .map_err(|e| e.to_string())?;
+        groups.push(vec![Box::new(backend) as Box<dyn Backend>]);
+        hosts.push(host);
+    }
+    let router = ShardRouter::new(groups, RouterConfig::default()).map_err(|e| e.to_string())?;
+    let mut cfg = engine_cfg();
+    cfg.cache = CacheConfig { capacity: 0 };
+    cfg.rebalance = RebalanceConfig { every_batches: 0, max_moves: 0, group_moves: 1 };
+    let engine = match Engine::start_with_router(
+        vec![TenantConfig::new("mnist", model.clone())],
+        router,
+        &cfg,
+    ) {
+        Ok(e) => e,
+        Err(e) => {
+            let msg = e.to_string();
+            drop(hosts);
+            return if msg.contains("placement") || msg.contains("rows") {
+                Ok(()) // capacity lost to faults: explicit verdict
+            } else {
+                Err(format!("unexpected start error: {msg}"))
+            };
+        }
+    };
+    let ds = mnist::generate(4, seed ^ 7);
+    let check = |i: usize, resp: rram_cim::serve::Response| -> Result<(), String> {
+        if resp.logits != model.reference_logits(ds.sample(i)) {
+            return Err(format!("image {i}: migration/bounce corrupted the logits"));
+        }
+        Ok(())
+    };
+    // warm-up (builds the heat signal)
+    for i in 0..2 {
+        check(i, engine.submit(0, ds.sample(i).to_vec()).recv().map_err(|e| e.to_string())?)?;
+    }
+    // crash host B and bring its replacement up at the same address,
+    // then force a pass: it heals the bounced member first (probe,
+    // re-program at the current epoch, rejoin) and then completes the
+    // cross-host migration against the healed fleet
+    let b = hosts.pop().ok_or("host list empty")?;
+    let b_addr = b.addr();
+    b.shutdown();
+    hosts.push(
+        Host::spawn_at(b_addr, HostConfig { pool: pool_cfg(seed ^ 11, fault) })
+            .map_err(|e| e.to_string())?,
+    );
+    engine.force_rebalance();
+    for i in 0..4 {
+        check(i, engine.submit(0, ds.sample(i).to_vec()).recv().map_err(|e| e.to_string())?)?;
+    }
+    let report = engine.shutdown();
+    if report.answered() != 6 {
+        return Err(format!("answered {} of 6", report.answered()));
+    }
+    if report.dropped() != 0 {
+        return Err("blocking submits must never drop".into());
+    }
+    if report.transport.reconnects == 0 {
+        return Err("the bounced host must have been reconnected to".into());
+    }
+    if fault == 0.0 && report.transport.migrations_completed == 0 {
+        return Err(
+            "on an ideal fleet the forced pass must complete a cross-host migration \
+             even with a bounced member in the fleet"
+                .into(),
+        );
+    }
+    for host in hosts {
+        host.join();
+    }
+    Ok(())
 }
 
 /// Protocol robustness: a garbage frame gets an error reply and the
