@@ -4,6 +4,11 @@
 //!
 //!   cargo run --release --example chip_characterization [--seed N]
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use rram_cim::bench::{print_series, print_table};
 use rram_cim::device::{characterize, DeviceConfig};
 use rram_cim::util::args::Args;

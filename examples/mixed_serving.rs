@@ -12,6 +12,11 @@
 //!
 //! Run with: `cargo run --release --example mixed_serving`
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use rram_cim::bench::print_table;
 use rram_cim::nn::data::{mnist, modelnet, Dataset};
 use rram_cim::nn::pointnet::GroupingConfig;
@@ -48,6 +53,7 @@ fn run_phase(
         // every 3 chip batches: diff wear snapshots, migrate up to 2 of
         // the hottest shards to the least-worn chip
         rebalance: RebalanceConfig { every_batches: 3, max_moves: 2, group_moves: 0 },
+        obs: true,
     };
     cfg.pool.chip.device.stuck_fault_prob = stuck_fault_prob;
     let engine = Engine::start(tenants, &cfg)?;

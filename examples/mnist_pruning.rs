@@ -15,6 +15,11 @@
 //!                         artifact and check parity vs the fast artifact
 //!   --tsne                compute before/after t-SNE separation scores
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use rram_cim::bench::{print_series, print_table};
 use rram_cim::metrics::energy_comparison;
 use rram_cim::nn::tsne::{separation_score, tsne, TsneConfig};

@@ -23,7 +23,12 @@
 //! * a **host bounce** — host B is killed mid-run and a replacement
 //!   (fresh pool, fresh incarnation) takes over its address; B's client
 //!   reconnects with bounded backoff, quarantines itself, and the
-//!   engine re-programs it at the current epoch before it serves again.
+//!   engine re-programs it at the current epoch before it serves again;
+//! * the **observability plane** riding all of it — the operator event
+//!   bus (`Engine::events`) is asserted to carry the exact transition
+//!   sequence the migration and the bounce must produce (gapless seq,
+//!   exactly-once per transition), and one hedged request's spans are
+//!   stitched across the hosts and printed as a tree (DESIGN.md §10).
 //!
 //! Every response is asserted against `ModelBundle::reference_logits`:
 //! zero wrong logits, by construction — the chips are digital, so a
@@ -31,17 +36,24 @@
 //!
 //! Run with: `cargo run --release --example multi_host`
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
+use std::sync::Arc;
 use std::time::Duration;
 
 use rram_cim::bench::print_table;
 use rram_cim::chip::ChipConfig;
 use rram_cim::nn::data::mnist;
+use rram_cim::serve::obs::Stage;
 use rram_cim::serve::transport::{
     Backend, Host, HostConfig, ReconnectPolicy, RemoteBackend, ShardRouter,
 };
 use rram_cim::serve::{
-    AdmissionConfig, CacheConfig, Engine, EngineConfig, HedgeConfig, ModelBundle, PoolConfig,
-    RebalanceConfig, RouterConfig, TenantConfig,
+    AdmissionConfig, CacheConfig, Engine, EngineConfig, HedgeConfig, ModelBundle, ObsEvent,
+    PoolConfig, RebalanceConfig, RouterConfig, TenantConfig,
 };
 
 fn main() -> anyhow::Result<()> {
@@ -60,11 +72,13 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- the fleet: one hedged group + one solo group ---
-    // an aggressive fixed hedge deadline so the demo visibly fires
-    // hedges; production leaves `after: None` and lets the latency
-    // histogram derive it (quantile(0.99) x factor)
+    // hedge EVERY dispatch to the replica pair (`after: ZERO`): the
+    // demo's point is the race itself, and a deterministic hedge means
+    // the stitched trace printed below always shows one. production
+    // leaves `after: None` and lets the latency histogram derive the
+    // deadline (quantile(0.99) x factor)
     let router_cfg = RouterConfig {
-        hedge: HedgeConfig { after: Some(Duration::from_micros(500)), ..HedgeConfig::default() },
+        hedge: HedgeConfig { after: Some(Duration::ZERO), ..HedgeConfig::default() },
         ..RouterConfig::default()
     };
     let connect = |addr| -> anyhow::Result<Box<dyn Backend>> {
@@ -93,9 +107,17 @@ fn main() -> anyhow::Result<()> {
         },
         cache: CacheConfig { capacity: 0 }, // every request hits silicon
         rebalance: RebalanceConfig { every_batches: 4, max_moves: 2, group_moves: 1 },
+        obs: true,
     };
     let engine =
         Engine::start_with_router(vec![TenantConfig::new("mnist", model.clone())], router, &cfg)?;
+
+    // the observability plane: a deep event subscriber (nothing may
+    // overflow — the assertions below need the complete transition
+    // log) plus the plane handle itself, which outlives the engine so
+    // the trace ring can be rendered after shutdown
+    let events = engine.events_with(4096);
+    let plane = Arc::clone(engine.obs());
 
     // --- traffic: distinct images, every answer checked bit-exactly ---
     let images = mnist::generate(24, 0x5eed);
@@ -212,12 +234,104 @@ fn main() -> anyhow::Result<()> {
         report.transport.migrations_completed >= 1,
         "the forced pass must complete a cross-host layer migration"
     );
+
+    // --- the operator event log: the fleet's story, as transitions ---
+    let log = events.drain();
+    println!(
+        "\noperator events ({} delivered, {} overflowed):",
+        log.len(),
+        events.overflowed()
+    );
+    for rec in &log {
+        println!("  [{:>3}] {:?}", rec.seq, rec.event);
+    }
+    for (i, rec) in log.iter().enumerate() {
+        assert_eq!(rec.seq, i as u64, "per-subscriber seq is gapless");
+    }
+    assert_eq!(events.overflowed(), 0, "a 4096-deep subscriber loses nothing here");
+    // the forced pass: planned → started → fenced → completed, in that
+    // order, exactly once, never aborted
+    let find = |from: usize, pred: &dyn Fn(&ObsEvent) -> bool| {
+        log[from..].iter().position(|r| pred(&r.event)).map(|i| from + i)
+    };
+    let planned = find(0, &|e| matches!(e, ObsEvent::RebalancePlanned { .. }))
+        .expect("the forced pass announces a plan");
+    let started = find(0, &|e| matches!(e, ObsEvent::MigrationStarted { .. }))
+        .expect("the forced pass starts a cross-host migration");
+    let layer = match &log[started].event {
+        ObsEvent::MigrationStarted { layer, .. } => *layer,
+        _ => unreachable!(),
+    };
+    let fenced = find(started, &|e| {
+        matches!(e, ObsEvent::MigrationFenced { layer: l, .. } if *l == layer)
+    })
+    .expect("the migration fences its epoch");
+    let completed = find(fenced, &|e| {
+        matches!(e, ObsEvent::MigrationCompleted { layer: l, .. } if *l == layer)
+    })
+    .expect("the migration commits");
+    assert!(
+        planned < started && started < fenced && fenced < completed,
+        "plan → start → fence → commit, in that order"
+    );
+    assert!(
+        !log[started..completed]
+            .iter()
+            .any(|r| matches!(&r.event, ObsEvent::MigrationAborted { layer: l } if *l == layer)),
+        "a committed migration never reports an abort"
+    );
+    assert!(
+        find(completed, &|e| matches!(e, ObsEvent::RebalanceApplied { .. })).is_some(),
+        "the pass reports what it applied"
+    );
+    // the bounce: the probe reports the reconnect, quarantines the
+    // fresh incarnation, and only after re-programming lets it rejoin
+    assert!(
+        find(0, &|e| matches!(e, ObsEvent::Reconnect { .. })).is_some(),
+        "the bounce's reconnect is reported"
+    );
+    let quarantined = find(0, &|e| matches!(e, ObsEvent::Quarantine { .. }))
+        .expect("the bounced member is quarantined");
+    let member = match &log[quarantined].event {
+        ObsEvent::Quarantine { member } => *member,
+        _ => unreachable!(),
+    };
+    find(quarantined + 1, &|e| matches!(e, ObsEvent::Rejoin { member: m } if *m == member))
+        .expect("quarantine strictly precedes the re-programmed member's rejoin");
+
+    // --- one hedged request, stitched across the hosts ---
+    let spans = plane.trace.spans();
+    let hedged = spans
+        .iter()
+        .rev()
+        .find(|s| s.stage == Stage::Hedge)
+        .map(|s| s.ctx.trace_id)
+        .expect("a zero hedge deadline guarantees hedged dispatches");
+    println!("\none hedged request, stitched across the hosts:");
+    print!("{}", plane.trace.render(hedged));
+    let trace: Vec<_> = spans.iter().filter(|s| s.ctx.trace_id == hedged).collect();
+    let mut ids: Vec<u64> = trace.iter().map(|s| s.ctx.span_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), trace.len(), "hedge duplicates share the trace, not the span id");
+    assert!(
+        trace.iter().any(|s| s.stage == Stage::Dispatch),
+        "the primary attempt is in the trace"
+    );
+    assert!(
+        trace.iter().any(|s| s.stage == Stage::Execute && s.note.contains("host_ns")),
+        "the execute span is stitched from the remote host's reply"
+    );
+    println!("\nmetrics snapshot (the scrape body benches persist as BENCH_serve.json):");
+    println!("{}", plane.snapshot().render());
+
     host_a1.join();
     host_a2.join();
     replacement.join();
     println!(
         "\nmulti-host serving OK: three hosts, a hedged pair, an epoch-fenced cross-host \
-         migration, one host bounce — zero wrong logits"
+         migration, one host bounce, an asserted operator-event log and a stitched \
+         hedged trace — zero wrong logits"
     );
     Ok(())
 }

@@ -6,6 +6,11 @@
 //!
 //! Run with: `cargo run --release --example pointnet_serving`
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use rram_cim::bench::print_table;
 use rram_cim::nn::data::modelnet;
 use rram_cim::nn::pointnet::GroupingConfig;

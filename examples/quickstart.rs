@@ -10,6 +10,11 @@
 //!
 //! Run with: `cargo run --release --example quickstart`
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use rram_cim::cim::mapping::RowAllocator;
 use rram_cim::cim::{similarity as chip_sim, vmm};
 use rram_cim::nn::quant;

@@ -4,6 +4,11 @@
 //!
 //! Run with: `cargo run --release --example serving`
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use rram_cim::bench::print_table;
 use rram_cim::nn::data::mnist;
 use rram_cim::serve::{BatcherConfig, ModelBundle, PoolConfig, Server, ServerConfig};

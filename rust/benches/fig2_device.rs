@@ -1,6 +1,11 @@
 //! Regenerates paper Fig. 2 (device characterization) and times the
 //! underlying device-model routines. Run: cargo bench --bench fig2_device
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use rram_cim::bench::{print_series, print_table, Bencher};
 use rram_cim::device::{characterize, DeviceConfig};
 use rram_cim::util::stats;

@@ -1,6 +1,11 @@
 //! Regenerates paper Fig. 3 (chip architecture + comparison) panels.
 //! Run: cargo bench --bench fig3_chip
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use rram_cim::baselines::{self, analog_cim, gpu, sram_cim, Workload};
 use rram_cim::bench::{print_table, Bencher};
 use rram_cim::chip::timing::waveform;

@@ -3,6 +3,11 @@
 //! HPN comparison, 4l MAC precision, 4m op + energy reduction.
 //! Run: cargo bench --bench fig4_mnist  (a few minutes)
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use rram_cim::bench::{print_series, print_table};
 use rram_cim::coordinator::mnist::{MnistConfig, MnistTrainer};
 use rram_cim::coordinator::TrainMode;

@@ -2,6 +2,11 @@
 //! 5g SUN/SPN/HPN accuracy, 5h INT8 MAC precision, 5i op/energy cuts.
 //! Run: cargo bench --bench fig5_pointnet
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use rram_cim::bench::{print_series, print_table};
 use rram_cim::coordinator::pointnet::{PointNetConfig, PointNetTrainer};
 use rram_cim::coordinator::TrainMode;

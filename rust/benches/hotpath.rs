@@ -2,6 +2,11 @@
 //! end-to-end wall-clock, each with throughput numbers.
 //! Run: cargo bench --bench hotpath
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use rram_cim::bench::Bencher;
 use rram_cim::chip::{Chip, ChipConfig, LogicOp, ReadPath};
 use rram_cim::cim::mapping::{store_bits, RowAllocator};

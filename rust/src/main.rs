@@ -9,6 +9,11 @@
 //!
 //! Run `rram-cim help` for options.
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use anyhow::{anyhow, Result};
 
 use rram_cim::baselines::{self, analog_cim, gpu, sram_cim, Workload};

@@ -31,6 +31,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::serve::batcher::Request;
+use crate::serve::obs::{Obs, ObsEvent};
 
 /// Admission/drain knobs.
 #[derive(Clone, Debug)]
@@ -68,6 +69,10 @@ struct Shared {
     /// Round-robin cursor: the tenant the next drain visit starts at.
     next_rr: usize,
     closed: bool,
+    /// The observability plane sheds are reported to (disabled until
+    /// [`Admission::attach_obs`]). Lives in the shared state so every
+    /// clone of the handle reports to the same bus.
+    obs: Arc<Obs>,
 }
 
 /// The admission plane handle. Cloneable: submitters and the draining
@@ -87,10 +92,20 @@ impl Admission {
             .iter()
             .map(|&depth| TenantQueue { q: VecDeque::new(), depth, deficit: 0, dropped: 0 })
             .collect();
-        Admission {
-            inner: Arc::new((Mutex::new(Shared { queues, next_rr: 0, closed: false }), Condvar::new())),
-            cfg,
-        }
+        let shared = Shared {
+            queues,
+            next_rr: 0,
+            closed: false,
+            obs: Arc::new(Obs::disabled()),
+        };
+        Admission { inner: Arc::new((Mutex::new(shared), Condvar::new())), cfg }
+    }
+
+    /// Attach the engine's observability plane: from here on every
+    /// counted shed also emits [`ObsEvent::DropShed`] — the event and
+    /// the `dropped` counter move in lockstep, exactly once per shed.
+    pub fn attach_obs(&self, obs: Arc<Obs>) {
+        self.inner.0.lock().unwrap().obs = obs;
     }
 
     /// Blocking submit: waits while the tenant's queue is full (lossless
@@ -121,6 +136,7 @@ impl Admission {
         }
         if s.queues[tenant].q.len() >= s.queues[tenant].depth {
             s.queues[tenant].dropped += 1;
+            s.obs.bus.emit(ObsEvent::DropShed { tenant });
             return Err(req);
         }
         s.queues[tenant].q.push_back(req);

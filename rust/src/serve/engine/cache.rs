@@ -145,10 +145,14 @@ impl ResultCache {
     }
 
     /// Drop every entry — called by the engine after any re-shard.
-    pub fn invalidate_all(&mut self) {
-        self.invalidations += self.map.len() as u64;
+    /// Returns how many entries were dropped (what
+    /// [`crate::serve::ObsEvent::CacheInvalidated`] reports).
+    pub fn invalidate_all(&mut self) -> u64 {
+        let entries = self.map.len() as u64;
+        self.invalidations += entries;
         self.map.clear();
         self.order.clear();
+        entries
     }
 
     pub fn len(&self) -> usize {
@@ -234,7 +238,7 @@ mod tests {
         for i in 0..5u8 {
             c.insert(vec![i], vec![i as f32]);
         }
-        c.invalidate_all();
+        assert_eq!(c.invalidate_all(), 5, "drop count reported");
         assert!(c.is_empty());
         assert_eq!(c.invalidations, 5);
         assert!(c.lookup(&[3]).is_none());

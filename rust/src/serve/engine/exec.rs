@@ -30,12 +30,14 @@ use crate::nn::pointnet::group_cloud;
 use crate::nn::quant;
 use crate::serve::model::{fc_logits, im2col_u8, maxpool2_flat, scale_mac, MnistBundle, ModelBundle};
 use crate::serve::pointnet_model::PointNetBundle;
+use crate::serve::obs::TraceContext;
 use crate::serve::transport::{Result, ShardRouter, TenantRoute, WireWindows};
 
 /// One batch through the whole model: routes to the path-specific
 /// pipeline. Returns per-input logits, in input order; `layer_windows`
 /// accumulates the windows dispatched per layer (the rebalancer's
-/// shard-heat signal).
+/// shard-heat signal). `trace` is the batch-level trace context every
+/// layer dispatch rides under ([`TraceContext::none`] opts out).
 pub(crate) fn run_batch(
     model: &ModelBundle,
     inputs: &[&[f32]],
@@ -43,11 +45,14 @@ pub(crate) fn run_batch(
     router: &mut ShardRouter,
     route: &TenantRoute,
     layer_windows: &mut [u64],
+    trace: TraceContext,
 ) -> Result<Vec<Vec<f32>>> {
     match model {
-        ModelBundle::Mnist(m) => run_mnist_batch(m, inputs, data_cols, router, route, layer_windows),
+        ModelBundle::Mnist(m) => {
+            run_mnist_batch(m, inputs, data_cols, router, route, layer_windows, trace)
+        }
         ModelBundle::PointNet(p) => {
-            run_pointnet_batch(p, inputs, data_cols, router, route, layer_windows)
+            run_pointnet_batch(p, inputs, data_cols, router, route, layer_windows, trace)
         }
     }
 }
@@ -61,6 +66,7 @@ pub(crate) fn run_mnist_batch(
     router: &mut ShardRouter,
     route: &TenantRoute,
     layer_windows: &mut [u64],
+    trace: TraceContext,
 ) -> Result<Vec<Vec<f32>>> {
     let b = inputs.len();
     // per-image activation maps, channel-major; layer 0 input = image
@@ -89,7 +95,7 @@ pub(crate) fn run_mnist_batch(
         let pw = Arc::new(vmm::pack_windows(&flat_windows, &widths));
         layer_windows[l] += pw.n_windows as u64;
         // fan out through the transport seam, fold the dots as returned
-        let dots = router.dispatch_layer(route, l, WireWindows::Binary(pw))?;
+        let dots = router.dispatch_layer(route, l, WireWindows::Binary(pw), trace)?;
         let mut y = vec![0.0f32; b * layer.out_c * n_pos];
         for (f, dvec) in dots {
             let f = f as usize;
@@ -135,6 +141,7 @@ pub(crate) fn run_pointnet_batch(
     router: &mut ShardRouter,
     route: &TenantRoute,
     layer_windows: &mut [u64],
+    trace: TraceContext,
 ) -> Result<Vec<Vec<f32>>> {
     let b = inputs.len();
     // grouping geometry is parameter-free: computed once per request on
@@ -158,7 +165,7 @@ pub(crate) fn run_pointnet_batch(
         let pw = Arc::new(vmm::pack_windows_i8(&flat, &widths));
         layer_windows[l] += pw.n_windows as u64;
         // fan out through the transport seam, fold point-major
-        let dots = router.dispatch_layer(route, l, WireWindows::Int8(pw))?;
+        let dots = router.dispatch_layer(route, l, WireWindows::Int8(pw), trace)?;
         let mut ys: Vec<Vec<f32>> = (0..b).map(|_| vec![0.0f32; n_points * layer.out_c]).collect();
         for (f, dvec) in dots {
             let f = f as usize;

@@ -72,6 +72,7 @@ use anyhow::{anyhow, Result};
 use crate::chip::WearLedger;
 
 use super::batcher::{Request, Response};
+use super::obs::{stage, EventSubscriber, Histogram, Obs, ObsEvent, SpanRecord, Stage};
 use super::model::ModelBundle;
 use super::stats::{EngineReport, TenantStats};
 use super::transport::router::PlaceOutcome;
@@ -98,12 +99,29 @@ const MAX_BATCH_ATTEMPTS: u32 = 5;
 /// `pool` describes the local backend [`Engine::start`] builds; it is
 /// ignored by [`Engine::start_with_router`], where the fleet is handed
 /// in ready-made.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub pool: super::pool::PoolConfig,
     pub admission: AdmissionConfig,
     pub cache: CacheConfig,
     pub rebalance: RebalanceConfig,
+    /// Observability plane switch (default on): request tracing, the
+    /// operator event bus, and the metrics registry. Off hands the
+    /// engine a [`Obs::disabled`] plane — every emit/record is a no-op
+    /// branch, which is what the overhead benchmark compares against.
+    pub obs: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            pool: Default::default(),
+            admission: Default::default(),
+            cache: Default::default(),
+            rebalance: Default::default(),
+            obs: true,
+        }
+    }
 }
 
 /// The single thread that owns all serving state: placements, routes,
@@ -127,6 +145,11 @@ struct Coordinator {
     stats: Vec<TenantStats>,
     router: ShardRouter,
     data_cols: usize,
+    /// The shared observability plane (also attached to the router).
+    obs: Arc<Obs>,
+    /// Cached `stage.queue_wait` histogram handle (one registry lookup
+    /// at startup, not one per batch).
+    queue_wait: Histogram,
     rebalancer: Rebalancer,
     force_rebalance: Arc<AtomicBool>,
     /// Batches that reached the chips (cache-only batches excluded).
@@ -161,7 +184,29 @@ impl Coordinator {
 
     fn serve_batch(&mut self, t: usize, batch: Vec<Request>) {
         let b = batch.len();
+        // batch-level trace root: every span of this batch (queue wait,
+        // cache pass, per-layer dispatches, hedges, remote executes)
+        // chains off this context — the null context when obs is off
+        let trace = self.router.begin_trace();
+        // queue wait = the oldest request's admission-to-drain time (the
+        // batch cannot leave earlier than its first request arrived)
+        let queued = batch
+            .iter()
+            .map(|r| r.submitted.elapsed())
+            .max()
+            .unwrap_or_default();
+        self.queue_wait.record(queued);
+        if trace.is_traced() {
+            self.obs.trace.record(SpanRecord {
+                ctx: trace.child(self.obs.trace.next_span()),
+                stage: Stage::Queue,
+                note: format!("tenant={t} batch={b}"),
+                start: Instant::now() - queued,
+                dur: queued,
+            });
+        }
         // cache pass: resolve hits, remember the keys of misses
+        let t_cache = Instant::now();
         let mut results: Vec<Option<Vec<f32>>> = vec![None; b];
         let mut keys: Vec<Option<Vec<u8>>> = vec![None; b];
         {
@@ -176,6 +221,15 @@ impl Coordinator {
         }
         let miss_idx: Vec<usize> = (0..b).filter(|&i| results[i].is_none()).collect();
         let hits = (b - miss_idx.len()) as u64;
+        if trace.is_traced() {
+            self.obs.trace.record(SpanRecord {
+                ctx: trace.child(self.obs.trace.next_span()),
+                stage: Stage::Cache,
+                note: format!("hits={hits} misses={}", miss_idx.len()),
+                start: t_cache,
+                dur: t_cache.elapsed(),
+            });
+        }
         if !miss_idx.is_empty() {
             let inputs: Vec<&[f32]> =
                 miss_idx.iter().map(|&i| batch[i].input.as_slice()).collect();
@@ -197,6 +251,7 @@ impl Coordinator {
                     &mut self.router,
                     &self.routes[t],
                     &mut layer_windows,
+                    trace,
                 ) {
                     Ok(logits) => break logits,
                     Err(e) => {
@@ -267,9 +322,11 @@ impl Coordinator {
             .map(|w| w.rows_free.iter().map(|&r| r as usize).collect())
             .collect();
         let mut moved = 0u64;
+        let mut planned = Vec::new();
+        let mut intra = None;
         if let Some((member, src, dst)) = self.rebalancer.pick_chips(&now, &rows_free, force) {
             let (group, local) = self.router.member_group(member);
-            let moves = plan_moves(
+            planned = plan_moves(
                 &self.placements,
                 &self.heat,
                 group,
@@ -277,8 +334,19 @@ impl Coordinator {
                 src,
                 self.rebalancer.cfg.max_moves,
             );
-            for mv in moves {
-                if self.try_migrate(&mv, member, group, local, dst) {
+            intra = Some((member, group, local, dst));
+        }
+        // one Planned per pass that has work (or was operator-forced);
+        // quiet periodic passes stay silent — no event spam
+        if !planned.is_empty() || force {
+            self.obs.bus.emit(ObsEvent::RebalancePlanned {
+                moves: planned.len(),
+                group_moves: self.rebalancer.cfg.group_moves,
+            });
+        }
+        if let Some((member, group, local, dst)) = intra {
+            for mv in &planned {
+                if self.try_migrate(mv, member, group, local, dst) {
                     moved += 1;
                 }
             }
@@ -286,9 +354,13 @@ impl Coordinator {
         moved += self.group_migration_pass(force);
         if moved > 0 {
             // any re-shard invalidates every cached entry (see `cache`)
-            for cache in &self.caches {
-                cache.lock().unwrap().invalidate_all();
+            for (t, cache) in self.caches.iter().enumerate() {
+                let entries = cache.lock().unwrap().invalidate_all();
+                if entries > 0 {
+                    self.obs.bus.emit(ObsEvent::CacheInvalidated { tenant: t, entries });
+                }
             }
+            self.obs.bus.emit(ObsEvent::RebalanceApplied { shards_moved: moved as usize });
             self.rebalancer.rebalances += 1;
             self.rebalancer.shards_moved += moved;
         }
@@ -368,6 +440,7 @@ impl Coordinator {
         let old_epoch = self.routes[tenant].epoch;
         let old_shards = self.placements[tenant].layers[layer].shards.clone();
         let outcome = match self.router.migrate_layer(
+            layer,
             old_epoch,
             from_group,
             &old_shards,
@@ -428,8 +501,11 @@ impl Coordinator {
                 self.routes[t] = TenantRoute::from_placement(&self.placements[t], epoch);
             }
         }
-        for cache in &self.caches {
-            cache.lock().unwrap().invalidate_all();
+        for (t, cache) in self.caches.iter().enumerate() {
+            let entries = cache.lock().unwrap().invalidate_all();
+            if entries > 0 {
+                self.obs.bus.emit(ObsEvent::CacheInvalidated { tenant: t, entries });
+            }
         }
     }
 
@@ -563,6 +639,7 @@ pub struct Engine {
     names: Vec<String>,
     input_lens: Vec<usize>,
     caches: Vec<Arc<Mutex<ResultCache>>>,
+    obs: Arc<Obs>,
     next_id: AtomicU64,
     force: Arc<AtomicBool>,
     coordinator: Option<JoinHandle<EngineReport>>,
@@ -592,6 +669,13 @@ impl Engine {
         cfg: &EngineConfig,
     ) -> Result<Engine> {
         tenant::validate_tenants(&tenants)?;
+        // the shared observability plane: the router records dispatch /
+        // hedge / execute spans and fleet events into it, the engine
+        // adds queue/cache spans and admission/rebalance events, and
+        // [`Engine::events`] / [`Engine::obs`] hand it to operators
+        let obs =
+            Arc::new(if cfg.obs { Obs::new() } else { Obs::disabled() });
+        router.set_obs(Arc::clone(&obs));
         let data_cols = router.data_cols();
         let mut placements = Vec::with_capacity(tenants.len());
         let mut stuck_retries = 0usize;
@@ -637,6 +721,7 @@ impl Engine {
             .map(|n| TenantStats { name: n.clone(), ..TenantStats::default() })
             .collect();
         let admission = Admission::new(cfg.admission.clone(), &depths);
+        admission.attach_obs(Arc::clone(&obs));
         let force = Arc::new(AtomicBool::new(false));
 
         let coordinator = Coordinator {
@@ -650,6 +735,8 @@ impl Engine {
             stats,
             router,
             data_cols,
+            obs: Arc::clone(&obs),
+            queue_wait: obs.metrics.histogram(stage::QUEUE_WAIT),
             rebalancer: Rebalancer::new(cfg.rebalance.clone(), initial_wear),
             force_rebalance: Arc::clone(&force),
             chip_batches_total: 0,
@@ -662,6 +749,7 @@ impl Engine {
             names,
             input_lens,
             caches,
+            obs,
             next_id: AtomicU64::new(0),
             force,
             coordinator: Some(handle),
@@ -722,6 +810,29 @@ impl Engine {
             Ok(()) => Ok(rx),
             Err(req) => Err(req.input),
         }
+    }
+
+    /// Subscribe to the operator event stream ([`ObsEvent`]): every
+    /// fleet transition — migrations, fences, quarantines, rejoins,
+    /// reconnects, rebalances, cache invalidations, spillovers, sheds —
+    /// arrives as an [`crate::serve::EventRecord`] with a gapless
+    /// per-subscriber sequence number. Delivery is bounded and
+    /// non-blocking: a slow consumer loses events (counted in
+    /// [`EventSubscriber::overflowed`]), never stalls serving.
+    pub fn events(&self) -> EventSubscriber {
+        self.obs.bus.subscribe()
+    }
+
+    /// [`Engine::events`] with an explicit per-subscriber queue bound.
+    pub fn events_with(&self, capacity: usize) -> EventSubscriber {
+        self.obs.bus.subscribe_with(capacity)
+    }
+
+    /// The engine's observability plane: the trace log, the event bus,
+    /// and the metrics registry ([`Obs::snapshot`] exports all three
+    /// as one JSON object).
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
     }
 
     /// Request a rebalance pass at the next batch boundary (wear-delta
@@ -791,6 +902,7 @@ mod tests {
             },
             cache: CacheConfig::default(),
             rebalance: RebalanceConfig::default(),
+            obs: true,
         }
     }
 

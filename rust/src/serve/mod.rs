@@ -99,10 +99,26 @@
 //! scaling drift-free (DESIGN.md §8). See `tests/transport_remote.rs`
 //! for the bit-exactness harness over every backend combination and
 //! `examples/multi_host.rs` for a two-host hedged deployment.
+//!
+//! # Observability
+//!
+//! The fleet's sensory system is [`obs`]: per-request trace spans whose
+//! [`obs::TraceContext`] rides the dispatch frames (multi-host traces
+//! stitch into one tree), an operator [`obs::EventBus`] publishing
+//! control-plane transitions (migrations, quarantines, rebalances,
+//! sheds — subscribe via [`engine::Engine::events`]), and a typed
+//! [`obs::MetricsRegistry`] with a JSON snapshot exporter (DESIGN.md
+//! §10, OPERATIONS.md "Telemetry"). Serve-side code never prints:
+//! operator output flows through the [`log`] facade or the event bus
+//! (enforced by the `clippy::disallowed_macros` deny below, configured
+//! in `clippy.toml`).
+
+#![deny(clippy::disallowed_macros)]
 
 pub mod batcher;
 pub mod engine;
 pub mod model;
+pub mod obs;
 pub mod placement;
 pub mod pointnet_model;
 pub mod pool;
@@ -117,6 +133,9 @@ pub use engine::rebalance::RebalanceConfig;
 pub use engine::tenant::{TenantConfig, TenantId};
 pub use engine::{Engine, EngineConfig};
 pub use model::{ConvLayer, MnistBundle, ModelBundle, PlacementLayer, ShardPayload};
+pub use obs::{
+    EventBus, EventRecord, EventSubscriber, MetricsRegistry, Obs, ObsEvent, TraceContext, TraceLog,
+};
 pub use placement::{place, place_with, Placement, ShardLoc};
 pub use pointnet_model::{max_over_groups, PointNetBundle, PointwiseLayer, POINTWISE_LAYERS};
 pub use pool::{ChipPool, PoolConfig, WearSnapshot};

@@ -1,0 +1,292 @@
+//! The operator event bus: control-plane *transitions* (migrations,
+//! quarantines, rebalances, cache invalidations, sheds) as a bounded,
+//! non-blocking multi-subscriber stream.
+//!
+//! # Delivery contract (DESIGN.md §10)
+//!
+//! * **Emission order is delivery order.** One mutex serializes
+//!   [`EventBus::emit`], so every subscriber observes the same global
+//!   order (minus its own overflow gaps).
+//! * **Exactly once per transition.** Emitters fire on *state changes*,
+//!   not on observations: a member probed as quarantined five times
+//!   emits one `Quarantine`; a migration emits one `Started` and then
+//!   exactly one of `Completed`/`Aborted`, however many heal-and-retry
+//!   attempts surround it.
+//! * **Gapless per-subscriber sequence numbers.** `seq` counts events
+//!   *delivered to that subscriber* (0, 1, 2, …). Overflow — a
+//!   subscriber too slow to drain its bounded queue — drops the event
+//!   for that subscriber only and bumps its overflow counter; the next
+//!   delivered event carries the next consecutive `seq`, so consumers
+//!   can assert gaplessness while the counter tells them what they
+//!   missed.
+//! * **Emit never blocks.** The serving hot path must not wait on a
+//!   slow operator console; `try_send` + a counted drop is the whole
+//!   overflow policy.
+//!
+//! Every emitted event is also mirrored to the [`log`] facade at debug
+//! level (target `rram_cim::obs`), so `RRAM_LOG=debug` tails the bus
+//! without subscribing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One control-plane transition. Payloads are indexes into the fleet
+/// the subscriber already knows (router member order, engine tenant
+/// order) plus the epoch/count that made the transition observable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ObsEvent {
+    /// A cross-group layer migration began (destination programming).
+    MigrationStarted { layer: usize, from_group: usize, to_group: usize },
+    /// The migration's epoch fence went up: stale-epoch replies will be
+    /// discarded from here on.
+    MigrationFenced { layer: usize, epoch: u64 },
+    /// The migration committed: the layer now serves from `to_group`.
+    MigrationCompleted { layer: usize, epoch: u64 },
+    /// The migration rolled back; the source placement still serves.
+    MigrationAborted { layer: usize },
+    /// A member's connection was re-established (`reconnects` is its
+    /// lifetime total after this one).
+    Reconnect { member: usize, reconnects: u64 },
+    /// A member came back with a fresh pool incarnation: its shards are
+    /// gone and it is fenced off from dispatches.
+    Quarantine { member: usize },
+    /// A quarantined member was re-programmed and serves again.
+    Rejoin { member: usize },
+    /// A rebalance pass planned work (`moves` intra-backend shard
+    /// moves, `group_moves` cross-group layer migrations).
+    RebalancePlanned { moves: usize, group_moves: usize },
+    /// The pass finished; `shards_moved` shards actually migrated.
+    RebalanceApplied { shards_moved: usize },
+    /// A tenant's result cache was dropped after a re-shard.
+    CacheInvalidated { tenant: usize, entries: u64 },
+    /// A dispatch spilled off a full member queue to a replica.
+    SpillOver { group: usize, member: usize },
+    /// Admission shed a request on a full tenant queue.
+    DropShed { tenant: usize },
+}
+
+impl ObsEvent {
+    /// Stable kind label (what scripted consumers match on).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ObsEvent::MigrationStarted { .. } => "migration_started",
+            ObsEvent::MigrationFenced { .. } => "migration_fenced",
+            ObsEvent::MigrationCompleted { .. } => "migration_completed",
+            ObsEvent::MigrationAborted { .. } => "migration_aborted",
+            ObsEvent::Reconnect { .. } => "reconnect",
+            ObsEvent::Quarantine { .. } => "quarantine",
+            ObsEvent::Rejoin { .. } => "rejoin",
+            ObsEvent::RebalancePlanned { .. } => "rebalance_planned",
+            ObsEvent::RebalanceApplied { .. } => "rebalance_applied",
+            ObsEvent::CacheInvalidated { .. } => "cache_invalidated",
+            ObsEvent::SpillOver { .. } => "spill_over",
+            ObsEvent::DropShed { .. } => "drop_shed",
+        }
+    }
+}
+
+/// One delivered event: the per-subscriber gapless sequence number plus
+/// the event itself.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EventRecord {
+    pub seq: u64,
+    pub event: ObsEvent,
+}
+
+struct SubSlot {
+    tx: SyncSender<EventRecord>,
+    /// Events delivered so far == the next record's `seq`.
+    delivered: u64,
+    dropped: Arc<AtomicU64>,
+    alive: bool,
+}
+
+/// The bus. Emitters share it behind `Arc<super::Obs>`; subscribers
+/// hold an [`EventSubscriber`] each.
+pub struct EventBus {
+    enabled: bool,
+    subs: Mutex<Vec<SubSlot>>,
+    emitted: AtomicU64,
+    overflowed: AtomicU64,
+}
+
+/// Default per-subscriber queue bound.
+const DEFAULT_CAPACITY: usize = 256;
+
+impl EventBus {
+    pub fn new() -> EventBus {
+        EventBus {
+            enabled: true,
+            subs: Mutex::new(Vec::new()),
+            emitted: AtomicU64::new(0),
+            overflowed: AtomicU64::new(0),
+        }
+    }
+
+    /// A bus that accepts subscriptions but delivers nothing.
+    pub fn disabled() -> EventBus {
+        EventBus { enabled: false, ..EventBus::new() }
+    }
+
+    /// Subscribe with the default queue bound.
+    pub fn subscribe(&self) -> EventSubscriber {
+        self.subscribe_with(DEFAULT_CAPACITY)
+    }
+
+    /// Subscribe with an explicit queue bound (events beyond it are
+    /// dropped for this subscriber and counted in its overflow).
+    pub fn subscribe_with(&self, capacity: usize) -> EventSubscriber {
+        let (tx, rx) = sync_channel(capacity.max(1));
+        let dropped = Arc::new(AtomicU64::new(0));
+        if self.enabled {
+            self.subs.lock().unwrap().push(SubSlot {
+                tx,
+                delivered: 0,
+                dropped: Arc::clone(&dropped),
+                alive: true,
+            });
+        }
+        EventSubscriber { rx, dropped }
+    }
+
+    /// Publish one event to every live subscriber. Never blocks: a full
+    /// subscriber queue drops the event for that subscriber only and
+    /// counts the loss; a hung-up subscriber is forgotten.
+    pub fn emit(&self, event: ObsEvent) {
+        if !self.enabled {
+            return;
+        }
+        log::debug!(target: "rram_cim::obs", "{event:?}");
+        self.emitted.fetch_add(1, Ordering::Relaxed);
+        let mut subs = self.subs.lock().unwrap();
+        for sub in subs.iter_mut() {
+            match sub.tx.try_send(EventRecord { seq: sub.delivered, event: event.clone() }) {
+                Ok(()) => sub.delivered += 1,
+                Err(TrySendError::Full(_)) => {
+                    sub.dropped.fetch_add(1, Ordering::Relaxed);
+                    self.overflowed.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(TrySendError::Disconnected(_)) => sub.alive = false,
+            }
+        }
+        subs.retain(|s| s.alive);
+    }
+
+    /// Events published so far (whether or not anyone received them).
+    pub fn emitted(&self) -> u64 {
+        self.emitted.load(Ordering::Relaxed)
+    }
+
+    /// Per-subscriber drops summed across the bus's lifetime.
+    pub fn overflowed(&self) -> u64 {
+        self.overflowed.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for EventBus {
+    fn default() -> Self {
+        EventBus::new()
+    }
+}
+
+/// One subscriber's receive half plus its overflow counter.
+pub struct EventSubscriber {
+    rx: Receiver<EventRecord>,
+    dropped: Arc<AtomicU64>,
+}
+
+impl EventSubscriber {
+    /// The next queued event, if any (never blocks).
+    pub fn try_next(&self) -> Option<EventRecord> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Block up to `timeout` for the next event.
+    pub fn next_timeout(&self, timeout: Duration) -> Option<EventRecord> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
+    /// Drain everything currently queued.
+    pub fn drain(&self) -> Vec<EventRecord> {
+        std::iter::from_fn(|| self.try_next()).collect()
+    }
+
+    /// Events this subscriber lost to its queue bound so far.
+    pub fn overflowed(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shed(t: usize) -> ObsEvent {
+        ObsEvent::DropShed { tenant: t }
+    }
+
+    #[test]
+    fn delivery_preserves_emission_order_per_subscriber() {
+        let bus = EventBus::new();
+        let a = bus.subscribe();
+        let b = bus.subscribe();
+        for t in 0..5 {
+            bus.emit(shed(t));
+        }
+        for sub in [&a, &b] {
+            let got = sub.drain();
+            assert_eq!(got.len(), 5);
+            for (i, rec) in got.iter().enumerate() {
+                assert_eq!(rec.seq, i as u64);
+                assert_eq!(rec.event, shed(i));
+            }
+        }
+        assert_eq!(bus.emitted(), 5);
+        assert_eq!(bus.overflowed(), 0);
+    }
+
+    #[test]
+    fn overflow_is_counted_and_seq_stays_gapless() {
+        let bus = EventBus::new();
+        let slow = bus.subscribe_with(2);
+        for t in 0..6 {
+            bus.emit(shed(t));
+        }
+        // queue bound 2: events 2..6 overflowed
+        assert_eq!(slow.overflowed(), 4);
+        assert_eq!(bus.overflowed(), 4);
+        let first: Vec<u64> = slow.drain().iter().map(|r| r.seq).collect();
+        assert_eq!(first, vec![0, 1]);
+        // the drained subscriber keeps receiving, seq continuing gapless
+        bus.emit(shed(9));
+        let rec = slow.try_next().unwrap();
+        assert_eq!(rec.seq, 2, "delivered seq has no gap despite 4 drops");
+        assert_eq!(rec.event, shed(9));
+    }
+
+    #[test]
+    fn dropped_subscriber_is_forgotten_late_subscriber_sees_only_new() {
+        let bus = EventBus::new();
+        let early = bus.subscribe();
+        drop(early);
+        bus.emit(shed(0)); // reaps the dead subscriber, no panic
+        let late = bus.subscribe();
+        bus.emit(shed(1));
+        let got = late.drain();
+        assert_eq!(got.len(), 1, "subscription starts at the present");
+        assert_eq!(got[0].event, shed(1));
+        assert_eq!(got[0].seq, 0, "per-subscriber seq starts at 0");
+        assert_eq!(bus.emitted(), 2);
+    }
+
+    #[test]
+    fn kinds_are_stable_labels() {
+        assert_eq!(shed(0).kind(), "drop_shed");
+        assert_eq!(
+            ObsEvent::MigrationFenced { layer: 1, epoch: 3 }.kind(),
+            "migration_fenced"
+        );
+    }
+}

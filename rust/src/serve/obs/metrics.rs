@@ -1,0 +1,225 @@
+//! The typed metrics registry: named counters, gauges, and
+//! stage-labelled latency histograms with a `snapshot()` → JSON
+//! exporter.
+//!
+//! This is the *growth path* for serving metrics: the legacy stat
+//! structs ([`crate::serve::RouterStats`], [`crate::serve::ServeStats`])
+//! keep their fields for API stability, but new series register here by
+//! name and appear in the snapshot for free — no new struct field, no
+//! new plumbing through report types. Handles are cheap `Arc` clones;
+//! recording is one atomic op (counter/gauge) or one uncontended mutex
+//! lock (histogram), so the registry can stay on the serving path.
+//!
+//! Names are dot-separated lowercase (`router.hedges_fired`,
+//! `stage.queue_wait`); the snapshot sorts them, so the JSON is
+//! deterministic for a given run.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::serve::stats::LatencyHistogram;
+use crate::util::json::Json;
+
+/// A monotone counter handle.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins gauge handle (an `f64` behind its bit pattern).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(Arc::new(AtomicU64::new(0f64.to_bits())))
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// A latency histogram handle (log2 buckets, constant footprint — see
+/// [`LatencyHistogram`]).
+#[derive(Clone, Default)]
+pub struct Histogram(Arc<Mutex<LatencyHistogram>>);
+
+impl Histogram {
+    pub fn record(&self, latency: Duration) {
+        self.0.lock().unwrap().record(latency);
+    }
+
+    /// A point-in-time copy of the underlying histogram.
+    pub fn read(&self) -> LatencyHistogram {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+struct Series {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// The registry. Get-or-create by name; every registered series shows
+/// up in [`MetricsRegistry::snapshot`].
+pub struct MetricsRegistry {
+    enabled: bool,
+    series: Mutex<Series>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            enabled: true,
+            series: Mutex::new(Series {
+                counters: BTreeMap::new(),
+                gauges: BTreeMap::new(),
+                histograms: BTreeMap::new(),
+            }),
+        }
+    }
+
+    /// A registry that hands out live handles but never registers them:
+    /// recording still works on the handle, but nothing is retained or
+    /// exported.
+    pub fn disabled() -> MetricsRegistry {
+        MetricsRegistry { enabled: false, ..MetricsRegistry::new() }
+    }
+
+    /// The counter named `name`, registered on first use.
+    pub fn counter(&self, name: &str) -> Counter {
+        if !self.enabled {
+            return Counter::default();
+        }
+        self.series.lock().unwrap().counters.entry(name.to_string()).or_default().clone()
+    }
+
+    /// The gauge named `name`, registered on first use.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        if !self.enabled {
+            return Gauge::default();
+        }
+        self.series.lock().unwrap().gauges.entry(name.to_string()).or_default().clone()
+    }
+
+    /// The histogram named `name`, registered on first use.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        if !self.enabled {
+            return Histogram::default();
+        }
+        self.series.lock().unwrap().histograms.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Everything registered, as one JSON object:
+    ///
+    /// ```json
+    /// {"counters": {"a.b": 3},
+    ///  "gauges": {"c": 1.5},
+    ///  "histograms": {"stage.x": {"count": 9, "p50_ms": …, "p95_ms": …,
+    ///                             "p99_ms": …}}}
+    /// ```
+    ///
+    /// Keys are sorted; callers may `.set(…)` more fields onto the
+    /// returned object before rendering (how the serve bench attaches
+    /// its throughput rows).
+    pub fn snapshot(&self) -> Json {
+        let s = self.series.lock().unwrap();
+        let mut counters = Json::obj();
+        for (name, c) in &s.counters {
+            counters = counters.set(name, c.get());
+        }
+        let mut gauges = Json::obj();
+        for (name, g) in &s.gauges {
+            gauges = gauges.set(name, g.get());
+        }
+        let mut histograms = Json::obj();
+        for (name, h) in &s.histograms {
+            let h = h.read();
+            histograms = histograms.set(
+                name,
+                Json::obj()
+                    .set("count", h.count())
+                    .set("p50_ms", h.percentile_ms(50.0))
+                    .set("p95_ms", h.percentile_ms(95.0))
+                    .set("p99_ms", h.percentile_ms(99.0)),
+            );
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", histograms)
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_by_name() {
+        let reg = MetricsRegistry::new();
+        reg.counter("a").add(2);
+        reg.counter("a").inc();
+        assert_eq!(reg.counter("a").get(), 3, "same name, same series");
+        reg.gauge("g").set(1.5);
+        assert_eq!(reg.gauge("g").get(), 1.5);
+        reg.histogram("h").record(Duration::from_micros(100));
+        assert_eq!(reg.histogram("h").read().count(), 1);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_extensible() {
+        let reg = MetricsRegistry::new();
+        reg.counter("z.last").inc();
+        reg.counter("a.first").add(7);
+        reg.gauge("mid").set(2.0);
+        reg.histogram("stage.q").record(Duration::from_millis(1));
+        let s = reg.snapshot().set("extra", "row").render();
+        assert!(s.find("a.first").unwrap() < s.find("z.last").unwrap(), "{s}");
+        assert!(s.contains(r#""a.first":7"#), "{s}");
+        assert!(s.contains(r#""mid":2"#), "{s}");
+        assert!(s.contains(r#""count":1"#), "{s}");
+        assert!(s.contains(r#""extra":"row""#), "{s}");
+    }
+
+    #[test]
+    fn disabled_registry_exports_nothing() {
+        let reg = MetricsRegistry::disabled();
+        let c = reg.counter("a");
+        c.inc();
+        assert_eq!(c.get(), 1, "the orphan handle still works");
+        assert_eq!(reg.counter("a").get(), 0, "but is not registered");
+        assert_eq!(
+            reg.snapshot().render(),
+            r#"{"counters":{},"gauges":{},"histograms":{}}"#
+        );
+    }
+}

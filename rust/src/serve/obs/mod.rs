@@ -1,0 +1,151 @@
+//! The serving fleet's observability plane: request **traces**, an
+//! operator **event bus**, and an exportable **metrics registry** — one
+//! [`Obs`] handle shared by the engine, the router, and the transport
+//! seam (DESIGN.md §10).
+//!
+//! The paper's headline claims are measured quantities, and the fleet
+//! features stacked on top of the chip (hedged replica groups,
+//! epoch-fenced migration, bounce quarantine, wear rebalancing) each
+//! change *when* and *where* a request computes without ever changing
+//! *what* it computes. This module makes those control-plane decisions
+//! observable without grepping stderr:
+//!
+//! * [`trace::TraceLog`] — a bounded ring of per-request lifecycle
+//!   spans (queue-wait → dispatch → \[hedge\] → execute), stitched
+//!   across hosts by the [`trace::TraceContext`] the dispatch frames
+//!   carry over the wire.
+//! * [`events::EventBus`] — a bounded, non-blocking stream of
+//!   [`events::ObsEvent`]s (migrations, quarantines, rebalances, cache
+//!   invalidations, sheds) with per-subscriber gapless sequence
+//!   numbers; overflow is counted, never silent.
+//! * [`metrics::MetricsRegistry`] — typed counters / gauges /
+//!   stage-labelled latency histograms with a `snapshot()` → JSON
+//!   exporter (the growth path for new serving metrics, and what
+//!   benches persist as `BENCH_serve.json`).
+//!
+//! Everything here is offline-buildable (no tracing/metrics crates) and
+//! cheap enough to stay on by default: recording is a handful of atomic
+//! ops or one uncontended mutex lock per *batch-level* operation, and a
+//! fully [`Obs::disabled`] plane reduces every hook to a branch.
+
+pub mod events;
+pub mod metrics;
+pub mod trace;
+
+pub use events::{EventBus, EventRecord, EventSubscriber, ObsEvent};
+pub use metrics::{Counter, Gauge, Histogram, MetricsRegistry};
+pub use trace::{SpanRecord, Stage, TraceContext, TraceLog};
+
+use crate::util::json::Json;
+
+/// Well-known stage-histogram names, so every layer records into the
+/// same series and dashboards/benches key on stable strings.
+pub mod stage {
+    /// Submit → drained-into-a-batch wait, recorded per batch (the
+    /// oldest member's wait — the batch's worst case).
+    pub const QUEUE_WAIT: &str = "stage.queue_wait";
+    /// Client-observed dispatch round trip per layer (includes any
+    /// hedge wait and failover retries).
+    pub const DISPATCH: &str = "stage.dispatch";
+    /// Host-boundary execute time as the winning reply reported it
+    /// (`host_ns`), i.e. compute without the wire.
+    pub const EXECUTE: &str = "stage.execute";
+    /// `DISPATCH − EXECUTE` of the winning attempt: framing, wire, and
+    /// backend queueing.
+    pub const TRANSPORT: &str = "stage.transport";
+}
+
+/// One observability plane: trace log + event bus + metrics registry.
+/// Shared as `Arc<Obs>` between the engine coordinator, the router, and
+/// anything that wants to watch ([`crate::serve::Engine::events`]).
+pub struct Obs {
+    pub trace: TraceLog,
+    pub bus: EventBus,
+    pub metrics: MetricsRegistry,
+}
+
+impl Obs {
+    /// An enabled plane with default bounds (1024 retained spans).
+    pub fn new() -> Obs {
+        Obs {
+            trace: TraceLog::new(1024),
+            bus: EventBus::new(),
+            metrics: MetricsRegistry::new(),
+        }
+    }
+
+    /// A no-op plane: every record/emit is a branch and nothing is
+    /// retained. Used to measure the plane's own overhead (see
+    /// `benches/serve_throughput.rs`).
+    pub fn disabled() -> Obs {
+        Obs {
+            trace: TraceLog::disabled(),
+            bus: EventBus::disabled(),
+            metrics: MetricsRegistry::disabled(),
+        }
+    }
+
+    /// Is anything being recorded at all?
+    pub fn is_enabled(&self) -> bool {
+        self.trace.is_enabled()
+    }
+
+    /// One JSON document of everything the plane holds: the metrics
+    /// registry plus the bus/trace meta-counters (events emitted,
+    /// events overflowed, spans dropped) — the scrape endpoint's body.
+    pub fn snapshot(&self) -> Json {
+        self.metrics
+            .snapshot()
+            .set(
+                "events",
+                Json::obj()
+                    .set("emitted", self.bus.emitted())
+                    .set("overflowed", self.bus.overflowed()),
+            )
+            .set(
+                "trace",
+                Json::obj()
+                    .set("retained_spans", self.trace.len())
+                    .set("dropped_spans", self.trace.dropped()),
+            )
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Obs::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn snapshot_includes_meta_counters() {
+        let obs = Obs::new();
+        obs.bus.emit(ObsEvent::DropShed { tenant: 0 });
+        obs.metrics.counter("c").inc();
+        obs.metrics.histogram(stage::QUEUE_WAIT).record(Duration::from_millis(2));
+        let s = obs.snapshot().render();
+        assert!(s.contains("\"events\":{\"emitted\":1,\"overflowed\":0}"), "{s}");
+        assert!(s.contains("\"c\":1"), "{s}");
+        assert!(s.contains("stage.queue_wait"), "{s}");
+    }
+
+    #[test]
+    fn disabled_plane_records_nothing() {
+        let obs = Obs::disabled();
+        assert!(!obs.is_enabled());
+        let sub = obs.bus.subscribe();
+        obs.bus.emit(ObsEvent::DropShed { tenant: 0 });
+        assert!(sub.try_next().is_none());
+        obs.metrics.counter("c").inc();
+        let ctx = obs.trace.new_trace();
+        assert!(!ctx.is_traced(), "disabled log hands out the null trace");
+        assert_eq!(obs.trace.len(), 0);
+        let s = obs.snapshot().render();
+        assert!(s.contains("\"emitted\":0"), "{s}");
+    }
+}

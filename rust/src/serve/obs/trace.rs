@@ -1,0 +1,320 @@
+//! Request tracing: a [`TraceContext`] that rides the dispatch frames
+//! (so multi-host traces stitch into one tree) and a bounded
+//! [`TraceLog`] ring of completed [`SpanRecord`]s.
+//!
+//! No external tracing crate, no background collector: a span is
+//! recorded *after* it closes (one mutex push), and the context the
+//! wire carries is three `u64`s — `trace_id` (shared by every span of
+//! one logical batch), `span_id` (unique per span), and `parent_span`
+//! (the tree edge). A hedged duplicate shares the request's `trace_id`
+//! but gets its own `span_id`, which is how the rendered trace shows
+//! the race the router ran.
+//!
+//! `trace_id == 0` is the *null trace*: untraced requests (a disabled
+//! log, or a caller that opted out) carry it and every record becomes a
+//! no-op, so the hot path costs a branch.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The wire-carried trace identity of one span (DESIGN.md §10).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceContext {
+    /// Shared by every span of one logical operation; 0 = untraced.
+    pub trace_id: u64,
+    /// The span this one hangs under (0 for a root span).
+    pub parent_span: u64,
+    /// This span's own identity, unique within the trace.
+    pub span_id: u64,
+}
+
+impl TraceContext {
+    /// The null context: untraced, recorded nowhere.
+    pub fn none() -> TraceContext {
+        TraceContext::default()
+    }
+
+    /// Does this context belong to a live trace?
+    pub fn is_traced(&self) -> bool {
+        self.trace_id != 0
+    }
+
+    /// A child context under this span, with the given fresh span id.
+    pub fn child(&self, span_id: u64) -> TraceContext {
+        TraceContext { trace_id: self.trace_id, parent_span: self.span_id, span_id }
+    }
+}
+
+/// The lifecycle stage a span measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Submit → drained into a batch (admission queue wait).
+    Queue,
+    /// Requests coalesced into one single-tenant batch.
+    Coalesce,
+    /// A result-cache lookup (note says `hit n/m`).
+    Cache,
+    /// One layer's dispatch round trip as the client observed it.
+    Dispatch,
+    /// A hedged duplicate attempt (same trace, its own span).
+    Hedge,
+    /// Host-boundary execute time, stitched from the reply's `host_ns`.
+    Execute,
+    /// Replies delivered back to the submitters.
+    Reply,
+}
+
+impl Stage {
+    /// Stable lowercase label (rendered and used as a metrics suffix).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Coalesce => "coalesce",
+            Stage::Cache => "cache",
+            Stage::Dispatch => "dispatch",
+            Stage::Hedge => "hedge",
+            Stage::Execute => "execute",
+            Stage::Reply => "reply",
+        }
+    }
+}
+
+/// One closed span.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub ctx: TraceContext,
+    pub stage: Stage,
+    /// Free-form annotation: `layer=2 member=1 win`, `hit 3/24`, …
+    pub note: String,
+    pub start: Instant,
+    pub dur: Duration,
+}
+
+/// A bounded ring of completed spans plus the id allocator for new
+/// traces/spans. Overflow evicts the oldest span and is counted —
+/// telemetry loss is visible, never silent.
+pub struct TraceLog {
+    enabled: bool,
+    cap: usize,
+    next_id: AtomicU64,
+    ring: Mutex<VecDeque<SpanRecord>>,
+    dropped: AtomicU64,
+}
+
+impl TraceLog {
+    /// A live log retaining at most `cap` spans.
+    pub fn new(cap: usize) -> TraceLog {
+        TraceLog {
+            enabled: cap > 0,
+            cap,
+            next_id: AtomicU64::new(1),
+            ring: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// A log that hands out null contexts and records nothing.
+    pub fn disabled() -> TraceLog {
+        TraceLog::new(0)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// A fresh root context (the null context when disabled).
+    pub fn new_trace(&self) -> TraceContext {
+        if !self.enabled {
+            return TraceContext::none();
+        }
+        TraceContext {
+            trace_id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            parent_span: 0,
+            span_id: self.next_span(),
+        }
+    }
+
+    /// A fresh span id (nonzero; 0 when disabled).
+    pub fn next_span(&self) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record one closed span. Untraced spans and disabled logs no-op;
+    /// a full ring evicts its oldest span and counts the eviction.
+    pub fn record(&self, span: SpanRecord) {
+        if !self.enabled || !span.ctx.is_traced() {
+            return;
+        }
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() >= self.cap {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(span);
+    }
+
+    /// Spans currently retained (oldest first).
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// The retained spans of one trace, oldest first.
+    pub fn trace(&self, trace_id: u64) -> Vec<SpanRecord> {
+        self.ring
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.ctx.trace_id == trace_id)
+            .cloned()
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans evicted from the ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Render one trace as an indented tree (children under parents,
+    /// siblings by start time), with per-span offset from the trace's
+    /// first span and duration in µs. Empty string for an unknown id.
+    pub fn render(&self, trace_id: u64) -> String {
+        let spans = self.trace(trace_id);
+        render_spans(trace_id, &spans)
+    }
+}
+
+/// Tree-render a set of spans (all of one trace). Public so callers
+/// holding their own span snapshot (e.g. an example that drained the
+/// log) can render without re-querying.
+pub fn render_spans(trace_id: u64, spans: &[SpanRecord]) -> String {
+    use std::fmt::Write as _;
+    let Some(t0) = spans.iter().map(|s| s.start).min() else {
+        return String::new();
+    };
+    let mut out = format!("trace {trace_id:#018x} ({} spans)\n", spans.len());
+    // children grouped under their parent; roots are spans whose parent
+    // is absent from this trace (0, or evicted from the ring)
+    let ids: Vec<u64> = spans.iter().map(|s| s.ctx.span_id).collect();
+    let mut order: Vec<usize> = (0..spans.len()).collect();
+    order.sort_by_key(|&i| spans[i].start);
+    fn emit(
+        out: &mut String,
+        spans: &[SpanRecord],
+        order: &[usize],
+        ids: &[u64],
+        parent: Option<u64>,
+        depth: usize,
+        t0: Instant,
+    ) {
+        for &i in order {
+            let s = &spans[i];
+            let is_root = !ids.contains(&s.ctx.parent_span);
+            let matches = match parent {
+                None => is_root,
+                Some(p) => !is_root && s.ctx.parent_span == p,
+            };
+            if !matches {
+                continue;
+            }
+            let off = s.start.duration_since(t0);
+            let _ = writeln!(
+                out,
+                "  {:indent$}[+{:>8.1}µs {:>9.1}µs] {} {}",
+                "",
+                off.as_secs_f64() * 1e6,
+                s.dur.as_secs_f64() * 1e6,
+                s.stage.label(),
+                s.note,
+                indent = depth * 2,
+            );
+            emit(out, spans, order, ids, Some(s.ctx.span_id), depth + 1, t0);
+        }
+    }
+    emit(&mut out, spans, &order, &ids, None, 0, t0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(ctx: TraceContext, stage: Stage, note: &str) -> SpanRecord {
+        SpanRecord {
+            ctx,
+            stage,
+            note: note.into(),
+            start: Instant::now(),
+            dur: Duration::from_micros(10),
+        }
+    }
+
+    #[test]
+    fn contexts_chain_and_null_is_untraced() {
+        let log = TraceLog::new(8);
+        let root = log.new_trace();
+        assert!(root.is_traced());
+        let child = root.child(log.next_span());
+        assert_eq!(child.trace_id, root.trace_id);
+        assert_eq!(child.parent_span, root.span_id);
+        assert_ne!(child.span_id, root.span_id);
+        assert!(!TraceContext::none().is_traced());
+    }
+
+    #[test]
+    fn ring_bounds_retention_and_counts_evictions() {
+        let log = TraceLog::new(3);
+        let root = log.new_trace();
+        for i in 0..5 {
+            log.record(span(root.child(log.next_span()), Stage::Dispatch, &format!("d{i}")));
+        }
+        assert_eq!(log.len(), 3, "ring holds at most its capacity");
+        assert_eq!(log.dropped(), 2, "evictions are counted");
+        let notes: Vec<String> = log.spans().iter().map(|s| s.note.clone()).collect();
+        assert_eq!(notes, vec!["d2", "d3", "d4"], "oldest spans leave first");
+        // untraced spans are never retained
+        log.record(span(TraceContext::none(), Stage::Queue, "x"));
+        assert_eq!(log.len(), 3);
+    }
+
+    #[test]
+    fn render_nests_children_under_parents() {
+        let log = TraceLog::new(16);
+        let root = log.new_trace();
+        log.record(span(root, Stage::Dispatch, "layer=0"));
+        let a = root.child(log.next_span());
+        let b = root.child(log.next_span());
+        log.record(span(a, Stage::Execute, "member=0 win"));
+        log.record(span(b, Stage::Hedge, "member=1 discarded"));
+        let other = log.new_trace();
+        log.record(span(other, Stage::Queue, "unrelated"));
+        let tree = log.render(root.trace_id);
+        assert!(tree.contains("(3 spans)"), "{tree}");
+        assert!(!tree.contains("unrelated"), "{tree}");
+        let d = tree.find("dispatch").unwrap();
+        let e = tree.find("execute").unwrap();
+        let h = tree.find("hedge").unwrap();
+        assert!(d < e && d < h, "root precedes children:\n{tree}");
+        // children indented two deeper than the root
+        for line in tree.lines().skip(1) {
+            let depth = line.len() - line.trim_start().len();
+            if line.contains("dispatch") {
+                assert_eq!(depth, 2, "{tree}");
+            } else {
+                assert_eq!(depth, 4, "{tree}");
+            }
+        }
+    }
+}

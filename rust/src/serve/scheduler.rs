@@ -257,8 +257,12 @@ fn coordinator_loop(
         let b = batch.len();
         let inputs: Vec<&[f32]> = batch.iter().map(|r| r.input.as_slice()).collect();
         let mut layer_windows = vec![0u64; n_layers];
-        let logits = run_batch(&model, &inputs, data_cols, &mut router, &route, &mut layer_windows)
-            .expect("serving transport failed mid-batch");
+        // begin_trace returns the null context while no obs plane is
+        // attached — the legacy server stays untraced at zero cost
+        let trace = router.begin_trace();
+        let logits =
+            run_batch(&model, &inputs, data_cols, &mut router, &route, &mut layer_windows, trace)
+                .expect("serving transport failed mid-batch");
         // replies, in admission order (per-client FIFO)
         for (req, lg) in batch.iter().zip(logits) {
             let latency = req.submitted.elapsed();

@@ -8,6 +8,14 @@ use crate::chip::WearLedger;
 use crate::serve::transport::RouterStats;
 use crate::util::stats::percentile;
 
+/// Exact-percentile reservoir bound: while a run holds at most this
+/// many requests every latency is retained and percentiles are exact;
+/// past it the reservoir stops growing and the log2 histogram (which
+/// never stops counting) answers with its conservative upper-bound
+/// estimate. Either way memory is constant under sustained load — the
+/// seed-era `Vec<f64>` grew one float per request forever.
+const LATENCY_RESERVOIR_CAP: usize = 4096;
+
 /// Aggregated counters of one serving run.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
@@ -24,25 +32,42 @@ pub struct ServeStats {
     pub wall_s: f64,
     /// Chip energy spent while serving (pJ, programming excluded).
     pub energy_pj: f64,
-    /// Per-request submit-to-reply latencies, microseconds.
-    latencies_us: Vec<f64>,
+    /// Every latency, log2-bucketed (constant footprint, never full).
+    hist: LatencyHistogram,
+    /// The first [`LATENCY_RESERVOIR_CAP`] exact samples, microseconds.
+    reservoir: Vec<f64>,
 }
 
 impl ServeStats {
     pub fn record_latency(&mut self, latency: Duration) {
-        self.latencies_us.push(latency.as_secs_f64() * 1e6);
+        self.hist.record(latency);
+        if self.reservoir.len() < LATENCY_RESERVOIR_CAP {
+            self.reservoir.push(latency.as_secs_f64() * 1e6);
+        }
     }
 
+    /// The retained exact samples (microseconds) — complete while the
+    /// run stayed within [`LATENCY_RESERVOIR_CAP`] requests, a prefix
+    /// sample of the run past it (the histogram still counts all).
     pub fn latencies_us(&self) -> &[f64] {
-        &self.latencies_us
+        &self.reservoir
     }
 
-    /// p-th latency percentile in milliseconds (0 for an empty run).
+    /// The log2 latency histogram covering every recorded request.
+    pub fn latency_histogram(&self) -> &LatencyHistogram {
+        &self.hist
+    }
+
+    /// p-th latency percentile in milliseconds (0 for an empty run):
+    /// exact while every sample is retained, the histogram's
+    /// conservative upper bound once the reservoir saturated.
     pub fn latency_ms(&self, p: f64) -> f64 {
-        if self.latencies_us.is_empty() {
+        if self.hist.count() == 0 {
             0.0
+        } else if (self.hist.count() as usize) <= self.reservoir.len() {
+            percentile(&self.reservoir, p) / 1e3
         } else {
-            percentile(&self.latencies_us, p) / 1e3
+            self.hist.percentile_ms(p)
         }
     }
 
@@ -279,6 +304,24 @@ mod tests {
         assert!((s.mean_batch() - 4.0).abs() < 1e-9);
         // 5 uJ / 100 inferences = 50 nJ each
         assert!((s.nj_per_inference() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_memory_is_bounded_and_percentiles_survive_saturation() {
+        let mut s = ServeStats::default();
+        // 2x the reservoir: the vec must stop growing, the histogram
+        // must keep counting, and percentiles must stay monotone
+        let n = super::LATENCY_RESERVOIR_CAP * 2;
+        for i in 0..n {
+            s.record_latency(Duration::from_micros(100 + (i % 512) as u64));
+        }
+        assert_eq!(s.latencies_us().len(), super::LATENCY_RESERVOIR_CAP);
+        assert_eq!(s.latency_histogram().count(), n as u64);
+        assert!(s.p50_ms() > 0.0);
+        assert!(s.p50_ms() <= s.p95_ms() && s.p95_ms() <= s.p99_ms());
+        // histogram estimates are upper bounds: every sample is < 1ms,
+        // so the saturated p99 sits at a bucket edge <= 1.024ms
+        assert!(s.p99_ms() <= 1.024 + 1e-9, "p99 {} escaped its bucket", s.p99_ms());
     }
 
     #[test]

@@ -22,6 +22,7 @@ use std::sync::Arc;
 use crate::chip::WearLedger;
 use crate::cim::mapping::RowSpan;
 use crate::cim::vmm::{PackedWindows, PackedWindowsI8};
+use crate::serve::obs::TraceContext;
 
 use super::{
     BackendInfo, DispatchReply, DispatchRequest, FinishReply, OwnedPayload, ProgramReply,
@@ -222,10 +223,17 @@ fn put_payload(buf: &mut Vec<u8>, p: &OwnedPayload) {
     }
 }
 
+fn put_trace(buf: &mut Vec<u8>, t: &TraceContext) {
+    put_u64(buf, t.trace_id);
+    put_u64(buf, t.parent_span);
+    put_u64(buf, t.span_id);
+}
+
 fn put_dispatch_request(buf: &mut Vec<u8>, req: &DispatchRequest) {
     put_u64(buf, req.request_id);
     put_u64(buf, req.shard_epoch);
     put_u32(buf, req.layer);
+    put_trace(buf, &req.trace);
     put_usize(buf, req.shards.len());
     for s in req.shards.iter() {
         put_u32(buf, s.chip);
@@ -239,6 +247,8 @@ fn put_dispatch_reply(buf: &mut Vec<u8>, rep: &DispatchReply) {
     put_u64(buf, rep.request_id);
     put_u64(buf, rep.shard_epoch);
     put_u32(buf, rep.layer);
+    put_trace(buf, &rep.trace);
+    put_u64(buf, rep.host_ns);
     put_usize(buf, rep.dots.len());
     for (f, dots) in &rep.dots {
         put_u32(buf, *f);
@@ -474,10 +484,19 @@ impl<'a> Reader<'a> {
         }
     }
 
+    fn trace(&mut self) -> Result<TraceContext> {
+        Ok(TraceContext {
+            trace_id: self.u64()?,
+            parent_span: self.u64()?,
+            span_id: self.u64()?,
+        })
+    }
+
     fn dispatch_request(&mut self) -> Result<DispatchRequest> {
         let request_id = self.u64()?;
         let shard_epoch = self.u64()?;
         let layer = self.u32()?;
+        let trace = self.trace()?;
         let n = self.len(8)?;
         let mut shards = Vec::with_capacity(n);
         for _ in 0..n {
@@ -487,13 +506,22 @@ impl<'a> Reader<'a> {
             shards.push(ShardRef { chip, filter, span });
         }
         let windows = self.windows()?;
-        Ok(DispatchRequest { request_id, shard_epoch, layer, shards: Arc::new(shards), windows })
+        Ok(DispatchRequest {
+            request_id,
+            shard_epoch,
+            layer,
+            shards: Arc::new(shards),
+            windows,
+            trace,
+        })
     }
 
     fn dispatch_reply(&mut self) -> Result<DispatchReply> {
         let request_id = self.u64()?;
         let shard_epoch = self.u64()?;
         let layer = self.u32()?;
+        let trace = self.trace()?;
+        let host_ns = self.u64()?;
         let n = self.len(8)?;
         let mut dots = Vec::with_capacity(n);
         for _ in 0..n {
@@ -501,7 +529,7 @@ impl<'a> Reader<'a> {
             let d = self.i64s()?;
             dots.push((f, d));
         }
-        Ok(DispatchReply { request_id, shard_epoch, layer, dots })
+        Ok(DispatchReply { request_id, shard_epoch, layer, dots, trace, host_ns })
     }
 
     fn done(&self) -> Result<()> {
@@ -621,12 +649,25 @@ mod tests {
         }
     }
 
+    fn rand_trace(rng: &mut Rng) -> TraceContext {
+        if rng.chance(0.3) {
+            TraceContext::none()
+        } else {
+            TraceContext {
+                trace_id: rng.next_u64(),
+                parent_span: rng.next_u64(),
+                span_id: rng.next_u64(),
+            }
+        }
+    }
+
     fn rand_dispatch_request(rng: &mut Rng) -> DispatchRequest {
         let n_shards = rng.below(5);
         DispatchRequest {
             request_id: rng.next_u64(),
             shard_epoch: rng.next_u64(),
             layer: rng.below(8) as u32,
+            trace: rand_trace(rng),
             shards: Arc::new(
                 (0..n_shards)
                     .map(|f| ShardRef {
@@ -646,6 +687,8 @@ mod tests {
             request_id: rng.next_u64(),
             shard_epoch: rng.next_u64(),
             layer: rng.below(8) as u32,
+            trace: rand_trace(rng),
+            host_ns: rng.next_u64(),
             dots: (0..n)
                 .map(|f| {
                     let extremes = rng.chance(0.3);

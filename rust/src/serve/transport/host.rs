@@ -217,7 +217,18 @@ fn execute(backend: &mut LocalBackend, req: WireRequest) -> (WireReply, bool) {
     }
     match req {
         WireRequest::Describe => (relay(backend.describe(), WireReply::Describe), false),
-        WireRequest::Dispatch(r) => (relay(backend.dispatch(r), WireReply::Dispatch), false),
+        WireRequest::Dispatch(r) => {
+            // re-stamp `host_ns` at the daemon boundary so the client's
+            // `round_trip − host_ns` isolates pure transport: the local
+            // backend's own stamp misses this function's dispatch
+            // bookkeeping
+            let started = std::time::Instant::now();
+            let rep = backend.dispatch(r).map(|mut rep| {
+                rep.host_ns = started.elapsed().as_nanos() as u64;
+                rep
+            });
+            (relay(rep, WireReply::Dispatch), false)
+        }
         WireRequest::Program(r) => (relay(backend.program(r), WireReply::Program), false),
         WireRequest::Release(r) => (relay(backend.release(r), WireReply::Release), false),
         WireRequest::Wear => (relay(backend.wear(), WireReply::Wear), false),

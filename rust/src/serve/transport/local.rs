@@ -29,8 +29,8 @@ use crate::serve::pool::{ChipPool, PoolConfig};
 
 use super::{
     Backend, BackendInfo, DispatchReply, DispatchRequest, FinishReply, OwnedPayload, ProgramReply,
-    ProgramRequest, ReleaseReply, ReleaseRequest, Result, ShardRef, TransportError, WearReply,
-    WireWindows,
+    ProgramRequest, ReleaseReply, ReleaseRequest, Result, ShardRef, TraceContext, TransportError,
+    WearReply, WireWindows,
 };
 
 /// Process-wide incarnation counter: every fabricated pool gets a fresh
@@ -244,6 +244,7 @@ impl Backend for LocalBackend {
     }
 
     fn dispatch(&mut self, req: DispatchRequest) -> Result<DispatchReply> {
+        let started = std::time::Instant::now();
         self.live()?;
         // content validation (same spirit as `check_shard`): the dots
         // kernels index planes/sums by window and assert span-vs-window
@@ -297,6 +298,8 @@ impl Backend for LocalBackend {
             shard_epoch: req.shard_epoch,
             layer: req.layer,
             dots,
+            trace: req.trace,
+            host_ns: started.elapsed().as_nanos() as u64,
         })
     }
 
@@ -450,11 +453,13 @@ mod tests {
                 request_id: 42,
                 shard_epoch: 7,
                 layer: 0,
+                trace: TraceContext { trace_id: 9, parent_span: 1, span_id: 2 },
                 shards: Arc::new(vec![ShardRef { chip: 1, filter: 5, span }]),
                 windows: WireWindows::Binary(pw),
             })
             .unwrap();
         assert_eq!((reply.request_id, reply.shard_epoch, reply.layer), (42, 7, 0));
+        assert_eq!(reply.trace.trace_id, 9, "reply echoes the request's trace context");
         assert_eq!(reply.dots.len(), 1);
         let (f, dots) = &reply.dots[0];
         assert_eq!(*f, 5);
@@ -520,6 +525,7 @@ mod tests {
                 request_id: 1,
                 shard_epoch: 1,
                 layer: 0,
+                trace: TraceContext::none(),
                 shards: Arc::new(vec![ShardRef { chip: 0, filter: 0, span: span2 }]),
                 windows: WireWindows::Binary(pw),
             })
@@ -564,6 +570,7 @@ mod tests {
                 request_id: 1,
                 shard_epoch: 1,
                 layer: 0,
+                trace: TraceContext::none(),
                 shards: Arc::new(vec![ShardRef { chip: 0, filter: 0, span }]),
                 windows: windows.clone(),
             })

@@ -43,6 +43,7 @@ use crate::chip::WearLedger;
 use crate::cim::mapping::RowSpan;
 use crate::cim::vmm::{PackedWindows, PackedWindowsI8};
 use crate::serve::model::ShardPayload;
+use crate::serve::obs::TraceContext;
 
 pub use host::{Host, HostConfig};
 pub use local::LocalBackend;
@@ -160,6 +161,11 @@ pub struct DispatchRequest {
     pub shards: Arc<Vec<ShardRef>>,
     /// The batch's packed activation windows, shared by every shard.
     pub windows: WireWindows,
+    /// Wire-carried trace identity (DESIGN.md §10): hedged duplicates
+    /// share `trace_id` but carry distinct `span_id`s, so a multi-host
+    /// trace stitches the race back together. The null context
+    /// ([`TraceContext::none`]) marks an untraced request.
+    pub trace: TraceContext,
 }
 
 impl PartialEq for DispatchRequest {
@@ -169,6 +175,7 @@ impl PartialEq for DispatchRequest {
             && self.layer == other.layer
             && *self.shards == *other.shards
             && self.windows == other.windows
+            && self.trace == other.trace
     }
 }
 
@@ -183,6 +190,14 @@ pub struct DispatchReply {
     /// `(filter, dots per window)` for every requested shard, in
     /// whatever order the backend's chips finished.
     pub dots: Vec<(u32, Vec<i64>)>,
+    /// Echo of the request's trace context, so the client stitches the
+    /// serving side's span into its own trace by identity.
+    pub trace: TraceContext,
+    /// Wall-clock the serving side spent executing this request,
+    /// nanoseconds — stamped at the host boundary for a remote backend,
+    /// so the client's `round_trip − host_ns` is the pure
+    /// transport/queueing share of the dispatch.
+    pub host_ns: u64,
 }
 
 /// An owned shard payload as the wire carries it — byte-identical to

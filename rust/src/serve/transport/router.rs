@@ -84,6 +84,7 @@ use std::time::{Duration, Instant};
 use anyhow::anyhow;
 
 use crate::serve::model::ModelBundle;
+use crate::serve::obs::{stage, Histogram, Obs, ObsEvent, SpanRecord, Stage, TraceContext};
 use crate::serve::placement::Placement;
 use crate::serve::stats::LatencyHistogram;
 
@@ -92,6 +93,27 @@ use super::{
     ProgramReply, ProgramRequest, ReleaseReply, ReleaseRequest, Result, ShardRef, TransportError,
     WearReply, WireWindows,
 };
+
+/// The router's slice of the observability plane: the shared [`Obs`]
+/// plus stage-histogram handles cached at wiring time (one registry
+/// lookup per [`ShardRouter::set_obs`], not per dispatch).
+struct RouterObs {
+    plane: Arc<Obs>,
+    stage_dispatch: Histogram,
+    stage_execute: Histogram,
+    stage_transport: Histogram,
+}
+
+impl RouterObs {
+    fn new(plane: Arc<Obs>) -> RouterObs {
+        RouterObs {
+            stage_dispatch: plane.metrics.histogram(stage::DISPATCH),
+            stage_execute: plane.metrics.histogram(stage::EXECUTE),
+            stage_transport: plane.metrics.histogram(stage::TRANSPORT),
+            plane,
+        }
+    }
+}
 
 /// When to duplicate a straggling dispatch to a replica.
 #[derive(Clone, Debug)]
@@ -453,6 +475,7 @@ pub struct ShardRouter {
     /// run [`ShardRouter::probe_members`] at the next batch boundary.
     suspect: bool,
     stats: RouterStats,
+    obs: RouterObs,
 }
 
 impl ShardRouter {
@@ -505,6 +528,7 @@ impl ShardRouter {
             epoch_counter: 0,
             suspect: false,
             stats: RouterStats::default(),
+            obs: RouterObs::new(Arc::new(Obs::disabled())),
         };
         for m in 0..router.members.len() {
             let info = match router.call(m, MemberJob::Describe)? {
@@ -640,6 +664,26 @@ impl ShardRouter {
         self.stats.clone()
     }
 
+    /// Attach an observability plane. The router starts with a disabled
+    /// plane; the engine injects its shared one before serving
+    /// (`Engine` and `Server` both do), and tests/benches may inject an
+    /// enabled or disabled plane to observe or to measure overhead.
+    pub fn set_obs(&mut self, plane: Arc<Obs>) {
+        self.obs = RouterObs::new(plane);
+    }
+
+    /// The attached observability plane.
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs.plane
+    }
+
+    /// A fresh root trace context (the null context when the plane is
+    /// disabled) — what a caller threads into
+    /// [`ShardRouter::dispatch_layer`] to get the batch traced.
+    pub fn begin_trace(&self) -> TraceContext {
+        self.obs.plane.trace.new_trace()
+    }
+
     /// Issue the next globally monotone shard epoch. Every
     /// [`TenantRoute`] built against this router should carry a
     /// router-issued epoch, so that "epoch `e` is fenced" is
@@ -739,6 +783,8 @@ impl ShardRouter {
         self.suspect = false;
         let mut out = Vec::with_capacity(self.members.len());
         for m in 0..self.members.len() {
+            let was_quarantined = self.members[m].quarantined;
+            let prev_reconnects = self.members[m].reconnects;
             let state = match self.call(m, MemberJob::Health) {
                 Ok(MemberReply::Health(Ok(h))) => {
                     self.members[m].reconnects = h.reconnects;
@@ -779,6 +825,23 @@ impl ShardRouter {
                 }
                 Ok(_) => unreachable!("health answers health"),
             };
+            // transitions, not observations: a member probed as
+            // quarantined N times emits one Quarantine (exactly-once —
+            // the bus contract)
+            let now = &self.members[m];
+            if now.reconnects > prev_reconnects {
+                self.obs
+                    .plane
+                    .bus
+                    .emit(ObsEvent::Reconnect { member: m, reconnects: now.reconnects });
+            }
+            if now.quarantined && !was_quarantined {
+                self.obs.plane.bus.emit(ObsEvent::Quarantine { member: m });
+            } else if !now.quarantined && was_quarantined {
+                // a transient outage healed by the probe itself lifts
+                // the quarantine without a rejoin_member call
+                self.obs.plane.bus.emit(ObsEvent::Rejoin { member: m });
+            }
             out.push(MemberProbe { member: m, state, reconnects: self.members[m].reconnects });
         }
         self.stats.reconnects = self.members.iter().map(|m| m.reconnects).sum();
@@ -797,7 +860,10 @@ impl ShardRouter {
             MemberReply::Rejoin(r) => r?,
             _ => unreachable!("rejoin answers rejoin"),
         }
-        self.members[member].quarantined = false;
+        if self.members[member].quarantined {
+            self.members[member].quarantined = false;
+            self.obs.plane.bus.emit(ObsEvent::Rejoin { member });
+        }
         Ok(())
     }
 
@@ -1027,6 +1093,15 @@ impl ShardRouter {
     /// `(request id, shard epoch)` — the caller sees exactly one answer
     /// per call.
     ///
+    /// `parent` is the caller's trace context (a batch-level span from
+    /// [`ShardRouter::begin_trace`], or [`TraceContext::none`] to opt
+    /// out): each attempt rides the wire as a child span — a hedged
+    /// duplicate shares the trace but gets its own span id — and the
+    /// winning reply's echoed context stitches the host-boundary
+    /// execute time into the tree. Stage histograms
+    /// ([`stage::DISPATCH`], [`stage::EXECUTE`], [`stage::TRANSPORT`])
+    /// are fed regardless of tracing.
+    ///
     /// # Errors
     ///
     /// [`TransportError::Remote`] when every member of the owning group
@@ -1038,6 +1113,7 @@ impl ShardRouter {
         route: &TenantRoute,
         layer: usize,
         windows: WireWindows,
+        parent: TraceContext,
     ) -> Result<Vec<(u32, Vec<i64>)>> {
         let lr = &route.layers[layer];
         let g = lr.group;
@@ -1061,10 +1137,16 @@ impl ShardRouter {
         // positions rotate through `order`; each entry is a member-local
         // index of the owning group
         let order: Vec<usize> = (0..n).map(|k| live[(start + k) % n]).collect();
-        let request = |local: usize| DispatchRequest {
+        let primary_ctx = if parent.is_traced() {
+            parent.child(self.obs.plane.trace.next_span())
+        } else {
+            TraceContext::none()
+        };
+        let request = |local: usize, ctx: TraceContext| DispatchRequest {
             request_id: req_id,
             shard_epoch: route.epoch,
             layer: layer as u32,
+            trace: ctx,
             shards: Arc::clone(&lr.shards[local]),
             windows: windows.clone(),
         };
@@ -1073,9 +1155,13 @@ impl ShardRouter {
         // is never shed here — shedding belongs to the admission plane)
         let mut primary_pos = None;
         for (k, &local) in order.iter().enumerate() {
-            if self.try_send(members[local], MemberJob::Dispatch(request(local)))? {
+            if self.try_send(members[local], MemberJob::Dispatch(request(local, primary_ctx)))? {
                 if k > 0 {
                     self.stats.spills += 1;
+                    self.obs
+                        .plane
+                        .bus
+                        .emit(ObsEvent::SpillOver { group: g, member: members[local] });
                 }
                 self.outstanding += 1;
                 primary_pos = Some(k);
@@ -1085,7 +1171,10 @@ impl ShardRouter {
         let primary_pos = match primary_pos {
             Some(pos) => pos,
             None => {
-                self.send_blocking(members[order[0]], MemberJob::Dispatch(request(order[0])))?;
+                self.send_blocking(
+                    members[order[0]],
+                    MemberJob::Dispatch(request(order[0], primary_ctx)),
+                )?;
                 self.outstanding += 1;
                 0
             }
@@ -1095,6 +1184,7 @@ impl ShardRouter {
             if n > 1 && self.cfg.hedge.enabled { Some(self.hedge_deadline(g)) } else { None };
         let mut timer_armed = hedge_after.is_some();
         let mut hedge_member: Option<usize> = None;
+        let mut hedge_span: Option<(TraceContext, Instant, usize)> = None;
         let mut in_flight = 1usize;
         loop {
             let received = if timer_armed && hedge_member.is_none() {
@@ -1119,10 +1209,15 @@ impl ShardRouter {
                     }
                     let failed = match result {
                         Ok(rep) if rep.shard_epoch == route.epoch => {
-                            self.groups[g].lat.record(t0.elapsed());
-                            if hedge_member == Some(m) {
+                            let rtt = t0.elapsed();
+                            self.groups[g].lat.record(rtt);
+                            let hedge_won = hedge_member == Some(m);
+                            if hedge_won {
                                 self.stats.hedge_wins += 1;
                             }
+                            self.record_dispatch_spans(
+                                &rep, g, layer, m, t0, rtt, primary_ctx, hedge_span, hedge_won,
+                            );
                             return Ok(rep.dots);
                         }
                         Ok(rep) => {
@@ -1142,10 +1237,19 @@ impl ShardRouter {
                             // the only attempt died: fail over to the
                             // replica instead of surfacing the error
                             let alt = order[(primary_pos + 1) % n];
-                            self.send_blocking(members[alt], MemberJob::Dispatch(request(alt)))?;
+                            let hctx = if parent.is_traced() {
+                                parent.child(self.obs.plane.trace.next_span())
+                            } else {
+                                TraceContext::none()
+                            };
+                            self.send_blocking(
+                                members[alt],
+                                MemberJob::Dispatch(request(alt, hctx)),
+                            )?;
                             self.outstanding += 1;
                             self.stats.hedges_fired += 1;
                             hedge_member = Some(members[alt]);
+                            hedge_span = Some((hctx, Instant::now(), members[alt]));
                             in_flight = 1;
                         } else {
                             return Err(failed);
@@ -1157,10 +1261,16 @@ impl ShardRouter {
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     let alt = order[(primary_pos + 1) % n];
-                    if self.try_send(members[alt], MemberJob::Dispatch(request(alt)))? {
+                    let hctx = if parent.is_traced() {
+                        parent.child(self.obs.plane.trace.next_span())
+                    } else {
+                        TraceContext::none()
+                    };
+                    if self.try_send(members[alt], MemberJob::Dispatch(request(alt, hctx)))? {
                         self.outstanding += 1;
                         self.stats.hedges_fired += 1;
                         hedge_member = Some(members[alt]);
+                        hedge_span = Some((hctx, Instant::now(), members[alt]));
                         in_flight += 1;
                     } else {
                         // replica saturated: stop hedging this request
@@ -1170,6 +1280,65 @@ impl ShardRouter {
                 Err(RecvTimeoutError::Disconnected) => return Err(TransportError::Closed),
             }
         }
+    }
+
+    /// Feed the stage histograms and (for traced requests) record the
+    /// dispatch/hedge/execute spans of one answered dispatch. The
+    /// execute span hangs under the *winning attempt's* echoed context —
+    /// over TCP that context crossed the wire twice, which is exactly
+    /// the multi-host stitch.
+    #[allow(clippy::too_many_arguments)]
+    fn record_dispatch_spans(
+        &self,
+        rep: &DispatchReply,
+        group: usize,
+        layer: usize,
+        winner: usize,
+        t0: Instant,
+        rtt: Duration,
+        primary_ctx: TraceContext,
+        hedge_span: Option<(TraceContext, Instant, usize)>,
+        hedge_won: bool,
+    ) {
+        // host_ns is the serving side's own clock; clamp to the observed
+        // round trip so `transport = rtt − execute` can never underflow
+        let host = Duration::from_nanos(rep.host_ns).min(rtt);
+        self.obs.stage_dispatch.record(rtt);
+        self.obs.stage_execute.record(host);
+        self.obs.stage_transport.record(rtt - host);
+        if !primary_ctx.is_traced() {
+            return;
+        }
+        let log = &self.obs.plane.trace;
+        log.record(SpanRecord {
+            ctx: primary_ctx,
+            stage: Stage::Dispatch,
+            note: format!(
+                "layer={layer} group={group} member={winner}{}",
+                if hedge_won { " hedge-won" } else { "" }
+            ),
+            start: t0,
+            dur: rtt,
+        });
+        if let Some((hctx, ht, hm)) = hedge_span {
+            log.record(SpanRecord {
+                ctx: hctx,
+                stage: Stage::Hedge,
+                note: format!(
+                    "duplicate member={hm}{}",
+                    if hedge_won { " won" } else { " discarded" }
+                ),
+                start: ht,
+                dur: ht.elapsed(),
+            });
+        }
+        log.record(SpanRecord {
+            ctx: rep.trace.child(log.next_span()),
+            stage: Stage::Execute,
+            note: format!("member={winner} host_ns={}", rep.host_ns),
+            start: t0 + (rtt - host),
+            dur: host,
+        });
     }
 
     // -- migration (the fence machine; see the module docs) ----------------
@@ -1234,6 +1403,7 @@ impl ShardRouter {
     /// migration instead of erroring (the fleet may heal later).
     pub fn migrate_layer(
         &mut self,
+        layer: usize,
         old_epoch: u64,
         from_group: usize,
         old_shards: &[Vec<Option<ShardRef>>],
@@ -1247,6 +1417,7 @@ impl ShardRouter {
             "old shard table shape vs source group"
         );
         self.stats.migrations_started += 1;
+        self.obs.plane.bus.emit(ObsEvent::MigrationStarted { layer, from_group, to_group });
         let dst_members = self.groups[to_group].members.clone();
         let mut stuck_retries = 0usize;
         // -- program: every destination member gets every live payload
@@ -1286,12 +1457,14 @@ impl ShardRouter {
             if failed {
                 self.rollback_partial(&dst_members, &new_shards);
                 self.stats.migrations_aborted += 1;
+                self.obs.plane.bus.emit(ObsEvent::MigrationAborted { layer });
                 return Ok(MigrationOutcome::Aborted { stuck_retries });
             }
         }
         // -- fence: the destination copies are now authoritative
         let epoch = self.next_epoch();
         self.stats.migrations_fenced += 1;
+        self.obs.plane.bus.emit(ObsEvent::MigrationFenced { layer, epoch: old_epoch });
         // -- drain: no pre-cutover request survives this call
         self.fence_and_drain(old_epoch)?;
         // -- free: the source rows can no longer be addressed by anyone
@@ -1304,6 +1477,7 @@ impl ShardRouter {
             }
         }
         self.stats.migrations_completed += 1;
+        self.obs.plane.bus.emit(ObsEvent::MigrationCompleted { layer, epoch });
         Ok(MigrationOutcome::Completed { shards: new_shards, epoch, stuck_retries })
     }
 
@@ -1354,6 +1528,9 @@ mod tests {
         served: Arc<AtomicU64>,
         /// Rows released onto this backend (the free/rollback steps).
         released: Arc<AtomicU64>,
+        /// Trace contexts of every dispatch this backend received, in
+        /// arrival order — what the hedge-trace test inspects.
+        traces: Arc<std::sync::Mutex<Vec<TraceContext>>>,
         next_row: usize,
         dot: i64,
     }
@@ -1378,11 +1555,14 @@ mod tests {
                 std::thread::sleep(self.delay);
             }
             self.served.fetch_add(1, Ordering::SeqCst);
+            self.traces.lock().unwrap().push(req.trace);
             Ok(DispatchReply {
                 request_id: req.request_id,
                 shard_epoch: req.shard_epoch,
                 layer: req.layer,
                 dots: req.shards.iter().map(|s| (s.filter, vec![self.dot])).collect(),
+                trace: req.trace,
+                host_ns: 1,
             })
         }
 
@@ -1482,7 +1662,7 @@ mod tests {
         let route = route_one_layer(2);
         // round-robin starts at the slow member; the 5ms deadline fires
         // and the instant replica answers first
-        let dots = router.dispatch_layer(&route, 0, empty_windows()).unwrap();
+        let dots = router.dispatch_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap();
         assert_eq!(dots, vec![(0, vec![7])]);
         let stats = router.stats();
         assert_eq!(stats.dispatches, 1);
@@ -1514,7 +1694,7 @@ mod tests {
         )
         .unwrap();
         let route = route_one_layer(2);
-        let dots = router.dispatch_layer(&route, 0, empty_windows()).unwrap();
+        let dots = router.dispatch_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap();
         assert_eq!(dots, vec![(0, vec![3])]);
         assert_eq!(router.stats().hedges_fired, 1, "failover counts as a hedge");
         router.finish().unwrap();
@@ -1531,11 +1711,11 @@ mod tests {
         ))
         .unwrap();
         let route = route_one_layer(1);
-        let err = router.dispatch_layer(&route, 0, empty_windows()).unwrap_err();
+        let err = router.dispatch_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap_err();
         assert!(matches!(err, TransportError::Remote(_)));
         // the next dispatch works again
         assert_eq!(
-            router.dispatch_layer(&route, 0, empty_windows()).unwrap(),
+            router.dispatch_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap(),
             vec![(0, vec![0])]
         );
         router.finish().unwrap();
@@ -1567,7 +1747,7 @@ mod tests {
         .unwrap();
         let mut route = route_one_layer(2);
         route.epoch = router.next_epoch();
-        let dots = router.dispatch_layer(&route, 0, empty_windows()).unwrap();
+        let dots = router.dispatch_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap();
         assert_eq!(dots, vec![(0, vec![9])]);
         // exactly one attempt is still unanswered (the hedge loser)
         router.fence_and_drain(route.epoch).unwrap();
@@ -1610,7 +1790,7 @@ mod tests {
             None, // a pruned filter stays pruned through the move
         ]];
         let payloads = vec![Some(OwnedPayload::Binary(vec![true; 35])), None];
-        match router.migrate_layer(old_epoch, 0, &old_shards, 1, &payloads).unwrap() {
+        match router.migrate_layer(0, old_epoch, 0, &old_shards, 1, &payloads).unwrap() {
             MigrationOutcome::Completed { shards, epoch, stuck_retries } => {
                 assert!(epoch > old_epoch, "the cutover must advance the epoch");
                 assert_eq!(stuck_retries, 0);
@@ -1654,7 +1834,7 @@ mod tests {
         let span = crate::cim::mapping::RowSpan { slots: vec![(0, 0)], tail_width: 7, len: 7 };
         let old_shards = vec![vec![Some(ShardRef { chip: 0, filter: 0, span: span.clone() })]];
         let payloads = vec![Some(OwnedPayload::Binary(vec![true; 7]))];
-        match router.migrate_layer(old_epoch, 0, &old_shards, 1, &payloads).unwrap() {
+        match router.migrate_layer(0, old_epoch, 0, &old_shards, 1, &payloads).unwrap() {
             MigrationOutcome::Aborted { .. } => {}
             MigrationOutcome::Completed { .. } => {
                 panic!("a destination refusal must abort the migration")
@@ -1693,7 +1873,7 @@ mod tests {
         let old_shards = vec![vec![Some(ShardRef { chip: 0, filter: 0, span })]];
         let payloads = vec![Some(OwnedPayload::Binary(vec![true; 3]))];
         assert!(!router.has_suspects());
-        match router.migrate_layer(old_epoch, 0, &old_shards, 1, &payloads).unwrap() {
+        match router.migrate_layer(0, old_epoch, 0, &old_shards, 1, &payloads).unwrap() {
             MigrationOutcome::Aborted { .. } => {}
             MigrationOutcome::Completed { .. } => {
                 panic!("a dying destination member must abort the migration")
@@ -1724,6 +1904,8 @@ mod tests {
                     shard_epoch: req.shard_epoch,
                     layer: req.layer,
                     dots: req.shards.iter().map(|s| (s.filter, vec![5])).collect(),
+                    trace: req.trace,
+                    host_ns: 1,
                 })
             }
             fn program(&mut self, _req: ProgramRequest) -> Result<ProgramReply> {
@@ -1763,26 +1945,158 @@ mod tests {
             cfg,
         )
         .unwrap();
+        router.set_obs(Arc::new(Obs::new()));
+        let sub = router.obs().bus.subscribe();
         let probes = router.probe_members();
         assert_eq!(probes[0].state, MemberState::Bounced);
         assert_eq!(probes[0].reconnects, 3);
         assert_eq!(probes[1].state, MemberState::Healthy);
         assert!(router.is_quarantined(0));
         assert_eq!(router.stats().reconnects, 3);
+        let events = sub.drain();
+        let kinds: Vec<&str> = events.iter().map(|r| r.event.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec!["reconnect", "quarantine"],
+            "a bounce surfaces the reconnect, then the quarantine"
+        );
+        assert_eq!(events[0].event, ObsEvent::Reconnect { member: 0, reconnects: 3 });
+        assert_eq!(events[1].event, ObsEvent::Quarantine { member: 0 });
+        // probing again is an observation, not a transition
+        let _ = router.probe_members();
+        assert!(sub.drain().is_empty(), "repeat probes emit nothing (exactly-once)");
         // every dispatch lands on the healthy replica while member 0 is out
         let route = route_one_layer(2);
         for _ in 0..4 {
-            assert_eq!(router.dispatch_layer(&route, 0, empty_windows()).unwrap().len(), 1);
+            assert_eq!(router.dispatch_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap().len(), 1);
         }
         assert_eq!(bounced_served.load(Ordering::SeqCst), 0, "quarantined member never serves");
         assert_eq!(healthy_served.load(Ordering::SeqCst), 4);
         // after (re-programming and) rejoining, the rotation includes it again
         router.rejoin_member(0).unwrap();
         assert!(!router.is_quarantined(0));
+        let events = sub.drain();
+        let kinds: Vec<&str> = events.iter().map(|r| r.event.kind()).collect();
+        assert_eq!(kinds, vec!["rejoin"], "quarantine always precedes rejoin");
+        assert_eq!(events[0].event, ObsEvent::Rejoin { member: 0 });
         for _ in 0..4 {
-            assert_eq!(router.dispatch_layer(&route, 0, empty_windows()).unwrap().len(), 1);
+            assert_eq!(router.dispatch_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap().len(), 1);
         }
         assert!(bounced_served.load(Ordering::SeqCst) > 0, "rejoined member serves again");
+        router.finish().unwrap();
+    }
+
+    #[test]
+    fn hedged_duplicates_share_trace_with_distinct_span_ids() {
+        let slow_traces = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let fast_traces = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let cfg = RouterConfig {
+            hedge: HedgeConfig {
+                after: Some(Duration::from_millis(5)),
+                ..HedgeConfig::default()
+            },
+            ..RouterConfig::default()
+        };
+        let slow = Box::new(MockBackend {
+            delay: Duration::from_millis(100),
+            traces: Arc::clone(&slow_traces),
+            dot: 7,
+            ..MockBackend::default()
+        });
+        let fast = Box::new(MockBackend {
+            traces: Arc::clone(&fast_traces),
+            dot: 7,
+            ..MockBackend::default()
+        });
+        let mut router = ShardRouter::replicated(vec![slow, fast], cfg).unwrap();
+        router.set_obs(Arc::new(Obs::new()));
+        let parent = router.begin_trace();
+        assert!(parent.is_traced());
+        let route = route_one_layer(2);
+        let dots = router.dispatch_layer(&route, 0, empty_windows(), parent).unwrap();
+        assert_eq!(dots, vec![(0, vec![7])]);
+        // wait out the straggler, then inspect what each member saw
+        std::thread::sleep(Duration::from_millis(150));
+        let a = slow_traces.lock().unwrap().clone();
+        let b = fast_traces.lock().unwrap().clone();
+        assert_eq!((a.len(), b.len()), (1, 1), "one attempt per member");
+        assert_eq!(a[0].trace_id, parent.trace_id, "primary shares the trace");
+        assert_eq!(b[0].trace_id, parent.trace_id, "duplicate shares the trace");
+        assert_eq!(a[0].parent_span, parent.span_id);
+        assert_eq!(b[0].parent_span, parent.span_id);
+        assert_ne!(a[0].span_id, b[0].span_id, "each attempt is its own span");
+        // the trace log retains the dispatch, hedge, and execute spans
+        let spans = router.obs().trace.trace(parent.trace_id);
+        let stages: Vec<&str> = spans.iter().map(|s| s.stage.label()).collect();
+        assert!(stages.contains(&"dispatch"), "{stages:?}");
+        assert!(stages.contains(&"hedge"), "{stages:?}");
+        assert!(stages.contains(&"execute"), "{stages:?}");
+        // and the stage histograms saw the round trip
+        let snap = router.obs().snapshot().render();
+        assert!(snap.contains("stage.dispatch"), "{snap}");
+        router.finish().unwrap();
+    }
+
+    #[test]
+    fn aborted_migration_emits_started_then_aborted_never_completed() {
+        let src = Box::new(MockBackend::default());
+        let dst = Box::new(MockBackend { fail_programs: 64, ..MockBackend::default() });
+        let mut router =
+            ShardRouter::new(vec![vec![src], vec![dst]], RouterConfig::default()).unwrap();
+        router.set_obs(Arc::new(Obs::new()));
+        let sub = router.obs().bus.subscribe();
+        let old_epoch = router.next_epoch();
+        let span = crate::cim::mapping::RowSpan { slots: vec![(0, 0)], tail_width: 7, len: 7 };
+        let old_shards = vec![vec![Some(ShardRef { chip: 0, filter: 0, span })]];
+        let payloads = vec![Some(OwnedPayload::Binary(vec![true; 7]))];
+        match router.migrate_layer(3, old_epoch, 0, &old_shards, 1, &payloads).unwrap() {
+            MigrationOutcome::Aborted { .. } => {}
+            MigrationOutcome::Completed { .. } => panic!("scripted refusal must abort"),
+        }
+        let events = sub.drain();
+        let kinds: Vec<&str> = events.iter().map(|r| r.event.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec!["migration_started", "migration_aborted"],
+            "an aborted migration emits Started then Aborted and never Completed/Fenced"
+        );
+        assert_eq!(
+            events[0].event,
+            ObsEvent::MigrationStarted { layer: 3, from_group: 0, to_group: 1 }
+        );
+        assert_eq!(events[1].event, ObsEvent::MigrationAborted { layer: 3 });
+        for (i, r) in events.iter().enumerate() {
+            assert_eq!(r.seq, i as u64, "per-subscriber seq is gapless");
+        }
+        router.finish().unwrap();
+    }
+
+    #[test]
+    fn completed_migration_emits_the_full_fence_sequence() {
+        let src = Box::new(MockBackend::default());
+        let dst = Box::new(MockBackend::default());
+        let mut router =
+            ShardRouter::new(vec![vec![src], vec![dst]], RouterConfig::default()).unwrap();
+        router.set_obs(Arc::new(Obs::new()));
+        let sub = router.obs().bus.subscribe();
+        let old_epoch = router.next_epoch();
+        let span = crate::cim::mapping::RowSpan { slots: vec![(0, 0)], tail_width: 5, len: 5 };
+        let old_shards = vec![vec![Some(ShardRef { chip: 0, filter: 0, span })]];
+        let payloads = vec![Some(OwnedPayload::Binary(vec![true; 5]))];
+        let epoch = match router.migrate_layer(1, old_epoch, 0, &old_shards, 1, &payloads).unwrap()
+        {
+            MigrationOutcome::Completed { epoch, .. } => epoch,
+            MigrationOutcome::Aborted { .. } => panic!("ideal fleet must complete"),
+        };
+        let events = sub.drain();
+        let kinds: Vec<&str> = events.iter().map(|r| r.event.kind()).collect();
+        assert_eq!(kinds, vec!["migration_started", "migration_fenced", "migration_completed"]);
+        assert_eq!(
+            events[1].event,
+            ObsEvent::MigrationFenced { layer: 1, epoch: old_epoch },
+            "the fence names the epoch it retired"
+        );
+        assert_eq!(events[2].event, ObsEvent::MigrationCompleted { layer: 1, epoch });
         router.finish().unwrap();
     }
 }

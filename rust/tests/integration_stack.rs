@@ -3,6 +3,11 @@
 //! end-to-end training run exercises runtime + coordinator + pruning.
 //! Tests that need AOT artifacts skip gracefully when they are missing.
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use std::path::Path;
 use std::time::Duration;
 
@@ -681,6 +686,7 @@ fn engine_cfg(chips: usize, seed: u64, max_batch: usize) -> EngineConfig {
         },
         cache: CacheConfig::default(),
         rebalance: RebalanceConfig::default(),
+        obs: true,
     }
 }
 

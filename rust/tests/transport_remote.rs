@@ -12,6 +12,11 @@
 //! CI runs this file as its own job (`cargo test --test
 //! transport_remote`) under a timeout.
 
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -67,6 +72,7 @@ fn engine_cfg() -> EngineConfig {
         },
         cache: CacheConfig::default(),
         rebalance: RebalanceConfig { every_batches: 2, max_moves: 1, group_moves: 0 },
+        obs: true,
     }
 }
 
@@ -327,6 +333,11 @@ fn host_pool_survives_a_dropped_connection() {
             request_id: 1,
             shard_epoch: 1,
             layer: 0,
+            trace: rram_cim::serve::TraceContext {
+                trace_id: 0xace,
+                parent_span: 3,
+                span_id: 4,
+            },
             shards: Arc::new(vec![ShardRef { chip: 0, filter: 0, span }]),
             windows: WireWindows::Binary(pw),
         })
@@ -334,6 +345,12 @@ fn host_pool_survives_a_dropped_connection() {
     let want: Vec<i64> =
         flat.chunks(bits.len()).map(|w| vmm::binary_dot_ref(&bits, w)).collect();
     assert_eq!(reply.dots, vec![(0, want)], "cross-session dots diverged");
+    assert_eq!(
+        (reply.trace.trace_id, reply.trace.parent_span, reply.trace.span_id),
+        (0xace, 3, 4),
+        "trace context must survive the TCP frame round-trip"
+    );
+    assert!(reply.host_ns > 0, "the host stamps its boundary time on the reply");
     assert_eq!(second.reconnects(), 0, "nothing dropped mid-call here");
     second.finish().unwrap();
     host.join();
