@@ -14,18 +14,22 @@
 #![allow(clippy::disallowed_macros)]
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use rram_cim::bench::print_table;
+use rram_cim::chip::{Chip, ChipConfig};
+use rram_cim::cim::mapping::{store_bits, store_int8, RowAllocator};
+use rram_cim::cim::vmm;
 use rram_cim::nn::data::{mnist, modelnet, Dataset};
 use rram_cim::nn::pointnet::GroupingConfig;
 use rram_cim::serve::transport::{Backend, Host, HostConfig, LocalBackend, RemoteBackend};
 use rram_cim::serve::{
     AdmissionConfig, BatcherConfig, CacheConfig, Engine, EngineConfig, HedgeConfig, ModelBundle,
-    PointNetBundle, PoolConfig, RebalanceConfig, RouterConfig, Server, ServerConfig, ShardRouter,
-    TenantConfig,
+    PipelineConfig, PointNetBundle, PoolConfig, RebalanceConfig, RouterConfig, Server,
+    ServerConfig, ShardRouter, TenantConfig,
 };
 use rram_cim::util::json::Json;
+use rram_cim::util::rng::Rng;
 
 const MNIST_REQUESTS: usize = 96;
 const POINTNET_REQUESTS: usize = 24;
@@ -208,18 +212,203 @@ fn main() {
     // --- transport: the same tenant over local / remote / hedged ---
     transport_table(&pruned, &images);
 
+    // --- dispatch pipeline: serial vs depth-bounded overlap ---
+    let pipeline_speedup = pipeline_table(&dense, &images);
+
+    // --- VMM kernels: chunked hot path vs the scalar oracle ---
+    let (simd_binary, simd_int8) = kernel_table();
+
     // --- observability overhead + machine-readable export ---
-    obs_overhead_and_export(&pruned, &images);
+    obs_overhead_and_export(&pruned, &images, pipeline_speedup, simd_binary, simd_int8);
+}
+
+/// The dense MNIST tenant on one local 8-chip fleet, served serial
+/// (`depth == 1`, the pre-pipeline behavior) vs pipelined (`depth ==
+/// 4`): pack/dispatch overlap is the whole difference, and every answer
+/// is checked bit-exact against the software reference at every depth.
+/// Returns the depth-4 / depth-1 throughput ratio.
+fn pipeline_table(model: &ModelBundle, images: &Dataset) -> f64 {
+    let cfg = EngineConfig {
+        pool: PoolConfig::default(),
+        admission: AdmissionConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+            quantum: 32,
+        },
+        cache: CacheConfig { capacity: 0 }, // every request hits silicon
+        rebalance: RebalanceConfig::default(),
+        obs: true,
+    };
+    let reference: Vec<Vec<f32>> =
+        (0..images.len()).map(|i| model.reference_logits(images.sample(i))).collect();
+    let mut rows = Vec::new();
+    let mut inf_s_at = [0.0f64; 2];
+    for (di, depth) in [1usize, 4].into_iter().enumerate() {
+        let mut best: Option<rram_cim::serve::EngineReport> = None;
+        let mut best_inf = 0.0f64;
+        for rep in 0..3u64 {
+            let pool = PoolConfig { chips: 8, seed: 0x919e + rep, ..PoolConfig::default() };
+            let backend = LocalBackend::from_pool_config(&pool).expect("pool");
+            let router = ShardRouter::new(
+                vec![vec![Box::new(backend) as Box<dyn Backend>]],
+                RouterConfig {
+                    pipeline: PipelineConfig { depth },
+                    ..RouterConfig::default()
+                },
+            )
+            .expect("router");
+            let engine = Engine::start_with_router(
+                vec![TenantConfig::new("mnist", model.clone())],
+                router,
+                &cfg,
+            )
+            .expect("the dense tenant fits an 8-chip pool");
+            let mut pending = Vec::with_capacity(MNIST_REQUESTS);
+            for i in 0..MNIST_REQUESTS {
+                let k = i % images.len();
+                pending.push((k, engine.submit(0, images.sample(k).to_vec())));
+            }
+            for (i, rx) in pending {
+                let resp = rx.recv().expect("pipeline run answered every request");
+                assert_eq!(resp.logits, reference[i], "depth {depth} broke bit-exactness");
+            }
+            let report = engine.shutdown();
+            assert_eq!(report.answered() as usize, MNIST_REQUESTS, "lost requests");
+            assert!(
+                report.transport.peak_inflight <= depth as u64,
+                "depth bound exceeded: {} > {depth}",
+                report.transport.peak_inflight
+            );
+            if report.inferences_per_sec() >= best_inf {
+                best_inf = report.inferences_per_sec();
+                best = Some(report);
+            }
+        }
+        let report = best.expect("three reps ran");
+        inf_s_at[di] = report.inferences_per_sec();
+        let t = &report.tenants[0];
+        rows.push(vec![
+            depth.to_string(),
+            format!("{:.1}", report.inferences_per_sec()),
+            format!("{:.2}", t.latency.p50_ms()),
+            format!("{:.2}", t.latency.p99_ms()),
+            report.transport.peak_inflight.to_string(),
+        ]);
+    }
+    let speedup = inf_s_at[1] / inf_s_at[0];
+    print_table(
+        &format!(
+            "serve: pipelined vs serial dispatch, dense MNIST tenant, local 8-chip fleet \
+             ({MNIST_REQUESTS} requests, best of 3, bit-exact at every depth)"
+        ),
+        &["depth", "inf/s", "p50 ms", "p99 ms", "peak inflight"],
+        &rows,
+    );
+    println!("\npipeline: depth 4 vs depth 1 throughput: {speedup:.2}x");
+    speedup
+}
+
+/// The chunked (SIMD-shaped) VMM kernels vs their scalar oracles on one
+/// chip, identical sensed span and packed windows: the dots must match
+/// bit for bit, and the ratio is the kernel-only speedup (the sense +
+/// energy accounting cost is paid identically by both arms). Returns
+/// (binary, int8) speedups.
+fn kernel_table() -> (f64, f64) {
+    const WINDOWS: usize = 512;
+    const REPS: usize = 5;
+    let mut rng = Rng::new(0x51dd);
+    let mut chip = Chip::new(ChipConfig::default(), &mut rng.fork(1));
+    chip.form();
+    let mut alloc = RowAllocator::for_chip(&chip);
+
+    // binary arm: one 256-cell filter, WINDOWS activation windows
+    let bits: Vec<bool> = (0..256).map(|i| (i * 7) % 3 != 0).collect();
+    let b_span = alloc.alloc(bits.len()).expect("rows for the binary span");
+    assert_eq!(store_bits(&mut chip, &b_span, &bits), 0, "ideal store");
+    let widths = b_span.seg_widths(chip.cfg().data_cols());
+    let flat: Vec<u8> = (0..WINDOWS * bits.len()).map(|i| (i * 31 % 256) as u8).collect();
+    let pw = vmm::pack_windows(&flat, &widths).expect("span-derived geometry");
+    let ps = vmm::sense_span_packed(&mut chip, &b_span);
+    let scalar_dots = vmm::binary_dots_scalar(&ps, &pw);
+    let mut scalar_s = f64::INFINITY;
+    let mut simd_s = f64::INFINITY;
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        let ps = vmm::sense_span_packed(&mut chip, &b_span);
+        let d = vmm::binary_dots_scalar(&ps, &pw);
+        scalar_s = scalar_s.min(t0.elapsed().as_secs_f64());
+        assert_eq!(d, scalar_dots);
+        let t0 = Instant::now();
+        let d = vmm::binary_dots_batched(&mut chip, &b_span, &pw);
+        simd_s = simd_s.min(t0.elapsed().as_secs_f64());
+        assert_eq!(d, scalar_dots, "chunked binary kernel diverged from the scalar oracle");
+    }
+    let binary_speedup = scalar_s / simd_s;
+    let mdots = |s: f64| WINDOWS as f64 / s / 1e6;
+    let mut rows = vec![vec![
+        "binary".into(),
+        WINDOWS.to_string(),
+        bits.len().to_string(),
+        format!("{:.2}", mdots(scalar_s)),
+        format!("{:.2}", mdots(simd_s)),
+        format!("{binary_speedup:.2}x"),
+    ]];
+
+    // INT8 arm: one 64-weight (256-cell) filter, WINDOWS windows
+    let weights: Vec<i8> = (0..64i32).map(|i| ((i * 37) % 255 - 127) as i8).collect();
+    let i_span = alloc.alloc(4 * weights.len()).expect("rows for the INT8 span");
+    assert_eq!(store_int8(&mut chip, &i_span, &weights), 0, "ideal store");
+    let widths = i_span.seg_widths(chip.cfg().data_cols());
+    let flat: Vec<i8> =
+        (0..(WINDOWS * weights.len()) as i32).map(|i| ((i * 53) % 255 - 127) as i8).collect();
+    let pw = vmm::pack_windows_i8(&flat, &widths).expect("span-derived geometry");
+    let ps = vmm::sense_span_2bit(&mut chip, &i_span);
+    let scalar_dots = vmm::int8_dots_scalar(&ps, &pw);
+    let mut scalar_s = f64::INFINITY;
+    let mut simd_s = f64::INFINITY;
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        let ps = vmm::sense_span_2bit(&mut chip, &i_span);
+        let d = vmm::int8_dots_scalar(&ps, &pw);
+        scalar_s = scalar_s.min(t0.elapsed().as_secs_f64());
+        assert_eq!(d, scalar_dots);
+        let t0 = Instant::now();
+        let d = vmm::int8_dots_batched(&mut chip, &i_span, &pw);
+        simd_s = simd_s.min(t0.elapsed().as_secs_f64());
+        assert_eq!(d, scalar_dots, "chunked INT8 kernel diverged from the scalar oracle");
+    }
+    let int8_speedup = scalar_s / simd_s;
+    rows.push(vec![
+        "int8".into(),
+        WINDOWS.to_string(),
+        weights.len().to_string(),
+        format!("{:.2}", mdots(scalar_s)),
+        format!("{:.2}", mdots(simd_s)),
+        format!("{int8_speedup:.2}x"),
+    ]);
+    print_table(
+        "cim: batched VMM kernels, chunked hot path vs scalar oracle (best of 5, bit-exact)",
+        &["kernel", "windows", "cells", "scalar Mdot/s", "chunked Mdot/s", "speedup"],
+        &rows,
+    );
+    (binary_speedup, int8_speedup)
 }
 
 /// Measure the observability plane's cost on the local path (the
 /// tightest loop — no TCP latency to hide behind): the same pruned
 /// MNIST tenant served with the full plane (tracing + event bus +
 /// metrics, a live subscriber attached) vs [`EngineConfig::obs`] off.
-/// Best-of-3 per arm smooths host-scheduler noise. The measurement and
-/// the obs-on run's full metrics snapshot are written to
-/// `BENCH_serve.json` — the artifact CI uploads and gates on.
-fn obs_overhead_and_export(model: &ModelBundle, images: &Dataset) {
+/// Best-of-3 per arm smooths host-scheduler noise. The measurement, the
+/// pipeline and kernel speedups from the tables above, and the obs-on
+/// run's full metrics snapshot are written to `BENCH_serve.json` — the
+/// artifact CI uploads and gates on.
+fn obs_overhead_and_export(
+    model: &ModelBundle,
+    images: &Dataset,
+    pipeline_speedup: f64,
+    simd_binary: f64,
+    simd_int8: f64,
+) {
     let run = |obs: bool| -> (f64, Option<Json>) {
         let mut best = 0.0f64;
         let mut snap = None;
@@ -271,7 +460,10 @@ fn obs_overhead_and_export(model: &ModelBundle, images: &Dataset) {
             .set("throughput_inf_s", on_inf_s)
             .set("obs_on_inf_s", on_inf_s)
             .set("obs_off_inf_s", off_inf_s)
-            .set("obs_overhead_pct", overhead_pct),
+            .set("obs_overhead_pct", overhead_pct)
+            .set("pipeline_speedup_local_dense", pipeline_speedup)
+            .set("simd_speedup_binary", simd_binary)
+            .set("simd_speedup_int8", simd_int8),
     );
     let body = out.render() + "\n";
     std::fs::write("BENCH_serve.json", &body).expect("write BENCH_serve.json");

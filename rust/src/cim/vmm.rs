@@ -138,15 +138,58 @@ pub struct PackedWindows {
     pub sum_x: Vec<i64>,
 }
 
+/// Rejected packing geometry: a degenerate span (zero cells — e.g. a
+/// fully-pruned layer whose filters hold no live weights) or a window
+/// buffer that does not tile the span. Degenerate geometry used to
+/// panic the packer (and with it the dispatching worker); it is now a
+/// clean error the transport seam can relay.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackError(String);
+
+impl std::fmt::Display for PackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "window packing rejected: {}", self.0)
+    }
+}
+
+impl std::error::Error for PackError {}
+
+/// Validate a span's segment geometry for packing: at least one cell,
+/// every segment 1..=64 cells (one u64 plane word per segment).
+fn check_geometry(seg_widths: &[usize]) -> Result<usize, PackError> {
+    let len: usize = seg_widths.iter().sum();
+    if len == 0 {
+        return Err(PackError(format!(
+            "span holds no cells ({} segments) — a fully-pruned layer has nothing to dispatch",
+            seg_widths.len()
+        )));
+    }
+    if seg_widths.iter().any(|&w| w == 0 || w > 64) {
+        return Err(PackError("segment widths must be 1..=64 cells".into()));
+    }
+    Ok(len)
+}
+
 /// Pack u8 activation windows into bit planes aligned to a span's row
 /// segments. `flat` holds consecutive windows of `sum(seg_widths)` cells
 /// each (exactly the layout [`crate::serve::model::im2col_u8`] emits),
 /// so the serving hot path packs straight from the im2col buffer with no
 /// per-window allocation.
-pub fn pack_windows(flat: &[u8], seg_widths: &[usize]) -> PackedWindows {
+///
+/// # Errors
+///
+/// [`PackError`] on degenerate geometry: a zero-cell span (a
+/// fully-pruned layer), a zero-width or over-wide segment, or a `flat`
+/// buffer that does not tile the span.
+pub fn pack_windows(flat: &[u8], seg_widths: &[usize]) -> Result<PackedWindows, PackError> {
     let n_seg = seg_widths.len();
-    let len: usize = seg_widths.iter().sum();
-    assert!(len > 0 && flat.len() % len == 0, "flat windows vs span segments");
+    let len = check_geometry(seg_widths)?;
+    if flat.len() % len != 0 {
+        return Err(PackError(format!(
+            "flat window buffer of {} cells does not tile a {len}-cell span",
+            flat.len()
+        )));
+    }
     let n_windows = flat.len() / len;
     let mut planes = vec![0u64; n_windows * 8 * n_seg];
     let mut sum_x = Vec::with_capacity(n_windows);
@@ -168,19 +211,18 @@ pub fn pack_windows(flat: &[u8], seg_widths: &[usize]) -> PackedWindows {
             }
         }
     }
-    PackedWindows {
+    Ok(PackedWindows {
         n_windows,
         seg_widths: seg_widths.to_vec(),
         planes,
         sum_x,
-    }
+    })
 }
 
-/// Batched binary dots: sense the span once, stream every packed window
-/// bit-serially (8 planes) against it in AND/popcount mode. Returns one
-/// signed dot per window, bit-exact equal to [`binary_dot_u8`].
-pub fn binary_dots_batched(chip: &mut Chip, span: &RowSpan, pw: &PackedWindows) -> Vec<i64> {
-    let ps = sense_span_packed(chip, span);
+/// Scalar reference kernel for the batched binary dots — the property
+/// tests' oracle for the chunked hot path. One signed dot per window,
+/// computed with the plain per-segment popcount loop.
+pub fn binary_dots_scalar(ps: &PackedSpan, pw: &PackedWindows) -> Vec<i64> {
     let n_seg = pw.seg_widths.len();
     assert_eq!(ps.words.len(), n_seg, "span geometry vs packed windows");
     let mut out = Vec::with_capacity(pw.n_windows);
@@ -196,11 +238,74 @@ pub fn binary_dots_batched(chip: &mut Chip, span: &RowSpan, pw: &PackedWindows) 
         }
         out.push(2 * s - pw.sum_x[wi]);
     }
+    out
+}
+
+/// The chunked hot-path kernel: each window's 8 bit planes form one
+/// contiguous `8 * n_seg` slab, ANDed against the span words (repeated
+/// once per plane) with four independent accumulators so the AND +
+/// popcount + shift chain runs as straight-line u64 work the compiler
+/// can keep in vector registers. Bit-exact equal to
+/// [`binary_dots_scalar`] (debug builds assert it on every dispatch).
+fn binary_dots_chunked(ps: &PackedSpan, pw: &PackedWindows) -> Vec<i64> {
+    let n_seg = pw.seg_widths.len();
+    assert_eq!(ps.words.len(), n_seg, "span geometry vs packed windows");
+    if pw.n_windows == 0 || n_seg == 0 {
+        return binary_dots_scalar(ps, pw);
+    }
+    // hoisted out of the window loop: the span words repeated once per
+    // bit plane, and each slab position's shift-and-add weight
+    let slab = 8 * n_seg;
+    let mut wrep = Vec::with_capacity(slab);
+    let mut shift = Vec::with_capacity(slab);
+    for bit in 0..8u32 {
+        for &w in &ps.words {
+            wrep.push(w);
+            shift.push(bit);
+        }
+    }
+    let mut out = Vec::with_capacity(pw.n_windows);
+    for (wi, planes) in pw.planes.chunks_exact(slab).enumerate() {
+        let mut acc = [0i64; 4];
+        let mut j = 0usize;
+        // slab = 8 * n_seg is always a multiple of 4
+        while j + 4 <= slab {
+            acc[0] += i64::from((planes[j] & wrep[j]).count_ones()) << shift[j];
+            acc[1] += i64::from((planes[j + 1] & wrep[j + 1]).count_ones()) << shift[j + 1];
+            acc[2] += i64::from((planes[j + 2] & wrep[j + 2]).count_ones()) << shift[j + 2];
+            acc[3] += i64::from((planes[j + 3] & wrep[j + 3]).count_ones()) << shift[j + 3];
+            j += 4;
+        }
+        while j < slab {
+            acc[0] += i64::from((planes[j] & wrep[j]).count_ones()) << shift[j];
+            j += 1;
+        }
+        let s = acc[0] + acc[1] + acc[2] + acc[3];
+        out.push(2 * s - pw.sum_x[wi]);
+    }
+    out
+}
+
+/// Batched binary dots: sense the span once, stream every packed window
+/// bit-serially (8 planes) against it in AND/popcount mode. Returns one
+/// signed dot per window, bit-exact equal to [`binary_dot_u8`] — the
+/// chunked kernel is asserted against [`binary_dots_scalar`] in debug
+/// builds, and property-tested against it and the software references.
+pub fn binary_dots_batched(chip: &mut Chip, span: &RowSpan, pw: &PackedWindows) -> Vec<i64> {
+    let ps = sense_span_packed(chip, span);
+    let out = binary_dots_chunked(&ps, pw);
+    debug_assert_eq!(
+        out,
+        binary_dots_scalar(&ps, pw),
+        "chunked binary kernel diverged from the scalar oracle"
+    );
     // column-side events: 8 bit planes per window per segment. Charge the
     // full data-column width per pass — the bit lines broadcast across
     // the whole row exactly as in the unbatched `logic_pass`, so batched
-    // and unbatched serving differ only by the amortized WRC walk.
+    // and unbatched serving differ only by the amortized WRC walk. The
+    // chunked kernel streams the same planes, so the charge is identical.
     let cols = chip.cfg().data_cols() as u64;
+    let n_seg = pw.seg_widths.len();
     chip.account_batched_passes(cols, 8 * pw.n_windows as u64 * n_seg as u64, true);
     out
 }
@@ -211,7 +316,7 @@ pub fn binary_dot_u8_batch(chip: &mut Chip, span: &RowSpan, xs: &[Vec<u8>]) -> V
     let per_row = chip.cfg().data_cols();
     let widths = span.seg_widths(per_row);
     let flat = xs.concat();
-    let pw = pack_windows(&flat, &widths);
+    let pw = pack_windows(&flat, &widths).expect("span-derived geometry is valid");
     binary_dots_batched(chip, span, &pw)
 }
 
@@ -294,12 +399,28 @@ pub struct PackedWindowsI8 {
 /// `sum(seg_widths) / 4` weights each; `seg_widths` must come from
 /// [`crate::cim::mapping::segment_widths`] over the span's cell count
 /// (4 cells per weight). An empty `flat` packs zero windows.
-pub fn pack_windows_i8(flat: &[i8], seg_widths: &[usize]) -> PackedWindowsI8 {
+///
+/// # Errors
+///
+/// [`PackError`] on degenerate geometry: a zero-cell span (a
+/// fully-pruned layer), a cell count that is not a multiple of 4, a
+/// zero-width or over-wide segment, or a `flat` buffer that does not
+/// tile the span's weight count.
+pub fn pack_windows_i8(flat: &[i8], seg_widths: &[usize]) -> Result<PackedWindowsI8, PackError> {
     let n_seg = seg_widths.len();
-    let cells: usize = seg_widths.iter().sum();
-    assert!(cells > 0 && cells % 4 == 0, "INT8 span must hold 4 cells per weight");
+    let cells = check_geometry(seg_widths)?;
+    if cells % 4 != 0 {
+        return Err(PackError(format!(
+            "INT8 span must hold 4 cells per weight, got {cells} cells"
+        )));
+    }
     let n = cells / 4;
-    assert!(flat.len() % n == 0, "flat windows vs span weight count");
+    if flat.len() % n != 0 {
+        return Err(PackError(format!(
+            "flat window buffer of {} weights does not tile a {n}-weight span",
+            flat.len()
+        )));
+    }
     let n_windows = flat.len() / n;
     let mut planes = vec![0u64; n_windows * 8 * n_seg];
     let mut sum_ux = Vec::with_capacity(n_windows);
@@ -322,21 +443,18 @@ pub fn pack_windows_i8(flat: &[i8], seg_widths: &[usize]) -> PackedWindowsI8 {
             }
         }
     }
-    PackedWindowsI8 {
+    Ok(PackedWindowsI8 {
         n_windows,
         seg_widths: seg_widths.to_vec(),
         planes,
         sum_ux,
-    }
+    })
 }
 
-/// Batched INT8 dots: sense the span's 2-bit slices once, stream every
-/// packed window bit-serially (8 offset-encoded planes) against them, and
-/// remove both offsets after accumulation. Returns one signed dot per
-/// window, bit-exact equal to [`int8_dot`] (and, with an intact store,
-/// to [`int8_dot_ref`]).
-pub fn int8_dots_batched(chip: &mut Chip, span: &RowSpan, pw: &PackedWindowsI8) -> Vec<i64> {
-    let ps = sense_span_2bit(chip, span);
+/// Scalar reference kernel for the batched INT8 dots — the property
+/// tests' oracle for the chunked hot path. One signed dot per window,
+/// computed with the plain per-segment, per-slice popcount loop.
+pub fn int8_dots_scalar(ps: &PackedSpanI8, pw: &PackedWindowsI8) -> Vec<i64> {
     let n_seg = pw.seg_widths.len();
     assert_eq!(ps.lo.len(), n_seg, "span geometry vs packed windows");
     let n = (pw.seg_widths.iter().sum::<usize>() / 4) as i64;
@@ -359,10 +477,73 @@ pub fn int8_dots_batched(chip: &mut Chip, span: &RowSpan, pw: &PackedWindowsI8) 
         }
         out.push(s - 128 * pw.sum_ux[wi] - 128 * ps.sum_uw + n * 128 * 128);
     }
+    out
+}
+
+/// The chunked INT8 hot-path kernel: the per-slice masking of the
+/// sensed lo/hi planes is hoisted out of the window loop (it depends
+/// only on the span), so each window's plane word costs eight AND +
+/// popcount ops unrolled as straight-line u64 work. Bit-exact equal to
+/// [`int8_dots_scalar`] (debug builds assert it on every dispatch).
+fn int8_dots_chunked(ps: &PackedSpanI8, pw: &PackedWindowsI8) -> Vec<i64> {
+    let n_seg = pw.seg_widths.len();
+    assert_eq!(ps.lo.len(), n_seg, "span geometry vs packed windows");
+    if pw.n_windows == 0 || n_seg == 0 {
+        return int8_dots_scalar(ps, pw);
+    }
+    // pre-masked lo/hi per (segment, slice): lm[4*seg + sl] = lo & mask
+    let mut lm = Vec::with_capacity(4 * n_seg);
+    let mut hm = Vec::with_capacity(4 * n_seg);
+    for seg in 0..n_seg {
+        for &m in &ps.slice_masks[seg] {
+            lm.push(ps.lo[seg] & m);
+            hm.push(ps.hi[seg] & m);
+        }
+    }
+    let n = (pw.seg_widths.iter().sum::<usize>() / 4) as i64;
+    let slab = 8 * n_seg;
+    let mut out = Vec::with_capacity(pw.n_windows);
+    for (wi, planes) in pw.planes.chunks_exact(slab).enumerate() {
+        let mut s: i64 = 0;
+        for (bit, pb) in planes.chunks_exact(n_seg).enumerate() {
+            for (seg, &x) in pb.iter().enumerate() {
+                let k = 4 * seg;
+                let v0 = i64::from((x & lm[k]).count_ones())
+                    + 2 * i64::from((x & hm[k]).count_ones());
+                let v1 = i64::from((x & lm[k + 1]).count_ones())
+                    + 2 * i64::from((x & hm[k + 1]).count_ones());
+                let v2 = i64::from((x & lm[k + 2]).count_ones())
+                    + 2 * i64::from((x & hm[k + 2]).count_ones());
+                let v3 = i64::from((x & lm[k + 3]).count_ones())
+                    + 2 * i64::from((x & hm[k + 3]).count_ones());
+                s += (v0 << bit) + (v1 << (2 + bit)) + (v2 << (4 + bit)) + (v3 << (6 + bit));
+            }
+        }
+        out.push(s - 128 * pw.sum_ux[wi] - 128 * ps.sum_uw + n * 128 * 128);
+    }
+    out
+}
+
+/// Batched INT8 dots: sense the span's 2-bit slices once, stream every
+/// packed window bit-serially (8 offset-encoded planes) against them, and
+/// remove both offsets after accumulation. Returns one signed dot per
+/// window, bit-exact equal to [`int8_dot`] (and, with an intact store,
+/// to [`int8_dot_ref`]) — the chunked kernel is asserted against
+/// [`int8_dots_scalar`] in debug builds and property-tested against it.
+pub fn int8_dots_batched(chip: &mut Chip, span: &RowSpan, pw: &PackedWindowsI8) -> Vec<i64> {
+    let ps = sense_span_2bit(chip, span);
+    let out = int8_dots_chunked(&ps, pw);
+    debug_assert_eq!(
+        out,
+        int8_dots_scalar(&ps, pw),
+        "chunked INT8 kernel diverged from the scalar oracle"
+    );
     // column-side events: 8 offset-encoded bit planes per window per
     // segment, charged at full data-column width — batched and unbatched
     // INT8 serving differ only by the amortized WRC walk + sense burst.
+    // The chunked kernel streams the same planes: identical charge.
     let cols = chip.cfg().data_cols() as u64;
+    let n_seg = pw.seg_widths.len();
     chip.account_batched_passes(cols, 8 * pw.n_windows as u64 * n_seg as u64, true);
     out
 }
@@ -373,7 +554,7 @@ pub fn int8_dot_batch(chip: &mut Chip, span: &RowSpan, xs: &[Vec<i8>]) -> Vec<i6
     let per_row = chip.cfg().data_cols();
     let widths = span.seg_widths(per_row);
     let flat = xs.concat();
-    let pw = pack_windows_i8(&flat, &widths);
+    let pw = pack_windows_i8(&flat, &widths).expect("span-derived geometry is valid");
     int8_dots_batched(chip, span, &pw)
 }
 
@@ -646,6 +827,112 @@ mod tests {
         for (x, got) in xs.iter().zip(int8_dot_batch(&mut c, &span, &xs)) {
             assert_eq!(got, int8_dot_ref(&w, x));
         }
+    }
+
+    #[test]
+    fn pack_windows_rejects_degenerate_geometry_cleanly() {
+        // a fully-pruned layer presents a zero-cell span: clean Err, no panic
+        let err = pack_windows(&[], &[]).unwrap_err();
+        assert!(err.to_string().contains("fully-pruned"), "{err}");
+        assert!(pack_windows(&[1, 2], &[0, 2]).is_err(), "zero-width segment");
+        assert!(pack_windows(&[1, 2, 3], &[2]).is_err(), "misaligned flat buffer");
+        assert!(pack_windows(&[1, 2], &[65]).is_err(), "over-wide segment");
+        // valid geometry still packs
+        assert_eq!(pack_windows(&[1, 2], &[2]).unwrap().n_windows, 1);
+    }
+
+    #[test]
+    fn pack_windows_i8_rejects_degenerate_geometry_cleanly() {
+        let err = pack_windows_i8(&[], &[]).unwrap_err();
+        assert!(err.to_string().contains("fully-pruned"), "{err}");
+        assert!(pack_windows_i8(&[1], &[3]).is_err(), "cells must be 4 per weight");
+        assert!(pack_windows_i8(&[1, 2, 3], &[8]).is_err(), "misaligned flat buffer");
+        assert_eq!(pack_windows_i8(&[1, -2], &[4, 4]).unwrap().n_windows, 1);
+    }
+
+    #[test]
+    fn prop_chunked_binary_kernel_matches_scalar_oracle() {
+        crate::testing::forall(
+            "binary chunked kernel == scalar oracle == reference",
+            0x51bd,
+            12,
+            |rng| {
+                let n = 1 + rng.below(90);
+                let bits: Vec<bool> = (0..n).map(|_| rng.chance(0.5)).collect();
+                let n_win = rng.below(6);
+                let xs: Vec<Vec<u8>> = (0..n_win)
+                    .map(|_| (0..n).map(|_| rng.below(256) as u8).collect())
+                    .collect();
+                (bits, xs)
+            },
+            |(bits, xs)| {
+                let mut c = chip();
+                let mut alloc = RowAllocator::for_chip(&c);
+                let span = alloc.alloc(bits.len()).unwrap();
+                if store_bits(&mut c, &span, bits) != 0 {
+                    return Err("unrecoverable store on ideal devices".into());
+                }
+                let widths = span.seg_widths(c.cfg().data_cols());
+                let flat: Vec<u8> = xs.concat();
+                let pw = pack_windows(&flat, &widths).map_err(|e| e.to_string())?;
+                let ps = sense_span_packed(&mut c, &span);
+                let scalar = binary_dots_scalar(&ps, &pw);
+                let chunked = binary_dots_batched(&mut c, &span, &pw);
+                if chunked != scalar {
+                    return Err(format!("chunked {chunked:?} != scalar {scalar:?}"));
+                }
+                for (x, &got) in xs.iter().zip(&chunked) {
+                    let want = binary_dot_ref(bits, x);
+                    if got != want {
+                        return Err(format!("dot {got} != reference {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_chunked_int8_kernel_matches_scalar_oracle() {
+        crate::testing::forall(
+            "INT8 chunked kernel == scalar oracle == reference",
+            0x51be,
+            12,
+            |rng| {
+                let n = 1 + rng.below(24);
+                let w: Vec<i8> =
+                    (0..n).map(|_| (rng.below(255) as i16 - 127) as i8).collect();
+                let n_win = rng.below(6);
+                let xs: Vec<Vec<i8>> = (0..n_win)
+                    .map(|_| (0..n).map(|_| (rng.below(255) as i16 - 127) as i8).collect())
+                    .collect();
+                (w, xs)
+            },
+            |(w, xs)| {
+                let mut c = chip();
+                let mut alloc = RowAllocator::for_chip(&c);
+                let span = alloc.alloc(4 * w.len()).unwrap();
+                if store_int8(&mut c, &span, w) != 0 {
+                    return Err("unrecoverable store on ideal devices".into());
+                }
+                let widths = span.seg_widths(c.cfg().data_cols());
+                let flat: Vec<i8> = xs.concat();
+                let pw = pack_windows_i8(&flat, &widths).map_err(|e| e.to_string())?;
+                let ps = sense_span_2bit(&mut c, &span);
+                let scalar = int8_dots_scalar(&ps, &pw);
+                let chunked = int8_dots_batched(&mut c, &span, &pw);
+                if chunked != scalar {
+                    return Err(format!("chunked {chunked:?} != scalar {scalar:?}"));
+                }
+                for (x, &got) in xs.iter().zip(&chunked) {
+                    let want = int8_dot_ref(w, x);
+                    if got != want {
+                        return Err(format!("dot {got} != reference {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -7,21 +7,34 @@
 //! single-model [`crate::serve::Server`] (one local backend, a static
 //! route) and the multi-tenant [`crate::serve::engine::Engine`]
 //! (per-tenant routes rebuilt on every migration, possibly spanning
-//! remote hosts and replica groups). Per layer, the executor packs the
-//! batch's activation windows once, dispatches them with the layer's
-//! [`TenantRoute`] entry, and folds the returned integer dot vectors —
-//! it neither knows nor cares how many backends, hosts, or replicas
-//! were involved. The numeric contract is owned here: integer chip dots
-//! plus f32 host stages shared with [`ModelBundle::reference_logits`],
-//! so any transport that returns bit-exact dots serves bit-exact
-//! logits.
+//! remote hosts and replica groups). The numeric contract is owned
+//! here: integer chip dots plus f32 host stages shared with
+//! [`ModelBundle::reference_logits`], so any transport that returns
+//! bit-exact dots serves bit-exact logits.
 //!
-//! A transport error aborts the batch mid-pipeline and surfaces to the
+//! # The micro-batch pipeline
+//!
+//! Per layer, the batch is split into up to
+//! [`ShardRouter::pipeline_depth`] contiguous micro-batches. Each
+//! chunk's windows are quantized + packed on the host and submitted
+//! ([`ShardRouter::submit_layer`]) *before* the previous chunk's dots
+//! are collected — so host packing of chunk `k+1` overlaps the chips
+//! streaming chunk `k` (cross-layer overlap is impossible: layer
+//! `l+1`'s inputs are a function of layer `l`'s folded dots). Depth 1
+//! degenerates to the old strictly serial pack → dispatch → fold
+//! lockstep. Chunks fold into disjoint ranges of the layer's output
+//! buffer and per-image quantization is chunk-independent, so the
+//! logits are bit-identical at every depth.
+//!
+//! A transport error aborts the batch mid-pipeline: every still-pending
+//! chunk is collected-and-discarded first (a straggling reply must not
+//! alias the retry's dispatches), then the error surfaces to the
 //! caller; the multi-tenant coordinator heals the fleet (probe,
 //! re-program, rejoin — see [`crate::serve::engine`]) and re-runs the
 //! whole batch from its inputs, which is what makes the retry
 //! bit-exact: no partial layer state survives a failed attempt.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::cim::mapping::segment_widths;
@@ -29,9 +42,11 @@ use crate::cim::vmm;
 use crate::nn::pointnet::group_cloud;
 use crate::nn::quant;
 use crate::serve::model::{fc_logits, im2col_u8, maxpool2_flat, scale_mac, MnistBundle, ModelBundle};
-use crate::serve::pointnet_model::PointNetBundle;
 use crate::serve::obs::TraceContext;
-use crate::serve::transport::{Result, ShardRouter, TenantRoute, WireWindows};
+use crate::serve::pointnet_model::PointNetBundle;
+use crate::serve::transport::{
+    PendingDispatch, Result, ShardRouter, TenantRoute, TransportError, WireWindows,
+};
 
 /// One batch through the whole model: routes to the path-specific
 /// pipeline. Returns per-input logits, in input order; `layer_windows`
@@ -57,6 +72,25 @@ pub(crate) fn run_batch(
     }
 }
 
+/// The micro-batch boundaries for a batch of `b` inputs at pipeline
+/// depth `depth`: contiguous, disjoint, covering, sizes differing by at
+/// most one.
+fn chunk_bounds(b: usize, depth: usize) -> Vec<(usize, usize)> {
+    let n_chunks = depth.min(b).max(1);
+    (0..n_chunks).map(|k| (k * b / n_chunks, (k + 1) * b / n_chunks)).collect()
+}
+
+/// Collect-and-discard every still-pending chunk so a straggling reply
+/// cannot alias the dispatches of the engine's whole-batch retry.
+fn abandon_pending<T>(
+    router: &mut ShardRouter,
+    pending: VecDeque<(usize, usize, T, PendingDispatch)>,
+) {
+    for (_, _, _, pd) in pending {
+        let _ = router.collect(pd);
+    }
+}
+
 /// One batch through the binary MNIST path: per-layer u8 quantization,
 /// shared im2col packing, chip dots, host scale/bias/ReLU/pool, FC head.
 pub(crate) fn run_mnist_batch(
@@ -76,37 +110,78 @@ pub(crate) fn run_mnist_batch(
     for (l, layer) in m.conv.iter().enumerate() {
         debug_assert_eq!(layer.in_c, c);
         let cells = layer.kernel_cells();
-        // quantize each image, im2col, and pack all windows together
-        // (one shared packing serves every filter of the layer; the
-        // im2col buffers concatenate directly into window-major order)
-        let mut scales = Vec::with_capacity(b);
-        let mut flat_windows: Vec<u8> = Vec::with_capacity(b * hw * hw * cells);
-        let (mut oh, mut ow) = (hw, hw);
-        for map in &maps {
-            let (q, s) = quant::quantize_activations_u8(map);
-            scales.push(s);
-            let (flat, oh2, ow2) = im2col_u8(&q, c, hw, hw, layer.ksize, 1);
-            oh = oh2;
-            ow = ow2;
-            flat_windows.extend_from_slice(&flat);
+        if cells == 0 {
+            // a fully pruned layer has no rows anywhere in the fleet —
+            // surface it as a clean transport error, never a panic
+            return Err(TransportError::Remote(format!(
+                "layer {l} is fully pruned (zero kernel cells): nothing to dispatch"
+            )));
         }
-        let n_pos = oh * ow;
         let widths = segment_widths(cells, data_cols);
-        let pw = Arc::new(vmm::pack_windows(&flat_windows, &widths));
-        layer_windows[l] += pw.n_windows as u64;
-        // fan out through the transport seam, fold the dots as returned
-        let dots = router.dispatch_layer(route, l, WireWindows::Binary(pw), trace)?;
-        let mut y = vec![0.0f32; b * layer.out_c * n_pos];
-        for (f, dvec) in dots {
-            let f = f as usize;
-            debug_assert_eq!(dvec.len(), b * n_pos);
-            for (bi, &scale) in scales.iter().enumerate() {
-                let src = &dvec[bi * n_pos..(bi + 1) * n_pos];
-                let dst_base = bi * layer.out_c * n_pos + f * n_pos;
-                for (p, &dot) in src.iter().enumerate() {
-                    y[dst_base + p] = scale_mac(layer.alpha[f], scale, dot, layer.bias[f]).max(0.0);
+        // submit every micro-batch before collecting any: quantize +
+        // im2col + pack of chunk k+1 runs while chunk k's windows are
+        // streaming through the chips
+        let (mut oh, mut ow) = (hw, hw);
+        let mut pending: VecDeque<(usize, usize, Vec<f32>, PendingDispatch)> = VecDeque::new();
+        let mut abort: Option<TransportError> = None;
+        for (lo, hi) in chunk_bounds(b, router.pipeline_depth()) {
+            // quantize each image of the chunk, im2col, and pack the
+            // chunk's windows together (one shared packing serves every
+            // filter of the layer; the im2col buffers concatenate
+            // directly into window-major order)
+            let mut scales = Vec::with_capacity(hi - lo);
+            let mut flat_windows: Vec<u8> = Vec::with_capacity((hi - lo) * hw * hw * cells);
+            for map in &maps[lo..hi] {
+                let (q, s) = quant::quantize_activations_u8(map);
+                scales.push(s);
+                let (flat, oh2, ow2) = im2col_u8(&q, c, hw, hw, layer.ksize, 1);
+                oh = oh2;
+                ow = ow2;
+                flat_windows.extend_from_slice(&flat);
+            }
+            let pw = match vmm::pack_windows(&flat_windows, &widths) {
+                Ok(pw) => Arc::new(pw),
+                Err(e) => {
+                    abort = Some(TransportError::Remote(e.to_string()));
+                    break;
+                }
+            };
+            layer_windows[l] += pw.n_windows as u64;
+            match router.submit_layer(route, l, WireWindows::Binary(pw), trace) {
+                Ok(pd) => pending.push_back((lo, hi, scales, pd)),
+                Err(e) => {
+                    abort = Some(e);
+                    break;
                 }
             }
+        }
+        // fold each chunk's dots into its disjoint slice of the layer
+        // output as the replies come back, oldest first
+        let n_pos = oh * ow;
+        let mut y = vec![0.0f32; b * layer.out_c * n_pos];
+        while abort.is_none() {
+            let Some((lo, hi, scales, pd)) = pending.pop_front() else { break };
+            match router.collect(pd) {
+                Ok(dots) => {
+                    for (f, dvec) in dots {
+                        let f = f as usize;
+                        debug_assert_eq!(dvec.len(), (hi - lo) * n_pos);
+                        for (ci, &scale) in scales.iter().enumerate() {
+                            let src = &dvec[ci * n_pos..(ci + 1) * n_pos];
+                            let dst = (lo + ci) * layer.out_c * n_pos + f * n_pos;
+                            for (pi, &dot) in src.iter().enumerate() {
+                                y[dst + pi] =
+                                    scale_mac(layer.alpha[f], scale, dot, layer.bias[f]).max(0.0);
+                            }
+                        }
+                    }
+                }
+                Err(e) => abort = Some(e),
+            }
+        }
+        if let Some(e) = abort {
+            abandon_pending(router, pending);
+            return Err(e);
         }
         // pool + advance to the next layer's input maps
         maps = (0..b)
@@ -150,34 +225,71 @@ pub(crate) fn run_pointnet_batch(
     let mut xs: Vec<Vec<f32>> = groups.iter().map(|g| p.sa1_input(g)).collect();
     for (l, layer) in p.layers.iter().enumerate() {
         let n_points = p.points_in_stage(PointNetBundle::stage_of(l));
-        // quantize each cloud's map and pack all windows together (a
-        // point's feature row is one window; one shared packing serves
-        // every channel of the layer)
-        let mut scales = Vec::with_capacity(b);
-        let mut flat: Vec<i8> = Vec::with_capacity(b * n_points * layer.in_c);
-        for x in &xs {
-            debug_assert_eq!(x.len(), n_points * layer.in_c);
-            let (q, s) = quant::quantize_activations_i8(x);
-            scales.push(s);
-            flat.extend_from_slice(&q);
+        if layer.in_c == 0 {
+            return Err(TransportError::Remote(format!(
+                "layer {l} is fully pruned (zero input channels): nothing to dispatch"
+            )));
         }
         let widths = segment_widths(4 * layer.in_c, data_cols);
-        let pw = Arc::new(vmm::pack_windows_i8(&flat, &widths));
-        layer_windows[l] += pw.n_windows as u64;
-        // fan out through the transport seam, fold point-major
-        let dots = router.dispatch_layer(route, l, WireWindows::Int8(pw), trace)?;
-        let mut ys: Vec<Vec<f32>> = (0..b).map(|_| vec![0.0f32; n_points * layer.out_c]).collect();
-        for (f, dvec) in dots {
-            let f = f as usize;
-            debug_assert_eq!(dvec.len(), b * n_points);
-            for (bi, &scale) in scales.iter().enumerate() {
-                let y = &mut ys[bi];
-                for pnt in 0..n_points {
-                    y[pnt * layer.out_c + f] =
-                        scale_mac(layer.w_scale[f], scale, dvec[bi * n_points + pnt], layer.bias[f])
-                            .max(0.0);
+        // submit every micro-batch before collecting any (see the
+        // module docs): a point's feature row is one window; one shared
+        // packing serves every channel of the layer
+        let mut pending: VecDeque<(usize, usize, Vec<f32>, PendingDispatch)> = VecDeque::new();
+        let mut abort: Option<TransportError> = None;
+        for (lo, hi) in chunk_bounds(b, router.pipeline_depth()) {
+            let mut scales = Vec::with_capacity(hi - lo);
+            let mut flat: Vec<i8> = Vec::with_capacity((hi - lo) * n_points * layer.in_c);
+            for x in &xs[lo..hi] {
+                debug_assert_eq!(x.len(), n_points * layer.in_c);
+                let (q, s) = quant::quantize_activations_i8(x);
+                scales.push(s);
+                flat.extend_from_slice(&q);
+            }
+            let pw = match vmm::pack_windows_i8(&flat, &widths) {
+                Ok(pw) => Arc::new(pw),
+                Err(e) => {
+                    abort = Some(TransportError::Remote(e.to_string()));
+                    break;
+                }
+            };
+            layer_windows[l] += pw.n_windows as u64;
+            match router.submit_layer(route, l, WireWindows::Int8(pw), trace) {
+                Ok(pd) => pending.push_back((lo, hi, scales, pd)),
+                Err(e) => {
+                    abort = Some(e);
+                    break;
                 }
             }
+        }
+        // fold point-major, each chunk into its own clouds' buffers
+        let mut ys: Vec<Vec<f32>> = (0..b).map(|_| vec![0.0f32; n_points * layer.out_c]).collect();
+        while abort.is_none() {
+            let Some((lo, hi, scales, pd)) = pending.pop_front() else { break };
+            match router.collect(pd) {
+                Ok(dots) => {
+                    for (f, dvec) in dots {
+                        let f = f as usize;
+                        debug_assert_eq!(dvec.len(), (hi - lo) * n_points);
+                        for (ci, &scale) in scales.iter().enumerate() {
+                            let y = &mut ys[lo + ci];
+                            for pnt in 0..n_points {
+                                y[pnt * layer.out_c + f] = scale_mac(
+                                    layer.w_scale[f],
+                                    scale,
+                                    dvec[ci * n_points + pnt],
+                                    layer.bias[f],
+                                )
+                                .max(0.0);
+                            }
+                        }
+                    }
+                }
+                Err(e) => abort = Some(e),
+            }
+        }
+        if let Some(e) = abort {
+            abandon_pending(router, pending);
+            return Err(e);
         }
         // pool/concat seams, shared with the reference implementation
         xs = ys

@@ -21,7 +21,10 @@
 //!  [cache]  content-keyed logits replay (bit-exact, per tenant)
 //!        │ misses only
 //!        ▼
-//!  [exec]   quantize → pack planes → DispatchRequest per layer
+//!  [exec]   per layer: split the batch into ≤ depth micro-batches,
+//!        │   quantize → pack planes → submit_layer, collecting FIFO so
+//!        │   packing overlaps the chips' dots (DESIGN.md §11;
+//!        │   PipelineConfig — depth 1 is the old serial lockstep)
 //!        │                   (ShardRouter: group split, replica choice,
 //!        ▼                    hedging, spillover — Backend::dispatch)
 //!  [rebalance] every K batches: diff WearLedger snapshots over the
@@ -52,8 +55,9 @@
 //! [`crate::serve::ModelBundle::reference_logits`] bit for bit — cache
 //! hit or miss, before or after any number of migrations, local or
 //! remote, hedged or not, under stuck tile fault injection
-//! (property-tested in `tests/integration_stack.rs` and
-//! `tests/transport_remote.rs`).
+//! (property-tested in `tests/integration_stack.rs`,
+//! `tests/transport_remote.rs`, and — at every pipeline depth —
+//! `tests/pipeline.rs`).
 
 pub mod admission;
 pub mod cache;

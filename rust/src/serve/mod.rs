@@ -143,5 +143,6 @@ pub use scheduler::{Server, ServerConfig};
 pub use stats::{EngineReport, LatencyHistogram, ServeReport, ServeStats, TenantStats};
 pub use transport::{
     Backend, HedgeConfig, Host, HostConfig, LocalBackend, MemberState, MigrationOutcome,
-    ReconnectPolicy, RemoteBackend, RouterConfig, RouterStats, ShardRouter, TransportError,
+    PipelineConfig, ReconnectPolicy, RemoteBackend, RouterConfig, RouterStats, ShardRouter,
+    TransportError,
 };

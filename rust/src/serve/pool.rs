@@ -178,7 +178,7 @@ mod tests {
         let widths = segment_widths(bits.len(), alloc.data_cols);
         for batch in 0..4 {
             let flat: Vec<u8> = (0..2 * bits.len()).map(|i| (i % 7) as u8).collect();
-            let pw = vmm::pack_windows(&flat, &widths);
+            let pw = vmm::pack_windows(&flat, &widths).unwrap();
             let dots = vmm::binary_dots_batched(&mut pool.chips_mut()[0], &span, &pw);
             assert_eq!(dots.len(), 2);
             let next = pool.wear_snapshot();

@@ -10,11 +10,26 @@ use crate::util::stats::percentile;
 
 /// Exact-percentile reservoir bound: while a run holds at most this
 /// many requests every latency is retained and percentiles are exact;
-/// past it the reservoir stops growing and the log2 histogram (which
-/// never stops counting) answers with its conservative upper-bound
+/// past it the reservoir keeps a uniform sample of the whole run
+/// (Algorithm R) and the log2 histogram (which never stops counting)
+/// answers percentile queries with its conservative upper-bound
 /// estimate. Either way memory is constant under sustained load — the
 /// seed-era `Vec<f64>` grew one float per request forever.
 const LATENCY_RESERVOIR_CAP: usize = 4096;
+
+/// Fixed seed for the reservoir's replacement hash: two identical runs
+/// retain identical samples (no ambient RNG), which is what makes
+/// latency artifacts diffable across bench runs.
+const LATENCY_RESERVOIR_SEED: u64 = 0x5eed_4c1e_a51a_7e5e;
+
+/// splitmix64 finalizer — the stateless hash driving reservoir
+/// replacement: slot choice is a pure function of (seed, sample index).
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
 
 /// Aggregated counters of one serving run.
 #[derive(Clone, Debug, Default)]
@@ -34,21 +49,38 @@ pub struct ServeStats {
     pub energy_pj: f64,
     /// Every latency, log2-bucketed (constant footprint, never full).
     hist: LatencyHistogram,
-    /// The first [`LATENCY_RESERVOIR_CAP`] exact samples, microseconds.
+    /// Up to [`LATENCY_RESERVOIR_CAP`] exact samples (microseconds): the
+    /// whole run while it fits, a deterministic uniform reservoir of the
+    /// whole run (Algorithm R, seeded hash) once it doesn't. The
+    /// seed-era version kept the *first* cap samples — a warm-up-biased
+    /// prefix, not a sample.
     reservoir: Vec<f64>,
 }
 
 impl ServeStats {
     pub fn record_latency(&mut self, latency: Duration) {
         self.hist.record(latency);
+        let us = latency.as_secs_f64() * 1e6;
         if self.reservoir.len() < LATENCY_RESERVOIR_CAP {
-            self.reservoir.push(latency.as_secs_f64() * 1e6);
+            self.reservoir.push(us);
+            return;
+        }
+        // Algorithm R, derandomized: sample `i` (0-based) lands in the
+        // reservoir with probability cap/(i+1), the slot drawn by
+        // hashing the sample index — no RNG state to carry, and two
+        // identical runs retain identical samples.
+        let i = self.hist.count() - 1;
+        let j = splitmix64(LATENCY_RESERVOIR_SEED ^ i) % (i + 1);
+        if (j as usize) < LATENCY_RESERVOIR_CAP {
+            self.reservoir[j as usize] = us;
         }
     }
 
     /// The retained exact samples (microseconds) — complete while the
-    /// run stayed within [`LATENCY_RESERVOIR_CAP`] requests, a prefix
-    /// sample of the run past it (the histogram still counts all).
+    /// run stayed within [`LATENCY_RESERVOIR_CAP`] requests, a seeded
+    /// uniform reservoir sample of the whole run past it (the histogram
+    /// still counts all; slot order is not arrival order once sampling
+    /// kicks in).
     pub fn latencies_us(&self) -> &[f64] {
         &self.reservoir
     }
@@ -161,8 +193,11 @@ impl LatencyHistogram {
         self.upper_edge_us(target) as f64 / 1e3
     }
 
-    /// Conservative (upper-bound) `q`-quantile (`q` in `[0, 1]`,
-    /// clamped) as a [`Duration`]: the upper edge of the bucket holding
+    /// Conservative (upper-bound) `q`-quantile (`q` a **fraction in
+    /// `[0, 1]`**, clamped — not the 0..=100 percentile rank taken by
+    /// [`crate::util::stats::percentile`] and [`Self::percentile_ms`];
+    /// a rank passed here clamps to the max)
+    /// as a [`Duration`]: the upper edge of the bucket holding
     /// the `⌈q·count⌉`-th sample. [`Duration::ZERO`] for an empty
     /// histogram; monotone in `q`; saturates at the last bucket's edge
     /// (~2.3 minutes). This is the hedging deadline's estimator
@@ -322,6 +357,51 @@ mod tests {
         // histogram estimates are upper bounds: every sample is < 1ms,
         // so the saturated p99 sits at a bucket edge <= 1.024ms
         assert!(s.p99_ms() <= 1.024 + 1e-9, "p99 {} escaped its bucket", s.p99_ms());
+    }
+
+    #[test]
+    fn latency_ms_is_exact_at_cap_and_switches_estimator_one_past_it() {
+        let cap = super::LATENCY_RESERVOIR_CAP;
+        let mut s = ServeStats::default();
+        // exactly `cap` samples: 100, 101, ..., 100 + cap - 1 us
+        for i in 0..cap {
+            s.record_latency(Duration::from_micros(100 + i as u64));
+        }
+        // at count == cap every sample is retained, so percentiles are
+        // exact (interpolated), not bucket edges
+        assert_eq!(s.latencies_us().len(), cap);
+        assert!((s.latency_ms(0.0) - 0.100).abs() < 1e-9, "exact min at the boundary");
+        let max_ms = (100 + cap as u64 - 1) as f64 / 1e3;
+        assert!((s.latency_ms(100.0) - max_ms).abs() < 1e-9, "exact max at the boundary");
+        let median_ms = (100.0 + (cap - 1) as f64 / 2.0) / 1e3;
+        assert!((s.p50_ms() - median_ms).abs() < 1e-9, "exact median at the boundary");
+        // one more sample tips count past the reservoir: the estimator
+        // switches to the histogram's conservative bucket upper edge
+        s.record_latency(Duration::from_micros(5_000));
+        assert_eq!(s.latencies_us().len(), cap, "reservoir stays bounded");
+        // 5000us lands in (4096, 8192] -> upper edge 8192us = 8.192ms
+        assert!((s.latency_ms(100.0) - 8.192).abs() < 1e-9, "bucket edge past the boundary");
+        assert!(s.latency_ms(100.0) >= 5.0, "estimate stays an upper bound");
+    }
+
+    #[test]
+    fn saturated_reservoir_is_a_deterministic_uniform_sample_not_a_prefix() {
+        let cap = super::LATENCY_RESERVOIR_CAP;
+        let run = || {
+            let mut s = ServeStats::default();
+            for i in 0..4 * cap {
+                s.record_latency(Duration::from_micros(1 + i as u64));
+            }
+            s.latencies_us().to_vec()
+        };
+        let sample = run();
+        assert_eq!(sample.len(), cap);
+        // a prefix reservoir would hold only values <= cap; a uniform
+        // sample of 4*cap draws ~3/4 of its slots from past the prefix
+        let late = sample.iter().filter(|&&us| us > cap as f64).count();
+        assert!(late > cap / 2, "only {late}/{cap} samples came from past the old prefix");
+        // seeded hash replacement: identical runs retain identical samples
+        assert_eq!(sample, run(), "reservoir sampling must be deterministic");
     }
 
     #[test]

@@ -13,7 +13,12 @@
 //! Only a served `Finish` (or [`Host::shutdown`]) ends the daemon: the
 //! pool's terminal report has been issued and there is nothing left to
 //! serve. One connection owns the pool at a time (the protocol is
-//! strictly request/reply per session).
+//! strictly request/reply per session). That stays true under the
+//! executor's dispatch pipeline (DESIGN.md §11): pipelining lives in
+//! the [`super::router::ShardRouter`]'s member worker queues *above*
+//! this seam, so a host never sees a second request frame before it
+//! replied to the first — depth-bounded overlap needs no protocol
+//! change.
 //!
 //! A *restarted* host is a different story: [`Host::spawn`] fabricates
 //! a fresh pool with a fresh incarnation

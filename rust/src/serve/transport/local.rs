@@ -250,18 +250,27 @@ impl Backend for LocalBackend {
         // kernels index planes/sums by window and assert span-vs-window
         // geometry, so a forged shape must be rejected here, not let
         // panic a worker
-        let (n_windows, n_seg, planes, sums) = match &req.windows {
+        let (n_windows, seg_widths, planes, sums) = match &req.windows {
             WireWindows::Binary(pw) => {
-                (pw.n_windows, pw.seg_widths.len(), pw.planes.len(), pw.sum_x.len())
+                (pw.n_windows, &pw.seg_widths, pw.planes.len(), pw.sum_x.len())
             }
             WireWindows::Int8(pw) => {
-                (pw.n_windows, pw.seg_widths.len(), pw.planes.len(), pw.sum_ux.len())
+                (pw.n_windows, &pw.seg_widths, pw.planes.len(), pw.sum_ux.len())
             }
         };
+        let n_seg = seg_widths.len();
         if planes != n_windows * 8 * n_seg || sums != n_windows {
             return Err(TransportError::Remote(format!(
                 "packed windows shape is inconsistent ({n_windows} windows, {n_seg} segments, \
                  {planes} plane words, {sums} sums)"
+            )));
+        }
+        // `pack_windows`/`pack_windows_i8` refuse to build these, but a
+        // wire peer can forge one — a zero-width (fully pruned) or
+        // over-wide segment must bounce here, never panic a worker
+        if seg_widths.iter().any(|&w| w == 0 || w > 64) {
+            return Err(TransportError::Remote(format!(
+                "packed windows carry a degenerate segment width (widths {seg_widths:?})"
             )));
         }
         let n = self.job_txs.len();
@@ -447,7 +456,7 @@ mod tests {
         // two windows of u8 activations against the stored sign bits
         let widths = segment_widths(bits.len(), info.data_cols as usize);
         let flat: Vec<u8> = (0..2 * bits.len()).map(|i| (i * 7 % 256) as u8).collect();
-        let pw = Arc::new(vmm::pack_windows(&flat, &widths));
+        let pw = Arc::new(vmm::pack_windows(&flat, &widths).unwrap());
         let reply = b
             .dispatch(DispatchRequest {
                 request_id: 42,
@@ -519,7 +528,7 @@ mod tests {
         }
         let widths = segment_widths(flipped.len(), per_row);
         let flat: Vec<u8> = (0..flipped.len()).map(|i| (i * 11 % 256) as u8).collect();
-        let pw = Arc::new(vmm::pack_windows(&flat, &widths));
+        let pw = Arc::new(vmm::pack_windows(&flat, &widths).unwrap());
         let reply = b
             .dispatch(DispatchRequest {
                 request_id: 1,
@@ -584,6 +593,39 @@ mod tests {
         // span segments disagree with the packed windows
         let bogus = RowSpan { slots: vec![(0, 0), (0, 1)], tail_width: 4, len: info.data_cols as usize + 4 };
         assert!(matches!(dispatch(&mut b, bogus), Err(TransportError::Remote(_))));
+        // the backend is still alive and serving
+        assert_eq!(b.describe().unwrap().chips, 1);
+    }
+
+    #[test]
+    fn degenerate_window_geometry_is_rejected_at_the_seam() {
+        // `pack_windows` refuses to build a zero-width (fully pruned)
+        // segment, but a wire peer can forge one; the backend must
+        // bounce it with a clean Remote error before a kernel indexes
+        // by it — the regression behind this was a worker panic
+        let mut b = backend(1, 0x10ca5);
+        let windows = WireWindows::Binary(Arc::new(vmm::PackedWindows {
+            n_windows: 1,
+            seg_widths: vec![0],
+            planes: vec![0; 8],
+            sum_x: vec![0],
+        }));
+        let err = b
+            .dispatch(DispatchRequest {
+                request_id: 1,
+                shard_epoch: 1,
+                layer: 0,
+                trace: TraceContext::none(),
+                shards: Arc::new(vec![]),
+                windows,
+            })
+            .unwrap_err();
+        match err {
+            TransportError::Remote(msg) => {
+                assert!(msg.contains("degenerate segment width"), "{msg}")
+            }
+            other => panic!("expected a Remote error, got {other:?}"),
+        }
         // the backend is still alive and serving
         assert_eq!(b.describe().unwrap().chips, 1);
     }

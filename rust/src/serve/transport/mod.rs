@@ -49,8 +49,9 @@ pub use host::{Host, HostConfig};
 pub use local::LocalBackend;
 pub use remote::{ReconnectPolicy, RemoteBackend};
 pub use router::{
-    HedgeConfig, LayerRoute, MemberProbe, MemberState, MigrationOutcome, PlacedLayer, RouterConfig,
-    RouterPlacement, RouterStats, ShardRouter, TenantRoute,
+    HedgeConfig, LayerRoute, MemberProbe, MemberState, MigrationOutcome, PendingDispatch,
+    PipelineConfig, PlacedLayer, RouterConfig, RouterPlacement, RouterStats, ShardRouter,
+    TenantRoute,
 };
 
 /// Transport-layer failure: the connection, the frame, or the far side.

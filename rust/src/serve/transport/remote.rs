@@ -72,6 +72,28 @@ impl ReconnectPolicy {
     pub fn disabled() -> Self {
         ReconnectPolicy { max_attempts: 0, ..ReconnectPolicy::default() }
     }
+
+    /// Backoff before re-dial `attempt` (0-based; attempt 0 re-dials
+    /// immediately): `base << (attempt - 1)`, clamped to `cap`. Every
+    /// step saturates — a pathological policy (`base` or `cap` near
+    /// [`Duration::MAX`]) degrades to the clamp where `Duration`'s
+    /// plain `Mul` would abort the worker thread on overflow.
+    pub fn backoff_delay(&self, attempt: u32) -> Duration {
+        if attempt == 0 {
+            return Duration::ZERO;
+        }
+        let factor = 1u32 << (attempt - 1).min(16);
+        self.base.saturating_mul(factor).min(self.cap)
+    }
+
+    /// Per-attempt bound on the reconnect dial and handshake I/O, so a
+    /// half-open host (accepting into the backlog while parked on a
+    /// dead session) cannot wedge a nominally bounded retry loop.
+    /// `4 * cap` with a one-second floor, saturating like
+    /// [`ReconnectPolicy::backoff_delay`].
+    pub fn handshake_timeout(&self) -> Duration {
+        self.cap.saturating_mul(4).max(Duration::from_secs(1))
+    }
 }
 
 /// A backend living behind a TCP connection (loopback in the in-tree
@@ -168,27 +190,15 @@ impl RemoteBackend {
         Ok(())
     }
 
-    /// Per-attempt bound on the reconnect dial and handshake I/O, so a
-    /// half-open host (accepting into the backlog while parked on a
-    /// dead session) cannot wedge a nominally bounded retry loop.
-    fn handshake_timeout(&self) -> Duration {
-        (self.policy.cap * 4).max(Duration::from_secs(1))
-    }
-
     /// Bounded-backoff re-dial + handshake. `true` once a connection is
     /// live again (possibly to a bounced pool — see `self.bounced`).
     fn try_reconnect(&mut self) -> bool {
         self.stream = None;
-        let timeout = self.handshake_timeout();
+        let timeout = self.policy.handshake_timeout();
         for attempt in 0..self.policy.max_attempts {
-            if attempt > 0 {
-                let factor = 1u32 << (attempt - 1).min(16);
-                std::thread::sleep(
-                    self.policy
-                        .base
-                        .saturating_mul(factor)
-                        .min(self.policy.cap),
-                );
+            let delay = self.policy.backoff_delay(attempt);
+            if !delay.is_zero() {
+                std::thread::sleep(delay);
             }
             let Ok(stream) = TcpStream::connect_timeout(&self.addr, timeout) else { continue };
             if stream.set_nodelay(true).is_err()
@@ -350,5 +360,38 @@ impl Backend for RemoteBackend {
             WireReply::Finish(rep) => Ok(rep),
             rep => Err(TransportError::Frame(format!("unexpected reply {rep:?} to Finish"))),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_delays_double_and_clamp_at_the_cap() {
+        let p = ReconnectPolicy::default(); // base 20ms, cap 400ms
+        assert_eq!(p.backoff_delay(0), Duration::ZERO, "first re-dial is immediate");
+        assert_eq!(p.backoff_delay(1), Duration::from_millis(20));
+        assert_eq!(p.backoff_delay(2), Duration::from_millis(40));
+        assert_eq!(p.backoff_delay(5), Duration::from_millis(320));
+        assert_eq!(p.backoff_delay(6), Duration::from_millis(400), "clamped at cap");
+        assert_eq!(p.backoff_delay(u32::MAX), Duration::from_millis(400));
+    }
+
+    #[test]
+    fn pathological_policy_saturates_instead_of_overflowing() {
+        // `Duration::MAX * 4` via Duration's plain `Mul` aborts the
+        // process; the policy helpers must degrade to the clamp
+        let p = ReconnectPolicy {
+            max_attempts: u32::MAX,
+            base: Duration::MAX,
+            cap: Duration::MAX,
+        };
+        assert_eq!(p.backoff_delay(1), Duration::MAX);
+        assert_eq!(p.backoff_delay(40), Duration::MAX);
+        assert_eq!(p.handshake_timeout(), Duration::MAX);
+        // a tiny cap still floors the per-attempt handshake bound
+        let p = ReconnectPolicy { cap: Duration::from_nanos(1), ..ReconnectPolicy::default() };
+        assert_eq!(p.handshake_timeout(), Duration::from_secs(1));
     }
 }

@@ -151,6 +151,28 @@ impl Default for HedgeConfig {
     }
 }
 
+/// Depth bound on the executor's pack/dispatch overlap pipeline.
+///
+/// The executor splits each batch into up to `depth` micro-batches and
+/// keeps that many dispatches in flight per group: while layer `l`'s
+/// windows stream through the chips, layer `l`'s *next* micro-batch is
+/// already being quantized and packed on the host
+/// ([`ShardRouter::submit_layer`] / [`ShardRouter::collect`]).
+/// `depth == 1` is exactly the pre-pipeline serial behavior — one
+/// dispatch submitted, packed, and folded at a time.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Maximum uncollected [`PendingDispatch`]es a single executor may
+    /// hold ([`ShardRouter::submit_layer`] rejects the `depth + 1`th).
+    pub depth: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { depth: 2 }
+    }
+}
+
 /// Router construction knobs.
 #[derive(Clone, Debug)]
 pub struct RouterConfig {
@@ -158,11 +180,17 @@ pub struct RouterConfig {
     /// Bound on queued-but-unstarted jobs per member; a full primary
     /// queue spills the dispatch to its replica.
     pub inflight: usize,
+    /// Executor pipeline depth bound (see [`PipelineConfig`]).
+    pub pipeline: PipelineConfig,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        RouterConfig { hedge: HedgeConfig::default(), inflight: 32 }
+        RouterConfig {
+            hedge: HedgeConfig::default(),
+            inflight: 32,
+            pipeline: PipelineConfig::default(),
+        }
     }
 }
 
@@ -203,6 +231,10 @@ pub struct RouterStats {
     /// Connections re-established by member backends (bounded-backoff
     /// reconnects), as of the last [`ShardRouter::probe_members`].
     pub reconnects: u64,
+    /// High-water mark of simultaneously outstanding dispatch attempts
+    /// (pipelined submissions plus hedged duplicates) — the pipeline
+    /// depth bound is verifiable against this.
+    pub peak_inflight: u64,
 }
 
 enum MemberJob {
@@ -452,6 +484,40 @@ pub enum MemberState {
     Unreachable,
 }
 
+/// A dispatch issued by [`ShardRouter::submit_layer`] whose reply has
+/// not been collected yet. Opaque to callers: hand it back to
+/// [`ShardRouter::collect`]. Executors collect in FIFO submission
+/// order, but any order is correct — a reply that arrives for a
+/// different pending dispatch is stashed for its own `collect`, never
+/// dropped.
+pub struct PendingDispatch {
+    req_id: u64,
+    group: usize,
+    layer: usize,
+    epoch: u64,
+    /// Global member ids of the owning group.
+    members: Vec<usize>,
+    /// Rotation order (member-local indices) fixed at submit time.
+    order: Vec<usize>,
+    /// Position in `order` that accepted the primary attempt.
+    primary_pos: usize,
+    /// Per-member-local shard lists, retained so a hedge or failover
+    /// can rebuild the request after the route moved on.
+    shards: Vec<Arc<Vec<ShardRef>>>,
+    windows: WireWindows,
+    parent: TraceContext,
+    primary_ctx: TraceContext,
+    t0: Instant,
+    hedge_after: Option<Duration>,
+}
+
+impl PendingDispatch {
+    /// The request id stamped into every attempt of this dispatch.
+    pub fn request_id(&self) -> u64 {
+        self.req_id
+    }
+}
+
 /// The composite front end over the fleet. See the module docs for the
 /// topology, the hedging invariant, and the migration fence machine.
 pub struct ShardRouter {
@@ -474,6 +540,16 @@ pub struct ShardRouter {
     /// A member dispatch failed since the last probe: the owner should
     /// run [`ShardRouter::probe_members`] at the next batch boundary.
     suspect: bool,
+    /// Request ids submitted ([`ShardRouter::submit_layer`]) and not
+    /// yet collected. A fence drain clears this set, so collecting an
+    /// invalidated [`PendingDispatch`] fails cleanly instead of
+    /// blocking on a reply that was already discarded.
+    pending: BTreeSet<u64>,
+    /// Replies that arrived for a *pending* request while another
+    /// request was being collected, in arrival order. Consumed by the
+    /// matching [`ShardRouter::collect`]; discarded (and counted) by a
+    /// fence drain.
+    stash: Vec<(u64, usize, Result<DispatchReply>)>,
     stats: RouterStats,
     obs: RouterObs,
 }
@@ -489,6 +565,16 @@ impl ShardRouter {
         }
         if cfg.inflight == 0 {
             return Err(anyhow!("router inflight bound must be positive"));
+        }
+        if cfg.pipeline.depth == 0 {
+            return Err(anyhow!("pipeline depth must be positive (1 == serial dispatch)"));
+        }
+        if !(0.0..=1.0).contains(&cfg.hedge.quantile) {
+            return Err(anyhow!(
+                "hedge quantile {} is outside 0..=1 (this knob is a fraction, \
+                 not a percentile rank)",
+                cfg.hedge.quantile
+            ));
         }
         let (res_tx, res_rx) = channel::<(usize, MemberReply)>();
         let mut members: Vec<Member> = Vec::new();
@@ -527,6 +613,8 @@ impl ShardRouter {
             fenced: BTreeSet::new(),
             epoch_counter: 0,
             suspect: false,
+            pending: BTreeSet::new(),
+            stash: Vec::new(),
             stats: RouterStats::default(),
             obs: RouterObs::new(Arc::new(Obs::disabled())),
         };
@@ -582,6 +670,14 @@ impl ShardRouter {
         }
     }
 
+    /// Count one dispatch attempt handed to a member worker and keep
+    /// the in-flight high-water mark ([`RouterStats::peak_inflight`])
+    /// honest — the pipeline depth bound is asserted against it.
+    fn note_attempt_sent(&mut self) {
+        self.outstanding += 1;
+        self.stats.peak_inflight = self.stats.peak_inflight.max(self.outstanding as u64);
+    }
+
     /// Classify and count one dispatch reply that was **not** folded
     /// into an answer: a reply carrying a fenced epoch is a pre-cutover
     /// straggler ([`RouterStats::epoch_discards`]); any other unclaimed
@@ -598,15 +694,21 @@ impl ShardRouter {
 
     /// Serialized control call: send one job, return its (non-dispatch)
     /// reply. Stale dispatch replies draining in are discarded by
-    /// identity — they belong to hedges that already lost.
+    /// identity — they belong to hedges that already lost — while a
+    /// reply for a still-pending pipelined dispatch is stashed for its
+    /// eventual [`ShardRouter::collect`].
     fn call(&mut self, member: usize, job: MemberJob) -> Result<MemberReply> {
         self.send_blocking(member, job)?;
         loop {
             let (m, reply) = self.res_rx.recv().map_err(|_| TransportError::Closed)?;
             match reply {
-                MemberReply::Dispatch { result, .. } => {
+                MemberReply::Dispatch { request_id, result } => {
                     self.outstanding = self.outstanding.saturating_sub(1);
-                    self.note_unclaimed_dispatch(&result);
+                    if self.pending.contains(&request_id) {
+                        self.stash.push((request_id, m, result));
+                    } else {
+                        self.note_unclaimed_dispatch(&result);
+                    }
                 }
                 other => {
                     debug_assert_eq!(m, member, "control replies are strictly serialized");
@@ -662,6 +764,18 @@ impl ShardRouter {
     /// Fleet dispatch counters so far.
     pub fn stats(&self) -> RouterStats {
         self.stats.clone()
+    }
+
+    /// The configured executor pipeline depth bound
+    /// ([`PipelineConfig::depth`]; 1 == serial dispatch).
+    pub fn pipeline_depth(&self) -> usize {
+        self.cfg.pipeline.depth
+    }
+
+    /// Dispatches submitted through [`ShardRouter::submit_layer`] and
+    /// not yet collected.
+    pub fn pending_dispatches(&self) -> usize {
+        self.pending.len()
     }
 
     /// Attach an observability plane. The router starts with a disabled
@@ -1115,6 +1229,35 @@ impl ShardRouter {
         windows: WireWindows,
         parent: TraceContext,
     ) -> Result<Vec<(u32, Vec<i64>)>> {
+        let pending = self.submit_layer(route, layer, windows, parent)?;
+        self.collect(pending)
+    }
+
+    /// First half of [`ShardRouter::dispatch_layer`]: pick a member
+    /// (round-robin, spilling off a full queue) and send the request
+    /// without waiting for the reply. Up to [`PipelineConfig::depth`]
+    /// dispatches may be pending at once — the executor overlaps the
+    /// next micro-batch's quantize/pack work with these in-flight chip
+    /// dots and folds each reply via [`ShardRouter::collect`].
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Remote`] when every member of the owning group
+    /// is quarantined or the pipeline depth bound is already consumed;
+    /// [`TransportError::Closed`] when the router's workers are gone.
+    pub fn submit_layer(
+        &mut self,
+        route: &TenantRoute,
+        layer: usize,
+        windows: WireWindows,
+        parent: TraceContext,
+    ) -> Result<PendingDispatch> {
+        if self.pending.len() >= self.cfg.pipeline.depth {
+            return Err(TransportError::Remote(format!(
+                "pipeline depth {} exhausted: collect a pending dispatch first",
+                self.cfg.pipeline.depth
+            )));
+        }
         let lr = &route.layers[layer];
         let g = lr.group;
         let members = self.groups[g].members.clone();
@@ -1163,7 +1306,7 @@ impl ShardRouter {
                         .bus
                         .emit(ObsEvent::SpillOver { group: g, member: members[local] });
                 }
-                self.outstanding += 1;
+                self.note_attempt_sent();
                 primary_pos = Some(k);
                 break;
             }
@@ -1175,48 +1318,124 @@ impl ShardRouter {
                     members[order[0]],
                     MemberJob::Dispatch(request(order[0], primary_ctx)),
                 )?;
-                self.outstanding += 1;
+                self.note_attempt_sent();
                 0
             }
         };
         let t0 = Instant::now();
         let hedge_after =
             if n > 1 && self.cfg.hedge.enabled { Some(self.hedge_deadline(g)) } else { None };
-        let mut timer_armed = hedge_after.is_some();
+        self.pending.insert(req_id);
+        Ok(PendingDispatch {
+            req_id,
+            group: g,
+            layer,
+            epoch: route.epoch,
+            members,
+            order,
+            primary_pos,
+            shards: lr.shards.clone(),
+            windows,
+            parent,
+            primary_ctx,
+            t0,
+            hedge_after,
+        })
+    }
+
+    /// Second half of [`ShardRouter::dispatch_layer`]: wait for
+    /// `pending`'s reply, hedging past the group deadline and failing
+    /// over off a dead member exactly as the serial path does. A reply
+    /// for a *different* pending dispatch that arrives meanwhile is
+    /// stashed for that dispatch's own `collect` — never dropped. A
+    /// hedge for a pending dispatch fires only while it is the one
+    /// being collected, so at depth 1 this is exactly the old serial
+    /// timing.
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Remote`] when the last reachable member
+    /// rejected the request, or when `pending` was invalidated by a
+    /// fence drain ([`ShardRouter::fence_and_drain`] retires the whole
+    /// pipeline, not just the dispatch being collected);
+    /// [`TransportError::Closed`] when the router's workers are gone.
+    pub fn collect(&mut self, pending: PendingDispatch) -> Result<Vec<(u32, Vec<i64>)>> {
+        if !self.pending.remove(&pending.req_id) {
+            return Err(TransportError::Remote(
+                "pending dispatch was invalidated by a fence drain".into(),
+            ));
+        }
+        let p = pending;
+        let n = p.order.len();
+        let g = p.group;
+        let request = |local: usize, ctx: TraceContext| DispatchRequest {
+            request_id: p.req_id,
+            shard_epoch: p.epoch,
+            layer: p.layer as u32,
+            trace: ctx,
+            shards: Arc::clone(&p.shards[local]),
+            windows: p.windows.clone(),
+        };
+        let mut timer_armed = p.hedge_after.is_some();
         let mut hedge_member: Option<usize> = None;
         let mut hedge_span: Option<(TraceContext, Instant, usize)> = None;
         let mut in_flight = 1usize;
         loop {
-            let received = if timer_armed && hedge_member.is_none() {
-                let after = hedge_after.expect("armed timer has a deadline");
-                let elapsed = t0.elapsed();
-                if elapsed >= after {
-                    Err(RecvTimeoutError::Timeout)
-                } else {
-                    self.res_rx.recv_timeout(after - elapsed)
-                }
+            // a reply stashed while another dispatch was collected is
+            // consumed before the channel is touched (its `outstanding`
+            // decrement already happened on receipt)
+            let next = if let Some(i) = self.stash.iter().position(|(id, _, _)| *id == p.req_id) {
+                let (id, m, result) = self.stash.remove(i);
+                Ok((m, id, result))
             } else {
-                self.res_rx.recv().map_err(|_| RecvTimeoutError::Disconnected)
+                let recv = if timer_armed && hedge_member.is_none() {
+                    let after = p.hedge_after.expect("armed timer has a deadline");
+                    let elapsed = p.t0.elapsed();
+                    if elapsed >= after {
+                        Err(RecvTimeoutError::Timeout)
+                    } else {
+                        self.res_rx.recv_timeout(after - elapsed)
+                    }
+                } else {
+                    self.res_rx.recv().map_err(|_| RecvTimeoutError::Disconnected)
+                };
+                match recv {
+                    Ok((m, MemberReply::Dispatch { request_id, result })) => {
+                        self.outstanding = self.outstanding.saturating_sub(1);
+                        Ok((m, request_id, result))
+                    }
+                    Ok((_, _)) => {
+                        unreachable!("control replies cannot be in flight during a dispatch")
+                    }
+                    Err(e) => Err(e),
+                }
             };
-            match received {
-                Ok((m, MemberReply::Dispatch { request_id, result })) => {
-                    self.outstanding = self.outstanding.saturating_sub(1);
-                    if request_id != req_id {
-                        // a hedge that already lost (or a pre-cutover
-                        // straggler) — count it in exactly one bucket
-                        self.note_unclaimed_dispatch(&result);
+            match next {
+                Ok((m, request_id, result)) => {
+                    if request_id != p.req_id {
+                        if self.pending.contains(&request_id) {
+                            // another pipelined dispatch's reply: hold
+                            // it for that dispatch's own collect
+                            self.stash.push((request_id, m, result));
+                        } else {
+                            // a hedge that already lost (or a
+                            // pre-cutover straggler) — count it in
+                            // exactly one bucket
+                            self.note_unclaimed_dispatch(&result);
+                        }
                         continue;
                     }
                     let failed = match result {
-                        Ok(rep) if rep.shard_epoch == route.epoch => {
-                            let rtt = t0.elapsed();
+                        Ok(rep) if rep.shard_epoch == p.epoch => {
+                            let rtt = p.t0.elapsed();
                             self.groups[g].lat.record(rtt);
                             let hedge_won = hedge_member == Some(m);
                             if hedge_won {
                                 self.stats.hedge_wins += 1;
                             }
                             self.record_dispatch_spans(
-                                &rep, g, layer, m, t0, rtt, primary_ctx, hedge_span, hedge_won,
+                                &rep, g, p.layer, m, p.t0, rtt, p.primary_ctx, hedge_span,
+                                hedge_won,
                             );
                             return Ok(rep.dots);
                         }
@@ -1236,41 +1455,38 @@ impl ShardRouter {
                         if n > 1 && hedge_member.is_none() {
                             // the only attempt died: fail over to the
                             // replica instead of surfacing the error
-                            let alt = order[(primary_pos + 1) % n];
-                            let hctx = if parent.is_traced() {
-                                parent.child(self.obs.plane.trace.next_span())
+                            let alt = p.order[(p.primary_pos + 1) % n];
+                            let hctx = if p.parent.is_traced() {
+                                p.parent.child(self.obs.plane.trace.next_span())
                             } else {
                                 TraceContext::none()
                             };
                             self.send_blocking(
-                                members[alt],
+                                p.members[alt],
                                 MemberJob::Dispatch(request(alt, hctx)),
                             )?;
-                            self.outstanding += 1;
+                            self.note_attempt_sent();
                             self.stats.hedges_fired += 1;
-                            hedge_member = Some(members[alt]);
-                            hedge_span = Some((hctx, Instant::now(), members[alt]));
+                            hedge_member = Some(p.members[alt]);
+                            hedge_span = Some((hctx, Instant::now(), p.members[alt]));
                             in_flight = 1;
                         } else {
                             return Err(failed);
                         }
                     }
                 }
-                Ok((_, _)) => {
-                    unreachable!("control replies cannot be in flight during a dispatch")
-                }
                 Err(RecvTimeoutError::Timeout) => {
-                    let alt = order[(primary_pos + 1) % n];
-                    let hctx = if parent.is_traced() {
-                        parent.child(self.obs.plane.trace.next_span())
+                    let alt = p.order[(p.primary_pos + 1) % n];
+                    let hctx = if p.parent.is_traced() {
+                        p.parent.child(self.obs.plane.trace.next_span())
                     } else {
                         TraceContext::none()
                     };
-                    if self.try_send(members[alt], MemberJob::Dispatch(request(alt, hctx)))? {
-                        self.outstanding += 1;
+                    if self.try_send(p.members[alt], MemberJob::Dispatch(request(alt, hctx)))? {
+                        self.note_attempt_sent();
                         self.stats.hedges_fired += 1;
-                        hedge_member = Some(members[alt]);
-                        hedge_span = Some((hctx, Instant::now(), members[alt]));
+                        hedge_member = Some(p.members[alt]);
+                        hedge_span = Some((hctx, Instant::now(), p.members[alt]));
                         in_flight += 1;
                     } else {
                         // replica saturated: stop hedging this request
@@ -1362,8 +1578,17 @@ impl ShardRouter {
 
     /// Wait for every outstanding dispatch reply and discard it. Member
     /// workers are strictly serial, so every sent job is answered and
-    /// this terminates.
+    /// this terminates. The executor pipeline is retired wholesale:
+    /// uncollected [`PendingDispatch`]es are invalidated (their
+    /// `collect` fails cleanly instead of blocking on a discarded
+    /// reply) and already-stashed replies are discarded and counted
+    /// like any other drained straggler.
     fn drain_inflight(&mut self) -> Result<()> {
+        self.pending.clear();
+        let stashed = std::mem::take(&mut self.stash);
+        for (_, _, result) in &stashed {
+            self.note_unclaimed_dispatch(result);
+        }
         while self.outstanding > 0 {
             let (_, reply) = self.res_rx.recv().map_err(|_| TransportError::Closed)?;
             match reply {
@@ -2097,6 +2322,98 @@ mod tests {
             "the fence names the epoch it retired"
         );
         assert_eq!(events[2].event, ObsEvent::MigrationCompleted { layer: 1, epoch });
+        router.finish().unwrap();
+    }
+
+    #[test]
+    fn pipeline_depth_bounds_submissions_and_inflight() {
+        let served = Arc::new(AtomicU64::new(0));
+        let cfg = RouterConfig {
+            pipeline: PipelineConfig { depth: 2 },
+            ..RouterConfig::default()
+        };
+        let mut router = ShardRouter::replicated(
+            vec![MockBackend::boxed(Duration::from_millis(20), 0, Arc::clone(&served), 4)],
+            cfg,
+        )
+        .unwrap();
+        let route = route_one_layer(1);
+        let a = router.submit_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap();
+        let b = router.submit_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap();
+        assert_eq!(router.pending_dispatches(), 2);
+        let over = router.submit_layer(&route, 0, empty_windows(), TraceContext::none());
+        assert!(
+            matches!(over, Err(TransportError::Remote(_))),
+            "depth 2 must reject a third uncollected submission"
+        );
+        assert_eq!(router.collect(a).unwrap(), vec![(0, vec![4])]);
+        assert_eq!(router.collect(b).unwrap(), vec![(0, vec![4])]);
+        let stats = router.stats();
+        assert_eq!(stats.dispatches, 2);
+        assert_eq!(
+            stats.peak_inflight, 2,
+            "both submissions overlapped, and the depth bound was never exceeded"
+        );
+        router.finish().unwrap();
+        assert_eq!(served.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn out_of_order_collect_stashes_the_other_pendings_reply() {
+        // collect b before a: a's reply (the member worker is serial,
+        // so it arrives first) must be stashed for a's own collect
+        let served = Arc::new(AtomicU64::new(0));
+        let cfg = RouterConfig {
+            pipeline: PipelineConfig { depth: 2 },
+            ..RouterConfig::default()
+        };
+        let mut router = ShardRouter::replicated(
+            vec![MockBackend::boxed(Duration::ZERO, 0, Arc::clone(&served), 6)],
+            cfg,
+        )
+        .unwrap();
+        let route = route_one_layer(1);
+        let a = router.submit_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap();
+        let b = router.submit_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap();
+        assert_eq!(router.collect(b).unwrap(), vec![(0, vec![6])]);
+        assert_eq!(router.collect(a).unwrap(), vec![(0, vec![6])]);
+        let s = router.stats();
+        assert_eq!(s.stale_discarded + s.epoch_discards, 0, "no reply was dropped");
+        router.finish().unwrap();
+        assert_eq!(served.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn fence_drain_retires_the_whole_pipeline_and_collect_fails_cleanly() {
+        let served = Arc::new(AtomicU64::new(0));
+        let cfg = RouterConfig {
+            pipeline: PipelineConfig { depth: 4 },
+            ..RouterConfig::default()
+        };
+        let mut router = ShardRouter::replicated(
+            vec![MockBackend::boxed(Duration::ZERO, 0, Arc::clone(&served), 2)],
+            cfg,
+        )
+        .unwrap();
+        let mut route = route_one_layer(1);
+        route.epoch = router.next_epoch();
+        let a = router.submit_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap();
+        let b = router.submit_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap();
+        // cutover mid-pipeline: the fence must drain *every* pending
+        // dispatch, not just the one being collected
+        router.fence_and_drain(route.epoch).unwrap();
+        assert_eq!(router.pending_dispatches(), 0, "the fence retired every pending dispatch");
+        assert_eq!(router.stats().epoch_discards, 2, "both pipelined replies drained + counted");
+        for p in [a, b] {
+            let err = router.collect(p).unwrap_err();
+            assert!(matches!(err, TransportError::Remote(_)), "post-fence collect errors cleanly");
+        }
+        // the router serves again at the new epoch
+        route.epoch = router.next_epoch();
+        assert_eq!(
+            router.dispatch_layer(&route, 0, empty_windows(), TraceContext::none()).unwrap(),
+            vec![(0, vec![2])]
+        );
         router.finish().unwrap();
     }
 }

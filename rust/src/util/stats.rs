@@ -29,9 +29,21 @@ pub fn summarize(xs: &[f64]) -> Summary {
     }
 }
 
-/// p-th percentile (0..=100) by linear interpolation on the sorted sample.
+/// p-th percentile by linear interpolation on the sorted sample.
+///
+/// `p` is a percentile **rank on the 0..=100 scale** (`50.0` is the
+/// median) — not the `0..=1` *fraction* taken by the quantile family
+/// ([`crate::serve::stats::LatencyHistogram::quantile`] and the
+/// `quantile` knob of [`crate::serve::transport::HedgeConfig`]). A
+/// fraction passed here silently reads as a sub-1st-percentile rank,
+/// so debug builds assert the range.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty sample");
+    debug_assert!(
+        (0.0..=100.0).contains(&p),
+        "percentile rank {p} is outside 0..=100 — \
+         for a 0..=1 fraction use the quantile family instead"
+    );
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = (p / 100.0) * (v.len() - 1) as f64;

@@ -327,7 +327,7 @@ fn host_pool_survives_a_dropped_connection() {
     assert_eq!(info.incarnation, incarnation, "same pool across sessions");
     let widths = segment_widths(bits.len(), info.data_cols as usize);
     let flat: Vec<u8> = (0..2 * bits.len()).map(|i| (i * 13 % 256) as u8).collect();
-    let pw = Arc::new(vmm::pack_windows(&flat, &widths));
+    let pw = Arc::new(vmm::pack_windows(&flat, &widths).unwrap());
     let reply = second
         .dispatch(rram_cim::serve::transport::DispatchRequest {
             request_id: 1,
@@ -387,7 +387,7 @@ fn fenced_stale_reply_over_tcp_is_counted_exactly_once() {
     let route = TenantRoute { epoch, layers: vec![LayerRoute { group: 0, shards }] };
     let widths = segment_widths(bits.len(), router.data_cols());
     let flat: Vec<u8> = (0..bits.len()).map(|i| (i * 7 % 256) as u8).collect();
-    let pw = Arc::new(vmm::pack_windows(&flat, &widths));
+    let pw = Arc::new(vmm::pack_windows(&flat, &widths).unwrap());
     let dots = router.dispatch_layer(&route, 0, WireWindows::Binary(pw)).unwrap();
     assert_eq!(dots, vec![(0, vec![vmm::binary_dot_ref(&bits, &flat)])]);
     // hedge fired on every dispatch (after == 0): exactly one loser is
