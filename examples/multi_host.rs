@@ -24,11 +24,17 @@
 //!   (fresh pool, fresh incarnation) takes over its address; B's client
 //!   reconnects with bounded backoff, quarantines itself, and the
 //!   engine re-programs it at the current epoch before it serves again;
+//! * the **live prune loop** on a second, deliberately redundant tenant
+//!   — the similarity monitor proposes mid-serve, the epoch-fenced
+//!   prune cutover (DESIGN.md §12) commits over the same fleet, and the
+//!   tenant's answers are checked against the *pruned-mask* oracle;
 //! * the **observability plane** riding all of it — the operator event
 //!   bus (`Engine::events`) is asserted to carry the exact transition
-//!   sequence the migration and the bounce must produce (gapless seq,
-//!   exactly-once per transition), and one hedged request's spans are
-//!   stitched across the hosts and printed as a tree (DESIGN.md §10).
+//!   sequence the migration, the bounce, and the prune cutover must
+//!   produce (gapless seq, exactly-once per transition, plan → start →
+//!   fence → commit, never an abort), and one hedged request's spans
+//!   are stitched across the hosts and printed as a tree (DESIGN.md
+//!   §10).
 //!
 //! Every response is asserted against `ModelBundle::reference_logits`:
 //! zero wrong logits, by construction — the chips are digital, so a
@@ -41,20 +47,59 @@
 // apply outside `rust/src/serve/**`.
 #![allow(clippy::disallowed_macros)]
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Duration;
 
 use rram_cim::bench::print_table;
 use rram_cim::chip::ChipConfig;
 use rram_cim::nn::data::mnist;
+use rram_cim::pruning::PruneConfig;
 use rram_cim::serve::obs::Stage;
 use rram_cim::serve::transport::{
     Backend, Host, HostConfig, ReconnectPolicy, RemoteBackend, ShardRouter,
 };
 use rram_cim::serve::{
-    AdmissionConfig, CacheConfig, Engine, EngineConfig, HedgeConfig, ModelBundle, ObsEvent,
-    PoolConfig, RebalanceConfig, RouterConfig, TenantConfig,
+    AdmissionConfig, CacheConfig, Engine, EngineConfig, EventSubscriber, HedgeConfig,
+    LivePruneConfig, MnistBundle, ModelBundle, ObsEvent, PoolConfig, RebalanceConfig, RouterConfig,
+    TenantConfig,
 };
+
+/// Serve one request per image to the redundant tenant (tenant 1) and
+/// check each answer against the pruned-mask oracle: a clone advanced
+/// lazily through the `PruneCommitted` event sequence, so an answer
+/// must match the masks its batch served under (the same discipline
+/// `rust/tests/live_prune.rs` property-tests).
+fn pruned_round(
+    engine: &Engine,
+    events: &EventSubscriber,
+    images: &mnist::Dataset,
+    oracle: &mut ModelBundle,
+    commits: &mut VecDeque<(usize, Vec<usize>)>,
+) -> anyhow::Result<u64> {
+    let mut exact = 0u64;
+    for i in 0..images.len() {
+        let input = images.sample(i);
+        let resp = engine.submit(1, input.to_vec()).recv()?;
+        for rec in events.drain() {
+            if let ObsEvent::PruneCommitted { tenant: 1, layer, filters, .. } = rec.event {
+                commits.push_back((layer, filters));
+            }
+        }
+        loop {
+            if resp.logits == oracle.reference_logits(input) {
+                break;
+            }
+            let (layer, filters) =
+                commits.pop_front().expect("logits must match a committed mask state");
+            for f in filters {
+                oracle.prune_filter(layer, f);
+            }
+        }
+        exact += 1;
+    }
+    Ok(exact)
+}
 
 fn main() -> anyhow::Result<()> {
     rram_cim::util::logging::init();
@@ -98,6 +143,19 @@ fn main() -> anyhow::Result<()> {
         model.total_filters(),
         model.rows_required(30)
     );
+    // --- plus a deliberately redundant tenant for the live prune loop:
+    // every filter repeats one of two sign prototypes (similarity 1.0
+    // within each class), so the monitor has guaranteed mid-run work ---
+    let red_model: ModelBundle = {
+        let mut red = MnistBundle::synthetic([6, 6, 6], 0.0, 77);
+        for layer in &mut red.conv {
+            let protos: Vec<Vec<bool>> = layer.bits[..2].to_vec();
+            for (f, bits) in layer.bits.iter_mut().enumerate() {
+                *bits = protos[f % 2].clone();
+            }
+        }
+        red.into()
+    };
     let cfg = EngineConfig {
         pool: PoolConfig::default(), // ignored: the fleet is the router's
         admission: AdmissionConfig {
@@ -107,10 +165,25 @@ fn main() -> anyhow::Result<()> {
         },
         cache: CacheConfig { capacity: 0 }, // every request hits silicon
         rebalance: RebalanceConfig { every_batches: 4, max_moves: 2, group_moves: 1 },
+        // the live prune loop, on a serving cadence: similarity-monitor
+        // every 2 chip batches, cut at most one layer over per pass
+        prune: LivePruneConfig {
+            every_batches: 2,
+            max_layers_per_pass: 1,
+            rule: PruneConfig { min_live_per_layer: 1, max_prune_rate: 1.0, ..Default::default() },
+        },
         obs: true,
     };
-    let engine =
-        Engine::start_with_router(vec![TenantConfig::new("mnist", model.clone())], router, &cfg)?;
+    // tenant 0 opts out (its dense reference logits anchor the
+    // migration/bounce assertions); tenant 1 is the prune loop's
+    let engine = Engine::start_with_router(
+        vec![
+            TenantConfig::new("mnist", model.clone()).without_live_prune(),
+            TenantConfig::new("redundant", red_model.clone()),
+        ],
+        router,
+        &cfg,
+    )?;
 
     // the observability plane: a deep event subscriber (nothing may
     // overflow — the assertions below need the complete transition
@@ -118,6 +191,14 @@ fn main() -> anyhow::Result<()> {
     // the trace ring can be rendered after shutdown
     let events = engine.events_with(4096);
     let plane = Arc::clone(engine.obs());
+    // a second, independent subscriber feeds the pruned-mask oracle —
+    // draining it mid-run leaves the `events` log above complete for
+    // the end-of-run transition assertions
+    let prune_events = engine.events_with(4096);
+    let mut red_oracle = red_model.clone();
+    let mut red_commits: VecDeque<(usize, Vec<usize>)> = VecDeque::new();
+    let mut red_exact = 0u64;
+    let red_images = mnist::generate(4, 0xbeef);
 
     // --- traffic: distinct images, every answer checked bit-exactly ---
     let images = mnist::generate(24, 0x5eed);
@@ -136,13 +217,19 @@ fn main() -> anyhow::Result<()> {
         }
         Ok(())
     };
-    // round 1: warm-up (builds the heat signal and latency histograms)
+    // round 1: warm-up (builds the heat signal and latency histograms);
+    // the redundant tenant's traffic advances the prune monitor, and
+    // the loop starts cutting its duplicate filters over mid-round
     round(&mut exact, "a hedged two-group fleet")?;
+    red_exact +=
+        pruned_round(&engine, &prune_events, &red_images, &mut red_oracle, &mut red_commits)?;
     // round 2: force a rebalance pass — wear moves level the hottest
     // chips, and the capacity planner may migrate a whole layer BETWEEN
     // the groups through the epoch-fenced cutover
     engine.force_rebalance();
     round(&mut exact, "an epoch-fenced cross-host migration")?;
+    red_exact +=
+        pruned_round(&engine, &prune_events, &red_images, &mut red_oracle, &mut red_commits)?;
     // round 3: host B crashes; a replacement with a fresh pool takes
     // over the exact same address. B's backend reconnects with bounded
     // backoff, reports the bounce, and the engine re-programs it at the
@@ -153,6 +240,8 @@ fn main() -> anyhow::Result<()> {
     let replacement = Host::spawn_at(addr, HostConfig { pool: pool(0xb0b2) })?;
     println!("replacement pool live at {addr}");
     round(&mut exact, "a bounced-and-healed fleet")?;
+    red_exact +=
+        pruned_round(&engine, &prune_events, &red_images, &mut red_oracle, &mut red_commits)?;
     let report = engine.shutdown();
 
     // --- the receipts ---
@@ -235,6 +324,21 @@ fn main() -> anyhow::Result<()> {
         "the forced pass must complete a cross-host layer migration"
     );
 
+    // --- the live prune loop's receipts ---
+    let p = &report.prune;
+    let rts = &p.per_tenant[1];
+    println!(
+        "\nlive prune: {red_exact} redundant-tenant answers, every one bit-exact against the \
+         pruned oracle; {} cutovers retired {} filters and freed {} rows",
+        p.cutovers, rts.filters_pruned, rts.rows_freed
+    );
+    assert_eq!(red_exact, 12, "three rounds of four redundant-tenant requests");
+    assert!(p.cutovers >= 1, "the redundant tenant must commit a live cutover");
+    assert_eq!(p.aborted, 0, "a healthy fleet never aborts a prune cutover");
+    assert!(rts.filters_pruned > 0, "committed cutovers retire filters");
+    assert!(rts.rows_freed > 0, "committed cutovers free rows");
+    assert_eq!(p.per_tenant[0].filters_pruned, 0, "tenant 0 opted out and stays dense");
+
     // --- the operator event log: the fleet's story, as transitions ---
     let log = events.drain();
     println!(
@@ -298,6 +402,21 @@ fn main() -> anyhow::Result<()> {
     };
     find(quarantined + 1, &|e| matches!(e, ObsEvent::Rejoin { member: m } if *m == member))
         .expect("quarantine strictly precedes the re-programmed member's rejoin");
+    // the prune cutover: planned → started → fenced → committed, in
+    // that order, never aborted (DESIGN.md §12's only commit path)
+    let pp = find(0, &|e| matches!(e, ObsEvent::PrunePlanned { tenant: 1, .. }))
+        .expect("the prune loop announces a plan for the redundant tenant");
+    let ps = find(pp, &|e| matches!(e, ObsEvent::PruneStarted { tenant: 1, .. }))
+        .expect("a validated plan starts its cutover");
+    let pf = find(ps, &|e| matches!(e, ObsEvent::PruneFenced { tenant: 1, .. }))
+        .expect("the cutover fences its epoch");
+    let pc = find(pf, &|e| matches!(e, ObsEvent::PruneCommitted { tenant: 1, .. }))
+        .expect("the cutover commits");
+    assert!(pp < ps && ps < pf && pf < pc, "plan → start → fence → commit, in that order");
+    assert!(
+        !log.iter().any(|r| matches!(r.event, ObsEvent::PruneAborted { .. })),
+        "a live prune cutover never aborts on this fleet"
+    );
 
     // --- one hedged request, stitched across the hosts ---
     let spans = plane.trace.spans();
@@ -330,8 +449,8 @@ fn main() -> anyhow::Result<()> {
     replacement.join();
     println!(
         "\nmulti-host serving OK: three hosts, a hedged pair, an epoch-fenced cross-host \
-         migration, one host bounce, an asserted operator-event log and a stitched \
-         hedged trace — zero wrong logits"
+         migration, one host bounce, a live prune cutover on a serving tenant, an asserted \
+         operator-event log and a stitched hedged trace — zero wrong logits"
     );
     Ok(())
 }

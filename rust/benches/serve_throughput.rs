@@ -22,11 +22,12 @@ use rram_cim::cim::mapping::{store_bits, store_int8, RowAllocator};
 use rram_cim::cim::vmm;
 use rram_cim::nn::data::{mnist, modelnet, Dataset};
 use rram_cim::nn::pointnet::GroupingConfig;
+use rram_cim::pruning::PruneConfig;
 use rram_cim::serve::transport::{Backend, Host, HostConfig, LocalBackend, RemoteBackend};
 use rram_cim::serve::{
-    AdmissionConfig, BatcherConfig, CacheConfig, Engine, EngineConfig, HedgeConfig, ModelBundle,
-    PipelineConfig, PointNetBundle, PoolConfig, RebalanceConfig, RouterConfig, Server,
-    ServerConfig, ShardRouter, TenantConfig,
+    AdmissionConfig, BatcherConfig, CacheConfig, Engine, EngineConfig, HedgeConfig,
+    LivePruneConfig, MnistBundle, ModelBundle, PipelineConfig, PointNetBundle, PoolConfig,
+    RebalanceConfig, RouterConfig, Server, ServerConfig, ShardRouter, TenantConfig,
 };
 use rram_cim::util::json::Json;
 use rram_cim::util::rng::Rng;
@@ -215,11 +216,139 @@ fn main() {
     // --- dispatch pipeline: serial vs depth-bounded overlap ---
     let pipeline_speedup = pipeline_table(&dense, &images);
 
+    // --- live in-situ pruning: dense vs the converged live-pruned state ---
+    let (live_prune_speedup, live_prune_cut_pct) = live_prune_table(&images);
+
     // --- VMM kernels: chunked hot path vs the scalar oracle ---
     let (simd_binary, simd_int8) = kernel_table();
 
     // --- observability overhead + machine-readable export ---
-    obs_overhead_and_export(&pruned, &images, pipeline_speedup, simd_binary, simd_int8);
+    obs_overhead_and_export(
+        &pruned,
+        &images,
+        pipeline_speedup,
+        simd_binary,
+        simd_int8,
+        live_prune_speedup,
+        live_prune_cut_pct,
+    );
+}
+
+/// The live prune loop's serving payoff: one MNIST tenant with ~30%
+/// planted sign-bit redundancy per layer, served twice on identical
+/// 4-chip pools — the loop off (dense baseline) vs on. Both arms serve
+/// a sequential warm-up phase first — with the loop on, that is where
+/// the similarity monitor proposes and the epoch-fenced cutovers land —
+/// so the measured burst phase runs at the converged, re-sharded state.
+/// Returns (speedup, MAC-op reduction %) for the JSON export.
+fn live_prune_table(images: &Dataset) -> (f64, f64) {
+    let model: ModelBundle = {
+        let mut red = MnistBundle::synthetic([32, 64, 32], 0.0, 0x11f3);
+        for layer in &mut red.conv {
+            let k = (layer.bits.len() * 3).div_ceil(10); // ~30% of the layer
+            let proto = layer.bits[0].clone();
+            for bits in layer.bits.iter_mut().take(k) {
+                *bits = proto.clone();
+            }
+        }
+        red.into()
+    };
+    let mut inf_s = [0.0f64; 2];
+    let mut reduction_pct = 0.0;
+    let mut rows = Vec::new();
+    for (ai, live) in [false, true].into_iter().enumerate() {
+        let mut best = 0.0f64;
+        let mut best_row: Option<Vec<String>> = None;
+        for rep in 0..3u64 {
+            let cfg = EngineConfig {
+                pool: PoolConfig { chips: 4, seed: 0x11f5 + rep, ..PoolConfig::default() },
+                admission: AdmissionConfig {
+                    max_batch: 32,
+                    max_wait: Duration::from_millis(1),
+                    quantum: 32,
+                },
+                cache: CacheConfig { capacity: 0 }, // every request hits silicon
+                rebalance: RebalanceConfig::default(),
+                prune: if live {
+                    LivePruneConfig {
+                        every_batches: 1,
+                        max_layers_per_pass: 3,
+                        rule: PruneConfig {
+                            min_live_per_layer: 1,
+                            max_prune_rate: 1.0,
+                            ..Default::default()
+                        },
+                    }
+                } else {
+                    Default::default()
+                },
+                obs: true,
+            };
+            let engine = Engine::start(vec![TenantConfig::new("mnist", model.clone())], &cfg)
+                .expect("the redundant tenant fits a 4-chip pool");
+            // warm-up: sequential traffic (one batch per request) gives
+            // the loop a prune-pass opportunity at every boundary
+            for i in 0..MNIST_REQUESTS {
+                let rx = engine.submit(0, images.sample(i % images.len()).to_vec());
+                rx.recv().expect("warm-up answered every request");
+            }
+            // measured phase: burst traffic at the converged state
+            let t0 = Instant::now();
+            let mut pending = Vec::with_capacity(MNIST_REQUESTS);
+            for i in 0..MNIST_REQUESTS {
+                pending.push(engine.submit(0, images.sample(i % images.len()).to_vec()));
+            }
+            for rx in pending {
+                rx.recv().expect("live-prune run answered every request");
+            }
+            let measured = MNIST_REQUESTS as f64 / t0.elapsed().as_secs_f64();
+            let report = engine.shutdown();
+            assert_eq!(report.answered() as usize, 2 * MNIST_REQUESTS, "lost requests");
+            let ts = &report.prune.per_tenant[0];
+            if live {
+                assert!(report.prune.cutovers > 0, "the redundant tenant must commit cutovers");
+                assert_eq!(report.prune.aborted, 0, "no aborts on an ideal pool");
+            } else {
+                assert_eq!(report.prune.cutovers, 0, "the loop is off in the dense arm");
+            }
+            if measured > best {
+                best = measured;
+                if live {
+                    reduction_pct = 100.0 * ts.mac_reduction();
+                }
+                let arm = if live {
+                    "live-pruned"
+                } else {
+                    "dense (loop off)"
+                };
+                best_row = Some(vec![
+                    arm.to_string(),
+                    format!("{measured:.1}"),
+                    format!("{}", ts.filters_pruned),
+                    format!("{:.2}%", 100.0 * ts.prune_rate),
+                    format!("{:.2}%", 100.0 * ts.mac_reduction()),
+                    format!("{}", ts.rows_freed),
+                ]);
+            }
+        }
+        inf_s[ai] = best;
+        rows.push(best_row.expect("three reps ran"));
+    }
+    let speedup = inf_s[1] / inf_s[0];
+    print_table(
+        &format!(
+            "serve: live in-situ pruning payoff, redundant MNIST tenant, 4-chip pool \
+             ({MNIST_REQUESTS} warm-up + {MNIST_REQUESTS} measured requests, best of 3)"
+        ),
+        &["arm", "inf/s (measured)", "filters pruned", "prune rate", "MAC-op cut", "rows freed"],
+        &rows,
+    );
+    println!("\nlive prune: converged live-pruned vs dense serving: {speedup:.2}x");
+    assert!(
+        speedup > 1.0,
+        "the live-pruned tenant must out-serve its dense self (got {speedup:.2}x)"
+    );
+    (speedup, reduction_pct)
 }
 
 /// The dense MNIST tenant on one local 8-chip fleet, served serial
@@ -237,6 +366,7 @@ fn pipeline_table(model: &ModelBundle, images: &Dataset) -> f64 {
         },
         cache: CacheConfig { capacity: 0 }, // every request hits silicon
         rebalance: RebalanceConfig::default(),
+        prune: Default::default(),
         obs: true,
     };
     let reference: Vec<Vec<f32>> =
@@ -402,12 +532,15 @@ fn kernel_table() -> (f64, f64) {
 /// pipeline and kernel speedups from the tables above, and the obs-on
 /// run's full metrics snapshot are written to `BENCH_serve.json` — the
 /// artifact CI uploads and gates on.
+#[allow(clippy::too_many_arguments)]
 fn obs_overhead_and_export(
     model: &ModelBundle,
     images: &Dataset,
     pipeline_speedup: f64,
     simd_binary: f64,
     simd_int8: f64,
+    live_prune_speedup: f64,
+    live_prune_cut_pct: f64,
 ) {
     let run = |obs: bool| -> (f64, Option<Json>) {
         let mut best = 0.0f64;
@@ -422,6 +555,7 @@ fn obs_overhead_and_export(
                 },
                 cache: CacheConfig { capacity: 0 }, // every request hits silicon
                 rebalance: RebalanceConfig::default(),
+                prune: Default::default(),
                 obs,
             };
             let engine = Engine::start(vec![TenantConfig::new("mnist", model.clone())], &cfg)
@@ -463,7 +597,9 @@ fn obs_overhead_and_export(
             .set("obs_overhead_pct", overhead_pct)
             .set("pipeline_speedup_local_dense", pipeline_speedup)
             .set("simd_speedup_binary", simd_binary)
-            .set("simd_speedup_int8", simd_int8),
+            .set("simd_speedup_int8", simd_int8)
+            .set("live_prune_speedup", live_prune_speedup)
+            .set("live_prune_mac_reduction_pct", live_prune_cut_pct),
     );
     let body = out.render() + "\n";
     std::fs::write("BENCH_serve.json", &body).expect("write BENCH_serve.json");
@@ -486,6 +622,7 @@ fn transport_table(model: &ModelBundle, images: &Dataset) {
         },
         cache: CacheConfig { capacity: 0 }, // every request hits silicon
         rebalance: RebalanceConfig::default(),
+        prune: Default::default(),
         obs: true,
     };
     let pool = |chips: usize, seed: u64| PoolConfig { chips, seed, ..PoolConfig::default() };
@@ -575,6 +712,7 @@ fn mixed_tenancy_table(
         },
         cache: CacheConfig { capacity: 512 },
         rebalance: RebalanceConfig { every_batches: 8, max_moves: 2, group_moves: 0 },
+        prune: Default::default(),
         obs: true,
     };
     let tenants = vec![

@@ -27,6 +27,18 @@ impl SimilarityMatrix {
     pub fn similarity(&self, i: usize, j: usize) -> f64 {
         1.0 - self.distance(i, j) as f64 / self.n_bits.max(1) as f64
     }
+
+    /// Cosine of the two kernels' ±1 sign vectors, recovered from the
+    /// Hamming distance alone: agreeing bits contribute +1 to the dot
+    /// product and disagreeing bits −1, so `dot = n − 2d`, and both
+    /// norms are √n — hence `cos = (n − 2d)/n = 2·similarity − 1`.
+    /// This is the float-geometry meaning of the chip's XOR+popcount
+    /// primitive (property-tested against a float cosine oracle in
+    /// [`crate::pruning::similarity`]).
+    pub fn signed_cosine(&self, i: usize, j: usize) -> f64 {
+        let n = self.n_bits.max(1) as f64;
+        (n - 2.0 * self.distance(i, j) as f64) / n
+    }
 }
 
 /// Kernels stored on-chip for repeated similarity searches.
@@ -161,6 +173,16 @@ mod tests {
         let m = similarity_matrix(&mut chip, &stored, &[true, true]);
         assert_eq!(m.distance(0, 1), 0);
         assert!((m.similarity(0, 1) - 1.0).abs() < 1e-12);
+        assert!((m.signed_cosine(0, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn signed_cosine_is_two_similarity_minus_one() {
+        let m = SimilarityMatrix { k: 2, n_bits: 16, dist: vec![0, 5, 5, 0] };
+        assert!((m.signed_cosine(0, 1) - (2.0 * m.similarity(0, 1) - 1.0)).abs() < 1e-12);
+        // opposite sign vectors: d == n -> cosine −1
+        let opp = SimilarityMatrix { k: 2, n_bits: 16, dist: vec![0, 16, 16, 0] };
+        assert!((opp.signed_cosine(0, 1) + 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -67,6 +67,10 @@ pub struct PruningScheduler {
     /// Fig. 4i "total weights" curve.
     weights_per_kernel: Vec<usize>,
     events: Vec<PruneEvent>,
+    /// Highest epoch already evaluated: replaying it (or anything
+    /// earlier) is a no-op, so a caller that retries a pass never
+    /// double-prunes.
+    last_evaluated: Option<usize>,
 }
 
 impl PruningScheduler {
@@ -77,6 +81,26 @@ impl PruningScheduler {
             live: layer_sizes.iter().map(|&(k, _)| vec![true; k]).collect(),
             weights_per_kernel: layer_sizes.iter().map(|&(_, w)| w).collect(),
             events: Vec::new(),
+            last_evaluated: None,
+        }
+    }
+
+    /// A scheduler whose live masks start from an *already pruned*
+    /// model (the serve-side live-prune monitor seeds one from
+    /// [`crate::serve::ModelBundle`] masks each pass, so the global
+    /// rate cap counts export-time pruning too).
+    pub fn from_live_masks(
+        cfg: PruneConfig,
+        masks: &[Vec<bool>],
+        weights_per_kernel: &[usize],
+    ) -> Self {
+        assert_eq!(masks.len(), weights_per_kernel.len(), "one weight count per layer");
+        PruningScheduler {
+            cfg,
+            live: masks.to_vec(),
+            weights_per_kernel: weights_per_kernel.to_vec(),
+            events: Vec::new(),
+            last_evaluated: None,
         }
     }
 
@@ -124,9 +148,15 @@ impl PruningScheduler {
             .sum()
     }
 
-    /// Fraction of kernels pruned so far.
+    /// Fraction of kernels pruned so far. A scheduler over zero kernels
+    /// (no prunable layers, or every layer empty) has pruned nothing:
+    /// the rate is 0.0, not the 1.0 the naive ratio would report.
     pub fn prune_rate(&self) -> f64 {
-        1.0 - self.total_live() as f64 / self.total_kernels().max(1) as f64
+        let total = self.total_kernels();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.total_live() as f64 / total as f64
     }
 
     pub fn events(&self) -> &[PruneEvent] {
@@ -142,8 +172,21 @@ impl PruningScheduler {
     /// Run one prune evaluation given per-layer similarity matrices of
     /// the *current* live kernels (entries for pruned kernels must be
     /// u32::MAX, as all three similarity sources produce).
+    ///
+    /// Idempotent on repeated epochs: re-evaluating an epoch already
+    /// evaluated (or any earlier one) returns an empty event and
+    /// mutates nothing, so a retried training step or serve pass never
+    /// double-prunes.
     pub fn evaluate(&mut self, epoch: usize, sims: &[SimilarityMatrix]) -> PruneEvent {
         assert_eq!(sims.len(), self.live.len(), "one matrix per layer");
+        if matches!(self.last_evaluated, Some(e) if epoch <= e) {
+            return PruneEvent {
+                epoch,
+                candidates_per_layer: vec![0; self.live.len()],
+                ..Default::default()
+            };
+        }
+        self.last_evaluated = Some(epoch);
         let mut event = PruneEvent { epoch, ..Default::default() };
         let total = self.total_kernels();
         for (layer, sim) in sims.iter().enumerate() {
@@ -173,8 +216,10 @@ impl PruningScheduler {
                 if freq[i] < self.cfg.freq_threshold || !self.live[layer][i] {
                     continue;
                 }
-                // floors: per-layer minimum and global rate cap
-                if self.live_count(layer) <= self.cfg.min_live_per_layer {
+                // floors: per-layer minimum (never below one — a layer
+                // must keep a live representative even when the config
+                // says 0) and the global rate cap
+                if self.live_count(layer) <= self.cfg.min_live_per_layer.max(1) {
                     break;
                 }
                 let rate_after = 1.0 - (self.total_live() - 1) as f64 / total as f64;
@@ -313,6 +358,77 @@ mod tests {
         sched.evaluate(2, &[sim]);
         assert_eq!(sched.total_live_weights(), sched.total_live() * 32);
         assert!(sched.total_live() < 6);
+    }
+
+    #[test]
+    fn zero_kernel_layers_report_zero_prune_rate() {
+        // no layers at all
+        let empty = PruningScheduler::new(PruneConfig::default(), &[]);
+        assert_eq!(empty.prune_rate(), 0.0, "nothing to prune is a 0% rate, not 100%");
+        assert_eq!(empty.total_live(), 0);
+        // a zero-kernel layer next to a real one: evaluate must not
+        // panic, and the rate only counts the real kernels
+        let kernels = clustered_kernels(&[2], 16, 9);
+        let mut sched = PruningScheduler::new(PruneConfig::default(), &[(0, 16), (2, 16)]);
+        assert_eq!(sched.prune_rate(), 0.0);
+        let empty_sim = sim_of(&Vec::new(), &[]);
+        let real_sim = sim_of(&kernels, sched.live_mask(1));
+        let ev = sched.evaluate(2, &[empty_sim, real_sim]);
+        assert_eq!(ev.candidates_per_layer[0], 0);
+        assert_eq!(sched.live_mask(0).len(), 0);
+    }
+
+    #[test]
+    fn never_prunes_a_layers_last_live_kernel() {
+        // two byte-identical kernels and a config that says "no floor":
+        // the scheduler must still keep one representative alive
+        let kernels = clustered_kernels(&[2], 32, 10);
+        let mut sched = PruningScheduler::new(
+            PruneConfig { min_live_per_layer: 0, max_prune_rate: 1.0, ..Default::default() },
+            &[(2, 32)],
+        );
+        let sim = sim_of(&kernels, sched.live_mask(0));
+        sched.evaluate(2, &[sim]);
+        assert_eq!(sched.live_count(0), 1, "one survivor, even with a zero floor");
+        // and a second pass over the sole survivor is a no-op
+        let sim2 = sim_of(&kernels, sched.live_mask(0));
+        let ev2 = sched.evaluate(4, &[sim2]);
+        assert!(ev2.pruned.is_empty());
+        assert_eq!(sched.live_count(0), 1);
+    }
+
+    #[test]
+    fn evaluate_is_idempotent_on_repeated_epochs() {
+        let kernels = clustered_kernels(&[4], 64, 11);
+        let mut sched = PruningScheduler::new(
+            PruneConfig { min_live_per_layer: 1, ..Default::default() },
+            &[(4, 64)],
+        );
+        let sim = sim_of(&kernels, sched.live_mask(0));
+        let first = sched.evaluate(2, &[sim.clone()]);
+        assert!(!first.pruned.is_empty());
+        let live_after = sched.total_live();
+        let events_after = sched.events().len();
+        // replaying the same epoch (e.g. a retried pass) changes nothing
+        let replay = sched.evaluate(2, &[sim.clone()]);
+        assert!(replay.pruned.is_empty(), "replay must not double-prune");
+        assert_eq!(sched.total_live(), live_after);
+        assert_eq!(sched.events().len(), events_after, "replays are not recorded");
+        // nor does an *earlier* epoch arriving late
+        let stale = sched.evaluate(1, &[sim]);
+        assert!(stale.pruned.is_empty());
+        assert_eq!(sched.total_live(), live_after);
+    }
+
+    #[test]
+    fn from_live_masks_seeds_already_pruned_state() {
+        let masks = vec![vec![true, false, true], vec![false, true]];
+        let sched = PruningScheduler::from_live_masks(PruneConfig::default(), &masks, &[9, 9]);
+        assert_eq!(sched.total_kernels(), 5);
+        assert_eq!(sched.total_live(), 3);
+        assert_eq!(sched.live_mask(0), &[true, false, true]);
+        assert!((sched.prune_rate() - 0.4).abs() < 1e-12);
+        assert_eq!(sched.total_live_weights(), 3 * 9);
     }
 
     #[test]

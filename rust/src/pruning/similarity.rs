@@ -35,16 +35,26 @@ pub fn packed_hamming(a: &[u64], b: &[u64]) -> u32 {
 }
 
 impl PackedKernels {
-    /// Binarize and pack a set of equal-length float kernels.
+    /// Binarize and pack a set of equal-length float kernels. An empty
+    /// set (a fully-pruned or zero-kernel layer) packs to an empty
+    /// matrix rather than panicking.
     pub fn from_kernels(kernels: &[Vec<f32>]) -> Self {
-        assert!(!kernels.is_empty());
-        let n_bits = kernels[0].len();
+        let bits: Vec<Vec<bool>> =
+            kernels.iter().map(|kr| WeightCodec::kernel_bits(kr)).collect();
+        Self::from_bit_kernels(&bits)
+    }
+
+    /// Pack kernels that are *already* sign bits — a served
+    /// [`crate::serve::ConvLayer`]'s stored `bits`, or an INT8 layer's
+    /// `w >= 0` signs — without re-binarizing. This is what the live
+    /// prune monitor feeds: the exact bit pattern programmed on chip.
+    pub fn from_bit_kernels(kernels: &[Vec<bool>]) -> Self {
+        let n_bits = kernels.first().map_or(0, |k| k.len());
         let wpk = n_bits.div_ceil(64);
         let mut words = Vec::with_capacity(kernels.len() * wpk);
         for kr in kernels {
             assert_eq!(kr.len(), n_bits, "kernels must share a width");
-            let bits = WeightCodec::kernel_bits(kr);
-            words.extend(pack_bits(&bits));
+            words.extend(pack_bits(kr));
         }
         PackedKernels { k: kernels.len(), n_bits, words_per_kernel: wpk, words }
     }
@@ -126,5 +136,98 @@ mod tests {
         assert_eq!(packed_hamming(&[0], &[0]), 0);
         assert_eq!(packed_hamming(&[u64::MAX], &[0]), 64);
         assert_eq!(packed_hamming(&[0b1010], &[0b0101]), 4);
+    }
+
+    #[test]
+    fn bit_kernels_pack_identically_to_float_kernels() {
+        let kernels = random_kernels(7, 90, 8);
+        let bits: Vec<Vec<bool>> =
+            kernels.iter().map(|kr| WeightCodec::kernel_bits(kr)).collect();
+        let live = vec![true; 7];
+        let from_float = PackedKernels::from_kernels(&kernels).similarity_matrix(&live);
+        let from_bits = PackedKernels::from_bit_kernels(&bits).similarity_matrix(&live);
+        assert_eq!(from_float.dist, from_bits.dist);
+    }
+
+    #[test]
+    fn empty_kernel_set_packs_to_an_empty_matrix() {
+        // a fully-pruned / zero-kernel layer is a legal degenerate input
+        let packed = PackedKernels::from_kernels(&[]);
+        assert_eq!(packed.k, 0);
+        let m = packed.similarity_matrix(&[]);
+        assert_eq!(m.k, 0);
+        assert!(m.dist.is_empty());
+    }
+
+    /// The float cosine of the ±1 sign vectors, computed the slow
+    /// geometric way — the oracle the packed XOR+popcount path must
+    /// reproduce through `cos = (n − 2d)/n`.
+    fn cosine_oracle(a: &[f32], b: &[f32]) -> f64 {
+        let sign = |v: f32| if v >= 0.0 { 1.0f64 } else { -1.0 };
+        let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+        for (&x, &y) in a.iter().zip(b) {
+            let (sx, sy) = (sign(x), sign(y));
+            dot += sx * sy;
+            na += sx * sx;
+            nb += sy * sy;
+        }
+        dot / (na.sqrt() * nb.sqrt())
+    }
+
+    #[test]
+    fn prop_packed_hamming_matches_float_cosine_oracle() {
+        crate::testing::forall(
+            "similarity: (n−2d)/n == float cosine of sign vectors",
+            0xc051e,
+            8,
+            |rng| {
+                let k = 2 + rng.below(6);
+                // widths deliberately include 1 (single-bit kernels)
+                // and non-multiples of 64 (tail-word masking)
+                let n = [1, 2, 63, 64, 65, 100][rng.below(6)];
+                let mut kernels: Vec<Vec<f32>> = (0..k)
+                    .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+                    .collect();
+                // plant one all-zero kernel: binarization maps 0.0 to
+                // the +1 sign, a row a fully-pruned layer also produces
+                kernels[0] = vec![0.0; n];
+                kernels
+            },
+            |kernels| {
+                let k = kernels.len();
+                let live = vec![true; k];
+                let m = PackedKernels::from_kernels(kernels).similarity_matrix(&live);
+                for i in 0..k {
+                    for j in (i + 1)..k {
+                        let want = cosine_oracle(&kernels[i], &kernels[j]);
+                        let got = m.signed_cosine(i, j);
+                        if (got - want).abs() > 1e-9 {
+                            return Err(format!(
+                                "kernels {i},{j}: packed cosine {got} != oracle {want}"
+                            ));
+                        }
+                        // and similarity is the affine map of the same quantity
+                        let s = m.similarity(i, j);
+                        if (s - (1.0 + want) / 2.0).abs() > 1e-9 {
+                            return Err(format!("similarity {s} inconsistent with cosine"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn single_bit_kernels_hit_both_cosine_poles() {
+        let kernels = vec![vec![1.0f32], vec![-1.0], vec![0.0]];
+        let m = PackedKernels::from_kernels(&kernels).similarity_matrix(&[true; 3]);
+        // +1 vs −1: distance 1 of 1 bit -> cosine −1
+        assert_eq!(m.distance(0, 1), 1);
+        assert!((m.signed_cosine(0, 1) + 1.0).abs() < 1e-12);
+        // 0.0 binarizes to the +1 sign -> identical to kernel 0
+        assert_eq!(m.distance(0, 2), 0);
+        assert!((m.signed_cosine(0, 2) - 1.0).abs() < 1e-12);
+        assert!((m.similarity(0, 2) - 1.0).abs() < 1e-12);
     }
 }

@@ -37,6 +37,13 @@
 //!  [heal]      after any member dispatch failure: probe the fleet,
 //!              re-program a bounced host's shards at the current
 //!              epoch, rejoin it to its replica group, retry the batch
+//!  [prune]     every K batches (off by default): re-run the paper's
+//!              similarity rule over each tenant's *programmed* kernels
+//!              and retire redundant filters through the same
+//!              epoch-fenced cutover (DESIGN.md §12) — the live masks
+//!              flip before the route does, so every answer stays
+//!              bit-exact against the now-pruned oracle; freed rows
+//!              return to the allocators as headroom
 //! ```
 //!
 //! # Differences from the legacy [`crate::serve::Server`]
@@ -78,6 +85,7 @@ use crate::chip::WearLedger;
 use super::batcher::{Request, Response};
 use super::obs::{stage, EventSubscriber, Histogram, Obs, ObsEvent, SpanRecord, Stage};
 use super::model::ModelBundle;
+use super::prune::{CutoverOutcome, LivePruneConfig, LivePruneMonitor, PruneCutover, PruneReport};
 use super::stats::{EngineReport, TenantStats};
 use super::transport::router::PlaceOutcome;
 use super::transport::{
@@ -109,6 +117,12 @@ pub struct EngineConfig {
     pub admission: AdmissionConfig,
     pub cache: CacheConfig,
     pub rebalance: RebalanceConfig,
+    /// Live in-situ pruning (default off): every
+    /// [`LivePruneConfig::every_batches`] batches, re-run the paper's
+    /// similarity rule over each prunable tenant's programmed kernels
+    /// and retire redundant filters through an epoch-fenced cutover
+    /// ([`crate::serve::prune`]).
+    pub prune: LivePruneConfig,
     /// Observability plane switch (default on): request tracing, the
     /// operator event bus, and the metrics registry. Off hands the
     /// engine a [`Obs::disabled`] plane — every emit/record is a no-op
@@ -123,6 +137,7 @@ impl Default for EngineConfig {
             admission: Default::default(),
             cache: Default::default(),
             rebalance: Default::default(),
+            prune: Default::default(),
             obs: true,
         }
     }
@@ -162,6 +177,19 @@ struct Coordinator {
     /// not re-run the pass every drained batch).
     last_pass_at: u64,
     stuck_retries: usize,
+    /// The live prune loop's cadence + rule (see [`super::prune`]).
+    prune_cfg: LivePruneConfig,
+    /// One similarity monitor per prunable tenant (`None` when the
+    /// tenant opted out or the loop is off).
+    monitors: Vec<Option<LivePruneMonitor>>,
+    /// Last batch count a prune pass ran at (same quiet-fleet guard as
+    /// `last_pass_at`).
+    last_prune_at: u64,
+    /// Most recent input served per tenant — the probe a cutover uses
+    /// to measure the dense→pruned answer shift.
+    probes: Vec<Option<Vec<f32>>>,
+    /// Prune outcome accounting, reported in [`EngineReport::prune`].
+    prune: PruneReport,
 }
 
 impl Coordinator {
@@ -181,6 +209,12 @@ impl Coordinator {
                 self.last_pass_at = self.chip_batches_total;
                 self.rebalance_pass(force);
             }
+            if self.prune_cfg.due(self.chip_batches_total)
+                && self.chip_batches_total != self.last_prune_at
+            {
+                self.last_prune_at = self.chip_batches_total;
+                self.prune_pass();
+            }
             self.serve_batch(t, batch);
         }
         self.finish(t_start)
@@ -188,6 +222,12 @@ impl Coordinator {
 
     fn serve_batch(&mut self, t: usize, batch: Vec<Request>) {
         let b = batch.len();
+        if self.monitors[t].is_some() {
+            // keep a recent real input around as the prune probe
+            if let Some(req) = batch.first() {
+                self.probes[t] = Some(req.input.clone());
+            }
+        }
         // batch-level trace root: every span of this batch (queue wait,
         // cache pass, per-layer dispatches, hedges, remote executes)
         // chains off this context — the null context when obs is off
@@ -369,6 +409,79 @@ impl Coordinator {
             self.rebalancer.shards_moved += moved;
         }
         self.rebalancer.last = now;
+    }
+
+    /// One live prune pass: per prunable tenant, re-run the similarity
+    /// rule over its programmed kernels ([`LivePruneMonitor::propose`])
+    /// and commit each proposed layer shrink through an epoch-fenced
+    /// [`PruneCutover`]. Runs at a batch boundary like a rebalance —
+    /// nothing is in flight, which is what makes the fence's drain
+    /// guarantee hold. A committed cutover invalidates the tenant's
+    /// result cache (the pruned model answers differently) and frees
+    /// the retired filters' rows on every member of the owning group.
+    fn prune_pass(&mut self) {
+        let t_pass = Instant::now();
+        let trace = self.router.begin_trace();
+        for t in 0..self.models.len() {
+            let Some(monitor) = self.monitors[t].as_mut() else {
+                continue;
+            };
+            let plans = monitor.propose(t, &self.models[t]);
+            for plan in &plans {
+                let t_cut = Instant::now();
+                let probe = self.probes[t].clone();
+                let outcome = PruneCutover {
+                    tenant: t,
+                    router: &mut self.router,
+                    placement: &mut self.placements[t],
+                    route: &mut self.routes[t],
+                    model: &mut self.models[t],
+                    obs: &self.obs,
+                }
+                .execute(plan, probe.as_deref());
+                match outcome {
+                    Ok(CutoverOutcome::Committed(commit)) => {
+                        self.prune.cutovers += 1;
+                        self.prune.filters_pruned += commit.filters.len() as u64;
+                        self.prune.rows_freed += commit.rows_freed;
+                        self.prune.rows_retired += commit.rows_retired;
+                        let ts = &mut self.prune.per_tenant[t];
+                        ts.filters_pruned += commit.filters.len() as u64;
+                        ts.rows_freed += commit.rows_freed;
+                        if let Some(d) = commit.logit_delta {
+                            ts.max_logit_delta = ts.max_logit_delta.max(d);
+                        }
+                        self.obs.metrics.counter("prune.cutovers").inc();
+                        let n = commit.filters.len() as u64;
+                        self.obs.metrics.counter("prune.filters_pruned").add(n);
+                        self.obs.metrics.counter("prune.rows_freed").add(commit.rows_freed);
+                        let entries = self.caches[t].lock().unwrap().invalidate_all();
+                        if entries > 0 {
+                            self.obs.bus.emit(ObsEvent::CacheInvalidated { tenant: t, entries });
+                        }
+                        if trace.is_traced() {
+                            self.obs.trace.record(SpanRecord {
+                                ctx: trace.child(self.obs.trace.next_span()),
+                                stage: Stage::Prune,
+                                note: format!(
+                                    "tenant={t} layer={} pruned={}",
+                                    commit.layer,
+                                    commit.filters.len()
+                                ),
+                                start: t_cut,
+                                dur: t_cut.elapsed(),
+                            });
+                        }
+                    }
+                    Ok(CutoverOutcome::Aborted { .. }) => {
+                        self.prune.aborted += 1;
+                        self.obs.metrics.counter("prune.aborted").inc();
+                    }
+                    Err(_) => return, // workers gone; the shutdown path reports
+                }
+            }
+        }
+        self.obs.metrics.histogram(stage::PRUNE).record(t_pass.elapsed());
     }
 
     /// Up to `group_moves` cross-group layer migrations, chosen by
@@ -615,6 +728,33 @@ impl Coordinator {
         for (t, st) in self.stats.iter_mut().enumerate() {
             st.dropped = self.admission.dropped(t);
         }
+        // close out the prune report against the final masks: MAC ops
+        // under what each tenant ended up serving, the realized prune
+        // rate, the quota headroom its cutovers opened, and the masks
+        // themselves (what a caller needs to rebuild the pruned oracle)
+        for (t, ts) in self.prune.per_tenant.iter_mut().enumerate() {
+            let model = &self.models[t];
+            ts.mac_ops_end = model.mac_ops_per_input();
+            ts.prune_rate =
+                1.0 - model.live_filters() as f64 / model.total_filters().max(1) as f64;
+            ts.live_masks = (0..model.n_layers()).map(|l| model.live_mask(l).to_vec()).collect();
+            let rows_max = (0..self.router.n_groups())
+                .flat_map(|g| {
+                    let p = &self.placements[t];
+                    (0..self.router.group_size(g)).map(move |local| p.rows_live_on(g, local))
+                })
+                .max()
+                .unwrap_or(0);
+            ts.quota_headroom_rows = match self.quotas[t] {
+                Some(q) => q.saturating_sub(rows_max) as u64,
+                // unlimited tenants: headroom is the tightest member's
+                // free rows (what another placement could still take)
+                None => (0..self.router.n_members())
+                    .map(|m| self.router.member_rows_free(m))
+                    .min()
+                    .unwrap_or(0) as u64,
+            };
+        }
         let rows_used = self.router.rows_used_flat();
         let finishes = self.router.finish().expect("transport failed at shutdown");
         // read the counters only after finish(): draining the last lost
@@ -629,6 +769,7 @@ impl Coordinator {
             stuck_retries: self.stuck_retries,
             rebalances: self.rebalancer.rebalances,
             shards_moved: self.rebalancer.shards_moved,
+            prune: std::mem::take(&mut self.prune),
             transport,
         }
     }
@@ -704,7 +845,30 @@ impl Engine {
         let input_lens: Vec<usize> = tenants.iter().map(|t| t.model.input_len()).collect();
         let quotas: Vec<Option<usize>> = tenants.iter().map(|t| t.row_quota).collect();
         let depths: Vec<usize> = tenants.iter().map(|t| t.queue_depth).collect();
+        let prunable: Vec<bool> = tenants.iter().map(|t| t.live_prune).collect();
         let models: Vec<ModelBundle> = tenants.into_iter().map(|t| t.model).collect();
+        // live prune plumbing: one similarity monitor per opted-in
+        // tenant (kernels packed once — sign bits never change while
+        // serving), and a report seeded with each tenant's dense-mask
+        // MAC cost so the reduction is measured, not guessed
+        let monitors: Vec<Option<LivePruneMonitor>> = models
+            .iter()
+            .zip(&prunable)
+            .map(|(m, &on)| {
+                (cfg.prune.every_batches > 0 && on)
+                    .then(|| LivePruneMonitor::new(cfg.prune.clone(), m))
+            })
+            .collect();
+        let prune_report = PruneReport {
+            per_tenant: models
+                .iter()
+                .map(|m| super::prune::TenantPruneStats {
+                    mac_ops_start: m.mac_ops_per_input(),
+                    ..Default::default()
+                })
+                .collect(),
+            ..Default::default()
+        };
         // router-issued epochs are globally unique across tenants, so a
         // fenced epoch can never be confused with a live one
         let mut routes: Vec<TenantRoute> = Vec::with_capacity(placements.len());
@@ -746,6 +910,11 @@ impl Engine {
             chip_batches_total: 0,
             last_pass_at: u64::MAX,
             stuck_retries,
+            prune_cfg: cfg.prune.clone(),
+            monitors,
+            last_prune_at: u64::MAX,
+            probes: vec![None; names.len()],
+            prune: prune_report,
         };
         let handle = std::thread::spawn(move || coordinator.run());
         Ok(Engine {
@@ -906,6 +1075,7 @@ mod tests {
             },
             cache: CacheConfig::default(),
             rebalance: RebalanceConfig::default(),
+            prune: Default::default(),
             obs: true,
         }
     }
@@ -1148,5 +1318,92 @@ mod tests {
             "steady tenant: nothing silently lost"
         );
         assert_eq!(report.tenants[1].dropped, steady_shed);
+    }
+
+    /// An MNIST bundle whose kernels repeat two sign prototypes per
+    /// layer — live-prune bait (similarity 1.0 within each class).
+    fn clustered_mnist(channels: [usize; 3], seed: u64) -> ModelBundle {
+        let ModelBundle::Mnist(mut m) = ModelBundle::synthetic_mnist(channels, 0.0, seed) else {
+            unreachable!("synthetic_mnist builds the MNIST arm");
+        };
+        for layer in &mut m.conv {
+            let protos: Vec<Vec<bool>> = layer.bits[..2].to_vec();
+            for (f, bits) in layer.bits.iter_mut().enumerate() {
+                *bits = protos[f % 2].clone();
+            }
+        }
+        m.into()
+    }
+
+    #[test]
+    fn live_prune_loop_fires_frees_rows_and_spares_opted_out_tenants() {
+        use crate::pruning::PruneConfig;
+        let model = clustered_mnist([4, 6, 6], 91);
+        let tenants = vec![
+            TenantConfig::new("prunable", model.clone()),
+            TenantConfig::new("pinned", model.clone()).without_live_prune(),
+        ];
+        let mut cfg = small_cfg(3, 92);
+        cfg.cache = CacheConfig { capacity: 0 };
+        cfg.prune = LivePruneConfig {
+            every_batches: 1,
+            max_layers_per_pass: 1,
+            rule: PruneConfig { min_live_per_layer: 1, max_prune_rate: 1.0, ..Default::default() },
+        };
+        let engine = Engine::start(tenants, &cfg).unwrap();
+        let events = engine.events_with(4096);
+        let n = model.input_len();
+        for i in 0..10u64 {
+            for t in 0..2 {
+                let input: Vec<f32> = (0..n).map(|p| ((p as u64 + i) % 9) as f32 / 9.0).collect();
+                let rx = engine.submit(t, input);
+                rx.recv().expect("admitted request must be answered");
+            }
+        }
+        let report = engine.shutdown();
+        let prune = &report.prune;
+        assert!(prune.cutovers > 0, "clustered kernels must trigger cutovers");
+        assert_eq!(prune.aborted, 0);
+        assert!(prune.filters_pruned > 0);
+        assert!(prune.rows_freed > 0, "retired shards must free rows");
+        assert_eq!(prune.rows_retired, 0, "local backends support release");
+        // tenant 0 got lighter; every layer kept a representative
+        let ts = &prune.per_tenant[0];
+        assert_eq!(ts.filters_pruned, prune.filters_pruned);
+        assert!(ts.mac_ops_end < ts.mac_ops_start, "MAC ops must shrink");
+        assert!(ts.mac_reduction() > 0.0);
+        assert!(ts.max_logit_delta >= 0.0);
+        assert!(ts.live_masks.iter().all(|m| m.iter().any(|&b| b)));
+        let pruned_total: u64 =
+            ts.live_masks.iter().map(|m| m.iter().filter(|&&b| !b).count() as u64).sum();
+        assert_eq!(pruned_total, ts.filters_pruned);
+        // the opted-out tenant still serves exactly what it registered
+        let pinned = &prune.per_tenant[1];
+        assert_eq!(pinned.filters_pruned, 0);
+        assert_eq!(pinned.mac_ops_end, pinned.mac_ops_start);
+        assert!(pinned.live_masks.iter().all(|m| m.iter().all(|&b| b)));
+        // event ladder: commits happened, nothing aborted, and every
+        // commit was preceded by its Planned/Started/Fenced trio
+        let kinds: Vec<&str> =
+            events.drain().iter().map(|r| r.event.kind()).collect::<Vec<_>>();
+        let count = |k: &str| kinds.iter().filter(|&&x| x == k).count() as u64;
+        assert_eq!(count("prune_committed"), prune.cutovers);
+        assert_eq!(count("prune_aborted"), 0);
+        assert_eq!(count("prune_planned"), prune.cutovers);
+        assert_eq!(count("prune_started"), prune.cutovers);
+        assert_eq!(count("prune_fenced"), prune.cutovers);
+    }
+
+    #[test]
+    fn prune_report_is_all_zeros_when_the_loop_is_off() {
+        let model = clustered_mnist([4, 4, 4], 95);
+        let engine =
+            Engine::start(vec![TenantConfig::new("m", model)], &small_cfg(2, 96)).unwrap();
+        let report = engine.shutdown();
+        assert_eq!(report.prune.cutovers, 0);
+        assert_eq!(report.prune.filters_pruned, 0);
+        let ts = &report.prune.per_tenant[0];
+        assert_eq!(ts.mac_ops_end, ts.mac_ops_start, "masks untouched");
+        assert!(ts.live_masks.iter().all(|m| m.iter().all(|&b| b)));
     }
 }

@@ -33,6 +33,12 @@ pub struct TenantConfig {
     pub row_quota: Option<usize>,
     /// Bound on this tenant's admitted-but-unbatched requests.
     pub queue_depth: usize,
+    /// May the live prune loop retire this tenant's redundant kernels
+    /// mid-serve ([`crate::serve::LivePruneConfig`])? Default true —
+    /// but the loop only runs at all when the engine enables it
+    /// (`EngineConfig::prune.every_batches > 0`). Opting out keeps a
+    /// tenant's served model exactly as registered.
+    pub live_prune: bool,
 }
 
 impl TenantConfig {
@@ -42,6 +48,7 @@ impl TenantConfig {
             model: model.into(),
             row_quota: None,
             queue_depth: 256,
+            live_prune: true,
         }
     }
 
@@ -52,6 +59,13 @@ impl TenantConfig {
 
     pub fn with_queue_depth(mut self, depth: usize) -> TenantConfig {
         self.queue_depth = depth;
+        self
+    }
+
+    /// Exclude this tenant from the live prune loop (serve the model
+    /// exactly as registered, however similar its kernels become).
+    pub fn without_live_prune(mut self) -> TenantConfig {
+        self.live_prune = false;
         self
     }
 }
@@ -94,9 +108,11 @@ mod tests {
         assert_eq!(t.name, "mnist");
         assert_eq!(t.row_quota, None);
         assert_eq!(t.queue_depth, 256);
-        let t = t.with_row_quota(64).with_queue_depth(8);
+        assert!(t.live_prune, "tenants are prunable by default");
+        let t = t.with_row_quota(64).with_queue_depth(8).without_live_prune();
         assert_eq!(t.row_quota, Some(64));
         assert_eq!(t.queue_depth, 8);
+        assert!(!t.live_prune);
     }
 
     #[test]

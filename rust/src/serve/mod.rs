@@ -122,6 +122,7 @@ pub mod obs;
 pub mod placement;
 pub mod pointnet_model;
 pub mod pool;
+pub mod prune;
 pub mod scheduler;
 pub mod stats;
 pub mod transport;
@@ -139,6 +140,10 @@ pub use obs::{
 pub use placement::{place, place_with, Placement, ShardLoc};
 pub use pointnet_model::{max_over_groups, PointNetBundle, PointwiseLayer, POINTWISE_LAYERS};
 pub use pool::{ChipPool, PoolConfig, WearSnapshot};
+pub use prune::{
+    CutoverOutcome, LivePruneConfig, LivePruneMonitor, PruneCommit, PruneCutover, PrunePlan,
+    PruneReport, TenantPruneStats,
+};
 pub use scheduler::{Server, ServerConfig};
 pub use stats::{EngineReport, LatencyHistogram, ServeReport, ServeStats, TenantStats};
 pub use transport::{

@@ -231,6 +231,54 @@ impl ModelBundle {
             ModelBundle::PointNet(p) => p.validate(),
         }
     }
+
+    /// The current live mask of one layer (the pruning state the
+    /// reference oracle, the placer, and the MAC accounting all read).
+    pub fn live_mask(&self, layer: usize) -> &[bool] {
+        match self {
+            ModelBundle::Mnist(m) => &m.conv[layer].live,
+            ModelBundle::PointNet(p) => &p.layers[layer].live,
+        }
+    }
+
+    /// Retire one filter in place: flips its live bit so
+    /// [`Self::reference_logits`], [`Self::shard_payload`], and
+    /// [`Self::mac_ops_per_input`] all see the pruned model from here
+    /// on. Returns whether the filter was live before (a `false` means
+    /// the commit was a no-op — the filter was already pruned).
+    pub fn prune_filter(&mut self, layer: usize, filter: usize) -> bool {
+        let live = match self {
+            ModelBundle::Mnist(m) => &mut m.conv[layer].live,
+            ModelBundle::PointNet(p) => &mut p.layers[layer].live,
+        };
+        std::mem::replace(&mut live[filter], false)
+    }
+
+    /// Every filter's stored sign bits for one layer, pruned filters
+    /// included: MNIST's programmed `bits` verbatim, PointNet's
+    /// `w >= 0` signs — exactly the bit pattern the chip's XOR
+    /// similarity search compares, which is what the live prune
+    /// monitor packs ([`crate::pruning::similarity::PackedKernels`]).
+    pub fn layer_sign_bits(&self, layer: usize) -> Vec<Vec<bool>> {
+        match self {
+            ModelBundle::Mnist(m) => m.conv[layer].bits.clone(),
+            ModelBundle::PointNet(p) => p.layers[layer]
+                .w_q
+                .iter()
+                .map(|kr| kr.iter().map(|&w| w >= 0).collect())
+                .collect(),
+        }
+    }
+
+    /// Chip MAC operations one input costs under the current live
+    /// masks — the op count the paper's in-situ pruning reduces
+    /// (Fig. 4/5) and `EngineReport.prune` reports as MACs saved.
+    pub fn mac_ops_per_input(&self) -> u64 {
+        match self {
+            ModelBundle::Mnist(m) => m.mac_ops_per_image(),
+            ModelBundle::PointNet(p) => p.mac_ops_per_cloud(),
+        }
+    }
 }
 
 /// A trained binary-MNIST model exported for serving.
@@ -351,6 +399,34 @@ impl MnistBundle {
         self.conv
             .iter()
             .map(|l| l.live_count() * l.kernel_cells().div_ceil(per_row))
+            .sum()
+    }
+
+    /// Spatial window count (output positions) per conv layer at this
+    /// bundle's input geometry — the same `oh = hw + 3 - ksize` chain
+    /// `validate`/`reference_logits` walk. At the default 28×28 input
+    /// with 3×3 kernels and pooling after layers 0 and 1, this is
+    /// `[784, 196, 49]`.
+    pub fn windows_per_layer(&self) -> Vec<usize> {
+        let mut hw = self.input_hw;
+        let mut out = Vec::with_capacity(self.conv.len());
+        for layer in &self.conv {
+            let oh = hw + 3 - layer.ksize;
+            out.push(oh * oh);
+            hw = if layer.pool { oh / 2 } else { oh };
+        }
+        out
+    }
+
+    /// Binary-conv MAC ops one image costs with the current live masks
+    /// (windows × kernel cells × live filters, summed over layers) —
+    /// the op count the paper's Fig. 4 meters and in-situ pruning
+    /// reduces by 26.80% on MNIST.
+    pub fn mac_ops_per_image(&self) -> u64 {
+        self.windows_per_layer()
+            .iter()
+            .zip(&self.conv)
+            .map(|(&w, l)| (w * l.kernel_cells() * l.live_count()) as u64)
             .sum()
     }
 
@@ -628,6 +704,59 @@ mod tests {
         // both variants report consistent filter accounting
         assert_eq!(m.live_filters(), m.total_filters());
         assert!(p.rows_required(30) > 0);
+    }
+
+    #[test]
+    fn windows_and_mac_ops_follow_the_hw_chain() {
+        let m = MnistBundle::synthetic([4, 4, 4], 0.0, 7);
+        assert_eq!(m.windows_per_layer(), vec![784, 196, 49]);
+        // dense MACs: windows × in_c·9 × out_c per layer
+        let want = (784 * 9 * 4 + 196 * 4 * 9 * 4 + 49 * 4 * 9 * 4) as u64;
+        assert_eq!(m.mac_ops_per_image(), want);
+        // pruning a filter removes exactly its windows × cells ops
+        let mut bundle: ModelBundle = m.into();
+        let dense = bundle.mac_ops_per_input();
+        assert!(bundle.prune_filter(2, 1), "filter was live");
+        assert_eq!(bundle.mac_ops_per_input(), dense - 49 * 4 * 9);
+        // double-prune is a visible no-op
+        assert!(!bundle.prune_filter(2, 1));
+        assert_eq!(bundle.mac_ops_per_input(), dense - 49 * 4 * 9);
+        assert_eq!(bundle.live_mask(2), &[true, false, true, true]);
+    }
+
+    #[test]
+    fn sign_bits_match_programmed_payloads() {
+        use crate::nn::pointnet::GroupingConfig;
+        use crate::serve::PointNetBundle;
+        let m = ModelBundle::synthetic_mnist([2, 2, 2], 0.0, 8);
+        for l in 0..m.n_layers() {
+            let bits = m.layer_sign_bits(l);
+            assert_eq!(bits.len(), m.live_mask(l).len());
+            match &m {
+                ModelBundle::Mnist(b) => assert_eq!(bits, b.conv[l].bits),
+                _ => unreachable!(),
+            }
+        }
+        let p: ModelBundle = PointNetBundle::synthetic(
+            [2, 2, 3, 2, 2, 3, 2, 4],
+            3,
+            0.0,
+            GroupingConfig { s1: 8, k1: 4, r1: 0.3, s2: 4, k2: 2, r2: 0.6 },
+            9,
+        )
+        .into();
+        let bits = p.layer_sign_bits(0);
+        match &p {
+            ModelBundle::PointNet(b) => {
+                for (f, kb) in bits.iter().enumerate() {
+                    assert_eq!(kb.len(), b.layers[0].w_q[f].len());
+                    for (j, &bit) in kb.iter().enumerate() {
+                        assert_eq!(bit, b.layers[0].w_q[f][j] >= 0);
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
     }
 
     #[test]

@@ -65,6 +65,25 @@ pub enum ObsEvent {
     SpillOver { group: usize, member: usize },
     /// Admission shed a request on a full tenant queue.
     DropShed { tenant: usize },
+    /// The live-prune monitor proposed a per-layer live-mask shrink
+    /// (`filters` are the kernel indices to retire). A plan that fails
+    /// validation aborts without any `PruneStarted`.
+    PrunePlanned { tenant: usize, layer: usize, filters: Vec<usize> },
+    /// The prune cutover began executing (validation passed; the fence
+    /// goes up next).
+    PruneStarted { tenant: usize, layer: usize },
+    /// The cutover's epoch fence went up and the pipeline drained;
+    /// `epoch` is the NEW shard epoch the pruned placement serves at
+    /// (stale-epoch replies are discarded from here on).
+    PruneFenced { tenant: usize, layer: usize, epoch: u64 },
+    /// The cutover committed: the live masks shrank, the result cache
+    /// was invalidated, and `rows_freed` source rows went back to their
+    /// allocators' free lists. `filters` mirrors the committed kernel
+    /// indices so subscribers can reconstruct the pruned oracle.
+    PruneCommitted { tenant: usize, layer: usize, filters: Vec<usize>, rows_freed: u64 },
+    /// The cutover rolled back pre-fence; the dense (unpruned) layer is
+    /// still authoritative and nothing changed.
+    PruneAborted { tenant: usize, layer: usize },
 }
 
 impl ObsEvent {
@@ -83,6 +102,11 @@ impl ObsEvent {
             ObsEvent::CacheInvalidated { .. } => "cache_invalidated",
             ObsEvent::SpillOver { .. } => "spill_over",
             ObsEvent::DropShed { .. } => "drop_shed",
+            ObsEvent::PrunePlanned { .. } => "prune_planned",
+            ObsEvent::PruneStarted { .. } => "prune_started",
+            ObsEvent::PruneFenced { .. } => "prune_fenced",
+            ObsEvent::PruneCommitted { .. } => "prune_committed",
+            ObsEvent::PruneAborted { .. } => "prune_aborted",
         }
     }
 }
@@ -288,5 +312,11 @@ mod tests {
             ObsEvent::MigrationFenced { layer: 1, epoch: 3 }.kind(),
             "migration_fenced"
         );
+        assert_eq!(
+            ObsEvent::PruneCommitted { tenant: 0, layer: 2, filters: vec![1, 3], rows_freed: 4 }
+                .kind(),
+            "prune_committed"
+        );
+        assert_eq!(ObsEvent::PruneAborted { tenant: 0, layer: 0 }.kind(), "prune_aborted");
     }
 }

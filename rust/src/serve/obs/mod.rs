@@ -53,6 +53,9 @@ pub mod stage {
     /// `DISPATCH − EXECUTE` of the winning attempt: framing, wire, and
     /// backend queueing.
     pub const TRANSPORT: &str = "stage.transport";
+    /// One live-prune pass: similarity monitoring over every tenant's
+    /// kernels plus any cutovers the pass fired (fence + drain + free).
+    pub const PRUNE: &str = "stage.prune";
 }
 
 /// One observability plane: trace log + event bus + metrics registry.

@@ -64,6 +64,9 @@ pub enum Stage {
     Execute,
     /// Replies delivered back to the submitters.
     Reply,
+    /// A live-prune pass: similarity monitoring plus any cutovers it
+    /// fired (note says `tenant=t layer=l pruned=n`).
+    Prune,
 }
 
 impl Stage {
@@ -77,6 +80,7 @@ impl Stage {
             Stage::Hedge => "hedge",
             Stage::Execute => "execute",
             Stage::Reply => "reply",
+            Stage::Prune => "prune",
         }
     }
 }

@@ -1,0 +1,390 @@
+//! The prune cutover: an epoch-fenced state machine that retires a
+//! [`PrunePlan`]'s filters from a *serving* placement without a single
+//! wrong logit (DESIGN.md §12).
+//!
+//! ```text
+//!  Planned ──validate──▶ Started ──fence+drain──▶ Fenced ──▶ Committed
+//!     │                                                        masks │
+//!     └── any check fails ──▶ Aborted                        flipped,
+//!         (dense layer stays authoritative,                  route
+//!          nothing was touched)                              rebuilt,
+//!                                                            rows freed
+//! ```
+//!
+//! Pruning is the degenerate in-place case of cross-group migration
+//! ([`ShardRouter::migrate_layer`]): the surviving shards never move,
+//! so there is no program phase and no partial-destination state — the
+//! only irreversible step is the mask flip, and it happens strictly
+//! after the fence has drained every request built against the dense
+//! placement. Abort is therefore only possible (and only needed)
+//! before the fence.
+//!
+//! The commit order is what keeps the bit-exactness contract intact:
+//! the model's live masks flip *first* (re-basing
+//! [`ModelBundle::reference_logits`] to the pruned oracle), then the
+//! placement drops the shard slots and the route is rebuilt at the new
+//! epoch — so every batch dispatched after the cutover computes, and
+//! is checked against, the same pruned model. The dense→pruned answer
+//! shift is measured on a probe input across the flip and reported in
+//! [`PruneCommit::logit_delta`], never silently absorbed.
+
+use crate::serve::model::ModelBundle;
+use crate::serve::obs::{Obs, ObsEvent};
+use crate::serve::transport::{
+    self, RouterPlacement, ShardRef, ShardRouter, TenantRoute, TransportError,
+};
+
+use super::PrunePlan;
+
+/// Borrowed view of everything one cutover mutates. Construct, call
+/// [`PruneCutover::execute`], done — the struct enforces that a single
+/// actor (the engine coordinator) holds every mutable piece for the
+/// duration, which is what makes the fence's drain guarantee sound.
+pub struct PruneCutover<'a> {
+    pub tenant: usize,
+    pub router: &'a mut ShardRouter,
+    pub placement: &'a mut RouterPlacement,
+    pub route: &'a mut TenantRoute,
+    pub model: &'a mut ModelBundle,
+    pub obs: &'a Obs,
+}
+
+/// What a cutover did.
+#[derive(Clone, Debug)]
+pub enum CutoverOutcome {
+    Committed(PruneCommit),
+    /// Validation failed pre-fence: nothing was mutated, no epoch was
+    /// spent, and the dense layer remains authoritative.
+    Aborted { reason: &'static str },
+}
+
+/// A committed cutover's receipt.
+#[derive(Clone, Debug)]
+pub struct PruneCommit {
+    pub layer: usize,
+    /// The route epoch the pruned placement serves under.
+    pub epoch: u64,
+    /// Filters retired, ascending.
+    pub filters: Vec<usize>,
+    /// Rows returned to backend allocators across the owning group.
+    pub rows_freed: u64,
+    /// Rows whose release failed (backend without release support or
+    /// unreachable) — retired, not reusable.
+    pub rows_retired: u64,
+    /// Max |dense − pruned| logit shift on the probe input, `None`
+    /// when the caller had no probe to measure with.
+    pub logit_delta: Option<f64>,
+}
+
+impl PruneCutover<'_> {
+    /// Run the state machine for one plan. `probe` is a recent real
+    /// input of this tenant (the engine stashes one per served batch)
+    /// used to measure the answer shift across the flip.
+    ///
+    /// # Errors
+    ///
+    /// [`TransportError::Closed`] when the fleet's workers are gone —
+    /// the one failure the fence cannot drain through. Everything else
+    /// is an [`CutoverOutcome::Aborted`] (pre-fence) or a per-row
+    /// `rows_retired` count (post-fence release failures).
+    pub fn execute(
+        self,
+        plan: &PrunePlan,
+        probe: Option<&[f32]>,
+    ) -> transport::Result<CutoverOutcome> {
+        let PruneCutover { tenant, router, placement, route, model, obs } = self;
+        let layer = plan.layer;
+        obs.bus.emit(ObsEvent::PrunePlanned {
+            tenant,
+            layer,
+            filters: plan.filters.clone(),
+        });
+        let abort = |reason: &'static str| {
+            obs.bus.emit(ObsEvent::PruneAborted { tenant, layer });
+            Ok(CutoverOutcome::Aborted { reason })
+        };
+        // -- validate: every check before any mutation ------------------
+        if layer >= placement.layers.len() {
+            return abort("layer out of range");
+        }
+        if plan.filters.is_empty() {
+            return abort("empty plan");
+        }
+        if plan.filters.windows(2).any(|w| w[1] <= w[0]) {
+            return abort("plan filters not strictly ascending");
+        }
+        let mask = model.live_mask(layer);
+        if plan.filters.iter().any(|&f| f >= mask.len() || !mask[f]) {
+            return abort("stale plan: filter already pruned");
+        }
+        if mask.iter().filter(|&&b| b).count() <= plan.filters.len() {
+            return abort("plan would retire the layer's last live kernel");
+        }
+        let group = placement.layers[layer].group;
+        let members = router.group_members(group);
+        if members.iter().any(|&m| router.is_quarantined(m)) {
+            return abort("owning group has a quarantined member");
+        }
+        {
+            let shards = &placement.layers[layer].shards;
+            debug_assert_eq!(shards.len(), members.len(), "shard table vs group size");
+            if plan.filters.iter().any(|&f| shards.iter().any(|ms| ms[f].is_none())) {
+                return abort("stale placement: shard slot already empty");
+            }
+        }
+        obs.bus.emit(ObsEvent::PruneStarted { tenant, layer });
+        // capture the doomed spans before the placement forgets them
+        let doomed: Vec<(usize, ShardRef)> = {
+            let shards = &placement.layers[layer].shards;
+            members
+                .iter()
+                .enumerate()
+                .flat_map(|(local, &m)| {
+                    plan.filters
+                        .iter()
+                        .map(move |&f| (m, shards[local][f].clone().expect("validated live")))
+                })
+                .collect()
+        };
+        let before = probe.map(|p| model.reference_logits(p));
+        // -- fence + drain: after this, no request that addressed the
+        // dense placement exists anywhere in the fleet ------------------
+        let old_epoch = route.epoch;
+        let epoch = router.next_epoch();
+        router.fence_and_drain(old_epoch)?;
+        obs.bus.emit(ObsEvent::PruneFenced { tenant, layer, epoch });
+        // -- commit: masks first (the reference oracle re-bases), then
+        // the placement and the route at the new epoch ------------------
+        for &f in &plan.filters {
+            let was_live = model.prune_filter(layer, f);
+            debug_assert!(was_live, "validated live above");
+        }
+        for member_shards in &mut placement.layers[layer].shards {
+            for &f in &plan.filters {
+                member_shards[f] = None;
+            }
+        }
+        *route = TenantRoute::from_placement(placement, epoch);
+        let logit_delta = match (&before, probe) {
+            (Some(b), Some(p)) => {
+                let after = model.reference_logits(p);
+                let d = b
+                    .iter()
+                    .zip(&after)
+                    .map(|(x, y)| (x - y).abs() as f64)
+                    .fold(0.0, f64::max);
+                Some(d)
+            }
+            _ => None,
+        };
+        // -- free: the drained rows go back to every member's allocator
+        let (mut rows_freed, mut rows_retired) = (0u64, 0u64);
+        for (m, shard) in &doomed {
+            let rows = shard.span.slots.len() as u64;
+            match router.release(*m, shard.chip as usize, shard.span.clone()) {
+                Ok(_) => rows_freed += rows,
+                Err(TransportError::Closed) => return Err(TransportError::Closed),
+                // best effort: a backend without release support (or an
+                // unreachable one) just retires these rows
+                Err(_) => rows_retired += rows,
+            }
+        }
+        obs.bus.emit(ObsEvent::PruneCommitted {
+            tenant,
+            layer,
+            filters: plan.filters.clone(),
+            rows_freed,
+        });
+        Ok(CutoverOutcome::Committed(PruneCommit {
+            layer,
+            epoch,
+            filters: plan.filters.clone(),
+            rows_freed,
+            rows_retired,
+            logit_delta,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipConfig;
+    use crate::serve::obs::EventSubscriber;
+    use crate::serve::pool::PoolConfig;
+    use crate::serve::transport::{LocalBackend, RouterConfig};
+
+    fn pool_cfg(chips: usize, seed: u64) -> PoolConfig {
+        PoolConfig { chips, chip: ChipConfig::small_test(), seed }
+    }
+
+    fn single_router(seed: u64) -> ShardRouter {
+        let backend = LocalBackend::from_pool_config(&pool_cfg(3, seed)).expect("pool builds");
+        ShardRouter::single(Box::new(backend)).expect("single-member fleet builds")
+    }
+
+    fn replicated_router(seed: u64) -> ShardRouter {
+        let mk = |s: u64| LocalBackend::from_pool_config(&pool_cfg(2, s)).expect("pool builds");
+        ShardRouter::replicated(
+            vec![Box::new(mk(seed)), Box::new(mk(seed ^ 1))],
+            RouterConfig::default(),
+        )
+        .expect("replica fleet builds")
+    }
+
+    struct Fixture {
+        router: ShardRouter,
+        placement: RouterPlacement,
+        route: TenantRoute,
+        model: ModelBundle,
+        obs: Obs,
+    }
+
+    fn fixture(mut router: ShardRouter) -> Fixture {
+        let model = ModelBundle::synthetic_mnist([6, 6, 6], 0.0, 5);
+        let placement = router.place(&model, None).expect("placement fits");
+        let epoch = router.next_epoch();
+        let route = TenantRoute::from_placement(&placement, epoch);
+        Fixture { router, placement, route, model, obs: Obs::new() }
+    }
+
+    fn run(
+        fx: &mut Fixture,
+        plan: &PrunePlan,
+        probe: Option<&[f32]>,
+    ) -> (CutoverOutcome, Vec<ObsEvent>) {
+        let sub = fx.obs.bus.subscribe();
+        let out = PruneCutover {
+            tenant: plan.tenant,
+            router: &mut fx.router,
+            placement: &mut fx.placement,
+            route: &mut fx.route,
+            model: &mut fx.model,
+            obs: &fx.obs,
+        }
+        .execute(plan, probe)
+        .expect("local fleet never closes mid-test");
+        let events = drain_events(&sub);
+        (out, events)
+    }
+
+    fn drain_events(sub: &EventSubscriber) -> Vec<ObsEvent> {
+        sub.drain().into_iter().map(|r| r.event).collect()
+    }
+
+    #[test]
+    fn commit_flips_masks_rebuilds_route_and_frees_rows() {
+        let mut fx = fixture(single_router(9));
+        let free_before = fx.router.member_rows_free(0);
+        let probe: Vec<f32> = (0..fx.model.input_len()).map(|i| (i % 7) as f32 / 7.0).collect();
+        let plan = PrunePlan { tenant: 0, layer: 1, filters: vec![2, 4] };
+        let (out, events) = run(&mut fx, &plan, Some(&probe));
+        let CutoverOutcome::Committed(commit) = out else {
+            panic!("expected a commit, got {out:?}");
+        };
+        // masks flipped, oracle re-based
+        assert!(!fx.model.live_mask(1)[2] && !fx.model.live_mask(1)[4]);
+        assert_eq!(fx.model.reference_logits(&probe).len(), 10);
+        // placement slots emptied on every member, route at the new epoch
+        assert!(fx.placement.layers[1].shards.iter().all(|ms| ms[2].is_none()));
+        assert_eq!(fx.route.epoch, commit.epoch);
+        assert_eq!(fx.route.layers[1].shards[0].len(), 4, "6 filters - 2 pruned");
+        // rows went back to the allocator: headroom grew by exactly the
+        // released spans and nothing was merely retired
+        assert_eq!(commit.rows_retired, 0);
+        assert!(commit.rows_freed > 0);
+        assert_eq!(fx.router.member_rows_free(0), free_before + commit.rows_freed as usize);
+        // the answer shift was measured, not silently absorbed
+        assert!(commit.logit_delta.is_some());
+        // event ladder: Planned -> Started -> Fenced -> Committed
+        let kinds: Vec<&str> = events.iter().map(|e| e.kind()).collect();
+        assert_eq!(
+            kinds,
+            ["prune_planned", "prune_started", "prune_fenced", "prune_committed"]
+        );
+        assert!(matches!(
+            &events[3],
+            ObsEvent::PruneCommitted { rows_freed, .. } if *rows_freed == commit.rows_freed
+        ));
+    }
+
+    #[test]
+    fn freed_rows_are_reallocatable() {
+        let mut fx = fixture(single_router(10));
+        let plan = PrunePlan { tenant: 0, layer: 0, filters: vec![0, 1, 2, 3] };
+        let (out, _) = run(&mut fx, &plan, None);
+        assert!(matches!(out, CutoverOutcome::Committed(_)));
+        // a fresh placement of the (now smaller) model must succeed and
+        // reuse the freed rows
+        let again = fx.router.place(&fx.model, None);
+        assert!(again.is_ok(), "freed rows must be re-allocatable: {again:?}");
+    }
+
+    #[test]
+    fn replicated_groups_release_on_every_member() {
+        let mut fx = fixture(replicated_router(11));
+        assert_eq!(fx.router.n_members(), 2);
+        let free_before: Vec<usize> =
+            (0..2).map(|m| fx.router.member_rows_free(m)).collect();
+        let plan = PrunePlan { tenant: 0, layer: 0, filters: vec![5] };
+        let (out, _) = run(&mut fx, &plan, None);
+        let CutoverOutcome::Committed(commit) = out else {
+            panic!("expected a commit, got {out:?}");
+        };
+        assert_eq!(commit.rows_retired, 0);
+        for m in 0..2 {
+            assert!(
+                fx.router.member_rows_free(m) > free_before[m],
+                "member {m} must regain rows"
+            );
+        }
+    }
+
+    #[test]
+    fn stale_and_malformed_plans_abort_without_mutating() {
+        let mut fx = fixture(single_router(12));
+        fx.model.prune_filter(2, 1);
+        fx.placement.layers[2].shards[0][1] = None;
+        let epoch_before = fx.route.epoch;
+        let cases: Vec<(PrunePlan, &str)> = vec![
+            (PrunePlan { tenant: 0, layer: 9, filters: vec![0] }, "layer out of range"),
+            (PrunePlan { tenant: 0, layer: 0, filters: vec![] }, "empty plan"),
+            (
+                PrunePlan { tenant: 0, layer: 0, filters: vec![3, 3] },
+                "plan filters not strictly ascending",
+            ),
+            (
+                PrunePlan { tenant: 0, layer: 2, filters: vec![1] },
+                "stale plan: filter already pruned",
+            ),
+            (
+                PrunePlan { tenant: 0, layer: 0, filters: vec![0, 1, 2, 3, 4, 5] },
+                "plan would retire the layer's last live kernel",
+            ),
+        ];
+        for (plan, want) in cases {
+            let (out, events) = run(&mut fx, &plan, None);
+            let CutoverOutcome::Aborted { reason } = out else {
+                panic!("plan {plan:?} must abort");
+            };
+            assert_eq!(reason, want);
+            let kinds: Vec<&str> = events.iter().map(|e| e.kind()).collect();
+            assert_eq!(kinds, ["prune_planned", "prune_aborted"], "no Started/Fenced");
+        }
+        // aborts spent no epoch and left the dense layer authoritative
+        assert_eq!(fx.route.epoch, epoch_before);
+        assert!(fx.model.live_mask(0).iter().all(|&b| b));
+    }
+
+    #[test]
+    fn half_present_shard_aborts_the_cutover() {
+        let mut fx = fixture(replicated_router(13));
+        // stale placement slot: pretend member 1's copy vanished
+        fx.placement.layers[0].shards[1][0] = None;
+        let (out, _) = run(&mut fx, &PrunePlan { tenant: 0, layer: 0, filters: vec![0] }, None);
+        let CutoverOutcome::Aborted { reason } = out else {
+            panic!("must abort on a half-present shard");
+        };
+        assert_eq!(reason, "stale placement: shard slot already empty");
+    }
+}

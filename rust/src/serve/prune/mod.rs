@@ -1,0 +1,176 @@
+//! Live in-situ pruning: the serving-side closure of the paper's
+//! similarity-driven prune loop (Fig. 4b) — monitor → cutover →
+//! headroom — run against tenants that are *serving traffic*, not
+//! training.
+//!
+//! The training-side loop ([`crate::pruning`]) evaluates kernel
+//! similarity between epochs and flips live-mask bits in a model that
+//! nobody is querying. This module runs the same rule over the kernels
+//! a tenant has **programmed on the fleet** and re-shards the pruned
+//! layer mid-serve:
+//!
+//! 1. **Monitor** ([`LivePruneMonitor`]): on a batch-count cadence
+//!    ([`LivePruneConfig::every_batches`]), pack each layer's sign bits
+//!    once ([`crate::pruning::similarity::PackedKernels`] — the same
+//!    XOR+popcount primitive the chip's search-in-memory implements),
+//!    rebuild the pairwise similarity matrices of the *currently live*
+//!    kernels, and feed them to a fresh
+//!    [`crate::pruning::PruningScheduler`] seeded from the tenant
+//!    model's live masks. Whatever the scheduler would prune becomes a
+//!    [`PrunePlan`] per layer.
+//! 2. **Cutover** ([`cutover::PruneCutover`]): an epoch-fenced state
+//!    machine (plan → fence → drain → commit masks → free rows) that
+//!    retires the pruned filters' shards from the serving placement
+//!    without ever producing a wrong logit — the same
+//!    fence-then-free protocol as cross-group migration (DESIGN.md §9,
+//!    §12). Aborts leave the dense layer authoritative.
+//! 3. **Headroom**: freed rows return to every member's
+//!    [`crate::cim::mapping::RowAllocator`] free list via
+//!    `Backend::release`, so the quota headroom and the engine report
+//!    ([`PruneReport`]) show capacity gained, and the dense→pruned
+//!    logit shift is measured on a live probe input and reported —
+//!    never silent.
+//!
+//! Every transition is observable: `ObsEvent::Prune{Planned, Started,
+//! Fenced, Committed, Aborted}` on the event bus, a
+//! [`crate::serve::obs::Stage::Prune`] span per pass, and
+//! `prune.*` metrics.
+
+pub mod cutover;
+pub mod monitor;
+
+pub use cutover::{CutoverOutcome, PruneCommit, PruneCutover};
+pub use monitor::LivePruneMonitor;
+
+use crate::pruning::PruneConfig;
+
+/// Engine-level knobs for the live prune loop. Disabled by default
+/// (`every_batches: 0`) — enabling it changes *which model* a tenant
+/// serves over time (the pruned one), which is an operator decision,
+/// not a transparent optimization.
+#[derive(Clone, Debug)]
+pub struct LivePruneConfig {
+    /// Run a monitor pass every N batches served fleet-wide
+    /// (0 = live pruning off). Same cadence convention as
+    /// [`crate::serve::engine::rebalance::RebalanceConfig`].
+    pub every_batches: u64,
+    /// At most this many layer cutovers per tenant per pass — each
+    /// cutover costs a fence + full fleet drain, so passes are kept
+    /// shallow and the loop converges over several passes instead.
+    pub max_layers_per_pass: usize,
+    /// The similarity rule itself (threshold, frequency, floors, global
+    /// rate cap) — shared verbatim with the training-side scheduler.
+    pub rule: PruneConfig,
+}
+
+impl Default for LivePruneConfig {
+    fn default() -> Self {
+        LivePruneConfig {
+            every_batches: 0,
+            max_layers_per_pass: 1,
+            rule: PruneConfig::default(),
+        }
+    }
+}
+
+impl LivePruneConfig {
+    /// Is a monitor pass due at this fleet batch count?
+    pub fn due(&self, batches_served: u64) -> bool {
+        self.every_batches > 0 && batches_served > 0 && batches_served % self.every_batches == 0
+    }
+}
+
+/// One layer's worth of proposed prunes: the filters the similarity
+/// rule retired, to be committed by a single epoch-fenced cutover.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrunePlan {
+    pub tenant: usize,
+    pub layer: usize,
+    /// Filter indices to retire, ascending, each currently live.
+    pub filters: Vec<usize>,
+}
+
+/// Fleet-level outcome of the live prune loop, embedded in
+/// [`crate::serve::EngineReport`].
+#[derive(Clone, Debug, Default)]
+pub struct PruneReport {
+    /// Cutovers committed (one per layer per firing pass).
+    pub cutovers: u64,
+    /// Cutovers aborted pre-fence (stale plan, quarantined member, …).
+    pub aborted: u64,
+    /// Filters retired across all tenants.
+    pub filters_pruned: u64,
+    /// Rows returned to backend allocators (re-allocatable headroom).
+    pub rows_freed: u64,
+    /// Rows whose release failed (backend without release support) —
+    /// retired but not reusable until the member restarts.
+    pub rows_retired: u64,
+    /// Per-tenant detail, indexed like `EngineReport::tenants`.
+    pub per_tenant: Vec<TenantPruneStats>,
+}
+
+/// Per-tenant live-pruning outcome.
+#[derive(Clone, Debug, Default)]
+pub struct TenantPruneStats {
+    /// Filters retired from this tenant while it served.
+    pub filters_pruned: u64,
+    /// Rows freed back to the allocators by this tenant's cutovers.
+    pub rows_freed: u64,
+    /// MAC ops per input at engine start (under the masks it started
+    /// serving with) and at shutdown — the paper's op-reduction claim,
+    /// measured on live traffic.
+    pub mac_ops_start: u64,
+    pub mac_ops_end: u64,
+    /// Final fraction of this tenant's kernels pruned (export-time
+    /// pruning included).
+    pub prune_rate: f64,
+    /// Largest |dense − pruned| logit shift observed on any cutover's
+    /// probe input. 0.0 when no probe was available.
+    pub max_logit_delta: f64,
+    /// Row-quota headroom at shutdown: quota minus rows still used.
+    pub quota_headroom_rows: u64,
+    /// Final live masks, one per layer — what a caller needs to rebuild
+    /// the pruned reference oracle after the fact.
+    pub live_masks: Vec<Vec<bool>>,
+}
+
+impl TenantPruneStats {
+    /// Fraction of per-input MAC ops removed while serving
+    /// (0.0 when nothing was pruned or the model had no ops).
+    pub fn mac_reduction(&self) -> f64 {
+        if self.mac_ops_start == 0 {
+            return 0.0;
+        }
+        1.0 - self.mac_ops_end as f64 / self.mac_ops_start as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cadence_follows_the_rebalance_convention() {
+        let off = LivePruneConfig::default();
+        assert!(!off.due(0));
+        assert!(!off.due(100));
+        let on = LivePruneConfig { every_batches: 4, ..Default::default() };
+        assert!(!on.due(0), "batch 0 never fires");
+        assert!(!on.due(3));
+        assert!(on.due(4));
+        assert!(!on.due(5));
+        assert!(on.due(8));
+    }
+
+    #[test]
+    fn mac_reduction_handles_degenerate_models() {
+        let zero = TenantPruneStats::default();
+        assert_eq!(zero.mac_reduction(), 0.0);
+        let pruned = TenantPruneStats {
+            mac_ops_start: 1000,
+            mac_ops_end: 600,
+            ..Default::default()
+        };
+        assert!((pruned.mac_reduction() - 0.4).abs() < 1e-12);
+    }
+}

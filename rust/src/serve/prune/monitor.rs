@@ -1,0 +1,190 @@
+//! The similarity monitor: re-runs the paper's prune rule over one
+//! tenant's *programmed* kernels on a serving cadence and turns the
+//! scheduler's decisions into per-layer [`PrunePlan`]s.
+//!
+//! Sign bits never change while a tenant serves (only live masks do),
+//! so the monitor packs each layer's kernels **once** at construction
+//! and rebuilds only the live-masked similarity matrices per pass. The
+//! scheduler itself is rebuilt fresh from the model's current masks
+//! each pass (state lives in the model, not the monitor) — an aborted
+//! cutover therefore needs no compensation: the next pass re-derives
+//! the same proposal from the unchanged masks.
+
+use crate::cim::similarity::SimilarityMatrix;
+use crate::pruning::{PackedKernels, PruningScheduler};
+use crate::serve::model::ModelBundle;
+
+use super::{LivePruneConfig, PrunePlan};
+
+/// Per-tenant similarity monitor (see the module docs).
+pub struct LivePruneMonitor {
+    cfg: LivePruneConfig,
+    /// Packed sign bits per layer — the exact bit patterns programmed
+    /// on chip, packed once ([`ModelBundle::layer_sign_bits`]).
+    packed: Vec<PackedKernels>,
+    /// Weights (bit cells) per kernel of each layer, for the
+    /// scheduler's parameter accounting.
+    weights: Vec<usize>,
+    /// Monitor passes run so far — doubles as the scheduler epoch, so
+    /// the rule's warm-up/interval schedule applies to serving passes
+    /// exactly as it does to training epochs.
+    passes: usize,
+}
+
+impl LivePruneMonitor {
+    pub fn new(cfg: LivePruneConfig, model: &ModelBundle) -> Self {
+        let n_layers = model.n_layers();
+        let packed: Vec<PackedKernels> = (0..n_layers)
+            .map(|l| PackedKernels::from_bit_kernels(&model.layer_sign_bits(l)))
+            .collect();
+        let weights = packed.iter().map(|p| p.n_bits).collect();
+        LivePruneMonitor { cfg, packed, weights, passes: 0 }
+    }
+
+    /// Monitor passes run so far.
+    pub fn passes(&self) -> usize {
+        self.passes
+    }
+
+    /// Run one monitor pass: similarity matrices over the currently
+    /// live kernels, one scheduler evaluation, and the pruned pairs
+    /// grouped into at most
+    /// [`LivePruneConfig::max_layers_per_pass`] per-layer plans
+    /// (shallowest layers first — they are re-proposed next pass if
+    /// deferred). Returns no plans during the rule's warm-up or on
+    /// off-interval passes.
+    pub fn propose(&mut self, tenant: usize, model: &ModelBundle) -> Vec<PrunePlan> {
+        self.passes += 1;
+        let epoch = self.passes;
+        let masks: Vec<Vec<bool>> =
+            (0..self.packed.len()).map(|l| model.live_mask(l).to_vec()).collect();
+        let mut sched =
+            PruningScheduler::from_live_masks(self.cfg.rule.clone(), &masks, &self.weights);
+        if !sched.is_prune_epoch(epoch) {
+            return Vec::new();
+        }
+        let sims: Vec<SimilarityMatrix> = self
+            .packed
+            .iter()
+            .zip(&masks)
+            .map(|(p, live)| p.similarity_matrix(live))
+            .collect();
+        let event = sched.evaluate(epoch, &sims);
+        let mut plans: Vec<PrunePlan> = Vec::new();
+        for (layer, filter) in event.pruned {
+            match plans.iter_mut().find(|p| p.layer == layer) {
+                Some(p) => p.filters.push(filter),
+                None => plans.push(PrunePlan { tenant, layer, filters: vec![filter] }),
+            }
+        }
+        for p in &mut plans {
+            p.filters.sort_unstable();
+        }
+        plans.sort_by_key(|p| p.layer);
+        plans.truncate(self.cfg.max_layers_per_pass);
+        plans
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::PruneConfig;
+    use crate::serve::model::MnistBundle;
+
+    /// An MNIST bundle whose filters repeat two sign prototypes per
+    /// layer — similarity 1.0 within each pair class, so the rule fires
+    /// deterministically.
+    fn clustered_model(channels: [usize; 3]) -> ModelBundle {
+        let mut m = MnistBundle::synthetic(channels, 0.0, 7);
+        for layer in &mut m.conv {
+            let protos: Vec<Vec<bool>> = layer.bits[..2].to_vec();
+            for (f, bits) in layer.bits.iter_mut().enumerate() {
+                *bits = protos[f % 2].clone();
+            }
+        }
+        m.into()
+    }
+
+    fn aggressive_rule() -> PruneConfig {
+        PruneConfig { min_live_per_layer: 1, max_prune_rate: 1.0, ..Default::default() }
+    }
+
+    #[test]
+    fn warmup_passes_propose_nothing() {
+        let model = clustered_model([8, 8, 8]);
+        let cfg = LivePruneConfig { rule: aggressive_rule(), ..Default::default() };
+        let mut mon = LivePruneMonitor::new(cfg, &model);
+        // default warmup_epochs = 2: pass 1 is warm-up
+        assert!(mon.propose(0, &model).is_empty());
+        assert_eq!(mon.passes(), 1);
+        // pass 2 is the first prune epoch and the clusters are ripe
+        assert!(!mon.propose(0, &model).is_empty());
+    }
+
+    #[test]
+    fn plans_respect_the_per_pass_layer_cap_and_are_sorted() {
+        let model = clustered_model([8, 8, 8]);
+        let cfg = LivePruneConfig {
+            max_layers_per_pass: 1,
+            rule: aggressive_rule(),
+            ..Default::default()
+        };
+        let mut mon = LivePruneMonitor::new(cfg, &model);
+        mon.propose(0, &model);
+        let plans = mon.propose(3, &model);
+        assert_eq!(plans.len(), 1, "one layer per pass");
+        let p = &plans[0];
+        assert_eq!(p.tenant, 3);
+        assert!(p.filters.windows(2).all(|w| w[0] < w[1]), "ascending: {:?}", p.filters);
+        // every proposed filter is currently live
+        assert!(p.filters.iter().all(|&f| model.live_mask(p.layer)[f]));
+    }
+
+    #[test]
+    fn deferred_layers_are_reproposed_and_committed_masks_converge() {
+        let mut model = clustered_model([8, 8, 8]);
+        let cfg = LivePruneConfig {
+            max_layers_per_pass: 1,
+            rule: aggressive_rule(),
+            ..Default::default()
+        };
+        let mut mon = LivePruneMonitor::new(cfg, &model);
+        // drive passes, committing each plan into the model as the
+        // engine's cutover would, until the rule runs dry
+        let mut idle = 0;
+        let mut committed = 0usize;
+        while idle < 3 {
+            let plans = mon.propose(0, &model);
+            if plans.is_empty() {
+                idle += 1;
+                continue;
+            }
+            idle = 0;
+            for p in &plans {
+                for &f in &p.filters {
+                    assert!(model.prune_filter(p.layer, f), "plans never repeat a filter");
+                    committed += 1;
+                }
+            }
+        }
+        // two prototypes per 8-filter layer -> 6 dups pruned per layer
+        assert_eq!(committed, 3 * 6);
+        for l in 0..3 {
+            assert_eq!(model.live_mask(l).iter().filter(|&&b| b).count(), 2);
+        }
+    }
+
+    #[test]
+    fn dissimilar_kernels_never_fire() {
+        // random synthetic kernels sit far below the 0.75 threshold
+        let model = ModelBundle::synthetic_mnist([8, 8, 8], 0.0, 21);
+        let mut mon = LivePruneMonitor::new(
+            LivePruneConfig { rule: aggressive_rule(), ..Default::default() },
+            &model,
+        );
+        for _ in 0..6 {
+            assert!(mon.propose(0, &model).is_empty());
+        }
+    }
+}

@@ -265,6 +265,12 @@ pub struct EngineReport {
     /// Shards migrated across all rebalance passes (intra-backend moves
     /// plus shards carried by cross-group layer migrations).
     pub shards_moved: u64,
+    /// Live in-situ pruning outcome: cutovers committed/aborted,
+    /// filters retired, rows freed back to the allocators, and
+    /// per-tenant MAC-reduction / logit-shift / final-mask detail
+    /// ([`crate::serve::prune::PruneReport`]). All zeros when the loop
+    /// is off (the default).
+    pub prune: crate::serve::prune::PruneReport,
     /// Fleet-level dispatch counters from the engine's
     /// [`crate::serve::transport::ShardRouter`]: hedges fired/won,
     /// spills, stale/epoch-fenced replies discarded, cross-group
@@ -471,6 +477,7 @@ mod tests {
             stuck_retries: 0,
             rebalances: 1,
             shards_moved: 2,
+            prune: Default::default(),
             transport: RouterStats::default(),
         };
         assert_eq!(r.answered(), 100);

@@ -738,6 +738,13 @@ impl ShardRouter {
         self.groups[group].members.len()
     }
 
+    /// Global member ids of one group, in member-local order — the
+    /// order [`PlacedLayer::shards`] is indexed in, so a cutover can
+    /// pair each member-local shard row with the member that holds it.
+    pub fn group_members(&self, group: usize) -> Vec<usize> {
+        self.groups[group].members.clone()
+    }
+
     /// `(group, member-local index)` of a global member id.
     pub fn member_group(&self, member: usize) -> (usize, usize) {
         (self.members[member].group, self.members[member].local)

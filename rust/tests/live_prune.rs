@@ -1,0 +1,406 @@
+//! The live-prune suite: the similarity-monitored prune loop fired
+//! **mid-serve**, end to end over real pools — every answer bit-exact
+//! against the *pruned-mask* reference oracle at every point of the
+//! run, at pipeline depths {1, 2, 4}, with stuck-tile fault injection,
+//! and through a concurrent host bounce on a two-group TCP fleet.
+//! Freed rows must come back as tenant quota headroom, and the request
+//! accounting must balance (`attempts == answered + dropped`).
+//!
+//! The oracle discipline: a served answer is bit-exact against the
+//! masks that were live *when its batch dispatched*, which is some
+//! prefix of the committed-cutover sequence. The harness therefore
+//! tracks `PruneCommitted` events in order and applies them to a local
+//! [`ModelBundle`] clone lazily — advancing the clone one commit at a
+//! time until the answer matches — so an answer that matches **no**
+//! committed mask state is the failure, exactly the "silent logit
+//! drift" the cutover design forbids (DESIGN.md §12).
+//!
+//! The cutover state machine itself (aborts, release accounting,
+//! replicated groups) is unit-tested in `serve/prune/cutover.rs`; the
+//! monitor's scheduling in `serve/prune/monitor.rs`; the engine wiring
+//! in `serve/engine/mod.rs`. This file proves the same loop against
+//! real chips, the real executor, and a real TCP fleet.
+
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use rram_cim::chip::ChipConfig;
+use rram_cim::nn::data::mnist;
+use rram_cim::pruning::PruneConfig;
+use rram_cim::serve::transport::{
+    Backend, Host, HostConfig, LocalBackend, ReconnectPolicy, RemoteBackend, ShardRouter,
+};
+use rram_cim::serve::{
+    AdmissionConfig, CacheConfig, Engine, EngineConfig, EngineReport, EventRecord, LivePruneConfig,
+    MnistBundle, ModelBundle, ObsEvent, PipelineConfig, PoolConfig, RebalanceConfig, RouterConfig,
+    TenantConfig,
+};
+use rram_cim::testing::forall;
+
+/// An MNIST bundle whose filters repeat two sign prototypes per layer —
+/// similarity 1.0 within each pair class, so the paper's rule fires
+/// deterministically once its warm-up passes.
+fn clustered_mnist(channels: [usize; 3], seed: u64) -> ModelBundle {
+    let mut m = MnistBundle::synthetic(channels, 0.0, seed);
+    for layer in &mut m.conv {
+        let protos: Vec<Vec<bool>> = layer.bits[..2].to_vec();
+        for (f, bits) in layer.bits.iter_mut().enumerate() {
+            *bits = protos[f % 2].clone();
+        }
+    }
+    m.into()
+}
+
+fn pool_cfg(seed: u64, fault: f64) -> PoolConfig {
+    let mut chip = ChipConfig::small_test();
+    chip.device.stuck_fault_prob = fault;
+    PoolConfig { chips: 3, chip, seed }
+}
+
+fn router_cfg(depth: usize) -> RouterConfig {
+    RouterConfig { pipeline: PipelineConfig { depth }, ..RouterConfig::default() }
+}
+
+/// Prune on every batch boundary with the floors opened up, so a short
+/// test run walks the clustered model all the way down.
+fn prune_cfg() -> LivePruneConfig {
+    LivePruneConfig {
+        every_batches: 1,
+        max_layers_per_pass: 1,
+        rule: PruneConfig { min_live_per_layer: 1, max_prune_rate: 1.0, ..Default::default() },
+    }
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        pool: PoolConfig::default(), // ignored by start_with_router
+        admission: AdmissionConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            quantum: 4,
+        },
+        cache: CacheConfig { capacity: 0 }, // every request hits silicon
+        // the rebalancer stays off: this suite isolates the prune loop
+        // (prune + migration composition rides in `examples/multi_host`)
+        rebalance: RebalanceConfig { every_batches: 0, max_moves: 0, group_moves: 0 },
+        prune: prune_cfg(),
+        obs: true,
+    }
+}
+
+/// The pruned-mask reference oracle (see the module docs): a model
+/// clone advanced lazily through the committed-cutover sequence.
+struct PrunedOracle {
+    model: ModelBundle,
+    pending: VecDeque<(usize, Vec<usize>)>,
+}
+
+impl PrunedOracle {
+    fn new(model: ModelBundle) -> PrunedOracle {
+        PrunedOracle { model, pending: VecDeque::new() }
+    }
+
+    /// Queue every drained `PruneCommitted` (they arrive in commit
+    /// order — the event bus is gapless per subscriber).
+    fn absorb(&mut self, records: Vec<EventRecord>) {
+        for rec in records {
+            if let ObsEvent::PruneCommitted { tenant: 0, layer, filters, .. } = rec.event {
+                self.pending.push_back((layer, filters));
+            }
+        }
+    }
+
+    /// Assert `logits` is bit-exact against the mask state its batch
+    /// served under: the clone's current masks, or some later prefix of
+    /// the committed sequence (a commit can land between the dispatch
+    /// and this check — never the other way around, since the prune
+    /// pass runs only at batch boundaries).
+    fn check(&mut self, label: &str, input: &[f32], logits: &[f32]) -> Result<(), String> {
+        loop {
+            if logits == self.model.reference_logits(input).as_slice() {
+                return Ok(());
+            }
+            let Some((layer, filters)) = self.pending.pop_front() else {
+                return Err(format!("{label}: logits match no committed mask state"));
+            };
+            for f in filters {
+                self.model.prune_filter(layer, f);
+            }
+        }
+    }
+
+    /// Fold the rest of the committed sequence into the clone (for the
+    /// end-of-run mask comparison against the engine's report).
+    fn apply_rest(&mut self) {
+        while let Some((layer, filters)) = self.pending.pop_front() {
+            for f in filters {
+                assert!(self.model.prune_filter(layer, f), "a commit repeated filter {f}");
+            }
+        }
+    }
+
+    fn live_masks(&self) -> Vec<Vec<bool>> {
+        (0..self.model.n_layers()).map(|l| self.model.live_mask(l).to_vec()).collect()
+    }
+}
+
+/// `attempts == answered + dropped`, and blocking submits never drop.
+fn check_accounting(report: &EngineReport, attempts: u64) -> Result<(), String> {
+    if report.answered() + report.dropped() != attempts {
+        return Err(format!(
+            "accounting broken: {} answered + {} dropped != {attempts} attempts",
+            report.answered(),
+            report.dropped()
+        ));
+    }
+    if report.dropped() != 0 {
+        return Err("blocking submits must never drop".into());
+    }
+    Ok(())
+}
+
+/// The single-pool harness body at one pipeline depth: a clustered
+/// tenant under a row quota exactly equal to its dense footprint, the
+/// prune loop firing on every batch boundary, every answer checked
+/// against the lazy oracle. On an ideal pool the run must commit
+/// cutovers, free rows, and surface them as quota headroom; with fault
+/// injection the engine may instead reject at placement — that must be
+/// a clean, explicit error, never a wrong logit.
+fn run_prune_harness(depth: usize, fault: f64, seed: u64) -> Result<(), String> {
+    let model = clustered_mnist([6, 6, 6], seed);
+    let backend =
+        LocalBackend::from_pool_config(&pool_cfg(seed ^ 2, fault)).map_err(|e| e.to_string())?;
+    let router =
+        ShardRouter::new(vec![vec![Box::new(backend) as Box<dyn Backend>]], router_cfg(depth))
+            .map_err(|e| e.to_string())?;
+    // the quota is exactly the dense model's footprint: any headroom
+    // the report shows can only have come from cutover-freed rows
+    let quota = model.rows_required(router.data_cols());
+    let tenants = vec![TenantConfig::new("mnist", model.clone()).with_row_quota(quota)];
+    let engine = match Engine::start_with_router(tenants, router, &engine_cfg()) {
+        Ok(e) => e,
+        Err(e) => {
+            let msg = e.to_string();
+            return if msg.contains("placement") || msg.contains("rows") || msg.contains("quota") {
+                Ok(()) // capacity lost to faults: explicit verdict
+            } else {
+                Err(format!("unexpected start error: {msg}"))
+            };
+        }
+    };
+    let events = engine.events_with(4096);
+    let mut oracle = PrunedOracle::new(model.clone());
+    let ds = mnist::generate(6, seed ^ 3);
+    for i in 0..12usize {
+        let input = ds.sample(i % 6);
+        let resp = engine.submit(0, input.to_vec()).recv().map_err(|e| e.to_string())?;
+        oracle.absorb(events.drain());
+        oracle.check(&format!("depth {depth} request {i}"), input, &resp.logits)?;
+    }
+    let report = engine.shutdown();
+    check_accounting(&report, 12)?;
+    if report.transport.peak_inflight > depth as u64 {
+        return Err(format!(
+            "depth {depth}: peak_inflight {} exceeded the bound",
+            report.transport.peak_inflight
+        ));
+    }
+    // the report's final masks are exactly the committed sequence
+    oracle.absorb(events.drain());
+    oracle.apply_rest();
+    let ts = &report.prune.per_tenant[0];
+    if ts.live_masks != oracle.live_masks() {
+        return Err("the reported live masks diverged from the committed cutovers".into());
+    }
+    let dead = ts.live_masks.iter().flatten().filter(|&&b| !b).count() as u64;
+    if ts.filters_pruned != dead {
+        return Err(format!("{} filters_pruned but {dead} dead mask slots", ts.filters_pruned));
+    }
+    if fault == 0.0 {
+        let p = &report.prune;
+        if p.cutovers == 0 {
+            return Err("the clustered tenant must commit at least one cutover".into());
+        }
+        if p.aborted != 0 {
+            return Err(format!("{} aborts on an ideal single pool", p.aborted));
+        }
+        if p.rows_freed == 0 {
+            return Err("a committed cutover must free rows".into());
+        }
+        if ts.quota_headroom_rows == 0 {
+            return Err("freed rows must surface as tenant quota headroom".into());
+        }
+        if ts.mac_ops_end >= ts.mac_ops_start {
+            return Err("pruning must shrink the tenant's MAC-op cost".into());
+        }
+    }
+    Ok(())
+}
+
+/// Property (the PR's acceptance bar, part 1): a prune cutover fired
+/// mid-serve yields logits bit-exact against the pruned-mask reference
+/// oracle — at pipeline depths 1, 2, and 4, with stuck-tile fault
+/// injection — the accounting balances, and freed rows surface as
+/// quota headroom.
+#[test]
+fn prop_live_prune_mid_serve_is_bit_exact_at_every_depth() {
+    forall(
+        "live prune: depth ∈ {1, 2, 4} serves the pruned oracle, bit for bit",
+        0x112e9,
+        2,
+        |rng| {
+            let fault = [0.0, 0.01][rng.below(2)];
+            (fault, rng.next_u64())
+        },
+        |&(fault, seed)| {
+            for depth in [1usize, 2, 4] {
+                run_prune_harness(depth, fault, seed)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The two-group TCP harness body at depth 4: layers split across two
+/// host daemons, the prune loop firing on every batch boundary, and
+/// host B bounced (crash + replacement at the same address) mid-run —
+/// the heal and the prune loop share the pass loop, so cutovers landing
+/// around the bounce must either commit cleanly or abort explicitly
+/// (quarantined owning group), never corrupt an answer.
+fn run_bounce_harness(fault: f64, seed: u64) -> Result<(), String> {
+    let model = clustered_mnist([6, 6, 6], seed);
+    let mut hosts = Vec::new();
+    let mut groups: Vec<Vec<Box<dyn Backend>>> = Vec::new();
+    for s in 0..2u64 {
+        let host = Host::spawn(HostConfig { pool: pool_cfg(seed ^ s, fault) })
+            .map_err(|e| e.to_string())?;
+        let backend = RemoteBackend::connect_with(
+            host.addr(),
+            ReconnectPolicy { max_attempts: 8, ..ReconnectPolicy::default() },
+        )
+        .map_err(|e| e.to_string())?;
+        groups.push(vec![Box::new(backend) as Box<dyn Backend>]);
+        hosts.push(host);
+    }
+    let router = ShardRouter::new(groups, router_cfg(4)).map_err(|e| e.to_string())?;
+    let engine = match Engine::start_with_router(
+        vec![TenantConfig::new("mnist", model.clone())],
+        router,
+        &engine_cfg(),
+    ) {
+        Ok(e) => e,
+        Err(e) => {
+            let msg = e.to_string();
+            drop(hosts); // daemons exit on connection close
+            return if msg.contains("placement") || msg.contains("rows") {
+                Ok(()) // capacity lost to faults: explicit verdict
+            } else {
+                Err(format!("unexpected start error: {msg}"))
+            };
+        }
+    };
+    let events = engine.events_with(4096);
+    let mut oracle = PrunedOracle::new(model.clone());
+    let ds = mnist::generate(4, seed ^ 7);
+    let serve = |i: usize, label: &str, oracle: &mut PrunedOracle| -> Result<(), String> {
+        let input = ds.sample(i % 4);
+        let resp = engine.submit(0, input.to_vec()).recv().map_err(|e| e.to_string())?;
+        oracle.absorb(events.drain());
+        oracle.check(&format!("{label} request {i}"), input, &resp.logits)
+    };
+    // phase 1: enough traffic that the clustered rule starts committing
+    for i in 0..3 {
+        serve(i, "pre-bounce", &mut oracle)?;
+    }
+    // phase 2: crash host B; a replacement with a fresh (empty) pool
+    // binds the exact same address
+    let b = hosts.pop().ok_or("host list empty")?;
+    let b_addr = b.addr();
+    b.shutdown();
+    hosts.push(
+        Host::spawn_at(b_addr, HostConfig { pool: pool_cfg(seed ^ 11, fault) })
+            .map_err(|e| e.to_string())?,
+    );
+    // phase 3: the pass loop heals the bounced member (probe,
+    // re-program the **post-prune** placement — pruned slots stay
+    // empty — rejoin) while the prune loop keeps firing around it
+    for i in 0..5 {
+        serve(i, "post-bounce", &mut oracle)?;
+    }
+    let report = engine.shutdown();
+    check_accounting(&report, 8)?;
+    if report.transport.reconnects == 0 {
+        return Err("the bounced host must have been reconnected to".into());
+    }
+    if report.transport.peak_inflight > 4 {
+        return Err(format!("depth bound exceeded ({})", report.transport.peak_inflight));
+    }
+    oracle.absorb(events.drain());
+    oracle.apply_rest();
+    let ts = &report.prune.per_tenant[0];
+    if ts.live_masks != oracle.live_masks() {
+        return Err("the reported live masks diverged from the committed cutovers".into());
+    }
+    if fault == 0.0 && report.prune.cutovers == 0 {
+        return Err("on an ideal fleet the clustered tenant must commit a cutover".into());
+    }
+    Ok(())
+}
+
+/// Property (the PR's acceptance bar, part 2): the prune loop rides out
+/// a concurrent host bounce on a two-group TCP fleet at pipeline depth
+/// 4, with fault injection — every answer still bit-exact against the
+/// pruned oracle, the accounting still balanced.
+#[test]
+fn prop_prune_cutover_rides_out_a_host_bounce_at_depth_four() {
+    forall(
+        "live prune: host bounce + depth-4 fleet, bit for bit",
+        0xb0b57,
+        2,
+        |rng| {
+            let fault = [0.0, 0.01][rng.below(2)];
+            (fault, rng.next_u64())
+        },
+        |&(fault, seed)| run_bounce_harness(fault, seed),
+    );
+}
+
+/// The headroom arithmetic closes exactly: with the quota pinned to
+/// the dense footprint and a single-member ideal pool, every row a
+/// cutover frees reappears one-for-one as quota headroom — the
+/// capacity a later placement may spend (the router-level re-place is
+/// proven in `serve/prune/cutover.rs`).
+#[test]
+fn cutover_headroom_is_exactly_the_freed_rows() {
+    let model = clustered_mnist([6, 6, 6], 0x9a7e);
+    let backend = LocalBackend::from_pool_config(&pool_cfg(0x9a7f, 0.0)).unwrap();
+    let router =
+        ShardRouter::new(vec![vec![Box::new(backend) as Box<dyn Backend>]], router_cfg(2))
+            .unwrap();
+    let quota = model.rows_required(router.data_cols());
+    let engine = Engine::start_with_router(
+        vec![TenantConfig::new("mnist", model.clone()).with_row_quota(quota)],
+        router,
+        &engine_cfg(),
+    )
+    .unwrap();
+    let ds = mnist::generate(4, 0x9a80);
+    for i in 0..8 {
+        engine.submit(0, ds.sample(i % 4).to_vec()).recv().unwrap();
+    }
+    let report = engine.shutdown();
+    let ts = &report.prune.per_tenant[0];
+    assert!(report.prune.cutovers > 0, "the clustered tenant must prune");
+    assert!(ts.rows_freed > 0, "committed cutovers must free rows");
+    assert_eq!(
+        ts.quota_headroom_rows, ts.rows_freed,
+        "every freed row reappears one-for-one as quota headroom"
+    );
+    assert_eq!(report.prune.rows_retired, 0, "an ideal pool retires nothing");
+    assert_eq!(report.prune.per_tenant.len(), 1);
+}
