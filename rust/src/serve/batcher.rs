@@ -10,7 +10,7 @@
 //!   drops a request; `try_send` surfaces a full queue as an error for
 //!   callers that prefer shedding to waiting.
 
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
 
 /// Batching knobs.
@@ -41,8 +41,10 @@ pub struct Request {
     /// or `3 * cloud_points` interleaved xyz floats (PointNet path).
     pub input: Vec<f32>,
     pub submitted: Instant,
-    /// Where the scheduler sends the result.
-    pub reply: Sender<Response>,
+    /// Where the scheduler sends the result. One-shot: a bounded
+    /// `sync_channel(1)` sender, so the single reply buffers without a
+    /// blocked receiver and the serve plane holds no unbounded queues.
+    pub reply: SyncSender<Response>,
 }
 
 /// One served inference.
@@ -96,10 +98,10 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::{channel, TrySendError};
+    use std::sync::mpsc::TrySendError;
 
     fn request(id: u64) -> (Request, Receiver<Response>) {
-        let (reply, rx) = channel();
+        let (reply, rx) = sync_channel(1);
         (
             Request { id, input: vec![0.0; 4], submitted: Instant::now(), reply },
             rx,

@@ -32,6 +32,7 @@ use std::time::{Duration, Instant};
 
 use crate::serve::batcher::Request;
 use crate::serve::obs::{Obs, ObsEvent};
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 
 /// Admission/drain knobs.
 #[derive(Clone, Debug)]
@@ -105,20 +106,21 @@ impl Admission {
     /// counted shed also emits [`ObsEvent::DropShed`] — the event and
     /// the `dropped` counter move in lockstep, exactly once per shed.
     pub fn attach_obs(&self, obs: Arc<Obs>) {
-        self.inner.0.lock().unwrap().obs = obs;
+        lock_unpoisoned(&self.inner.0).obs = obs;
     }
 
     /// Blocking submit: waits while the tenant's queue is full (lossless
     /// per-tenant backpressure). Panics if the engine already shut down.
+    // lint: allow(panic-freedom) — tenant slot comes from the registry lookup above; queue vectors are sized to the tenant count at construction
     pub fn submit(&self, tenant: usize, req: Request) {
         let (lock, cv) = &*self.inner;
-        let mut s = lock.lock().unwrap();
+        let mut s = lock_unpoisoned(lock);
         loop {
             assert!(!s.closed, "engine already shut down");
             if s.queues[tenant].q.len() < s.queues[tenant].depth {
                 break;
             }
-            s = cv.wait(s).unwrap();
+            s = wait_unpoisoned(cv, s);
         }
         s.queues[tenant].q.push_back(req);
         cv.notify_all();
@@ -128,9 +130,10 @@ impl Admission {
     /// back and counted in that tenant's `dropped` — never admitted, so
     /// never also answered. A closed plane hands the request back
     /// without counting (the caller is racing shutdown, not load).
+    // lint: allow(panic-freedom) — tenant slot comes from the registry lookup above; queue vectors are sized to the tenant count at construction
     pub fn try_submit(&self, tenant: usize, req: Request) -> Result<(), Request> {
         let (lock, cv) = &*self.inner;
-        let mut s = lock.lock().unwrap();
+        let mut s = lock_unpoisoned(lock);
         if s.closed {
             return Err(req);
         }
@@ -148,23 +151,26 @@ impl Admission {
     /// `None` once every queue is empty.
     pub fn close(&self) {
         let (lock, cv) = &*self.inner;
-        lock.lock().unwrap().closed = true;
+        lock_unpoisoned(lock).closed = true;
         cv.notify_all();
     }
 
     /// Requests a tenant shed so far.
+    // lint: allow(panic-freedom) — per-tenant stats vector is sized to the tenant count at construction
     pub fn dropped(&self, tenant: usize) -> u64 {
-        self.inner.0.lock().unwrap().queues[tenant].dropped
+        lock_unpoisoned(&self.inner.0).queues[tenant].dropped
     }
 
     /// Queued (admitted, not yet drained) requests of one tenant.
+    // lint: allow(panic-freedom) — per-tenant stats vector is sized to the tenant count at construction
     pub fn queued(&self, tenant: usize) -> usize {
-        self.inner.0.lock().unwrap().queues[tenant].q.len()
+        lock_unpoisoned(&self.inner.0).queues[tenant].q.len()
     }
 
     /// DRR visit: pick the next non-empty tenant queue (round-robin from
     /// the cursor) and credit it a quantum. Returns `None` when all
     /// queues are empty.
+    // lint: allow(panic-freedom) — deficit-round-robin cursor is reduced modulo the queue count before indexing
     fn pick(s: &mut Shared, quantum: usize) -> Option<usize> {
         let n = s.queues.len();
         for i in 0..n {
@@ -183,9 +189,10 @@ impl Admission {
     /// or when `max_wait` elapses after its first one. Returns `None`
     /// once the plane is closed and every queue has drained — the
     /// coordinator's shutdown signal.
+    // lint: allow(panic-freedom) — queue indices come from pick(), which stays within the queue vector
     pub fn next_batch(&self) -> Option<(usize, Vec<Request>)> {
         let (lock, cv) = &*self.inner;
-        let mut s = lock.lock().unwrap();
+        let mut s = lock_unpoisoned(lock);
         loop {
             if let Some(t) = Self::pick(&mut s, self.cfg.quantum) {
                 let limit = s.queues[t].deficit.min(self.cfg.max_batch).max(1);
@@ -205,7 +212,7 @@ impl Admission {
                     if now >= deadline {
                         break;
                     }
-                    let (guard, timeout) = cv.wait_timeout(s, deadline - now).unwrap();
+                    let (guard, timeout) = wait_timeout_unpoisoned(cv, s, deadline - now);
                     s = guard;
                     if timeout.timed_out() {
                         // drain whatever arrived with the timeout race
@@ -230,7 +237,7 @@ impl Admission {
             if s.closed {
                 return None;
             }
-            s = cv.wait(s).unwrap();
+            s = wait_unpoisoned(cv, s);
         }
     }
 }
@@ -238,11 +245,11 @@ impl Admission {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::{channel, Receiver};
+    use std::sync::mpsc::{sync_channel, Receiver};
     use crate::serve::batcher::Response;
 
     fn request(id: u64) -> (Request, Receiver<Response>) {
-        let (reply, rx) = channel();
+        let (reply, rx) = sync_channel(1);
         (Request { id, input: vec![0.0; 4], submitted: Instant::now(), reply }, rx)
     }
 

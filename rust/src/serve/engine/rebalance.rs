@@ -107,6 +107,7 @@ impl Rebalancer {
     /// chip)` from the wear accrued since the last pass. Returns `None`
     /// when nothing is hot (unless `force`) or when no other chip of
     /// the hot member has free rows.
+    // lint: allow(panic-freedom) — chip indices enumerate the wear snapshot, which covers every chip in the pool
     pub fn pick_chips(
         &self,
         now: &[Vec<WearLedger>],
@@ -145,6 +146,7 @@ pub(crate) type ShardHeat = Vec<Vec<u64>>;
 /// `(group, member_local)`, across every tenant, hottest first, at
 /// most `max_moves`. Heat is the per-shard dispatch count the
 /// coordinator maintains (`heat[tenant][layer][filter]`).
+// lint: allow(panic-freedom) — move candidates index the placement snapshot the plan was derived from
 pub(crate) fn plan_moves(
     placements: &[RouterPlacement],
     heat: &[ShardHeat],
@@ -195,6 +197,7 @@ pub(crate) struct GroupMove {
 /// row need fits the destination's headroom — moving the hottest layer
 /// both relieves the most future wear and frees its rows for whatever
 /// the source must host next.
+// lint: allow(panic-freedom) — group and member indices enumerate the router tables the plan was derived from
 pub(crate) fn plan_group_move(
     placements: &[RouterPlacement],
     heat: &[ShardHeat],

@@ -73,6 +73,7 @@ impl TenantConfig {
 /// Registry-level sanity: at least one tenant, unique names, positive
 /// queue depths, and every model structurally valid — checked once at
 /// engine start so a malformed registration fails fast.
+// lint: allow(panic-freedom) — first() access is guarded by the explicit emptiness check above
 pub fn validate_tenants(tenants: &[TenantConfig]) -> Result<()> {
     if tenants.is_empty() {
         return Err(anyhow!("the engine needs at least one tenant"));

@@ -114,6 +114,10 @@
 //! in `clippy.toml`).
 
 #![deny(clippy::disallowed_macros)]
+// Serve code acquires locks only through `util::sync::lock_unpoisoned`
+// and the Condvar wrappers — the documented poisoning policy — never
+// the raw panicking std methods (see clippy.toml `disallowed-methods`).
+#![deny(clippy::disallowed_methods)]
 
 pub mod batcher;
 pub mod engine;

@@ -32,6 +32,8 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::util::sync::lock_unpoisoned;
+
 /// One control-plane transition. Payloads are indexes into the fleet
 /// the subscriber already knows (router member order, engine tenant
 /// order) plus the epoch/count that made the transition observable.
@@ -165,7 +167,7 @@ impl EventBus {
         let (tx, rx) = sync_channel(capacity.max(1));
         let dropped = Arc::new(AtomicU64::new(0));
         if self.enabled {
-            self.subs.lock().unwrap().push(SubSlot {
+            lock_unpoisoned(&self.subs).push(SubSlot {
                 tx,
                 delivered: 0,
                 dropped: Arc::clone(&dropped),
@@ -184,7 +186,7 @@ impl EventBus {
         }
         log::debug!(target: "rram_cim::obs", "{event:?}");
         self.emitted.fetch_add(1, Ordering::Relaxed);
-        let mut subs = self.subs.lock().unwrap();
+        let mut subs = lock_unpoisoned(&self.subs);
         for sub in subs.iter_mut() {
             match sub.tx.try_send(EventRecord { seq: sub.delivered, event: event.clone() }) {
                 Ok(()) => sub.delivered += 1,

@@ -21,6 +21,7 @@ use std::time::Duration;
 
 use crate::serve::stats::LatencyHistogram;
 use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
 
 /// A monotone counter handle.
 #[derive(Clone, Default)]
@@ -67,12 +68,12 @@ pub struct Histogram(Arc<Mutex<LatencyHistogram>>);
 
 impl Histogram {
     pub fn record(&self, latency: Duration) {
-        self.0.lock().unwrap().record(latency);
+        lock_unpoisoned(&self.0).record(latency);
     }
 
     /// A point-in-time copy of the underlying histogram.
     pub fn read(&self) -> LatencyHistogram {
-        self.0.lock().unwrap().clone()
+        lock_unpoisoned(&self.0).clone()
     }
 }
 
@@ -113,7 +114,7 @@ impl MetricsRegistry {
         if !self.enabled {
             return Counter::default();
         }
-        self.series.lock().unwrap().counters.entry(name.to_string()).or_default().clone()
+        lock_unpoisoned(&self.series).counters.entry(name.to_string()).or_default().clone()
     }
 
     /// The gauge named `name`, registered on first use.
@@ -121,7 +122,7 @@ impl MetricsRegistry {
         if !self.enabled {
             return Gauge::default();
         }
-        self.series.lock().unwrap().gauges.entry(name.to_string()).or_default().clone()
+        lock_unpoisoned(&self.series).gauges.entry(name.to_string()).or_default().clone()
     }
 
     /// The histogram named `name`, registered on first use.
@@ -129,7 +130,7 @@ impl MetricsRegistry {
         if !self.enabled {
             return Histogram::default();
         }
-        self.series.lock().unwrap().histograms.entry(name.to_string()).or_default().clone()
+        lock_unpoisoned(&self.series).histograms.entry(name.to_string()).or_default().clone()
     }
 
     /// Everything registered, as one JSON object:
@@ -145,7 +146,7 @@ impl MetricsRegistry {
     /// returned object before rendering (how the serve bench attaches
     /// its throughput rows).
     pub fn snapshot(&self) -> Json {
-        let s = self.series.lock().unwrap();
+        let s = lock_unpoisoned(&self.series);
         let mut counters = Json::obj();
         for (name, c) in &s.counters {
             counters = counters.set(name, c.get());

@@ -19,6 +19,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::util::sync::lock_unpoisoned;
+
 /// The wire-carried trace identity of one span (DESIGN.md §10).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TraceContext {
@@ -154,7 +156,7 @@ impl TraceLog {
         if !self.enabled || !span.ctx.is_traced() {
             return;
         }
-        let mut ring = self.ring.lock().unwrap();
+        let mut ring = lock_unpoisoned(&self.ring);
         if ring.len() >= self.cap {
             ring.pop_front();
             self.dropped.fetch_add(1, Ordering::Relaxed);
@@ -164,14 +166,12 @@ impl TraceLog {
 
     /// Spans currently retained (oldest first).
     pub fn spans(&self) -> Vec<SpanRecord> {
-        self.ring.lock().unwrap().iter().cloned().collect()
+        lock_unpoisoned(&self.ring).iter().cloned().collect()
     }
 
     /// The retained spans of one trace, oldest first.
     pub fn trace(&self, trace_id: u64) -> Vec<SpanRecord> {
-        self.ring
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.ring)
             .iter()
             .filter(|s| s.ctx.trace_id == trace_id)
             .cloned()
@@ -179,7 +179,7 @@ impl TraceLog {
     }
 
     pub fn len(&self) -> usize {
-        self.ring.lock().unwrap().len()
+        lock_unpoisoned(&self.ring).len()
     }
 
     pub fn is_empty(&self) -> bool {

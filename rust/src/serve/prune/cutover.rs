@@ -87,6 +87,7 @@ impl PruneCutover<'_> {
     /// the one failure the fence cannot drain through. Everything else
     /// is an [`CutoverOutcome::Aborted`] (pre-fence) or a per-row
     /// `rows_retired` count (post-fence release failures).
+    // lint: allow(panic-freedom) — shard and member indices come from the cutover plan validated against the live placement before the fence
     pub fn execute(
         self,
         plan: &PrunePlan,

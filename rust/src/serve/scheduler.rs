@@ -37,7 +37,7 @@
 //! [`vmm::int8_dots_batched`]: crate::cim::vmm::int8_dots_batched
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -127,7 +127,10 @@ impl Server {
             "request input length vs model input ({} expected)",
             self.input_len
         );
-        let (reply, rx) = channel();
+        // one-shot reply: capacity 1 buffers the single send without a
+        // blocked receiver, keeping the serve plane free of unbounded
+        // queues (the bounded-channel invariant)
+        let (reply, rx) = sync_channel(1);
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             input,
@@ -155,7 +158,7 @@ impl Server {
             "request input length vs model input ({} expected)",
             self.input_len
         );
-        let (reply, rx) = channel();
+        let (reply, rx) = sync_channel(1);
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             input,

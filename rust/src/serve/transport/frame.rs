@@ -350,6 +350,7 @@ impl<'a> Reader<'a> {
         Reader { buf, pos: 0 }
     }
 
+    // lint: allow(panic-freedom) — slice read is guarded by the explicit length check above
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.buf.len() - self.pos < n {
             return Err(TransportError::Frame(format!(
@@ -363,22 +364,27 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
+    // lint: allow(panic-freedom) — take(1) guarantees one byte
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
+    // lint: allow(panic-freedom) — take() guarantees the exact byte width, so the fixed-size conversion is infallible
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    // lint: allow(panic-freedom) — take() guarantees the exact byte width, so the fixed-size conversion is infallible
     fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    // lint: allow(panic-freedom) — take() guarantees the exact byte width, so the fixed-size conversion is infallible
     fn i64(&mut self) -> Result<i64> {
         Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    // lint: allow(panic-freedom) — take() guarantees the exact byte width, so the fixed-size conversion is infallible
     fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }

@@ -38,6 +38,7 @@ use std::thread::JoinHandle;
 
 use super::frame::{self, WireReply, WireRequest};
 use super::local::LocalBackend;
+use crate::util::sync::lock_unpoisoned;
 use super::{Backend, TransportError};
 use crate::serve::pool::PoolConfig;
 
@@ -113,7 +114,7 @@ impl Host {
     /// any connected client sees its next read fail mid-stream.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(stream) = self.live.lock().unwrap().take() {
+        if let Some(stream) = lock_unpoisoned(&self.live).take() {
             let _ = stream.shutdown(Shutdown::Both);
         }
         // unblock a daemon parked in accept(); the dummy connection is
@@ -132,7 +133,7 @@ impl Drop for Host {
         // must not block.
         if self.handle.is_some() {
             self.stop.store(true, Ordering::SeqCst);
-            if let Some(stream) = self.live.lock().unwrap().take() {
+            if let Some(stream) = lock_unpoisoned(&self.live).take() {
                 let _ = stream.shutdown(Shutdown::Both);
             }
             let _ = TcpStream::connect(self.addr);
@@ -171,7 +172,7 @@ fn host_loop(
             return;
         }
         let _ = stream.set_nodelay(true);
-        *live.lock().unwrap() = stream.try_clone().ok();
+        *lock_unpoisoned(live) = stream.try_clone().ok();
         // re-check after publishing the session: a shutdown that fired
         // between accept and the publish severed nothing, so it relies
         // on this check to stop the daemon from parking in a read
@@ -179,7 +180,7 @@ fn host_loop(
             return;
         }
         let finished = serve_client(stream, &mut backend);
-        *live.lock().unwrap() = None;
+        *lock_unpoisoned(live) = None;
         if finished || stop.load(Ordering::SeqCst) {
             let _ = backend.finish();
             return;

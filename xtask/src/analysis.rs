@@ -1,0 +1,162 @@
+//! Structural analysis over the token stream: `#[cfg(test)]` region
+//! masking, brace matching, and per-function body extraction. All three
+//! are conservative over-approximations — good enough to scope lint
+//! passes, far short of real name resolution.
+
+use crate::lexer::Tok;
+
+/// Rust keywords that may legally precede a `[` without the bracket
+/// being an index expression (`return [a, b]`, `for [x, y] in …`).
+pub const KEYWORDS: [&str; 36] = [
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "false", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move",
+    "mut", "pub", "ref", "return", "static", "struct", "super", "trait", "true", "type", "unsafe",
+    "use", "where",
+];
+
+/// Index of the `}` matching the `{` at `open` (or the last token when
+/// unbalanced — a scan must never walk off the end).
+pub fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return k;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// `mask[i] == true` ⇔ token `i` lives inside an item annotated with a
+/// test attribute (`#[cfg(test)] mod tests { … }`, `#[test] fn …`).
+/// Any attribute containing the bare identifier `test` counts, which
+/// also covers `#[cfg(all(test, …))]`.
+pub fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].text == "#" && toks.get(i + 1).map(|t| t.text.as_str()) == Some("[") {
+            let (end_attr, has_test) = scan_attribute(toks, i + 1);
+            if has_test {
+                let mut k = end_attr + 1;
+                // skip any further attributes on the same item
+                while toks.get(k).map(|t| t.text.as_str()) == Some("#")
+                    && toks.get(k + 1).map(|t| t.text.as_str()) == Some("[")
+                {
+                    k = scan_attribute(toks, k + 1).0 + 1;
+                }
+                let end = item_end(toks, k);
+                for m in mask.iter_mut().take((end + 1).min(toks.len())).skip(i) {
+                    *m = true;
+                }
+                i = end + 1;
+                continue;
+            }
+            i = end_attr + 1;
+            continue;
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// Scan an attribute whose `[` sits at `open`; returns (index of the
+/// closing `]`, whether the bare identifier `test` appears inside).
+fn scan_attribute(toks: &[Tok], open: usize) -> (usize, bool) {
+    let mut depth = 0usize;
+    let mut has_test = false;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        match t.text.as_str() {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    return (k, has_test);
+                }
+            }
+            "test" => has_test = true,
+            _ => {}
+        }
+    }
+    (toks.len().saturating_sub(1), has_test)
+}
+
+/// Index of the last token of the item starting at `k`: the matching
+/// `}` of its first top-level `{`, or its terminating `;`.
+fn item_end(toks: &[Tok], k: usize) -> usize {
+    let mut depth = 0i64;
+    let mut j = k;
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => depth -= 1,
+            ";" if depth == 0 => return j,
+            "{" if depth == 0 => return match_brace(toks, j),
+            _ => {}
+        }
+        j += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// One extracted function.
+#[derive(Clone, Debug)]
+pub struct Fun {
+    pub name: String,
+    /// Line of the `fn` keyword (what a function-level waiver anchors to).
+    pub decl_line: usize,
+    /// Token range of the body (`{` ..= `}`), `None` for a bodyless
+    /// trait-method signature.
+    pub body: Option<(usize, usize)>,
+    /// Declared inside a test region?
+    pub test: bool,
+}
+
+impl Fun {
+    /// Source lines the body spans (inclusive), empty range when bodyless.
+    pub fn body_lines(&self, toks: &[Tok]) -> (usize, usize) {
+        match self.body {
+            Some((a, b)) => (toks[a].line, toks[b].line),
+            None => (self.decl_line, self.decl_line),
+        }
+    }
+}
+
+/// Every `fn` item in the stream (including nested fns — their tokens
+/// then belong to both bodies, which only ever *widens* waiver scope).
+pub fn functions(toks: &[Tok], mask: &[bool]) -> Vec<Fun> {
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.text != "fn" {
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else { continue };
+        if !name_tok.is_ident() {
+            continue; // `fn(usize) -> T` pointer type, not an item
+        }
+        let mut depth = 0i64;
+        let mut body = None;
+        let mut j = i + 2;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                ";" if depth == 0 => break,
+                "{" if depth == 0 => {
+                    body = Some((j, match_brace(toks, j)));
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        out.push(Fun { name: name_tok.text.clone(), decl_line: t.line, body, test: mask[i] });
+    }
+    out
+}

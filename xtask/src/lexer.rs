@@ -1,0 +1,288 @@
+//! A minimal Rust token scanner: just enough structure for the lint
+//! passes — identifiers, literals, and (multi-char) punctuation, with
+//! string/char literals collapsed and comments diverted to the waiver
+//! parser. Deliberately *not* a full lexer: the passes only need token
+//! adjacency and brace/paren balance, and a hand-rolled scanner is what
+//! the offline image can build without `syn`.
+
+/// One retained token (identifier, literal, or punctuation).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tok {
+    pub text: String,
+    pub line: usize,
+}
+
+impl Tok {
+    /// Identifier-shaped (starts with a letter or `_`)?
+    pub fn is_ident(&self) -> bool {
+        self.text
+            .chars()
+            .next()
+            .map(|c| c.is_alphabetic() || c == '_')
+            .unwrap_or(false)
+    }
+
+    /// Integer-literal-shaped (starts with a digit)?
+    pub fn is_int(&self) -> bool {
+        self.text.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(false)
+    }
+}
+
+/// One parsed `// lint: allow(<pass>) — <reason>` waiver comment.
+#[derive(Clone, Debug)]
+pub struct Waiver {
+    pub line: usize,
+    pub passes: Vec<String>,
+    pub reason: String,
+}
+
+/// A comment that names `lint:` but does not parse as a waiver — always
+/// an error, so a typo'd waiver can never silently stop waiving.
+#[derive(Clone, Debug)]
+pub struct BadWaiver {
+    pub line: usize,
+    pub what: String,
+}
+
+/// A scanned source file.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub waivers: Vec<Waiver>,
+    pub bad_waivers: Vec<BadWaiver>,
+}
+
+/// Two-character operators kept as single tokens so the passes can
+/// match `=` (assignment) without tripping over `==`, `=>`, `<=`, …
+const TWO_CHAR_OPS: [&str; 14] = [
+    "::", "==", "!=", "<=", ">=", "=>", "->", "+=", "-=", "*=", "/=", "&&", "||", "..",
+];
+
+/// Scan one file into tokens + waivers. Strings and chars are dropped
+/// (their content can never be a call site); comments are parsed for
+/// waivers and dropped.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut waivers = Vec::new();
+    let mut bad_waivers = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && b.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < b.len() && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            parse_waiver(&text, line, &mut waivers, &mut bad_waivers);
+        } else if c == '/' && b.get(i + 1) == Some(&'*') {
+            i += 2;
+            let mut depth = 1usize;
+            while i < b.len() && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            i = skip_quoted(&b, i + 1, &mut line);
+        } else if (c == 'r' || c == 'b') && string_prefix_len(&b, i) > 0 {
+            i = skip_prefixed_literal(&b, i, &mut line);
+        } else if c == '\'' {
+            i = skip_char_or_lifetime(&b, i, &mut line);
+        } else if c.is_alphanumeric() || c == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok { text: b[start..i].iter().collect(), line });
+        } else {
+            let pair: String = b[i..(i + 2).min(b.len())].iter().collect();
+            if TWO_CHAR_OPS.contains(&pair.as_str()) {
+                toks.push(Tok { text: pair, line });
+                i += 2;
+            } else {
+                toks.push(Tok { text: c.to_string(), line });
+                i += 1;
+            }
+        }
+    }
+    Lexed { toks, waivers, bad_waivers }
+}
+
+/// Length of a raw/byte string prefix at `i` (`r"`, `r#`, `b"`, `b'`,
+/// `br"`, `br#`), or 0 when `b[i]` starts a plain identifier.
+fn string_prefix_len(b: &[char], i: usize) -> usize {
+    let rest: String = b[i..(i + 3).min(b.len())].iter().collect();
+    for p in ["br#", "br\"", "r#", "r\"", "b\"", "b'"] {
+        if rest.starts_with(p) {
+            return p.len();
+        }
+    }
+    0
+}
+
+/// Skip a plain `"…"` body starting just *after* the opening quote;
+/// returns the index just past the closing quote.
+fn skip_quoted(b: &[char], mut i: usize, line: &mut usize) -> usize {
+    while i < b.len() {
+        match b[i] {
+            // An escape consumes the next char too; `\<newline>` (the
+            // line-continuation form) still ends a physical line, so
+            // count it or every report past it drifts by one.
+            '\\' => {
+                if b.get(i + 1) == Some(&'\n') {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip a raw/byte string or byte char starting at its `r`/`b` prefix.
+fn skip_prefixed_literal(b: &[char], mut i: usize, line: &mut usize) -> usize {
+    // consume the prefix letters
+    while i < b.len() && (b[i] == 'r' || b[i] == 'b') {
+        i += 1;
+    }
+    if b.get(i) == Some(&'\'') {
+        // byte char b'…'
+        return skip_char_or_lifetime(b, i, line);
+    }
+    let mut hashes = 0usize;
+    while b.get(i) == Some(&'#') {
+        hashes += 1;
+        i += 1;
+    }
+    if b.get(i) != Some(&'"') {
+        return i; // not actually a string (e.g. `r#raw_ident`)
+    }
+    i += 1;
+    if hashes == 0 {
+        // raw (no-escape) when preceded by r, else plain byte string
+        // — either way escapes cannot hide the closing quote from a
+        // conservative scan that also honors backslashes
+        return skip_quoted(b, i, line);
+    }
+    // r#"…"# with `hashes` terminating hashes
+    while i < b.len() {
+        if b[i] == '\n' {
+            *line += 1;
+        }
+        if b[i] == '"' && b[i + 1..].iter().take(hashes).filter(|&&c| c == '#').count() == hashes {
+            return i + 1 + hashes;
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Skip a `'c'` char literal or a `'lifetime` starting at the quote.
+fn skip_char_or_lifetime(b: &[char], i: usize, line: &mut usize) -> usize {
+    match b.get(i + 1) {
+        Some('\\') => {
+            // escaped char literal: skip quote, backslash, escaped
+            // char, then scan to the closing quote
+            let mut j = i + 3;
+            while j < b.len() && b[j] != '\'' {
+                if b[j] == '\n' {
+                    *line += 1;
+                }
+                j += 1;
+            }
+            j + 1
+        }
+        Some(&ch) if (ch == '_' || ch.is_alphabetic()) && b.get(i + 2) != Some(&'\'') => {
+            // lifetime: consume the identifier, no closing quote
+            let mut j = i + 1;
+            while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            j
+        }
+        _ => {
+            // plain char literal 'x'
+            let mut j = i + 2;
+            while j < b.len() && b[j] != '\'' {
+                if b[j] == '\n' {
+                    *line += 1;
+                }
+                j += 1;
+            }
+            j + 1
+        }
+    }
+}
+
+/// Parse one `//` comment for a waiver. Doc comments cannot carry
+/// waivers (they render into rustdoc); a `lint:` mention that fails to
+/// parse is reported, never ignored.
+fn parse_waiver(
+    comment: &str,
+    line: usize,
+    waivers: &mut Vec<Waiver>,
+    bad: &mut Vec<BadWaiver>,
+) {
+    let Some(pos) = comment.find("lint:") else { return };
+    if comment.starts_with("///") || comment.starts_with("//!") {
+        bad.push(BadWaiver {
+            line,
+            what: "waivers must use a plain // comment, not a doc comment".into(),
+        });
+        return;
+    }
+    let rest = comment[pos + "lint:".len()..].trim_start();
+    let Some(names) = rest.strip_prefix("allow(") else {
+        bad.push(BadWaiver { line, what: "expected `lint: allow(<pass>) — <reason>`".into() });
+        return;
+    };
+    let Some(close) = names.find(')') else {
+        bad.push(BadWaiver { line, what: "unclosed `allow(`".into() });
+        return;
+    };
+    let passes: Vec<String> =
+        names[..close].split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect();
+    if passes.is_empty() || passes.iter().any(|p| !crate::PASS_NAMES.contains(&p.as_str())) {
+        bad.push(BadWaiver {
+            line,
+            what: format!("unknown pass in allow(…); passes are {:?}", crate::PASS_NAMES),
+        });
+        return;
+    }
+    let after = names[close + 1..].trim_start();
+    let reason = after
+        .strip_prefix('\u{2014}')
+        .or_else(|| after.strip_prefix('-'))
+        .map(str::trim)
+        .unwrap_or("");
+    if reason.is_empty() {
+        bad.push(BadWaiver {
+            line,
+            what: "waiver needs a reason: `lint: allow(<pass>) — <reason>`".into(),
+        });
+        return;
+    }
+    waivers.push(Waiver { line, passes, reason: reason.to_string() });
+}

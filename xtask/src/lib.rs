@@ -1,0 +1,216 @@
+//! `cargo xtask lint` — the project-native invariant linter for the
+//! serve fleet (DESIGN.md §13). Five passes over `rust/src/**`:
+//!
+//! 1. `panic-freedom`   — no panicking operators on serve hot paths
+//! 2. `epoch-discipline`— shard epochs only from `ShardRouter::next_epoch`
+//! 3. `fence-pairing`   — `fence_and_drain` implies rebuild-or-abort
+//! 4. `lock-order`      — the static lock-acquisition graph is acyclic
+//! 5. `bounded-channel` — no unbounded `mpsc::channel` in `serve/**`
+//!
+//! Violations are waivable per line with
+//! `// lint: allow(<pass>) — <reason>`; a waiver on the line above a
+//! `fn` declaration covers the whole body. Unwaived violations fail the
+//! build, and so do *stale* waivers — a waiver that no longer waives
+//! anything must be deleted, which keeps the census honest.
+
+pub mod analysis;
+pub mod lexer;
+pub mod passes;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub const PANIC_FREEDOM: &str = "panic-freedom";
+pub const EPOCH_DISCIPLINE: &str = "epoch-discipline";
+pub const FENCE_PAIRING: &str = "fence-pairing";
+pub const LOCK_ORDER: &str = "lock-order";
+pub const BOUNDED_CHANNEL: &str = "bounded-channel";
+
+/// Every pass name, in report order.
+pub const PASS_NAMES: [&str; 5] =
+    [PANIC_FREEDOM, EPOCH_DISCIPLINE, FENCE_PAIRING, LOCK_ORDER, BOUNDED_CHANNEL];
+
+/// One raw (pre-waiver) finding.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub pass: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Violation {
+    pub fn new(pass: &'static str, file: &str, line: usize, msg: String) -> Self {
+        Violation { pass, file: file.to_string(), line, msg }
+    }
+}
+
+/// A waiver that waived nothing — must be deleted.
+#[derive(Clone, Debug)]
+pub struct StaleWaiver {
+    pub file: String,
+    pub line: usize,
+    pub passes: Vec<String>,
+}
+
+/// A malformed `lint:` comment.
+#[derive(Clone, Debug)]
+pub struct BadWaiverAt {
+    pub file: String,
+    pub line: usize,
+    pub what: String,
+}
+
+/// The full lint result: what still fires, what was waived (the
+/// census), and the bookkeeping errors that are failures in their own
+/// right.
+#[derive(Default)]
+pub struct LintReport {
+    pub violations: Vec<Violation>,
+    pub stale: Vec<StaleWaiver>,
+    pub bad_waivers: Vec<BadWaiverAt>,
+    /// pass name → count of waived findings.
+    pub census: BTreeMap<&'static str, usize>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// Clean ⇔ CI-green.
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty() && self.stale.is_empty() && self.bad_waivers.is_empty()
+    }
+}
+
+struct FileTable {
+    waivers: Vec<lexer::Waiver>,
+    used: Vec<bool>,
+    funs: Vec<analysis::Fun>,
+    /// (decl_line → inclusive body line range) per function.
+    fun_lines: Vec<(usize, (usize, usize))>,
+}
+
+/// Lint a set of already-read sources. Paths are relative to
+/// `rust/src` with forward slashes — the pass scoping keys off them.
+pub fn lint_sources(sources: &[(String, String)]) -> LintReport {
+    let mut report = LintReport::default();
+    let mut raw: Vec<Violation> = Vec::new();
+    let mut tables: BTreeMap<String, FileTable> = BTreeMap::new();
+    let mut all_seqs: Vec<Vec<passes::Acquisition>> = Vec::new();
+
+    for (path, src) in sources {
+        report.files_scanned += 1;
+        let lexed = lexer::lex(src);
+        for b in &lexed.bad_waivers {
+            report.bad_waivers.push(BadWaiverAt {
+                file: path.clone(),
+                line: b.line,
+                what: b.what.clone(),
+            });
+        }
+        let mask = analysis::test_mask(&lexed.toks);
+        let funs = analysis::functions(&lexed.toks, &mask);
+        let ctx = passes::FileCtx { path, toks: &lexed.toks, mask: &mask, funs: &funs };
+        passes::panic_freedom(&ctx, &mut raw);
+        passes::epoch_discipline(&ctx, &mut raw);
+        passes::fence_pairing(&ctx, &mut raw);
+        passes::bounded_channel(&ctx, &mut raw);
+        all_seqs.extend(passes::lock_sequences(&ctx));
+        let fun_lines =
+            funs.iter().map(|f| (f.decl_line, f.body_lines(&lexed.toks))).collect::<Vec<_>>();
+        let used = vec![false; lexed.waivers.len()];
+        tables.insert(path.clone(), FileTable { waivers: lexed.waivers, used, funs, fun_lines });
+    }
+
+    passes::lock_order(&all_seqs, &mut raw);
+
+    for pass in PASS_NAMES {
+        report.census.insert(pass, 0);
+    }
+    for v in raw {
+        if let Some(t) = tables.get_mut(&v.file) {
+            if waive(t, &v) {
+                *report.census.entry(v.pass).or_insert(0) += 1;
+                continue;
+            }
+        }
+        report.violations.push(v);
+    }
+
+    for (path, t) in &tables {
+        for (w, used) in t.waivers.iter().zip(&t.used) {
+            if !used {
+                report.stale.push(StaleWaiver {
+                    file: path.clone(),
+                    line: w.line,
+                    passes: w.passes.clone(),
+                });
+            }
+        }
+    }
+
+    report.violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    report.stale.sort_by(|a, b| (a.file.clone(), a.line).cmp(&(b.file.clone(), b.line)));
+    report
+}
+
+/// Try to waive `v` against its file's waivers; marks the waiver used.
+///
+/// A waiver covers a violation when it names the pass and either
+/// (a) sits on the violating line or the line just above, or
+/// (b) sits on (or just above) a `fn` declaration line whose body
+///     contains the violating line — the function-level form.
+fn waive(t: &mut FileTable, v: &Violation) -> bool {
+    let funs = &t.funs;
+    let fun_lines = &t.fun_lines;
+    let hit = t.waivers.iter().position(|w| {
+        if !w.passes.iter().any(|p| p == v.pass) {
+            return false;
+        }
+        let line_level = w.line == v.line || w.line + 1 == v.line;
+        let fun_level = funs.iter().zip(fun_lines).any(|(f, (decl, (lo, hi)))| {
+            let anchors = w.line == *decl || w.line + 1 == *decl;
+            anchors && !f.test && (v.line == *decl || (*lo <= v.line && v.line <= *hi))
+        });
+        line_level || fun_level
+    });
+    match hit {
+        Some(k) => {
+            t.used[k] = true;
+            true
+        }
+        None => false,
+    }
+}
+
+/// Recursively collect `**/*.rs` under `root` (sorted, deterministic)
+/// and lint them. Paths in the report are relative to `root`.
+pub fn lint_tree(root: &Path) -> std::io::Result<LintReport> {
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut sources = Vec::with_capacity(files.len());
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        sources.push((rel, std::fs::read_to_string(f)?));
+    }
+    Ok(lint_sources(&sources))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

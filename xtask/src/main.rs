@@ -1,0 +1,68 @@
+//! `cargo xtask <command>` — the project task runner. Today there is
+//! one command, `lint`, which runs the five serve-fleet invariant
+//! passes over `rust/src/**` (DESIGN.md §13).
+#![allow(clippy::disallowed_macros)] // a CLI tool prints to stdout by design
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => lint(),
+        other => {
+            eprintln!(
+                "usage: cargo xtask lint\n  (got {:?})\n\n\
+                 lint — run the five serve invariant passes over rust/src",
+                other
+            );
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn lint() -> ExitCode {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../rust/src");
+    let report = match xtask::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("xtask lint: cannot walk {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    for v in &report.violations {
+        println!("{}:{}: [{}] {}", v.file, v.line, v.pass, v.msg);
+    }
+    for s in &report.stale {
+        println!(
+            "{}:{}: [stale-waiver] allow({}) no longer waives anything — delete it",
+            s.file,
+            s.line,
+            s.passes.join(", ")
+        );
+    }
+    for b in &report.bad_waivers {
+        println!("{}:{}: [bad-waiver] {}", b.file, b.line, b.what);
+    }
+
+    // Waiver census: how much of each invariant is accepted debt. CI
+    // logs this every run so the burn-down is visible over time.
+    println!("\nwaiver census ({} files scanned):", report.files_scanned);
+    for pass in xtask::PASS_NAMES {
+        println!("  {:>16}: {} waived", pass, report.census.get(pass).copied().unwrap_or(0));
+    }
+
+    if report.clean() {
+        println!("\nxtask lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "\nxtask lint: {} violation(s), {} stale waiver(s), {} bad waiver(s)",
+            report.violations.len(),
+            report.stale.len(),
+            report.bad_waivers.len()
+        );
+        ExitCode::FAILURE
+    }
+}

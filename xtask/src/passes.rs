@@ -1,0 +1,391 @@
+//! The five serve-fleet invariant passes (DESIGN.md §13). Each pass
+//! walks one file's token stream (lock-order additionally folds its
+//! per-function sequences into one cross-file graph) and emits raw
+//! violations; waiver resolution happens in the driver.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::{Fun, KEYWORDS};
+use crate::lexer::Tok;
+use crate::{Violation, BOUNDED_CHANNEL, EPOCH_DISCIPLINE, FENCE_PAIRING, PANIC_FREEDOM};
+
+/// One scanned file plus its derived structure.
+pub struct FileCtx<'a> {
+    /// Path relative to `rust/src`, forward slashes.
+    pub path: &'a str,
+    pub toks: &'a [Tok],
+    /// Test-region mask, same length as `toks`.
+    pub mask: &'a [bool],
+    pub funs: &'a [Fun],
+}
+
+impl FileCtx<'_> {
+    fn at(&self, i: usize) -> &str {
+        self.toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+    }
+
+    fn before(&self, i: usize, back: usize) -> &str {
+        i.checked_sub(back).map(|k| self.at(k)).unwrap_or("")
+    }
+}
+
+/// Panic-freedom scope: the three serve subsystems whose hot paths must
+/// surface faults as typed transport errors, never panics.
+fn in_panic_scope(path: &str) -> bool {
+    ["serve/transport/", "serve/engine/", "serve/prune/"].iter().any(|d| path.starts_with(d))
+}
+
+fn in_serve(path: &str) -> bool {
+    path.starts_with("serve/")
+}
+
+/// **panic-freedom** — no `.unwrap()` / `.expect(…)` / `panic!` /
+/// `todo!` / `unimplemented!` / slice-index in
+/// `serve/{transport,engine,prune}` outside `#[cfg(test)]`.
+/// (`unreachable!` and `assert!` stay legal: both mark *checked*
+/// invariants, the documented crash-on-corruption policy.)
+pub fn panic_freedom(f: &FileCtx, out: &mut Vec<Violation>) {
+    if !in_panic_scope(f.path) {
+        return;
+    }
+    for (i, t) in f.toks.iter().enumerate() {
+        if f.mask[i] {
+            continue;
+        }
+        match t.text.as_str() {
+            "unwrap" | "expect" if f.before(i, 1) == "." && f.at(i + 1) == "(" => {
+                out.push(Violation::new(
+                    PANIC_FREEDOM,
+                    f.path,
+                    t.line,
+                    format!(".{}() can panic on the serve hot path", t.text),
+                ));
+            }
+            "panic" | "todo" | "unimplemented" if f.at(i + 1) == "!" => {
+                out.push(Violation::new(
+                    PANIC_FREEDOM,
+                    f.path,
+                    t.line,
+                    format!("{}! is banned on the serve hot path", t.text),
+                ));
+            }
+            "[" if i > 0 => {
+                let p = f.before(i, 1);
+                let is_index = p == "]"
+                    || p == ")"
+                    || p == "?"
+                    || (f.toks[i - 1].is_ident() && !KEYWORDS.contains(&p));
+                if is_index {
+                    out.push(Violation::new(
+                        PANIC_FREEDOM,
+                        f.path,
+                        t.line,
+                        "slice/array index can panic; bound-check or use .get()".to_string(),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Field names that carry a shard epoch.
+const EPOCH_FIELDS: [&str; 4] = ["epoch", "shard_epoch", "old_epoch", "new_epoch"];
+
+/// **epoch-discipline** — shard epochs originate from
+/// `ShardRouter::next_epoch` only: no integer literal may flow into an
+/// epoch field or binding (`epoch: 3`, `route.epoch = 0`) outside
+/// tests, anywhere under `serve/`.
+pub fn epoch_discipline(f: &FileCtx, out: &mut Vec<Violation>) {
+    if !in_serve(f.path) {
+        return;
+    }
+    for (i, t) in f.toks.iter().enumerate() {
+        if f.mask[i] || !EPOCH_FIELDS.contains(&t.text.as_str()) {
+            continue;
+        }
+        let assigns_literal = (f.at(i + 1) == ":" || f.at(i + 1) == "=")
+            && f.toks.get(i + 2).map(|n| n.is_int()).unwrap_or(false);
+        if assigns_literal {
+            out.push(Violation::new(
+                EPOCH_DISCIPLINE,
+                f.path,
+                t.line,
+                format!(
+                    "integer literal flows into `{}`; epochs originate from \
+                     ShardRouter::next_epoch",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// Identifiers whose presence in a fencing function witnesses the
+/// route/mask rebuild or the abort path the fence machine requires.
+const FENCE_FOLLOWUPS: [&str; 4] = ["from_placement", "next_epoch", "rollback_partial", "Aborted"];
+
+/// **fence-pairing** — a function calling `fence_and_drain` must, in
+/// the same body, rebuild the route (`from_placement` / `next_epoch`)
+/// or carry an abort path (`rollback…` / `Aborted` / `?` on the call).
+pub fn fence_pairing(f: &FileCtx, out: &mut Vec<Violation>) {
+    if !in_serve(f.path) {
+        return;
+    }
+    for fun in f.funs.iter().filter(|fun| !fun.test) {
+        let Some((lo, hi)) = fun.body else { continue };
+        let body = &f.toks[lo..=hi];
+        let mut call_line = None;
+        let mut propagated = false;
+        for (k, t) in body.iter().enumerate() {
+            if t.text == "fence_and_drain"
+                && body.get(k + 1).map(|n| n.text.as_str()) == Some("(")
+                && k.checked_sub(1).map(|p| body[p].text.as_str()) != Some("fn")
+            {
+                call_line = Some(t.line);
+                let close = matching_paren(body, k + 1);
+                if body.get(close + 1).map(|n| n.text.as_str()) == Some("?") {
+                    propagated = true;
+                }
+            }
+        }
+        let Some(line) = call_line else { continue };
+        let rebuilds = body.iter().any(|t| {
+            FENCE_FOLLOWUPS.contains(&t.text.as_str()) || t.text.starts_with("rollback")
+        });
+        if !rebuilds && !propagated {
+            out.push(Violation::new(
+                FENCE_PAIRING,
+                f.path,
+                line,
+                format!(
+                    "`{}` fences and drains but neither rebuilds the route/masks \
+                     nor propagates an abort",
+                    fun.name
+                ),
+            ));
+        }
+    }
+}
+
+/// Index of the `)` matching the `(` at `open` within `toks`.
+fn matching_paren(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        match t.text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return k;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// One lock acquisition: the lock's stable name and where it happened.
+#[derive(Clone, Debug)]
+pub struct Acquisition {
+    pub lock: String,
+    pub file: String,
+    pub line: usize,
+}
+
+/// **lock-order**, collection half — the ordered per-function lock
+/// acquisition sequences of one file. Recognizes both raw
+/// `receiver.lock()` and the project's `lock_unpoisoned(&receiver)`
+/// helper; lock identity is `<file stem>.<receiver tail>`, so distinct
+/// files can never falsely alias.
+pub fn lock_sequences(f: &FileCtx) -> Vec<Vec<Acquisition>> {
+    if !in_serve(f.path) {
+        return Vec::new();
+    }
+    let stem = f.path.rsplit('/').next().unwrap_or(f.path).trim_end_matches(".rs");
+    let mut seqs = Vec::new();
+    for fun in f.funs.iter().filter(|fun| !fun.test) {
+        let Some((lo, hi)) = fun.body else { continue };
+        let body = &f.toks[lo..=hi];
+        let mut seq: Vec<Acquisition> = Vec::new();
+        for (k, t) in body.iter().enumerate() {
+            let name = match t.text.as_str() {
+                "lock"
+                    if k >= 1
+                        && body[k - 1].text == "."
+                        && body.get(k + 1).map(|n| n.text.as_str()) == Some("(") =>
+                {
+                    receiver_tail(body, k - 1)
+                }
+                "lock_unpoisoned"
+                    if body.get(k + 1).map(|n| n.text.as_str()) == Some("(") =>
+                {
+                    argument_tail(body, k + 1)
+                }
+                _ => None,
+            };
+            if let Some(name) = name {
+                let lock = format!("{stem}.{name}");
+                if !seq.iter().any(|a| a.lock == lock) {
+                    seq.push(Acquisition { lock, file: f.path.to_string(), line: t.line });
+                }
+            }
+        }
+        if seq.len() > 1 {
+            seqs.push(seq);
+        }
+    }
+    seqs
+}
+
+/// Tail component of the receiver chain ending at the `.` at `dot`
+/// (`self.inner.0.lock()` → `inner.0`, `ring.lock()` → `ring`).
+fn receiver_tail(body: &[Tok], dot: usize) -> Option<String> {
+    let last = body.get(dot.checked_sub(1)?)?;
+    if last.is_int() {
+        // tuple index: include the field it projects from
+        if dot >= 3 && body[dot - 2].text == "." && body[dot - 3].is_ident() {
+            return Some(format!("{}.{}", body[dot - 3].text, last.text));
+        }
+        return Some(last.text.clone());
+    }
+    last.is_ident().then(|| last.text.clone())
+}
+
+/// Tail identifier of a call's first argument (`&self.series[k]` →
+/// `series`, `lock` → `lock`), skipping `&`/`*`/`self` and subscripts.
+fn argument_tail(body: &[Tok], open: usize) -> Option<String> {
+    let close = matching_paren(body, open);
+    let mut tail: Option<String> = None;
+    let mut k = open + 1;
+    while k < close {
+        match body[k].text.as_str() {
+            "&" | "*" | "self" | "." => {}
+            "[" => {
+                // skip the subscript: the container is the lock
+                let mut depth = 1usize;
+                while k + 1 < close && depth > 0 {
+                    k += 1;
+                    match body[k].text.as_str() {
+                        "[" => depth += 1,
+                        "]" => depth -= 1,
+                        _ => {}
+                    }
+                }
+            }
+            "," => break,
+            txt => {
+                if body[k].is_ident() {
+                    tail = Some(txt.to_string());
+                } else if body[k].is_int() {
+                    tail = Some(match tail {
+                        Some(prev) => format!("{prev}.{txt}"),
+                        None => txt.to_string(),
+                    });
+                }
+            }
+        }
+        k += 1;
+    }
+    tail
+}
+
+/// **lock-order**, graph half — fold every function's acquisition
+/// sequence into one directed graph and reject cycles (a static
+/// deadlock detector for the coordinator/router/obs triangle).
+pub fn lock_order(seqs: &[Vec<Acquisition>], out: &mut Vec<Violation>) {
+    // edge (a → b) with one representative site (of b's acquisition)
+    let mut edges: BTreeMap<(String, String), (String, usize)> = BTreeMap::new();
+    for seq in seqs {
+        for i in 0..seq.len() {
+            for j in (i + 1)..seq.len() {
+                edges
+                    .entry((seq[i].lock.clone(), seq[j].lock.clone()))
+                    .or_insert((seq[j].file.clone(), seq[j].line));
+            }
+        }
+    }
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (a, b) in edges.keys() {
+        adj.entry(a).or_default().push(b);
+        adj.entry(b).or_default();
+    }
+    // iterative DFS cycle detection over the deterministic adjacency
+    let mut state: BTreeMap<&str, u8> = adj.keys().map(|&k| (k, 0u8)).collect();
+    for &start in adj.keys() {
+        if state[start] != 0 {
+            continue;
+        }
+        let mut stack: Vec<(&str, usize)> = vec![(start, 0)];
+        let mut path: Vec<&str> = vec![start];
+        state.insert(start, 1);
+        while let Some((node, next)) = stack.last().copied() {
+            let succs = &adj[node];
+            if next < succs.len() {
+                if let Some(s) = stack.last_mut() {
+                    s.1 += 1;
+                }
+                let succ = succs[next];
+                if state[succ] == 1 {
+                    // found a cycle: report it once, anchored at the
+                    // edge that closes it
+                    let from = *path.last().unwrap_or(&succ);
+                    let (file, line) =
+                        edges.get(&(from.to_string(), succ.to_string())).cloned().unwrap_or_else(
+                            || ("<unknown>".to_string(), 0),
+                        );
+                    let cycle_start = path.iter().position(|&n| n == succ).unwrap_or(0);
+                    let mut cycle: Vec<&str> = path[cycle_start..].to_vec();
+                    cycle.push(succ);
+                    out.push(Violation::new(
+                        crate::LOCK_ORDER,
+                        &file,
+                        line,
+                        format!("lock-order cycle: {}", cycle.join(" -> ")),
+                    ));
+                    return; // one cycle is already a build-stopper
+                }
+                if state[succ] == 0 {
+                    state.insert(succ, 1);
+                    stack.push((succ, 0));
+                    path.push(succ);
+                }
+            } else {
+                state.insert(node, 2);
+                stack.pop();
+                path.pop();
+            }
+        }
+    }
+}
+
+/// **bounded-channel** — no unbounded `mpsc::channel` under `serve/`
+/// outside tests: every queue is a bounded `sync_channel` or an
+/// explicit ring, so backpressure is designed, never accidental.
+pub fn bounded_channel(f: &FileCtx, out: &mut Vec<Violation>) {
+    if !in_serve(f.path) {
+        return;
+    }
+    for (i, t) in f.toks.iter().enumerate() {
+        if f.mask[i] || t.text != "channel" {
+            continue;
+        }
+        let next = f.at(i + 1);
+        if next != "(" && next != "::" {
+            continue; // an import list or a stray mention, not a call
+        }
+        let prev = f.before(i, 1);
+        let qualified_mpsc = prev == "::" && f.before(i, 2) == "mpsc";
+        let bare_call = prev != "::" && prev != "." && prev != "fn";
+        if qualified_mpsc || bare_call {
+            out.push(Violation::new(
+                BOUNDED_CHANNEL,
+                f.path,
+                t.line,
+                "unbounded mpsc::channel in serve code; use sync_channel or an explicit ring"
+                    .to_string(),
+            ));
+        }
+    }
+}

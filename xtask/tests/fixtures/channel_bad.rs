@@ -1,0 +1,10 @@
+// Fixture: must FAIL bounded-channel under serve/. Two violations: a
+// bare `channel()` call and a fully-qualified turbofish form.
+
+impl Fleet {
+    fn spawn_workers(&mut self) {
+        let (tx, _rx) = channel();
+        let (_jtx, jrx) = std::sync::mpsc::channel::<Job>();
+        self.wire(tx, jrx);
+    }
+}

@@ -1,0 +1,42 @@
+// Fixture: must lint CLEAN under serve/transport/. Exercises every
+// near-miss the passes must not flag, plus one waived finding (so the
+// census shows a used waiver, not a stale one).
+
+use std::sync::mpsc::sync_channel;
+
+impl Link {
+    fn wire(&mut self, router: &mut ShardRouter, cfg: &Config) -> Result<()> {
+        // bounded channels and non-mpsc `channel` associated fns are legal
+        let (tx, rx) = sync_channel(4);
+        let batch_rx = Batcher::channel(cfg);
+        // epochs minted by the router are legal
+        let epoch = router.next_epoch();
+        self.route.epoch = epoch;
+        self.attach(tx, rx, batch_rx);
+        Ok(())
+    }
+
+    fn read_word(&self) -> u32 {
+        // lint: allow(panic-freedom) — infallible: header length checked at frame boundary
+        u32::from_le_bytes(self.buf[0..4].try_into().unwrap())
+    }
+
+    fn migrate(&mut self, old_epoch: u64) -> Result<()> {
+        // fencing paired with a route rebuild and `?` propagation
+        self.fence_and_drain(old_epoch)?;
+        let epoch = self.router.next_epoch();
+        *self.route_mut() = TenantRoute::from_placement(&self.placement, epoch);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // everything in a test region is exempt from every pass
+    #[test]
+    fn exempt() {
+        let route = TenantRoute { epoch: 7, members: Vec::new() };
+        let (tx, _rx) = std::sync::mpsc::channel::<u32>();
+        tx.send(route.members[0]).unwrap();
+    }
+}

@@ -1,0 +1,10 @@
+// Fixture: must FAIL epoch-discipline under serve/. Two violations:
+// a literal assigned into an epoch field and a literal in a struct
+// init.
+
+impl Router {
+    fn resurrect_route(&mut self) {
+        self.route.epoch = 3;
+        let _r = TenantRoute { epoch: 0, members: Vec::new() };
+    }
+}

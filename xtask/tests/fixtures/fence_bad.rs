@@ -1,0 +1,10 @@
+// Fixture: must FAIL fence-pairing under serve/. The function fences
+// and drains but neither rebuilds the route/masks (from_placement /
+// next_epoch) nor carries an abort path (rollback… / Aborted / `?`).
+
+impl Router {
+    fn bad_cutover(&mut self, old_epoch: u64) {
+        self.fence_and_drain(old_epoch);
+        self.flip_masks();
+    }
+}

@@ -1,0 +1,14 @@
+// Fixture: must FAIL lock-order under serve/. Two functions acquire
+// the same two locks in opposite orders — the classic AB/BA deadlock.
+
+impl Obs {
+    fn snapshot(&self) {
+        let _ring = self.ring.lock().unwrap();
+        let _subs = self.subs.lock().unwrap();
+    }
+
+    fn publish(&self) {
+        let _subs = self.subs.lock().unwrap();
+        let _ring = self.ring.lock().unwrap();
+    }
+}

@@ -1,0 +1,15 @@
+// Fixture: must FAIL panic-freedom when linted under
+// serve/{transport,engine,prune}. Four violations: an index, an
+// unwrap, an expect, and a panic!.
+
+impl Engine {
+    fn hot_path(&self, replies: &[u32]) -> u32 {
+        let first = replies[0];
+        let parsed = self.peek().unwrap();
+        let label = self.label().expect("always labeled");
+        if first == 0 {
+            panic!("empty reply");
+        }
+        first + parsed + label
+    }
+}

@@ -1,0 +1,143 @@
+//! Linter acceptance tests: each pass is demonstrated by a known-bad
+//! fixture that must fail and a clean fixture that must pass, the
+//! waiver machinery is exercised in both directions (used and stale),
+//! and — the production gate — the real `rust/src` tree lints clean.
+
+use std::path::PathBuf;
+
+use xtask::{lint_sources, LintReport};
+
+fn lint_one(path: &str, src: &str) -> LintReport {
+    lint_sources(&[(path.to_string(), src.to_string())])
+}
+
+fn count(report: &LintReport, pass: &str) -> usize {
+    report.violations.iter().filter(|v| v.pass == pass).count()
+}
+
+#[test]
+fn panic_freedom_fixture_fails() {
+    let src = include_str!("fixtures/panic_freedom_bad.rs");
+    let report = lint_one("serve/engine/panic_fixture.rs", src);
+    assert_eq!(count(&report, "panic-freedom"), 4, "{:?}", report.violations);
+    assert!(!report.clean());
+}
+
+#[test]
+fn panic_freedom_scoped_to_hot_subsystems() {
+    // the same snippet outside serve/{transport,engine,prune} is legal
+    let src = include_str!("fixtures/panic_freedom_bad.rs");
+    for path in ["cim/kernel.rs", "serve/obs/trace.rs", "util/json.rs"] {
+        let report = lint_one(path, src);
+        assert_eq!(count(&report, "panic-freedom"), 0, "false positive in {path}");
+    }
+}
+
+#[test]
+fn epoch_fixture_fails() {
+    let report = lint_one("serve/router_fixture.rs", include_str!("fixtures/epoch_bad.rs"));
+    assert_eq!(count(&report, "epoch-discipline"), 2, "{:?}", report.violations);
+}
+
+#[test]
+fn fence_fixture_fails() {
+    let report = lint_one("serve/cutover_fixture.rs", include_str!("fixtures/fence_bad.rs"));
+    assert_eq!(count(&report, "fence-pairing"), 1, "{:?}", report.violations);
+    assert!(report.violations[0].msg.contains("bad_cutover"));
+}
+
+#[test]
+fn lock_order_fixture_fails() {
+    let report = lint_one("serve/obs/lock_fixture.rs", include_str!("fixtures/lock_order_bad.rs"));
+    assert_eq!(count(&report, "lock-order"), 1, "{:?}", report.violations);
+    assert!(report.violations.iter().any(|v| v.msg.contains("cycle")));
+}
+
+#[test]
+fn lock_order_cycle_spans_files() {
+    // AB in one file, BA in another: the graph must still close the loop
+    let ab = "fn f(&self) { let _a = self.alpha.lock().unwrap(); g(); \
+              let _b = lock_unpoisoned(&self.beta); }";
+    let ba = "fn g(&self) { let _b = self.beta.lock().unwrap(); \
+              let _a = self.alpha.lock().unwrap(); }";
+    // same stem on purpose — lock identity is `<stem>.<field>`
+    let report = lint_sources(&[
+        ("serve/a/graph.rs".to_string(), ab.to_string()),
+        ("serve/b/graph.rs".to_string(), ba.to_string()),
+    ]);
+    assert_eq!(count(&report, "lock-order"), 1, "{:?}", report.violations);
+}
+
+#[test]
+fn bounded_channel_fixture_fails() {
+    let report = lint_one("serve/fleet_fixture.rs", include_str!("fixtures/channel_bad.rs"));
+    assert_eq!(count(&report, "bounded-channel"), 2, "{:?}", report.violations);
+}
+
+#[test]
+fn clean_fixture_passes_with_used_waiver() {
+    let report = lint_one("serve/transport/clean_fixture.rs", include_str!("fixtures/clean.rs"));
+    assert!(report.clean(), "violations: {:?} stale: {:?}", report.violations, report.stale);
+    // the one waived finding shows up in the census, not as a violation
+    assert_eq!(report.census["panic-freedom"], 2);
+}
+
+#[test]
+fn stale_waiver_fails() {
+    let src = "// lint: allow(bounded-channel) — obsolete\nfn quiet() {}\n";
+    let report = lint_one("serve/quiet.rs", src);
+    assert!(report.violations.is_empty());
+    assert_eq!(report.stale.len(), 1);
+    assert!(!report.clean());
+}
+
+#[test]
+fn malformed_waiver_fails() {
+    for src in [
+        "// lint: allowed(panic-freedom) — typo\n",
+        "// lint: allow(no-such-pass) — unknown\n",
+        "// lint: allow(panic-freedom)\n",
+        "/// lint: allow(panic-freedom) — doc comments cannot waive\n",
+    ] {
+        let report = lint_one("serve/w.rs", src);
+        assert_eq!(report.bad_waivers.len(), 1, "src: {src}");
+        assert!(!report.clean());
+    }
+}
+
+#[test]
+fn function_level_waiver_covers_whole_body() {
+    let src = "// lint: allow(panic-freedom) — indices validated at entry\n\
+               fn fold(&self, dvec: &[i32], y: &mut [i32]) {\n\
+                   y[0] = dvec[1] + dvec[2];\n\
+               }\n";
+    let report = lint_one("serve/engine/fold.rs", src);
+    assert!(report.clean(), "{:?}", report.violations);
+    assert_eq!(report.census["panic-freedom"], 3);
+}
+
+#[test]
+fn test_regions_are_exempt() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn f() { let x = v[0].unwrap(); \
+               let (tx, _) = channel(); tx.send(x); }\n}\n";
+    let report = lint_one("serve/engine/t.rs", src);
+    assert!(report.clean(), "{:?}", report.violations);
+}
+
+#[test]
+fn real_tree_lints_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../rust/src");
+    let report = xtask::lint_tree(&root).expect("walk rust/src");
+    let mut diag = String::new();
+    for v in &report.violations {
+        diag.push_str(&format!("{}:{}: [{}] {}\n", v.file, v.line, v.pass, v.msg));
+    }
+    for s in &report.stale {
+        diag.push_str(&format!("{}:{}: stale allow({})\n", s.file, s.line, s.passes.join(",")));
+    }
+    for b in &report.bad_waivers {
+        diag.push_str(&format!("{}:{}: bad waiver: {}\n", b.file, b.line, b.what));
+    }
+    assert!(report.clean(), "rust/src must lint clean:\n{diag}");
+    assert!(report.files_scanned > 20, "expected the full tree, saw {}", report.files_scanned);
+}
