@@ -1,0 +1,207 @@
+//! Input-aware CAM serving demo: the similarity front end (DESIGN.md
+//! §14) in front of a duplicate-heavy stream — the same XOR/popcount
+//! primitive the paper uses to rank redundant kernels for pruning,
+//! pointed at incoming *requests*. Every input is quantized and packed
+//! with the chip's own packing and probed against a bounded CAM of
+//! recently answered inputs; exact repeats replay byte-verified cached
+//! logits without touching silicon, near-duplicates identify themselves
+//! before dispatch.
+//!
+//! Two tenants make the policy split concrete:
+//!
+//! * `strict` runs the default [`VerifyPolicy::Exact`]: near hits are
+//!   recomputed and only *compared*, so the run asserts **zero wrong
+//!   logits** — bit-exact against `reference_logits` on all answers —
+//!   while still reporting how many requests the CAM identified.
+//! * `trusted` opts into `VerifyPolicy::Trusted` (always reported):
+//!   near hits serve straight from the cached neighbor, with a
+//!   deterministic 1-in-8 audit against the declared logit-delta bound.
+//!
+//! The run asserts a > 30% CAM hit rate on the strict tenant — the
+//! acceptance bar — and prints the full counter table.
+//!
+//! Run with: `cargo run --release --example cam_serving`
+
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
+use std::time::Duration;
+
+use rram_cim::bench::print_table;
+use rram_cim::chip::ChipConfig;
+use rram_cim::nn::data::mnist;
+use rram_cim::serve::{
+    AdmissionConfig, CacheConfig, CamConfig, Engine, EngineConfig, ModelBundle, PoolConfig,
+    RebalanceConfig, TenantConfig,
+};
+
+/// Working-set size and stream length per tenant.
+const BASES: usize = 6;
+const STREAM: usize = 120;
+
+/// Pin the quantization scale (pixel 0 holds the max at 1.0) so the
+/// one-pixel jitter below lands a couple of packed-key bits away from
+/// its base instead of rescaling every byte of the exact key.
+fn pin(sample: &[f32]) -> Vec<f32> {
+    let mut v: Vec<f32> = sample.iter().map(|x| x.clamp(0.0, 1.0)).collect();
+    v[0] = 1.0;
+    v
+}
+
+/// A near-duplicate: one mid-image pixel nudged two quantization steps.
+fn jitter(base: &[f32], pixel: usize) -> Vec<f32> {
+    let mut v = base.to_vec();
+    v[pixel] = (v[pixel] + 2.0 / 255.0).min(1.0);
+    v
+}
+
+fn main() -> anyhow::Result<()> {
+    rram_cim::util::logging::init();
+
+    let strict_model = ModelBundle::synthetic_mnist([16, 16, 16], 0.0, 0xca60);
+    let trusted_model = ModelBundle::synthetic_mnist([16, 16, 16], 0.0, 0xca61);
+    let cfg = EngineConfig {
+        pool: PoolConfig { chips: 4, chip: ChipConfig::default(), seed: 0xca62 },
+        admission: AdmissionConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            quantum: 8,
+        },
+        cache: CacheConfig { capacity: 0 }, // the CAM is the only fast path
+        rebalance: RebalanceConfig { every_batches: 0, max_moves: 0, group_moves: 0 },
+        prune: Default::default(),
+        cam: CamConfig { capacity: 64, max_distance: 12 },
+        obs: true,
+    };
+    let tenants = vec![
+        TenantConfig::new("strict", strict_model.clone()), // VerifyPolicy::Exact (the default)
+        TenantConfig::new("trusted", trusted_model.clone()).with_trusted_cam(0.5),
+    ];
+    let engine = Engine::start(tenants, &cfg)?;
+
+    let images = mnist::generate(BASES, 0xca63);
+    let bases: Vec<Vec<f32>> = (0..BASES).map(|i| pin(images.sample(i))).collect();
+
+    // --- the duplicate-heavy stream: warm-up, then ~80% exact repeats
+    //     and ~20% planted near-duplicates, identical for both tenants ---
+    let mut attempts = 0u64;
+    let mut strict_wrong = 0u64;
+    let mut trusted_deviations = 0u64;
+    let mut trusted_max_dev = 0.0f32;
+    let mut ask = |input: Vec<f32>| -> anyhow::Result<()> {
+        attempts += 2;
+        let a = engine.submit(0, input.clone()).recv()?;
+        if a.logits != strict_model.reference_logits(&input) {
+            strict_wrong += 1;
+        }
+        let b = engine.submit(1, input.clone()).recv()?;
+        let want = trusted_model.reference_logits(&input);
+        let dev = b
+            .logits
+            .iter()
+            .zip(&want)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        if dev > 0.0 {
+            trusted_deviations += 1;
+            trusted_max_dev = trusted_max_dev.max(dev);
+        }
+        Ok(())
+    };
+    for base in &bases {
+        ask(base.clone())?; // warm-up: compute once, populate the CAM
+    }
+    for i in 0..STREAM {
+        let base = &bases[(i * 7) % BASES];
+        if i % 5 == 4 {
+            ask(jitter(base, 8 + i % 32))?; // planted near-duplicate
+        } else {
+            ask(base.clone())?; // exact repeat
+        }
+    }
+    let report = engine.shutdown();
+
+    // --- the receipts ---
+    let per_tenant = attempts / 2;
+    let mut rows = Vec::new();
+    for (name, s) in ["strict", "trusted"].iter().zip(&report.cam.per_tenant) {
+        let served = s.hits + s.trusted_served;
+        rows.push(vec![
+            (*name).to_string(),
+            format!("{}", s.hits),
+            format!("{}", s.near_hits),
+            format!("{}", s.trusted_served),
+            format!("{} / {}", s.verify_pass, s.verify_fail),
+            format!("{}", s.fallbacks),
+            format!("{:.1}%", 100.0 * served as f64 / per_tenant as f64),
+            if s.trusted { "yes".into() } else { "no".into() },
+        ]);
+    }
+    print_table(
+        "cam serving: one duplicate-heavy stream, two verify policies",
+        &[
+            "tenant",
+            "exact hits",
+            "near hits",
+            "trusted served",
+            "verify pass/fail",
+            "misses",
+            "served w/o silicon",
+            "trusted?",
+        ],
+        &rows,
+    );
+    let strict = &report.cam.per_tenant[0];
+    let trusted = &report.cam.per_tenant[1];
+    print_table(
+        "cam serving: what the front end saved",
+        &["metric", "strict (Exact)", "trusted"],
+        &[
+            vec![
+                "chip batches (computed on silicon)".into(),
+                format!("{}", report.tenants[0].chip_batches),
+                format!("{}", report.tenants[1].chip_batches),
+            ],
+            vec![
+                "wrong logits".into(),
+                format!("{strict_wrong}"),
+                format!("{trusted_deviations} (max |delta| {trusted_max_dev:.4})"),
+            ],
+            vec![
+                "max verify delta seen".into(),
+                format!("{:.4}", strict.max_logit_delta_seen),
+                format!("{:.4}", trusted.max_logit_delta_seen),
+            ],
+        ],
+    );
+
+    assert_eq!(report.answered() + report.dropped(), attempts, "accounting must balance");
+    assert_eq!(report.dropped(), 0, "blocking submits never drop");
+    assert_eq!(strict_wrong, 0, "Exact policy: zero wrong logits, every answer bit-exact");
+    let hit_rate = strict.hits as f64 / per_tenant as f64;
+    assert!(
+        hit_rate > 0.30,
+        "the duplicate-heavy stream must clear a 30% CAM hit rate (got {:.1}%)",
+        100.0 * hit_rate
+    );
+    assert_eq!(
+        strict.verify_pass + strict.verify_fail,
+        strict.hits + strict.near_hits,
+        "every hit is byte-verified and every near hit recompute-verified"
+    );
+    assert!(strict.trusted_served == 0 && !strict.trusted, "Exact tenants never serve trusted");
+    assert!(trusted.trusted, "the Trusted opt-in is always reported");
+    assert!(trusted.trusted_served > 0, "the trusted tenant must serve near hits from cache");
+    println!(
+        "\ncam serving OK: {} answers, {:.1}% exact-hit rate on the strict tenant with zero \
+         wrong logits; the trusted tenant served {} near-duplicates from cache (max observed \
+         delta {:.4}, bound 0.5)",
+        report.answered(),
+        100.0 * hit_rate,
+        trusted.trusted_served,
+        trusted_max_dev
+    );
+    Ok(())
+}

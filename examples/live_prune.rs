@@ -124,6 +124,7 @@ fn main() -> anyhow::Result<()> {
             max_layers_per_pass: 1,
             rule: PruneConfig { min_live_per_layer: 1, max_prune_rate: 1.0, ..Default::default() },
         },
+        cam: Default::default(),
         obs: true,
     };
     let engine = Engine::start(vec![TenantConfig::new("mnist", model.clone())], &cfg)?;

@@ -54,6 +54,7 @@ fn run_phase(
         // the hottest shards to the least-worn chip
         rebalance: RebalanceConfig { every_batches: 3, max_moves: 2, group_moves: 0 },
         prune: Default::default(),
+        cam: Default::default(),
         obs: true,
     };
     cfg.pool.chip.device.stuck_fault_prob = stuck_fault_prob;

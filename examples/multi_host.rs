@@ -172,6 +172,7 @@ fn main() -> anyhow::Result<()> {
             max_layers_per_pass: 1,
             rule: PruneConfig { min_live_per_layer: 1, max_prune_rate: 1.0, ..Default::default() },
         },
+        cam: Default::default(),
         obs: true,
     };
     // tenant 0 opts out (its dense reference logits anchor the

@@ -25,7 +25,7 @@ use rram_cim::nn::pointnet::GroupingConfig;
 use rram_cim::pruning::PruneConfig;
 use rram_cim::serve::transport::{Backend, Host, HostConfig, LocalBackend, RemoteBackend};
 use rram_cim::serve::{
-    AdmissionConfig, BatcherConfig, CacheConfig, Engine, EngineConfig, HedgeConfig,
+    AdmissionConfig, BatcherConfig, CacheConfig, CamConfig, Engine, EngineConfig, HedgeConfig,
     LivePruneConfig, MnistBundle, ModelBundle, PipelineConfig, PointNetBundle, PoolConfig,
     RebalanceConfig, RouterConfig, Server, ServerConfig, ShardRouter, TenantConfig,
 };
@@ -219,6 +219,9 @@ fn main() {
     // --- live in-situ pruning: dense vs the converged live-pruned state ---
     let (live_prune_speedup, live_prune_cut_pct) = live_prune_table(&images);
 
+    // --- CAM similarity front end: hit rate + payoff vs duplicate rate ---
+    let (cam_hit_rate, cam_speedup) = cam_table(&pruned, &images);
+
     // --- VMM kernels: chunked hot path vs the scalar oracle ---
     let (simd_binary, simd_int8) = kernel_table();
 
@@ -231,7 +234,129 @@ fn main() {
         simd_int8,
         live_prune_speedup,
         live_prune_cut_pct,
+        cam_hit_rate,
+        cam_speedup,
     );
+}
+
+/// The CAM similarity front end's serving payoff as a function of the
+/// stream's duplicate rate (DESIGN.md §14): the pruned MNIST tenant
+/// served over streams with 0% / 50% / 90% exact repeats of an 8-input
+/// working set, once with the CAM off and once with a 64-entry CAM
+/// under the default [`VerifyPolicy::Exact`] — so every CAM-served
+/// answer is byte-verified and the whole sweep stays bit-exact against
+/// the software reference. Requests are submitted synchronously (one
+/// batch per request) so each repeat probes a CAM that has already
+/// answered its base; batching duplicates together would hide the hit.
+/// Returns (hit rate, CAM-on/CAM-off speedup) on the 90% stream for
+/// the JSON export.
+fn cam_table(model: &ModelBundle, images: &Dataset) -> (f64, f64) {
+    const WORKING_SET: usize = 8;
+    let reference: Vec<Vec<f32>> =
+        (0..images.len()).map(|i| model.reference_logits(images.sample(i))).collect();
+    let mut rows = Vec::new();
+    let mut export = (0.0f64, 0.0f64);
+    for dup_in_10 in [0usize, 5, 9] {
+        let mut inf_s = [0.0f64; 2];
+        let arms = [CamConfig::default(), CamConfig { capacity: 64, max_distance: 12 }];
+        for (ci, cam) in arms.into_iter().enumerate() {
+            let enabled = cam.capacity > 0;
+            let cfg = EngineConfig {
+                pool: PoolConfig {
+                    chips: 4,
+                    seed: 0xca70 + dup_in_10 as u64,
+                    ..PoolConfig::default()
+                },
+                admission: AdmissionConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(1),
+                    quantum: 8,
+                },
+                cache: CacheConfig { capacity: 0 }, // the CAM is the only fast path
+                rebalance: RebalanceConfig::default(),
+                prune: Default::default(),
+                cam,
+                obs: true,
+            };
+            let engine = Engine::start(vec![TenantConfig::new("mnist", model.clone())], &cfg)
+                .expect("the pruned tenant fits a 4-chip pool");
+            // interleaved stream: `dup_in_10` of every 10 requests repeat
+            // the working set, the rest are fresh never-repeated inputs
+            let mut fresh = WORKING_SET;
+            let t0 = Instant::now();
+            for i in 0..MNIST_REQUESTS {
+                let k = if i % 10 < dup_in_10 {
+                    (i * 5) % WORKING_SET
+                } else {
+                    fresh += 1;
+                    (fresh - 1) % images.len()
+                };
+                let resp = engine
+                    .submit(0, images.sample(k).to_vec())
+                    .recv()
+                    .expect("cam sweep answered every request");
+                assert_eq!(resp.logits, reference[k], "CAM sweep broke bit-exactness");
+            }
+            let measured = MNIST_REQUESTS as f64 / t0.elapsed().as_secs_f64();
+            let report = engine.shutdown();
+            assert_eq!(report.answered() as usize, MNIST_REQUESTS, "lost requests");
+            inf_s[ci] = measured;
+            let (hits, near, fallbacks, verify_fail) = if enabled {
+                let s = &report.cam.per_tenant[0];
+                (s.hits, s.near_hits, s.fallbacks, s.verify_fail)
+            } else {
+                (0, 0, MNIST_REQUESTS as u64, 0)
+            };
+            // exact (distance-0) hits can never fail the byte verify;
+            // only a near hit between two similar digits may legitimately
+            // recompute-and-mismatch under Exact (and stays bit-exact)
+            assert!(verify_fail <= near, "an exact repeat failed the byte verify");
+            if enabled && dup_in_10 > 0 {
+                assert!(hits > 0, "a duplicate-heavy stream must hit the CAM");
+            }
+            let hit_rate = hits as f64 / MNIST_REQUESTS as f64;
+            if enabled && dup_in_10 == 9 {
+                export = (hit_rate, 0.0); // speedup filled in below
+                assert!(
+                    hit_rate > 0.30,
+                    "90% duplicates must clear a 30% CAM hit rate (got {:.1}%)",
+                    100.0 * hit_rate
+                );
+            }
+            rows.push(vec![
+                format!("{}%", dup_in_10 * 10),
+                if enabled { "cam 64" } else { "cam off" }.to_string(),
+                format!("{measured:.1}"),
+                hits.to_string(),
+                near.to_string(),
+                fallbacks.to_string(),
+                format!("{:.1}%", 100.0 * hit_rate),
+                report.tenants[0].chip_batches.to_string(),
+            ]);
+        }
+        if dup_in_10 == 9 {
+            export.1 = inf_s[1] / inf_s[0];
+        }
+    }
+    print_table(
+        &format!(
+            "serve: CAM similarity front end vs duplicate rate, pruned MNIST tenant, \
+             4-chip pool ({MNIST_REQUESTS} synchronous requests per cell, Exact verify)"
+        ),
+        &["dup rate", "arm", "inf/s", "exact hits", "near hits", "misses", "hit rate", "batches"],
+        &rows,
+    );
+    println!(
+        "\ncam: 90%-duplicate stream: {:.1}% hit rate, cam-on vs cam-off {:.2}x",
+        100.0 * export.0,
+        export.1
+    );
+    assert!(
+        export.1 > 1.0,
+        "the CAM must out-serve raw silicon on a 90%-duplicate stream (got {:.2}x)",
+        export.1
+    );
+    export
 }
 
 /// The live prune loop's serving payoff: one MNIST tenant with ~30%
@@ -282,6 +407,7 @@ fn live_prune_table(images: &Dataset) -> (f64, f64) {
                 } else {
                     Default::default()
                 },
+                cam: Default::default(),
                 obs: true,
             };
             let engine = Engine::start(vec![TenantConfig::new("mnist", model.clone())], &cfg)
@@ -367,6 +493,7 @@ fn pipeline_table(model: &ModelBundle, images: &Dataset) -> f64 {
         cache: CacheConfig { capacity: 0 }, // every request hits silicon
         rebalance: RebalanceConfig::default(),
         prune: Default::default(),
+        cam: Default::default(),
         obs: true,
     };
     let reference: Vec<Vec<f32>> =
@@ -541,6 +668,8 @@ fn obs_overhead_and_export(
     simd_int8: f64,
     live_prune_speedup: f64,
     live_prune_cut_pct: f64,
+    cam_hit_rate: f64,
+    cam_speedup: f64,
 ) {
     let run = |obs: bool| -> (f64, Option<Json>) {
         let mut best = 0.0f64;
@@ -556,6 +685,7 @@ fn obs_overhead_and_export(
                 cache: CacheConfig { capacity: 0 }, // every request hits silicon
                 rebalance: RebalanceConfig::default(),
                 prune: Default::default(),
+                cam: Default::default(),
                 obs,
             };
             let engine = Engine::start(vec![TenantConfig::new("mnist", model.clone())], &cfg)
@@ -599,7 +729,9 @@ fn obs_overhead_and_export(
             .set("simd_speedup_binary", simd_binary)
             .set("simd_speedup_int8", simd_int8)
             .set("live_prune_speedup", live_prune_speedup)
-            .set("live_prune_mac_reduction_pct", live_prune_cut_pct),
+            .set("live_prune_mac_reduction_pct", live_prune_cut_pct)
+            .set("cam_hit_rate_90pct_dup", cam_hit_rate)
+            .set("cam_speedup_90pct_dup", cam_speedup),
     );
     let body = out.render() + "\n";
     std::fs::write("BENCH_serve.json", &body).expect("write BENCH_serve.json");
@@ -623,6 +755,7 @@ fn transport_table(model: &ModelBundle, images: &Dataset) {
         cache: CacheConfig { capacity: 0 }, // every request hits silicon
         rebalance: RebalanceConfig::default(),
         prune: Default::default(),
+        cam: Default::default(),
         obs: true,
     };
     let pool = |chips: usize, seed: u64| PoolConfig { chips, seed, ..PoolConfig::default() };
@@ -713,6 +846,7 @@ fn mixed_tenancy_table(
         cache: CacheConfig { capacity: 512 },
         rebalance: RebalanceConfig { every_batches: 8, max_moves: 2, group_moves: 0 },
         prune: Default::default(),
+        cam: Default::default(),
         obs: true,
     };
     let tenants = vec![

@@ -133,6 +133,211 @@ pub fn similarity_matrix_ref(kernels: &[Vec<f32>], live: &[bool]) -> SimilarityM
     SimilarityMatrix { k, n_bits, dist }
 }
 
+/// Pack a byte string into `u64` words, 8 bytes per word, little-endian
+/// within each word (byte `i` lands in word `i / 8`, bit `8·(i % 8)`
+/// upward). The bitwise Hamming distance over the packed words equals
+/// the bitwise Hamming distance over the original bytes, so two byte
+/// strings are equal iff their packed forms are at distance 0 — which
+/// is what lets the serve engine derive its CAM probe key and its
+/// exact-match cache key from one canonical byte string
+/// ([`crate::serve::engine::cache::RequestKey`]).
+pub fn pack_bytes(bytes: &[u8]) -> Vec<u64> {
+    bytes
+        .chunks(8)
+        .map(|c| {
+            let mut w = [0u8; 8];
+            if let Some(dst) = w.get_mut(..c.len()) {
+                dst.copy_from_slice(c);
+            }
+            u64::from_le_bytes(w)
+        })
+        .collect()
+}
+
+/// A degenerate key handed to a [`SimilarityIndex`] — returned as a
+/// typed error, never a panic (the index sits on the serve hot path).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum IndexError {
+    /// The index cannot be built over zero-bit keys: every distance
+    /// would be 0 and every probe a spurious exact match.
+    ZeroWidth,
+    /// An inserted or probed key carried no words at all.
+    EmptyKey,
+    /// Key word count vs the width the index was built for.
+    WidthMismatch { expect_words: usize, got_words: usize },
+}
+
+impl std::fmt::Display for IndexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IndexError::ZeroWidth => write!(f, "similarity index needs a positive key width"),
+            IndexError::EmptyKey => write!(f, "empty key (zero words)"),
+            IndexError::WidthMismatch { expect_words, got_words } => write!(
+                f,
+                "key width mismatch: index holds {expect_words}-word keys, got {got_words}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for IndexError {}
+
+/// Where an inserted key landed (the caller keeps any per-slot payload
+/// in a parallel structure, so it must mirror the same transitions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexSlot {
+    /// Below capacity: the key appended as this new slot.
+    Appended(usize),
+    /// At capacity: the key replaced this existing slot.
+    Replaced(usize),
+    /// At capacity and the reservoir hash passed over it: not retained.
+    Skipped,
+}
+
+/// A bounded content-addressable index over bit-packed keys — the
+/// software shape of the chip's CAM-style search-in-memory: probe with
+/// a packed key, get back the nearest stored key by XOR+popcount
+/// Hamming distance (the same primitive [`similarity_matrix`] drives
+/// through [`crate::chip::Chip::search_pass`], oracle-checked against
+/// [`similarity_matrix_ref`] ranking in tests).
+///
+/// Capacity is enforced by derandomized Algorithm R — the same seeded
+/// [`splitmix64`](crate::util::rng::splitmix64_mix) reservoir
+/// discipline as [`crate::serve::ServeStats`]' latency reservoir: once
+/// full, insert `i` (0-based, lifetime) replaces slot
+/// `splitmix64(seed ^ i) % (i + 1)` when that lands below capacity and
+/// is skipped otherwise. Eviction is therefore a pure function of
+/// `(seed, insert index)`: two identical runs retain identical keys,
+/// and the retained set is a uniform sample of everything ever
+/// inserted rather than a recency window.
+#[derive(Clone, Debug)]
+pub struct SimilarityIndex {
+    n_bits: usize,
+    /// Words per key: `n_bits.div_ceil(64)`.
+    words: usize,
+    capacity: usize,
+    seed: u64,
+    /// Slot-major packed keys, `len * words` words.
+    keys: Vec<u64>,
+    len: usize,
+    /// Lifetime insert count — the Algorithm R sample index.
+    inserts: u64,
+}
+
+impl SimilarityIndex {
+    /// An empty index over `n_bits`-wide keys holding at most
+    /// `capacity` of them (0 disables: every insert skips, every probe
+    /// misses). Zero-width keys are rejected.
+    pub fn new(n_bits: usize, capacity: usize, seed: u64) -> Result<SimilarityIndex, IndexError> {
+        if n_bits == 0 {
+            return Err(IndexError::ZeroWidth);
+        }
+        Ok(SimilarityIndex {
+            n_bits,
+            words: n_bits.div_ceil(64),
+            capacity,
+            seed,
+            keys: Vec::new(),
+            len: 0,
+            inserts: 0,
+        })
+    }
+
+    fn check(&self, key: &[u64]) -> Result<(), IndexError> {
+        if key.is_empty() {
+            return Err(IndexError::EmptyKey);
+        }
+        if key.len() != self.words {
+            return Err(IndexError::WidthMismatch {
+                expect_words: self.words,
+                got_words: key.len(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Insert one packed key, reporting where it landed. Keys are
+    /// stored as handed in — callers dedup exact repeats themselves
+    /// (probe first: distance 0 means already present).
+    pub fn insert(&mut self, key: &[u64]) -> Result<IndexSlot, IndexError> {
+        self.check(key)?;
+        if self.capacity == 0 {
+            return Ok(IndexSlot::Skipped);
+        }
+        let i = self.inserts;
+        self.inserts += 1;
+        if self.len < self.capacity {
+            self.keys.extend_from_slice(key);
+            self.len += 1;
+            return Ok(IndexSlot::Appended(self.len - 1));
+        }
+        // Algorithm R, derandomized: insert i survives with probability
+        // capacity/(i+1), the slot drawn by hashing the insert index.
+        let j = crate::util::rng::splitmix64_mix(self.seed ^ i) % (i + 1);
+        if (j as usize) < self.capacity {
+            let s = j as usize;
+            if let Some(dst) = self.keys.get_mut(s * self.words..(s + 1) * self.words) {
+                dst.copy_from_slice(key);
+            }
+            Ok(IndexSlot::Replaced(s))
+        } else {
+            Ok(IndexSlot::Skipped)
+        }
+    }
+
+    /// The nearest stored key to `key` by XOR+popcount Hamming
+    /// distance: `(slot, distance)`, ties broken toward the lowest
+    /// slot, `None` when the index is empty.
+    pub fn nearest(&self, key: &[u64]) -> Result<Option<(usize, u32)>, IndexError> {
+        self.check(key)?;
+        let mut best: Option<(usize, u32)> = None;
+        for (s, stored) in self.keys.chunks(self.words).enumerate() {
+            let d: u32 = stored.iter().zip(key).map(|(a, b)| (a ^ b).count_ones()).sum();
+            if best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((s, d));
+            }
+        }
+        Ok(best)
+    }
+
+    /// The packed key stored at `slot`, if occupied.
+    pub fn key(&self, slot: usize) -> Option<&[u64]> {
+        if slot < self.len {
+            self.keys.get(slot * self.words..(slot + 1) * self.words)
+        } else {
+            None
+        }
+    }
+
+    /// Drop every key, returning how many were held. The insert
+    /// counter resets too, so a flushed index refills exactly like a
+    /// fresh one — flush-then-replay is deterministic.
+    pub fn clear(&mut self) -> usize {
+        let n = self.len;
+        self.keys.clear();
+        self.len = 0;
+        self.inserts = 0;
+        n
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The key width in bits this index was built for.
+    pub fn n_bits(&self) -> usize {
+        self.n_bits
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +402,142 @@ mod tests {
         assert_eq!(m.distance(0, 1), u32::MAX);
         assert_eq!(m.distance(1, 2), u32::MAX);
         assert_ne!(m.distance(0, 2), u32::MAX);
+    }
+
+    #[test]
+    fn pack_bytes_is_little_endian_and_hamming_preserving() {
+        assert!(pack_bytes(&[]).is_empty());
+        assert_eq!(pack_bytes(&[0x01]), vec![0x01u64]);
+        assert_eq!(pack_bytes(&[0, 0, 0, 0, 0, 0, 0, 0, 0xff]), vec![0, 0xff]);
+        // Hamming over packed words == Hamming over bytes
+        let a = [0b1010_1010u8, 0x00, 0xf0, 0x0f, 0x55];
+        let b = [0b0101_0101u8, 0xff, 0xf0, 0x0f, 0x54];
+        let want: u32 = a.iter().zip(&b).map(|(x, y)| (x ^ y).count_ones()).sum();
+        let got: u32 = pack_bytes(&a)
+            .iter()
+            .zip(&pack_bytes(&b))
+            .map(|(x, y)| (x ^ y).count_ones())
+            .sum();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn index_rejects_degenerate_keys_cleanly() {
+        assert_eq!(SimilarityIndex::new(0, 4, 1).unwrap_err(), IndexError::ZeroWidth);
+        let mut idx = SimilarityIndex::new(128, 4, 1).unwrap();
+        assert_eq!(idx.insert(&[]).unwrap_err(), IndexError::EmptyKey);
+        assert_eq!(idx.nearest(&[]).unwrap_err(), IndexError::EmptyKey);
+        assert_eq!(
+            idx.insert(&[1u64]).unwrap_err(),
+            IndexError::WidthMismatch { expect_words: 2, got_words: 1 }
+        );
+        assert_eq!(
+            idx.nearest(&[1, 2, 3]).unwrap_err(),
+            IndexError::WidthMismatch { expect_words: 2, got_words: 3 }
+        );
+        // the errors render, and an empty index probes to None
+        assert!(!IndexError::ZeroWidth.to_string().is_empty());
+        assert_eq!(idx.nearest(&[0, 0]).unwrap(), None);
+    }
+
+    #[test]
+    fn index_nearest_matches_float_oracle_ranking() {
+        use crate::pruning::similarity::pack_bits;
+        use crate::testing::forall;
+        forall(
+            "SimilarityIndex nearest == similarity_matrix_ref argmin",
+            0xCA31,
+            40,
+            |rng| {
+                let k = 2 + rng.below(6);
+                let n = 8 + rng.below(120);
+                let kernels: Vec<Vec<f32>> = (0..k + 1)
+                    .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+                    .collect();
+                kernels
+            },
+            |kernels| {
+                let n = kernels[0].len();
+                let (query, stored) = kernels.split_first().expect("generated non-empty");
+                // oracle: ref-matrix distances from the query (row 0) to
+                // every stored kernel, argmin with lowest-index ties
+                let all: Vec<Vec<f32>> = kernels.clone();
+                let m = similarity_matrix_ref(&all, &vec![true; all.len()]);
+                let want = (1..all.len())
+                    .map(|j| (m.distance(0, j), j - 1))
+                    .min()
+                    .map(|(d, s)| (s, d));
+                let mut idx = SimilarityIndex::new(n, stored.len(), 7).map_err(|e| e.to_string())?;
+                for kr in stored {
+                    idx.insert(&pack_bits(&WeightCodec::kernel_bits(kr)))
+                        .map_err(|e| e.to_string())?;
+                }
+                let got = idx
+                    .nearest(&pack_bits(&WeightCodec::kernel_bits(query)))
+                    .map_err(|e| e.to_string())?;
+                if got != want {
+                    return Err(format!("nearest {got:?} vs oracle {want:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn bounded_index_evicts_by_the_seeded_reservoir_deterministically() {
+        let key = |i: u64| -> Vec<u64> { vec![i, !i] };
+        let run = |seed: u64| -> (Vec<IndexSlot>, Vec<u64>) {
+            let mut idx = SimilarityIndex::new(128, 3, seed).unwrap();
+            let slots: Vec<IndexSlot> = (0..50).map(|i| idx.insert(&key(i)).unwrap()).collect();
+            let held: Vec<u64> =
+                (0..idx.len()).map(|s| idx.key(s).unwrap()[0]).collect();
+            (slots, held)
+        };
+        let (slots_a, held_a) = run(0x5eed);
+        let (slots_b, held_b) = run(0x5eed);
+        assert_eq!(slots_a, slots_b, "same seed, same eviction choices");
+        assert_eq!(held_a, held_b);
+        // the first `capacity` inserts always append, later ones never do
+        assert_eq!(
+            &slots_a[..3],
+            &[IndexSlot::Appended(0), IndexSlot::Appended(1), IndexSlot::Appended(2)]
+        );
+        assert!(slots_a[3..]
+            .iter()
+            .all(|s| matches!(s, IndexSlot::Replaced(_) | IndexSlot::Skipped)));
+        assert!(
+            slots_a[3..].iter().any(|s| matches!(s, IndexSlot::Replaced(_))),
+            "50 inserts into 3 slots must replace sometimes"
+        );
+        // a different seed retains a different sample (overwhelmingly)
+        let (_, held_c) = run(0x0bad);
+        assert_ne!(held_a, held_c, "seed must steer the reservoir");
+        // clear resets the reservoir clock: refill replays identically
+        let mut idx = SimilarityIndex::new(128, 3, 0x5eed).unwrap();
+        for i in 0..50 {
+            idx.insert(&key(i)).unwrap();
+        }
+        assert_eq!(idx.clear(), 3);
+        assert!(idx.is_empty());
+        let slots_again: Vec<IndexSlot> =
+            (0..50).map(|i| idx.insert(&key(i)).unwrap()).collect();
+        assert_eq!(slots_again, slots_a, "flush-then-replay is deterministic");
+    }
+
+    #[test]
+    fn index_zero_capacity_is_disabled_and_exact_probe_hits_distance_zero() {
+        let mut off = SimilarityIndex::new(64, 0, 1).unwrap();
+        assert_eq!(off.insert(&[7]).unwrap(), IndexSlot::Skipped);
+        assert_eq!(off.nearest(&[7]).unwrap(), None);
+        let mut idx = SimilarityIndex::new(64, 4, 1).unwrap();
+        idx.insert(&[0xff00]).unwrap();
+        idx.insert(&[0x00ff]).unwrap();
+        assert_eq!(idx.nearest(&[0x00ff]).unwrap(), Some((1, 0)));
+        assert_eq!(idx.nearest(&[0x00fe]).unwrap(), Some((1, 1)));
+        assert_eq!(idx.key(1), Some(&[0x00ffu64][..]));
+        assert_eq!(idx.key(2), None);
+        assert_eq!(idx.n_bits(), 64);
+        assert_eq!(idx.capacity(), 4);
     }
 
     #[test]

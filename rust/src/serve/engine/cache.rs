@@ -34,8 +34,80 @@
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
 
+use crate::cim::similarity::pack_bytes;
 use crate::nn::quant;
 use crate::serve::model::ModelBundle;
+
+/// One request's canonical key, both shapes derived from a **single**
+/// quantize-then-pack pass:
+///
+/// * `exact` — the byte string [`ResultCache`] maps by (tag byte, then
+///   the exact numeric content the pipeline consumes: quantized u8
+///   pixels + scale bits on the MNIST path, raw f32 bits on the
+///   PointNet path).
+/// * `packed` — those same bytes packed 64 per `u64` word
+///   ([`pack_bytes`]), the probe key of the CAM front end's
+///   [`crate::cim::similarity::SimilarityIndex`].
+///
+/// Because `packed` is a bijective repacking of `exact`, two requests
+/// are at Hamming distance 0 in the CAM **iff** their exact cache keys
+/// are byte-equal — a request can never exact-hit one cache while
+/// near-missing the other with different bits. Both the result cache
+/// and the CAM derive their keys here and nowhere else (pinned by
+/// `canonical_key_is_shared_and_packed_consistently` below).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestKey {
+    pub exact: Vec<u8>,
+    pub packed: Vec<u64>,
+}
+
+impl RequestKey {
+    /// Quantize once, pack twice: the canonical key of `input` under
+    /// `model`'s serving path.
+    pub fn for_input(model: &ModelBundle, input: &[f32]) -> RequestKey {
+        let exact = exact_key(model, input);
+        let packed = pack_bytes(&exact);
+        RequestKey { exact, packed }
+    }
+
+    /// The key width in bits for `model` — what a per-tenant CAM index
+    /// is sized by. Constant per tenant: every input of one model packs
+    /// to the same byte count.
+    pub fn n_bits_for(model: &ModelBundle) -> usize {
+        let bytes = match model {
+            ModelBundle::Mnist(_) => 1 + 4 + model.input_len(),
+            ModelBundle::PointNet(_) => 1 + 4 * model.input_len(),
+        };
+        bytes * 8
+    }
+}
+
+/// The single canonical exact-content key: the **same** quantization
+/// the batch executor's first act applies (per-image u8 activation
+/// quantization on the MNIST path; the raw cloud on the PointNet path,
+/// which groups before quantizing). Every cached or CAM'd answer is
+/// keyed by what silicon actually consumed, not a second independent
+/// quantization that could drift from the exec path.
+fn exact_key(model: &ModelBundle, input: &[f32]) -> Vec<u8> {
+    match model {
+        ModelBundle::Mnist(_) => {
+            let (q, s) = quant::quantize_activations_u8(input);
+            let mut key = Vec::with_capacity(1 + 4 + q.len());
+            key.push(0u8);
+            key.extend_from_slice(&s.to_le_bytes());
+            key.extend_from_slice(&q);
+            key
+        }
+        ModelBundle::PointNet(_) => {
+            let mut key = Vec::with_capacity(1 + 4 * input.len());
+            key.push(1u8);
+            for v in input {
+                key.extend_from_slice(&v.to_le_bytes());
+            }
+            key
+        }
+    }
+}
 
 /// Result-cache knobs.
 #[derive(Clone, Debug)]
@@ -83,26 +155,11 @@ impl ResultCache {
     }
 
     /// The content key of one request input under `model`'s path (see
-    /// the module docs for why each path keys differently).
+    /// the module docs for why each path keys differently). Delegates
+    /// to the canonical [`exact_key`] helper the CAM front end's
+    /// [`RequestKey`] packs from — one quantization, two key shapes.
     pub fn key_for(model: &ModelBundle, input: &[f32]) -> Vec<u8> {
-        match model {
-            ModelBundle::Mnist(_) => {
-                let (q, s) = quant::quantize_activations_u8(input);
-                let mut key = Vec::with_capacity(1 + 4 + q.len());
-                key.push(0u8);
-                key.extend_from_slice(&s.to_le_bytes());
-                key.extend_from_slice(&q);
-                key
-            }
-            ModelBundle::PointNet(_) => {
-                let mut key = Vec::with_capacity(1 + 4 * input.len());
-                key.push(1u8);
-                for v in input {
-                    key.extend_from_slice(&v.to_le_bytes());
-                }
-                key
-            }
-        }
+        exact_key(model, input)
     }
 
     /// Look one key up, counting the hit or miss. Disabled caches miss
@@ -213,6 +270,58 @@ mod tests {
         let mut cloud2 = cloud.clone();
         cloud2[0] += 1e-7;
         assert_ne!(ResultCache::key_for(&p, &cloud), ResultCache::key_for(&p, &cloud2));
+    }
+
+    /// The fix this pins: the exact-match cache key and the CAM probe
+    /// key must come from ONE quantize-then-pack pass, and the MNIST
+    /// arm of that pass must be the very quantization the batch
+    /// executor applies to the image (layer 0 of the exec path calls
+    /// `quantize_activations_u8` on the raw input too). Exact-hit in
+    /// one cache ⇔ distance 0 in the other, always.
+    #[test]
+    fn canonical_key_is_shared_and_packed_consistently() {
+        let m = mnist();
+        let p: ModelBundle = crate::serve::PointNetBundle::synthetic(
+            [2, 2, 3, 2, 2, 3, 2, 4],
+            3,
+            0.0,
+            crate::nn::pointnet::GroupingConfig { s1: 8, k1: 4, r1: 0.3, s2: 4, k2: 2, r2: 0.6 },
+            7,
+        )
+        .into();
+        let image: Vec<f32> = (0..28 * 28).map(|i| (i % 7) as f32 / 7.0).collect();
+        let cloud: Vec<f32> =
+            (0..3 * crate::nn::data::modelnet::POINTS).map(|i| (i % 11) as f32 / 11.0).collect();
+        for (model, input) in [(&m, &image), (&p, &cloud)] {
+            let key = RequestKey::for_input(model, input);
+            // one canonical helper: the exact bytes ARE the cache key
+            assert_eq!(key.exact, ResultCache::key_for(model, input));
+            // the packed key is a bijective repacking of those bytes
+            assert_eq!(key.packed, crate::cim::similarity::pack_bytes(&key.exact));
+            assert_eq!(RequestKey::n_bits_for(model), key.exact.len() * 8);
+        }
+        // MNIST: the key folds exactly the exec path's quantization —
+        // same u8 buckets, same scale bits, nothing independent
+        let (q, s) = quant::quantize_activations_u8(&image);
+        let key = RequestKey::for_input(&m, &image);
+        assert_eq!(key.exact[0], 0u8);
+        assert_eq!(&key.exact[1..5], &s.to_le_bytes());
+        assert_eq!(&key.exact[5..], &q[..]);
+        // distance 0 between two requests ⇔ byte-equal exact keys:
+        // sub-quantization-step jitter collapses to the same key in
+        // BOTH shapes; a quantization-visible change separates both
+        let mut jitter = image.clone();
+        jitter[3] += 1e-4; // well under the u8 step at scale ~1/255
+        let kj = RequestKey::for_input(&m, &jitter);
+        assert_eq!(kj.exact, key.exact);
+        assert_eq!(kj.packed, key.packed);
+        let mut moved = image.clone();
+        moved[3] = 1.0 - moved[3];
+        let km = RequestKey::for_input(&m, &moved);
+        assert_ne!(km.exact, key.exact);
+        let d: u32 =
+            km.packed.iter().zip(&key.packed).map(|(a, b)| (a ^ b).count_ones()).sum();
+        assert!(d > 0, "different exact keys must be at positive CAM distance");
     }
 
     #[test]

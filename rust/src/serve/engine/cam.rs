@@ -1,0 +1,521 @@
+//! Input-aware CAM front end: the exact-match result cache generalized
+//! into a content-addressable similarity probe, with exactness
+//! preserved by verify-on-hit.
+//!
+//! The paper's arrays compute similarity in memory — XOR passes plus
+//! popcount — as a first-class primitive, and the same primitive that
+//! ranks redundant *kernels* for pruning ranks *requests* here: every
+//! incoming input is quantized and packed by the one canonical
+//! quantize-then-pack helper ([`super::cache::RequestKey`], the exact
+//! packing the chip-facing exec path consumes) and probed against a
+//! bounded per-tenant CAM of recently answered inputs
+//! ([`crate::cim::similarity::SimilarityIndex`]).
+//!
+//! # Verify-on-hit — why exactness never depends on the CAM
+//!
+//! * **Exact hit (distance 0).** The packed probe key is a bijective
+//!   repacking of the exact cache key, so distance 0 means the stored
+//!   input is byte-identical to the request. The cheap verify — an
+//!   exact byte compare of the stored key — re-checks that invariant
+//!   before the cached logits are replayed; a mismatch (impossible by
+//!   construction, counted if it ever happens) falls back to compute.
+//! * **Near hit (0 < d ≤ [`CamConfig::max_distance`]).** Under the
+//!   default [`VerifyPolicy::Exact`], the request is recomputed through
+//!   the normal dispatch path and the candidate's logits are only
+//!   *compared* against the recompute — the answer is always the
+//!   recompute, so a wrong candidate costs a counter
+//!   (`verify_fail`), never a wrong reply. The win is scheduling:
+//!   near-duplicates identify themselves before dispatch, which is what
+//!   batching/short-circuit policies key off.
+//! * **Trusted near hit.** [`VerifyPolicy::Trusted`] is per-tenant
+//!   opt-in (never the default, always reported): near hits are served
+//!   straight from the candidate's cached logits. A deterministic
+//!   1-in-[`TRUSTED_AUDIT_EVERY`] audit (the first trusted serve after
+//!   any flush is always audited) recomputes anyway and checks the
+//!   observed logit delta against the tenant's declared
+//!   `max_logit_delta`; a breach flushes the whole CAM and answers
+//!   with the recompute — broken trust never survives the batch.
+//!
+//! # Invalidation
+//!
+//! The CAM shares invalidation with [`super::cache::ResultCache`]: any
+//! re-shard, cross-group migration, heal, or committed prune cutover
+//! flushes **both** (the engine's `flush_tenant_caches`), emitting one
+//! [`crate::serve::ObsEvent::CamFlush`] per non-empty flush. Like the
+//! result cache, CAM correctness must never depend on migration
+//! correctness — after any placement transition the next probes
+//! recompute and repopulate against live silicon.
+
+use crate::cim::similarity::{IndexSlot, SimilarityIndex};
+
+use super::cache::RequestKey;
+
+/// Root seed for the per-tenant CAM reservoirs (tenant `t` seeds with
+/// `CAM_SEED ^ t`): eviction is a pure function of (seed, insert
+/// index), the same derandomized Algorithm R discipline as the latency
+/// reservoir in [`crate::serve::ServeStats`].
+pub(crate) const CAM_SEED: u64 = 0x5eed_cafe_ba5e_0ca7;
+
+/// Audit cadence under [`VerifyPolicy::Trusted`]: every N-th trusted
+/// near serve (counting from 0, so the first after any flush) is
+/// recomputed and checked against the tenant's `max_logit_delta`.
+pub(crate) const TRUSTED_AUDIT_EVERY: u64 = 8;
+
+/// CAM front-end knobs ([`crate::serve::EngineConfig::cam`]). The
+/// default capacity is 0 — the front end is off until an operator
+/// sizes it, exactly like rebalancing and live pruning.
+#[derive(Clone, Copy, Debug)]
+pub struct CamConfig {
+    /// Maximum CAM entries per tenant; 0 disables the front end.
+    pub capacity: usize,
+    /// Near-hit radius in key bits: a probe whose nearest stored input
+    /// is within this XOR+popcount Hamming distance is a near hit
+    /// (distance 0 is an exact hit regardless). 0 admits only exact
+    /// hits — the CAM degenerates into a second exact cache.
+    pub max_distance: u32,
+}
+
+impl Default for CamConfig {
+    fn default() -> Self {
+        CamConfig { capacity: 0, max_distance: 8 }
+    }
+}
+
+/// What a near hit (0 < d ≤ max_distance) is allowed to answer with.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum VerifyPolicy {
+    /// Recompute through the normal dispatch path and *compare* the
+    /// candidate's cached logits against the recompute; the recompute
+    /// is the answer. Bit-exactness therefore never depends on the CAM
+    /// being right. This is the only default.
+    Exact,
+    /// Serve near hits from the candidate's cached logits without
+    /// recomputing, except for the deterministic audit serves. Opt-in
+    /// per tenant ([`crate::serve::TenantConfig::with_trusted_cam`]),
+    /// never default, and always reported
+    /// ([`TenantCamStats::trusted`]). An audited serve whose observed
+    /// logit delta exceeds `max_logit_delta` flushes the CAM.
+    Trusted { max_logit_delta: f32 },
+}
+
+/// One tenant's CAM counters, reported per batch into `cam.*` metrics
+/// and at shutdown through [`CamReport`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantCamStats {
+    /// Exact (distance-0, byte-verified) hits served from the CAM.
+    pub hits: u64,
+    /// Probes whose nearest stored input was within `max_distance` at
+    /// a positive distance.
+    pub near_hits: u64,
+    /// Verifies that agreed: exact-key compares on hits, plus near-hit
+    /// recomputes that matched the candidate bit for bit (or landed
+    /// within a Trusted tenant's declared delta bound).
+    pub verify_pass: u64,
+    /// Verifies that disagreed. Under [`VerifyPolicy::Exact`] this is
+    /// expected for genuinely-different near inputs and costs nothing
+    /// but the counter; under Trusted it means an audit breached the
+    /// declared bound and the CAM was flushed.
+    pub verify_fail: u64,
+    /// Near hits answered from cached logits without a recompute
+    /// (Trusted tenants only; audited serves are excluded).
+    pub trusted_served: u64,
+    /// Probes that found no candidate within `max_distance` and took
+    /// the normal exec path.
+    pub fallbacks: u64,
+    /// Flush transitions (re-shard, heal, committed prune cutover, or
+    /// a broken-trust audit).
+    pub flushes: u64,
+    /// Entries dropped across those flushes.
+    pub entries_flushed: u64,
+    /// Largest |cached − recomputed| any verify observed.
+    pub max_logit_delta_seen: f32,
+    /// Whether this tenant opted into [`VerifyPolicy::Trusted`] —
+    /// always reported, so an operator can see at a glance which
+    /// tenants accept approximate near-duplicate answers.
+    pub trusted: bool,
+}
+
+/// Fleet-wide CAM accounting, per tenant in registration order
+/// ([`crate::serve::EngineReport::cam`]). Empty per-tenant stats (all
+/// zeros, `trusted: false`) mean the front end was off.
+#[derive(Clone, Debug, Default)]
+pub struct CamReport {
+    pub per_tenant: Vec<TenantCamStats>,
+}
+
+impl CamReport {
+    /// Exact CAM hits across all tenants.
+    pub fn hits(&self) -> u64 {
+        self.per_tenant.iter().map(|t| t.hits).sum()
+    }
+
+    pub fn near_hits(&self) -> u64 {
+        self.per_tenant.iter().map(|t| t.near_hits).sum()
+    }
+
+    pub fn verify_pass(&self) -> u64 {
+        self.per_tenant.iter().map(|t| t.verify_pass).sum()
+    }
+
+    pub fn verify_fail(&self) -> u64 {
+        self.per_tenant.iter().map(|t| t.verify_fail).sum()
+    }
+
+    pub fn fallbacks(&self) -> u64 {
+        self.per_tenant.iter().map(|t| t.fallbacks).sum()
+    }
+
+    pub fn flushes(&self) -> u64 {
+        self.per_tenant.iter().map(|t| t.flushes).sum()
+    }
+
+    /// Answers that skipped the chip pipeline entirely: exact hits plus
+    /// trusted near serves (what the energy accounting excludes from
+    /// the computed-inference denominator).
+    pub fn served(&self) -> u64 {
+        self.per_tenant.iter().map(|t| t.hits + t.trusted_served).sum()
+    }
+}
+
+/// What one probe resolved to — the engine folds this into its batch.
+#[derive(Clone, Debug)]
+pub(crate) enum CamOutcome {
+    /// Exact hit, byte-verified: these logits are the answer.
+    Hit(Vec<f32>),
+    /// Trusted near hit: these cached logits are the answer (no
+    /// recompute — the tenant opted into that).
+    Trusted(Vec<f32>),
+    /// Near hit that must recompute: after the batch executes, hand the
+    /// fresh logits to [`CamFrontEnd::verify`] with this slot.
+    NearVerify(usize),
+    /// Nothing within `max_distance`: the normal exec path.
+    Miss,
+}
+
+/// One stored answer: the exact key (for the distance-0 byte verify)
+/// plus the logits it replays. Slot-aligned with the packed index.
+#[derive(Clone, Debug)]
+struct CamEntry {
+    exact: Vec<u8>,
+    logits: Vec<f32>,
+}
+
+/// One tenant's CAM: a bounded packed-key similarity index plus the
+/// slot-aligned answers, owned by the coordinator thread (no locks —
+/// the single-threaded invariant that already orders every cache
+/// mutation against every placement transition).
+#[derive(Debug)]
+pub(crate) struct CamFrontEnd {
+    index: SimilarityIndex,
+    entries: Vec<CamEntry>,
+    policy: VerifyPolicy,
+    max_distance: u32,
+    /// Trusted near serves since the last flush — the audit clock.
+    trusted_clock: u64,
+    pub(crate) stats: TenantCamStats,
+}
+
+impl CamFrontEnd {
+    /// A CAM for one tenant, `None` when the config disables it
+    /// (capacity 0) or the model's key width degenerates to zero bits
+    /// (a zero-width key would make every probe a spurious exact hit).
+    pub(crate) fn new(
+        cfg: &CamConfig,
+        policy: VerifyPolicy,
+        key_bits: usize,
+        seed: u64,
+    ) -> Option<CamFrontEnd> {
+        if cfg.capacity == 0 {
+            return None;
+        }
+        let index = SimilarityIndex::new(key_bits, cfg.capacity, seed).ok()?;
+        Some(CamFrontEnd {
+            index,
+            entries: Vec::with_capacity(cfg.capacity),
+            policy,
+            max_distance: cfg.max_distance,
+            trusted_clock: 0,
+            stats: TenantCamStats {
+                trusted: matches!(policy, VerifyPolicy::Trusted { .. }),
+                ..TenantCamStats::default()
+            },
+        })
+    }
+
+    /// Probe one request key against the stored answers.
+    pub(crate) fn probe(&mut self, key: &RequestKey) -> CamOutcome {
+        let candidate = match self.index.nearest(&key.packed) {
+            Ok(Some((slot, d))) if d <= self.max_distance => Some((slot, d)),
+            _ => None,
+        };
+        let Some((slot, d)) = candidate else {
+            self.stats.fallbacks += 1;
+            return CamOutcome::Miss;
+        };
+        if d == 0 {
+            // verify-on-hit: distance 0 must mean byte-identical input
+            // (packed is a bijection of exact); re-check before replay
+            return match self.entries.get(slot) {
+                Some(e) if e.exact == key.exact => {
+                    self.stats.hits += 1;
+                    self.stats.verify_pass += 1;
+                    CamOutcome::Hit(e.logits.clone())
+                }
+                _ => {
+                    self.stats.verify_fail += 1;
+                    self.stats.fallbacks += 1;
+                    CamOutcome::Miss
+                }
+            };
+        }
+        self.stats.near_hits += 1;
+        match self.policy {
+            VerifyPolicy::Exact => CamOutcome::NearVerify(slot),
+            VerifyPolicy::Trusted { .. } => {
+                let audit = self.trusted_clock % TRUSTED_AUDIT_EVERY == 0;
+                self.trusted_clock += 1;
+                if audit {
+                    return CamOutcome::NearVerify(slot);
+                }
+                match self.entries.get(slot) {
+                    Some(e) => {
+                        self.stats.trusted_served += 1;
+                        CamOutcome::Trusted(e.logits.clone())
+                    }
+                    None => {
+                        self.stats.fallbacks += 1;
+                        CamOutcome::Miss
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fold a near hit's recompute back in: compare the candidate's
+    /// cached logits against what silicon just produced. Returns the
+    /// entries dropped by a broken-trust flush (0 in every other case
+    /// — under [`VerifyPolicy::Exact`] a mismatch only counts, the
+    /// recompute already is the answer).
+    pub(crate) fn verify(&mut self, slot: usize, recomputed: &[f32]) -> u64 {
+        let Some(e) = self.entries.get(slot) else {
+            return 0;
+        };
+        if e.logits == recomputed {
+            self.stats.verify_pass += 1;
+            return 0;
+        }
+        // max |cached − recomputed|; a length mismatch is an infinite
+        // delta (different logit shapes can never be "close")
+        let delta = if e.logits.len() == recomputed.len() {
+            e.logits
+                .iter()
+                .zip(recomputed)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max)
+        } else {
+            f32::INFINITY
+        };
+        self.stats.max_logit_delta_seen = self.stats.max_logit_delta_seen.max(delta);
+        match self.policy {
+            VerifyPolicy::Exact => {
+                self.stats.verify_fail += 1;
+                0
+            }
+            VerifyPolicy::Trusted { max_logit_delta } => {
+                if delta <= max_logit_delta {
+                    self.stats.verify_pass += 1;
+                    0
+                } else {
+                    self.stats.verify_fail += 1;
+                    self.flush()
+                }
+            }
+        }
+    }
+
+    /// Store one freshly computed answer. Exact duplicates (distance 0
+    /// with a byte-equal key, e.g. two identical requests in one batch)
+    /// keep the first entry — the logits are bit-identical anyway.
+    pub(crate) fn insert(&mut self, key: &RequestKey, logits: &[f32]) {
+        if let Ok(Some((slot, 0))) = self.index.nearest(&key.packed) {
+            if self.entries.get(slot).is_some_and(|e| e.exact == key.exact) {
+                return;
+            }
+        }
+        let entry = CamEntry { exact: key.exact.clone(), logits: logits.to_vec() };
+        match self.index.insert(&key.packed) {
+            Ok(IndexSlot::Appended(_)) => self.entries.push(entry),
+            Ok(IndexSlot::Replaced(slot)) => {
+                if let Some(e) = self.entries.get_mut(slot) {
+                    *e = entry;
+                }
+            }
+            Ok(IndexSlot::Skipped) | Err(_) => {}
+        }
+    }
+
+    /// Drop every entry (shared invalidation with the result cache, or
+    /// a broken-trust audit). Returns the entries dropped; a non-empty
+    /// flush counts as one transition and resets the audit clock —
+    /// the first trusted serve after a flush is always audited.
+    pub(crate) fn flush(&mut self) -> u64 {
+        let n = self.index.clear() as u64;
+        self.entries.clear();
+        self.trusted_clock = 0;
+        if n > 0 {
+            self.stats.flushes += 1;
+            self.stats.entries_flushed += n;
+        }
+        n
+    }
+
+    /// Live entry count.
+    pub(crate) fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::model::{MnistBundle, ModelBundle};
+
+    fn mnist() -> ModelBundle {
+        MnistBundle::synthetic([2, 2, 2], 0.0, 5).into()
+    }
+
+    fn cam(capacity: usize, max_distance: u32, policy: VerifyPolicy) -> CamFrontEnd {
+        let m = mnist();
+        CamFrontEnd::new(
+            &CamConfig { capacity, max_distance },
+            policy,
+            RequestKey::n_bits_for(&m),
+            CAM_SEED,
+        )
+        .expect("positive capacity builds a CAM")
+    }
+
+    fn image(fill: f32) -> Vec<f32> {
+        let mut v = vec![fill; 28 * 28];
+        v[0] = 1.0; // pin the max so the quantization scale is stable
+        v
+    }
+
+    #[test]
+    fn capacity_zero_disables() {
+        let m = mnist();
+        assert!(CamFrontEnd::new(
+            &CamConfig { capacity: 0, max_distance: 4 },
+            VerifyPolicy::Exact,
+            RequestKey::n_bits_for(&m),
+            1
+        )
+        .is_none());
+        assert!(CamFrontEnd::new(
+            &CamConfig { capacity: 4, max_distance: 4 },
+            VerifyPolicy::Exact,
+            0,
+            1
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn exact_hit_is_byte_verified_and_replays() {
+        let m = mnist();
+        let mut c = cam(8, 8, VerifyPolicy::Exact);
+        let key = RequestKey::for_input(&m, &image(0.5));
+        assert!(matches!(c.probe(&key), CamOutcome::Miss));
+        c.insert(&key, &[1.0, 2.0]);
+        assert_eq!(c.len(), 1);
+        match c.probe(&key) {
+            CamOutcome::Hit(lg) => assert_eq!(lg, vec![1.0, 2.0]),
+            other => panic!("expected an exact hit, got {other:?}"),
+        }
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.verify_pass, 1);
+        assert_eq!(c.stats.fallbacks, 1); // the initial miss
+        // duplicate insert dedups: still one entry
+        c.insert(&key, &[1.0, 2.0]);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn near_hit_under_exact_policy_demands_recompute_and_counts_verdicts() {
+        let m = mnist();
+        let mut c = cam(8, 64, VerifyPolicy::Exact);
+        let base = RequestKey::for_input(&m, &image(0.5));
+        c.insert(&base, &[1.0, 2.0]);
+        // one pixel one quantization step off: near, not exact
+        let mut near = image(0.5);
+        near[7] += 2.0 / 255.0;
+        let nk = RequestKey::for_input(&m, &near);
+        assert_ne!(nk.exact, base.exact);
+        let slot = match c.probe(&nk) {
+            CamOutcome::NearVerify(s) => s,
+            other => panic!("expected a near-verify, got {other:?}"),
+        };
+        assert_eq!(c.stats.near_hits, 1);
+        // recompute agreed bit for bit → pass; disagreed → fail, and
+        // under Exact a fail never flushes (the recompute answered)
+        assert_eq!(c.verify(slot, &[1.0, 2.0]), 0);
+        assert_eq!(c.stats.verify_pass, 1);
+        assert_eq!(c.verify(slot, &[1.0, 2.5]), 0);
+        assert_eq!(c.stats.verify_fail, 1);
+        assert_eq!(c.len(), 1, "Exact verify_fail must not flush");
+        assert!((c.stats.max_logit_delta_seen - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn trusted_serves_from_cache_audits_deterministically_and_flushes_on_breach() {
+        let m = mnist();
+        let policy = VerifyPolicy::Trusted { max_logit_delta: 0.25 };
+        let mut c = cam(8, 64, policy);
+        assert!(c.stats.trusted, "opt-in is always reported");
+        let base = RequestKey::for_input(&m, &image(0.5));
+        c.insert(&base, &[1.0, 2.0]);
+        let mut near = image(0.5);
+        near[7] += 2.0 / 255.0;
+        let nk = RequestKey::for_input(&m, &near);
+        // serve 0 is the audit (clock starts at 0), 1..TRUSTED_AUDIT_EVERY
+        // serve straight from cache
+        let slot = match c.probe(&nk) {
+            CamOutcome::NearVerify(s) => s,
+            other => panic!("first trusted serve must audit, got {other:?}"),
+        };
+        // audit within the declared bound: trust holds, nothing flushed
+        assert_eq!(c.verify(slot, &[1.0, 2.2]), 0);
+        assert_eq!(c.stats.verify_pass, 1);
+        for _ in 1..TRUSTED_AUDIT_EVERY {
+            match c.probe(&nk) {
+                CamOutcome::Trusted(lg) => assert_eq!(lg, vec![1.0, 2.0]),
+                other => panic!("non-audit trusted serves come from cache, got {other:?}"),
+            }
+        }
+        assert_eq!(c.stats.trusted_served, TRUSTED_AUDIT_EVERY - 1);
+        // next serve audits again; a breach flushes the whole CAM
+        let slot = match c.probe(&nk) {
+            CamOutcome::NearVerify(s) => s,
+            other => panic!("audit cadence broken: {other:?}"),
+        };
+        assert_eq!(c.verify(slot, &[1.0, 3.0]), 1, "breach flushes the one entry");
+        assert_eq!(c.stats.verify_fail, 1);
+        assert_eq!(c.stats.flushes, 1);
+        assert_eq!(c.len(), 0);
+        assert!(matches!(c.probe(&nk), CamOutcome::Miss), "post-flush probes recompute");
+    }
+
+    #[test]
+    fn flush_counts_once_per_nonempty_transition() {
+        let m = mnist();
+        let mut c = cam(8, 8, VerifyPolicy::Exact);
+        assert_eq!(c.flush(), 0);
+        assert_eq!(c.stats.flushes, 0, "empty flushes are not transitions");
+        c.insert(&RequestKey::for_input(&m, &image(0.25)), &[0.0]);
+        c.insert(&RequestKey::for_input(&m, &image(0.75)), &[1.0]);
+        assert_eq!(c.flush(), 2);
+        assert_eq!(c.stats.flushes, 1);
+        assert_eq!(c.stats.entries_flushed, 2);
+        assert!(c.len() == 0);
+    }
+}

@@ -21,6 +21,12 @@
 //!  [cache]  content-keyed logits replay (bit-exact, per tenant)
 //!        │ misses only
 //!        ▼
+//!  [cam]    similarity front end (off by default): probe the packed
+//!        │   request key against a bounded CAM of recent answers via
+//!        │   XOR+popcount; exact hits replay after a byte verify, near
+//!        │   hits recompute-and-compare under VerifyPolicy::Exact
+//!        │   (see `cam` — exactness never depends on the CAM)
+//!        ▼
 //!  [exec]   per layer: split the batch into ≤ depth micro-batches,
 //!        │   quantize → pack planes → submit_layer, collecting FIFO so
 //!        │   packing overlaps the chips' dots (DESIGN.md §11;
@@ -68,6 +74,7 @@
 
 pub mod admission;
 pub mod cache;
+pub mod cam;
 pub(crate) mod exec;
 pub mod rebalance;
 pub mod tenant;
@@ -84,7 +91,7 @@ use crate::chip::WearLedger;
 use crate::util::sync::lock_unpoisoned;
 
 use super::batcher::{Request, Response};
-use super::obs::{stage, EventSubscriber, Histogram, Obs, ObsEvent, SpanRecord, Stage};
+use super::obs::{stage, Counter, EventSubscriber, Histogram, Obs, ObsEvent, SpanRecord, Stage};
 use super::model::ModelBundle;
 use super::prune::{CutoverOutcome, LivePruneConfig, LivePruneMonitor, PruneCutover, PruneReport};
 use super::stats::{EngineReport, TenantStats};
@@ -95,7 +102,8 @@ use super::transport::{
 };
 
 use admission::{Admission, AdmissionConfig};
-use cache::{CacheConfig, ResultCache};
+use cache::{CacheConfig, RequestKey, ResultCache};
+use cam::{CamConfig, CamFrontEnd, CamOutcome, CamReport};
 use exec::run_batch;
 use rebalance::{plan_group_move, plan_moves, RebalanceConfig, Rebalancer, ShardHeat};
 use tenant::{TenantConfig, TenantId};
@@ -124,6 +132,13 @@ pub struct EngineConfig {
     /// and retire redundant filters through an epoch-fenced cutover
     /// ([`crate::serve::prune`]).
     pub prune: LivePruneConfig,
+    /// The CAM similarity front end (default off, capacity 0): probe
+    /// each cache-missed request against a bounded per-tenant store of
+    /// recently answered inputs by XOR+popcount distance over the
+    /// canonical packed request key, replaying exact hits and
+    /// verify-recomputing near hits ([`cam`]). Per-tenant opt-out and
+    /// the trusted near-serve policy live on [`TenantConfig::cam`].
+    pub cam: CamConfig,
     /// Observability plane switch (default on): request tracing, the
     /// operator event bus, and the metrics registry. Off hands the
     /// engine a [`Obs::disabled`] plane — every emit/record is a no-op
@@ -139,7 +154,34 @@ impl Default for EngineConfig {
             cache: Default::default(),
             rebalance: Default::default(),
             prune: Default::default(),
+            cam: Default::default(),
             obs: true,
+        }
+    }
+}
+
+/// Cached `cam.*` counter handles — like `queue_wait`, one registry
+/// lookup each at startup instead of one per batch.
+struct CamMetrics {
+    hits: Counter,
+    near_hits: Counter,
+    verify_pass: Counter,
+    verify_fail: Counter,
+    trusted_served: Counter,
+    fallbacks: Counter,
+    flushes: Counter,
+}
+
+impl CamMetrics {
+    fn new(obs: &Obs) -> CamMetrics {
+        CamMetrics {
+            hits: obs.metrics.counter("cam.hits"),
+            near_hits: obs.metrics.counter("cam.near_hits"),
+            verify_pass: obs.metrics.counter("cam.verify_pass"),
+            verify_fail: obs.metrics.counter("cam.verify_fail"),
+            trusted_served: obs.metrics.counter("cam.trusted_served"),
+            fallbacks: obs.metrics.counter("cam.fallbacks"),
+            flushes: obs.metrics.counter("cam.flushes"),
         }
     }
 }
@@ -162,6 +204,12 @@ struct Coordinator {
     /// computed), the rebalancer's shard-ranking signal.
     heat: Vec<ShardHeat>,
     caches: Vec<Arc<Mutex<ResultCache>>>,
+    /// One CAM similarity front end per tenant (`None`: engine config
+    /// disabled it, or the tenant opted out). Coordinator-owned, no
+    /// lock: every probe, insert, and flush is ordered by the same
+    /// single thread that orders migrations against batches.
+    cams: Vec<Option<CamFrontEnd>>,
+    cam_metrics: CamMetrics,
     stats: Vec<TenantStats>,
     router: ShardRouter,
     data_cols: usize,
@@ -251,31 +299,75 @@ impl Coordinator {
                 dur: queued,
             });
         }
-        // cache pass: resolve hits, remember the keys of misses
+        // cache pass: resolve exact-replay hits, remember the canonical
+        // keys of misses. One quantize-then-pack per request — the same
+        // RequestKey feeds the result-cache lookup (exact bytes) and
+        // the CAM probe (packed words), so the two stores can never
+        // disagree about what "the same input" means.
         let t_cache = Instant::now();
         let mut results: Vec<Option<Vec<f32>>> = vec![None; b];
-        let mut keys: Vec<Option<Vec<u8>>> = vec![None; b];
+        let mut keys: Vec<Option<RequestKey>> = vec![None; b];
         {
             let mut cache = lock_unpoisoned(&self.caches[t]);
-            if cache.enabled() {
+            if cache.enabled() || self.cams[t].is_some() {
                 for (i, req) in batch.iter().enumerate() {
-                    let key = ResultCache::key_for(&self.models[t], &req.input);
-                    results[i] = cache.lookup(&key);
+                    let key = RequestKey::for_input(&self.models[t], &req.input);
+                    if cache.enabled() {
+                        results[i] = cache.lookup(&key.exact);
+                    }
                     keys[i] = Some(key);
                 }
             }
         }
-        let miss_idx: Vec<usize> = (0..b).filter(|&i| results[i].is_none()).collect();
-        let hits = (b - miss_idx.len()) as u64;
+        let cache_misses = (0..b).filter(|&i| results[i].is_none()).count();
+        let hits = (b - cache_misses) as u64;
         if trace.is_traced() {
             self.obs.trace.record(SpanRecord {
                 ctx: trace.child(self.obs.trace.next_span()),
                 stage: Stage::Cache,
-                note: format!("hits={hits} misses={}", miss_idx.len()),
+                note: format!("hits={hits} misses={cache_misses}"),
                 start: t_cache,
                 dur: t_cache.elapsed(),
             });
         }
+        // CAM probe pass over the remaining misses: byte-verified exact
+        // hits and trusted near serves resolve here; near hits under
+        // VerifyPolicy::Exact join the compute batch (verify_slots) and
+        // are compared against the recompute afterwards
+        let cam_before = self.cams[t].as_ref().map(|c| c.stats.clone());
+        let mut verify_slots: Vec<Option<usize>> = vec![None; b];
+        if let Some(cam) = self.cams[t].as_mut() {
+            let t_cam = Instant::now();
+            for i in 0..b {
+                if results[i].is_some() {
+                    continue;
+                }
+                let Some(key) = keys[i].as_ref() else { continue };
+                match cam.probe(key) {
+                    CamOutcome::Hit(logits) | CamOutcome::Trusted(logits) => {
+                        results[i] = Some(logits);
+                    }
+                    CamOutcome::NearVerify(slot) => verify_slots[i] = Some(slot),
+                    CamOutcome::Miss => {}
+                }
+            }
+            if trace.is_traced() {
+                let (s, z) = (&cam.stats, cam_before.clone().unwrap_or_default());
+                self.obs.trace.record(SpanRecord {
+                    ctx: trace.child(self.obs.trace.next_span()),
+                    stage: Stage::Cam,
+                    note: format!(
+                        "hits={} near={} fallbacks={}",
+                        s.hits - z.hits,
+                        s.near_hits - z.near_hits,
+                        s.fallbacks - z.fallbacks
+                    ),
+                    start: t_cam,
+                    dur: t_cam.elapsed(),
+                });
+            }
+        }
+        let miss_idx: Vec<usize> = (0..b).filter(|&i| results[i].is_none()).collect();
         if !miss_idx.is_empty() {
             let inputs: Vec<&[f32]> =
                 miss_idx.iter().map(|&i| batch[i].input.as_slice()).collect();
@@ -314,7 +406,16 @@ impl Coordinator {
             let mut cache = lock_unpoisoned(&self.caches[t]);
             for (&i, lg) in miss_idx.iter().zip(&logits) {
                 if let Some(key) = keys[i].take() {
-                    cache.insert(key, lg.clone());
+                    if let Some(cam) = self.cams[t].as_mut() {
+                        // verify-then-insert: the near candidate is
+                        // compared against the recompute before the
+                        // recompute itself becomes a CAM entry
+                        if let Some(slot) = verify_slots[i] {
+                            cam.verify(slot, lg);
+                        }
+                        cam.insert(&key, lg);
+                    }
+                    cache.insert(key.exact, lg.clone());
                 }
                 results[i] = Some(lg.clone());
             }
@@ -343,6 +444,46 @@ impl Coordinator {
         }
         self.stats[t].answered += b as u64;
         self.stats[t].cache_hits += hits;
+        // fold this batch's CAM deltas into the cam.* counters; a
+        // flushes delta here means a trusted audit breached its bound
+        // mid-batch (placement flushes go through flush_tenant_caches)
+        if let (Some(cam), Some(z)) = (self.cams[t].as_ref(), cam_before) {
+            let s = &cam.stats;
+            self.cam_metrics.hits.add(s.hits - z.hits);
+            self.cam_metrics.near_hits.add(s.near_hits - z.near_hits);
+            self.cam_metrics.verify_pass.add(s.verify_pass - z.verify_pass);
+            self.cam_metrics.verify_fail.add(s.verify_fail - z.verify_fail);
+            self.cam_metrics.trusted_served.add(s.trusted_served - z.trusted_served);
+            self.cam_metrics.fallbacks.add(s.fallbacks - z.fallbacks);
+            if s.flushes > z.flushes {
+                self.cam_metrics.flushes.add(s.flushes - z.flushes);
+                self.obs.bus.emit(ObsEvent::CamFlush {
+                    tenant: t,
+                    entries: s.entries_flushed - z.entries_flushed,
+                });
+            }
+        }
+    }
+
+    /// Flush one tenant's result cache AND its CAM front end: shared
+    /// invalidation. Any re-shard, heal, or committed prune cutover
+    /// changes what silicon would answer, so both replay stores drop
+    /// together — emitting [`ObsEvent::CacheInvalidated`] and
+    /// [`ObsEvent::CamFlush`] exactly once per non-empty flush.
+    fn flush_tenant_caches(&mut self, t: usize) {
+        if let Some(cache) = self.caches.get(t) {
+            let entries = lock_unpoisoned(cache).invalidate_all();
+            if entries > 0 {
+                self.obs.bus.emit(ObsEvent::CacheInvalidated { tenant: t, entries });
+            }
+        }
+        if let Some(cam) = self.cams.get_mut(t).and_then(|c| c.as_mut()) {
+            let entries = cam.flush();
+            if entries > 0 {
+                self.cam_metrics.flushes.inc();
+                self.obs.bus.emit(ObsEvent::CamFlush { tenant: t, entries });
+            }
+        }
     }
 
     /// One rebalance pass: snapshot every backend's wear over the
@@ -399,12 +540,10 @@ impl Coordinator {
         }
         moved += self.group_migration_pass(force);
         if moved > 0 {
-            // any re-shard invalidates every cached entry (see `cache`)
-            for (t, cache) in self.caches.iter().enumerate() {
-                let entries = lock_unpoisoned(cache).invalidate_all();
-                if entries > 0 {
-                    self.obs.bus.emit(ObsEvent::CacheInvalidated { tenant: t, entries });
-                }
+            // any re-shard invalidates every cached entry, result cache
+            // and CAM alike (see `cache` and `cam`)
+            for t in 0..self.caches.len() {
+                self.flush_tenant_caches(t);
             }
             self.obs.bus.emit(ObsEvent::RebalanceApplied { shards_moved: moved as usize });
             self.rebalancer.rebalances += 1;
@@ -458,10 +597,9 @@ impl Coordinator {
                         let n = commit.filters.len() as u64;
                         self.obs.metrics.counter("prune.filters_pruned").add(n);
                         self.obs.metrics.counter("prune.rows_freed").add(commit.rows_freed);
-                        let entries = lock_unpoisoned(&self.caches[t]).invalidate_all();
-                        if entries > 0 {
-                            self.obs.bus.emit(ObsEvent::CacheInvalidated { tenant: t, entries });
-                        }
+                        // the pruned model answers differently: drop the
+                        // tenant's result cache and CAM together
+                        self.flush_tenant_caches(t);
                         if trace.is_traced() {
                             self.obs.trace.record(SpanRecord {
                                 ctx: trace.child(self.obs.trace.next_span()),
@@ -624,11 +762,8 @@ impl Coordinator {
                 self.routes[t] = TenantRoute::from_placement(&self.placements[t], epoch);
             }
         }
-        for (t, cache) in self.caches.iter().enumerate() {
-            let entries = lock_unpoisoned(cache).invalidate_all();
-            if entries > 0 {
-                self.obs.bus.emit(ObsEvent::CacheInvalidated { tenant: t, entries });
-            }
+        for t in 0..self.caches.len() {
+            self.flush_tenant_caches(t);
         }
     }
 
@@ -764,6 +899,15 @@ impl Coordinator {
                     .unwrap_or(0) as u64,
             };
         }
+        // close out the CAM report: each tenant's counters as they
+        // stand (all-zero defaults for tenants without a front end)
+        let cam = CamReport {
+            per_tenant: self
+                .cams
+                .iter_mut()
+                .map(|c| c.as_mut().map(|c| std::mem::take(&mut c.stats)).unwrap_or_default())
+                .collect(),
+        };
         let rows_used = self.router.rows_used_flat();
         let finishes = self.router.finish().expect("transport failed at shutdown");
         // read the counters only after finish(): draining the last lost
@@ -779,6 +923,7 @@ impl Coordinator {
             rebalances: self.rebalancer.rebalances,
             shards_moved: self.rebalancer.shards_moved,
             prune: std::mem::take(&mut self.prune),
+            cam,
             transport,
         }
     }
@@ -856,6 +1001,8 @@ impl Engine {
         let quotas: Vec<Option<usize>> = tenants.iter().map(|t| t.row_quota).collect();
         let depths: Vec<usize> = tenants.iter().map(|t| t.queue_depth).collect();
         let prunable: Vec<bool> = tenants.iter().map(|t| t.live_prune).collect();
+        let cam_policies: Vec<Option<cam::VerifyPolicy>> =
+            tenants.iter().map(|t| t.cam).collect();
         let models: Vec<ModelBundle> = tenants.into_iter().map(|t| t.model).collect();
         // live prune plumbing: one similarity monitor per opted-in
         // tenant (kernels packed once — sign bits never change while
@@ -894,6 +1041,25 @@ impl Engine {
             .iter()
             .map(|_| Arc::new(Mutex::new(ResultCache::new(cfg.cache.capacity))))
             .collect();
+        // one CAM front end per tenant that didn't opt out (and only
+        // when the engine enables the pass at all), keyed at the
+        // tenant model's canonical packed width and seeded per tenant
+        // so reservoir eviction is deterministic per run shape
+        let cams: Vec<Option<CamFrontEnd>> = models
+            .iter()
+            .zip(&cam_policies)
+            .enumerate()
+            .map(|(t, (m, policy))| {
+                policy.and_then(|p| {
+                    CamFrontEnd::new(
+                        &cfg.cam,
+                        p,
+                        RequestKey::n_bits_for(m),
+                        cam::CAM_SEED ^ t as u64,
+                    )
+                })
+            })
+            .collect();
         let stats: Vec<TenantStats> = names
             .iter()
             .map(|n| TenantStats { name: n.clone(), ..TenantStats::default() })
@@ -910,6 +1076,8 @@ impl Engine {
             routes,
             heat,
             caches: caches.clone(),
+            cams,
+            cam_metrics: CamMetrics::new(&obs),
             stats,
             router,
             data_cols,
@@ -1092,6 +1260,7 @@ mod tests {
             cache: CacheConfig::default(),
             rebalance: RebalanceConfig::default(),
             prune: Default::default(),
+            cam: Default::default(),
             obs: true,
         }
     }

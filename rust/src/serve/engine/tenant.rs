@@ -14,6 +14,7 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::serve::engine::cam::VerifyPolicy;
 use crate::serve::model::ModelBundle;
 
 /// Index of a registered tenant — the handle submits route by.
@@ -39,6 +40,16 @@ pub struct TenantConfig {
     /// (`EngineConfig::prune.every_batches > 0`). Opting out keeps a
     /// tenant's served model exactly as registered.
     pub live_prune: bool,
+    /// How the CAM similarity front end may answer this tenant's near
+    /// hits, `None` to opt the tenant out of the CAM entirely. Defaults
+    /// to `Some(VerifyPolicy::Exact)` — near hits always recompute, so
+    /// bit-exactness never depends on the CAM. The front end itself is
+    /// only active when the engine enables it
+    /// (`EngineConfig::cam.capacity > 0`).
+    /// [`VerifyPolicy::Trusted`] is strictly opt-in via
+    /// [`TenantConfig::with_trusted_cam`] and is always reported in
+    /// [`crate::serve::TenantCamStats::trusted`].
+    pub cam: Option<VerifyPolicy>,
 }
 
 impl TenantConfig {
@@ -49,6 +60,7 @@ impl TenantConfig {
             row_quota: None,
             queue_depth: 256,
             live_prune: true,
+            cam: Some(VerifyPolicy::Exact),
         }
     }
 
@@ -66,6 +78,23 @@ impl TenantConfig {
     /// exactly as registered, however similar its kernels become).
     pub fn without_live_prune(mut self) -> TenantConfig {
         self.live_prune = false;
+        self
+    }
+
+    /// Opt this tenant out of the CAM similarity front end entirely —
+    /// every request takes the result-cache-or-compute path, even when
+    /// the engine enables the CAM fleet-wide.
+    pub fn without_cam(mut self) -> TenantConfig {
+        self.cam = None;
+        self
+    }
+
+    /// Opt this tenant into [`VerifyPolicy::Trusted`]: near hits are
+    /// served from cached logits without a recompute, audited
+    /// deterministically against `max_logit_delta` (a breach flushes
+    /// the tenant's CAM). Never the default; always reported.
+    pub fn with_trusted_cam(mut self, max_logit_delta: f32) -> TenantConfig {
+        self.cam = Some(VerifyPolicy::Trusted { max_logit_delta });
         self
     }
 }
@@ -87,6 +116,15 @@ pub fn validate_tenants(tenants: &[TenantConfig]) -> Result<()> {
         }
         if tenants[..i].iter().any(|u| u.name == t.name) {
             return Err(anyhow!("duplicate tenant name {:?}", t.name));
+        }
+        if let Some(VerifyPolicy::Trusted { max_logit_delta }) = t.cam {
+            if !max_logit_delta.is_finite() || max_logit_delta < 0.0 {
+                return Err(anyhow!(
+                    "tenant {:?}: trusted CAM max_logit_delta must be finite and \
+                     non-negative, got {max_logit_delta}",
+                    t.name
+                ));
+            }
         }
         t.model
             .validate()
@@ -110,10 +148,15 @@ mod tests {
         assert_eq!(t.row_quota, None);
         assert_eq!(t.queue_depth, 256);
         assert!(t.live_prune, "tenants are prunable by default");
+        assert_eq!(t.cam, Some(VerifyPolicy::Exact), "Exact verify is the only default");
         let t = t.with_row_quota(64).with_queue_depth(8).without_live_prune();
         assert_eq!(t.row_quota, Some(64));
         assert_eq!(t.queue_depth, 8);
         assert!(!t.live_prune);
+        let t = t.with_trusted_cam(0.5);
+        assert_eq!(t.cam, Some(VerifyPolicy::Trusted { max_logit_delta: 0.5 }));
+        let t = t.without_cam();
+        assert_eq!(t.cam, None);
     }
 
     #[test]
@@ -125,6 +168,13 @@ mod tests {
         assert!(err.to_string().contains("duplicate"), "{err}");
         let zero_depth = vec![a.clone().with_queue_depth(0)];
         assert!(validate_tenants(&zero_depth).is_err());
+        // a trusted CAM bound must be a usable number
+        for bad in [f32::NAN, f32::INFINITY, -0.5] {
+            let t = vec![a.clone().with_trusted_cam(bad)];
+            let err = validate_tenants(&t).unwrap_err();
+            assert!(err.to_string().contains("max_logit_delta"), "{err}");
+        }
+        assert!(validate_tenants(&[a.clone().with_trusted_cam(0.0)]).is_ok());
         assert!(validate_tenants(&[a]).is_ok());
     }
 }

@@ -133,7 +133,8 @@ pub mod transport;
 
 pub use batcher::{BatcherConfig, Request, Response};
 pub use engine::admission::AdmissionConfig;
-pub use engine::cache::{CacheConfig, ResultCache};
+pub use engine::cache::{CacheConfig, RequestKey, ResultCache};
+pub use engine::cam::{CamConfig, CamReport, TenantCamStats, VerifyPolicy};
 pub use engine::rebalance::RebalanceConfig;
 pub use engine::tenant::{TenantConfig, TenantId};
 pub use engine::{Engine, EngineConfig};

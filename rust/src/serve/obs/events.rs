@@ -63,6 +63,11 @@ pub enum ObsEvent {
     RebalanceApplied { shards_moved: usize },
     /// A tenant's result cache was dropped after a re-shard.
     CacheInvalidated { tenant: usize, entries: u64 },
+    /// A tenant's CAM similarity front end was flushed — paired with
+    /// [`ObsEvent::CacheInvalidated`] on every re-shard, heal, and
+    /// committed prune cutover (shared invalidation), and emitted alone
+    /// when a trusted-audit breach drops the CAM mid-serve.
+    CamFlush { tenant: usize, entries: u64 },
     /// A dispatch spilled off a full member queue to a replica.
     SpillOver { group: usize, member: usize },
     /// Admission shed a request on a full tenant queue.
@@ -102,6 +107,7 @@ impl ObsEvent {
             ObsEvent::RebalancePlanned { .. } => "rebalance_planned",
             ObsEvent::RebalanceApplied { .. } => "rebalance_applied",
             ObsEvent::CacheInvalidated { .. } => "cache_invalidated",
+            ObsEvent::CamFlush { .. } => "cam_flush",
             ObsEvent::SpillOver { .. } => "spill_over",
             ObsEvent::DropShed { .. } => "drop_shed",
             ObsEvent::PrunePlanned { .. } => "prune_planned",
@@ -320,5 +326,6 @@ mod tests {
             "prune_committed"
         );
         assert_eq!(ObsEvent::PruneAborted { tenant: 0, layer: 0 }.kind(), "prune_aborted");
+        assert_eq!(ObsEvent::CamFlush { tenant: 1, entries: 7 }.kind(), "cam_flush");
     }
 }

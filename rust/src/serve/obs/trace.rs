@@ -58,6 +58,9 @@ pub enum Stage {
     Coalesce,
     /// A result-cache lookup (note says `hit n/m`).
     Cache,
+    /// The CAM similarity front end probed the batch's cache misses
+    /// (note says `hits=n near=n fallbacks=n`).
+    Cam,
     /// One layer's dispatch round trip as the client observed it.
     Dispatch,
     /// A hedged duplicate attempt (same trace, its own span).
@@ -78,6 +81,7 @@ impl Stage {
             Stage::Queue => "queue",
             Stage::Coalesce => "coalesce",
             Stage::Cache => "cache",
+            Stage::Cam => "cam",
             Stage::Dispatch => "dispatch",
             Stage::Hedge => "hedge",
             Stage::Execute => "execute",

@@ -24,12 +24,10 @@ const LATENCY_RESERVOIR_SEED: u64 = 0x5eed_4c1e_a51a_7e5e;
 
 /// splitmix64 finalizer — the stateless hash driving reservoir
 /// replacement: slot choice is a pure function of (seed, sample index).
-fn splitmix64(mut z: u64) -> u64 {
-    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
-    z ^ (z >> 31)
-}
+/// Shared with the CAM front end's bounded
+/// [`crate::cim::similarity::SimilarityIndex`], which evicts under the
+/// same derandomized Algorithm R discipline.
+use crate::util::rng::splitmix64_mix as splitmix64;
 
 /// Aggregated counters of one serving run.
 #[derive(Clone, Debug, Default)]
@@ -271,6 +269,11 @@ pub struct EngineReport {
     /// ([`crate::serve::prune::PruneReport`]). All zeros when the loop
     /// is off (the default).
     pub prune: crate::serve::prune::PruneReport,
+    /// CAM similarity front-end outcome per tenant: exact hits, near
+    /// hits, verify verdicts, trusted serves, and flush transitions
+    /// ([`crate::serve::CamReport`]). All zeros when the front end is
+    /// off (the default, [`crate::serve::CamConfig`] capacity 0).
+    pub cam: crate::serve::engine::cam::CamReport,
     /// Fleet-level dispatch counters from the engine's
     /// [`crate::serve::transport::ShardRouter`]: hedges fired/won,
     /// spills, stale/epoch-fenced replies discarded, cross-group
@@ -301,10 +304,12 @@ impl EngineReport {
         }
     }
 
-    /// Energy per *computed* answer; cache hits spend no chip energy and
-    /// are excluded from the denominator.
+    /// Energy per *computed* answer; cache hits and CAM-served replies
+    /// (exact hits, trusted near serves) spend no chip energy and are
+    /// excluded from the denominator.
     pub fn nj_per_computed_inference(&self) -> f64 {
-        let computed = self.answered() - self.cache_hits();
+        let computed =
+            (self.answered() - self.cache_hits()).saturating_sub(self.cam.served());
         if computed == 0 {
             0.0
         } else {
@@ -478,6 +483,7 @@ mod tests {
             rebalances: 1,
             shards_moved: 2,
             prune: Default::default(),
+            cam: Default::default(),
             transport: RouterStats::default(),
         };
         assert_eq!(r.answered(), 100);
@@ -486,6 +492,16 @@ mod tests {
         assert!((r.inferences_per_sec() - 50.0).abs() < 1e-9);
         // 6 uJ over 60 computed answers = 100 nJ each
         assert!((r.nj_per_computed_inference() - 100.0).abs() < 1e-9);
+        // CAM-served answers leave the computed denominator too:
+        // 10 trusted serves -> 6 uJ over 50 computed = 120 nJ each
+        let mut r = r;
+        r.cam.per_tenant = vec![crate::serve::engine::cam::TenantCamStats {
+            hits: 4,
+            trusted_served: 6,
+            ..Default::default()
+        }];
+        assert_eq!(r.cam.served(), 10);
+        assert!((r.nj_per_computed_inference() - 120.0).abs() < 1e-9);
     }
 
     #[test]

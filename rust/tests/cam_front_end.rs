@@ -1,0 +1,490 @@
+//! The CAM front-end suite: the input-aware similarity probe
+//! (DESIGN.md §14) exercised end to end over real chips — streams with
+//! planted near-duplicates stay bit-exact under [`VerifyPolicy::Exact`]
+//! at pipeline depths {1, 2, 4} with stuck-tile fault injection, every
+//! placement transition (forced re-shard, cross-group migration,
+//! committed prune cutover) flushes the CAM exactly once, and the
+//! opt-in Trusted policy serves near hits from cache while reporting
+//! itself. The probe/verify/insert mechanics are unit-tested in
+//! `engine/cam.rs`; this file proves the same properties with real
+//! pools, the real executor, and the real invalidation paths.
+
+// Terminal output is this target's product; the serve-code print ban
+// (workspace clippy.toml `disallowed-macros`) deliberately does not
+// apply outside `rust/src/serve/**`.
+#![allow(clippy::disallowed_macros)]
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use rram_cim::chip::ChipConfig;
+use rram_cim::nn::data::{mnist, modelnet};
+use rram_cim::nn::pointnet::GroupingConfig;
+use rram_cim::pruning::PruneConfig;
+use rram_cim::serve::transport::{Backend, LocalBackend, ShardRouter};
+use rram_cim::serve::{
+    AdmissionConfig, CacheConfig, CamConfig, Engine, EngineConfig, EventRecord, LivePruneConfig,
+    MnistBundle, ModelBundle, ObsEvent, PipelineConfig, PointNetBundle, PoolConfig,
+    RebalanceConfig, RouterConfig, TenantConfig,
+};
+use rram_cim::testing::forall;
+
+fn pool_cfg(seed: u64, fault: f64) -> PoolConfig {
+    let mut chip = ChipConfig::small_test();
+    chip.device.stuck_fault_prob = fault;
+    PoolConfig { chips: 3, chip, seed }
+}
+
+fn router_cfg(depth: usize) -> RouterConfig {
+    RouterConfig { pipeline: PipelineConfig { depth }, ..RouterConfig::default() }
+}
+
+/// The suite's engine baseline: result cache off (the CAM is the only
+/// fast path, so every hit below is a CAM hit), rebalancing off (no
+/// background pass may flush the CAM and skew the exact counter
+/// arithmetic — the invalidation tests turn transitions back on one at
+/// a time), CAM as given.
+fn engine_cfg(cam: CamConfig) -> EngineConfig {
+    EngineConfig {
+        pool: PoolConfig::default(), // ignored by start_with_router
+        admission: AdmissionConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            quantum: 4,
+        },
+        cache: CacheConfig { capacity: 0 },
+        rebalance: RebalanceConfig { every_batches: 0, max_moves: 0, group_moves: 0 },
+        prune: Default::default(),
+        cam,
+        obs: true,
+    }
+}
+
+fn tiny_pointnet(prune: f64, seed: u64) -> PointNetBundle {
+    PointNetBundle::synthetic(
+        [2, 2, 3, 2, 2, 3, 2, 4],
+        3,
+        prune,
+        GroupingConfig { s1: 8, k1: 4, r1: 0.3, s2: 4, k2: 2, r2: 0.6 },
+        seed,
+    )
+}
+
+/// A base MNIST image whose quantization scale is pinned: pixel 0 holds
+/// the max at exactly 1.0, pixel 7 sits mid-range, everything clamped
+/// to [0, 1]. The pin makes the one-pixel nudge in [`near_image`] move
+/// exactly one quantized byte (so the packed keys land a couple of bits
+/// apart) instead of rescaling every byte in the exact key.
+fn base_image(sample: &[f32]) -> Vec<f32> {
+    let mut v: Vec<f32> = sample.iter().map(|x| x.clamp(0.0, 1.0)).collect();
+    v[0] = 1.0;
+    v[7] = 0.5;
+    v
+}
+
+/// The planted near-duplicate: one pixel two quantization steps off the
+/// base — a near CAM hit (Hamming distance of one changed byte), never
+/// an exact one.
+fn near_image(sample: &[f32]) -> Vec<f32> {
+    let mut v = base_image(sample);
+    v[7] = 0.5 + 2.0 / 255.0;
+    v
+}
+
+/// The planted PointNet near-duplicate: flip the lowest mantissa bit of
+/// one coordinate. The exact key is the raw f32 bytes, so the packed
+/// keys differ in exactly one bit.
+fn near_cloud(sample: &[f32], coord: usize) -> Vec<f32> {
+    let mut v = sample.to_vec();
+    v[coord] = f32::from_bits(v[coord].to_bits() ^ 1);
+    v
+}
+
+/// One engine run at one pipeline depth: both model paths behind a CAM,
+/// a stream of (base, exact repeat, planted near-duplicate) triples per
+/// tenant, every submission synchronous so each lands in its own batch
+/// and the CAM state between requests is fully determined.
+fn run_cam_harness(depth: usize, fault: f64, seed: u64) -> Result<(), String> {
+    let mnist_model = ModelBundle::synthetic_mnist([3, 4, 3], 0.3, seed);
+    let pn_model: ModelBundle = tiny_pointnet(0.3, seed ^ 1).into();
+    let backend =
+        LocalBackend::from_pool_config(&pool_cfg(seed ^ 2, fault)).map_err(|e| e.to_string())?;
+    let router =
+        ShardRouter::new(vec![vec![Box::new(backend) as Box<dyn Backend>]], router_cfg(depth))
+            .map_err(|e| e.to_string())?;
+    let tenants = vec![
+        TenantConfig::new("mnist", mnist_model.clone()), // VerifyPolicy::Exact by default
+        TenantConfig::new("pointnet", pn_model.clone()),
+    ];
+    let cfg = engine_cfg(CamConfig { capacity: 32, max_distance: 12 });
+    let engine = match Engine::start_with_router(tenants, router, &cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            let msg = e.to_string();
+            return if msg.contains("placement") || msg.contains("rows") {
+                Ok(()) // capacity lost to faults: explicit verdict
+            } else {
+                Err(format!("unexpected start error: {msg}"))
+            };
+        }
+    };
+    let images = mnist::generate(3, seed ^ 3);
+    let clouds = modelnet::generate(3, seed ^ 4);
+    let mut attempts = 0u64;
+    let mut ask = |t: usize, input: Vec<f32>| -> Result<(), String> {
+        let want = if t == 0 {
+            mnist_model.reference_logits(&input)
+        } else {
+            pn_model.reference_logits(&input)
+        };
+        attempts += 1;
+        let resp = engine.submit(t, input).recv().map_err(|e| e.to_string())?;
+        if resp.logits != want {
+            return Err(format!("depth {depth}: tenant {t} diverged from the reference"));
+        }
+        Ok(())
+    };
+    for i in 0..3 {
+        let img = base_image(images.sample(i));
+        let cloud = clouds.sample(i).to_vec();
+        // base: CAM miss, computed, inserted
+        ask(0, img.clone())?;
+        ask(1, cloud.clone())?;
+        // exact repeat: a byte-verified distance-0 hit
+        ask(0, img.clone())?;
+        ask(1, cloud.clone())?;
+        // planted near-duplicate: a near hit that must recompute under
+        // Exact — the reference check above is the bit-exactness proof
+        ask(0, near_image(images.sample(i)))?;
+        ask(1, near_cloud(&cloud, 4))?;
+    }
+    let report = engine.shutdown();
+    if report.answered() + report.dropped() != attempts {
+        return Err(format!(
+            "accounting broken: {} answered + {} dropped != {attempts} attempts",
+            report.answered(),
+            report.dropped()
+        ));
+    }
+    if report.dropped() != 0 {
+        return Err("blocking submits must never drop".into());
+    }
+    if report.cam.per_tenant.len() != 2 {
+        return Err("one CAM stats row per tenant".into());
+    }
+    for (t, s) in report.cam.per_tenant.iter().enumerate() {
+        if s.hits != 3 || s.near_hits != 3 || s.fallbacks != 3 {
+            return Err(format!(
+                "depth {depth} tenant {t}: expected 3 hits / 3 near / 3 fallbacks, \
+                 got {} / {} / {}",
+                s.hits, s.near_hits, s.fallbacks
+            ));
+        }
+        // every hit is byte-verified and every Exact near hit is
+        // recompute-verified: the verdicts partition the hits
+        if s.verify_pass + s.verify_fail != s.hits + s.near_hits {
+            return Err(format!(
+                "depth {depth} tenant {t}: verdicts {} + {} don't cover {} + {} probes",
+                s.verify_pass, s.verify_fail, s.hits, s.near_hits
+            ));
+        }
+        if s.trusted || s.trusted_served != 0 {
+            return Err(format!("depth {depth} tenant {t}: Exact tenants never serve trusted"));
+        }
+        if s.flushes != 0 {
+            return Err(format!("depth {depth} tenant {t}: nothing here may flush the CAM"));
+        }
+        if report.tenants[t].cache_hits != 0 {
+            return Err("the result cache is off: CAM hits must not count as cache hits".into());
+        }
+    }
+    if report.cam.served() != 6 {
+        return Err(format!("6 exact hits must skip silicon, got {}", report.cam.served()));
+    }
+    if report.transport.peak_inflight > depth as u64 {
+        return Err(format!(
+            "depth {depth}: peak_inflight {} exceeded the bound",
+            report.transport.peak_inflight
+        ));
+    }
+    Ok(())
+}
+
+/// Property (the PR's acceptance bar): forall streams with planted
+/// near-duplicates across both model paths, every answer under
+/// [`VerifyPolicy::Exact`] is bit-exact against `reference_logits` —
+/// at pipeline depths 1, 2, and 4, with stuck-tile fault injection —
+/// the CAM counters are exactly determined, and
+/// `attempts == answered + dropped`.
+#[test]
+fn prop_cam_serving_is_bit_exact_with_planted_near_duplicates() {
+    forall(
+        "cam: near-duplicate streams at depth ∈ {1, 2, 4} serve bit-exactly",
+        0xca34,
+        2,
+        |rng| {
+            let fault = [0.0, 0.01][rng.below(2)];
+            (fault, rng.next_u64())
+        },
+        |&(fault, seed)| {
+            for depth in [1usize, 2, 4] {
+                run_cam_harness(depth, fault, seed)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+fn count_cam_flushes(records: &[EventRecord]) -> (usize, u64) {
+    let mut n = 0usize;
+    let mut entries = 0u64;
+    for rec in records {
+        if let ObsEvent::CamFlush { entries: e, .. } = rec.event {
+            n += 1;
+            entries += e;
+        }
+    }
+    (n, entries)
+}
+
+/// A forced intra-group re-shard flushes the CAM exactly once: the
+/// pre-move entry is dropped (one `CamFlush`, one entry), the first
+/// post-move probe recomputes through the migrated placement, and the
+/// repeat hits again — with zero verify failures, because an
+/// exact-duplicate stream never has a stale candidate to disagree with.
+#[test]
+fn forced_reshard_flushes_the_cam_exactly_once() {
+    let model = ModelBundle::synthetic_mnist([3, 4, 3], 0.3, 91);
+    let mut cfg = engine_cfg(CamConfig { capacity: 16, max_distance: 8 });
+    cfg.pool = PoolConfig { chips: 2, chip: ChipConfig::small_test(), seed: 92 };
+    cfg.rebalance = RebalanceConfig::default(); // forced pass, max_moves 2
+    let engine = Engine::start(vec![TenantConfig::new("mnist", model.clone())], &cfg).unwrap();
+    let events = engine.events_with(4096);
+    let ds = mnist::generate(1, 93);
+    let reference = model.reference_logits(ds.sample(0));
+    let ask = || {
+        let resp = engine.submit(0, ds.sample(0).to_vec()).recv().unwrap();
+        assert_eq!(resp.logits, reference, "every answer is bit-exact across the re-shard");
+    };
+    ask(); // computed, inserted
+    ask(); // exact CAM hit
+    engine.force_rebalance();
+    ask(); // the pass ran at this batch boundary: flush, then recompute
+    ask(); // repopulated: exact CAM hit again
+    let report = engine.shutdown();
+    assert!(report.shards_moved >= 1, "the forced pass must move a shard");
+    let s = &report.cam.per_tenant[0];
+    assert_eq!(s.hits, 2, "one hit before the re-shard, one after repopulation");
+    assert_eq!(s.verify_fail, 0, "an exact-duplicate stream never fails a verify");
+    assert_eq!(s.flushes, 1, "one transition, one flush");
+    assert_eq!(s.entries_flushed, 1);
+    assert_eq!(report.tenants[0].chip_batches, 2, "only the two misses touched silicon");
+    let (flush_events, entries) = count_cam_flushes(&events.drain());
+    assert_eq!(flush_events, 1, "CamFlush is emitted exactly once per transition");
+    assert_eq!(entries, 1);
+}
+
+/// A forced cross-group layer migration (epoch-fenced, two single-member
+/// groups) shares the same invalidation: exactly one `CamFlush`, the
+/// post-move recompute is bit-exact, and the CAM repopulates against
+/// the migrated placement.
+#[test]
+fn cross_group_migration_flushes_the_cam_exactly_once() {
+    let model = ModelBundle::synthetic_mnist([3, 4, 3], 0.0, 0x3197);
+    let mut groups: Vec<Vec<Box<dyn Backend>>> = Vec::new();
+    for s in 0..2u64 {
+        let backend = LocalBackend::from_pool_config(&pool_cfg(0x3198 ^ s, 0.0)).unwrap();
+        groups.push(vec![Box::new(backend) as Box<dyn Backend>]);
+    }
+    let router = ShardRouter::new(groups, router_cfg(4)).unwrap();
+    let mut cfg = engine_cfg(CamConfig { capacity: 16, max_distance: 8 });
+    cfg.rebalance = RebalanceConfig { every_batches: 0, max_moves: 0, group_moves: 1 };
+    let engine =
+        Engine::start_with_router(vec![TenantConfig::new("mnist", model.clone())], router, &cfg)
+            .unwrap();
+    let events = engine.events_with(4096);
+    let ds = mnist::generate(1, 0x3199);
+    let reference = model.reference_logits(ds.sample(0));
+    let ask = || {
+        let resp = engine.submit(0, ds.sample(0).to_vec()).recv().unwrap();
+        assert_eq!(resp.logits, reference, "every answer is bit-exact across the migration");
+    };
+    ask(); // computed, inserted
+    ask(); // exact CAM hit
+    engine.force_rebalance();
+    ask(); // fence drained, layer moved: flush, then recompute
+    ask(); // exact CAM hit against the migrated placement
+    let report = engine.shutdown();
+    let t = &report.transport;
+    assert!(t.migrations_started >= 1, "the forced pass must attempt a migration");
+    assert!(t.migrations_completed >= 1, "an ideal fleet must complete it");
+    let s = &report.cam.per_tenant[0];
+    assert_eq!(s.hits, 2);
+    assert_eq!(s.verify_fail, 0);
+    assert_eq!(s.flushes, 1, "one migration, one flush");
+    let (flush_events, entries) = count_cam_flushes(&events.drain());
+    assert_eq!(flush_events, 1, "CamFlush is emitted exactly once per transition");
+    assert_eq!(entries, 1);
+}
+
+/// An MNIST bundle with planted redundancy (the live-prune bait): the
+/// first three filters of each layer share one sign prototype, so the
+/// similarity rule has cutovers to commit while the CAM serves.
+fn redundant_mnist(seed: u64) -> ModelBundle {
+    let mut m = MnistBundle::synthetic([6, 6, 6], 0.0, seed);
+    for layer in &mut m.conv {
+        let proto = layer.bits[0].clone();
+        for bits in layer.bits.iter_mut().take(3) {
+            *bits = proto.clone();
+        }
+    }
+    m.into()
+}
+
+/// The pruned-mask reference oracle (see `tests/live_prune.rs`): a
+/// model clone advanced lazily through the committed-cutover sequence.
+struct PrunedOracle {
+    model: ModelBundle,
+    pending: VecDeque<(usize, Vec<usize>)>,
+}
+
+impl PrunedOracle {
+    fn absorb(&mut self, records: &[EventRecord]) {
+        for rec in records {
+            if let ObsEvent::PruneCommitted { tenant: 0, layer, ref filters, .. } = rec.event {
+                self.pending.push_back((layer, filters.clone()));
+            }
+        }
+    }
+
+    fn check(&mut self, label: &str, input: &[f32], logits: &[f32]) {
+        loop {
+            if logits == self.model.reference_logits(input).as_slice() {
+                return;
+            }
+            let Some((layer, filters)) = self.pending.pop_front() else {
+                panic!("{label}: logits match no committed mask state — a stale CAM replay");
+            };
+            for f in filters {
+                self.model.prune_filter(layer, f);
+            }
+        }
+    }
+}
+
+/// Committed prune cutovers flush the CAM mid-serve: an exact-duplicate
+/// stream against a redundant tenant with the prune loop on every batch
+/// boundary. Every answer matches the pruned-mask oracle (a stale CAM
+/// entry would replay pre-cutover logits and fail it), `CamFlush` fires
+/// exactly once per counted flush transition and never more often than
+/// the commits that cause them, and once the rule runs dry the CAM
+/// serves the repeats.
+#[test]
+fn committed_prune_cutover_flushes_the_cam_and_stays_oracle_exact() {
+    let model = redundant_mnist(0xca40);
+    let mut cfg = engine_cfg(CamConfig { capacity: 16, max_distance: 8 });
+    cfg.pool = PoolConfig { chips: 3, chip: ChipConfig::small_test(), seed: 0xca41 };
+    // warm-up 1 / interval 1: the very first monitor pass proposes.
+    // That matters here: CAM-served batches don't advance the fleet
+    // batch counter, so a long warm-up under an exact-duplicate stream
+    // would starve the prune loop of passes entirely.
+    cfg.prune = LivePruneConfig {
+        every_batches: 1,
+        max_layers_per_pass: 1,
+        rule: PruneConfig {
+            warmup_epochs: 1,
+            prune_interval: 1,
+            min_live_per_layer: 1,
+            max_prune_rate: 1.0,
+            ..Default::default()
+        },
+    };
+    let engine = Engine::start(vec![TenantConfig::new("mnist", model.clone())], &cfg).unwrap();
+    let events = engine.events_with(4096);
+    let mut oracle = PrunedOracle { model: model.clone(), pending: VecDeque::new() };
+    let ds = mnist::generate(1, 0xca42);
+    let input = ds.sample(0);
+    let mut all_records: Vec<EventRecord> = Vec::new();
+    for i in 0..12 {
+        let resp = engine.submit(0, input.to_vec()).recv().unwrap();
+        let recs = events.drain();
+        oracle.absorb(&recs);
+        all_records.extend(recs);
+        oracle.check(&format!("request {i}"), input, &resp.logits);
+    }
+    let report = engine.shutdown();
+    all_records.extend(events.drain());
+    let commits = all_records
+        .iter()
+        .filter(|r| matches!(r.event, ObsEvent::PruneCommitted { .. }))
+        .count();
+    let (flush_events, _) = count_cam_flushes(&all_records);
+    assert!(report.prune.cutovers >= 1, "the planted duplicates must commit a cutover");
+    assert_eq!(commits as u64, report.prune.cutovers);
+    let s = &report.cam.per_tenant[0];
+    assert!(flush_events >= 1, "a committed cutover with a live CAM entry must flush");
+    assert!(
+        flush_events <= commits,
+        "{flush_events} CamFlush events from only {commits} commits"
+    );
+    assert_eq!(
+        flush_events as u64, s.flushes,
+        "every counted flush transition is emitted exactly once"
+    );
+    assert_eq!(s.verify_fail, 0, "an exact-duplicate stream never fails a verify");
+    assert!(s.hits >= 1, "once the rule runs dry the repeats must hit the CAM");
+    assert_eq!(report.answered(), 12);
+    assert_eq!(report.dropped(), 0);
+}
+
+/// The opt-in [`VerifyPolicy::Trusted`] end to end: near hits are served
+/// from cached logits without a recompute (except the deterministic
+/// first-after-flush audit), the answers equal the cached neighbor's
+/// bit-exact logits, and the report flags the tenant as trusted.
+#[test]
+fn trusted_policy_serves_near_hits_from_cache_and_reports_it() {
+    let pn_model: ModelBundle = tiny_pointnet(0.0, 0xca50).into();
+    let backend = LocalBackend::from_pool_config(&pool_cfg(0xca51, 0.0)).unwrap();
+    let router =
+        ShardRouter::new(vec![vec![Box::new(backend) as Box<dyn Backend>]], router_cfg(2))
+            .unwrap();
+    // a deliberately huge delta bound: the audits always pass, so the
+    // counters below are exactly determined (breach flushing is
+    // unit-tested in engine/cam.rs)
+    let tenants =
+        vec![TenantConfig::new("pointnet", pn_model.clone()).with_trusted_cam(1e30)];
+    let cfg = engine_cfg(CamConfig { capacity: 16, max_distance: 8 });
+    let engine = Engine::start_with_router(tenants, router, &cfg).unwrap();
+    let clouds = modelnet::generate(1, 0xca52);
+    let base = clouds.sample(0).to_vec();
+    let base_ref = pn_model.reference_logits(&base);
+    // base: computed and inserted
+    let resp = engine.submit(0, base.clone()).recv().unwrap();
+    assert_eq!(resp.logits, base_ref);
+    // first near variant: the audit serve — recomputed, so bit-exact
+    // against its own reference
+    let v1 = near_cloud(&base, 4);
+    let resp = engine.submit(0, v1.clone()).recv().unwrap();
+    assert_eq!(resp.logits, pn_model.reference_logits(&v1), "audit serves recompute");
+    // further near variants: served straight from the cached neighbor
+    // (the base, at packed distance 1) without touching silicon
+    for coord in [7usize, 10] {
+        let v = near_cloud(&base, coord);
+        let resp = engine.submit(0, v).recv().unwrap();
+        assert_eq!(resp.logits, base_ref, "trusted serves replay the cached neighbor");
+    }
+    let report = engine.shutdown();
+    let s = &report.cam.per_tenant[0];
+    assert!(s.trusted, "the opt-in is always reported");
+    assert_eq!(s.near_hits, 3, "audit + two trusted serves are all near hits");
+    assert_eq!(s.trusted_served, 2, "the audit serve is excluded from trusted_served");
+    assert_eq!(s.hits, 0);
+    assert_eq!(s.verify_fail, 0, "a huge bound means the audit must pass");
+    assert_eq!(s.flushes, 0, "no transition, no broken trust: nothing flushes");
+    assert_eq!(
+        report.cam.served(),
+        2,
+        "the two trusted serves skipped silicon (and the energy denominator)"
+    );
+    assert_eq!(report.tenants[0].chip_batches, 2, "base + audit are the only computes");
+}

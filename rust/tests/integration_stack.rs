@@ -687,6 +687,7 @@ fn engine_cfg(chips: usize, seed: u64, max_batch: usize) -> EngineConfig {
         cache: CacheConfig::default(),
         rebalance: RebalanceConfig::default(),
         prune: Default::default(),
+        cam: Default::default(),
         obs: true,
     }
 }

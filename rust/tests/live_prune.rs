@@ -89,6 +89,7 @@ fn engine_cfg() -> EngineConfig {
         // (prune + migration composition rides in `examples/multi_host`)
         rebalance: RebalanceConfig { every_batches: 0, max_moves: 0, group_moves: 0 },
         prune: prune_cfg(),
+        cam: Default::default(),
         obs: true,
     }
 }

@@ -56,6 +56,7 @@ fn engine_cfg() -> EngineConfig {
         cache: CacheConfig::default(),
         rebalance: RebalanceConfig { every_batches: 2, max_moves: 1, group_moves: 0 },
         prune: Default::default(),
+        cam: Default::default(),
         obs: true,
     }
 }
